@@ -1,0 +1,74 @@
+//! The three-layer integration demo: Apriori support counting through the
+//! AOT-compiled Pallas kernel (L1) inside the JAX graph (L2), executed from
+//! rust via PJRT — versus the rust-native bitset counter.
+//!
+//! Requires `make artifacts` (Python runs once, at build time; this binary
+//! never launches Python).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_counting
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use trie_of_rules::data::generator::GeneratorConfig;
+use trie_of_rules::mining::apriori::{apriori_with, BitsetCounter};
+use trie_of_rules::runtime::{default_artifacts_dir, Runtime, XlaSupportCounter};
+
+fn main() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let rt = Runtime::load(&dir)
+        .with_context(|| format!("load artifacts from {} (run `make artifacts`)", dir.display()))?;
+    println!(
+        "runtime: platform={} shapes NT={} NI={} NK={}",
+        rt.platform(),
+        rt.manifest().shapes.nt,
+        rt.manifest().shapes.ni,
+        rt.manifest().shapes.nk
+    );
+
+    // Groceries-like data fits the artifact's 256-item width.
+    let mut gen = GeneratorConfig::groceries_like();
+    gen.num_transactions = 4_096; // one artifact chunk
+    let db = gen.generate();
+    println!(
+        "dataset: {} transactions x {} items",
+        db.num_transactions(),
+        db.num_items()
+    );
+    let minsup = 0.01;
+
+    // Rust-native counting.
+    let t0 = Instant::now();
+    let mut bitset = BitsetCounter::new(&db);
+    let native = apriori_with(&db, minsup, &mut bitset);
+    let native_time = t0.elapsed();
+
+    // XLA-artifact counting (the L1 Pallas kernel through PJRT).
+    let t0 = Instant::now();
+    let mut xla = XlaSupportCounter::new(&rt, &db)?;
+    let accel = apriori_with(&db, minsup, &mut xla);
+    let xla_time = t0.elapsed();
+
+    println!("\napriori @ minsup {minsup}:");
+    println!("  bitset counter: {} itemsets in {native_time:?}", native.len());
+    println!(
+        "  xla counter:    {} itemsets in {xla_time:?} ({} artifact executions)",
+        accel.len(),
+        xla.executions
+    );
+    anyhow::ensure!(
+        native.sets == accel.sets,
+        "backends disagree — counting bug"
+    );
+    println!("  outputs identical: YES (itemsets and supports match exactly)");
+
+    println!(
+        "\nnote: the CPU PJRT path runs the Pallas kernel in interpret-mode\n\
+         lowering; it validates the architecture and numerics, not TPU speed\n\
+         (see DESIGN.md §Hardware-Adaptation for the MXU analysis)."
+    );
+    Ok(())
+}

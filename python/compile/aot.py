@@ -1,0 +1,91 @@
+"""AOT export: lower the L2 graphs to HLO *text* artifacts for the rust side.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry of ``model.aot_specs()`` plus a
+``manifest.json`` describing the frozen shapes, which the rust runtime reads
+to pad its batches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "return_tuple": True,
+        "jax_version": jax.__version__,
+        "shapes": {
+            "nt": model.AOT_NT,
+            "ni": model.AOT_NI,
+            "nk": model.AOT_NK,
+            "nr": model.AOT_NR,
+        },
+        "artifacts": {},
+    }
+    for name, fn, example_args in model.aot_specs():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [list(a.shape) for a in example_args],
+            "num_outputs": _num_outputs(fn, example_args),
+            "bytes": len(text),
+        }
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest -> {mpath}")
+    return manifest
+
+
+def _num_outputs(fn, example_args) -> int:
+    out = jax.eval_shape(fn, *example_args)
+    return len(out) if isinstance(out, (tuple, list)) else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias (ignored path tail)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    export_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the mining pipeline's compute hot-spots.
+
+* :mod:`.support_count` — tiled matmul-compare-reduce itemset support counting
+* :mod:`.rule_metrics`  — vectorized rule metric evaluation
+* :mod:`.ref`           — pure-jnp correctness oracles for both
+"""
+
+from . import ref, rule_metrics, support_count  # noqa: F401

@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth the Pallas kernels are validated against in
+``python/tests/``.  They are deliberately written in the most direct way
+possible (no tiling, no tricks) so a reviewer can check them against the
+paper's definitions by eye.
+
+Definitions (paper §2.2):
+
+    Support(X => Y)    = #tx(X and Y) / #tx
+    Confidence(X => Y) = Support(X u Y) / Support(X)
+    Lift(X => Y)       = Confidence(X => Y) / Support(Y)
+
+Support counting is the tensor-shaped stage of the mining pipeline: with a
+binary transaction matrix ``T[t, i]`` and candidate itemset masks
+``M[k, i]``, a transaction *t* contains itemset *k* iff
+``sum_i T[t,i] * M[k,i] == |M_k|``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: conviction denominator guard; matches rust/src/rules/metrics.rs
+CONVICTION_EPS = 1e-9
+#: finite stand-in for conviction = +inf; matches rust/src/rules/metrics.rs
+CONVICTION_MAX = 1e12
+
+
+def support_count_ref(tx, masks, sizes):
+    """Count, for each candidate itemset, how many transactions contain it.
+
+    Args:
+      tx:    ``(NT, NI)`` float {0,1} transaction/item incidence matrix.
+      masks: ``(NK, NI)`` float {0,1} candidate itemset masks.
+      sizes: ``(NK,)``    float itemset cardinalities (``masks.sum(axis=1)``).
+
+    Returns:
+      ``(NK,)`` float32 absolute support counts.
+    """
+    hits = tx @ masks.T  # (NT, NK): number of mask items present per tx
+    contains = (hits >= sizes[None, :]).astype(jnp.float32)
+    return contains.sum(axis=0)
+
+
+def rule_metrics_ref(sup_ac, sup_a, sup_c):
+    """Vectorized rule metrics from (relative) supports.
+
+    Args:
+      sup_ac: ``(N,)`` Support(A u C)   in [0, 1]
+      sup_a:  ``(N,)`` Support(A)       in (0, 1]
+      sup_c:  ``(N,)`` Support(C)       in (0, 1]
+
+    Returns:
+      ``(4, N)`` float32: rows are (confidence, lift, leverage, conviction).
+      Conviction is clamped to ``CONVICTION_MAX`` where confidence == 1
+      (the usual "+inf" convention made finite for transport).
+    """
+    conf = sup_ac / sup_a
+    lift = conf / sup_c
+    leverage = sup_ac - sup_a * sup_c
+    denom = 1.0 - conf
+    conviction = jnp.where(
+        denom <= CONVICTION_EPS,
+        jnp.float32(CONVICTION_MAX),
+        (1.0 - sup_c) / jnp.maximum(denom, CONVICTION_EPS),
+    )
+    return jnp.stack([conf, lift, leverage, conviction]).astype(jnp.float32)

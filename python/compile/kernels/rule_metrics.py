@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: vectorized association-rule metric evaluation.
+
+Step 3 of the paper's pipeline annotates every trie node with Support,
+Confidence, Lift, ... (paper Fig. 6).  Given the support counts produced by
+the mining stage this is a pure elementwise computation over the rule batch,
+so it maps onto the VPU (8x128 vector lanes) with a trivial 1-D tiling.
+
+Inputs are the three (relative) supports per rule; outputs are four metric
+lanes.  Definitions (paper §2.2 plus the two standard extras carried by the
+rust metric library):
+
+    confidence = sup_ac / sup_a
+    lift       = confidence / sup_c
+    leverage   = sup_ac - sup_a * sup_c
+    conviction = (1 - sup_c) / (1 - confidence)   (clamped at CONVICTION_MAX)
+
+Validated against ``ref.rule_metrics_ref`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: default rule-tile width for the AOT variant (one VPU-friendly row block).
+DEFAULT_BLOCK_N = 512
+
+
+def _rule_metrics_kernel(sup_ac_ref, sup_a_ref, sup_c_ref, out_ref):
+    """Elementwise metric evaluation over one (1, BN) rule tile.
+
+    Block shapes:
+      sup_*_ref: (1, BN)
+      out_ref:   (4, BN)  -- rows: confidence, lift, leverage, conviction
+    """
+    sup_ac = sup_ac_ref[...]
+    sup_a = sup_a_ref[...]
+    sup_c = sup_c_ref[...]
+    conf = sup_ac / sup_a
+    lift = conf / sup_c
+    leverage = sup_ac - sup_a * sup_c
+    denom = 1.0 - conf
+    conviction = jnp.where(
+        denom <= ref.CONVICTION_EPS,
+        jnp.float32(ref.CONVICTION_MAX),
+        (1.0 - sup_c) / jnp.maximum(denom, ref.CONVICTION_EPS),
+    )
+    out_ref[...] = jnp.concatenate([conf, lift, leverage, conviction], axis=0)
+
+
+def rule_metrics(sup_ac, sup_a, sup_c, *, block_n: int = DEFAULT_BLOCK_N):
+    """Pallas-tiled rule metrics; mirrors ``ref.rule_metrics_ref``.
+
+    Args:
+      sup_ac, sup_a, sup_c: ``(N,)`` float32 relative supports; ``N`` must be
+        a multiple of ``block_n`` (the AOT wrapper pads).
+      block_n: rule-tile width.
+
+    Returns:
+      ``(4, N)`` float32: rows (confidence, lift, leverage, conviction).
+    """
+    (n,) = sup_ac.shape
+    if sup_a.shape != (n,) or sup_c.shape != (n,):
+        raise ValueError("sup_ac / sup_a / sup_c must share shape")
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+
+    row = pl.BlockSpec((1, block_n), lambda s: (0, s))
+    out = pl.pallas_call(
+        _rule_metrics_kernel,
+        grid=grid,
+        in_specs=[row, row, row],
+        out_specs=pl.BlockSpec((4, block_n), lambda s: (0, s)),
+        out_shape=jax.ShapeDtypeStruct((4, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(sup_ac.reshape(1, n), sup_a.reshape(1, n), sup_c.reshape(1, n))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def rule_metrics_jit(sup_ac, sup_a, sup_c, *, block_n: int = DEFAULT_BLOCK_N):
+    """jit-wrapped :func:`rule_metrics` (used by tests and model.py)."""
+    return rule_metrics(sup_ac, sup_a, sup_c, block_n=block_n)

@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: batched itemset-support counting.
+
+The mining pipeline's tensor-shaped hot spot (DESIGN.md §Hardware-Adaptation):
+given a binary transaction/item incidence matrix ``T (NT, NI)`` and ``NK``
+candidate itemset masks ``M (NK, NI)``, compute for every candidate the number
+of transactions that contain *all* of its items:
+
+    hits[t, k]  = sum_i T[t, i] * M[k, i]          -- an MXU matmul
+    count[k]    = sum_t [hits[t, k] >= |M_k|]      -- a VPU compare + reduce
+
+TPU mapping
+-----------
+* The matmul ``T_blk @ M.T`` is the MXU-systolic-array workload; operands are
+  {0,1}-valued so f32 (or bf16 on real hardware) is exact for any realistic
+  basket size (< 2^24 items).
+* The grid is 1-D over transaction tiles: each grid step stages one
+  ``(BT, NI)`` block of ``T`` from HBM into VMEM (BlockSpec below), while the
+  full mask block ``(NK, NI)`` and the ``(1, NK)`` accumulator stay resident
+  in VMEM across steps.  This is the HBM<->VMEM schedule a CUDA version would
+  express with threadblocks + shared memory.
+* VMEM footprint per step (f32): ``BT*NI + NK*NI + BT*NK + NK`` words.  For
+  the shipped AOT variant (BT=512, NI=256, NK=256) that is ~1.4 MiB — far
+  under the ~16 MiB/core budget, leaving room for double buffering of the
+  ``T`` stream (handled by the Pallas pipeline automatically).
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute the
+Mosaic custom-call a real TPU lowering would emit.  Correctness is pinned to
+``ref.support_count_ref`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: default transaction-tile height for the AOT variant.
+DEFAULT_BLOCK_T = 512
+
+
+def _support_count_kernel(tx_ref, masks_ref, sizes_ref, out_ref):
+    """One grid step: fold one transaction tile into the running counts.
+
+    Block shapes:
+      tx_ref:    (BT, NI)  -- streamed, one tile per grid step
+      masks_ref: (NK, NI)  -- resident
+      sizes_ref: (1, NK)   -- resident
+      out_ref:   (1, NK)   -- resident accumulator (same block every step)
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tx = tx_ref[...]
+    masks = masks_ref[...]
+    # MXU: (BT, NI) @ (NI, NK) -> (BT, NK) match counts.
+    hits = jnp.dot(tx, masks.T, preferred_element_type=jnp.float32)
+    # VPU: a transaction contains the itemset iff every mask item matched.
+    contains = (hits >= sizes_ref[...]).astype(jnp.float32)
+    out_ref[...] += contains.sum(axis=0, keepdims=True)
+
+
+def support_count(tx, masks, sizes, *, block_t: int = DEFAULT_BLOCK_T):
+    """Pallas-tiled support counting; mirrors ``ref.support_count_ref``.
+
+    Args:
+      tx:     ``(NT, NI)`` float32 {0,1} incidence matrix. ``NT`` must be a
+              multiple of ``block_t`` (the AOT wrapper pads; tests choose
+              compatible shapes).
+      masks:  ``(NK, NI)`` float32 {0,1} candidate masks.
+      sizes:  ``(NK,)``    float32 itemset cardinalities.
+      block_t: transaction-tile height.
+
+    Returns:
+      ``(NK,)`` float32 support counts.
+    """
+    nt, ni = tx.shape
+    nk, ni2 = masks.shape
+    if ni != ni2:
+        raise ValueError(f"item-dim mismatch: tx has {ni}, masks has {ni2}")
+    if sizes.shape != (nk,):
+        raise ValueError(f"sizes must be ({nk},), got {sizes.shape}")
+    block_t = min(block_t, nt)
+    if nt % block_t != 0:
+        raise ValueError(f"NT={nt} not a multiple of block_t={block_t}")
+    grid = (nt // block_t,)
+
+    out = pl.pallas_call(
+        _support_count_kernel,
+        grid=grid,
+        in_specs=[
+            # One (BT, NI) tile of T per step: index_map selects tile `s`.
+            pl.BlockSpec((block_t, ni), lambda s: (s, 0)),
+            # Masks + sizes: the same (full) block every step -> VMEM-resident.
+            pl.BlockSpec((nk, ni), lambda s: (0, 0)),
+            pl.BlockSpec((1, nk), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nk), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, nk), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(tx, masks, sizes.reshape(1, nk))
+    return out.reshape(nk)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def support_count_jit(tx, masks, sizes, *, block_t: int = DEFAULT_BLOCK_T):
+    """jit-wrapped :func:`support_count` (used by tests and model.py)."""
+    return support_count(tx, masks, sizes, block_t=block_t)

@@ -1,0 +1,98 @@
+"""L2: JAX compute graphs for the ARM pipeline, calling the L1 kernels.
+
+Two graphs are exported AOT (see :mod:`compile.aot`):
+
+* ``batch_support``      — Apriori candidate counting for one transaction
+                           chunk: Pallas support_count kernel.
+* ``count_and_metrics``  — the fused "mining step": count supports of
+                           candidate rules' (A u C), A, and C masks in one
+                           shot, then evaluate the metric lanes — i.e. the
+                           whole Step-3 annotation (paper Fig. 6) for a rule
+                           batch, without leaving the device.
+
+Both are pure functions of fixed-shape arrays so they lower to a single
+self-contained HLO module the rust runtime can load.  Python never runs at
+request time; the rust coordinator pads batches to the manifest shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rule_metrics as rm
+from .kernels import support_count as sc
+
+# ---------------------------------------------------------------------------
+# Shipped AOT variant shapes.  The rust runtime reads these from the manifest
+# (artifacts/manifest.json) and pads its batches to match.
+# ---------------------------------------------------------------------------
+AOT_NT = 4096  #: transactions per chunk
+AOT_NI = 256   #: item-vocabulary width (groceries has 169 items; pad to 256)
+AOT_NK = 256   #: candidate itemsets per batch
+AOT_NR = 1024  #: rules per metric batch
+
+
+def batch_support(tx, masks, sizes):
+    """Support counts for ``NK`` candidate itemsets over one tx chunk.
+
+    Shapes: ``tx (NT, NI)``, ``masks (NK, NI)``, ``sizes (NK,)`` →
+    ``(NK,)`` float32 absolute counts.  The caller accumulates across chunks
+    and masks out padding candidates (``sizes == 0`` rows count every
+    transaction; rust ignores those lanes).
+    """
+    return sc.support_count(tx, masks, sizes)
+
+
+def count_and_metrics(tx, masks_ac, sizes_ac, masks_a, sizes_a, masks_c, sizes_c):
+    """Fused rule-batch annotation: three support counts + metric lanes.
+
+    For ``NK`` candidate rules, count Support(A∪C), Support(A), Support(C)
+    against the chunk, normalize by the chunk's transaction count, and
+    evaluate (confidence, lift, leverage, conviction).
+
+    Returns ``(counts_ac, counts_a, counts_c, metrics)`` where ``counts_*``
+    are ``(NK,)`` absolute counts (for cross-chunk accumulation on the rust
+    side) and ``metrics`` is ``(4, NK)`` for the single-chunk case.
+    """
+    nt = tx.shape[0]
+    counts_ac = sc.support_count(tx, masks_ac, sizes_ac)
+    counts_a = sc.support_count(tx, masks_a, sizes_a)
+    counts_c = sc.support_count(tx, masks_c, sizes_c)
+    n = jnp.float32(nt)
+    # Guard the padding lanes (sizes == 0 -> every tx matches -> sup == 1):
+    # harmless for the metric formulas, masked out by the rust caller anyway.
+    metrics = rm.rule_metrics(
+        counts_ac / n,
+        jnp.maximum(counts_a, 1.0) / n,
+        jnp.maximum(counts_c, 1.0) / n,
+    )
+    return counts_ac, counts_a, counts_c, metrics
+
+
+def rule_metrics_only(sup_ac, sup_a, sup_c):
+    """Metric lanes from pre-computed relative supports: ``(4, NR)``."""
+    return rm.rule_metrics(sup_ac, sup_a, sup_c)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: fixed example shapes for jax.jit(...).lower(...)
+# ---------------------------------------------------------------------------
+
+def aot_specs():
+    """(name, fn, example-arg ShapeDtypeStructs) for every shipped artifact."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    tx = s((AOT_NT, AOT_NI), f32)
+    masks = s((AOT_NK, AOT_NI), f32)
+    sizes = s((AOT_NK,), f32)
+    nr = s((AOT_NR,), f32)
+    return [
+        ("support_count", batch_support, (tx, masks, sizes)),
+        (
+            "count_and_metrics",
+            count_and_metrics,
+            (tx, masks, sizes, masks, sizes, masks, sizes),
+        ),
+        ("rule_metrics", rule_metrics_only, (nr, nr, nr)),
+    ]

@@ -1,0 +1,76 @@
+"""AOT export tests: artifacts lower, HLO text parses, manifest is sound.
+
+The rust side has its own loader tests (rust/tests/runtime_roundtrip.rs);
+here we validate the python half of the interchange contract.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_all(str(out))
+    return out, manifest
+
+
+def test_manifest_lists_all_artifacts(exported):
+    out, manifest = exported
+    names = {name for name, _, _ in model.aot_specs()}
+    assert set(manifest["artifacts"]) == names
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(str(out), entry["file"])
+        assert os.path.getsize(path) == entry["bytes"]
+
+
+def test_hlo_text_is_parseable_hlo(exported):
+    out, manifest = exported
+    for entry in manifest["artifacts"].values():
+        text = open(os.path.join(str(out), entry["file"])).read()
+        assert text.startswith("HloModule"), text[:80]
+        assert "ENTRY" in text
+
+
+def test_manifest_shapes_match_model(exported):
+    _, manifest = exported
+    s = manifest["shapes"]
+    assert (s["nt"], s["ni"], s["nk"], s["nr"]) == (
+        model.AOT_NT, model.AOT_NI, model.AOT_NK, model.AOT_NR
+    )
+    sc = manifest["artifacts"]["support_count"]
+    assert sc["inputs"] == [[s["nt"], s["ni"]], [s["nk"], s["ni"]], [s["nk"]]]
+
+
+def test_manifest_json_roundtrip(exported):
+    out, manifest = exported
+    loaded = json.load(open(os.path.join(str(out), "manifest.json")))
+    assert loaded == manifest
+
+
+def test_lowered_module_executes_like_eager():
+    """Compile the lowered support_count module via jax and compare numerics.
+
+    This executes the exact HLO the rust runtime will load (modulo text
+    round-trip, which reassigns instruction ids only).
+    """
+    name, fn, example_args = model.aot_specs()[0]
+    lowered = jax.jit(fn).lower(*example_args)
+    compiled = lowered.compile()
+    rng = np.random.default_rng(42)
+    tx = (rng.random((model.AOT_NT, model.AOT_NI)) < 0.2).astype(np.float32)
+    masks = np.zeros((model.AOT_NK, model.AOT_NI), dtype=np.float32)
+    for k in range(model.AOT_NK):
+        masks[k, rng.choice(model.AOT_NI, size=rng.integers(1, 4), replace=False)] = 1.0
+    sizes = masks.sum(axis=1).astype(np.float32)
+    got = np.asarray(compiled(jnp.asarray(tx), jnp.asarray(masks), jnp.asarray(sizes)))
+    want = (tx @ masks.T >= sizes[None, :]).sum(axis=0).astype(np.float32)
+    np.testing.assert_array_equal(got, want)

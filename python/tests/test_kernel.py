@@ -1,0 +1,152 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and dtypes of the Pallas kernels and asserts
+allclose against the pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.rule_metrics import rule_metrics
+from compile.kernels.support_count import support_count
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+def _incidence(rows, cols, seed, density=0.3):
+    rng = np.random.default_rng(seed)
+    return (rng.random((rows, cols)) < density).astype(np.float32)
+
+
+shape_params = st.tuples(
+    st.sampled_from([1, 2, 3, 4, 8]),      # nt_tiles
+    st.sampled_from([8, 16, 32, 64]),      # block_t
+    st.sampled_from([8, 16, 37, 128]),     # ni
+    st.sampled_from([1, 7, 16, 64]),       # nk
+    st.integers(0, 2**31 - 1),             # seed
+)
+
+
+# ---------------------------------------------------------------------------
+# support_count
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(shape_params)
+def test_support_count_matches_ref(params):
+    nt_tiles, block_t, ni, nk, seed = params
+    nt = nt_tiles * block_t
+    tx = _incidence(nt, ni, seed)
+    masks = _incidence(nk, ni, seed + 1, density=0.1)
+    sizes = masks.sum(axis=1).astype(np.float32)
+    got = support_count(jnp.asarray(tx), jnp.asarray(masks), jnp.asarray(sizes), block_t=block_t)
+    want = ref.support_count_ref(jnp.asarray(tx), jnp.asarray(masks), jnp.asarray(sizes))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_support_count_exact_small():
+    # Hand-checked: 4 transactions, 3 items, 3 candidates.
+    tx = jnp.array(
+        [[1, 1, 0], [1, 0, 1], [1, 1, 1], [0, 1, 0]], dtype=jnp.float32
+    )
+    masks = jnp.array([[1, 0, 0], [1, 1, 0], [0, 1, 1]], dtype=jnp.float32)
+    sizes = jnp.array([1, 2, 2], dtype=jnp.float32)
+    got = np.asarray(support_count(tx, masks, sizes, block_t=2))
+    #  {a}: tx 1,2,3 -> 3;  {a,b}: tx 1,3 -> 2;  {b,c}: tx 3 -> 1
+    np.testing.assert_array_equal(got, [3.0, 2.0, 1.0])
+
+
+def test_support_count_empty_mask_counts_all():
+    # A zero mask (padding lane) is contained in every transaction.
+    tx = _incidence(16, 8, 7)
+    masks = np.zeros((4, 8), dtype=np.float32)
+    sizes = np.zeros(4, dtype=np.float32)
+    got = np.asarray(support_count(jnp.asarray(tx), jnp.asarray(masks), jnp.asarray(sizes), block_t=8))
+    np.testing.assert_array_equal(got, np.full(4, 16.0))
+
+
+def test_support_count_full_mask():
+    # Mask of all items: only the all-ones transaction matches.
+    tx = np.zeros((8, 5), dtype=np.float32)
+    tx[3] = 1.0
+    masks = np.ones((1, 5), dtype=np.float32)
+    sizes = np.array([5.0], dtype=np.float32)
+    got = np.asarray(support_count(jnp.asarray(tx), jnp.asarray(masks), jnp.asarray(sizes), block_t=4))
+    np.testing.assert_array_equal(got, [1.0])
+
+
+def test_support_count_shape_validation():
+    tx = jnp.zeros((8, 4), dtype=jnp.float32)
+    with pytest.raises(ValueError, match="item-dim mismatch"):
+        support_count(tx, jnp.zeros((2, 5), dtype=jnp.float32), jnp.zeros(2), block_t=4)
+    with pytest.raises(ValueError, match="not a multiple"):
+        support_count(tx, jnp.zeros((2, 4), dtype=jnp.float32), jnp.zeros(2), block_t=3)
+    with pytest.raises(ValueError, match="sizes"):
+        support_count(tx, jnp.zeros((2, 4), dtype=jnp.float32), jnp.zeros(3), block_t=4)
+
+
+# ---------------------------------------------------------------------------
+# rule_metrics
+# ---------------------------------------------------------------------------
+
+sup_strategy = st.tuples(
+    st.sampled_from([1, 2, 4]),            # n_tiles
+    st.sampled_from([8, 16, 128]),         # block_n
+    st.integers(0, 2**31 - 1),             # seed
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sup_strategy)
+def test_rule_metrics_matches_ref(params):
+    n_tiles, block_n, seed = params
+    n = n_tiles * block_n
+    rng = np.random.default_rng(seed)
+    sup_a = rng.uniform(0.05, 1.0, n).astype(np.float32)
+    sup_c = rng.uniform(0.05, 1.0, n).astype(np.float32)
+    # sup_ac <= min(sup_a, sup_c) by definition of support
+    sup_ac = (rng.uniform(0.0, 1.0, n) * np.minimum(sup_a, sup_c)).astype(np.float32)
+    got = rule_metrics(jnp.asarray(sup_ac), jnp.asarray(sup_a), jnp.asarray(sup_c), block_n=block_n)
+    want = ref.rule_metrics_ref(jnp.asarray(sup_ac), jnp.asarray(sup_a), jnp.asarray(sup_c))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_rule_metrics_known_values():
+    # sup_ac=0.2, sup_a=0.4, sup_c=0.5:
+    #   conf = 0.5, lift = 1.0, leverage = 0.0, conviction = 0.5/0.5 = 1.0
+    got = np.asarray(
+        rule_metrics(
+            jnp.array([0.2], dtype=jnp.float32),
+            jnp.array([0.4], dtype=jnp.float32),
+            jnp.array([0.5], dtype=jnp.float32),
+            block_n=1,
+        )
+    ).ravel()
+    np.testing.assert_allclose(got, [0.5, 1.0, 0.0, 1.0], rtol=1e-6, atol=1e-7)
+
+
+def test_rule_metrics_conviction_clamped_at_conf_one():
+    # confidence == 1 -> conviction is the finite +inf stand-in.
+    got = np.asarray(
+        rule_metrics(
+            jnp.array([0.3], dtype=jnp.float32),
+            jnp.array([0.3], dtype=jnp.float32),
+            jnp.array([0.6], dtype=jnp.float32),
+            block_n=1,
+        )
+    )
+    assert got[0, 0] == pytest.approx(1.0)
+    assert got[3, 0] == pytest.approx(ref.CONVICTION_MAX)
+
+
+def test_rule_metrics_shape_validation():
+    ones = jnp.ones(8, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="share shape"):
+        rule_metrics(ones, jnp.ones(4, dtype=jnp.float32), ones, block_n=4)
+    with pytest.raises(ValueError, match="not a multiple"):
+        rule_metrics(ones, ones, ones, block_n=3)

@@ -1,0 +1,124 @@
+//! Ablations of the trie's design choices (DESIGN.md A1):
+//!
+//! * top-N: bounded heap over the arena vs full sort of all node metrics;
+//! * search: O(path) child-walk vs linear scan over materialized rules;
+//! * traversal: allocation-free `for_each_split` vs `for_each_rule`
+//!   (materializes `Rule` + full metric vector) vs the frame's columnar
+//!   scan.
+
+use std::time::Instant;
+
+use trie_of_rules::bench_support::harness::{bench, BenchConfig};
+use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::workloads;
+use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::trie::trie::FindOutcome;
+
+fn main() {
+    let w = workloads::groceries(0.005);
+    let rules = w.search_rules();
+    let k = (rules.len() / 10).max(1);
+    let cfg = BenchConfig::default();
+    let mut report = Report::new("Ablation: trie design choices");
+
+    // --- top-N: bounded heap vs full sort -----------------------------
+    let heap = bench("topn-heap", cfg, || w.trie.top_n(Metric::Lift, k).len());
+    let sort = bench("topn-sort", cfg, || {
+        let mut all: Vec<f64> = Vec::new();
+        w.trie.for_each_node_rule(|_, m| all.push(m.lift));
+        all.sort_by(|a, b| b.total_cmp(a));
+        all.truncate(k);
+        all.len()
+    });
+    let frame_full = bench("topn-frame-sortvalues", cfg, || {
+        w.frame.top_n(Metric::Lift, k).len()
+    });
+    let frame_lazy = bench("topn-frame-lazy", cfg, || {
+        w.frame.top_n_lazy(Metric::Lift, k).len()
+    });
+    report.row(
+        "topn",
+        &[
+            ("heap_s", heap.mean_seconds()),
+            ("fullsort_s", sort.mean_seconds()),
+            ("frame_sortvalues_s", frame_full.mean_seconds()),
+            ("frame_lazy_s", frame_lazy.mean_seconds()),
+            ("ratio", sort.mean_seconds() / heap.mean_seconds().max(1e-12)),
+        ],
+    );
+
+    // --- search: path walk vs linear scan ------------------------------
+    let probe: Vec<_> = rules.iter().step_by(rules.len().div_ceil(64)).cloned().collect();
+    let materialized = w.trie.collect_rules();
+    let walk = bench("search-walk", cfg, || {
+        probe
+            .iter()
+            .filter(|r| matches!(w.trie.find_rule(r), FindOutcome::Found(_)))
+            .count()
+    });
+    let scan = bench("search-scan", cfg, || {
+        probe
+            .iter()
+            .filter(|r| materialized.iter().any(|(mr, _)| mr == *r))
+            .count()
+    });
+    report.row(
+        "search",
+        &[
+            ("walk_s", walk.mean_seconds() / probe.len() as f64),
+            ("linear_s", scan.mean_seconds() / probe.len() as f64),
+            (
+                "ratio",
+                scan.mean_seconds() / walk.mean_seconds().max(1e-12),
+            ),
+        ],
+    );
+
+    // --- traversal variants --------------------------------------------
+    let t_split = time(|| {
+        let mut acc = 0.0;
+        w.trie.for_each_split(|_, _, s, c| acc += s + c);
+        acc
+    });
+    let t_full = time(|| {
+        let mut acc = 0.0;
+        w.trie.for_each_rule(|_, m| acc += m.support + m.confidence);
+        acc
+    });
+    let t_frame_cols = time(|| {
+        let mut acc = 0.0;
+        w.frame.for_each_row(|_, _, _, m| acc += m.support + m.confidence);
+        acc
+    });
+    let t_frame_mat = time(|| {
+        let mut acc = 0.0;
+        w.frame
+            .for_each_row_materialized(|_, _, m| acc += m.support + m.confidence);
+        acc
+    });
+    report.row(
+        "traverse",
+        &[
+            ("split_s", t_split),
+            ("full_metrics_s", t_full),
+            ("frame_columnar_s", t_frame_cols),
+            ("frame_materialized_s", t_frame_mat),
+        ],
+    );
+
+    print!("{}", report.render());
+    report.save("ablation_trie").expect("save results");
+}
+
+fn time(f: impl Fn() -> f64) -> f64 {
+    // median of 9
+    let mut times: Vec<f64> = (0..9)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.total_cmp(b));
+    times[times.len() / 2]
+}

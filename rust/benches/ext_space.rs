@@ -1,0 +1,47 @@
+//! Extension (paper §5 future work): space efficiency of the Trie of Rules.
+//!
+//! The paper: "further investigation is needed to research the space
+//! efficiency ... of this method" and claims the trie "compresses a ruleset
+//! with almost no data loss". This bench quantifies it: resident bytes of
+//! trie vs dataframe across the minsup sweep, plus bytes-per-rule and the
+//! node/rule compression ratio (shared prefixes stored once).
+
+use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::workloads::{self, FIG10_SWEEP};
+use trie_of_rules::data::generator::GeneratorConfig;
+
+fn main() {
+    let db = GeneratorConfig::groceries_like().generate();
+    let mut report = Report::new("Ext: space efficiency vs minsup (bytes)");
+    report.note("trie compresses shared antecedent prefixes; frame stores every rule row");
+
+    for &minsup in FIG10_SWEEP.iter().rev() {
+        let w = workloads::Workload::build("space", db.clone(), minsup);
+        let rules = w.ruleset.len().max(1);
+        report.row(
+            &format!("minsup_{minsup}"),
+            &[
+                ("rules", rules as f64),
+                ("trie_nodes", w.trie.num_nodes() as f64),
+                ("trie_bytes", w.trie.memory_bytes() as f64),
+                ("frame_bytes", w.frame.memory_bytes() as f64),
+                (
+                    "frame_over_trie",
+                    w.frame.memory_bytes() as f64 / w.trie.memory_bytes() as f64,
+                ),
+                (
+                    "trie_bytes_per_rule",
+                    w.trie.memory_bytes() as f64 / rules as f64,
+                ),
+            ],
+        );
+        eprintln!(
+            "[ext_space] minsup {minsup}: {} rules, trie {} KiB vs frame {} KiB",
+            rules,
+            w.trie.memory_bytes() / 1024,
+            w.frame.memory_bytes() / 1024
+        );
+    }
+    print!("{}", report.render());
+    report.save("ext_space").expect("save results");
+}

@@ -1,0 +1,55 @@
+//! Fig. 9: distribution of paired per-rule search-time differences
+//! (frame − trie) and the t-test the paper runs against H0 "the difference
+//! is zero" (paper: rejected with p ≈ 1e-245).
+
+use trie_of_rules::bench_support::harness::bench_each;
+use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::workloads;
+use trie_of_rules::stats::histogram::Histogram;
+use trie_of_rules::stats::ttest::PairedTTest;
+use trie_of_rules::trie::trie::FindOutcome;
+
+fn main() {
+    let w = workloads::groceries(0.005);
+    let rules = w.search_rules();
+    eprintln!("[fig09] searching {} rules in both structures", rules.len());
+
+    let trie_times = bench_each(&rules, 2, |r| match w.trie.find_rule(r) {
+        FindOutcome::Found(m) => m.support,
+        other => panic!("{other:?}"),
+    });
+    let frame_times = bench_each(&rules, 2, |r| w.frame.find(r).unwrap().1.support);
+    let diffs: Vec<f64> = frame_times
+        .iter()
+        .zip(&trie_times)
+        .map(|(f, t)| f - t)
+        .collect();
+
+    println!("== Fig 9: histogram of paired differences (frame - trie, seconds) ==");
+    let hist = Histogram::of(&diffs, 24);
+    print!("{}", hist.render(48));
+
+    let t = PairedTTest::run(&frame_times, &trie_times);
+    println!(
+        "paired t-test: n={} mean_diff={:.3e}s sd={:.3e} t={:.2} df={} p={:.3e}",
+        t.n, t.mean_diff, t.std_diff, t.t_statistic, t.df, t.p_value
+    );
+    println!(
+        "H0 (zero difference): {} at alpha=0.05 (paper: rejected, p=1e-245)",
+        if t.rejects_null(0.05) { "REJECTED" } else { "not rejected" }
+    );
+
+    let mut report = Report::new("Fig 9: paired difference stats");
+    report.row(
+        "diff",
+        &[
+            ("n", t.n as f64),
+            ("mean_diff_s", t.mean_diff),
+            ("std_diff_s", t.std_diff),
+            ("t_statistic", t.t_statistic),
+            ("p_value", t.p_value),
+        ],
+    );
+    print!("{}", report.render());
+    report.save("fig09_search_diff").expect("save results");
+}

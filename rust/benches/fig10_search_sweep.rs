@@ -1,0 +1,50 @@
+//! Fig. 10: average per-rule search time vs minimum-support threshold
+//! (0.005 → 0.0135; lower minsup = larger ruleset). The paper shows the
+//! trie's advantage persisting — and widening — as the ruleset grows.
+
+use trie_of_rules::bench_support::harness::{bench_each, speedup};
+use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::workloads::{self, FIG10_SWEEP};
+use trie_of_rules::data::generator::GeneratorConfig;
+use trie_of_rules::stats::descriptive::mean;
+use trie_of_rules::trie::trie::FindOutcome;
+
+fn main() {
+    // One shared database across the sweep (as in the paper: same data,
+    // different thresholds).
+    let db = GeneratorConfig::groceries_like().generate();
+    let mut report = Report::new(
+        "Fig 10: mean search time (s) vs minsup (lower minsup = more rules)",
+    );
+    report.note("paper: trie stays ~8x faster across the whole 0.005-0.0135 range");
+
+    for &minsup in FIG10_SWEEP.iter().rev() {
+        let w = workloads::Workload::build("sweep", db.clone(), minsup);
+        let rules = w.search_rules();
+        if rules.is_empty() {
+            eprintln!("[fig10] minsup {minsup}: empty ruleset, skipping");
+            continue;
+        }
+        let trie_times = bench_each(&rules, 1, |r| match w.trie.find_rule(r) {
+            FindOutcome::Found(m) => m.support,
+            other => panic!("{other:?}"),
+        });
+        let frame_times = bench_each(&rules, 1, |r| w.frame.find(r).unwrap().1.support);
+        report.row(
+            &format!("minsup_{minsup}"),
+            &[
+                ("rules", rules.len() as f64),
+                ("trie_mean_s", mean(&trie_times)),
+                ("frame_mean_s", mean(&frame_times)),
+                ("speedup", speedup(&trie_times, &frame_times)),
+            ],
+        );
+        eprintln!(
+            "[fig10] minsup {minsup}: {} rules, speedup {:.1}x",
+            rules.len(),
+            speedup(&trie_times, &frame_times)
+        );
+    }
+    print!("{}", report.render());
+    report.save("fig10_search_sweep").expect("save results");
+}

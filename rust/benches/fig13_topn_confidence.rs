@@ -1,0 +1,12 @@
+//! Fig. 13: time to retrieve the top 10% of rules by Confidence — same
+//! protocol as Fig. 12 (see fig12_topn_support.rs), different sort key.
+
+use trie_of_rules::rules::metrics::Metric;
+
+#[path = "fig12_topn_support.rs"]
+#[allow(dead_code)]
+mod fig12;
+
+fn main() {
+    fig12::run(Metric::Confidence, "fig13_topn_confidence", "Fig 13");
+}

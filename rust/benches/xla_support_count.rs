@@ -1,0 +1,91 @@
+//! A2 ablation: Apriori support-counting backends — rust bitset vs
+//! horizontal scan vs the AOT XLA artifact (L1 Pallas kernel via PJRT).
+//!
+//! Requires `make artifacts`; skips the XLA rows (with a notice) when the
+//! artifacts are missing. The XLA-CPU path runs the kernel through
+//! interpret-mode lowering, so its wallclock measures the PJRT dispatch +
+//! dense-matmul pipeline, not TPU performance (DESIGN.md §Perf).
+
+use std::time::Instant;
+
+use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::data::generator::GeneratorConfig;
+use trie_of_rules::mining::apriori::{BitsetCounter, HorizontalCounter, SupportCounter};
+use trie_of_rules::mining::itemset::Itemset;
+use trie_of_rules::runtime::{default_artifacts_dir, Runtime, XlaSupportCounter};
+use trie_of_rules::util::rng::Rng;
+
+fn main() {
+    let mut gen = GeneratorConfig::groceries_like();
+    gen.num_transactions = 4_096; // one artifact chunk
+    let db = gen.generate();
+
+    // Candidate batches of growing size (2- and 3-itemsets over frequent
+    // items).
+    let freqs = db.item_frequencies();
+    let mut frequent: Vec<u32> = (0..freqs.len() as u32).collect();
+    frequent.sort_by_key(|&i| std::cmp::Reverse(freqs[i as usize]));
+    frequent.truncate(64);
+    let mut rng = Rng::new(99);
+    let make_batch = |n: usize, rng: &mut Rng| -> Vec<Itemset> {
+        (0..n)
+            .map(|_| {
+                let len = 2 + rng.below(2);
+                let idx = rng.sample_indices(frequent.len(), len);
+                Itemset::new(idx.into_iter().map(|i| frequent[i]).collect())
+            })
+            .collect()
+    };
+
+    let mut report = Report::new("A2: support-counting backends (seconds per batch)");
+    report.note(format!(
+        "{} tx x {} items; batches of 2-3 item candidates",
+        db.num_transactions(),
+        db.num_items()
+    ));
+
+    let runtime = Runtime::load(&default_artifacts_dir()).ok();
+    if runtime.is_none() {
+        eprintln!("[xla_support_count] artifacts missing; XLA rows skipped (run `make artifacts`)");
+    }
+
+    for &batch_size in &[64usize, 256, 1024] {
+        let batch = make_batch(batch_size, &mut rng);
+        let mut bitset = BitsetCounter::new(&db);
+        let mut horizontal = HorizontalCounter::new(&db);
+
+        let t_bit = time_counter(&mut bitset, &batch);
+        let t_hor = time_counter(&mut horizontal, &batch);
+        let mut cells = vec![
+            ("bitset_s", t_bit),
+            ("horizontal_s", t_hor),
+            ("cands_per_s_bitset", batch_size as f64 / t_bit),
+        ];
+        let t_xla;
+        if let Some(rt) = &runtime {
+            let mut xla = XlaSupportCounter::new(rt, &db).expect("xla counter");
+            // correctness cross-check while we're here
+            assert_eq!(xla.count(&batch), bitset.count(&batch), "backend mismatch");
+            t_xla = time_counter(&mut xla, &batch);
+            cells.push(("xla_s", t_xla));
+            cells.push(("xla_over_bitset", t_xla / t_bit.max(1e-12)));
+        }
+        report.row(&format!("batch_{batch_size}"), &cells);
+        eprintln!("[xla_support_count] batch {batch_size} done");
+    }
+    print!("{}", report.render());
+    report.save("xla_support_count").expect("save results");
+}
+
+fn time_counter(counter: &mut dyn SupportCounter, batch: &[Itemset]) -> f64 {
+    // median of 5
+    let mut times: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(counter.count(batch));
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.total_cmp(b));
+    times[times.len() / 2]
+}

@@ -1,0 +1,7 @@
+//! Baseline ruleset representation: a columnar "dataframe" with
+//! pandas-faithful operation semantics (full-scan search, full-sort top-N),
+//! the comparator in every figure of the paper's evaluation.
+
+pub mod dataframe;
+
+pub use dataframe::RuleFrame;

@@ -1,0 +1,154 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Deliberately simple and transparent: warmup, then timed iterations until
+//! both a minimum iteration count and a minimum wall budget are met;
+//! results are full [`Summary`] statistics over per-iteration times.
+//! `bench_each` additionally times one operation *per workload item*
+//! (the paper's per-rule search measurements, Figs. 8–10) so paired t-tests
+//! can run over aligned samples.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::stats::descriptive::Summary;
+
+/// Iteration policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_duration: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1_000,
+            min_duration: Duration::from_millis(200),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster policy for heavyweight end-to-end benches.
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            min_duration: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub times: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_seconds(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Run `f` under the iteration policy; the closure's return value is
+/// black-boxed so the compiler cannot elide the work.
+pub fn bench<T>(name: &str, config: BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..config.warmup_iters {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(config.min_iters);
+    let start = Instant::now();
+    while times.len() < config.max_iters
+        && (times.len() < config.min_iters || start.elapsed() < config.min_duration)
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let summary = Summary::of(&times);
+    BenchResult {
+        name: name.to_string(),
+        iterations: times.len(),
+        times,
+        summary,
+    }
+}
+
+/// Time `op(item)` once per workload item (after `warmup` passes over the
+/// whole list), returning one duration per item — the per-rule timing
+/// samples behind the paper's paired analyses.
+pub fn bench_each<I, T>(
+    items: &[I],
+    warmup: usize,
+    mut op: impl FnMut(&I) -> T,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        for item in items {
+            black_box(op(item));
+        }
+    }
+    items
+        .iter()
+        .map(|item| {
+            let t0 = Instant::now();
+            black_box(op(item));
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Speedup helper: baseline mean / candidate mean.
+pub fn speedup(candidate: &[f64], baseline: &[f64]) -> f64 {
+    let c: f64 = candidate.iter().sum::<f64>() / candidate.len() as f64;
+    let b: f64 = baseline.iter().sum::<f64>() / baseline.len() as f64;
+    b / c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_enough_iterations() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 50,
+            min_duration: Duration::from_millis(1),
+        };
+        let mut calls = 0usize;
+        let r = bench("noop", cfg, || {
+            calls += 1;
+            calls
+        });
+        assert!(r.iterations >= 5);
+        assert_eq!(r.times.len(), r.iterations);
+        assert!(calls >= r.iterations); // warmup included
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_each_returns_one_sample_per_item() {
+        let items = vec![1u64, 2, 3, 4];
+        let samples = bench_each(&items, 1, |&x| x * 2);
+        assert_eq!(samples.len(), 4);
+        assert!(samples.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn speedup_direction() {
+        let fast = vec![1.0, 1.0];
+        let slow = vec![8.0, 8.0];
+        assert!((speedup(&fast, &slow) - 8.0).abs() < 1e-12);
+        assert!(speedup(&slow, &fast) < 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark support: the in-house timing harness (no vendored criterion),
+//! result reporting (console tables + JSON lines), and the shared paper
+//! workloads used by every `rust/benches/*` target.
+
+pub mod harness;
+pub mod report;
+pub mod workloads;
+
+pub use harness::{bench, bench_each, speedup, BenchConfig, BenchResult};
+pub use report::Report;
+pub use workloads::{groceries, retail_scaled, Workload, FIG10_SWEEP};

@@ -1,0 +1,130 @@
+//! Bench result reporting: aligned text tables for the console plus
+//! JSON-lines files under `bench_results/` so EXPERIMENTS.md numbers are
+//! regenerable and diffable.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A figure/table report: named rows of named numeric cells.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub notes: Vec<String>,
+    columns: Vec<String>,
+    rows: Vec<(String, BTreeMap<String, f64>)>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) {
+        self.notes.push(note.into());
+    }
+
+    /// Add a row; new column names extend the table.
+    pub fn row(&mut self, label: &str, cells: &[(&str, f64)]) {
+        let mut map = BTreeMap::new();
+        for &(k, v) in cells {
+            if !self.columns.iter().any(|c| c == k) {
+                self.columns.push(k.to_string());
+            }
+            map.insert(k.to_string(), v);
+        }
+        self.rows.push((label.to_string(), map));
+    }
+
+    /// Console rendering.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==\n", self.title);
+        for n in &self.notes {
+            out.push_str(&format!("   {n}\n"));
+        }
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .max()
+            .unwrap_or(4)
+            .max(4);
+        out.push_str(&format!("{:<label_w$}", "row"));
+        for c in &self.columns {
+            out.push_str(&format!(" {c:>14}"));
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("{label:<label_w$}"));
+            for c in &self.columns {
+                match cells.get(c) {
+                    Some(v) => out.push_str(&format!(" {v:>14.6e}")),
+                    None => out.push_str(&format!(" {:>14}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `bench_results/<slug>.json` (one JSON object per row).
+    pub fn save(&self, slug: &str) -> Result<PathBuf> {
+        self.save_to(&PathBuf::from("bench_results"), slug)
+    }
+
+    /// Write `<dir>/<slug>.json` (one JSON object per row).
+    pub fn save_to(&self, dir: &std::path::Path, slug: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        let path = dir.join(format!("{slug}.json"));
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.display()))?;
+        for (label, cells) in &self.rows {
+            let mut obj = BTreeMap::new();
+            obj.insert("bench".to_string(), Json::Str(slug.to_string()));
+            obj.insert("row".to_string(), Json::Str(label.clone()));
+            for (k, &v) in cells {
+                obj.insert(k.clone(), Json::Num(v));
+            }
+            writeln!(f, "{}", Json::Obj(obj).to_string_compact())?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut r = Report::new("demo");
+        r.note("a note");
+        r.row("trie", &[("mean_s", 1e-4), ("p95_s", 2e-4)]);
+        r.row("frame", &[("mean_s", 8e-4)]);
+        let text = r.render();
+        assert!(text.contains("== demo =="));
+        assert!(text.contains("a note"));
+        assert!(text.contains("trie"));
+        assert!(text.contains('-'), "missing cell placeholder");
+    }
+
+    #[test]
+    fn save_emits_json_lines() {
+        let mut r = Report::new("demo");
+        r.row("x", &[("v", 3.0)]);
+        let tmp = std::env::temp_dir().join(format!("tor_report_{}", std::process::id()));
+        let path = r.save_to(&tmp, "demo_test").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&tmp).ok();
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("row").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("v").unwrap().as_f64(), Some(3.0));
+    }
+}

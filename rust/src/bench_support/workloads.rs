@@ -1,0 +1,128 @@
+//! Shared bench workloads — the two evaluation settings of the paper,
+//! materialized once per bench process.
+//!
+//! * [`groceries`] — the paper's first dataset analogue (9 834 tx × 169
+//!   items; Apriori @ minsup 0.005 → ~10³ rules).
+//! * [`retail_scaled`] — the second (Online-Retail-like) analogue, scaled
+//!   so a bench run finishes in CI time; the paper's ratios, not its
+//!   absolute minutes, are the reproduction target (DESIGN.md §5.2).
+
+use crate::baseline::dataframe::RuleFrame;
+use crate::data::generator::GeneratorConfig;
+use crate::data::transaction::TransactionDb;
+use crate::mining::counts::{min_count, ItemOrder};
+use crate::mining::fpgrowth::fpgrowth;
+use crate::mining::itemset::FrequentItemsets;
+use crate::rules::rule::Rule;
+use crate::rules::rulegen::{generate_rules, RuleGenConfig};
+use crate::rules::ruleset::{RuleSet, ScoredRule};
+use crate::trie::trie::TrieOfRules;
+
+/// A fully-built evaluation workload: both representations over one ruleset.
+pub struct Workload {
+    pub name: String,
+    pub minsup: f64,
+    pub db: TransactionDb,
+    pub order: ItemOrder,
+    pub frequent: FrequentItemsets,
+    pub ruleset: RuleSet,
+    pub trie: TrieOfRules,
+    pub frame: RuleFrame,
+}
+
+impl Workload {
+    /// Build from a database at a support threshold. The ruleset handed to
+    /// *both* structures is the trie-representable rule list, so search and
+    /// top-N comparisons are apples-to-apples (paper's methodology: "every
+    /// rule was searched in both data structures").
+    pub fn build(name: &str, db: TransactionDb, minsup: f64) -> Workload {
+        let order = ItemOrder::new(&db, min_count(minsup, db.num_transactions()));
+        let frequent = fpgrowth(&db, minsup);
+        let trie = TrieOfRules::from_frequent(&frequent, &order).expect("trie build");
+        // The shared ruleset: every rule the trie represents, with its
+        // exact metrics (equal to ap-genrules output restricted to
+        // prefix-splits — verified in rust/tests/parity.rs).
+        let scored: Vec<ScoredRule> = trie
+            .collect_rules()
+            .into_iter()
+            .map(|(rule, metrics)| ScoredRule { rule, metrics })
+            .collect();
+        let ruleset = RuleSet::new(db.num_transactions(), scored);
+        let frame = RuleFrame::from_ruleset(&ruleset);
+        Workload {
+            name: name.to_string(),
+            minsup,
+            db,
+            order,
+            frequent,
+            ruleset,
+            trie,
+            frame,
+        }
+    }
+
+    /// All rules to search in the paired experiments.
+    pub fn search_rules(&self) -> Vec<Rule> {
+        self.ruleset.iter().map(|sr| sr.rule.clone()).collect()
+    }
+
+    /// The full ap-genrules ruleset (2^k-2 splits per itemset) for the
+    /// dataframe-side ablation.
+    pub fn full_ruleset(&self, min_confidence: f64) -> RuleSet {
+        generate_rules(
+            &self.frequent,
+            RuleGenConfig {
+                min_confidence,
+                max_consequent: usize::MAX,
+            },
+        )
+    }
+}
+
+/// Groceries-like workload at a support threshold (paper default 0.005).
+pub fn groceries(minsup: f64) -> Workload {
+    let db = GeneratorConfig::groceries_like().generate();
+    Workload::build("groceries-like", db, minsup)
+}
+
+/// Retail-like workload, scaled by `tx_scale` (1.0 = the full 18k
+/// transactions) at a support threshold (paper: 0.002).
+pub fn retail_scaled(tx_scale: f64, minsup: f64) -> Workload {
+    let mut cfg = GeneratorConfig::retail_like();
+    cfg.num_transactions = ((cfg.num_transactions as f64) * tx_scale).max(100.0) as usize;
+    let db = cfg.generate();
+    Workload::build("retail-like", db, minsup)
+}
+
+/// The paper's minsup sweep for Figs. 10–11 (0.005 → 0.0135).
+pub const FIG10_SWEEP: [f64; 8] = [0.005, 0.0062, 0.0074, 0.0086, 0.0098, 0.011, 0.0123, 0.0135];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_workload_is_consistent() {
+        let db = GeneratorConfig::tiny(5).generate();
+        let w = Workload::build("tiny", db, 0.06);
+        assert!(!w.ruleset.is_empty());
+        assert_eq!(w.frame.len(), w.ruleset.len());
+        assert_eq!(w.trie.num_representable_rules(), w.ruleset.len());
+        // Every search rule is findable in both structures.
+        for rule in w.search_rules().iter().take(50) {
+            assert!(matches!(
+                w.trie.find_rule(rule),
+                crate::trie::trie::FindOutcome::Found(_)
+            ));
+            assert!(w.frame.find(rule).is_some());
+        }
+    }
+
+    #[test]
+    fn full_ruleset_is_superset_of_representable() {
+        let db = GeneratorConfig::tiny(6).generate();
+        let w = Workload::build("tiny", db, 0.06);
+        let full = w.full_ruleset(0.0);
+        assert!(full.len() >= w.ruleset.len());
+    }
+}

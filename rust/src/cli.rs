@@ -1,0 +1,423 @@
+//! Hand-rolled CLI argument parsing for the `tor` launcher (`clap` is not
+//! in the offline vendor set).
+//!
+//! ```text
+//! tor pipeline [--dataset groceries|retail|tiny | --input baskets.csv]
+//!              [--minsup F] [--minconf F] [--miner M] [--counter C]
+//!              [--workers N] [--config FILE] [--set key=value]...
+//!              [--artifacts DIR]
+//! tor query    <pipeline opts> --cmd "FIND f,c => a" [--cmd ...]
+//! tor serve    <pipeline opts> --port P
+//! tor show     <pipeline opts> [--depth N]
+//! tor dot      <pipeline opts> [--out FILE]
+//! tor generate --dataset D --out FILE [--transactions N] [--seed N]
+//! tor example  (the paper's worked example, Figs. 4–7)
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{CounterKind, PipelineConfig};
+use crate::data::generator::GeneratorConfig;
+use crate::mining::MinerKind;
+
+/// Which dataset generator to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    Groceries,
+    Retail,
+    Tiny,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "groceries" => Some(DatasetKind::Groceries),
+            "retail" => Some(DatasetKind::Retail),
+            "tiny" => Some(DatasetKind::Tiny),
+            _ => None,
+        }
+    }
+
+    pub fn generator(&self, seed: Option<u64>) -> GeneratorConfig {
+        let mut cfg = match self {
+            DatasetKind::Groceries => GeneratorConfig::groceries_like(),
+            DatasetKind::Retail => GeneratorConfig::retail_like(),
+            DatasetKind::Tiny => GeneratorConfig::tiny(7),
+        };
+        if let Some(s) = seed {
+            cfg.seed = s;
+        }
+        cfg
+    }
+}
+
+/// Options shared by pipeline-running subcommands.
+#[derive(Debug, Clone)]
+pub struct PipelineOpts {
+    pub dataset: DatasetKind,
+    pub input: Option<PathBuf>,
+    pub config: PipelineConfig,
+    pub artifacts: Option<PathBuf>,
+    pub seed: Option<u64>,
+    pub transactions: Option<usize>,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetKind::Groceries,
+            input: None,
+            config: PipelineConfig::default(),
+            artifacts: None,
+            seed: None,
+            transactions: None,
+        }
+    }
+}
+
+/// Parsed command.
+#[derive(Debug)]
+pub enum Command {
+    Pipeline(PipelineOpts, Option<PathBuf>),
+    Query(PipelineOpts, Vec<String>, Option<PathBuf>),
+    Serve(PipelineOpts, u16),
+    Show(PipelineOpts, usize),
+    Dot(PipelineOpts, Option<PathBuf>),
+    Export {
+        opts: PipelineOpts,
+        format: ExportFormat,
+        out: PathBuf,
+    },
+    Generate {
+        dataset: DatasetKind,
+        out: PathBuf,
+        transactions: Option<usize>,
+        seed: Option<u64>,
+    },
+    Example,
+    Help,
+}
+
+/// Ruleset export formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExportFormat {
+    Csv,
+    Jsonl,
+}
+
+impl ExportFormat {
+    pub fn parse(s: &str) -> Option<ExportFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "csv" => Some(ExportFormat::Csv),
+            "jsonl" | "json" => Some(ExportFormat::Jsonl),
+            _ => None,
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+tor — Trie of Rules: association-rule pipeline and query service
+
+USAGE:
+  tor pipeline [opts] [--save-trie FILE]   run the pipeline, print the report
+  tor query [opts] --cmd CMD...            run pipeline, execute query commands
+        [--load-trie FILE]                 ...or serve them from a saved trie
+  tor serve [opts] --port P      run pipeline, serve the TCP query protocol
+  tor show [opts] [--depth N]    render the trie as an ASCII tree
+  tor dot  [opts] [--out FILE]   export the trie as Graphviz DOT
+  tor export [opts] --out FILE [--format csv|jsonl]   export the ruleset
+  tor generate --dataset D --out FILE [--transactions N] [--seed N]
+  tor example                    walk the paper's example (Figs. 4-7)
+
+PIPELINE OPTS:
+  --dataset groceries|retail|tiny   synthetic source (default groceries)
+  --input FILE                      basket CSV source instead
+  --minsup F --minconf F            thresholds (defaults 0.005 / 0)
+  --miner apriori|fpgrowth|fpmax|eclat
+  --counter bitset|horizontal|xla   Apriori counting backend
+  --workers N                       ingest worker threads
+  --transactions N --seed N         generator overrides
+  --config FILE                     key=value config file
+  --set key=value                   single config override (repeatable)
+  --artifacts DIR                   AOT artifacts dir (for --counter xla)
+";
+
+/// Parse a full argv (excluding the binary name).
+pub fn parse(args: &[String]) -> Result<Command> {
+    let Some((cmd, rest)) = args.split_first() else {
+        return Ok(Command::Help);
+    };
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        "example" => Ok(Command::Example),
+        "pipeline" => {
+            let (opts, extras) = parse_pipeline_opts_with(rest, &["--save-trie"])?;
+            let save = extras
+                .iter()
+                .find(|(k, _)| k == "--save-trie")
+                .map(|(_, v)| PathBuf::from(v));
+            Ok(Command::Pipeline(opts, save))
+        }
+        "query" => {
+            let (opts, extras) = parse_pipeline_opts_with(rest, &["--cmd", "--load-trie"])?;
+            let cmds: Vec<String> = extras
+                .iter()
+                .filter(|(k, _)| k == "--cmd")
+                .map(|(_, v)| v.clone())
+                .collect();
+            let load = extras
+                .iter()
+                .find(|(k, _)| k == "--load-trie")
+                .map(|(_, v)| PathBuf::from(v));
+            anyhow::ensure!(!cmds.is_empty(), "query requires at least one --cmd");
+            Ok(Command::Query(opts, cmds, load))
+        }
+        "export" => {
+            let (opts, extras) = parse_pipeline_opts_with(rest, &["--format", "--out"])?;
+            let format = match extras.iter().find(|(k, _)| k == "--format") {
+                Some((_, v)) => ExportFormat::parse(v)
+                    .with_context(|| format!("unknown export format `{v}`"))?,
+                None => ExportFormat::Csv,
+            };
+            let out = extras
+                .iter()
+                .find(|(k, _)| k == "--out")
+                .map(|(_, v)| PathBuf::from(v))
+                .context("export requires --out")?;
+            Ok(Command::Export { opts, format, out })
+        }
+        "serve" => {
+            let (opts, extras) = parse_pipeline_opts_with(rest, &["--port"])?;
+            let port = extras
+                .iter()
+                .find(|(k, _)| k == "--port")
+                .context("serve requires --port")?
+                .1
+                .parse::<u16>()
+                .context("bad --port")?;
+            Ok(Command::Serve(opts, port))
+        }
+        "show" => {
+            let (opts, extras) = parse_pipeline_opts_with(rest, &["--depth"])?;
+            let depth = match extras.iter().find(|(k, _)| k == "--depth") {
+                Some((_, v)) => v.parse::<usize>().context("bad --depth")?,
+                None => 4,
+            };
+            Ok(Command::Show(opts, depth))
+        }
+        "dot" => {
+            let (opts, extras) = parse_pipeline_opts_with(rest, &["--out"])?;
+            let out = extras
+                .iter()
+                .find(|(k, _)| k == "--out")
+                .map(|(_, v)| PathBuf::from(v));
+            Ok(Command::Dot(opts, out))
+        }
+        "generate" => parse_generate(rest),
+        other => bail!("unknown command `{other}` (try `tor help`)"),
+    }
+}
+
+fn parse_generate(args: &[String]) -> Result<Command> {
+    let mut dataset = None;
+    let mut out = None;
+    let mut transactions = None;
+    let mut seed = None;
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        let mut value = |name: &str| -> Result<String> {
+            it.next().cloned().with_context(|| format!("{name} needs a value"))
+        };
+        match flag.as_str() {
+            "--dataset" => {
+                let v = value("--dataset")?;
+                dataset = Some(DatasetKind::parse(&v).with_context(|| format!("unknown dataset `{v}`"))?);
+            }
+            "--out" => out = Some(PathBuf::from(value("--out")?)),
+            "--transactions" => transactions = Some(value("--transactions")?.parse()?),
+            "--seed" => seed = Some(value("--seed")?.parse()?),
+            other => bail!("unknown generate flag `{other}`"),
+        }
+    }
+    Ok(Command::Generate {
+        dataset: dataset.context("generate requires --dataset")?,
+        out: out.context("generate requires --out")?,
+        transactions,
+        seed,
+    })
+}
+
+/// Parse shared opts; flags named in `extra_flags` are collected and
+/// returned for the subcommand to interpret.
+fn parse_pipeline_opts_with(
+    args: &[String],
+    extra_flags: &[&str],
+) -> Result<(PipelineOpts, Vec<(String, String)>)> {
+    let mut opts = PipelineOpts::default();
+    let mut extras = Vec::new();
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        let mut value = |name: &str| -> Result<String> {
+            it.next().cloned().with_context(|| format!("{name} needs a value"))
+        };
+        if extra_flags.contains(&flag.as_str()) {
+            let v = value(flag)?;
+            extras.push((flag.clone(), v));
+            continue;
+        }
+        match flag.as_str() {
+            "--dataset" => {
+                let v = value("--dataset")?;
+                opts.dataset =
+                    DatasetKind::parse(&v).with_context(|| format!("unknown dataset `{v}`"))?;
+            }
+            "--input" => opts.input = Some(PathBuf::from(value("--input")?)),
+            "--minsup" => opts.config.set("minsup", &value("--minsup")?)?,
+            "--minconf" => opts.config.set("min_confidence", &value("--minconf")?)?,
+            "--miner" => {
+                let v = value("--miner")?;
+                opts.config.miner =
+                    MinerKind::parse(&v).with_context(|| format!("unknown miner `{v}`"))?;
+            }
+            "--counter" => {
+                let v = value("--counter")?;
+                opts.config.counter =
+                    CounterKind::parse(&v).with_context(|| format!("unknown counter `{v}`"))?;
+            }
+            "--workers" => opts.config.set("workers", &value("--workers")?)?,
+            "--config" => {
+                opts.config = PipelineConfig::load(&PathBuf::from(value("--config")?))?;
+            }
+            "--set" => {
+                let v = value("--set")?;
+                let (k, val) = v
+                    .split_once('=')
+                    .context("--set expects key=value")?;
+                opts.config.set(k, val)?;
+            }
+            "--artifacts" => opts.artifacts = Some(PathBuf::from(value("--artifacts")?)),
+            "--seed" => opts.seed = Some(value("--seed")?.parse()?),
+            "--transactions" => opts.transactions = Some(value("--transactions")?.parse()?),
+            other => bail!("unknown flag `{other}` (try `tor help`)"),
+        }
+    }
+    opts.config.validate()?;
+    Ok((opts, extras))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pipeline() {
+        let cmd = parse(&argv(
+            "pipeline --dataset tiny --minsup 0.05 --miner fpgrowth --workers 2",
+        ))
+        .unwrap();
+        match cmd {
+            Command::Pipeline(o, _) => {
+                assert_eq!(o.dataset, DatasetKind::Tiny);
+                assert_eq!(o.config.minsup, 0.05);
+                assert_eq!(o.config.miner, MinerKind::FpGrowth);
+                assert_eq!(o.config.workers, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_query_with_cmds() {
+        let cmd = parse(&argv("query --dataset tiny --minsup 0.05 --cmd STATS")).unwrap();
+        match cmd {
+            Command::Query(_, cmds, _) => assert_eq!(cmds, vec!["STATS".to_string()]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn query_without_cmd_fails() {
+        assert!(parse(&argv("query --dataset tiny")).is_err());
+    }
+
+    #[test]
+    fn parses_serve_port() {
+        match parse(&argv("serve --dataset tiny --port 7878")).unwrap() {
+            Command::Serve(_, port) => assert_eq!(port, 7878),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_generate() {
+        match parse(&argv("generate --dataset retail --out /tmp/x.csv --seed 3")).unwrap() {
+            Command::Generate {
+                dataset,
+                out,
+                seed,
+                transactions,
+            } => {
+                assert_eq!(dataset, DatasetKind::Retail);
+                assert_eq!(out, PathBuf::from("/tmp/x.csv"));
+                assert_eq!(seed, Some(3));
+                assert_eq!(transactions, None);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(parse(&argv("bogus")).is_err());
+        assert!(parse(&argv("pipeline --bogus 1")).is_err());
+        assert!(parse(&argv("pipeline --minsup nope")).is_err());
+    }
+
+    #[test]
+    fn set_overrides_apply() {
+        match parse(&argv("pipeline --dataset tiny --set chunk_size=64")).unwrap() {
+            Command::Pipeline(o, _) => assert_eq!(o.config.chunk_size, 64),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_save_and_load_trie() {
+        match parse(&argv("pipeline --dataset tiny --save-trie /tmp/t.tor")).unwrap() {
+            Command::Pipeline(_, Some(p)) => assert_eq!(p, PathBuf::from("/tmp/t.tor")),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("query --load-trie /tmp/t.tor --cmd STATS")).unwrap() {
+            Command::Query(_, cmds, Some(p)) => {
+                assert_eq!(cmds, vec!["STATS".to_string()]);
+                assert_eq!(p, PathBuf::from("/tmp/t.tor"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_export() {
+        match parse(&argv("export --dataset tiny --format jsonl --out /tmp/r.jsonl")).unwrap() {
+            Command::Export { format, out, .. } => {
+                assert_eq!(format, ExportFormat::Jsonl);
+                assert_eq!(out, PathBuf::from("/tmp/r.jsonl"));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("export --dataset tiny")).is_err()); // missing --out
+        assert!(parse(&argv("export --dataset tiny --format bogus --out /tmp/x")).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert!(matches!(parse(&[]).unwrap(), Command::Help));
+        assert!(matches!(parse(&argv("help")).unwrap(), Command::Help));
+    }
+}

@@ -1,0 +1,223 @@
+//! Bounded MPMC queue with blocking backpressure.
+//!
+//! The offline vendor set has no `tokio`/`crossbeam`, so the streaming
+//! pipeline runs on std threads connected by this queue: `push` blocks when
+//! the queue is at capacity (producer backpressure), `pop` blocks when it is
+//! empty, and `close` drains to `None`. Blocked-time counters feed the
+//! pipeline telemetry so backpressure is observable, not silent.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    /// Nanoseconds producers spent blocked on a full queue.
+    producer_blocked_ns: AtomicU64,
+    /// Nanoseconds consumers spent blocked on an empty queue.
+    consumer_blocked_ns: AtomicU64,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded blocking queue handle (clone freely; all clones share state).
+pub struct BoundedQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "capacity must be positive");
+        Self {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(State {
+                    items: VecDeque::with_capacity(capacity),
+                    closed: false,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity,
+                producer_blocked_ns: AtomicU64::new(0),
+                consumer_blocked_ns: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Blocking push. Returns `Err(item)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        if state.closed {
+            return Err(item);
+        }
+        if state.items.len() >= self.inner.capacity {
+            let start = Instant::now();
+            while state.items.len() >= self.inner.capacity && !state.closed {
+                state = self.inner.not_full.wait(state).unwrap();
+            }
+            self.inner
+                .producer_blocked_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            if state.closed {
+                return Err(item);
+            }
+        }
+        state.items.push_back(item);
+        drop(state);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop. `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        if state.items.is_empty() && !state.closed {
+            let start = Instant::now();
+            while state.items.is_empty() && !state.closed {
+                state = self.inner.not_empty.wait(state).unwrap();
+            }
+            self.inner
+                .consumer_blocked_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        let item = state.items.pop_front();
+        drop(state);
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the queue: pending items remain poppable, pushes fail, blocked
+    /// threads wake.
+    pub fn close(&self) {
+        let mut state = self.inner.queue.lock().unwrap();
+        state.closed = true;
+        drop(state);
+        self.inner.not_full.notify_all();
+        self.inner.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Cumulative producer/consumer blocked time (backpressure telemetry).
+    pub fn blocked_times(&self) -> (Duration, Duration) {
+        (
+            Duration::from_nanos(self.inner.producer_blocked_ns.load(Ordering::Relaxed)),
+            Duration::from_nanos(self.inner.consumer_blocked_ns.load(Ordering::Relaxed)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let got: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn close_unblocks_consumers() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(1);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_and_records_backpressure() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(3));
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 2, "third push should be blocked");
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.len(), 2);
+        let (prod, _) = q.blocked_times();
+        assert!(prod >= Duration::from_millis(10), "blocked time {prod:?}");
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let q = BoundedQueue::new(2);
+        q.close();
+        assert!(q.push(7).is_err());
+    }
+
+    #[test]
+    fn mpmc_many_producers_consumers() {
+        let q: BoundedQueue<u64> = BoundedQueue::new(8);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..250u64 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1000);
+        all.dedup();
+        assert_eq!(all.len(), 1000, "duplicate or lost items");
+    }
+}

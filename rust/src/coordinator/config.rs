@@ -1,0 +1,215 @@
+//! Pipeline configuration: defaults, `key=value` config files, and CLI
+//! overrides (`clap` is not in the offline vendor set; the format is the
+//! same one the launcher's `--set key=value` flags use).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::mining::MinerKind;
+
+/// Which support-counting backend Apriori (and trie annotation) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterKind {
+    /// Rust-native vertical bitset intersection (default).
+    Bitset,
+    /// Horizontal per-transaction scan (textbook baseline).
+    Horizontal,
+    /// The AOT XLA artifact (L1 Pallas kernel via PJRT).
+    Xla,
+}
+
+impl CounterKind {
+    pub fn parse(s: &str) -> Option<CounterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bitset" => Some(CounterKind::Bitset),
+            "horizontal" => Some(CounterKind::Horizontal),
+            "xla" => Some(CounterKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CounterKind::Bitset => "bitset",
+            CounterKind::Horizontal => "horizontal",
+            CounterKind::Xla => "xla",
+        }
+    }
+}
+
+/// Full pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Relative minimum support (paper's groceries setting: 0.005).
+    pub minsup: f64,
+    /// Minimum confidence for rule generation (0 keeps all).
+    pub min_confidence: f64,
+    pub miner: MinerKind,
+    pub counter: CounterKind,
+    /// Ingestion worker threads.
+    pub workers: usize,
+    /// Transactions per streamed chunk.
+    pub chunk_size: usize,
+    /// Bounded-queue capacity (chunks) between source and workers.
+    pub queue_capacity: usize,
+    /// Virtual shard slots for the router.
+    pub shard_slots: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            minsup: 0.005,
+            min_confidence: 0.0,
+            miner: MinerKind::Apriori,
+            counter: CounterKind::Bitset,
+            workers: 4,
+            chunk_size: 512,
+            queue_capacity: 16,
+            shard_slots: 64,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "minsup" => self.minsup = parse_f64_in(value, 0.0, 1.0)?,
+            "min_confidence" | "minconf" => self.min_confidence = parse_f64_in(value, 0.0, 1.0)?,
+            "miner" => {
+                self.miner = MinerKind::parse(value)
+                    .with_context(|| format!("unknown miner `{value}`"))?
+            }
+            "counter" => {
+                self.counter = CounterKind::parse(value)
+                    .with_context(|| format!("unknown counter `{value}`"))?
+            }
+            "workers" => self.workers = parse_usize_min(value, 1)?,
+            "chunk_size" => self.chunk_size = parse_usize_min(value, 1)?,
+            "queue_capacity" => self.queue_capacity = parse_usize_min(value, 1)?,
+            "shard_slots" => self.shard_slots = parse_usize_min(value, 1)?,
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    /// Load a `key=value` file (# comments, blank lines ignored).
+    pub fn load(path: &Path) -> Result<PipelineConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let mut cfg = PipelineConfig::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key=value", lineno + 1))?;
+            cfg.set(k.trim(), v.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.shard_slots >= self.workers, "shard_slots < workers");
+        anyhow::ensure!(
+            self.miner == MinerKind::Apriori || self.counter != CounterKind::Xla,
+            "counter=xla requires miner=apriori (the XLA backend plugs into the \
+             level-wise counting step)"
+        );
+        Ok(())
+    }
+
+    /// Render as a `key=value` block (round-trips through `load`).
+    pub fn render(&self) -> String {
+        format!(
+            "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\n",
+            self.minsup,
+            self.min_confidence,
+            self.miner.name(),
+            self.counter.name(),
+            self.workers,
+            self.chunk_size,
+            self.queue_capacity,
+            self.shard_slots
+        )
+    }
+}
+
+fn parse_f64_in(value: &str, lo: f64, hi: f64) -> Result<f64> {
+    let v: f64 = value.parse().with_context(|| format!("bad float `{value}`"))?;
+    anyhow::ensure!((lo..=hi).contains(&v), "value {v} outside [{lo}, {hi}]");
+    Ok(v)
+}
+
+fn parse_usize_min(value: &str, min: usize) -> Result<usize> {
+    let v: usize = value.parse().with_context(|| format!("bad integer `{value}`"))?;
+    anyhow::ensure!(v >= min, "value {v} below minimum {min}");
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        PipelineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = PipelineConfig::default();
+        c.set("minsup", "0.01").unwrap();
+        c.set("miner", "fpgrowth").unwrap();
+        c.set("counter", "horizontal").unwrap();
+        c.set("workers", "8").unwrap();
+        assert_eq!(c.minsup, 0.01);
+        assert_eq!(c.miner, MinerKind::FpGrowth);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("minsup", "1.5").is_err());
+        assert!(c.set("workers", "0").is_err());
+    }
+
+    #[test]
+    fn xla_requires_apriori() {
+        let mut c = PipelineConfig::default();
+        c.set("counter", "xla").unwrap();
+        c.set("miner", "eclat").unwrap();
+        assert!(c.validate().is_err());
+        c.set("miner", "apriori").unwrap();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn render_load_roundtrip() {
+        let mut c = PipelineConfig::default();
+        c.set("minsup", "0.02").unwrap();
+        c.set("miner", "fpmax").unwrap();
+        let dir = std::env::temp_dir().join(format!("tor_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pipeline.cfg");
+        std::fs::write(&path, c.render()).unwrap();
+        let back = PipelineConfig::load(&path).unwrap();
+        assert_eq!(back.minsup, 0.02);
+        assert_eq!(back.miner, MinerKind::FpMax);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("tor_cfg_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.cfg");
+        std::fs::write(&path, "minsup 0.1\n").unwrap();
+        assert!(PipelineConfig::load(&path).is_err());
+        std::fs::write(&path, "# comment\n\nminsup=0.1\n").unwrap();
+        assert!(PipelineConfig::load(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: the streaming ARM pipeline (source → sharded ingest with
+//! backpressure → mine → rulegen → build), its configuration and telemetry,
+//! and the query service over the built Trie of Rules.
+
+pub mod backpressure;
+pub mod config;
+pub mod pipeline;
+pub mod service;
+pub mod sharding;
+pub mod telemetry;
+
+pub use backpressure::BoundedQueue;
+pub use config::{CounterKind, PipelineConfig};
+pub use pipeline::{run, PipelineOutput, Source};
+pub use service::{serve_tcp, QueryEngine};
+pub use sharding::{PartialCounts, ShardRouter};
+pub use telemetry::{PipelineReport, StageReport};

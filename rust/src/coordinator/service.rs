@@ -1,0 +1,303 @@
+//! Query service: the request loop over a built Trie of Rules.
+//!
+//! Two frontends share one engine:
+//! * an in-process [`QueryEngine`] (used by the CLI and benches), and
+//! * a line-protocol TCP server (`tor serve`) — one command per line,
+//!   one response per line, so the structure is queryable from anywhere
+//!   without Python ever entering the request path.
+//!
+//! Protocol:
+//! ```text
+//! FIND a,b => c           -> FOUND sup=.. conf=.. lift=..   | ABSENT | NOTREP
+//! TOP <metric> <k>        -> k lines `rule sup conf metric`
+//! SUPPORT a,b             -> SUPPORT <count>                | ABSENT
+//! CONSEQ c                -> rules with consequent c
+//! STATS                   -> node/rule/memory counters
+//! QUIT
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::vocab::Vocab;
+use crate::rules::metrics::Metric;
+use crate::rules::rule::Rule;
+use crate::trie::trie::{FindOutcome, TrieOfRules};
+
+/// In-process query engine over a built trie.
+pub struct QueryEngine {
+    trie: TrieOfRules,
+    vocab: Vocab,
+    queries: AtomicU64,
+}
+
+impl QueryEngine {
+    pub fn new(trie: TrieOfRules, vocab: Vocab) -> Self {
+        Self {
+            trie,
+            vocab,
+            queries: AtomicU64::new(0),
+        }
+    }
+
+    pub fn trie(&self) -> &TrieOfRules {
+        &self.trie
+    }
+
+    pub fn queries_served(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    /// Execute one text command, returning the response line(s).
+    pub fn execute(&self, line: &str) -> String {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let line = line.trim();
+        let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
+        match cmd.to_ascii_uppercase().as_str() {
+            "FIND" => self.cmd_find(rest),
+            "TOP" => self.cmd_top(rest),
+            "SUPPORT" => self.cmd_support(rest),
+            "CONSEQ" => self.cmd_conseq(rest),
+            "STATS" => self.cmd_stats(),
+            "QUIT" => "BYE".to_string(),
+            other => format!("ERR unknown command `{other}`"),
+        }
+    }
+
+    fn parse_items(&self, s: &str) -> Result<Vec<u32>> {
+        s.split(',')
+            .map(|name| {
+                let name = name.trim();
+                self.vocab
+                    .get(name)
+                    .with_context(|| format!("unknown item `{name}`"))
+            })
+            .collect()
+    }
+
+    fn cmd_find(&self, rest: &str) -> String {
+        let Some((a, c)) = rest.split_once("=>") else {
+            return "ERR usage: FIND a,b => c".to_string();
+        };
+        let (a, c) = match (self.parse_items(a), self.parse_items(c)) {
+            (Ok(a), Ok(c)) if !a.is_empty() && !c.is_empty() => (a, c),
+            (Err(e), _) | (_, Err(e)) => return format!("ERR {e}"),
+            _ => return "ERR empty rule side".to_string(),
+        };
+        if a.iter().any(|i| c.contains(i)) {
+            return "ERR overlapping rule sides".to_string();
+        }
+        match self.trie.find_rule(&Rule::from_ids(a, c)) {
+            FindOutcome::Found(m) => format!(
+                "FOUND sup={:.6} conf={:.6} lift={:.4} lev={:.6} conv={:.4}",
+                m.support, m.confidence, m.lift, m.leverage, m.conviction
+            ),
+            FindOutcome::NotRepresentable => "NOTREP".to_string(),
+            FindOutcome::Absent => "ABSENT".to_string(),
+        }
+    }
+
+    fn cmd_top(&self, rest: &str) -> String {
+        let mut parts = rest.split_whitespace();
+        let Some(metric) = parts.next().and_then(Metric::parse) else {
+            return "ERR usage: TOP <metric> <k>".to_string();
+        };
+        let Some(k) = parts.next().and_then(|s| s.parse::<usize>().ok()) else {
+            return "ERR usage: TOP <metric> <k>".to_string();
+        };
+        let top = self.trie.top_n(metric, k);
+        let mut out = format!("TOP {} {}\n", metric.name(), top.len());
+        for (idx, value) in top {
+            let path = self.trie.path_items(idx);
+            let (a, c) = path.split_at(path.len() - 1);
+            let names = |xs: &[u32]| {
+                xs.iter()
+                    .map(|&i| self.vocab.name(i))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            out.push_str(&format!(
+                "  {{{}}} => {{{}}} {}={:.6}\n",
+                names(a),
+                names(c),
+                metric.name(),
+                value
+            ));
+        }
+        out.pop();
+        out
+    }
+
+    fn cmd_support(&self, rest: &str) -> String {
+        match self.parse_items(rest) {
+            Ok(items) if !items.is_empty() => match self.trie.support_of(&items) {
+                Some(c) => format!("SUPPORT {c}"),
+                None => "ABSENT".to_string(),
+            },
+            Ok(_) => "ERR empty itemset".to_string(),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+
+    fn cmd_conseq(&self, rest: &str) -> String {
+        let Some(item) = self.vocab.get(rest.trim()) else {
+            return format!("ERR unknown item `{}`", rest.trim());
+        };
+        let rules = self.trie.rules_with_consequent(item);
+        let mut out = format!("CONSEQ {} {}\n", rest.trim(), rules.len());
+        for (idx, m) in rules.iter().take(50) {
+            let path = self.trie.path_items(*idx);
+            let a = &path[..path.len() - 1];
+            let names = a
+                .iter()
+                .map(|&i| self.vocab.name(i))
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                "  {{{names}}} => {{{}}} conf={:.4}\n",
+                rest.trim(),
+                m.confidence
+            ));
+        }
+        out.pop();
+        out
+    }
+
+    fn cmd_stats(&self) -> String {
+        format!(
+            "STATS nodes={} rules={} mem_kib={} queries={}",
+            self.trie.num_nodes(),
+            self.trie.num_representable_rules(),
+            self.trie.memory_bytes() / 1024,
+            self.queries_served()
+        )
+    }
+}
+
+/// Serve the engine over TCP until `shutdown` flips true. Binds `addr`
+/// (e.g. `127.0.0.1:7878`); returns the bound address (port 0 supported).
+pub fn serve_tcp(
+    engine: Arc<QueryEngine>,
+    addr: &str,
+    shutdown: Arc<AtomicBool>,
+) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    std::thread::spawn(move || {
+        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let engine = Arc::clone(&engine);
+                    workers.push(std::thread::spawn(move || {
+                        let _ = handle_client(stream, &engine);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(_) => break,
+            }
+        }
+        for w in workers {
+            w.join().ok();
+        }
+    });
+    Ok(local)
+}
+
+fn handle_client(stream: TcpStream, engine: &QueryEngine) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let resp = engine.execute(&line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        if resp == "BYE" {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::counts::{min_count, ItemOrder};
+    use crate::mining::fpgrowth::fpgrowth;
+
+    fn engine() -> QueryEngine {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        QueryEngine::new(trie, db.vocab().clone())
+    }
+
+    #[test]
+    fn find_command() {
+        let e = engine();
+        let resp = e.execute("FIND f,c => a");
+        assert!(resp.starts_with("FOUND"), "{resp}");
+        assert!(resp.contains("conf=1.000000"), "{resp}");
+        assert_eq!(e.execute("FIND a => f"), "NOTREP");
+        assert_eq!(e.execute("FIND f => d"), "ABSENT");
+        assert!(e.execute("FIND f => f").starts_with("ERR"));
+        assert!(e.execute("FIND nosuchitem => f").starts_with("ERR"));
+        assert!(e.execute("FIND f c").starts_with("ERR usage"));
+    }
+
+    #[test]
+    fn top_command() {
+        let e = engine();
+        let resp = e.execute("TOP support 3");
+        assert!(resp.starts_with("TOP support 3"), "{resp}");
+        assert_eq!(resp.lines().count(), 4);
+        assert!(e.execute("TOP bogus 3").starts_with("ERR"));
+    }
+
+    #[test]
+    fn support_and_conseq_commands() {
+        let e = engine();
+        assert_eq!(e.execute("SUPPORT f,c"), "SUPPORT 3");
+        assert_eq!(e.execute("SUPPORT d"), "ABSENT");
+        let resp = e.execute("CONSEQ a");
+        assert!(resp.starts_with("CONSEQ a"), "{resp}");
+        assert!(resp.lines().count() > 1);
+    }
+
+    #[test]
+    fn stats_and_counter() {
+        let e = engine();
+        e.execute("FIND f => c");
+        let resp = e.execute("STATS");
+        assert!(resp.contains("nodes="), "{resp}");
+        assert!(e.queries_served() >= 2);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        use std::io::{BufRead, BufReader, Write};
+        let e = Arc::new(engine());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = serve_tcp(Arc::clone(&e), "127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"FIND f,c => a\nSTATS\nQUIT\n")
+            .unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().map_while(|l| l.ok()).collect();
+        assert!(lines[0].starts_with("FOUND"), "{lines:?}");
+        assert!(lines[1].starts_with("STATS"), "{lines:?}");
+        assert_eq!(lines[2], "BYE");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,190 @@
+//! Shard routing and partial-count merging for the parallel mining stage.
+//!
+//! Transactions are hash-routed to worker shards; each shard accumulates
+//! local item frequencies (and later local candidate counts), which the
+//! leader merges. Routing is stable (same key, same shard) and the router
+//! can rebalance by remapping shard slots to workers when worker counts
+//! change mid-stream.
+
+use crate::data::vocab::ItemId;
+
+/// Stable hash router over `slots` virtual slots mapped onto `workers`.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    /// slot -> worker assignment; remapped on rebalance.
+    assignment: Vec<usize>,
+    workers: usize,
+}
+
+impl ShardRouter {
+    /// `slots` should exceed `workers` (virtual-slot rebalancing).
+    pub fn new(workers: usize, slots: usize) -> Self {
+        assert!(workers > 0 && slots >= workers);
+        Self {
+            assignment: (0..slots).map(|s| s % workers).collect(),
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn slots(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Route a transaction id to a worker.
+    pub fn route(&self, tid: u64) -> usize {
+        let slot = (tid.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % self.assignment.len();
+        self.assignment[slot]
+    }
+
+    /// Rebalance onto a new worker count, moving as few slots as possible
+    /// (slots keep their worker when still valid, excess is redistributed
+    /// round-robin).
+    pub fn rebalance(&mut self, new_workers: usize) {
+        assert!(new_workers > 0 && self.assignment.len() >= new_workers);
+        let mut next = 0usize;
+        for a in &mut self.assignment {
+            if *a >= new_workers {
+                *a = next % new_workers;
+                next += 1;
+            }
+        }
+        // Growing: spread some slots onto the new workers.
+        if new_workers > self.workers {
+            let per = self.assignment.len() / new_workers;
+            let mut moved = vec![0usize; new_workers];
+            for a in &mut self.assignment {
+                if moved[*a] >= per && *a < self.workers {
+                    // candidate to move to an underfull new worker
+                    if let Some(target) =
+                        (self.workers..new_workers).find(|&w| moved[w] < per)
+                    {
+                        *a = target;
+                    }
+                }
+                moved[*a] += 1;
+            }
+        }
+        self.workers = new_workers;
+    }
+
+    /// Fraction of slots assigned to each worker (balance diagnostics).
+    pub fn load_shares(&self) -> Vec<f64> {
+        let mut counts = vec![0usize; self.workers];
+        for &a in &self.assignment {
+            counts[a] += 1;
+        }
+        counts
+            .into_iter()
+            .map(|c| c as f64 / self.assignment.len() as f64)
+            .collect()
+    }
+}
+
+/// Per-shard partial item-frequency accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct PartialCounts {
+    pub freqs: Vec<u64>,
+    pub transactions: usize,
+}
+
+impl PartialCounts {
+    pub fn new(num_items: usize) -> Self {
+        Self {
+            freqs: vec![0; num_items],
+            transactions: 0,
+        }
+    }
+
+    pub fn observe(&mut self, tx: &[ItemId]) {
+        self.transactions += 1;
+        for &i in tx {
+            if (i as usize) >= self.freqs.len() {
+                self.freqs.resize(i as usize + 1, 0);
+            }
+            self.freqs[i as usize] += 1;
+        }
+    }
+
+    /// Merge another shard's partials into this one.
+    pub fn merge(&mut self, other: &PartialCounts) {
+        if other.freqs.len() > self.freqs.len() {
+            self.freqs.resize(other.freqs.len(), 0);
+        }
+        for (a, &b) in self.freqs.iter_mut().zip(&other.freqs) {
+            *a += b;
+        }
+        self.transactions += other.transactions;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_stable() {
+        let r = ShardRouter::new(4, 64);
+        for tid in 0..1000u64 {
+            assert_eq!(r.route(tid), r.route(tid));
+            assert!(r.route(tid) < 4);
+        }
+    }
+
+    #[test]
+    fn routing_is_roughly_balanced() {
+        let r = ShardRouter::new(4, 256);
+        let mut counts = [0usize; 4];
+        for tid in 0..100_000u64 {
+            counts[r.route(tid)] += 1;
+        }
+        for &c in &counts {
+            assert!((15_000..35_000).contains(&c), "imbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn rebalance_shrink_covers_all_workers() {
+        let mut r = ShardRouter::new(6, 60);
+        r.rebalance(4);
+        assert_eq!(r.workers(), 4);
+        let shares = r.load_shares();
+        assert_eq!(shares.len(), 4);
+        for &s in &shares {
+            assert!(s > 0.0);
+        }
+        for tid in 0..1000u64 {
+            assert!(r.route(tid) < 4);
+        }
+    }
+
+    #[test]
+    fn rebalance_grow_uses_new_workers() {
+        let mut r = ShardRouter::new(2, 64);
+        r.rebalance(4);
+        let shares = r.load_shares();
+        assert_eq!(shares.len(), 4);
+        assert!(shares[2] > 0.0 && shares[3] > 0.0, "{shares:?}");
+    }
+
+    #[test]
+    fn partial_counts_merge_equals_whole() {
+        use crate::data::transaction::paper_example_db;
+        let db = paper_example_db();
+        let r = ShardRouter::new(3, 32);
+        let mut parts: Vec<PartialCounts> =
+            (0..3).map(|_| PartialCounts::new(db.num_items())).collect();
+        for (tid, tx) in db.iter().enumerate() {
+            parts[r.route(tid as u64)].observe(tx);
+        }
+        let mut merged = PartialCounts::new(db.num_items());
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.transactions, db.num_transactions());
+        assert_eq!(merged.freqs, db.item_frequencies());
+    }
+}

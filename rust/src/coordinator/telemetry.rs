@@ -1,0 +1,123 @@
+//! Pipeline telemetry: per-stage timings, throughput, and backpressure
+//! accounting, rendered as a human-readable report by the CLI.
+
+use std::time::Duration;
+
+use crate::util::timer::fmt_duration;
+
+/// One pipeline stage's timing record.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub name: String,
+    pub duration: Duration,
+    /// Items processed by the stage (transactions, itemsets, rules, ...).
+    pub items: usize,
+}
+
+impl StageReport {
+    pub fn throughput(&self) -> f64 {
+        let secs = self.duration.as_secs_f64();
+        if secs > 0.0 {
+            self.items as f64 / secs
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// The full pipeline run report.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    pub stages: Vec<StageReport>,
+    pub producer_blocked: Duration,
+    pub consumer_blocked: Duration,
+    pub num_transactions: usize,
+    pub num_frequent_itemsets: usize,
+    pub num_rules: usize,
+    pub trie_nodes: usize,
+    pub trie_rules_representable: usize,
+    pub trie_memory_bytes: usize,
+    pub frame_memory_bytes: usize,
+    pub counter_backend: &'static str,
+}
+
+impl PipelineReport {
+    pub fn total_duration(&self) -> Duration {
+        self.stages.iter().map(|s| s.duration).sum()
+    }
+
+    pub fn push_stage(&mut self, name: &str, duration: Duration, items: usize) {
+        self.stages.push(StageReport {
+            name: name.to_string(),
+            duration,
+            items,
+        });
+    }
+
+    /// Markdown-ish rendering for CLI output and EXPERIMENTS.md capture.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("pipeline report\n");
+        out.push_str("---------------\n");
+        for s in &self.stages {
+            out.push_str(&format!(
+                "  {:<18} {:>12}  ({} items, {:.0}/s)\n",
+                s.name,
+                fmt_duration(s.duration),
+                s.items,
+                s.throughput()
+            ));
+        }
+        out.push_str(&format!(
+            "  {:<18} {:>12}\n",
+            "total",
+            fmt_duration(self.total_duration())
+        ));
+        out.push_str(&format!(
+            "  backpressure: producers blocked {}, consumers blocked {}\n",
+            fmt_duration(self.producer_blocked),
+            fmt_duration(self.consumer_blocked)
+        ));
+        out.push_str(&format!(
+            "  transactions={} frequent={} rules={} (counter={})\n",
+            self.num_transactions, self.num_frequent_itemsets, self.num_rules, self.counter_backend
+        ));
+        out.push_str(&format!(
+            "  trie: {} nodes, {} representable rules, {} KiB (frame: {} KiB)\n",
+            self.trie_nodes,
+            self.trie_rules_representable,
+            self.trie_memory_bytes / 1024,
+            self.frame_memory_bytes / 1024
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_all_stages() {
+        let mut r = PipelineReport::default();
+        r.push_stage("ingest", Duration::from_millis(10), 100);
+        r.push_stage("mine", Duration::from_millis(30), 42);
+        r.num_transactions = 100;
+        r.counter_backend = "bitset";
+        let text = r.render();
+        assert!(text.contains("ingest"));
+        assert!(text.contains("mine"));
+        assert!(text.contains("counter=bitset"));
+        assert_eq!(r.total_duration(), Duration::from_millis(40));
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let s = StageReport {
+            name: "x".into(),
+            duration: Duration::from_secs(2),
+            items: 100,
+        };
+        assert!((s.throughput() - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,116 @@
+//! Basket-format I/O.
+//!
+//! Reads/writes the "basket" CSV convention used by R `arules` for the
+//! Groceries dataset: one transaction per line, comma-separated item labels.
+//! If a user supplies the real `groceries.csv` / a converted Online Retail
+//! export, the whole pipeline runs on it unchanged (DESIGN.md §5.1).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::transaction::TransactionDb;
+use crate::data::vocab::Vocab;
+
+/// Parse basket CSV from a reader.
+pub fn read_basket<R: Read>(reader: R) -> Result<TransactionDb> {
+    let mut b = TransactionDb::builder(Vocab::new());
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.with_context(|| format!("basket line {}", lineno + 1))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let names: Vec<&str> = trimmed
+            .split(',')
+            .map(|s| s.trim().trim_matches('"'))
+            .filter(|s| !s.is_empty())
+            .collect();
+        if names.is_empty() {
+            continue;
+        }
+        b.push_names(&names);
+    }
+    anyhow::ensure!(!b.is_empty(), "basket file contained no transactions");
+    Ok(b.build())
+}
+
+/// Load basket CSV from a path.
+pub fn load_basket(path: &Path) -> Result<TransactionDb> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_basket(f)
+}
+
+/// Write a database in basket format.
+pub fn write_basket<W: Write>(db: &TransactionDb, mut w: W) -> Result<()> {
+    for tx in db.iter() {
+        let names: Vec<&str> = tx.iter().map(|&i| db.vocab().name(i)).collect();
+        writeln!(w, "{}", names.join(","))?;
+    }
+    Ok(())
+}
+
+/// Save to a path in basket format.
+pub fn save_basket(db: &TransactionDb, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    write_basket(db, std::io::BufWriter::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::GeneratorConfig;
+
+    #[test]
+    fn parses_simple_basket() {
+        let src = "milk,bread\nbread, eggs ,milk\n\n# comment\nbeer\n";
+        let db = read_basket(src.as_bytes()).unwrap();
+        assert_eq!(db.num_transactions(), 3);
+        assert_eq!(db.num_items(), 4);
+        assert_eq!(db.transaction(2).len(), 1);
+    }
+
+    #[test]
+    fn strips_quotes() {
+        let db = read_basket("\"a\",\"b\"\n\"a\"\n".as_bytes()).unwrap();
+        assert_eq!(db.num_items(), 2);
+        assert_eq!(db.vocab().get("a"), Some(0));
+    }
+
+    #[test]
+    fn empty_file_errors() {
+        assert!(read_basket("".as_bytes()).is_err());
+        assert!(read_basket("\n\n# only comments\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn roundtrip_preserves_transactions() {
+        let db = GeneratorConfig::tiny(3).generate();
+        let mut buf = Vec::new();
+        write_basket(&db, &mut buf).unwrap();
+        let back = read_basket(buf.as_slice()).unwrap();
+        assert_eq!(back.num_transactions(), db.num_transactions());
+        for t in 0..db.num_transactions() {
+            let orig: Vec<&str> = db.transaction(t).iter().map(|&i| db.vocab().name(i)).collect();
+            let mut got: Vec<&str> =
+                back.transaction(t).iter().map(|&i| back.vocab().name(i)).collect();
+            let mut orig_sorted = orig.clone();
+            orig_sorted.sort_unstable();
+            got.sort_unstable();
+            assert_eq!(got, orig_sorted, "tx {t}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let db = GeneratorConfig::tiny(9).generate();
+        let dir = std::env::temp_dir().join(format!("tor_loader_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baskets.csv");
+        save_basket(&db, &path).unwrap();
+        let back = load_basket(&path).unwrap();
+        assert_eq!(back.num_transactions(), db.num_transactions());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

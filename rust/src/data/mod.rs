@@ -1,0 +1,12 @@
+//! Transaction-data substrate: vocabulary interning, CSR transaction store,
+//! synthetic dataset generators calibrated to the paper's two evaluation
+//! datasets (DESIGN.md §5), and basket-format I/O.
+
+pub mod generator;
+pub mod loader;
+pub mod transaction;
+pub mod vocab;
+
+pub use generator::{GeneratorConfig, TransactionStream};
+pub use transaction::{paper_example_db, TransactionDb};
+pub use vocab::{ItemId, Vocab};

@@ -1,0 +1,299 @@
+//! Transaction database: CSR-packed item-id lists plus derived views.
+//!
+//! The central ingestion product. Stores every transaction's (sorted,
+//! deduplicated) item ids in one flat arena with an offsets table — cache
+//! friendly for the horizontal miners — and can derive:
+//!
+//! * per-item frequencies (the ordering the trie and FP-tree both use),
+//! * vertical per-item [`Bitset`] tid-lists (ECLAT / bitset counting),
+//! * padded `{0,1}` incidence chunks for the XLA support-count artifact.
+
+use crate::data::vocab::{ItemId, Vocab};
+use crate::util::bitset::Bitset;
+
+/// CSR transaction store.
+#[derive(Debug, Clone)]
+pub struct TransactionDb {
+    vocab: Vocab,
+    /// offsets.len() == num_transactions + 1
+    offsets: Vec<usize>,
+    items: Vec<ItemId>,
+}
+
+impl TransactionDb {
+    pub fn builder(vocab: Vocab) -> TransactionDbBuilder {
+        TransactionDbBuilder {
+            vocab,
+            offsets: vec![0],
+            items: Vec::new(),
+        }
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+
+    pub fn num_transactions(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_items(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Total stored item occurrences.
+    pub fn num_entries(&self) -> usize {
+        self.items.len()
+    }
+
+    /// The `t`-th transaction as a sorted id slice.
+    pub fn transaction(&self, t: usize) -> &[ItemId] {
+        &self.items[self.offsets[t]..self.offsets[t + 1]]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &[ItemId]> {
+        (0..self.num_transactions()).map(move |t| self.transaction(t))
+    }
+
+    /// Absolute frequency of every item id.
+    pub fn item_frequencies(&self) -> Vec<u64> {
+        let mut freq = vec![0u64; self.num_items()];
+        for &it in &self.items {
+            freq[it as usize] += 1;
+        }
+        freq
+    }
+
+    /// Vertical view: one tid-bitset per item.
+    pub fn vertical(&self) -> Vec<Bitset> {
+        let n = self.num_transactions();
+        let mut cols: Vec<Bitset> = (0..self.num_items()).map(|_| Bitset::new(n)).collect();
+        for t in 0..n {
+            for &it in self.transaction(t) {
+                cols[it as usize].set(t);
+            }
+        }
+        cols
+    }
+
+    /// Dense `{0,1}` incidence chunk for transactions `[t0, t0+rows)`,
+    /// padded with zero rows past the end and zero columns past
+    /// `self.num_items()`. Row-major `rows x cols` f32 — the XLA artifact's
+    /// input layout.
+    pub fn incidence_chunk(&self, t0: usize, rows: usize, cols: usize) -> Vec<f32> {
+        assert!(
+            cols >= self.num_items(),
+            "chunk cols {cols} < vocabulary {}",
+            self.num_items()
+        );
+        let mut out = vec![0f32; rows * cols];
+        let end = (t0 + rows).min(self.num_transactions());
+        for t in t0..end {
+            let row = (t - t0) * cols;
+            for &it in self.transaction(t) {
+                out[row + it as usize] = 1.0;
+            }
+        }
+        out
+    }
+
+    /// Subset of transactions by index (sharding, sampling).
+    pub fn select(&self, idx: &[usize]) -> TransactionDb {
+        let mut b = TransactionDb::builder(self.vocab.clone());
+        for &t in idx {
+            b.push_ids(self.transaction(t).to_vec());
+        }
+        b.build()
+    }
+
+    /// Keep only items accepted by `keep` (ids and vocab are preserved;
+    /// transactions that become empty are dropped).
+    pub fn retain_items(&self, keep: impl Fn(ItemId) -> bool) -> TransactionDb {
+        let mut b = TransactionDb::builder(self.vocab.clone());
+        for tx in self.iter() {
+            let filtered: Vec<ItemId> = tx.iter().copied().filter(|&i| keep(i)).collect();
+            if !filtered.is_empty() {
+                b.push_ids(filtered);
+            }
+        }
+        b.build()
+    }
+
+    /// Stable hash-partition into `shards` databases (coordinator sharding).
+    pub fn shard(&self, shards: usize) -> Vec<TransactionDb> {
+        assert!(shards > 0);
+        let mut builders: Vec<TransactionDbBuilder> = (0..shards)
+            .map(|_| TransactionDb::builder(self.vocab.clone()))
+            .collect();
+        for t in 0..self.num_transactions() {
+            // Fibonacci hashing of the tid for a stable spread.
+            let s = ((t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % shards;
+            builders[s].push_ids(self.transaction(t).to_vec());
+        }
+        builders.into_iter().map(|b| b.build()).collect()
+    }
+}
+
+/// Incremental builder (ingestion path).
+#[derive(Debug)]
+pub struct TransactionDbBuilder {
+    vocab: Vocab,
+    offsets: Vec<usize>,
+    items: Vec<ItemId>,
+}
+
+impl TransactionDbBuilder {
+    /// Append a transaction of item *names* (interned into the vocab).
+    pub fn push_names(&mut self, names: &[&str]) {
+        let ids: Vec<ItemId> = names.iter().map(|n| self.vocab.intern(n)).collect();
+        self.push_ids(ids);
+    }
+
+    /// Append a transaction of item ids; sorts and dedups.
+    pub fn push_ids(&mut self, mut ids: Vec<ItemId>) {
+        ids.sort_unstable();
+        ids.dedup();
+        self.items.extend_from_slice(&ids);
+        self.offsets.push(self.items.len());
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn build(self) -> TransactionDb {
+        TransactionDb {
+            vocab: self.vocab,
+            offsets: self.offsets,
+            items: self.items,
+        }
+    }
+}
+
+/// Merge per-shard item-frequency vectors (coordinator count-merge).
+pub fn merge_frequencies(parts: &[Vec<u64>]) -> Vec<u64> {
+    let n = parts.iter().map(|p| p.len()).max().unwrap_or(0);
+    let mut out = vec![0u64; n];
+    for p in parts {
+        for (i, &c) in p.iter().enumerate() {
+            out[i] += c;
+        }
+    }
+    out
+}
+
+/// Convenience: the paper's Fig. 4(a) illustrative dataset.
+///
+/// TID 1: f,a,c,d,g,i,m,p — TID 2: a,b,c,f,l,m,o — TID 3: b,f,h,j,o —
+/// TID 4: b,c,k,s,p — TID 5: a,f,c,e,l,p,m,n
+pub fn paper_example_db() -> TransactionDb {
+    let mut b = TransactionDb::builder(Vocab::new());
+    b.push_names(&["f", "a", "c", "d", "g", "i", "m", "p"]);
+    b.push_names(&["a", "b", "c", "f", "l", "m", "o"]);
+    b.push_names(&["b", "f", "h", "j", "o"]);
+    b.push_names(&["b", "c", "k", "s", "p"]);
+    b.push_names(&["a", "f", "c", "e", "l", "p", "m", "n"]);
+    b.build()
+}
+
+/// The paper's example restricted to the Fig. 4(b) frequent-item table.
+///
+/// The paper's worked example is internally two-tiered: the item table
+/// (Fig. 4b) keeps items with frequency >= 3, while the FP-max sequences
+/// (Fig. 4c) are mined at minsup 0.3 (count >= 2) over transactions already
+/// filtered to those items. This helper applies the first tier; mining the
+/// result at minsup 0.3 reproduces Fig. 4(c) exactly (see
+/// `mining::fpmax::tests::paper_fig4c_sequences`).
+pub fn paper_example_db_fig4_filtered() -> TransactionDb {
+    let db = paper_example_db();
+    let freq = db.item_frequencies();
+    db.retain_items(|i| freq[i as usize] >= 3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sorts_and_dedups() {
+        let mut b = TransactionDb::builder(Vocab::new());
+        b.push_names(&["b", "a", "b", "c"]);
+        let db = b.build();
+        assert_eq!(db.num_transactions(), 1);
+        let names: Vec<&str> = db.transaction(0).iter().map(|&i| db.vocab().name(i)).collect();
+        // ids follow intern order (b=0, a=1, c=2); sorted by id
+        assert_eq!(db.transaction(0).len(), 3);
+        assert!(names.contains(&"a") && names.contains(&"b") && names.contains(&"c"));
+    }
+
+    #[test]
+    fn paper_example_frequencies_match_fig4b() {
+        // Fig 4(b): f:4 c:4 a:3 b:3 m:3 p:3
+        let db = paper_example_db();
+        assert_eq!(db.num_transactions(), 5);
+        let freq = db.item_frequencies();
+        let get = |n: &str| freq[db.vocab().get(n).unwrap() as usize];
+        assert_eq!(get("f"), 4);
+        assert_eq!(get("c"), 4);
+        assert_eq!(get("a"), 3);
+        assert_eq!(get("b"), 3);
+        assert_eq!(get("m"), 3);
+        assert_eq!(get("p"), 3);
+        assert_eq!(get("d"), 1);
+    }
+
+    #[test]
+    fn vertical_matches_horizontal() {
+        let db = paper_example_db();
+        let cols = db.vertical();
+        let freq = db.item_frequencies();
+        for (i, col) in cols.iter().enumerate() {
+            assert_eq!(col.count() as u64, freq[i], "item {i}");
+        }
+        // item "f" present in tx 0,1,2,4
+        let f = db.vocab().get("f").unwrap() as usize;
+        let tids: Vec<usize> = cols[f].iter_ones().collect();
+        assert_eq!(tids, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn incidence_chunk_pads() {
+        let db = paper_example_db();
+        let ni = db.num_items();
+        let chunk = db.incidence_chunk(3, 4, ni + 3);
+        // rows 0,1 are tx 3,4; rows 2,3 are padding
+        assert_eq!(chunk.len(), 4 * (ni + 3));
+        let row_sum = |r: usize| -> f32 {
+            chunk[r * (ni + 3)..(r + 1) * (ni + 3)].iter().sum()
+        };
+        assert_eq!(row_sum(0), db.transaction(3).len() as f32);
+        assert_eq!(row_sum(1), db.transaction(4).len() as f32);
+        assert_eq!(row_sum(2), 0.0);
+        assert_eq!(row_sum(3), 0.0);
+    }
+
+    #[test]
+    fn sharding_partitions_all_transactions() {
+        let db = paper_example_db();
+        let shards = db.shard(3);
+        let total: usize = shards.iter().map(|s| s.num_transactions()).sum();
+        assert_eq!(total, db.num_transactions());
+        let merged = merge_frequencies(
+            &shards.iter().map(|s| s.item_frequencies()).collect::<Vec<_>>(),
+        );
+        assert_eq!(merged, db.item_frequencies());
+    }
+
+    #[test]
+    fn select_subset() {
+        let db = paper_example_db();
+        let sub = db.select(&[0, 4]);
+        assert_eq!(sub.num_transactions(), 2);
+        assert_eq!(sub.transaction(0), db.transaction(0));
+        assert_eq!(sub.transaction(1), db.transaction(4));
+    }
+}

@@ -1,0 +1,89 @@
+//! Item vocabulary: interns item names to dense `u32` ids.
+//!
+//! Everything downstream of ingestion works on ids; names reappear only at
+//! presentation time (viz, CLI output). Interning is what makes the trie
+//! nodes pointer-free and the XLA incidence matrices dense.
+
+use std::collections::HashMap;
+
+/// The dense item identifier used across the library.
+pub type ItemId = u32;
+
+/// Bidirectional name <-> id interner.
+#[derive(Debug, Clone, Default)]
+pub struct Vocab {
+    names: Vec<String>,
+    ids: HashMap<String, ItemId>,
+}
+
+impl Vocab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `name`, returning its (possibly pre-existing) id.
+    pub fn intern(&mut self, name: &str) -> ItemId {
+        if let Some(&id) = self.ids.get(name) {
+            return id;
+        }
+        let id = self.names.len() as ItemId;
+        self.names.push(name.to_string());
+        self.ids.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn get(&self, name: &str) -> Option<ItemId> {
+        self.ids.get(name).copied()
+    }
+
+    pub fn name(&self, id: ItemId) -> &str {
+        &self.names[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Synthetic vocabulary `item_0000 .. item_{n-1}` (generators).
+    pub fn synthetic(n: usize) -> Self {
+        let mut v = Vocab::new();
+        for i in 0..n {
+            v.intern(&format!("item_{i:04}"));
+        }
+        v
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.names.iter().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut v = Vocab::new();
+        let a = v.intern("milk");
+        let b = v.intern("bread");
+        assert_eq!(v.intern("milk"), a);
+        assert_ne!(a, b);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.name(a), "milk");
+        assert_eq!(v.get("bread"), Some(b));
+        assert_eq!(v.get("eggs"), None);
+    }
+
+    #[test]
+    fn synthetic_vocab() {
+        let v = Vocab::synthetic(3);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.name(0), "item_0000");
+        assert_eq!(v.get("item_0002"), Some(2));
+    }
+}

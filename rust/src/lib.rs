@@ -1,0 +1,30 @@
+//! # Trie of Rules
+//!
+//! A production-grade reproduction of *"Exploring the Trie of Rules: a fast
+//! data structure for the representation of association rules"*
+//! (Kudriavtsev, Bezbradica, McCarren; 2023), built as a three-layer
+//! rust + JAX + Pallas data pipeline:
+//!
+//! * **L3 (this crate)** — the full association-rule-mining pipeline and the
+//!   paper's contribution: streaming ingestion, sharded mining with
+//!   backpressure, rule generation, the [`trie::TrieOfRules`] structure, the
+//!   pandas-semantics [`baseline::RuleFrame`], and a query service.
+//! * **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels for
+//!   the tensor-shaped mining hot-spot (batched itemset-support counting and
+//!   vectorized rule metrics), AOT-lowered to HLO text and executed from
+//!   rust via PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure of the paper to a bench target.
+
+pub mod baseline;
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod mining;
+pub mod rules;
+pub mod runtime;
+pub mod stats;
+pub mod trie;
+pub mod util;

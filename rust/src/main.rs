@@ -1,0 +1,229 @@
+//! `tor` — the Trie of Rules launcher.
+//!
+//! L3 entrypoint: wires the CLI to the streaming pipeline, the query
+//! engine/TCP service, the visualization exports, and the paper's worked
+//! example. Python never runs here; `--counter xla` loads the AOT HLO-text
+//! artifacts through PJRT.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use trie_of_rules::cli::{self, Command, PipelineOpts};
+use trie_of_rules::coordinator::config::CounterKind;
+use trie_of_rules::coordinator::pipeline::{self, PipelineOutput, Source};
+use trie_of_rules::coordinator::service::{serve_tcp, QueryEngine};
+use trie_of_rules::runtime::{default_artifacts_dir, Runtime};
+use trie_of_rules::trie::viz;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match cli::parse(args)? {
+        Command::Help => {
+            print!("{}", cli::USAGE);
+            Ok(())
+        }
+        Command::Example => run_example(),
+        Command::Pipeline(opts, save) => {
+            let out = run_pipeline(&opts)?;
+            print!("{}", out.report.render());
+            if let Some(path) = save {
+                trie_of_rules::trie::serialize::save(&out.trie, Some(out.db.vocab()), &path)?;
+                println!("saved trie ({} nodes) to {}", out.trie.num_nodes(), path.display());
+            }
+            Ok(())
+        }
+        Command::Query(opts, cmds, load) => {
+            let engine = match load {
+                Some(path) => {
+                    let (trie, vocab) = trie_of_rules::trie::serialize::load(&path)?;
+                    let vocab = vocab
+                        .context("saved trie has no vocabulary; re-save with one")?;
+                    eprintln!(
+                        "loaded trie: {} nodes, {} rules",
+                        trie.num_nodes(),
+                        trie.num_representable_rules()
+                    );
+                    QueryEngine::new(trie, vocab)
+                }
+                None => {
+                    let out = run_pipeline(&opts)?;
+                    eprint!("{}", out.report.render());
+                    let vocab = out.db.vocab().clone();
+                    QueryEngine::new(out.trie, vocab)
+                }
+            };
+            for cmd in cmds {
+                println!("> {cmd}");
+                println!("{}", engine.execute(&cmd));
+            }
+            Ok(())
+        }
+        Command::Export { opts, format, out } => {
+            let result = run_pipeline(&opts)?;
+            eprint!("{}", result.report.render());
+            let f = std::fs::File::create(&out)
+                .with_context(|| format!("create {}", out.display()))?;
+            let w = std::io::BufWriter::new(f);
+            match format {
+                trie_of_rules::cli::ExportFormat::Csv => {
+                    trie_of_rules::rules::export::write_csv(&result.ruleset, result.db.vocab(), w)?
+                }
+                trie_of_rules::cli::ExportFormat::Jsonl => trie_of_rules::rules::export::write_jsonl(
+                    &result.ruleset,
+                    result.db.vocab(),
+                    w,
+                )?,
+            }
+            println!("exported {} rules to {}", result.ruleset.len(), out.display());
+            Ok(())
+        }
+        Command::Serve(opts, port) => {
+            let out = run_pipeline(&opts)?;
+            eprint!("{}", out.report.render());
+            let vocab = out.db.vocab().clone();
+            let engine = Arc::new(QueryEngine::new(out.trie, vocab));
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let addr = serve_tcp(engine, &format!("127.0.0.1:{port}"), Arc::clone(&shutdown))?;
+            println!("serving on {addr} (Ctrl-C to stop)");
+            // Block forever; the process exits on signal.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+        }
+        Command::Show(opts, depth) => {
+            let out = run_pipeline(&opts)?;
+            eprint!("{}", out.report.render());
+            print!("{}", viz::to_ascii(&out.trie, out.db.vocab(), depth));
+            Ok(())
+        }
+        Command::Dot(opts, out_path) => {
+            let out = run_pipeline(&opts)?;
+            let dot = viz::to_dot(&out.trie, out.db.vocab());
+            match out_path {
+                Some(p) => {
+                    std::fs::write(&p, dot).with_context(|| format!("write {}", p.display()))?;
+                    eprintln!("wrote {}", p.display());
+                }
+                None => print!("{dot}"),
+            }
+            Ok(())
+        }
+        Command::Generate {
+            dataset,
+            out,
+            transactions,
+            seed,
+        } => {
+            let mut cfg = dataset.generator(seed);
+            if let Some(t) = transactions {
+                cfg.num_transactions = t;
+            }
+            let db = cfg.generate();
+            trie_of_rules::data::loader::save_basket(&db, &out)?;
+            println!(
+                "wrote {} transactions x {} items to {}",
+                db.num_transactions(),
+                db.num_items(),
+                out.display()
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Shared pipeline-run logic for the subcommands.
+fn run_pipeline(opts: &PipelineOpts) -> Result<PipelineOutput> {
+    let runtime = if opts.config.counter == CounterKind::Xla {
+        let dir = opts
+            .artifacts
+            .clone()
+            .unwrap_or_else(default_artifacts_dir);
+        Some(Runtime::load(&dir)?)
+    } else {
+        None
+    };
+    let source = match &opts.input {
+        Some(path) => Source::Basket(path.clone()),
+        None => {
+            let mut cfg = opts.dataset.generator(opts.seed);
+            if let Some(t) = opts.transactions {
+                cfg.num_transactions = t;
+            }
+            // The synthetic datasets use a minsup tuned per dataset; keep
+            // whatever the user set in the config.
+            Source::Generated(cfg)
+        }
+    };
+    pipeline::run(source, &opts.config, runtime.as_ref())
+}
+
+/// Walk the paper's worked example (Figs. 4–7) end to end.
+fn run_example() -> Result<()> {
+    use trie_of_rules::data::transaction::paper_example_db_fig4_filtered;
+    use trie_of_rules::mining::fpmax::frequent_sequences;
+    use trie_of_rules::mining::fpgrowth::fpgrowth;
+    use trie_of_rules::rules::rule::Rule;
+    use trie_of_rules::trie::compound::confidence_by_product;
+    use trie_of_rules::trie::trie::TrieOfRules;
+
+    println!("The paper's worked example (Figs. 4-7)\n");
+    let db = paper_example_db_fig4_filtered();
+    println!("Fig 4(a): {} transactions over the frequent items:", db.num_transactions());
+    for (t, tx) in db.iter().enumerate() {
+        let names: Vec<&str> = tx.iter().map(|&i| db.vocab().name(i)).collect();
+        println!("  TID {}: {}", t + 1, names.join(", "));
+    }
+
+    let (order, seqs) = frequent_sequences(&db, 0.3);
+    println!("\nFig 4(c): FP-max frequent sequences @ minsup 0.3:");
+    for (seq, count) in &seqs {
+        let names: Vec<&str> = seq.iter().map(|&i| db.vocab().name(i)).collect();
+        println!("  ({}) support {}", names.join(", "), count);
+    }
+
+    // Fig 5 builds the trie from the three maximal sequences (Step 2), with
+    // prefix supports recounted for the Step-3 annotation.
+    let mut counter = trie_of_rules::mining::apriori::BitsetCounter::new(&db);
+    let seq_trie =
+        TrieOfRules::from_sequences(&seqs, &order, &mut counter, db.num_transactions())?;
+    println!(
+        "\nFig 5: the Trie of Rules from the sequences ({} nodes):",
+        seq_trie.num_nodes()
+    );
+    print!("{}", viz::to_ascii(&seq_trie, db.vocab(), usize::MAX));
+
+    // Figs 6-7 read metrics off the full-frequent trie (every rule stored).
+    let fi = fpgrowth(&db, 0.3);
+    let trie = TrieOfRules::from_frequent(&fi, &order)?;
+
+    let name = |s: &str| db.vocab().get(s).unwrap();
+    let rule = Rule::from_ids(vec![name("f"), name("c")], vec![name("a")]);
+    println!("\nFig 6: metrics of node `a` (rule {{f,c}} => {{a}}):");
+    match trie.find_rule(&rule) {
+        trie_of_rules::trie::trie::FindOutcome::Found(m) => println!(
+            "  support={:.2} confidence={:.2} lift={:.3} leverage={:.3} conviction={:.3}",
+            m.support, m.confidence, m.lift, m.leverage, m.conviction
+        ),
+        other => println!("  unexpected: {other:?}"),
+    }
+
+    let compound = Rule::from_ids(vec![name("f")], vec![name("c"), name("a")]);
+    println!("\nFig 7 / Eq. 1-4: compound consequent {{f}} => {{c,a}}:");
+    println!(
+        "  confidence by node-product = {:.4} (= sup{{f,c,a}}/sup{{f}} = 3/4)",
+        confidence_by_product(&trie, &compound).unwrap()
+    );
+    Ok(())
+}

@@ -1,0 +1,233 @@
+//! Apriori (Agrawal & Srikant) with pluggable support-counting backends.
+//!
+//! The paper's evaluation mines the Groceries ruleset with Apriori; this
+//! implementation is also where the three-layer architecture plugs in: the
+//! level-wise counting step takes any [`SupportCounter`], and the PJRT
+//! runtime provides an XLA-artifact-backed one
+//! ([`crate::runtime::support_exec::XlaSupportCounter`]) that runs the L1
+//! Pallas kernel. The rust-native [`BitsetCounter`] is the default and the
+//! ablation baseline (DESIGN.md A2).
+
+use std::collections::HashSet;
+
+use crate::data::transaction::TransactionDb;
+use crate::data::vocab::ItemId;
+use crate::mining::counts::min_count;
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+use crate::util::bitset::Bitset;
+
+/// A backend that counts the absolute support of candidate itemsets.
+pub trait SupportCounter {
+    fn count(&mut self, candidates: &[Itemset]) -> Vec<u64>;
+
+    /// Diagnostic label for telemetry/bench output.
+    fn name(&self) -> &'static str {
+        "unnamed"
+    }
+}
+
+/// Vertical bitset counter: per-item tid-bitsets, intersection cardinality
+/// per candidate. The fast rust-native path.
+pub struct BitsetCounter {
+    cols: Vec<Bitset>,
+}
+
+impl BitsetCounter {
+    pub fn new(db: &TransactionDb) -> Self {
+        Self {
+            cols: db.vertical(),
+        }
+    }
+}
+
+impl SupportCounter for BitsetCounter {
+    fn count(&mut self, candidates: &[Itemset]) -> Vec<u64> {
+        candidates
+            .iter()
+            .map(|c| {
+                let sets: Vec<&Bitset> =
+                    c.items().iter().map(|&i| &self.cols[i as usize]).collect();
+                Bitset::multi_and_count(&sets) as u64
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "bitset"
+    }
+}
+
+/// Horizontal scan counter: re-reads every transaction per level, checking
+/// candidate subset membership. The classic textbook formulation; slowest,
+/// kept as a baseline and oracle.
+pub struct HorizontalCounter<'a> {
+    db: &'a TransactionDb,
+}
+
+impl<'a> HorizontalCounter<'a> {
+    pub fn new(db: &'a TransactionDb) -> Self {
+        Self { db }
+    }
+}
+
+impl SupportCounter for HorizontalCounter<'_> {
+    fn count(&mut self, candidates: &[Itemset]) -> Vec<u64> {
+        let mut counts = vec![0u64; candidates.len()];
+        for tx in self.db.iter() {
+            for (k, cand) in candidates.iter().enumerate() {
+                if crate::mining::itemset::sorted_subset(cand.items(), tx) {
+                    counts[k] += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    fn name(&self) -> &'static str {
+        "horizontal"
+    }
+}
+
+/// Mine all frequent itemsets with the default bitset backend.
+pub fn apriori(db: &TransactionDb, minsup: f64) -> FrequentItemsets {
+    let mut counter = BitsetCounter::new(db);
+    apriori_with(db, minsup, &mut counter)
+}
+
+/// Mine all frequent itemsets with a caller-supplied counting backend.
+pub fn apriori_with(
+    db: &TransactionDb,
+    minsup: f64,
+    counter: &mut dyn SupportCounter,
+) -> FrequentItemsets {
+    let n = db.num_transactions();
+    let mc = min_count(minsup, n);
+
+    // L1 from exact item frequencies (cheap, no backend needed).
+    let freqs = db.item_frequencies();
+    let mut level: Vec<(Itemset, u64)> = (0..freqs.len() as ItemId)
+        .filter(|&i| freqs[i as usize] >= mc)
+        .map(|i| (Itemset::new(vec![i]), freqs[i as usize]))
+        .collect();
+
+    let mut out = FrequentItemsets {
+        num_transactions: n,
+        sets: level.clone(),
+    };
+
+    while !level.is_empty() {
+        let candidates = generate_candidates(&level);
+        if candidates.is_empty() {
+            break;
+        }
+        let counts = counter.count(&candidates);
+        debug_assert_eq!(counts.len(), candidates.len());
+        level = candidates
+            .into_iter()
+            .zip(counts)
+            .filter(|&(_, c)| c >= mc)
+            .collect();
+        out.sets.extend(level.iter().cloned());
+    }
+    out.canonicalize();
+    out
+}
+
+/// Classic join + prune candidate generation: join two k-sets sharing their
+/// first k-1 items, prune candidates with an infrequent k-subset.
+pub fn generate_candidates(level: &[(Itemset, u64)]) -> Vec<Itemset> {
+    let prev: HashSet<&Itemset> = level.iter().map(|(s, _)| s).collect();
+    let mut sorted: Vec<&Itemset> = level.iter().map(|(s, _)| s).collect();
+    sorted.sort();
+
+    let mut out = Vec::new();
+    for i in 0..sorted.len() {
+        for j in i + 1..sorted.len() {
+            let a = sorted[i].items();
+            let b = sorted[j].items();
+            let k = a.len();
+            // Join condition: identical first k-1 items (sorted order makes
+            // the joinable js contiguous — break when the prefix diverges).
+            if a[..k - 1] != b[..k - 1] {
+                break;
+            }
+            let mut items = a.to_vec();
+            items.push(b[k - 1]);
+            let cand = Itemset::from_sorted(items);
+            // Prune: all k-subsets must be frequent.
+            let all_frequent = (0..cand.len()).all(|drop| {
+                let sub: Vec<ItemId> = cand
+                    .items()
+                    .iter()
+                    .enumerate()
+                    .filter(|&(idx, _)| idx != drop)
+                    .map(|(_, &it)| it)
+                    .collect();
+                prev.contains(&Itemset::from_sorted(sub))
+            });
+            if all_frequent {
+                out.push(cand);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::GeneratorConfig;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::fpgrowth::fpgrowth;
+    use crate::mining::naive::naive_frequent_itemsets;
+
+    #[test]
+    fn matches_naive_on_paper_example() {
+        let db = paper_example_db();
+        for minsup in [0.2, 0.3, 0.4, 0.6] {
+            let got = apriori(&db, minsup);
+            let want = naive_frequent_itemsets(&db, minsup);
+            assert_eq!(got.sets, want.sets, "minsup={minsup}");
+        }
+    }
+
+    #[test]
+    fn backends_agree() {
+        for seed in [20, 21] {
+            let db = GeneratorConfig::tiny(seed).generate();
+            let with_bitset = apriori(&db, 0.06);
+            let mut h = HorizontalCounter::new(&db);
+            let with_horizontal = apriori_with(&db, 0.06, &mut h);
+            assert_eq!(with_bitset.sets, with_horizontal.sets, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_fpgrowth() {
+        for seed in [22, 23] {
+            let db = GeneratorConfig::tiny(seed).generate();
+            let a = apriori(&db, 0.07);
+            let b = fpgrowth(&db, 0.07);
+            assert_eq!(a.sets, b.sets, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn candidate_generation_join_prune() {
+        // L2 = {1,2},{1,3},{2,3},{2,4}: joins -> {1,2,3} (kept: all subsets
+        // frequent), {2,3,4} (pruned: {3,4} missing).
+        let level: Vec<(Itemset, u64)> = [vec![1, 2], vec![1, 3], vec![2, 3], vec![2, 4]]
+            .into_iter()
+            .map(|v| (Itemset::new(v), 2))
+            .collect();
+        let cands = generate_candidates(&level);
+        assert_eq!(cands, vec![Itemset::new(vec![1, 2, 3])]);
+    }
+
+    #[test]
+    fn counter_names() {
+        let db = paper_example_db();
+        assert_eq!(BitsetCounter::new(&db).name(), "bitset");
+        assert_eq!(HorizontalCounter::new(&db).name(), "horizontal");
+    }
+}

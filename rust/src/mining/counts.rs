@@ -1,0 +1,183 @@
+//! Item-frequency ordering — the canonical order the FP-tree and the Trie
+//! of Rules both sort by (paper Step 2: "items in each frequent sequence are
+//! sorted according to their frequency in the original dataset").
+
+use crate::data::transaction::TransactionDb;
+use crate::data::vocab::ItemId;
+
+/// Convert a relative minimum-support threshold into an absolute count.
+///
+/// `support(X) >= minsup` ⇔ `count(X) >= ceil(minsup * n)` (with an epsilon
+/// so exact boundaries like 0.3 * 5 = 1.5 → 2 behave as the paper's examples
+/// expect).
+pub fn min_count(minsup: f64, num_transactions: usize) -> u64 {
+    assert!((0.0..=1.0).contains(&minsup), "minsup must be in [0,1]");
+    ((minsup * num_transactions as f64) - 1e-9).ceil().max(1.0) as u64
+}
+
+/// Frequency-descending item ranking (ties broken by ascending id, which
+/// keeps the order total and deterministic).
+#[derive(Debug, Clone)]
+pub struct ItemOrder {
+    /// rank[item] = position in frequency-descending order (0 = most
+    /// frequent). Items below the support threshold get `u32::MAX`.
+    rank: Vec<u32>,
+    /// Items at or above the threshold, in rank order.
+    frequent: Vec<ItemId>,
+    freqs: Vec<u64>,
+    /// The absolute count threshold the order was built with (persisted by
+    /// the trie serializer).
+    min_count: u64,
+}
+
+impl ItemOrder {
+    /// Build from a database and an absolute count threshold.
+    pub fn new(db: &TransactionDb, min_count: u64) -> Self {
+        Self::from_frequencies(db.item_frequencies(), min_count)
+    }
+
+    /// Build from a merged frequency vector (sharded pipeline path).
+    pub fn from_frequencies(freqs: Vec<u64>, min_count: u64) -> Self {
+        let mut frequent: Vec<ItemId> = (0..freqs.len() as ItemId)
+            .filter(|&i| freqs[i as usize] >= min_count)
+            .collect();
+        frequent.sort_by(|&a, &b| {
+            freqs[b as usize]
+                .cmp(&freqs[a as usize])
+                .then(a.cmp(&b))
+        });
+        let mut rank = vec![u32::MAX; freqs.len()];
+        for (r, &it) in frequent.iter().enumerate() {
+            rank[it as usize] = r as u32;
+        }
+        Self {
+            rank,
+            frequent,
+            freqs,
+            min_count,
+        }
+    }
+
+    /// The absolute count threshold this order was built with.
+    pub fn min_count_used(&self) -> u64 {
+        self.min_count
+    }
+
+    /// The raw frequency vector (persisted by the trie serializer).
+    pub fn frequencies(&self) -> &[u64] {
+        &self.freqs
+    }
+
+    pub fn num_frequent(&self) -> usize {
+        self.frequent.len()
+    }
+
+    /// Frequent items in rank order (most frequent first).
+    pub fn frequent_items(&self) -> &[ItemId] {
+        &self.frequent
+    }
+
+    pub fn frequency(&self, item: ItemId) -> u64 {
+        self.freqs[item as usize]
+    }
+
+    pub fn is_frequent(&self, item: ItemId) -> bool {
+        self.rank[item as usize] != u32::MAX
+    }
+
+    /// Rank of an item; `None` if infrequent.
+    pub fn rank(&self, item: ItemId) -> Option<u32> {
+        match self.rank[item as usize] {
+            u32::MAX => None,
+            r => Some(r),
+        }
+    }
+
+    /// Filter a transaction to frequent items and sort by rank
+    /// (frequency-descending) — the FP-tree / trie insertion order.
+    pub fn order_transaction(&self, tx: &[ItemId]) -> Vec<ItemId> {
+        let mut out: Vec<ItemId> = tx.iter().copied().filter(|&i| self.is_frequent(i)).collect();
+        out.sort_by_key(|&i| self.rank[i as usize]);
+        out
+    }
+
+    /// Sort an itemset's items by rank (for trie paths). Panics in debug if
+    /// an infrequent item sneaks in.
+    pub fn order_itemset(&self, items: &[ItemId]) -> Vec<ItemId> {
+        let mut out = items.to_vec();
+        debug_assert!(out.iter().all(|&i| self.is_frequent(i)));
+        out.sort_by_key(|&i| self.rank[i as usize]);
+        out
+    }
+
+    /// Rank-sort `items` into a caller-provided buffer without allocating
+    /// (hot-path variant of [`Self::order_itemset`]; EXPERIMENTS.md §Perf
+    /// iteration L3-2). Returns `None` when `items` exceeds the buffer.
+    #[inline]
+    pub fn order_into<'a>(&self, items: &[ItemId], buf: &'a mut [ItemId]) -> Option<&'a [ItemId]> {
+        if items.len() > buf.len() {
+            return None;
+        }
+        let out = &mut buf[..items.len()];
+        out.copy_from_slice(items);
+        out.sort_unstable_by_key(|&i| self.rank[i as usize]);
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+
+    #[test]
+    fn min_count_boundaries() {
+        assert_eq!(min_count(0.3, 5), 2); // paper: 0.3 * 5 = 1.5 -> 2
+        assert_eq!(min_count(0.4, 5), 2);
+        assert_eq!(min_count(0.005, 9834), 50); // 49.17 -> 50
+        assert_eq!(min_count(0.0, 100), 1);
+        assert_eq!(min_count(1.0, 100), 100);
+    }
+
+    #[test]
+    fn paper_example_order() {
+        // Fig. 4(b) keeps items with count >= 3: f(4) c(4) a(3) b(3) m(3)
+        // p(3) — at count >= 2, l and o would also qualify (the paper's
+        // item table uses the higher tier; see paper_example_db_fig4_filtered).
+        let db = paper_example_db();
+        let order = ItemOrder::new(&db, 3);
+        let names: Vec<&str> = order
+            .frequent_items()
+            .iter()
+            .map(|&i| db.vocab().name(i))
+            .collect();
+        assert_eq!(names.len(), 6);
+        // f and c both have 4 — f was interned first (id order breaks tie).
+        assert_eq!(&names[..2], &["f", "c"]);
+        let tail: std::collections::HashSet<&str> = names[2..].iter().copied().collect();
+        assert_eq!(tail, ["a", "b", "m", "p"].into_iter().collect());
+    }
+
+    #[test]
+    fn order_transaction_filters_and_sorts() {
+        let db = paper_example_db();
+        let order = ItemOrder::new(&db, 2);
+        // TID 1: f,a,c,d,g,i,m,p -> frequent part ordered f,c,a,m,p
+        // (paper's first frequent sequence!)
+        let ordered = order.order_transaction(db.transaction(0));
+        let names: Vec<&str> = ordered.iter().map(|&i| db.vocab().name(i)).collect();
+        assert_eq!(names, vec!["f", "c", "a", "m", "p"]);
+    }
+
+    #[test]
+    fn rank_consistency() {
+        let db = paper_example_db();
+        let order = ItemOrder::new(&db, 2);
+        for (r, &it) in order.frequent_items().iter().enumerate() {
+            assert_eq!(order.rank(it), Some(r as u32));
+        }
+        let d = db.vocab().get("d").unwrap();
+        assert_eq!(order.rank(d), None);
+        assert!(!order.is_frequent(d));
+    }
+}

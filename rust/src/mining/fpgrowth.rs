@@ -1,0 +1,168 @@
+//! FP-growth (Han, Pei, Yin, Mao 2004): frequent-itemset mining without
+//! candidate generation, recursing over conditional FP-trees.
+
+use crate::data::transaction::TransactionDb;
+use crate::data::vocab::ItemId;
+use crate::mining::counts::{min_count, ItemOrder};
+use crate::mining::fptree::FpTree;
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+
+/// Mine all frequent itemsets at relative threshold `minsup`.
+pub fn fpgrowth(db: &TransactionDb, minsup: f64) -> FrequentItemsets {
+    let n = db.num_transactions();
+    let mc = min_count(minsup, n);
+    let order = ItemOrder::new(db, mc);
+    let tree = FpTree::from_db(db, &order);
+
+    let mut out = FrequentItemsets {
+        num_transactions: n,
+        sets: Vec::new(),
+    };
+    // 1-itemsets straight from the global frequencies.
+    for &item in order.frequent_items() {
+        out.sets
+            .push((Itemset::new(vec![item]), order.frequency(item)));
+    }
+    let mut suffix = Vec::new();
+    grow(&tree, mc, &mut suffix, &order, &mut out);
+    out.canonicalize();
+    out
+}
+
+/// Recursive growth over conditional trees. `suffix` is the current
+/// conditional pattern (items already fixed).
+fn grow(
+    tree: &FpTree,
+    mc: u64,
+    suffix: &mut Vec<ItemId>,
+    order: &ItemOrder,
+    out: &mut FrequentItemsets,
+) {
+    if tree.is_empty() {
+        return;
+    }
+    if tree.is_single_path() {
+        // Single-path shortcut: every sub-combination of the path, with the
+        // count of its deepest element.
+        let path = tree.single_path();
+        emit_path_combinations(&path, suffix, mc, out);
+        return;
+    }
+    // General case: one conditional tree per item in this tree.
+    let mut items: Vec<ItemId> = tree.items().collect();
+    // Process in a deterministic order (rank descending = least frequent
+    // first, the classic bottom-up header order).
+    items.sort_by_key(|&i| std::cmp::Reverse(order.rank(i).unwrap_or(u32::MAX)));
+    for item in items {
+        let count = tree.item_count(item);
+        if count < mc {
+            continue;
+        }
+        suffix.push(item);
+        if suffix.len() > 1 {
+            // The 1-item case is emitted by the caller from global counts.
+            let mut items_vec = suffix.clone();
+            items_vec.sort_unstable();
+            out.sets.push((Itemset::from_sorted(dedup(items_vec)), count));
+        }
+        let (cond, _) = tree.conditional_tree(item, mc);
+        grow(&cond, mc, suffix, order, out);
+        suffix.pop();
+    }
+}
+
+/// Emit every non-empty combination of `path` items appended to `suffix`.
+/// The support of a combination is the count of its deepest (last) element.
+fn emit_path_combinations(
+    path: &[(ItemId, u64)],
+    suffix: &[ItemId],
+    mc: u64,
+    out: &mut FrequentItemsets,
+) {
+    let n = path.len();
+    assert!(n <= 40, "single path too long for mask enumeration");
+    for mask in 1u64..(1 << n) {
+        let mut count = u64::MAX;
+        let mut items: Vec<ItemId> = suffix.to_vec();
+        for (b, &(item, c)) in path.iter().enumerate() {
+            if mask >> b & 1 == 1 {
+                items.push(item);
+                count = count.min(c);
+            }
+        }
+        if count >= mc && !suffix.is_empty() {
+            items.sort_unstable();
+            out.sets.push((Itemset::from_sorted(dedup(items)), count));
+        } else if count >= mc && suffix.is_empty() && mask.count_ones() > 1 {
+            items.sort_unstable();
+            out.sets.push((Itemset::from_sorted(dedup(items)), count));
+        }
+    }
+}
+
+fn dedup(mut v: Vec<ItemId>) -> Vec<ItemId> {
+    v.dedup();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::naive::naive_frequent_itemsets;
+
+    #[test]
+    fn matches_naive_on_paper_example() {
+        let db = paper_example_db();
+        for minsup in [0.2, 0.3, 0.4, 0.6] {
+            let mut got = fpgrowth(&db, minsup);
+            let mut want = naive_frequent_itemsets(&db, minsup);
+            got.canonicalize();
+            want.canonicalize();
+            assert_eq!(got.sets, want.sets, "minsup={minsup}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_synthetic() {
+        use crate::data::generator::GeneratorConfig;
+        for seed in [1, 2, 3] {
+            let db = GeneratorConfig::tiny(seed).generate();
+            let mut got = fpgrowth(&db, 0.08);
+            let mut want = naive_frequent_itemsets(&db, 0.08);
+            got.canonicalize();
+            want.canonicalize();
+            assert_eq!(got.sets.len(), want.sets.len(), "seed={seed}");
+            assert_eq!(got.sets, want.sets, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn supports_are_true_counts() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        for (set, count) in &fi.sets {
+            let truth = db
+                .iter()
+                .filter(|tx| set.items().iter().all(|i| tx.contains(i)))
+                .count() as u64;
+            assert_eq!(*count, truth, "itemset {set}");
+        }
+    }
+
+    #[test]
+    fn high_minsup_yields_singletons_only() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.8); // only count >= 4: f, c
+        assert_eq!(fi.sets.len(), 2);
+        assert!(fi.sets.iter().all(|(s, _)| s.len() == 1));
+    }
+
+    #[test]
+    fn no_duplicate_itemsets() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.2);
+        let uniq: std::collections::HashSet<_> = fi.sets.iter().map(|(s, _)| s.clone()).collect();
+        assert_eq!(uniq.len(), fi.sets.len());
+    }
+}

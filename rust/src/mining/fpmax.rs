@@ -1,0 +1,173 @@
+//! FP-max (Grahne & Zhu 2003): maximal frequent itemsets.
+//!
+//! The paper's Step 1 uses FP-max "because it usually produces a smaller
+//! output volume" — the Trie of Rules is then built from the maximal
+//! sequences. This implementation mines with FP-growth recursion and keeps
+//! an MFI (maximal-frequent-itemset) store with subsumption checking, the
+//! essential structure of the original algorithm.
+
+use std::collections::HashMap;
+
+use crate::data::transaction::TransactionDb;
+use crate::data::vocab::ItemId;
+use crate::mining::counts::{min_count, ItemOrder};
+use crate::mining::fpgrowth::fpgrowth;
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+
+/// MFI store: maximal sets found so far, bucketed by an item they contain
+/// for fast subsumption probes.
+#[derive(Debug, Default)]
+struct MfiStore {
+    sets: Vec<(Itemset, u64)>,
+    /// item -> indices of sets containing it (probe the rarest bucket).
+    by_item: HashMap<ItemId, Vec<usize>>,
+}
+
+impl MfiStore {
+    /// True iff `cand` is a subset of an already-stored maximal set.
+    fn subsumed(&self, cand: &Itemset) -> bool {
+        // Probe via the smallest bucket among cand's items.
+        let bucket = cand
+            .items()
+            .iter()
+            .filter_map(|i| self.by_item.get(i))
+            .min_by_key(|b| b.len());
+        match bucket {
+            None => false,
+            Some(b) => b.iter().any(|&idx| cand.is_subset_of(&self.sets[idx].0)),
+        }
+    }
+
+    /// Insert a new maximal set, evicting any stored strict subsets.
+    fn insert(&mut self, set: Itemset, count: u64) {
+        if self.subsumed(&set) {
+            return;
+        }
+        // Evict strict subsets of the new set.
+        let mut keep = Vec::with_capacity(self.sets.len() + 1);
+        let old = std::mem::take(&mut self.sets);
+        for (s, c) in old {
+            if !s.is_subset_of(&set) {
+                keep.push((s, c));
+            }
+        }
+        keep.push((set, count));
+        self.sets = keep;
+        self.reindex();
+    }
+
+    fn reindex(&mut self) {
+        self.by_item.clear();
+        for (idx, (s, _)) in self.sets.iter().enumerate() {
+            for &i in s.items() {
+                self.by_item.entry(i).or_default().push(idx);
+            }
+        }
+    }
+}
+
+/// Mine maximal frequent itemsets at relative threshold `minsup`.
+pub fn fpmax(db: &TransactionDb, minsup: f64) -> FrequentItemsets {
+    // Mine all frequent itemsets (shares the FP-growth engine), then reduce
+    // through the MFI store longest-first: a set is maximal iff no longer
+    // set already in the store subsumes it. Longest-first insertion makes
+    // each `insert` eviction-free and each `subsumed` probe exact.
+    let all = fpgrowth(db, minsup);
+    let n = db.num_transactions();
+    let mut sets = all.sets;
+    sets.sort_by_key(|(s, _)| std::cmp::Reverse(s.len()));
+
+    let mut store = MfiStore::default();
+    for (set, count) in sets {
+        if !store.subsumed(&set) {
+            store.insert(set, count);
+        }
+    }
+    let mut out = FrequentItemsets {
+        num_transactions: n,
+        sets: store.sets,
+    };
+    out.canonicalize();
+    out
+}
+
+/// The paper's "frequent sequences": maximal itemsets ordered by global
+/// item frequency (Fig. 4(c) — the insertion input for the Trie of Rules).
+pub fn frequent_sequences(db: &TransactionDb, minsup: f64) -> (ItemOrder, Vec<(Vec<ItemId>, u64)>) {
+    let order = ItemOrder::new(db, min_count(minsup, db.num_transactions()));
+    let max = fpmax(db, minsup);
+    let seqs = max
+        .sets
+        .iter()
+        .map(|(s, c)| (order.order_itemset(s.items()), *c))
+        .collect();
+    (order, seqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::GeneratorConfig;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::naive::naive_maximal_itemsets;
+
+    #[test]
+    fn matches_naive_on_paper_example() {
+        let db = paper_example_db();
+        for minsup in [0.2, 0.3, 0.4, 0.6] {
+            let got = fpmax(&db, minsup);
+            let want = naive_maximal_itemsets(&db, minsup);
+            assert_eq!(got.sets, want.sets, "minsup={minsup}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_synthetic() {
+        for seed in [4, 5, 6] {
+            let db = GeneratorConfig::tiny(seed).generate();
+            let got = fpmax(&db, 0.08);
+            let want = naive_maximal_itemsets(&db, 0.08);
+            assert_eq!(got.sets, want.sets, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn paper_fig4c_sequences() {
+        // Step 1 output: (f,c,a,m,p), (f,b), (c,b) — frequency-ordered,
+        // over the Fig-4(b)-filtered transactions (see paper_example_db_
+        // fig4_filtered for why the example is two-tiered).
+        let db = crate::data::transaction::paper_example_db_fig4_filtered();
+        let (_, seqs) = frequent_sequences(&db, 0.3);
+        let as_names: Vec<Vec<&str>> = seqs
+            .iter()
+            .map(|(s, _)| s.iter().map(|&i| db.vocab().name(i)).collect())
+            .collect();
+        assert_eq!(as_names.len(), 3);
+        assert!(as_names.contains(&vec!["f", "c", "a", "m", "p"]));
+        assert!(as_names.contains(&vec!["f", "b"]));
+        assert!(as_names.contains(&vec!["c", "b"]));
+    }
+
+    #[test]
+    fn maximal_sets_are_pairwise_incomparable() {
+        let db = GeneratorConfig::tiny(7).generate();
+        let max = fpmax(&db, 0.05);
+        for (i, (a, _)) in max.sets.iter().enumerate() {
+            for (j, (b, _)) in max.sets.iter().enumerate() {
+                if i != j {
+                    assert!(!a.is_subset_of(b), "{a} subset of {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn output_smaller_than_all_frequent() {
+        // The paper's motivation for FP-max: smaller output volume.
+        let db = GeneratorConfig::tiny(8).generate();
+        let all = fpgrowth(&db, 0.05);
+        let max = fpmax(&db, 0.05);
+        assert!(max.len() <= all.len());
+        assert!(max.len() < all.len() || all.len() <= 1);
+    }
+}

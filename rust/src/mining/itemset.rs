@@ -1,0 +1,217 @@
+//! Itemsets: sorted id vectors with set algebra, plus the mining output
+//! container shared by all four miners.
+
+use std::collections::HashMap;
+
+use crate::data::vocab::ItemId;
+
+/// A frequent itemset: item ids sorted ascending, no duplicates.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Itemset(Vec<ItemId>);
+
+impl Itemset {
+    /// Construct from arbitrary ids (sorts + dedups).
+    pub fn new(mut items: Vec<ItemId>) -> Self {
+        items.sort_unstable();
+        items.dedup();
+        Itemset(items)
+    }
+
+    /// Construct from ids already sorted ascending (debug-checked).
+    pub fn from_sorted(items: Vec<ItemId>) -> Self {
+        debug_assert!(items.windows(2).all(|w| w[0] < w[1]), "not sorted/unique");
+        Itemset(items)
+    }
+
+    pub fn items(&self) -> &[ItemId] {
+        &self.0
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn contains(&self, item: ItemId) -> bool {
+        self.0.binary_search(&item).is_ok()
+    }
+
+    /// True iff `self ⊆ other` (both sorted; linear merge).
+    pub fn is_subset_of(&self, other: &Itemset) -> bool {
+        sorted_subset(&self.0, &other.0)
+    }
+
+    /// Union (sorted merge).
+    pub fn union(&self, other: &Itemset) -> Itemset {
+        let mut out = Vec::with_capacity(self.len() + other.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.0.len() && j < other.0.len() {
+            match self.0[i].cmp(&other.0[j]) {
+                std::cmp::Ordering::Less => {
+                    out.push(self.0[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(other.0[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push(self.0[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&self.0[i..]);
+        out.extend_from_slice(&other.0[j..]);
+        Itemset(out)
+    }
+
+    /// Difference `self \ other` (sorted merge).
+    pub fn difference(&self, other: &Itemset) -> Itemset {
+        let mut out = Vec::with_capacity(self.len());
+        let mut j = 0;
+        for &x in &self.0 {
+            while j < other.0.len() && other.0[j] < x {
+                j += 1;
+            }
+            if j >= other.0.len() || other.0[j] != x {
+                out.push(x);
+            }
+        }
+        Itemset(out)
+    }
+
+    /// All non-empty proper subsets (for rule generation on small sets).
+    pub fn proper_subsets(&self) -> Vec<Itemset> {
+        let n = self.0.len();
+        assert!(n <= 20, "proper_subsets on an itemset of {n} items");
+        let mut out = Vec::with_capacity((1usize << n) - 2);
+        for mask in 1..(1u32 << n) - 1 {
+            let items: Vec<ItemId> = (0..n)
+                .filter(|&b| mask >> b & 1 == 1)
+                .map(|b| self.0[b])
+                .collect();
+            out.push(Itemset(items));
+        }
+        out
+    }
+}
+
+/// `a ⊆ b` for sorted unique slices.
+pub fn sorted_subset(a: &[ItemId], b: &[ItemId]) -> bool {
+    if a.len() > b.len() {
+        return false;
+    }
+    let mut j = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+impl std::fmt::Display for Itemset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{{")?;
+        for (i, it) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{it}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Output of a frequent-itemset miner: itemsets with absolute support
+/// counts, plus the database size for relative support.
+#[derive(Debug, Clone, Default)]
+pub struct FrequentItemsets {
+    pub num_transactions: usize,
+    /// (itemset, absolute support count), no duplicates.
+    pub sets: Vec<(Itemset, u64)>,
+}
+
+impl FrequentItemsets {
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Support lookup table.
+    pub fn support_map(&self) -> HashMap<Itemset, u64> {
+        self.sets.iter().cloned().collect()
+    }
+
+    /// Relative support of an entry.
+    pub fn rel_support(&self, count: u64) -> f64 {
+        count as f64 / self.num_transactions as f64
+    }
+
+    /// Sort canonically (by length then lexicographic) — makes miner outputs
+    /// directly comparable in tests.
+    pub fn canonicalize(&mut self) {
+        self.sets
+            .sort_by(|a, b| (a.0.len(), &a.0).cmp(&(b.0.len(), &b.0)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_and_dedups() {
+        let s = Itemset::new(vec![3, 1, 3, 2]);
+        assert_eq!(s.items(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn subset_relation() {
+        let a = Itemset::new(vec![1, 3]);
+        let b = Itemset::new(vec![1, 2, 3]);
+        assert!(a.is_subset_of(&b));
+        assert!(!b.is_subset_of(&a));
+        assert!(a.is_subset_of(&a));
+        assert!(Itemset::new(vec![]).is_subset_of(&a));
+        assert!(!Itemset::new(vec![4]).is_subset_of(&b));
+    }
+
+    #[test]
+    fn union_difference() {
+        let a = Itemset::new(vec![1, 2, 5]);
+        let b = Itemset::new(vec![2, 3]);
+        assert_eq!(a.union(&b).items(), &[1, 2, 3, 5]);
+        assert_eq!(a.difference(&b).items(), &[1, 5]);
+        assert_eq!(b.difference(&a).items(), &[3]);
+    }
+
+    #[test]
+    fn proper_subsets_count() {
+        let s = Itemset::new(vec![1, 2, 3]);
+        let subs = s.proper_subsets();
+        assert_eq!(subs.len(), 6); // 2^3 - 2
+        assert!(subs.contains(&Itemset::new(vec![1])));
+        assert!(subs.contains(&Itemset::new(vec![2, 3])));
+        assert!(!subs.contains(&s));
+        assert!(!subs.contains(&Itemset::new(vec![])));
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(Itemset::new(vec![2, 1]).to_string(), "{1,2}");
+        assert_eq!(Itemset::new(vec![]).to_string(), "{}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Brute-force reference miner — the test oracle all four production miners
+//! are checked against. Exponential; only for small test databases.
+
+use std::collections::HashMap;
+
+use crate::data::transaction::TransactionDb;
+use crate::data::vocab::ItemId;
+use crate::mining::counts::min_count;
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+
+/// Enumerate all frequent itemsets by breadth-first extension with exact
+/// per-transaction counting. O(2^frequent-items) worst case.
+pub fn naive_frequent_itemsets(db: &TransactionDb, minsup: f64) -> FrequentItemsets {
+    let n = db.num_transactions();
+    let mc = min_count(minsup, n);
+
+    // Level 1.
+    let freqs = db.item_frequencies();
+    let mut level: Vec<Itemset> = (0..freqs.len() as ItemId)
+        .filter(|&i| freqs[i as usize] >= mc)
+        .map(|i| Itemset::new(vec![i]))
+        .collect();
+    let mut out = FrequentItemsets {
+        num_transactions: n,
+        sets: level
+            .iter()
+            .map(|s| (s.clone(), freqs[s.items()[0] as usize]))
+            .collect(),
+    };
+    let frequent_items: Vec<ItemId> = level.iter().map(|s| s.items()[0]).collect();
+
+    // Extend level by level.
+    while !level.is_empty() {
+        let mut counts: HashMap<Itemset, u64> = HashMap::new();
+        let mut next: Vec<Itemset> = Vec::new();
+        for set in &level {
+            let last = *set.items().last().unwrap();
+            for &it in frequent_items.iter().filter(|&&i| i > last) {
+                let mut items = set.items().to_vec();
+                items.push(it);
+                next.push(Itemset::from_sorted(items));
+            }
+        }
+        for tx in db.iter() {
+            for cand in &next {
+                if cand.items().iter().all(|i| tx.contains(i)) {
+                    *counts.entry(cand.clone()).or_default() += 1;
+                }
+            }
+        }
+        level = next
+            .into_iter()
+            .filter(|c| counts.get(c).copied().unwrap_or(0) >= mc)
+            .collect();
+        for set in &level {
+            out.sets.push((set.clone(), counts[set]));
+        }
+    }
+    out.canonicalize();
+    out
+}
+
+/// Reference maximal-itemset filter: frequent sets with no frequent proper
+/// superset.
+pub fn naive_maximal_itemsets(db: &TransactionDb, minsup: f64) -> FrequentItemsets {
+    let all = naive_frequent_itemsets(db, minsup);
+    let maximal: Vec<(Itemset, u64)> = all
+        .sets
+        .iter()
+        .filter(|(s, _)| {
+            !all.sets
+                .iter()
+                .any(|(t, _)| t.len() > s.len() && s.is_subset_of(t))
+        })
+        .cloned()
+        .collect();
+    let mut out = FrequentItemsets {
+        num_transactions: all.num_transactions,
+        sets: maximal,
+    };
+    out.canonicalize();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+
+    #[test]
+    fn paper_example_maximal_sequences() {
+        // Paper Fig 4(c): FP-max at minsup 0.3 over the Fig-4(b)-filtered
+        // transactions yields exactly (f,c,a,m,p), (f,b), (c,b).
+        let db = crate::data::transaction::paper_example_db_fig4_filtered();
+        let max = naive_maximal_itemsets(&db, 0.3);
+        assert_eq!(max.sets.len(), 3);
+        let as_names: Vec<(Vec<&str>, u64)> = max
+            .sets
+            .iter()
+            .map(|(s, c)| {
+                let mut names: Vec<&str> =
+                    s.items().iter().map(|&i| db.vocab().name(i)).collect();
+                names.sort_unstable();
+                (names, *c)
+            })
+            .collect();
+        assert!(as_names.contains(&(vec!["b", "f"], 2)));
+        assert!(as_names.contains(&(vec!["b", "c"], 2)));
+        assert!(as_names.contains(&(vec!["a", "c", "f", "m", "p"], 2)));
+    }
+
+    #[test]
+    fn frequent_contains_singletons() {
+        // At minsup 0.3 (count >= 2) the unfiltered example has 8 frequent
+        // items: f c a b m p plus l and o (each appears twice).
+        let db = paper_example_db();
+        let all = naive_frequent_itemsets(&db, 0.3);
+        let singles = all.sets.iter().filter(|(s, _)| s.len() == 1).count();
+        assert_eq!(singles, 8);
+    }
+
+    #[test]
+    fn downward_closure_holds() {
+        let db = paper_example_db();
+        let all = naive_frequent_itemsets(&db, 0.3);
+        let map = all.support_map();
+        for (set, count) in &all.sets {
+            for sub in set.proper_subsets() {
+                if sub.is_empty() {
+                    continue;
+                }
+                let sub_count = map.get(&sub).copied().unwrap_or(0);
+                assert!(
+                    sub_count >= *count,
+                    "anti-monotonicity violated: {sub} ({sub_count}) < {set} ({count})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Ruleset export: CSV and JSON-lines writers for downstream tools
+//! (spreadsheets, notebooks, the formats `mlxtend`/`arulespy` users
+//! exchange).
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::data::vocab::Vocab;
+use crate::mining::itemset::Itemset;
+use crate::rules::metrics::{Metric, RuleMetrics};
+use crate::rules::ruleset::RuleSet;
+use crate::util::json::Json;
+
+fn side_names(side: &Itemset, vocab: &Vocab) -> String {
+    side.items()
+        .iter()
+        .map(|&i| vocab.name(i))
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// Write the ruleset as CSV: `antecedent,consequent,<metrics...>`.
+/// Items within a side are `;`-separated (items may contain commas).
+pub fn write_csv<W: Write>(rs: &RuleSet, vocab: &Vocab, mut w: W) -> Result<()> {
+    write!(w, "antecedent,consequent")?;
+    for m in Metric::ALL {
+        write!(w, ",{}", m.name())?;
+    }
+    writeln!(w)?;
+    for sr in rs.iter() {
+        write!(
+            w,
+            "\"{}\",\"{}\"",
+            side_names(&sr.rule.antecedent, vocab),
+            side_names(&sr.rule.consequent, vocab)
+        )?;
+        for m in Metric::ALL {
+            write!(w, ",{}", sr.metrics.get(m))?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write the ruleset as JSON lines, one object per rule.
+pub fn write_jsonl<W: Write>(rs: &RuleSet, vocab: &Vocab, mut w: W) -> Result<()> {
+    for sr in rs.iter() {
+        writeln!(w, "{}", rule_json(&sr.rule.antecedent, &sr.rule.consequent, &sr.metrics, vocab))?;
+    }
+    Ok(())
+}
+
+fn rule_json(a: &Itemset, c: &Itemset, metrics: &RuleMetrics, vocab: &Vocab) -> String {
+    let names = |s: &Itemset| {
+        Json::Arr(
+            s.items()
+                .iter()
+                .map(|&i| Json::Str(vocab.name(i).to_string()))
+                .collect(),
+        )
+    };
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("antecedent".to_string(), names(a));
+    obj.insert("consequent".to_string(), names(c));
+    for m in Metric::ALL {
+        obj.insert(m.name().to_string(), Json::Num(metrics.get(m)));
+    }
+    Json::Obj(obj).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::fpgrowth::fpgrowth;
+    use crate::rules::rulegen::{generate_rules, RuleGenConfig};
+
+    fn sample() -> (RuleSet, Vocab) {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        (
+            generate_rules(&fi, RuleGenConfig::default()),
+            db.vocab().clone(),
+        )
+    }
+
+    #[test]
+    fn csv_has_header_and_all_rows() {
+        let (rs, vocab) = sample();
+        let mut buf = Vec::new();
+        write_csv(&rs, &vocab, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), rs.len() + 1);
+        assert!(lines[0].starts_with("antecedent,consequent,support,confidence,lift"));
+        // Every data row has the same number of commas as the header
+        // (sides are quoted and use ';' separators).
+        let header_cols = lines[0].split(',').count();
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), header_cols, "{l}");
+        }
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let (rs, vocab) = sample();
+        let mut buf = Vec::new();
+        write_jsonl(&rs, &vocab, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut rows = 0;
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("antecedent").unwrap().as_arr().is_some());
+            let sup = v.get("support").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&sup));
+            rows += 1;
+        }
+        assert_eq!(rows, rs.len());
+    }
+}

@@ -1,0 +1,275 @@
+//! Interestingness metrics for association rules.
+//!
+//! The paper (§2.2) notes "more than 40 metrics can be utilized"; this
+//! module implements the canonical core used across the ARM literature —
+//! Support, Confidence, Lift (the paper's three), plus Leverage, Conviction,
+//! Zhang's metric, Jaccard, Cosine, Kulczynski and Yule's Q. All are pure
+//! functions of the contingency counts `(n, c_ac, c_a, c_c)`.
+//!
+//! The conviction clamp constants mirror `python/compile/kernels/ref.py` so
+//! the L1 kernel and the rust path agree bit-for-bit on the shared lanes.
+
+/// Conviction denominator guard; matches python/compile/kernels/ref.py.
+pub const CONVICTION_EPS: f64 = 1e-9;
+/// Finite stand-in for conviction = +inf; matches ref.py.
+pub const CONVICTION_MAX: f64 = 1e12;
+
+/// Raw contingency counts for a rule `A => C` over `n` transactions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RuleCounts {
+    /// Total transactions.
+    pub n: u64,
+    /// Transactions containing A ∪ C.
+    pub c_ac: u64,
+    /// Transactions containing A.
+    pub c_a: u64,
+    /// Transactions containing C.
+    pub c_c: u64,
+}
+
+/// The full metric vector carried on every ruleset row / trie node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RuleMetrics {
+    pub support: f64,
+    pub confidence: f64,
+    pub lift: f64,
+    pub leverage: f64,
+    pub conviction: f64,
+    pub zhang: f64,
+    pub jaccard: f64,
+    pub cosine: f64,
+    pub kulczynski: f64,
+    pub yule_q: f64,
+}
+
+/// Metric identifiers for query/sort dispatch (CLI, query service, top-N).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    Support,
+    Confidence,
+    Lift,
+    Leverage,
+    Conviction,
+    Zhang,
+    Jaccard,
+    Cosine,
+    Kulczynski,
+    YuleQ,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 10] = [
+        Metric::Support,
+        Metric::Confidence,
+        Metric::Lift,
+        Metric::Leverage,
+        Metric::Conviction,
+        Metric::Zhang,
+        Metric::Jaccard,
+        Metric::Cosine,
+        Metric::Kulczynski,
+        Metric::YuleQ,
+    ];
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "support" | "sup" => Some(Metric::Support),
+            "confidence" | "conf" => Some(Metric::Confidence),
+            "lift" => Some(Metric::Lift),
+            "leverage" => Some(Metric::Leverage),
+            "conviction" => Some(Metric::Conviction),
+            "zhang" | "zhangs" => Some(Metric::Zhang),
+            "jaccard" => Some(Metric::Jaccard),
+            "cosine" => Some(Metric::Cosine),
+            "kulczynski" | "kulc" => Some(Metric::Kulczynski),
+            "yuleq" | "yule_q" => Some(Metric::YuleQ),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Support => "support",
+            Metric::Confidence => "confidence",
+            Metric::Lift => "lift",
+            Metric::Leverage => "leverage",
+            Metric::Conviction => "conviction",
+            Metric::Zhang => "zhang",
+            Metric::Jaccard => "jaccard",
+            Metric::Cosine => "cosine",
+            Metric::Kulczynski => "kulczynski",
+            Metric::YuleQ => "yule_q",
+        }
+    }
+}
+
+impl RuleMetrics {
+    /// Compute the full vector from contingency counts.
+    pub fn from_counts(c: RuleCounts) -> RuleMetrics {
+        assert!(c.n > 0, "empty database");
+        debug_assert!(c.c_ac <= c.c_a && c.c_ac <= c.c_c, "support monotonicity");
+        let n = c.n as f64;
+        let sup_ac = c.c_ac as f64 / n;
+        let sup_a = c.c_a as f64 / n;
+        let sup_c = c.c_c as f64 / n;
+
+        let confidence = if sup_a > 0.0 { sup_ac / sup_a } else { 0.0 };
+        let lift = if sup_c > 0.0 { confidence / sup_c } else { 0.0 };
+        let leverage = sup_ac - sup_a * sup_c;
+        let conv_denom = 1.0 - confidence;
+        let conviction = if conv_denom <= CONVICTION_EPS {
+            CONVICTION_MAX
+        } else {
+            (1.0 - sup_c) / conv_denom
+        };
+        // Zhang's metric: leverage / max(sup_ac*(1-sup_c), sup_c*(sup_a-sup_ac));
+        // +1 at perfect positive association, 0 at independence, -1 at
+        // perfect negative association.
+        let zh_denom = (sup_ac * (1.0 - sup_c)).max(sup_c * (sup_a - sup_ac));
+        let zhang = if zh_denom > 0.0 { leverage / zh_denom } else { 0.0 };
+        // Jaccard: sup_ac / (sup_a + sup_c - sup_ac)
+        let ja_denom = sup_a + sup_c - sup_ac;
+        let jaccard = if ja_denom > 0.0 { sup_ac / ja_denom } else { 0.0 };
+        // Cosine: sup_ac / sqrt(sup_a * sup_c)
+        let cos_denom = (sup_a * sup_c).sqrt();
+        let cosine = if cos_denom > 0.0 { sup_ac / cos_denom } else { 0.0 };
+        // Kulczynski: (P(C|A) + P(A|C)) / 2
+        let p_c_given_a = confidence;
+        let p_a_given_c = if sup_c > 0.0 { sup_ac / sup_c } else { 0.0 };
+        let kulczynski = 0.5 * (p_c_given_a + p_a_given_c);
+        // Yule's Q from the 2x2 contingency table.
+        let f11 = c.c_ac as f64;
+        let f10 = (c.c_a - c.c_ac) as f64;
+        let f01 = (c.c_c - c.c_ac) as f64;
+        let f00 = n - f11 - f10 - f01;
+        let odds_num = f11 * f00;
+        let odds_den = f10 * f01;
+        let yule_q = if odds_num + odds_den > 0.0 {
+            (odds_num - odds_den) / (odds_num + odds_den)
+        } else {
+            0.0
+        };
+
+        RuleMetrics {
+            support: sup_ac,
+            confidence,
+            lift,
+            leverage,
+            conviction,
+            zhang,
+            jaccard,
+            cosine,
+            kulczynski,
+            yule_q,
+        }
+    }
+
+    /// Extract one metric by id.
+    pub fn get(&self, m: Metric) -> f64 {
+        match m {
+            Metric::Support => self.support,
+            Metric::Confidence => self.confidence,
+            Metric::Lift => self.lift,
+            Metric::Leverage => self.leverage,
+            Metric::Conviction => self.conviction,
+            Metric::Zhang => self.zhang,
+            Metric::Jaccard => self.jaccard,
+            Metric::Cosine => self.cosine,
+            Metric::Kulczynski => self.kulczynski,
+            Metric::YuleQ => self.yule_q,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(n: u64, c_ac: u64, c_a: u64, c_c: u64) -> RuleMetrics {
+        RuleMetrics::from_counts(RuleCounts { n, c_ac, c_a, c_c })
+    }
+
+    #[test]
+    fn paper_definitions() {
+        // n=100, A in 40, C in 50, A∪C in 20:
+        // support 0.2, confidence 0.5, lift 1.0
+        let x = m(100, 20, 40, 50);
+        assert!((x.support - 0.2).abs() < 1e-12);
+        assert!((x.confidence - 0.5).abs() < 1e-12);
+        assert!((x.lift - 1.0).abs() < 1e-12);
+        assert!((x.leverage - 0.0).abs() < 1e-12);
+        assert!((x.conviction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independence_has_null_values() {
+        // Statistical independence: lift 1, leverage 0, zhang 0, yule_q 0.
+        let x = m(1000, 100, 250, 400);
+        assert!((x.lift - 1.0).abs() < 1e-9);
+        assert!(x.leverage.abs() < 1e-9);
+        assert!(x.zhang.abs() < 1e-9);
+        assert!(x.yule_q.abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_implication() {
+        // A always implies C: conf 1, conviction clamped, yule_q 1.
+        let x = m(100, 30, 30, 60);
+        assert!((x.confidence - 1.0).abs() < 1e-12);
+        assert_eq!(x.conviction, CONVICTION_MAX);
+        assert!((x.yule_q - 1.0).abs() < 1e-12);
+        assert!((x.zhang - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_lift_value() {
+        // sup_ac=0.1, sup_a=0.2, sup_c=0.25 -> conf 0.5, lift 2.0
+        let x = m(1000, 100, 200, 250);
+        assert!((x.confidence - 0.5).abs() < 1e-12);
+        assert!((x.lift - 2.0).abs() < 1e-12);
+        // jaccard = 0.1 / (0.2+0.25-0.1) = 0.2857..
+        assert!((x.jaccard - 0.1 / 0.35).abs() < 1e-12);
+        // cosine = 0.1 / sqrt(0.05) = 0.4472..
+        assert!((x.cosine - 0.1 / (0.05f64).sqrt()).abs() < 1e-12);
+        // kulc = (0.5 + 0.4) / 2 = 0.45
+        assert!((x.kulczynski - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranges_are_sane() {
+        // Sweep a few contingency tables and check documented ranges.
+        for &(n, c_ac, c_a, c_c) in &[
+            (100u64, 5u64, 20u64, 30u64),
+            (100, 20, 20, 20),
+            (1000, 1, 500, 500),
+            (50, 10, 25, 12),
+        ] {
+            let x = m(n, c_ac, c_a, c_c);
+            assert!((0.0..=1.0).contains(&x.support));
+            assert!((0.0..=1.0).contains(&x.confidence));
+            assert!(x.lift >= 0.0);
+            assert!((-0.25..=0.25).contains(&x.leverage));
+            assert!((-1.0..=1.0).contains(&x.zhang), "zhang {}", x.zhang);
+            assert!((0.0..=1.0).contains(&x.jaccard));
+            assert!((0.0..=1.0).contains(&x.cosine));
+            assert!((0.0..=1.0).contains(&x.kulczynski));
+            assert!((-1.0..=1.0).contains(&x.yule_q));
+        }
+    }
+
+    #[test]
+    fn metric_parse_roundtrip() {
+        for m in Metric::ALL {
+            assert_eq!(Metric::parse(m.name()), Some(m));
+        }
+        assert_eq!(Metric::parse("bogus"), None);
+        assert_eq!(Metric::parse("Sup"), Some(Metric::Support));
+    }
+
+    #[test]
+    fn get_matches_fields() {
+        let x = m(100, 20, 40, 50);
+        assert_eq!(x.get(Metric::Support), x.support);
+        assert_eq!(x.get(Metric::YuleQ), x.yule_q);
+    }
+}

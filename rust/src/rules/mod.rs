@@ -1,0 +1,14 @@
+//! Association rules: the [`Rule`] type, the metric library (paper §2.2),
+//! ap-genrules rule generation, and the [`RuleSet`] container consumed by
+//! both the Trie of Rules and the dataframe baseline.
+
+pub mod export;
+pub mod metrics;
+pub mod rule;
+pub mod rulegen;
+pub mod ruleset;
+
+pub use metrics::{Metric, RuleCounts, RuleMetrics};
+pub use rule::Rule;
+pub use rulegen::{generate_rules, RuleGenConfig};
+pub use ruleset::{RuleSet, ScoredRule};

@@ -1,0 +1,102 @@
+//! Association rules: `A -> C` with disjoint, non-empty antecedent and
+//! consequent (paper §1: "A and C are sets of items ... A ∩ C = ∅").
+
+use crate::data::vocab::{ItemId, Vocab};
+use crate::mining::itemset::Itemset;
+
+/// An association rule. Antecedent and consequent are stored as sorted
+/// [`Itemset`]s; equality/hash are structural.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Rule {
+    pub antecedent: Itemset,
+    pub consequent: Itemset,
+}
+
+impl Rule {
+    /// Build a rule; panics on empty or overlapping sides (programmer
+    /// error — user-facing paths validate earlier).
+    pub fn new(antecedent: Itemset, consequent: Itemset) -> Rule {
+        assert!(
+            !antecedent.is_empty() && !consequent.is_empty(),
+            "rule sides must be non-empty"
+        );
+        debug_assert!(
+            antecedent.items().iter().all(|i| !consequent.contains(*i)),
+            "antecedent and consequent must be disjoint"
+        );
+        Rule {
+            antecedent,
+            consequent,
+        }
+    }
+
+    pub fn from_ids(antecedent: Vec<ItemId>, consequent: Vec<ItemId>) -> Rule {
+        Rule::new(Itemset::new(antecedent), Itemset::new(consequent))
+    }
+
+    /// All items of the rule (A ∪ C).
+    pub fn all_items(&self) -> Itemset {
+        self.antecedent.union(&self.consequent)
+    }
+
+    /// Total number of items.
+    pub fn len(&self) -> usize {
+        self.antecedent.len() + self.consequent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // both sides are non-empty by construction
+    }
+
+    /// Render with item names: `{a,b} => {c}`.
+    pub fn display(&self, vocab: &Vocab) -> String {
+        let side = |s: &Itemset| {
+            let names: Vec<&str> = s.items().iter().map(|&i| vocab.name(i)).collect();
+            names.join(",")
+        };
+        format!("{{{}}} => {{{}}}", side(&self.antecedent), side(&self.consequent))
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} => {}", self.antecedent, self.consequent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_union() {
+        let r = Rule::from_ids(vec![2, 1], vec![3]);
+        assert_eq!(r.antecedent.items(), &[1, 2]);
+        assert_eq!(r.all_items().items(), &[1, 2, 3]);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_side_panics() {
+        let _ = Rule::from_ids(vec![], vec![1]);
+    }
+
+    #[test]
+    fn display_with_vocab() {
+        let mut v = Vocab::new();
+        let a = v.intern("milk");
+        let b = v.intern("bread");
+        let r = Rule::from_ids(vec![a], vec![b]);
+        assert_eq!(r.display(&v), "{milk} => {bread}");
+    }
+
+    #[test]
+    fn equality_is_structural() {
+        let a = Rule::from_ids(vec![1, 2], vec![3]);
+        let b = Rule::from_ids(vec![2, 1], vec![3]);
+        assert_eq!(a, b);
+        let c = Rule::from_ids(vec![1], vec![2, 3]);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,202 @@
+//! Rule generation from frequent itemsets (Agrawal & Srikant's ap-genrules).
+//!
+//! For every frequent itemset F and every non-empty proper subset C ⊂ F,
+//! the rule (F \ C) => C is emitted when its confidence clears `minconf`.
+//! Consequents grow level-wise with the standard confidence-based pruning:
+//! if (F \ C) => C fails minconf, every rule with a superset consequent of C
+//! (for the same F) fails too.
+
+use std::collections::HashMap;
+
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+use crate::rules::metrics::{RuleCounts, RuleMetrics};
+use crate::rules::rule::Rule;
+use crate::rules::ruleset::{RuleSet, ScoredRule};
+
+/// Configuration for rule generation.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleGenConfig {
+    /// Minimum confidence; rules below are dropped (0.0 keeps everything).
+    pub min_confidence: f64,
+    /// Cap on consequent size; `usize::MAX` for unlimited.
+    pub max_consequent: usize,
+}
+
+impl Default for RuleGenConfig {
+    fn default() -> Self {
+        Self {
+            min_confidence: 0.0,
+            max_consequent: usize::MAX,
+        }
+    }
+}
+
+/// Generate the full ruleset from mined frequent itemsets.
+///
+/// `frequent` must be closed under subsets (i.e. produced by a *frequent*
+/// miner, not FP-max) so every antecedent/consequent support is available;
+/// supports that would be missing are resolved through `support_of`.
+pub fn generate_rules(frequent: &FrequentItemsets, config: RuleGenConfig) -> RuleSet {
+    let support: HashMap<Itemset, u64> = frequent.support_map();
+    let n = frequent.num_transactions as u64;
+
+    let mut rules: Vec<ScoredRule> = Vec::new();
+    for (itemset, &count) in frequent.sets.iter().map(|(s, c)| (s, c)) {
+        if itemset.len() < 2 {
+            continue;
+        }
+        // Level-wise consequents: start with 1-item consequents, grow.
+        let mut level: Vec<Itemset> = itemset
+            .items()
+            .iter()
+            .map(|&i| Itemset::new(vec![i]))
+            .collect();
+        let mut size = 1usize;
+        while !level.is_empty() && size < itemset.len() && size <= config.max_consequent {
+            let mut kept: Vec<Itemset> = Vec::new();
+            for consequent in &level {
+                let antecedent = itemset.difference(consequent);
+                debug_assert!(!antecedent.is_empty());
+                let c_a = support[&antecedent];
+                let c_c = support[consequent];
+                let metrics = RuleMetrics::from_counts(RuleCounts {
+                    n,
+                    c_ac: count,
+                    c_a,
+                    c_c,
+                });
+                if metrics.confidence + 1e-12 >= config.min_confidence {
+                    rules.push(ScoredRule {
+                        rule: Rule::new(antecedent, consequent.clone()),
+                        metrics,
+                    });
+                    kept.push(consequent.clone());
+                }
+            }
+            // Grow consequents by joining kept ones (Apriori-style).
+            level = join_consequents(&kept, itemset);
+            size += 1;
+        }
+    }
+    RuleSet::new(frequent.num_transactions, rules)
+}
+
+/// Join k-item consequents sharing their first k-1 items into (k+1)-item
+/// candidates, all within `itemset`.
+fn join_consequents(kept: &[Itemset], itemset: &Itemset) -> Vec<Itemset> {
+    let mut sorted: Vec<&Itemset> = kept.iter().collect();
+    sorted.sort();
+    let mut out = Vec::new();
+    for i in 0..sorted.len() {
+        for j in i + 1..sorted.len() {
+            let a = sorted[i].items();
+            let b = sorted[j].items();
+            let k = a.len();
+            if a[..k - 1] != b[..k - 1] {
+                break;
+            }
+            let mut items = a.to_vec();
+            items.push(b[k - 1]);
+            let cand = Itemset::from_sorted(items);
+            if cand.len() < itemset.len() {
+                out.push(cand);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::fpgrowth::fpgrowth;
+
+    fn paper_rules(minconf: f64) -> RuleSet {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        generate_rules(
+            &fi,
+            RuleGenConfig {
+                min_confidence: minconf,
+                max_consequent: usize::MAX,
+            },
+        )
+    }
+
+    #[test]
+    fn every_rule_has_true_metrics() {
+        let db = paper_example_db();
+        let rs = paper_rules(0.0);
+        assert!(!rs.is_empty());
+        for sr in rs.iter() {
+            let all = sr.rule.all_items();
+            let count = |s: &Itemset| {
+                db.iter()
+                    .filter(|tx| s.items().iter().all(|i| tx.contains(i)))
+                    .count() as f64
+            };
+            let n = db.num_transactions() as f64;
+            let sup = count(&all) / n;
+            let conf = count(&all) / count(&sr.rule.antecedent);
+            assert!((sr.metrics.support - sup).abs() < 1e-12, "{}", sr.rule);
+            assert!((sr.metrics.confidence - conf).abs() < 1e-12, "{}", sr.rule);
+        }
+    }
+
+    #[test]
+    fn minconf_filters_monotonically() {
+        let all = paper_rules(0.0).len();
+        let half = paper_rules(0.5).len();
+        let strict = paper_rules(0.95).len();
+        assert!(all >= half && half >= strict);
+        assert!(all > strict, "confidence filter had no effect");
+    }
+
+    #[test]
+    fn no_duplicate_rules() {
+        let rs = paper_rules(0.0);
+        let uniq: std::collections::HashSet<&Rule> = rs.iter().map(|sr| &sr.rule).collect();
+        assert_eq!(uniq.len(), rs.len());
+    }
+
+    #[test]
+    fn sides_are_disjoint_and_nonempty() {
+        for sr in paper_rules(0.0).iter() {
+            assert!(!sr.rule.antecedent.is_empty());
+            assert!(!sr.rule.consequent.is_empty());
+            for i in sr.rule.consequent.items() {
+                assert!(!sr.rule.antecedent.contains(*i));
+            }
+        }
+    }
+
+    #[test]
+    fn rule_count_matches_enumeration() {
+        // At minconf 0: every frequent k-itemset (k>=2) yields 2^k - 2 rules.
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let expected: usize = fi
+            .sets
+            .iter()
+            .filter(|(s, _)| s.len() >= 2)
+            .map(|(s, _)| (1usize << s.len()) - 2)
+            .sum();
+        let rs = paper_rules(0.0);
+        assert_eq!(rs.len(), expected);
+    }
+
+    #[test]
+    fn max_consequent_cap() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let rs = generate_rules(
+            &fi,
+            RuleGenConfig {
+                min_confidence: 0.0,
+                max_consequent: 1,
+            },
+        );
+        assert!(rs.iter().all(|sr| sr.rule.consequent.len() == 1));
+    }
+}

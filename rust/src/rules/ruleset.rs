@@ -1,0 +1,139 @@
+//! The mined ruleset container — the common input handed to both the Trie
+//! of Rules and the dataframe baseline.
+
+use crate::rules::metrics::{Metric, RuleMetrics};
+use crate::rules::rule::Rule;
+
+/// A rule with its metric vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoredRule {
+    pub rule: Rule,
+    pub metrics: RuleMetrics,
+}
+
+/// An ordered collection of scored rules.
+#[derive(Debug, Clone, Default)]
+pub struct RuleSet {
+    num_transactions: usize,
+    rules: Vec<ScoredRule>,
+}
+
+impl RuleSet {
+    pub fn new(num_transactions: usize, rules: Vec<ScoredRule>) -> Self {
+        Self {
+            num_transactions,
+            rules,
+        }
+    }
+
+    pub fn num_transactions(&self) -> usize {
+        self.num_transactions
+    }
+
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ScoredRule> {
+        self.rules.iter()
+    }
+
+    pub fn rules(&self) -> &[ScoredRule] {
+        &self.rules
+    }
+
+    pub fn into_rules(self) -> Vec<ScoredRule> {
+        self.rules
+    }
+
+    /// Linear-scan lookup (tests/oracles; the real structures index this).
+    pub fn find(&self, rule: &Rule) -> Option<&ScoredRule> {
+        self.rules.iter().find(|sr| &sr.rule == rule)
+    }
+
+    /// Top-k rule indices by a metric, descending (reference implementation
+    /// used to validate both the trie and the dataframe paths).
+    pub fn top_k_reference(&self, metric: Metric, k: usize) -> Vec<&ScoredRule> {
+        let mut idx: Vec<usize> = (0..self.rules.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.rules[b]
+                .metrics
+                .get(metric)
+                .partial_cmp(&self.rules[a].metrics.get(metric))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.into_iter().take(k).map(|i| &self.rules[i]).collect()
+    }
+
+    /// Length (in items) histogram — useful in telemetry and tests.
+    pub fn length_histogram(&self) -> Vec<(usize, usize)> {
+        let mut counts: std::collections::BTreeMap<usize, usize> = Default::default();
+        for sr in &self.rules {
+            *counts.entry(sr.rule.len()).or_default() += 1;
+        }
+        counts.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::metrics::{RuleCounts, RuleMetrics};
+
+    fn scored(a: Vec<u32>, c: Vec<u32>, c_ac: u64) -> ScoredRule {
+        ScoredRule {
+            rule: Rule::from_ids(a, c),
+            metrics: RuleMetrics::from_counts(RuleCounts {
+                n: 100,
+                c_ac,
+                c_a: 50,
+                c_c: 50,
+            }),
+        }
+    }
+
+    fn sample() -> RuleSet {
+        RuleSet::new(
+            100,
+            vec![
+                scored(vec![1], vec![2], 10),
+                scored(vec![1], vec![3], 30),
+                scored(vec![2], vec![3], 20),
+            ],
+        )
+    }
+
+    #[test]
+    fn find_exact() {
+        let rs = sample();
+        let r = Rule::from_ids(vec![1], vec![3]);
+        assert!(rs.find(&r).is_some());
+        assert!(rs.find(&Rule::from_ids(vec![3], vec![1])).is_none());
+    }
+
+    #[test]
+    fn top_k_orders_by_metric() {
+        let rs = sample();
+        let top = rs.top_k_reference(Metric::Support, 2);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].metrics.support >= top[1].metrics.support);
+        assert_eq!(top[0].rule, Rule::from_ids(vec![1], vec![3]));
+    }
+
+    #[test]
+    fn top_k_handles_overflow() {
+        let rs = sample();
+        assert_eq!(rs.top_k_reference(Metric::Lift, 100).len(), 3);
+        assert_eq!(rs.top_k_reference(Metric::Lift, 0).len(), 0);
+    }
+
+    #[test]
+    fn length_histogram() {
+        let rs = sample();
+        assert_eq!(rs.length_histogram(), vec![(2, 3)]);
+    }
+}

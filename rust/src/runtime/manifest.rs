@@ -1,0 +1,156 @@
+//! AOT artifact manifest (`artifacts/manifest.json`) — the shape contract
+//! between `python/compile/aot.py` and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Frozen batch shapes the artifacts were lowered with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AotShapes {
+    /// Transactions per chunk.
+    pub nt: usize,
+    /// Item-vocabulary width.
+    pub ni: usize,
+    /// Candidate itemsets per batch.
+    pub nk: usize,
+    /// Rules per metric batch.
+    pub nr: usize,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub num_outputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub shapes: AotShapes,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        anyhow::ensure!(
+            v.get("format").and_then(Json::as_str) == Some("hlo-text"),
+            "unsupported artifact format (expected hlo-text)"
+        );
+        let shapes = v.get("shapes").context("manifest missing `shapes`")?;
+        let dim = |k: &str| -> Result<usize> {
+            shapes
+                .get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest shapes missing `{k}`"))
+        };
+        let shapes = AotShapes {
+            nt: dim("nt")?,
+            ni: dim("ni")?,
+            nk: dim("nk")?,
+            nr: dim("nr")?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing `artifacts`")?
+        {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("artifact {name} missing `file`"))?;
+            let file = dir.join(file);
+            anyhow::ensure!(file.exists(), "artifact file missing: {}", file.display());
+            let num_outputs = entry
+                .get("num_outputs")
+                .and_then(Json::as_usize)
+                .with_context(|| format!("artifact {name} missing `num_outputs`"))?;
+            let input_shapes = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .map(|s| {
+                            s.as_arr()
+                                .map(|d| d.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file,
+                    num_outputs,
+                    input_shapes,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            shapes,
+            artifacts,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+}
+
+/// Default artifacts directory: `$TOR_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("TOR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = default_artifacts_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.shapes.nt >= 64 && m.shapes.ni >= 64);
+        for name in ["support_count", "rule_metrics", "count_and_metrics"] {
+            let e = m.entry(name).unwrap();
+            assert!(e.file.exists());
+            assert!(e.num_outputs >= 1);
+        }
+        let sc = m.entry("support_count").unwrap();
+        assert_eq!(sc.input_shapes[0], vec![m.shapes.nt, m.shapes.ni]);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,146 @@
+//! XLA-artifact-backed rule-metric evaluation (the `rule_metrics` L1
+//! kernel): batch-annotates rules from relative supports, padding to the
+//! artifact's frozen `NR` lane count.
+
+use anyhow::Result;
+
+use crate::runtime::pjrt::Runtime;
+
+/// The four metric lanes the artifact computes, one row per rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricLanes {
+    pub confidence: f64,
+    pub lift: f64,
+    pub leverage: f64,
+    pub conviction: f64,
+}
+
+/// Evaluate metric lanes for a batch of rules via the AOT artifact.
+pub struct XlaMetricsExec<'rt> {
+    runtime: &'rt Runtime,
+    nr: usize,
+    pub executions: usize,
+}
+
+impl<'rt> XlaMetricsExec<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> Self {
+        let nr = runtime.manifest().shapes.nr;
+        Self {
+            runtime,
+            nr,
+            executions: 0,
+        }
+    }
+
+    /// `sup_*` are per-rule relative supports; returns one lane set per
+    /// rule. Padding lanes use benign supports (1.0) and are discarded.
+    pub fn evaluate(
+        &mut self,
+        sup_ac: &[f64],
+        sup_a: &[f64],
+        sup_c: &[f64],
+    ) -> Result<Vec<MetricLanes>> {
+        anyhow::ensure!(
+            sup_ac.len() == sup_a.len() && sup_a.len() == sup_c.len(),
+            "support slices must share length"
+        );
+        let mut out = Vec::with_capacity(sup_ac.len());
+        for start in (0..sup_ac.len()).step_by(self.nr) {
+            let end = (start + self.nr).min(sup_ac.len());
+            let pad = |xs: &[f64]| -> Vec<f32> {
+                let mut v: Vec<f32> = xs[start..end].iter().map(|&x| x as f32).collect();
+                v.resize(self.nr, 1.0);
+                v
+            };
+            let (a, b, c) = (pad(sup_ac), pad(sup_a), pad(sup_c));
+            let nr = self.nr as i64;
+            let res = self.runtime.execute_f32(
+                "rule_metrics",
+                &[(&a, &[nr]), (&b, &[nr]), (&c, &[nr])],
+            )?;
+            self.executions += 1;
+            let m = &res[0]; // (4, NR) row-major
+            for lane in 0..end - start {
+                out.push(MetricLanes {
+                    confidence: m[lane] as f64,
+                    lift: m[self.nr + lane] as f64,
+                    leverage: m[2 * self.nr + lane] as f64,
+                    conviction: m[3 * self.nr + lane] as f64,
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::metrics::{RuleCounts, RuleMetrics};
+    use crate::runtime::manifest::default_artifacts_dir;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn lanes_match_rust_metric_library() {
+        let Some(rt) = runtime() else { return };
+        let mut exec = XlaMetricsExec::new(&rt);
+        // A handful of contingency tables, including a batch larger than NR
+        // is unnecessary here (covered below); compare each lane to rust.
+        let tables = [
+            (100u64, 20u64, 40u64, 50u64),
+            (1000, 100, 250, 400),
+            (50, 10, 25, 12),
+            (100, 30, 30, 60), // confidence == 1 -> conviction clamp
+        ];
+        let n0 = tables[0].0 as f64;
+        let _ = n0;
+        let sup = |num: u64, n: u64| num as f64 / n as f64;
+        let sup_ac: Vec<f64> = tables.iter().map(|t| sup(t.1, t.0)).collect();
+        let sup_a: Vec<f64> = tables.iter().map(|t| sup(t.2, t.0)).collect();
+        let sup_c: Vec<f64> = tables.iter().map(|t| sup(t.3, t.0)).collect();
+        let lanes = exec.evaluate(&sup_ac, &sup_a, &sup_c).unwrap();
+        assert_eq!(lanes.len(), tables.len());
+        for (lane, &(n, c_ac, c_a, c_c)) in lanes.iter().zip(&tables) {
+            let rust = RuleMetrics::from_counts(RuleCounts { n, c_ac, c_a, c_c });
+            assert!((lane.confidence - rust.confidence).abs() < 1e-6);
+            assert!((lane.lift - rust.lift).abs() < 1e-5);
+            assert!((lane.leverage - rust.leverage).abs() < 1e-6);
+            // conviction clamp constant is huge; compare with loose scale
+            let rel = (lane.conviction - rust.conviction).abs()
+                / rust.conviction.abs().max(1.0);
+            assert!(rel < 1e-3, "conviction {} vs {}", lane.conviction, rust.conviction);
+        }
+    }
+
+    #[test]
+    fn batches_larger_than_nr_are_chunked() {
+        let Some(rt) = runtime() else { return };
+        let mut exec = XlaMetricsExec::new(&rt);
+        let n = rt.manifest().shapes.nr + 7;
+        let sup_ac = vec![0.1; n];
+        let sup_a = vec![0.2; n];
+        let sup_c = vec![0.4; n];
+        let lanes = exec.evaluate(&sup_ac, &sup_a, &sup_c).unwrap();
+        assert_eq!(lanes.len(), n);
+        assert!(exec.executions >= 2);
+        for lane in lanes {
+            assert!((lane.confidence - 0.5).abs() < 1e-6);
+            assert!((lane.lift - 1.25).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mismatched_lengths_error() {
+        let Some(rt) = runtime() else { return };
+        let mut exec = XlaMetricsExec::new(&rt);
+        assert!(exec.evaluate(&[0.1], &[0.2, 0.3], &[0.4]).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (the L1 Pallas kernels inside the L2 JAX graphs)
+//! and serves them to the mining pipeline as support-counting and
+//! metric-evaluation backends. Python never runs at request time.
+
+pub mod manifest;
+pub mod metrics_exec;
+pub mod pjrt;
+pub mod support_exec;
+
+pub use manifest::{default_artifacts_dir, AotShapes, Manifest};
+pub use metrics_exec::{MetricLanes, XlaMetricsExec};
+pub use pjrt::Runtime;
+pub use support_exec::XlaSupportCounter;

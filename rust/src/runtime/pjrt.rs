@@ -1,0 +1,204 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! Wraps the `xla` crate: CPU PJRT client, `HloModuleProto::from_text_file`
+//! (HLO *text* is the interchange format — jax >= 0.5 serialized protos are
+//! rejected by xla_extension 0.5.1, see DESIGN.md), compile once per
+//! artifact, execute many times from the L3 hot path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::Manifest;
+
+/// A PJRT CPU session holding every compiled artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.executables.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Load the manifest and compile every artifact on the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, entry) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .with_context(|| format!("parse HLO text {}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact `{name}`"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact with f32 input buffers of the given shapes.
+    ///
+    /// Inputs are `(data, dims)` pairs; the output tuple (the AOT export
+    /// always lowers with `return_tuple=True`) is flattened into a vector of
+    /// f32 vectors, one per output.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not loaded"))?;
+        let entry = self.manifest.entry(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for &(data, dims) in inputs {
+            let expect: i64 = dims.iter().product();
+            anyhow::ensure!(
+                expect as usize == data.len(),
+                "input size mismatch for `{name}`: {} vs dims {:?}",
+                data.len(),
+                dims
+            );
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .with_context(|| format!("reshape input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute `{name}`"))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple().context("untuple artifact output")?;
+        anyhow::ensure!(
+            parts.len() == entry.num_outputs,
+            "`{name}` returned {} outputs, manifest says {}",
+            parts.len(),
+            entry.num_outputs
+        );
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_artifacts_dir;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn loads_and_compiles_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.platform(), "cpu");
+        assert!(rt.executables.len() >= 3);
+    }
+
+    #[test]
+    fn support_count_artifact_counts_correctly() {
+        let Some(rt) = runtime() else { return };
+        let s = rt.manifest().shapes;
+        // Tiny deterministic scenario embedded in the padded batch:
+        // tx0 = {0,1}, tx1 = {0}, tx2 = {1,2}; candidates {0}, {0,1}, {2}.
+        let mut tx = vec![0f32; s.nt * s.ni];
+        tx[0] = 1.0;
+        tx[1] = 1.0;
+        tx[s.ni] = 1.0;
+        tx[2 * s.ni + 1] = 1.0;
+        tx[2 * s.ni + 2] = 1.0;
+        let mut masks = vec![0f32; s.nk * s.ni];
+        let mut sizes = vec![0f32; s.nk];
+        masks[0] = 1.0;
+        sizes[0] = 1.0;
+        masks[s.ni] = 1.0;
+        masks[s.ni + 1] = 1.0;
+        sizes[1] = 2.0;
+        masks[2 * s.ni + 2] = 1.0;
+        sizes[2] = 1.0;
+        let out = rt
+            .execute_f32(
+                "support_count",
+                &[
+                    (&tx, &[s.nt as i64, s.ni as i64]),
+                    (&masks, &[s.nk as i64, s.ni as i64]),
+                    (&sizes, &[s.nk as i64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let counts = &out[0];
+        assert_eq!(counts[0], 2.0); // {0} in tx0, tx1
+        assert_eq!(counts[1], 1.0); // {0,1} in tx0
+        assert_eq!(counts[2], 1.0); // {2} in tx2
+        // padding lanes (empty masks) count every transaction
+        assert_eq!(counts[3], s.nt as f32);
+    }
+
+    #[test]
+    fn rule_metrics_artifact_matches_rust_metrics() {
+        use crate::rules::metrics::{RuleCounts, RuleMetrics};
+        let Some(rt) = runtime() else { return };
+        let s = rt.manifest().shapes;
+        let mut sup_ac = vec![0.5f32; s.nr];
+        let mut sup_a = vec![1.0f32; s.nr];
+        let mut sup_c = vec![1.0f32; s.nr];
+        // lane 0: a real rule from counts (n=100, c_ac=20, c_a=40, c_c=50)
+        sup_ac[0] = 0.2;
+        sup_a[0] = 0.4;
+        sup_c[0] = 0.5;
+        let out = rt
+            .execute_f32(
+                "rule_metrics",
+                &[
+                    (&sup_ac, &[s.nr as i64]),
+                    (&sup_a, &[s.nr as i64]),
+                    (&sup_c, &[s.nr as i64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let m = &out[0]; // (4, NR) row-major
+        let rust = RuleMetrics::from_counts(RuleCounts {
+            n: 100,
+            c_ac: 20,
+            c_a: 40,
+            c_c: 50,
+        });
+        assert!((m[0] as f64 - rust.confidence).abs() < 1e-6, "confidence");
+        assert!((m[s.nr] as f64 - rust.lift).abs() < 1e-6, "lift");
+        assert!((m[2 * s.nr] as f64 - rust.leverage).abs() < 1e-6, "leverage");
+        assert!((m[3 * s.nr] as f64 - rust.conviction).abs() < 1e-3, "conviction");
+    }
+}

@@ -1,0 +1,152 @@
+//! XLA-artifact-backed support counting — the L1 Pallas kernel on the
+//! Apriori / trie-annotation path.
+//!
+//! Implements [`SupportCounter`] by padding candidate itemsets into the
+//! artifact's frozen `(NK, NI)` mask batches and streaming the database
+//! through `(NT, NI)` incidence chunks, accumulating absolute counts across
+//! chunks (the invariant pinned by `python/tests/test_model.py::
+//! test_chunked_accumulation_equals_whole`).
+
+use anyhow::Result;
+
+use crate::data::transaction::TransactionDb;
+use crate::mining::apriori::SupportCounter;
+use crate::mining::itemset::Itemset;
+use crate::runtime::pjrt::Runtime;
+
+/// Support counter that executes the `support_count` AOT artifact.
+pub struct XlaSupportCounter<'rt> {
+    runtime: &'rt Runtime,
+    /// Pre-built incidence chunks, each `NT x NI` row-major f32.
+    chunks: Vec<Vec<f32>>,
+    nt: usize,
+    ni: usize,
+    nk: usize,
+    /// Executions performed (telemetry / bench assertions).
+    pub executions: usize,
+}
+
+impl<'rt> XlaSupportCounter<'rt> {
+    /// Prepare chunks for `db`. Fails if the vocabulary exceeds the
+    /// artifact's item width (use the rust bitset counter for wider data —
+    /// see DESIGN.md §5.4).
+    pub fn new(runtime: &'rt Runtime, db: &TransactionDb) -> Result<Self> {
+        let shapes = runtime.manifest().shapes;
+        anyhow::ensure!(
+            db.num_items() <= shapes.ni,
+            "vocabulary {} exceeds artifact item width {}",
+            db.num_items(),
+            shapes.ni
+        );
+        let n = db.num_transactions();
+        let chunks = (0..n.div_ceil(shapes.nt))
+            .map(|c| db.incidence_chunk(c * shapes.nt, shapes.nt, shapes.ni))
+            .collect();
+        Ok(Self {
+            runtime,
+            chunks,
+            nt: shapes.nt,
+            ni: shapes.ni,
+            nk: shapes.nk,
+            executions: 0,
+        })
+    }
+
+    fn count_batch(&mut self, batch: &[Itemset]) -> Result<Vec<u64>> {
+        debug_assert!(batch.len() <= self.nk);
+        let mut masks = vec![0f32; self.nk * self.ni];
+        let mut sizes = vec![0f32; self.nk];
+        for (k, cand) in batch.iter().enumerate() {
+            for &item in cand.items() {
+                masks[k * self.ni + item as usize] = 1.0;
+            }
+            sizes[k] = cand.len() as f32;
+        }
+        let mut totals = vec![0f64; batch.len()];
+        for chunk in &self.chunks {
+            let out = self.runtime.execute_f32(
+                "support_count",
+                &[
+                    (chunk, &[self.nt as i64, self.ni as i64]),
+                    (&masks, &[self.nk as i64, self.ni as i64]),
+                    (&sizes, &[self.nk as i64]),
+                ],
+            )?;
+            self.executions += 1;
+            for (t, &c) in totals.iter_mut().zip(out[0].iter()) {
+                *t += c as f64;
+            }
+        }
+        Ok(totals.into_iter().map(|t| t as u64).collect())
+    }
+}
+
+impl SupportCounter for XlaSupportCounter<'_> {
+    fn count(&mut self, candidates: &[Itemset]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(candidates.len());
+        for batch in candidates.chunks(self.nk) {
+            match self.count_batch(batch) {
+                Ok(counts) => out.extend(counts),
+                Err(e) => panic!("XLA support counting failed: {e:#}"),
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::GeneratorConfig;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::apriori::{apriori, apriori_with, BitsetCounter};
+    use crate::runtime::manifest::default_artifacts_dir;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn xla_counter_matches_bitset_counter() {
+        let Some(rt) = runtime() else { return };
+        let db = paper_example_db();
+        let candidates: Vec<Itemset> = vec![
+            Itemset::new(vec![0]),
+            Itemset::new(vec![0, 2]),
+            Itemset::new(vec![0, 1, 2]),
+            Itemset::new(vec![8]),
+        ];
+        let mut xla = XlaSupportCounter::new(&rt, &db).unwrap();
+        let mut bit = BitsetCounter::new(&db);
+        assert_eq!(xla.count(&candidates), bit.count(&candidates));
+        assert!(xla.executions > 0);
+    }
+
+    #[test]
+    fn apriori_with_xla_backend_matches_default() {
+        let Some(rt) = runtime() else { return };
+        let db = GeneratorConfig::tiny(31).generate();
+        let mut xla = XlaSupportCounter::new(&rt, &db).unwrap();
+        let got = apriori_with(&db, 0.08, &mut xla);
+        let want = apriori(&db, 0.08);
+        assert_eq!(got.sets, want.sets);
+    }
+
+    #[test]
+    fn oversized_vocabulary_is_rejected() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = GeneratorConfig::tiny(1);
+        cfg.num_items = rt.manifest().shapes.ni + 1;
+        let db = cfg.generate();
+        assert!(XlaSupportCounter::new(&rt, &db).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Fixed-bin histogram with an ASCII renderer.
+//!
+//! The paper presents Figs. 9, 12(b), 13(b) as histograms of paired timing
+//! differences; the bench harness prints the same shape as text so the
+//! "figure" is regenerated directly in the bench output.
+
+/// Histogram over `[lo, hi)` with `bins` equal-width bins plus outlier bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    below: u64,
+    above: u64,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            below: 0,
+            above: 0,
+            total: 0,
+        }
+    }
+
+    /// Build a histogram spanning the sample range.
+    pub fn of(xs: &[f64], bins: usize) -> Self {
+        assert!(!xs.is_empty());
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let hi = if hi > lo { hi } else { lo + 1.0 };
+        // widen hi slightly so the max lands in the last bin
+        let mut h = Histogram::new(lo, hi + (hi - lo) * 1e-9, bins);
+        for &x in xs {
+            h.push(x);
+        }
+        h
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.below += 1;
+        } else if x >= self.hi {
+            self.above += 1;
+        } else {
+            let w = (self.hi - self.lo) / self.counts.len() as f64;
+            let idx = ((x - self.lo) / w) as usize;
+            let idx = idx.min(self.counts.len() - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Bin center for bin `i`.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Render as an ASCII bar chart, `width` chars for the largest bar.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width) / max as usize);
+            out.push_str(&format!("{:>12.4e} | {:<width$} {}\n", self.center(i), bar, c));
+        }
+        if self.below > 0 || self.above > 0 {
+            out.push_str(&format!("(outliers: {} below, {} above)\n", self.below, self.above));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_capture_values() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        assert_eq!(h.counts(), &[1; 10]);
+        assert_eq!(h.total(), 10);
+    }
+
+    #[test]
+    fn outliers_tracked() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-5.0);
+        h.push(2.0);
+        h.push(0.5);
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.counts().iter().sum::<u64>(), 1);
+        assert!(h.render(10).contains("outliers: 1 below, 1 above"));
+    }
+
+    #[test]
+    fn of_spans_sample() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let h = Histogram::of(&xs, 5);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts().iter().sum::<u64>(), 5); // no outliers
+    }
+
+    #[test]
+    fn render_scales_bars() {
+        let mut h = Histogram::new(0.0, 2.0, 2);
+        for _ in 0..10 {
+            h.push(0.5);
+        }
+        h.push(1.5);
+        let r = h.render(20);
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines[0].matches('#').count() > lines[1].matches('#').count());
+    }
+}

@@ -1,0 +1,12 @@
+//! Statistics for the evaluation harness: descriptive summaries, paired
+//! t-tests (paper Figs. 9, 12b, 13b), histograms, and the special functions
+//! (`ln_gamma`, regularized incomplete beta) that back the p-values.
+
+pub mod descriptive;
+pub mod histogram;
+pub mod special;
+pub mod ttest;
+
+pub use descriptive::{mean, percentile_sorted, Summary, Welford};
+pub use histogram::Histogram;
+pub use ttest::PairedTTest;

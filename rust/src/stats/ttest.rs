@@ -1,0 +1,120 @@
+//! Paired Student t-test — the significance machinery behind the paper's
+//! Figs. 9, 12(b) and 13(b): "null hypothesis that the difference in times
+//! between these methods is zero".
+
+use crate::stats::descriptive::Welford;
+use crate::stats::special::student_t_two_sided_p;
+
+/// Result of a paired t-test over per-item timing differences.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairedTTest {
+    pub n: usize,
+    pub mean_diff: f64,
+    pub std_diff: f64,
+    pub t_statistic: f64,
+    pub df: f64,
+    /// Two-sided p-value for H0: mean difference == 0.
+    pub p_value: f64,
+}
+
+impl PairedTTest {
+    /// Paired t-test of `a` vs `b` (differences `a[i] - b[i]`).
+    ///
+    /// Panics if lengths differ or fewer than 2 pairs are given.
+    pub fn run(a: &[f64], b: &[f64]) -> PairedTTest {
+        assert_eq!(a.len(), b.len(), "paired t-test needs equal-length samples");
+        assert!(a.len() >= 2, "paired t-test needs >= 2 pairs");
+        let mut w = Welford::new();
+        for (&x, &y) in a.iter().zip(b) {
+            w.push(x - y);
+        }
+        let n = a.len();
+        let mean = w.mean();
+        let sd = w.std_dev();
+        let df = (n - 1) as f64;
+        let se = sd / (n as f64).sqrt();
+        let t = if se == 0.0 {
+            if mean == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY * mean.signum()
+            }
+        } else {
+            mean / se
+        };
+        let p = if t.is_infinite() {
+            0.0
+        } else {
+            student_t_two_sided_p(t, df)
+        };
+        PairedTTest {
+            n,
+            mean_diff: mean,
+            std_diff: sd,
+            t_statistic: t,
+            df,
+            p_value: p,
+        }
+    }
+
+    /// True when H0 (zero mean difference) is rejected at `alpha`.
+    pub fn rejects_null(&self, alpha: f64) -> bool {
+        self.p_value < alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_samples_do_not_reject() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let t = PairedTTest::run(&a, &a);
+        assert_eq!(t.mean_diff, 0.0);
+        assert_eq!(t.t_statistic, 0.0);
+        assert!((t.p_value - 1.0).abs() < 1e-12);
+        assert!(!t.rejects_null(0.05));
+    }
+
+    #[test]
+    fn clearly_shifted_samples_reject() {
+        let mut rng = Rng::new(1);
+        let a: Vec<f64> = (0..200).map(|_| rng.f64()).collect();
+        let b: Vec<f64> = a.iter().map(|x| x + 1.0 + 0.01 * rng.f64()).collect();
+        let t = PairedTTest::run(&a, &b);
+        assert!(t.mean_diff < -0.9);
+        assert!(t.p_value < 1e-10);
+        assert!(t.rejects_null(0.05));
+    }
+
+    #[test]
+    fn known_textbook_case() {
+        // Hand-computed: diffs = [1,1,3,8,2,2], mean 2.8333, sd 2.6395,
+        // se 1.0776 -> t = 2.6294 with df = 5; two-sided p ≈ 0.0465.
+        let a = [30.0, 31.0, 34.0, 40.0, 36.0, 35.0];
+        let b = [29.0, 30.0, 31.0, 32.0, 34.0, 33.0];
+        let t = PairedTTest::run(&a, &b);
+        assert!((t.t_statistic - 2.6294).abs() < 1e-3, "t = {}", t.t_statistic);
+        assert!((t.p_value - 0.0465).abs() < 2e-3, "p = {}", t.p_value);
+        assert!(t.rejects_null(0.05));
+        assert!(!t.rejects_null(0.01));
+    }
+
+    #[test]
+    fn noise_does_not_reject() {
+        let mut rng = Rng::new(5);
+        let a: Vec<f64> = (0..100).map(|_| rng.f64()).collect();
+        let b: Vec<f64> = (0..100).map(|_| rng.f64()).collect();
+        let t = PairedTTest::run(&a, &b);
+        // Independent uniforms with equal mean: typically not significant.
+        assert!(t.p_value > 0.001, "p = {}", t.p_value);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal-length")]
+    fn mismatched_lengths_panic() {
+        let _ = PairedTTest::run(&[1.0, 2.0], &[1.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! The Trie of Rules — the paper's data structure (§3) plus its derived
+//! operations: O(path) rule search, arena traversal, bounded-heap top-N,
+//! compound-consequent confidence (§3.2, Eq. 1–4), and visualization.
+
+pub mod compound;
+pub mod node;
+pub mod serialize;
+#[allow(clippy::module_inception)]
+pub mod trie;
+pub mod viz;
+
+pub use compound::{confidence_by_product, verify_eq4};
+pub use node::{NodeIdx, TrieNode, ROOT};
+pub use trie::{FindOutcome, TrieOfRules};

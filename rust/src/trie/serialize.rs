@@ -1,0 +1,242 @@
+//! Trie persistence — the feature the paper's amortization argument
+//! implies ("creating a ruleset is typically a one-time task"): build the
+//! Trie of Rules once, save it, and serve queries from the saved structure
+//! without re-mining.
+//!
+//! Versioned little-endian binary format:
+//!
+//! ```text
+//! magic "TOR\x01" | version u32
+//! num_transactions u64 | min_count u64
+//! num_items u32 | freqs: num_items × u64
+//! vocab flag u8 | if 1: num_items × (len u32, utf-8 bytes)
+//! num_nodes u32 | nodes: (item u32, parent u32, count u64) in arena order
+//! ```
+//!
+//! Only raw counts are stored; metrics, the header table and depths are
+//! derived state, rebuilt (and re-validated) on load.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::vocab::Vocab;
+use crate::mining::counts::ItemOrder;
+use crate::trie::trie::TrieOfRules;
+
+const MAGIC: [u8; 4] = *b"TOR\x01";
+const VERSION: u32 = 1;
+
+/// Save a trie (and optionally its vocabulary) to `path`.
+pub fn save(trie: &TrieOfRules, vocab: Option<&Vocab>, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(trie.num_transactions() as u64).to_le_bytes())?;
+    w.write_all(&trie.order().min_count_used().to_le_bytes())?;
+    let freqs = trie.order().frequencies();
+    w.write_all(&(freqs.len() as u32).to_le_bytes())?;
+    for &f0 in freqs {
+        w.write_all(&f0.to_le_bytes())?;
+    }
+    match vocab {
+        Some(v) => {
+            anyhow::ensure!(
+                v.len() == freqs.len(),
+                "vocab size {} != item count {}",
+                v.len(),
+                freqs.len()
+            );
+            w.write_all(&[1u8])?;
+            for name in v.names() {
+                w.write_all(&(name.len() as u32).to_le_bytes())?;
+                w.write_all(name.as_bytes())?;
+            }
+        }
+        None => w.write_all(&[0u8])?,
+    }
+    let nodes: Vec<_> = trie.raw_nodes().collect();
+    w.write_all(&(nodes.len() as u32).to_le_bytes())?;
+    for (item, parent, count) in nodes {
+        w.write_all(&item.to_le_bytes())?;
+        w.write_all(&parent.to_le_bytes())?;
+        w.write_all(&count.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a trie (and its vocabulary, when stored) from `path`.
+pub fn load(path: &Path) -> Result<(TrieOfRules, Option<Vocab>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("read magic")?;
+    anyhow::ensure!(magic == MAGIC, "not a Trie-of-Rules file (bad magic)");
+    let version = read_u32(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported version {version}");
+    let num_transactions = read_u64(&mut r)? as usize;
+    let min_count = read_u64(&mut r)?;
+    let num_items = read_u32(&mut r)? as usize;
+    anyhow::ensure!(num_items < 1 << 28, "implausible item count {num_items}");
+    let mut freqs = Vec::with_capacity(num_items);
+    for _ in 0..num_items {
+        freqs.push(read_u64(&mut r)?);
+    }
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let vocab = if flag[0] == 1 {
+        let mut v = Vocab::new();
+        for i in 0..num_items {
+            let len = read_u32(&mut r)? as usize;
+            anyhow::ensure!(len < 1 << 20, "implausible name length {len}");
+            let mut buf = vec![0u8; len];
+            r.read_exact(&mut buf)?;
+            let name = String::from_utf8(buf).with_context(|| format!("item {i} name"))?;
+            v.intern(&name);
+        }
+        Some(v)
+    } else {
+        None
+    };
+    let num_nodes = read_u32(&mut r)? as usize;
+    anyhow::ensure!(num_nodes < 1 << 30, "implausible node count {num_nodes}");
+    let mut raw = Vec::with_capacity(num_nodes);
+    for _ in 0..num_nodes {
+        let item = read_u32(&mut r)?;
+        let parent = read_u32(&mut r)?;
+        let count = read_u64(&mut r)?;
+        raw.push((item, parent, count));
+    }
+    let order = ItemOrder::from_frequencies(freqs, min_count);
+    let trie = TrieOfRules::from_raw_nodes(order, num_transactions, &raw)?;
+    Ok((trie, vocab))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::GeneratorConfig;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::counts::min_count;
+    use crate::mining::fpgrowth::fpgrowth;
+    use crate::rules::metrics::Metric;
+    use crate::trie::trie::FindOutcome;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tor_ser_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}.tor"))
+    }
+
+    fn build(seed: u64, minsup: f64) -> (crate::data::transaction::TransactionDb, TrieOfRules) {
+        let db = GeneratorConfig::tiny(seed).generate();
+        let fi = fpgrowth(&db, minsup);
+        let order = ItemOrder::new(&db, min_count(minsup, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        (db, trie)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let (db, trie) = build(5, 0.05);
+        let path = tmpfile("roundtrip");
+        save(&trie, Some(db.vocab()), &path).unwrap();
+        let (back, vocab) = load(&path).unwrap();
+        let vocab = vocab.expect("vocab stored");
+        assert_eq!(vocab.len(), db.vocab().len());
+        assert_eq!(back.num_nodes(), trie.num_nodes());
+        assert_eq!(back.num_transactions(), trie.num_transactions());
+        // Every rule answers identically, metrics included.
+        let mut checked = 0;
+        trie.for_each_rule(|rule, m| {
+            match back.find_rule(rule) {
+                FindOutcome::Found(bm) => {
+                    assert!((bm.support - m.support).abs() < 1e-15, "{rule}");
+                    assert!((bm.confidence - m.confidence).abs() < 1e-15, "{rule}");
+                    assert!((bm.lift - m.lift).abs() < 1e-12, "{rule}");
+                }
+                other => panic!("{rule}: {other:?}"),
+            }
+            checked += 1;
+        });
+        assert!(checked > 10);
+        // Top-N agrees too.
+        let a: Vec<f64> = trie.top_n(Metric::Lift, 5).iter().map(|&(_, v)| v).collect();
+        let b: Vec<f64> = back.top_n(Metric::Lift, 5).iter().map(|&(_, v)| v).collect();
+        assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_without_vocab() {
+        let (_, trie) = build(6, 0.06);
+        let path = tmpfile("novocab");
+        save(&trie, None, &path).unwrap();
+        let (back, vocab) = load(&path).unwrap();
+        assert!(vocab.is_none());
+        assert_eq!(back.num_nodes(), trie.num_nodes());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn paper_example_roundtrip() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let path = tmpfile("paper");
+        save(&trie, Some(db.vocab()), &path).unwrap();
+        let (back, vocab) = load(&path).unwrap();
+        let vocab = vocab.unwrap();
+        let name = |s: &str| vocab.get(s).unwrap();
+        assert_eq!(back.support_of(&[name("f"), name("c")]), Some(3));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let path = tmpfile("garbage");
+        std::fs::write(&path, b"not a trie file at all").unwrap();
+        assert!(load(&path).is_err());
+        // Truncated real file.
+        let (db, trie) = build(7, 0.06);
+        let full = tmpfile("full");
+        save(&trie, Some(db.vocab()), &full).unwrap();
+        let bytes = std::fs::read(&full).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&full).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_counts() {
+        // Corrupt a node count so it exceeds its parent: loader must refuse.
+        let (db, trie) = build(8, 0.06);
+        let path = tmpfile("corrupt");
+        save(&trie, Some(db.vocab()), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Last 8 bytes = last node's count; blow it up.
+        let n = bytes.len();
+        bytes[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("exceeds parent"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,873 @@
+//! The Trie of Rules — the paper's contribution.
+//!
+//! A prefix tree over frequency-ordered frequent itemsets where **every node
+//! is an association rule**: the node's item is the consequent and the path
+//! from the root to the node's parent is the antecedent (paper Fig. 3).
+//! Node counts are *true* supports of their path itemsets (paper §3.2), so
+//! compound-consequent confidences can be derived by multiplying node
+//! confidences along the consequent suffix (Eq. 1–4).
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::vocab::ItemId;
+use crate::mining::apriori::SupportCounter;
+use crate::mining::counts::ItemOrder;
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+use crate::rules::metrics::{Metric, RuleCounts, RuleMetrics};
+use crate::rules::rule::Rule;
+use crate::trie::node::{NodeIdx, TrieNode, ROOT, ROOT_ITEM};
+
+/// Outcome of a rule lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FindOutcome {
+    /// The rule is represented and fully scored.
+    Found(RuleMetrics),
+    /// The rule's items interleave antecedent and consequent in the
+    /// canonical frequency order, so it has no direct path representation
+    /// (paper §3.3 — derivable, but not stored).
+    NotRepresentable,
+    /// The rule's path does not exist in the trie.
+    Absent,
+}
+
+/// The Trie of Rules.
+#[derive(Debug, Clone)]
+pub struct TrieOfRules {
+    nodes: Vec<TrieNode>,
+    order: ItemOrder,
+    /// item -> every node carrying it (FP-tree-style header table).
+    header: HashMap<ItemId, Vec<NodeIdx>>,
+    num_transactions: usize,
+}
+
+impl TrieOfRules {
+    // ------------------------------------------------------------------
+    // construction
+    // ------------------------------------------------------------------
+
+    fn empty(order: ItemOrder, num_transactions: usize) -> Self {
+        let root = TrieNode {
+            item: ROOT_ITEM,
+            count: num_transactions as u64,
+            parent: ROOT,
+            depth: 0,
+            metrics: RuleMetrics::from_counts(RuleCounts {
+                n: num_transactions.max(1) as u64,
+                c_ac: num_transactions as u64,
+                c_a: num_transactions as u64,
+                c_c: num_transactions as u64,
+            }),
+            children: Vec::new(),
+        };
+        Self {
+            nodes: vec![root],
+            order,
+            header: HashMap::new(),
+            num_transactions,
+        }
+    }
+
+    /// Build from a *complete* frequent-itemset collection (e.g. Apriori or
+    /// FP-growth output — the paper's evaluation setting). Every path
+    /// prefix of a frequency-ordered frequent itemset is itself frequent,
+    /// so all node supports come from the mining output with no recounting.
+    pub fn from_frequent(fi: &FrequentItemsets, order: &ItemOrder) -> Result<TrieOfRules> {
+        let support: HashMap<&Itemset, u64> = fi.sets.iter().map(|(s, c)| (s, *c)).collect();
+        let mut trie = Self::empty(order.clone(), fi.num_transactions);
+        for (set, _) in &fi.sets {
+            let path = order.order_itemset(set.items());
+            trie.insert_path(&path, |prefix| {
+                let key = Itemset::new(prefix.to_vec());
+                support.get(&key).copied().with_context(|| {
+                    format!("prefix {key} missing from frequent set (downward closure violated)")
+                })
+            })?;
+        }
+        Ok(trie)
+    }
+
+    /// Build from frequent *sequences* (the paper's Step 1: FP-max output)
+    /// plus a support-counting backend for the prefix supports the maximal
+    /// sets don't carry. The backend may be the rust bitset counter or the
+    /// XLA-artifact counter — this is the trie-side integration point of
+    /// the L1 Pallas kernel.
+    pub fn from_sequences(
+        sequences: &[(Vec<ItemId>, u64)],
+        order: &ItemOrder,
+        counter: &mut dyn SupportCounter,
+        num_transactions: usize,
+    ) -> Result<TrieOfRules> {
+        // Gather every distinct prefix that needs a support count.
+        let mut need: Vec<Itemset> = Vec::new();
+        let mut seen: HashSet<Itemset> = HashSet::new();
+        for (seq, count) in sequences {
+            for d in 1..=seq.len() {
+                let key = Itemset::new(seq[..d].to_vec());
+                if d == seq.len() {
+                    // Full sequence has a known count — skip counting, but
+                    // remember it below.
+                    let _ = count;
+                    continue;
+                }
+                if seen.insert(key.clone()) {
+                    need.push(key);
+                }
+            }
+        }
+        let counts = counter.count(&need);
+        let mut support: HashMap<Itemset, u64> = need.into_iter().zip(counts).collect();
+        for (seq, count) in sequences {
+            support.insert(Itemset::new(seq.clone()), *count);
+        }
+
+        let mut trie = Self::empty(order.clone(), num_transactions);
+        for (seq, _) in sequences {
+            let path = order.order_itemset(seq);
+            trie.insert_path(&path, |prefix| {
+                let key = Itemset::new(prefix.to_vec());
+                support
+                    .get(&key)
+                    .copied()
+                    .with_context(|| format!("prefix {key} not counted"))
+            })?;
+        }
+        Ok(trie)
+    }
+
+    /// Insert one frequency-ordered path, annotating every newly created
+    /// node with its true support from `support_of` (paper Step 3).
+    fn insert_path(
+        &mut self,
+        path: &[ItemId],
+        mut support_of: impl FnMut(&[ItemId]) -> Result<u64>,
+    ) -> Result<()> {
+        if path.is_empty() {
+            bail!("cannot insert an empty path");
+        }
+        let n = self.num_transactions as u64;
+        let mut cur = ROOT;
+        for depth in 1..=path.len() {
+            let item = path[depth - 1];
+            cur = match self.nodes[cur as usize].child(item) {
+                Some(c) => c,
+                None => {
+                    let c_ac = support_of(&path[..depth])?;
+                    let c_a = self.nodes[cur as usize].count;
+                    let c_c = self.order.frequency(item);
+                    let idx = self.nodes.len() as NodeIdx;
+                    self.nodes.push(TrieNode {
+                        item,
+                        count: c_ac,
+                        parent: cur,
+                        depth: depth as u16,
+                        metrics: RuleMetrics::from_counts(RuleCounts { n, c_ac, c_a, c_c }),
+                        children: Vec::new(),
+                    });
+                    self.nodes[cur as usize].link_child(item, idx);
+                    self.header.entry(item).or_default().push(idx);
+                    idx
+                }
+            };
+        }
+        Ok(())
+    }
+
+    /// Raw node triples `(item, parent, count)` in arena order (parents
+    /// always precede children) — the serializer's wire form. Metrics and
+    /// the header table are derived state and are rebuilt on load.
+    pub fn raw_nodes(&self) -> impl Iterator<Item = (ItemId, NodeIdx, u64)> + '_ {
+        self.nodes
+            .iter()
+            .skip(1)
+            .map(|n| (n.item, n.parent, n.count))
+    }
+
+    /// Rebuild a trie from raw node triples (see [`Self::raw_nodes`]).
+    pub fn from_raw_nodes(
+        order: ItemOrder,
+        num_transactions: usize,
+        raw: &[(ItemId, NodeIdx, u64)],
+    ) -> Result<TrieOfRules> {
+        let n = num_transactions as u64;
+        let mut trie = Self::empty(order, num_transactions);
+        for &(item, parent, count) in raw {
+            let idx = trie.nodes.len() as NodeIdx;
+            anyhow::ensure!(
+                (parent as usize) < trie.nodes.len(),
+                "node {idx}: parent {parent} not yet defined (corrupt file?)"
+            );
+            anyhow::ensure!(
+                trie.order.is_frequent(item),
+                "node {idx}: item {item} is not frequent under the stored order"
+            );
+            let parent_node = &trie.nodes[parent as usize];
+            let c_a = parent_node.count;
+            anyhow::ensure!(
+                count <= c_a,
+                "node {idx}: count {count} exceeds parent count {c_a}"
+            );
+            let depth = parent_node.depth + 1;
+            let c_c = trie.order.frequency(item);
+            trie.nodes.push(TrieNode {
+                item,
+                count,
+                parent,
+                depth,
+                metrics: RuleMetrics::from_counts(RuleCounts {
+                    n,
+                    c_ac: count,
+                    c_a,
+                    c_c,
+                }),
+                children: Vec::new(),
+            });
+            anyhow::ensure!(
+                trie.nodes[parent as usize].link_child(item, idx),
+                "node {idx}: duplicate child {item} under {parent}"
+            );
+            trie.header.entry(item).or_default().push(idx);
+        }
+        Ok(trie)
+    }
+
+    // ------------------------------------------------------------------
+    // basic accessors
+    // ------------------------------------------------------------------
+
+    pub fn num_transactions(&self) -> usize {
+        self.num_transactions
+    }
+
+    /// Number of nodes excluding the root = number of stored
+    /// single-consequent rules (depth-1 nodes are itemset-support entries).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Number of rules the trie represents directly: every (node, split)
+    /// pair with non-empty antecedent and consequent.
+    pub fn num_representable_rules(&self) -> usize {
+        self.nodes
+            .iter()
+            .skip(1)
+            .map(|n| (n.depth as usize).saturating_sub(1))
+            .sum()
+    }
+
+    pub fn order(&self) -> &ItemOrder {
+        &self.order
+    }
+
+    pub fn node(&self, idx: NodeIdx) -> &TrieNode {
+        &self.nodes[idx as usize]
+    }
+
+    /// Items on the path root→`idx`, root-first.
+    pub fn path_items(&self, idx: NodeIdx) -> Vec<ItemId> {
+        let mut rev = Vec::new();
+        let mut cur = idx;
+        while cur != ROOT {
+            rev.push(self.nodes[cur as usize].item);
+            cur = self.nodes[cur as usize].parent;
+        }
+        rev.reverse();
+        rev
+    }
+
+    /// All nodes carrying `item` (header-table access).
+    pub fn item_nodes(&self, item: ItemId) -> &[NodeIdx] {
+        self.header.get(&item).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Estimated resident size in bytes (node arena + child links + header).
+    pub fn memory_bytes(&self) -> usize {
+        let node = std::mem::size_of::<TrieNode>();
+        let link = std::mem::size_of::<(ItemId, NodeIdx)>();
+        self.nodes.len() * node
+            + self.nodes.iter().map(|n| n.children.capacity() * link).sum::<usize>()
+            + self.header.values().map(|v| v.capacity() * 4 + 16).sum::<usize>()
+    }
+
+    // ------------------------------------------------------------------
+    // search (paper's random-access experiment, Figs. 8–10)
+    // ------------------------------------------------------------------
+
+    /// Walk the ordered path for `items`, returning the final node.
+    pub fn walk(&self, ordered_path: &[ItemId]) -> Option<NodeIdx> {
+        let mut cur = ROOT;
+        for &item in ordered_path {
+            cur = self.nodes[cur as usize].child(item)?;
+        }
+        Some(cur)
+    }
+
+    /// Absolute support count of an itemset, if its ordered path exists.
+    pub fn support_of(&self, items: &[ItemId]) -> Option<u64> {
+        if items.iter().any(|&i| !self.order.is_frequent(i)) {
+            return None;
+        }
+        let path = self.order.order_itemset(items);
+        self.walk(&path).map(|n| self.nodes[n as usize].count)
+    }
+
+    /// Look up a rule `A => C` and derive its full metric vector.
+    ///
+    /// Cost: O(|A| + |C|) child probes — the paper's headline operation.
+    pub fn find_rule(&self, rule: &Rule) -> FindOutcome {
+        let a = rule.antecedent.items();
+        let c = rule.consequent.items();
+        // Infrequent items can never be in the trie.
+        if a.iter().chain(c).any(|&i| !self.order.is_frequent(i)) {
+            return FindOutcome::Absent;
+        }
+        // Representable iff every antecedent item precedes every consequent
+        // item in the canonical frequency order (paper §3.3).
+        let max_a = a.iter().map(|&i| self.order.rank(i).unwrap()).max().unwrap();
+        let min_c = c.iter().map(|&i| self.order.rank(i).unwrap()).min().unwrap();
+        if max_a >= min_c {
+            return FindOutcome::NotRepresentable;
+        }
+
+        // Walk A then C, recording the antecedent-boundary count. Rule
+        // sides are rank-sorted into stack buffers — no allocation on the
+        // search hot path (§Perf iteration L3-2; rules longer than the
+        // buffers fall back to the allocating sort).
+        let mut a_buf = [0 as ItemId; 32];
+        let mut c_buf = [0 as ItemId; 32];
+        let (a_vec, c_vec);
+        let a_path: &[ItemId] = match self.order.order_into(a, &mut a_buf) {
+            Some(p) => p,
+            None => {
+                a_vec = self.order.order_itemset(a);
+                &a_vec
+            }
+        };
+        let c_path: &[ItemId] = match self.order.order_into(c, &mut c_buf) {
+            Some(p) => p,
+            None => {
+                c_vec = self.order.order_itemset(c);
+                &c_vec
+            }
+        };
+        let Some(a_node) = self.walk(a_path) else {
+            return FindOutcome::Absent;
+        };
+        let mut cur = a_node;
+        for &item in c_path {
+            match self.nodes[cur as usize].child(item) {
+                Some(nxt) => cur = nxt,
+                None => return FindOutcome::Absent,
+            }
+        }
+
+        if c_path.len() == 1 {
+            // Single-item consequent: the node's stored metrics (Fig. 6).
+            return FindOutcome::Found(self.nodes[cur as usize].metrics);
+        }
+        // Compound consequent (paper §3.2): supports from the walk, with
+        // sup(C) read off C's own root path (C is frequent, so the path
+        // exists whenever the trie was built from a full frequent set).
+        let c_ac = self.nodes[cur as usize].count;
+        let c_a = self.nodes[a_node as usize].count;
+        match self.walk(c_path) {
+            Some(c_node) => FindOutcome::Found(RuleMetrics::from_counts(RuleCounts {
+                n: self.num_transactions as u64,
+                c_ac,
+                c_a,
+                c_c: self.nodes[c_node as usize].count,
+            })),
+            // Maximal-sequence tries may lack C's own path; report what the
+            // product rule alone supports (support + confidence), with
+            // consequent-dependent metrics computed against an unknown
+            // sup(C) left as the whole database (conservative).
+            None => FindOutcome::Found(RuleMetrics::from_counts(RuleCounts {
+                n: self.num_transactions as u64,
+                c_ac,
+                c_a,
+                c_c: self.num_transactions as u64,
+            })),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // traversal (paper's large-dataset experiment)
+    // ------------------------------------------------------------------
+
+    /// Visit every stored node-rule (single-item consequent, depth >= 2)
+    /// in DFS order. The trie's traversal advantage (8x headline) comes
+    /// from this being a pointer-free arena walk.
+    pub fn for_each_node_rule(&self, mut f: impl FnMut(NodeIdx, &RuleMetrics)) {
+        // The arena is append-ordered; DFS order is not required for
+        // correctness of aggregate traversals, so walk the arena linearly
+        // (cache-optimal).
+        for (idx, node) in self.nodes.iter().enumerate().skip(1) {
+            if node.depth >= 2 {
+                f(idx as NodeIdx, &node.metrics);
+            }
+        }
+    }
+
+    /// Visit every representable rule — each (node, split) pair — deriving
+    /// metrics on the fly. `f(rule, metrics)`.
+    pub fn for_each_rule(&self, mut f: impl FnMut(&Rule, &RuleMetrics)) {
+        let n = self.num_transactions as u64;
+        // Reusable path buffer: (item, count) pairs root-first.
+        let mut stack: Vec<(NodeIdx, usize)> = self.nodes[ROOT as usize]
+            .children
+            .iter()
+            .map(|&(_, c)| (c, 1usize))
+            .collect();
+        let mut path: Vec<(ItemId, u64)> = Vec::new();
+        while let Some((idx, depth)) = stack.pop() {
+            path.truncate(depth - 1);
+            let node = &self.nodes[idx as usize];
+            path.push((node.item, node.count));
+            // Emit all splits of this node's path.
+            for split in 1..path.len() {
+                let antecedent: Vec<ItemId> = path[..split].iter().map(|&(i, _)| i).collect();
+                let consequent: Vec<ItemId> = path[split..].iter().map(|&(i, _)| i).collect();
+                let c_a = path[split - 1].1;
+                let c_ac = node.count;
+                let c_c = if consequent.len() == 1 {
+                    self.order.frequency(consequent[0])
+                } else {
+                    match self.support_of(&consequent) {
+                        Some(c) => c,
+                        None => n,
+                    }
+                };
+                let rule = Rule::new(Itemset::new(antecedent), Itemset::new(consequent));
+                let metrics = RuleMetrics::from_counts(RuleCounts { n, c_ac, c_a, c_c });
+                f(&rule, &metrics);
+            }
+            for &(_, child) in &node.children {
+                stack.push((child, depth + 1));
+            }
+        }
+    }
+
+    /// Materialize all representable rules (tests / dataframe parity).
+    pub fn collect_rules(&self) -> Vec<(Rule, RuleMetrics)> {
+        let mut out = Vec::with_capacity(self.num_representable_rules());
+        self.for_each_rule(|r, m| out.push((r.clone(), *m)));
+        out
+    }
+
+    /// Allocation-free traversal of every representable rule with the two
+    /// metrics the trie derives natively (paper §3.2): support of the full
+    /// path and confidence = sup(path)/sup(antecedent boundary). This is
+    /// the hot traversal the paper's large-dataset experiment measures;
+    /// `f(antecedent, consequent, support, confidence)` receives slices
+    /// into a reused path buffer.
+    pub fn for_each_split(&self, mut f: impl FnMut(&[ItemId], &[ItemId], f64, f64)) {
+        let n = self.num_transactions as f64;
+        let mut stack: Vec<(NodeIdx, usize)> = self.nodes[ROOT as usize]
+            .children
+            .iter()
+            .map(|&(_, c)| (c, 1usize))
+            .collect();
+        let mut items: Vec<ItemId> = Vec::new();
+        let mut counts: Vec<u64> = Vec::new();
+        while let Some((idx, depth)) = stack.pop() {
+            items.truncate(depth - 1);
+            counts.truncate(depth - 1);
+            let node = &self.nodes[idx as usize];
+            items.push(node.item);
+            counts.push(node.count);
+            let support = node.count as f64 / n;
+            for split in 1..items.len() {
+                let confidence = node.count as f64 / counts[split - 1] as f64;
+                f(&items[..split], &items[split..], support, confidence);
+            }
+            for &(_, child) in &node.children {
+                stack.push((child, depth + 1));
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // top-N (paper Figs. 12, 13)
+    // ------------------------------------------------------------------
+
+    /// Top-`k` stored node-rules by `metric`, descending.
+    ///
+    /// Collect values over the arena walk, then `select_nth_unstable`
+    /// (O(nodes) expected) and sort only the winning prefix — measured
+    /// faster than both a bounded heap and a full sort across k/n ratios
+    /// (EXPERIMENTS.md §Perf, iteration L3-1).
+    pub fn top_n(&self, metric: Metric, k: usize) -> Vec<(NodeIdx, f64)> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut all: Vec<(TotalF64, NodeIdx)> = Vec::with_capacity(self.num_nodes());
+        self.for_each_node_rule(|idx, m| all.push((TotalF64(m.get(metric)), idx)));
+        let k = k.min(all.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        if k < all.len() {
+            // Partition so the k largest sit in the head (descending select).
+            all.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+            all.truncate(k);
+        }
+        all.sort_unstable_by(|a, b| b.cmp(a));
+        all.into_iter().map(|(TotalF64(v), idx)| (idx, v)).collect()
+    }
+
+    /// Top-`k` rules by `metric` over **all representable rules** (every
+    /// node split), matching the population the dataframe ranks. Supported
+    /// for the metrics the trie derives natively during the walk —
+    /// Support and Confidence (the paper's Figs. 12–13); other metrics live
+    /// on stored node rules only (use [`Self::top_n`]).
+    pub fn top_n_split_rules(&self, metric: Metric, k: usize) -> Vec<(Rule, f64)> {
+        assert!(
+            matches!(metric, Metric::Support | Metric::Confidence),
+            "top_n_split_rules supports Support/Confidence; {metric:?} requires top_n (node rules)"
+        );
+        if k == 0 {
+            return Vec::new();
+        }
+        // Collect lightweight (value, node, split) candidates, partial-
+        // select the winners, and materialize Rules only for those k
+        // (EXPERIMENTS.md §Perf, iteration L3-1).
+        let use_support = metric == Metric::Support;
+        let n = self.num_transactions as f64;
+        let mut cands: Vec<(TotalF64, NodeIdx, u16)> =
+            Vec::with_capacity(self.num_representable_rules());
+        let mut stack: Vec<NodeIdx> = self.nodes[ROOT as usize]
+            .children
+            .iter()
+            .map(|&(_, c)| c)
+            .collect();
+        // Per-depth ancestor counts for confidence; maintained along the DFS.
+        let mut counts: Vec<u64> = Vec::new();
+        while let Some(idx) = stack.pop() {
+            let node = &self.nodes[idx as usize];
+            counts.truncate(node.depth as usize - 1);
+            counts.push(node.count);
+            let sup = node.count as f64 / n;
+            for split in 1..node.depth {
+                let v = if use_support {
+                    sup
+                } else {
+                    node.count as f64 / counts[split as usize - 1] as f64
+                };
+                cands.push((TotalF64(v), idx, split));
+            }
+            for &(_, child) in &node.children {
+                stack.push(child);
+            }
+        }
+        let k = k.min(cands.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        if k < cands.len() {
+            cands.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+            cands.truncate(k);
+        }
+        cands.sort_unstable_by(|a, b| b.cmp(a));
+        cands
+            .into_iter()
+            .map(|(TotalF64(v), idx, split)| {
+                let path = self.path_items(idx);
+                let (a, c) = path.split_at(split as usize);
+                (
+                    Rule::new(Itemset::new(a.to_vec()), Itemset::new(c.to_vec())),
+                    v,
+                )
+            })
+            .collect()
+    }
+
+    /// All stored node-rules whose consequent is `item` (header-table scan).
+    pub fn rules_with_consequent(&self, item: ItemId) -> Vec<(NodeIdx, RuleMetrics)> {
+        self.item_nodes(item)
+            .iter()
+            .filter(|&&n| self.nodes[n as usize].depth >= 2)
+            .map(|&n| (n, self.nodes[n as usize].metrics))
+            .collect()
+    }
+}
+
+/// Total-order f64 wrapper for heap use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct TotalF64(f64);
+
+impl Eq for TotalF64 {}
+
+impl PartialOrd for TotalF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::{paper_example_db, paper_example_db_fig4_filtered};
+    use crate::mining::apriori::BitsetCounter;
+    use crate::mining::counts::{min_count, ItemOrder};
+    use crate::mining::fpgrowth::fpgrowth;
+    use crate::mining::fpmax::frequent_sequences;
+
+    fn paper_trie() -> (crate::data::transaction::TransactionDb, TrieOfRules) {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        (db, trie)
+    }
+
+    #[test]
+    fn node_counts_are_true_supports() {
+        let (db, trie) = paper_trie();
+        for idx in 1..trie.nodes.len() {
+            let items = trie.path_items(idx as NodeIdx);
+            let truth = db
+                .iter()
+                .filter(|tx| items.iter().all(|i| tx.contains(i)))
+                .count() as u64;
+            assert_eq!(trie.node(idx as NodeIdx).count, truth, "path {items:?}");
+        }
+    }
+
+    #[test]
+    fn fig6_node_a_metrics() {
+        // Paper Fig. 6: the node `a` on the path f->c->a carries the rule
+        // (f,c) => a. Supports: {f,c,a} = 3, {f,c} = 3, {a} = 3, n = 5:
+        // support 0.6, confidence 1.0, lift 1/0.6 = 1.667.
+        let (db, trie) = paper_trie();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        let rule = Rule::from_ids(vec![name("f"), name("c")], vec![name("a")]);
+        match trie.find_rule(&rule) {
+            FindOutcome::Found(m) => {
+                assert!((m.support - 0.6).abs() < 1e-12);
+                assert!((m.confidence - 1.0).abs() < 1e-12);
+                assert!((m.lift - 1.0 / 0.6).abs() < 1e-9);
+            }
+            other => panic!("expected Found, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn find_outcomes() {
+        let (db, trie) = paper_trie();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        // Representable and present.
+        let ok = Rule::from_ids(vec![name("f")], vec![name("c")]);
+        assert!(matches!(trie.find_rule(&ok), FindOutcome::Found(_)));
+        // Interleaved order: f-ranked antecedent after consequent item.
+        let not_rep = Rule::from_ids(vec![name("a")], vec![name("f")]);
+        assert_eq!(trie.find_rule(&not_rep), FindOutcome::NotRepresentable);
+        // Infrequent item.
+        let absent = Rule::from_ids(vec![name("f")], vec![name("d")]);
+        assert_eq!(trie.find_rule(&absent), FindOutcome::Absent);
+    }
+
+    #[test]
+    fn compound_consequent_matches_direct_computation() {
+        let (db, trie) = paper_trie();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        // (f,c) => (a,m): sup{f,c,a,m}=3, sup{f,c}=3 -> conf 1.0
+        let rule = Rule::from_ids(vec![name("f"), name("c")], vec![name("a"), name("m")]);
+        match trie.find_rule(&rule) {
+            FindOutcome::Found(m) => {
+                assert!((m.support - 0.6).abs() < 1e-12);
+                assert!((m.confidence - 1.0).abs() < 1e-12);
+                // sup{a,m} = 3 -> lift = 1.0 / 0.6
+                assert!((m.lift - 1.0 / 0.6).abs() < 1e-9);
+            }
+            other => panic!("expected Found, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_mined_rule_is_found_with_exact_metrics() {
+        // For every representable rule derived from the frequent itemsets,
+        // find_rule must return metrics identical to direct computation
+        // from the database.
+        let (db, trie) = paper_trie();
+        let n = db.num_transactions() as u64;
+        let count = |items: &[ItemId]| {
+            db.iter()
+                .filter(|tx| items.iter().all(|i| tx.contains(i)))
+                .count() as u64
+        };
+        let mut checked = 0usize;
+        trie.for_each_rule(|rule, metrics| {
+            let truth = RuleMetrics::from_counts(RuleCounts {
+                n,
+                c_ac: count(&rule.all_items().items().to_vec()),
+                c_a: count(rule.antecedent.items()),
+                c_c: count(rule.consequent.items()),
+            });
+            assert!(
+                (metrics.support - truth.support).abs() < 1e-12
+                    && (metrics.confidence - truth.confidence).abs() < 1e-12
+                    && (metrics.lift - truth.lift).abs() < 1e-9,
+                "rule {rule}: trie {metrics:?} vs truth {truth:?}"
+            );
+            // And the same rule must round-trip through find_rule.
+            match trie.find_rule(rule) {
+                FindOutcome::Found(m) => {
+                    assert!((m.confidence - truth.confidence).abs() < 1e-12, "{rule}")
+                }
+                other => panic!("rule {rule} not found: {other:?}"),
+            }
+            checked += 1;
+        });
+        assert_eq!(checked, trie.num_representable_rules());
+        assert!(checked > 10, "too few rules exercised: {checked}");
+    }
+
+    #[test]
+    fn from_sequences_matches_from_frequent_on_shared_paths() {
+        // Build one trie from full frequent sets and one from FP-max
+        // sequences + recounting; shared paths must carry identical counts
+        // and metrics.
+        let db = paper_example_db_fig4_filtered();
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let fi = fpgrowth(&db, 0.3);
+        let full = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let (order2, seqs) = frequent_sequences(&db, 0.3);
+        let mut counter = BitsetCounter::new(&db);
+        let maximal =
+            TrieOfRules::from_sequences(&seqs, &order2, &mut counter, db.num_transactions())
+                .unwrap();
+        // Every maximal-trie node exists in the full trie with equal count.
+        for idx in 1..maximal.nodes.len() {
+            let items = maximal.path_items(idx as NodeIdx);
+            let full_node = full.walk(&items).expect("path missing in full trie");
+            assert_eq!(
+                maximal.node(idx as NodeIdx).count,
+                full.node(full_node).count,
+                "path {items:?}"
+            );
+        }
+        // The maximal trie compresses: fewer or equal nodes.
+        assert!(maximal.num_nodes() <= full.num_nodes());
+    }
+
+    #[test]
+    fn top_n_matches_full_sort() {
+        let (_, trie) = paper_trie();
+        for metric in [Metric::Support, Metric::Confidence, Metric::Lift] {
+            // Reference: collect all node rules, sort desc.
+            let mut all: Vec<f64> = Vec::new();
+            trie.for_each_node_rule(|_, m| all.push(m.get(metric)));
+            all.sort_by(|a, b| b.total_cmp(a));
+            for k in [1, 3, all.len(), all.len() + 10] {
+                let got = trie.top_n(metric, k);
+                let want: Vec<f64> = all.iter().copied().take(k).collect();
+                let got_vals: Vec<f64> = got.iter().map(|&(_, v)| v).collect();
+                assert_eq!(got_vals, want, "metric {metric:?} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_split_agrees_with_for_each_rule() {
+        let (_, trie) = paper_trie();
+        let mut slow: Vec<(Vec<ItemId>, Vec<ItemId>, f64, f64)> = Vec::new();
+        trie.for_each_rule(|r, m| {
+            slow.push((
+                r.antecedent.items().to_vec(),
+                r.consequent.items().to_vec(),
+                m.support,
+                m.confidence,
+            ));
+        });
+        let mut fast: Vec<(Vec<ItemId>, Vec<ItemId>, f64, f64)> = Vec::new();
+        trie.for_each_split(|a, c, sup, conf| {
+            let mut a = a.to_vec();
+            let mut c = c.to_vec();
+            a.sort_unstable();
+            c.sort_unstable();
+            fast.push((a, c, sup, conf));
+        });
+        assert_eq!(slow.len(), fast.len());
+        let key = |x: &(Vec<ItemId>, Vec<ItemId>, f64, f64)| (x.0.clone(), x.1.clone());
+        let mut slow_sorted = slow.clone();
+        let mut fast_sorted = fast.clone();
+        slow_sorted.sort_by_key(&key);
+        fast_sorted.sort_by_key(&key);
+        for (s, f) in slow_sorted.iter().zip(&fast_sorted) {
+            assert_eq!(s.0, f.0);
+            assert_eq!(s.1, f.1);
+            assert!((s.2 - f.2).abs() < 1e-12, "support mismatch for {:?}", s.0);
+            assert!((s.3 - f.3).abs() < 1e-12, "confidence mismatch for {:?}", s.0);
+        }
+    }
+
+    #[test]
+    fn top_n_split_rules_matches_reference() {
+        let (_, trie) = paper_trie();
+        for metric in [Metric::Support, Metric::Confidence] {
+            let mut all: Vec<f64> = Vec::new();
+            trie.for_each_split(|_, _, s, c| {
+                all.push(if metric == Metric::Support { s } else { c })
+            });
+            all.sort_by(|a, b| b.total_cmp(a));
+            for k in [1, 5, all.len()] {
+                let got: Vec<f64> = trie
+                    .top_n_split_rules(metric, k)
+                    .iter()
+                    .map(|&(_, v)| v)
+                    .collect();
+                let want: Vec<f64> = all.iter().copied().take(k).collect();
+                assert_eq!(got, want, "metric {metric:?} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "top_n_split_rules supports")]
+    fn top_n_split_rules_rejects_unsupported_metric() {
+        let (_, trie) = paper_trie();
+        let _ = trie.top_n_split_rules(Metric::Lift, 3);
+    }
+
+    #[test]
+    fn header_table_consistency() {
+        let (db, trie) = paper_trie();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        for n in ["f", "c", "a", "m", "p", "b"] {
+            let item = name(n);
+            for &idx in trie.item_nodes(item) {
+                assert_eq!(trie.node(idx).item, item);
+            }
+        }
+        let with_a = trie.rules_with_consequent(name("a"));
+        assert!(!with_a.is_empty());
+        for (idx, _) in with_a {
+            assert_eq!(trie.node(idx).item, name("a"));
+            assert!(trie.node(idx).depth >= 2);
+        }
+    }
+
+    #[test]
+    fn support_of_walks_paths() {
+        let (db, trie) = paper_trie();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        assert_eq!(trie.support_of(&[name("f")]), Some(4));
+        assert_eq!(trie.support_of(&[name("f"), name("c")]), Some(3));
+        // order given should not matter
+        assert_eq!(trie.support_of(&[name("c"), name("f")]), Some(3));
+        assert_eq!(trie.support_of(&[name("d")]), None);
+    }
+
+    #[test]
+    fn memory_accounting_nonzero() {
+        let (_, trie) = paper_trie();
+        assert!(trie.memory_bytes() > trie.num_nodes() * 32);
+    }
+}

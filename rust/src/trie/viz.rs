@@ -1,0 +1,101 @@
+//! Visualization exports for the Trie of Rules — the paper's conclusion
+//! highlights the structure's value for "comprehensive visualization ...
+//! subjective exploration". DOT (Graphviz) and ASCII renderers.
+
+use crate::data::vocab::Vocab;
+use crate::trie::node::{NodeIdx, ROOT};
+use crate::trie::trie::TrieOfRules;
+
+/// Render the trie as a Graphviz DOT digraph. Nodes are labelled
+/// `item (count) / conf=..` like the paper's Fig. 6 annotation.
+pub fn to_dot(trie: &TrieOfRules, vocab: &Vocab) -> String {
+    let mut out = String::from("digraph trie_of_rules {\n  rankdir=TB;\n  node [shape=box, fontsize=10];\n");
+    out.push_str("  n0 [label=\"(root)\"];\n");
+    let mut stack: Vec<NodeIdx> = vec![ROOT];
+    while let Some(idx) = stack.pop() {
+        for &(item, child) in &trie.node(idx).children {
+            let cn = trie.node(child);
+            out.push_str(&format!(
+                "  n{child} [label=\"{} ({})\\nsup={:.3} conf={:.3} lift={:.2}\"];\n",
+                vocab.name(item),
+                cn.count,
+                cn.metrics.support,
+                cn.metrics.confidence,
+                cn.metrics.lift,
+            ));
+            out.push_str(&format!("  n{idx} -> n{child};\n"));
+            stack.push(child);
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Render the trie as an indented ASCII tree (CLI `tor show`).
+pub fn to_ascii(trie: &TrieOfRules, vocab: &Vocab, max_depth: usize) -> String {
+    let mut out = String::from("(root)\n");
+    fn rec(
+        trie: &TrieOfRules,
+        vocab: &Vocab,
+        idx: NodeIdx,
+        depth: usize,
+        max_depth: usize,
+        out: &mut String,
+    ) {
+        if depth > max_depth {
+            return;
+        }
+        for &(item, child) in &trie.node(idx).children {
+            let cn = trie.node(child);
+            out.push_str(&"  ".repeat(depth));
+            out.push_str(&format!(
+                "{} ({}) sup={:.3} conf={:.3}\n",
+                vocab.name(item),
+                cn.count,
+                cn.metrics.support,
+                cn.metrics.confidence
+            ));
+            rec(trie, vocab, child, depth + 1, max_depth, out);
+        }
+    }
+    rec(trie, vocab, ROOT, 1, max_depth, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::counts::{min_count, ItemOrder};
+    use crate::mining::fpgrowth::fpgrowth;
+
+    fn paper_trie() -> (crate::data::transaction::TransactionDb, TrieOfRules) {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        (db.clone(), TrieOfRules::from_frequent(&fi, &order).unwrap())
+    }
+
+    #[test]
+    fn dot_contains_every_node() {
+        let (db, trie) = paper_trie();
+        let dot = to_dot(&trie, db.vocab());
+        assert!(dot.starts_with("digraph"));
+        // one label line per non-root node plus the root
+        let labels = dot.matches("[label=").count();
+        assert_eq!(labels, trie.num_nodes() + 1);
+        let edges = dot.matches("->").count();
+        assert_eq!(edges, trie.num_nodes());
+    }
+
+    #[test]
+    fn ascii_respects_depth_cap() {
+        let (db, trie) = paper_trie();
+        let full = to_ascii(&trie, db.vocab(), usize::MAX);
+        let capped = to_ascii(&trie, db.vocab(), 1);
+        assert!(full.lines().count() > capped.lines().count());
+        // depth-1 render lists only root children (+ root line)
+        let root_children = trie.node(crate::trie::node::ROOT).children.len();
+        assert_eq!(capped.lines().count(), root_children + 1);
+    }
+}

@@ -1,0 +1,234 @@
+//! Dense fixed-capacity bitset over `u64` words.
+//!
+//! Used by the vertical miners (ECLAT, the Apriori bitset counter) to store
+//! per-item transaction-id lists, and by the synthetic generators. Hot
+//! operations are `and_count` (intersection cardinality without
+//! materializing) and in-place intersection — both branch-free loops the
+//! compiler auto-vectorizes.
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitset {
+    words: Vec<u64>,
+    /// Logical capacity in bits; trailing bits beyond `len` are kept zero.
+    len: usize,
+}
+
+impl Bitset {
+    /// All-zeros bitset with capacity for `len` bits.
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// `|self & other|` without allocating.
+    pub fn and_count(&self, other: &Bitset) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// `self &= other`.
+    pub fn and_assign(&mut self, other: &Bitset) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// New bitset `self & other`.
+    pub fn and(&self, other: &Bitset) -> Bitset {
+        let mut out = self.clone();
+        out.and_assign(other);
+        out
+    }
+
+    /// `self |= other`.
+    pub fn or_assign(&mut self, other: &Bitset) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Intersection cardinality of many bitsets (used for itemset support).
+    pub fn multi_and_count(sets: &[&Bitset]) -> usize {
+        match sets {
+            [] => 0,
+            [one] => one.count(),
+            [first, rest @ ..] => {
+                let words = first.words.len();
+                let mut total = 0usize;
+                for w in 0..words {
+                    let mut acc = first.words[w];
+                    for s in rest {
+                        acc &= s.words[w];
+                        if acc == 0 {
+                            break;
+                        }
+                    }
+                    total += acc.count_ones() as usize;
+                }
+                total
+            }
+        }
+    }
+
+    /// Iterator over set-bit indices, ascending.
+    pub fn iter_ones(&self) -> Ones<'_> {
+        Ones {
+            words: &self.words,
+            word_idx: 0,
+            current: self.words.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Iterator over set bits.
+pub struct Ones<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.current != 0 {
+                let bit = self.current.trailing_zeros() as usize;
+                self.current &= self.current - 1;
+                return Some(self.word_idx * 64 + bit);
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitset::new(130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(63);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(63) && b.get(64) && b.get(129));
+        assert_eq!(b.count(), 4);
+        b.clear(63);
+        assert!(!b.get(63));
+        assert_eq!(b.count(), 3);
+    }
+
+    #[test]
+    fn and_count_matches_materialized() {
+        let mut a = Bitset::new(200);
+        let mut b = Bitset::new(200);
+        for i in (0..200).step_by(3) {
+            a.set(i);
+        }
+        for i in (0..200).step_by(5) {
+            b.set(i);
+        }
+        let m = a.and(&b);
+        assert_eq!(a.and_count(&b), m.count());
+        // multiples of 15 under 200: 0,15,...,195 -> 14
+        assert_eq!(m.count(), 14);
+    }
+
+    #[test]
+    fn multi_and_count() {
+        let mut a = Bitset::new(100);
+        let mut b = Bitset::new(100);
+        let mut c = Bitset::new(100);
+        for i in 0..100 {
+            if i % 2 == 0 {
+                a.set(i);
+            }
+            if i % 3 == 0 {
+                b.set(i);
+            }
+            if i % 5 == 0 {
+                c.set(i);
+            }
+        }
+        // multiples of 30 under 100: 0, 30, 60, 90
+        assert_eq!(Bitset::multi_and_count(&[&a, &b, &c]), 4);
+        assert_eq!(Bitset::multi_and_count(&[&a]), 50);
+        assert_eq!(Bitset::multi_and_count(&[]), 0);
+    }
+
+    #[test]
+    fn iter_ones_ascending() {
+        let mut b = Bitset::new(300);
+        let idx = [0usize, 1, 63, 64, 65, 127, 128, 255, 299];
+        for &i in &idx {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, idx);
+    }
+
+    #[test]
+    fn or_assign() {
+        let mut a = Bitset::new(70);
+        let mut b = Bitset::new(70);
+        a.set(1);
+        b.set(69);
+        a.or_assign(&b);
+        assert!(a.get(1) && a.get(69));
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn empty_bitset() {
+        let b = Bitset::new(0);
+        assert_eq!(b.count(), 0);
+        assert_eq!(b.iter_ones().count(), 0);
+    }
+}

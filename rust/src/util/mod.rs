@@ -1,0 +1,9 @@
+//! Foundation utilities: deterministic RNG, bitsets, JSON, timing, and the
+//! in-house property-testing harness (offline builds vendor only the `xla`
+//! crate's closure — see DESIGN.md §3).
+
+pub mod bitset;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,194 @@
+//! Miniature property-based testing harness.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so the repo ships
+//! its own: a [`Gen`] wrapper around [`crate::util::rng::Rng`] plus
+//! [`for_all`], which runs a property over `n` random cases and, on failure,
+//! greedily shrinks the failing input via a user-supplied shrink function
+//! before panicking with the minimal counterexample.
+//!
+//! Used by the trie/mining invariant tests (DESIGN.md E9 and friends).
+
+use crate::util::rng::Rng;
+
+/// Test-case generator context.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint: generators should scale collection sizes by this.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// A vector of `len` items drawn by `f`, `len` in `[0, size]`.
+    pub fn vec_of<T>(&mut self, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.rng.below(self.size + 1);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs produced by `make`.
+///
+/// On failure, `shrink` is called repeatedly: it must return a list of
+/// strictly "smaller" candidate inputs; the first candidate that still fails
+/// becomes the new counterexample, until no candidate fails. Panics with the
+/// minimal counterexample (via `fmt`).
+pub fn for_all<T: Clone>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut make: impl FnMut(&mut Gen) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    fmt: impl Fn(&T) -> String,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    for case in 0..cases {
+        let mut g = Gen::new(seed.wrapping_add(case as u64 * 0x9E37), 16);
+        let input = make(&mut g);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut best = input;
+            let mut best_msg = first_msg;
+            let mut budget = 1000usize;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  input: {}\n  error: {best_msg}",
+                fmt(&best)
+            );
+        }
+    }
+}
+
+/// Convenience: shrink a `Vec<T>` by dropping halves, then single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    for i in 0..n.min(16) {
+        let mut c = v.to_vec();
+        c.remove(i);
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        for_all(
+            "reverse-reverse",
+            50,
+            42,
+            |g| g.vec_of(|g| g.usize_in(0, 100)),
+            |v| shrink_vec(v),
+            |v| format!("{v:?}"),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sum-under-10' failed")]
+    fn failing_property_panics_with_counterexample() {
+        for_all(
+            "sum-under-10",
+            100,
+            7,
+            |g| g.vec_of(|g| g.usize_in(0, 5)),
+            |v| shrink_vec(v),
+            |v| format!("{v:?}"),
+            |v| {
+                if v.iter().sum::<usize>() < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("sum = {}", v.iter().sum::<usize>()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_reduces_input() {
+        // Capture the panic message and assert the counterexample is small:
+        // minimal failing vec for "no element >= 3" shrinks to one element.
+        let result = std::panic::catch_unwind(|| {
+            for_all(
+                "no-elem-ge-3",
+                100,
+                11,
+                |g| g.vec_of(|g| g.usize_in(0, 10)),
+                |v| shrink_vec(v),
+                |v| format!("{v:?}"),
+                |v| {
+                    if v.iter().all(|&x| x < 3) {
+                        Ok(())
+                    } else {
+                        Err("elem >= 3".into())
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // input line should contain a single-element vec like "[7]"
+        let input_line = msg.lines().find(|l| l.contains("input:")).unwrap();
+        let open = input_line.find('[').unwrap();
+        let close = input_line.find(']').unwrap();
+        let body = &input_line[open + 1..close];
+        assert!(
+            !body.contains(','),
+            "expected single-element counterexample, got {input_line}"
+        );
+    }
+}

@@ -1,0 +1,294 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendor set has no `rand` crate, so the library ships its own
+//! small, well-known generators: [`SplitMix64`] for seeding and
+//! [`Xoshiro256StarStar`] (Blackman & Vigna) as the workhorse. Everything in
+//! the repo that consumes randomness (dataset generators, samplers, property
+//! tests, bench workloads) goes through [`Rng`], so a fixed seed reproduces a
+//! run bit-for-bit.
+
+/// SplitMix64: used to expand a single `u64` seed into generator state.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256**: fast, high-quality, 2^256-1 period.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256StarStar {
+    s: [u64; 4],
+}
+
+impl Xoshiro256StarStar {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+/// The RNG facade used across the repo.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    inner: Xoshiro256StarStar,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            inner: Xoshiro256StarStar::seed_from_u64(seed),
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.inner.next_u64()
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply trick: unbiased enough for simulation workloads.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        // For small k relative to n use rejection; otherwise shuffle a range.
+        if k * 4 <= n {
+            let mut seen = std::collections::HashSet::with_capacity(k);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let x = self.below(n);
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        } else {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all
+        }
+    }
+
+    /// Geometric-ish basket size: 1 + Binomial-approximated count, truncated.
+    pub fn basket_size(&mut self, mean: f64, max: usize) -> usize {
+        // Sample from a geometric distribution with the given mean, shifted
+        // to start at 1 and truncated at `max`. Matches the long-tailed
+        // basket-size histograms of real market-basket data.
+        let p = 1.0 / mean.max(1.0);
+        let u = self.f64().max(f64::MIN_POSITIVE);
+        let g = (u.ln() / (1.0 - p).ln()).floor() as usize + 1;
+        g.min(max).max(1)
+    }
+}
+
+/// Zipf (power-law) sampler over `[0, n)` using the rejection-inversion
+/// method of Hörmann & Derflinger — the classic item-popularity model for
+/// market-basket data.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: usize,
+    exponent: f64,
+    // Precomputed CDF for exactness at small n (we only need n <= ~4096).
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, exponent: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(exponent);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Self { n, exponent, cdf }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the most popular.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.n - 1),
+        }
+    }
+
+    /// Relative popularity of rank `k` (normalized to sum to 1).
+    pub fn pmf(&self, k: usize) -> f64 {
+        let prev = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - prev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the public-domain splitmix64.c with seed 0.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_covers_range_uniformly() {
+        let mut rng = Rng::new(9);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10)] += 1;
+        }
+        for &c in &counts {
+            // expect ~10_000 each; allow 15% slack
+            assert!((8_500..11_500).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Rng::new(5);
+        for k in [0, 1, 10, 50, 100] {
+            let s = rng.sample_indices(100, k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_heavier() {
+        let z = Zipf::new(100, 1.1);
+        let mut rng = Rng::new(11);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[80]);
+    }
+
+    #[test]
+    fn zipf_pmf_sums_to_one() {
+        let z = Zipf::new(50, 0.9);
+        let total: f64 = (0..50).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn basket_size_bounds() {
+        let mut rng = Rng::new(13);
+        for _ in 0..1000 {
+            let s = rng.basket_size(4.4, 32);
+            assert!((1..=32).contains(&s));
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Timing helpers shared by the bench harness and pipeline telemetry.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock time of `f`, returning `(result, elapsed)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A resettable stopwatch accumulating named laps (stage timings).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+            laps: Vec::new(),
+        }
+    }
+
+    /// Record the time since the previous lap (or start) under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.start;
+        self.start = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    pub fn total(&self) -> Duration {
+        self.laps.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+/// Human format for durations: picks ns/µs/ms/s.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0 || d.is_zero()); // just exercises the path
+    }
+
+    #[test]
+    fn stopwatch_accumulates_laps() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(1));
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert_eq!(sw.laps()[0].0, "a");
+        assert!(sw.total() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(5)), "5 ns");
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+    }
+}

@@ -1,0 +1,116 @@
+//! E8 (DESIGN.md): the paper's worked example, Figs. 4–7, end to end
+//! through the public API.
+
+use trie_of_rules::data::transaction::{paper_example_db, paper_example_db_fig4_filtered};
+use trie_of_rules::mining::apriori::BitsetCounter;
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::mining::fpmax::frequent_sequences;
+use trie_of_rules::rules::rule::Rule;
+use trie_of_rules::trie::compound::confidence_by_product;
+use trie_of_rules::trie::trie::{FindOutcome, TrieOfRules};
+use trie_of_rules::trie::ROOT;
+
+fn name(db: &trie_of_rules::data::transaction::TransactionDb, s: &str) -> u32 {
+    db.vocab().get(s).unwrap()
+}
+
+#[test]
+fn fig4a_dataset_shape() {
+    let db = paper_example_db();
+    assert_eq!(db.num_transactions(), 5);
+    // Fig 4(b): the six items with frequency >= 3.
+    let freq = db.item_frequencies();
+    let frequent: Vec<&str> = (0..db.num_items() as u32)
+        .filter(|&i| freq[i as usize] >= 3)
+        .map(|i| db.vocab().name(i))
+        .collect();
+    let expected: std::collections::HashSet<&str> =
+        ["f", "c", "a", "b", "m", "p"].into_iter().collect();
+    assert_eq!(frequent.into_iter().collect::<std::collections::HashSet<_>>(), expected);
+}
+
+#[test]
+fn fig4c_step1_sequences() {
+    let db = paper_example_db_fig4_filtered();
+    let (_, seqs) = frequent_sequences(&db, 0.3);
+    let mut names: Vec<Vec<&str>> = seqs
+        .iter()
+        .map(|(s, _)| s.iter().map(|&i| db.vocab().name(i)).collect())
+        .collect();
+    names.sort();
+    assert_eq!(
+        names,
+        vec![
+            vec!["c", "b"],
+            vec!["f", "b"],
+            vec!["f", "c", "a", "m", "p"]
+        ]
+    );
+    // All three sequences have support 2 (0.4).
+    assert!(seqs.iter().all(|&(_, c)| c == 2));
+}
+
+#[test]
+fn fig5_step2_trie_shape() {
+    // Building from the three sequences reproduces the paper's 8-node trie:
+    // root -> f(4) -> c(3) -> a(3) -> m(3) -> p(2); f -> b(2); c(4) -> b(2).
+    let db = paper_example_db_fig4_filtered();
+    let (order, seqs) = frequent_sequences(&db, 0.3);
+    let mut counter = BitsetCounter::new(&db);
+    let trie =
+        TrieOfRules::from_sequences(&seqs, &order, &mut counter, db.num_transactions()).unwrap();
+    assert_eq!(trie.num_nodes(), 8);
+
+    let f = trie.node(ROOT).child(name(&db, "f")).expect("f under root");
+    assert_eq!(trie.node(f).count, 4);
+    let c_under_f = trie.node(f).child(name(&db, "c")).expect("c under f");
+    assert_eq!(trie.node(c_under_f).count, 3);
+    let a = trie.node(c_under_f).child(name(&db, "a")).expect("a under c");
+    assert_eq!(trie.node(a).count, 3);
+    let m = trie.node(a).child(name(&db, "m")).expect("m under a");
+    assert_eq!(trie.node(m).count, 3);
+    let p = trie.node(m).child(name(&db, "p")).expect("p under m");
+    assert_eq!(trie.node(p).count, 2);
+    let b_under_f = trie.node(f).child(name(&db, "b")).expect("b under f");
+    assert_eq!(trie.node(b_under_f).count, 2);
+    let c_root = trie.node(ROOT).child(name(&db, "c")).expect("c under root");
+    assert_eq!(trie.node(c_root).count, 4);
+    let b_under_c = trie.node(c_root).child(name(&db, "b")).expect("b under c");
+    assert_eq!(trie.node(b_under_c).count, 2);
+}
+
+#[test]
+fn fig6_step3_node_a_metrics() {
+    // Node `a` on path f->c->a carries rule {f,c} => {a}:
+    // sup = 3/5, conf = 3/3 = 1, lift = 1 / (3/5) = 5/3.
+    let db = paper_example_db_fig4_filtered();
+    let fi = fpgrowth(&db, 0.3);
+    let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    let rule = Rule::from_ids(vec![name(&db, "f"), name(&db, "c")], vec![name(&db, "a")]);
+    match trie.find_rule(&rule) {
+        FindOutcome::Found(m) => {
+            assert!((m.support - 0.6).abs() < 1e-12);
+            assert!((m.confidence - 1.0).abs() < 1e-12);
+            assert!((m.lift - 5.0 / 3.0).abs() < 1e-9);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn fig7_eq4_compound_consequent() {
+    let db = paper_example_db_fig4_filtered();
+    let fi = fpgrowth(&db, 0.3);
+    let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    // {f} => {c,a}: conf = sup{f,c,a}/sup{f} = 3/4; product form must agree.
+    let rule = Rule::from_ids(vec![name(&db, "f")], vec![name(&db, "c"), name(&db, "a")]);
+    let product = confidence_by_product(&trie, &rule).unwrap();
+    assert!((product - 0.75).abs() < 1e-12);
+    match trie.find_rule(&rule) {
+        FindOutcome::Found(m) => assert!((m.confidence - product).abs() < 1e-12),
+        other => panic!("{other:?}"),
+    }
+}

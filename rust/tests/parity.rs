@@ -1,0 +1,131 @@
+//! Trie ⇄ dataframe ⇄ ap-genrules parity: the two representations must
+//! answer every evaluated operation identically over the same ruleset —
+//! the precondition for every figure's timing comparison to be meaningful.
+
+use std::collections::HashMap;
+
+use trie_of_rules::bench_support::workloads::Workload;
+use trie_of_rules::data::generator::GeneratorConfig;
+use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::rules::rule::Rule;
+use trie_of_rules::rules::rulegen::{generate_rules, RuleGenConfig};
+use trie_of_rules::trie::trie::FindOutcome;
+
+fn workload(seed: u64) -> Workload {
+    let mut cfg = GeneratorConfig::tiny(seed);
+    cfg.num_transactions = 400;
+    Workload::build("parity", cfg.generate(), 0.04)
+}
+
+#[test]
+fn every_representable_rule_found_identically_in_both() {
+    let w = workload(1);
+    assert!(w.ruleset.len() > 50, "workload too small: {}", w.ruleset.len());
+    for sr in w.ruleset.iter() {
+        let trie_m = match w.trie.find_rule(&sr.rule) {
+            FindOutcome::Found(m) => m,
+            other => panic!("trie lost rule {}: {other:?}", sr.rule),
+        };
+        let (_, frame_m) = w.frame.find(&sr.rule).expect("frame lost rule");
+        assert!((trie_m.support - frame_m.support).abs() < 1e-12);
+        assert!((trie_m.confidence - frame_m.confidence).abs() < 1e-12);
+        assert!((trie_m.lift - frame_m.lift).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn trie_rules_are_a_metric_exact_subset_of_ap_genrules() {
+    // Every trie-representable rule must appear in the full ap-genrules
+    // output with identical metrics (paper §3.3: the trie stores the
+    // prefix-split subset).
+    let w = workload(2);
+    let full = generate_rules(&w.frequent, RuleGenConfig::default());
+    let index: HashMap<&Rule, &trie_of_rules::rules::metrics::RuleMetrics> =
+        full.iter().map(|sr| (&sr.rule, &sr.metrics)).collect();
+    let mut checked = 0;
+    w.trie.for_each_rule(|rule, m| {
+        let full_m = index
+            .get(rule)
+            .unwrap_or_else(|| panic!("rule {rule} missing from ap-genrules"));
+        assert!((m.support - full_m.support).abs() < 1e-12, "{rule}");
+        assert!((m.confidence - full_m.confidence).abs() < 1e-12, "{rule}");
+        assert!((m.lift - full_m.lift).abs() < 1e-9, "{rule}");
+        assert!((m.leverage - full_m.leverage).abs() < 1e-12, "{rule}");
+        checked += 1;
+    });
+    assert_eq!(checked, w.ruleset.len());
+    assert!(full.len() >= checked);
+}
+
+#[test]
+fn top_n_populations_agree() {
+    let w = workload(3);
+    for metric in [Metric::Support, Metric::Confidence] {
+        for k in [1, 7, w.ruleset.len() / 10, w.ruleset.len()] {
+            let k = k.max(1);
+            let trie_vals: Vec<f64> = w
+                .trie
+                .top_n_split_rules(metric, k)
+                .iter()
+                .map(|&(_, v)| v)
+                .collect();
+            let frame_vals: Vec<f64> =
+                w.frame.top_n(metric, k).iter().map(|&(_, v)| v).collect();
+            assert_eq!(trie_vals.len(), frame_vals.len());
+            for (a, b) in trie_vals.iter().zip(&frame_vals) {
+                assert!((a - b).abs() < 1e-12, "metric {metric:?} k {k}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn traversal_checksums_agree() {
+    let w = workload(4);
+    let mut trie_sup = 0.0;
+    let mut trie_conf = 0.0;
+    let mut trie_count = 0usize;
+    w.trie.for_each_split(|_, _, s, c| {
+        trie_sup += s;
+        trie_conf += c;
+        trie_count += 1;
+    });
+    let mut frame_sup = 0.0;
+    let mut frame_conf = 0.0;
+    let mut frame_count = 0usize;
+    w.frame.for_each_row(|_, _, _, m| {
+        frame_sup += m.support;
+        frame_conf += m.confidence;
+        frame_count += 1;
+    });
+    assert_eq!(trie_count, frame_count);
+    assert!((trie_sup - frame_sup).abs() < 1e-9);
+    assert!((trie_conf - frame_conf).abs() < 1e-9);
+}
+
+#[test]
+fn interleaved_rules_are_flagged_not_representable_and_exist_in_full_set() {
+    // Rules the trie cannot represent (antecedent/consequent interleaved in
+    // frequency order) still exist in ap-genrules; the trie must answer
+    // NotRepresentable, never a wrong metric.
+    let w = workload(5);
+    let full = w.full_ruleset(0.0);
+    let mut not_rep = 0;
+    for sr in full.iter() {
+        match w.trie.find_rule(&sr.rule) {
+            FindOutcome::Found(m) => {
+                assert!((m.confidence - sr.metrics.confidence).abs() < 1e-12, "{}", sr.rule);
+            }
+            FindOutcome::NotRepresentable => not_rep += 1,
+            FindOutcome::Absent => panic!("frequent rule {} reported Absent", sr.rule),
+        }
+    }
+    assert!(not_rep > 0, "expected some non-representable rules");
+    assert!(
+        full.len() - not_rep == w.ruleset.len(),
+        "representable count mismatch: {} - {} != {}",
+        full.len(),
+        not_rep,
+        w.ruleset.len()
+    );
+}

@@ -1,0 +1,127 @@
+//! End-to-end coordinator tests: streaming pipeline under tight
+//! backpressure, the query service over TCP, and (when artifacts exist)
+//! the XLA counting backend inside the full pipeline.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use trie_of_rules::coordinator::config::{CounterKind, PipelineConfig};
+use trie_of_rules::coordinator::pipeline::{run, Source};
+use trie_of_rules::coordinator::service::{serve_tcp, QueryEngine};
+use trie_of_rules::data::generator::GeneratorConfig;
+use trie_of_rules::mining::MinerKind;
+use trie_of_rules::runtime::{default_artifacts_dir, Runtime};
+
+#[test]
+fn pipeline_under_tight_backpressure_is_lossless() {
+    // Queue capacity 1, chunk 7, 6 workers: maximum contention; the output
+    // must still match direct mining exactly.
+    let gen = GeneratorConfig::tiny(77);
+    let direct = trie_of_rules::mining::fpgrowth::fpgrowth(&gen.generate(), 0.05);
+    let cfg = PipelineConfig {
+        minsup: 0.05,
+        miner: MinerKind::FpGrowth,
+        workers: 6,
+        chunk_size: 7,
+        queue_capacity: 1,
+        ..Default::default()
+    };
+    let out = run(Source::Generated(gen), &cfg, None).unwrap();
+    let mut got = out.frequent.clone();
+    got.canonicalize();
+    let mut want = direct.clone();
+    want.canonicalize();
+    assert_eq!(got.sets, want.sets);
+    assert_eq!(out.report.num_transactions, 200);
+}
+
+#[test]
+fn all_miners_produce_equivalent_tries() {
+    let gen = GeneratorConfig::tiny(88);
+    let mut reference: Option<Vec<(String, u64)>> = None;
+    for miner in [MinerKind::Apriori, MinerKind::FpGrowth, MinerKind::Eclat] {
+        let cfg = PipelineConfig {
+            minsup: 0.06,
+            miner,
+            ..Default::default()
+        };
+        let out = run(Source::Generated(gen.clone()), &cfg, None).unwrap();
+        // Canonical signature: every representable rule + its support count.
+        let mut sig: Vec<(String, u64)> = Vec::new();
+        out.trie.for_each_split(|a, c, sup, _| {
+            sig.push((
+                format!("{a:?}=>{c:?}"),
+                (sup * out.db.num_transactions() as f64).round() as u64,
+            ));
+        });
+        sig.sort();
+        match &reference {
+            None => reference = Some(sig),
+            Some(r) => assert_eq!(r, &sig, "miner {miner:?} built a different trie"),
+        }
+    }
+}
+
+#[test]
+fn tcp_service_answers_pipeline_queries() {
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = PipelineConfig {
+        minsup: 0.05,
+        ..Default::default()
+    };
+    let out = run(Source::Generated(GeneratorConfig::tiny(99)), &cfg, None).unwrap();
+    let represented = out.trie.collect_rules();
+    let (rule, metrics) = &represented[0];
+    let a_names: Vec<&str> = rule
+        .antecedent
+        .items()
+        .iter()
+        .map(|&i| out.db.vocab().name(i))
+        .collect();
+    let c_names: Vec<&str> = rule
+        .consequent
+        .items()
+        .iter()
+        .map(|&i| out.db.vocab().name(i))
+        .collect();
+
+    let engine = Arc::new(QueryEngine::new(out.trie, out.db.vocab().clone()));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let addr = serve_tcp(engine, "127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let cmd = format!("FIND {} => {}\nQUIT\n", a_names.join(","), c_names.join(","));
+    stream.write_all(cmd.as_bytes()).unwrap();
+    let reader = BufReader::new(stream);
+    let lines: Vec<String> = reader.lines().map_while(|l| l.ok()).collect();
+    assert!(lines[0].starts_with("FOUND"), "{lines:?}");
+    let expect = format!("conf={:.6}", metrics.confidence);
+    assert!(lines[0].contains(&expect), "{} !~ {expect}", lines[0]);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn xla_counter_pipeline_matches_bitset_pipeline() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load(&dir).unwrap();
+    let gen = GeneratorConfig::tiny(111);
+    let base_cfg = PipelineConfig {
+        minsup: 0.06,
+        miner: MinerKind::Apriori,
+        ..Default::default()
+    };
+    let bitset_out = run(Source::Generated(gen.clone()), &base_cfg, None).unwrap();
+    let mut xla_cfg = base_cfg.clone();
+    xla_cfg.counter = CounterKind::Xla;
+    let xla_out = run(Source::Generated(gen), &xla_cfg, Some(&rt)).unwrap();
+    let mut a = bitset_out.frequent.clone();
+    let mut b = xla_out.frequent.clone();
+    a.canonicalize();
+    b.canonicalize();
+    assert_eq!(a.sets, b.sets, "XLA-counted pipeline diverged");
+    assert_eq!(bitset_out.trie.num_nodes(), xla_out.trie.num_nodes());
+}

@@ -1,0 +1,217 @@
+//! Property-based invariant tests (E9 + structural invariants), using the
+//! in-house harness in `util::proptest`.
+
+use trie_of_rules::baseline::dataframe::RuleFrame;
+use trie_of_rules::bench_support::workloads::Workload;
+use trie_of_rules::data::generator::GeneratorConfig;
+use trie_of_rules::data::transaction::TransactionDb;
+use trie_of_rules::data::vocab::Vocab;
+use trie_of_rules::mining::eclat::eclat;
+use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::trie::compound::verify_eq4;
+use trie_of_rules::trie::ROOT;
+use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
+
+/// Random tiny transaction database from a seed-driven generator.
+fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
+    let num_items = g.usize_in(3, 12);
+    let num_tx = g.usize_in(4, 60);
+    (0..num_tx)
+        .map(|_| {
+            let len = g.usize_in(1, num_items.min(6) + 1);
+            (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
+        })
+        .collect()
+}
+
+fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
+    if rows.is_empty() {
+        return None;
+    }
+    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
+    let mut b = TransactionDb::builder(Vocab::synthetic(max_item as usize + 1));
+    for r in rows {
+        b.push_ids(r.clone());
+    }
+    Some(b.build())
+}
+
+#[test]
+fn prop_eq4_product_equals_ratio_everywhere() {
+    for_all(
+        "eq4-product==ratio",
+        60,
+        0xE94,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("prop", db, 0.15);
+            let mut bad = None;
+            w.trie.for_each_rule(|rule, _| {
+                if bad.is_none() && !verify_eq4(&w.trie, rule, 1e-9) {
+                    bad = Some(rule.clone());
+                }
+            });
+            match bad {
+                None => Ok(()),
+                Some(r) => Err(format!("Eq.4 violated for {r}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_support_is_antimonotone_along_paths() {
+    for_all(
+        "path-support-antimonotone",
+        60,
+        0xA11,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("prop", db, 0.1);
+            for idx in 1..=w.trie.num_nodes() {
+                let node = w.trie.node(idx as u32);
+                let parent = node.parent;
+                if parent != ROOT && node.count > w.trie.node(parent).count {
+                    return Err(format!(
+                        "child count {} > parent count {} at node {idx}",
+                        node.count,
+                        w.trie.node(parent).count
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_find_rule_agrees_with_direct_counting() {
+    for_all(
+        "find-rule==direct-count",
+        40,
+        0xF1D,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let n = db.num_transactions() as f64;
+            let w = Workload::build("prop", db, 0.15);
+            let mut err = None;
+            w.trie.for_each_rule(|rule, m| {
+                if err.is_some() {
+                    return;
+                }
+                let count = |items: &[u32]| {
+                    w.db.iter()
+                        .filter(|tx| items.iter().all(|i| tx.contains(i)))
+                        .count() as f64
+                };
+                let all: Vec<u32> = rule.all_items().items().to_vec();
+                let sup = count(&all) / n;
+                let conf = count(&all) / count(rule.antecedent.items());
+                if (m.support - sup).abs() > 1e-9 || (m.confidence - conf).abs() > 1e-9 {
+                    err = Some(format!(
+                        "{rule}: trie sup {} conf {} vs direct {sup} {conf}",
+                        m.support, m.confidence
+                    ));
+                }
+            });
+            err.map_or(Ok(()), Err)
+        },
+    );
+}
+
+#[test]
+fn prop_miners_agree() {
+    for_all(
+        "fpgrowth==eclat",
+        40,
+        0x3A6E,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let a = fpgrowth(&db, 0.2);
+            let b = eclat(&db, 0.2);
+            if a.sets == b.sets {
+                Ok(())
+            } else {
+                Err(format!("{} vs {} itemsets", a.len(), b.len()))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_topn_matches_frame_topn() {
+    for_all(
+        "trie-topn==frame-topn",
+        30,
+        0x70B,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("prop", db, 0.12);
+            if w.ruleset.is_empty() {
+                return Ok(());
+            }
+            let k = (w.ruleset.len() / 3).max(1);
+            for metric in [Metric::Support, Metric::Confidence] {
+                let t: Vec<f64> = w
+                    .trie
+                    .top_n_split_rules(metric, k)
+                    .iter()
+                    .map(|&(_, v)| v)
+                    .collect();
+                let f: Vec<f64> = w.frame.top_n(metric, k).iter().map(|&(_, v)| v).collect();
+                if t.len() != f.len()
+                    || t.iter().zip(&f).any(|(a, b)| (a - b).abs() > 1e-12)
+                {
+                    return Err(format!("top-{k} by {metric:?} differs: {t:?} vs {f:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_frame_roundtrips_rules() {
+    for_all(
+        "frame-find-roundtrip",
+        30,
+        0xF0A,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("prop", db, 0.15);
+            let frame = RuleFrame::from_ruleset(&w.ruleset);
+            for sr in w.ruleset.iter() {
+                match frame.find(&sr.rule) {
+                    Some((row, m)) => {
+                        if frame.rule_at(row) != sr.rule
+                            || (m.support - sr.metrics.support).abs() > 1e-12
+                        {
+                            return Err(format!("roundtrip mismatch for {}", sr.rule));
+                        }
+                    }
+                    None => return Err(format!("rule {} lost", sr.rule)),
+                }
+            }
+            Ok(())
+        },
+    );
+}

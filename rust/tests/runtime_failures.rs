@@ -1,0 +1,105 @@
+//! Failure injection for the PJRT runtime loader: corrupt or inconsistent
+//! artifacts must fail loudly at load time, never at query time.
+
+use std::path::PathBuf;
+
+use trie_of_rules::runtime::{default_artifacts_dir, Manifest, Runtime};
+
+fn have_artifacts() -> Option<PathBuf> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tor_rtfail_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_artifact_file_is_reported() {
+    let Some(src) = have_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = scratch("missing");
+    std::fs::copy(src.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    // No .hlo.txt files copied: manifest validation must fail.
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("missing"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_time() {
+    let Some(src) = have_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = scratch("corrupt");
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dir.join(entry.file_name())).unwrap();
+    }
+    // Truncate one artifact mid-instruction.
+    let victim = dir.join("support_count.hlo.txt");
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 3]).unwrap();
+    let err = Runtime::load(&dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("support_count") || msg.contains("parse") || msg.contains("HLO"),
+        "unhelpful error: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_without_shapes_is_rejected() {
+    let dir = scratch("noshapes");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "hlo-text", "artifacts": {}}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("shapes"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_format_tag_is_rejected() {
+    let dir = scratch("badformat");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "protobuf", "shapes": {"nt":1,"ni":1,"nk":1,"nr":1}, "artifacts": {}}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("format"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn execute_rejects_wrong_input_sizes() {
+    let Some(src) = have_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&src).unwrap();
+    let s = rt.manifest().shapes;
+    let too_small = vec![0f32; 8];
+    let err = rt
+        .execute_f32(
+            "support_count",
+            &[
+                (&too_small, &[s.nt as i64, s.ni as i64]),
+                (&too_small, &[s.nk as i64, s.ni as i64]),
+                (&too_small, &[s.nk as i64]),
+            ],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("mismatch"), "{err}");
+    let err = rt.execute_f32("no_such_artifact", &[]).unwrap_err();
+    assert!(err.to_string().contains("not loaded"), "{err}");
+}
