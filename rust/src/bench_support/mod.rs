@@ -8,4 +8,6 @@ pub mod workloads;
 
 pub use harness::{bench, bench_each, speedup, BenchConfig, BenchResult};
 pub use report::Report;
-pub use workloads::{groceries, retail_scaled, Workload, FIG10_SWEEP};
+pub use workloads::{
+    groceries, retail_scaled, rql_queries, QuerySkew, RqlWorkload, Workload, FIG10_SWEEP,
+};

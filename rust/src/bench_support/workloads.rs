@@ -13,10 +13,12 @@ use crate::data::transaction::TransactionDb;
 use crate::mining::counts::{min_count, ItemOrder};
 use crate::mining::fpgrowth::fpgrowth;
 use crate::mining::itemset::FrequentItemsets;
+use crate::rules::metrics::Metric;
 use crate::rules::rule::Rule;
 use crate::rules::rulegen::{generate_rules, RuleGenConfig};
 use crate::rules::ruleset::{RuleSet, ScoredRule};
 use crate::trie::trie::TrieOfRules;
+use crate::util::rng::{Rng, Zipf};
 
 /// A fully-built evaluation workload: both representations over one ruleset.
 pub struct Workload {
@@ -97,6 +99,85 @@ pub fn retail_scaled(tx_scale: f64, minsup: f64) -> Workload {
 /// The paper's minsup sweep for Figs. 10–11 (0.005 → 0.0135).
 pub const FIG10_SWEEP: [f64; 8] = [0.005, 0.0062, 0.0074, 0.0086, 0.0098, 0.011, 0.0123, 0.0135];
 
+// ---------------------------------------------------------------------
+// RQL query workloads (benches/rql_throughput.rs)
+// ---------------------------------------------------------------------
+
+/// How consequent items are drawn for generated RQL queries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuerySkew {
+    /// Every frequent item equally likely — the synthetic-benchmark
+    /// default, but unlike real query traffic.
+    Uniform,
+    /// Zipf(s) over frequency rank: rank-0 (the most frequent item) is the
+    /// hottest consequent, modeling the head-heavy traffic a production
+    /// rule service sees (most questions are about the popular items).
+    Zipf(f64),
+}
+
+/// A generated stream of RQL query strings over one [`Workload`].
+#[derive(Debug, Clone)]
+pub struct RqlWorkload {
+    pub name: String,
+    pub skew: QuerySkew,
+    pub queries: Vec<String>,
+}
+
+/// Generate `n` RQL queries against `w`'s vocabulary, deterministic in
+/// `seed`. The mix models interactive knowledge extraction:
+///
+/// * every query anchors on a consequent (`conseq = <item>`), drawn
+///   uniformly or Zipf-skewed toward hot items;
+/// * ~half constrain a quality metric (`confidence >= t` or `lift >= t`);
+/// * ~half ask for a ranking (`SORT BY <metric> DESC LIMIT k`) — the
+///   shape that exercises the executor's top-k heap pushdown;
+/// * ~a quarter add a `support >=` bound, exercising subtree pruning.
+pub fn rql_queries(w: &Workload, n: usize, skew: QuerySkew, seed: u64) -> RqlWorkload {
+    let items = w.order.frequent_items();
+    assert!(!items.is_empty(), "workload has no frequent items");
+    let mut rng = Rng::new(seed);
+    let zipf = match skew {
+        QuerySkew::Uniform => None,
+        QuerySkew::Zipf(s) => Some(Zipf::new(items.len(), s)),
+    };
+    let sort_metrics = [Metric::Lift, Metric::Confidence, Metric::Support];
+    let queries = (0..n)
+        .map(|_| {
+            let rank = match &zipf {
+                None => rng.below(items.len()),
+                Some(z) => z.sample(&mut rng),
+            };
+            let name = w.db.vocab().name(items[rank]);
+            let mut q = format!("RULES WHERE conseq = '{name}'");
+            if rng.chance(0.5) {
+                let metric = if rng.chance(0.5) { "confidence" } else { "lift" };
+                let t = (rng.f64() * 0.9 * 100.0).round() / 100.0;
+                q.push_str(&format!(" AND {metric} >= {t}"));
+            }
+            if rng.chance(0.25) {
+                // A bound just above the mining threshold so pruning has
+                // something to cut without emptying every result.
+                let t = w.minsup * (1.0 + rng.f64() * 3.0);
+                q.push_str(&format!(" AND support >= {t:.6}"));
+            }
+            if rng.chance(0.5) {
+                let m = sort_metrics[rng.below(sort_metrics.len())];
+                let k = 1 + rng.below(50);
+                q.push_str(&format!(" SORT BY {} DESC LIMIT {k}", m.name()));
+            }
+            q
+        })
+        .collect();
+    RqlWorkload {
+        name: match skew {
+            QuerySkew::Uniform => format!("{}-rql-uniform", w.name),
+            QuerySkew::Zipf(s) => format!("{}-rql-zipf{s}", w.name),
+        },
+        skew,
+        queries,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +205,51 @@ mod tests {
         let w = Workload::build("tiny", db, 0.06);
         let full = w.full_ruleset(0.0);
         assert!(full.len() >= w.ruleset.len());
+    }
+
+    #[test]
+    fn rql_queries_parse_and_run_on_both_backends() {
+        let db = GeneratorConfig::tiny(9).generate();
+        let w = Workload::build("tiny", db, 0.06);
+        for skew in [QuerySkew::Uniform, QuerySkew::Zipf(1.1)] {
+            let qs = rql_queries(&w, 25, skew, 0xBE7);
+            assert_eq!(qs.queries.len(), 25);
+            for q in &qs.queries {
+                let t = crate::query::query_trie(&w.trie, w.db.vocab(), q)
+                    .unwrap_or_else(|e| panic!("trie failed on `{q}`: {e:#}"))
+                    .into_rows();
+                let f = crate::query::query_frame(&w.frame, w.db.vocab(), q)
+                    .unwrap_or_else(|e| panic!("frame failed on `{q}`: {e:#}"))
+                    .into_rows();
+                assert_eq!(t.rows, f.rows, "parity broke on `{q}`");
+            }
+        }
+    }
+
+    #[test]
+    fn rql_queries_are_deterministic_and_zipf_is_head_heavy() {
+        let db = GeneratorConfig::tiny(9).generate();
+        let w = Workload::build("tiny", db, 0.06);
+        let a = rql_queries(&w, 40, QuerySkew::Zipf(1.2), 7);
+        let b = rql_queries(&w, 40, QuerySkew::Zipf(1.2), 7);
+        assert_eq!(a.queries, b.queries);
+
+        // The hottest item should anchor more zipf queries than uniform
+        // ones (statistical, but with a wide margin at these sizes).
+        let hottest = w.db.vocab().name(w.order.frequent_items()[0]).to_string();
+        let hits = |qs: &RqlWorkload| {
+            qs.queries
+                .iter()
+                .filter(|q| q.contains(&format!("'{hottest}'")))
+                .count()
+        };
+        let uni = rql_queries(&w, 400, QuerySkew::Uniform, 11);
+        let zip = rql_queries(&w, 400, QuerySkew::Zipf(1.3), 11);
+        assert!(
+            hits(&zip) > hits(&uni),
+            "zipf {} vs uniform {} hits on `{hottest}`",
+            hits(&zip),
+            hits(&uni)
+        );
     }
 }

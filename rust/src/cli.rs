@@ -6,7 +6,7 @@
 //!              [--minsup F] [--minconf F] [--miner M] [--counter C]
 //!              [--workers N] [--config FILE] [--set key=value]...
 //!              [--artifacts DIR]
-//! tor query    <pipeline opts> --cmd "FIND f,c => a" [--cmd ...]
+//! tor query    <pipeline opts> --cmd "RULES WHERE conseq = a" [--cmd ...]
 //! tor serve    <pipeline opts> --port P
 //! tor show     <pipeline opts> [--depth N]
 //! tor dot      <pipeline opts> [--out FILE]
@@ -124,6 +124,18 @@ USAGE:
   tor pipeline [opts] [--save-trie FILE]   run the pipeline, print the report
   tor query [opts] --cmd CMD...            run pipeline, execute query commands
         [--load-trie FILE]                 ...or serve them from a saved trie
+
+QUERY COMMANDS (RQL — see DESIGN.md §7-8):
+  RULES [WHERE pred [AND pred]...] [SORT BY metric [ASC|DESC]] [LIMIT k]
+      pred: conseq = item | conseq CONTAINS item
+          | antecedent CONTAINS item | <metric> >=|>|<=|<|= <number>
+      e.g. \"RULES WHERE conseq = milk AND confidence >= 0.6 \\
+            SORT BY lift DESC LIMIT 20\"
+  EXPLAIN RULES ...              print the chosen plan (access path, prune,
+                                 pushdown) instead of executing
+  FIND a,b => c | SUPPORT a,b | TOP metric k | CONSEQ c | STATS
+                                 legacy point commands (TOP and CONSEQ are
+                                 sugar desugared to RQL)
   tor serve [opts] --port P      run pipeline, serve the TCP query protocol
   tor show [opts] [--depth N]    render the trie as an ASCII tree
   tor dot  [opts] [--out FILE]   export the trie as Graphviz DOT

@@ -6,15 +6,25 @@
 //!   one response per line, so the structure is queryable from anywhere
 //!   without Python ever entering the request path.
 //!
-//! Protocol:
+//! Protocol (full grammar + wire format in DESIGN.md §8):
 //! ```text
-//! FIND a,b => c           -> FOUND sup=.. conf=.. lift=..   | ABSENT | NOTREP
-//! TOP <metric> <k>        -> k lines `rule sup conf metric`
-//! SUPPORT a,b             -> SUPPORT <count>                | ABSENT
-//! CONSEQ c                -> rules with consequent c
-//! STATS                   -> node/rule/memory counters
+//! RULES [WHERE ...] [SORT BY ...] [LIMIT k]  -> RQL result rows
+//! EXPLAIN RULES ...        -> the planned access path, no execution
+//! FIND a,b => c            -> FOUND sup=.. conf=.. lift=..  | ABSENT | NOTREP
+//! TOP <metric> <k>         -> sugar for `RULES SORT BY <metric> DESC LIMIT k`
+//! CONSEQ c                 -> sugar for `RULES WHERE conseq = c`
+//! SUPPORT a,b              -> SUPPORT <count>               | ABSENT
+//! STATS                    -> node/rule/memory counters
 //! QUIT
 //! ```
+//!
+//! `RULES`/`EXPLAIN` route through the [`crate::query`] engine (parser →
+//! trie-aware planner → streaming executor). `TOP` and `CONSEQ` are kept
+//! as legacy sugar: they desugar to the RQL AST and run through the same
+//! engine, only their response formatting is bespoke. `FIND` and
+//! `SUPPORT` stay native point lookups — they answer in O(path) via
+//! [`TrieOfRules::find_rule`] and need the three-way
+//! FOUND/ABSENT/NOTREP distinction that a row-set query cannot express.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,6 +34,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::data::vocab::Vocab;
+use crate::query::ast::{Pred, Query as RqlQuery, SortSpec};
+use crate::query::exec::{execute_trie, QueryOutput, Row};
 use crate::rules::metrics::Metric;
 use crate::rules::rule::Rule;
 use crate::trie::trie::{FindOutcome, TrieOfRules};
@@ -58,6 +70,7 @@ impl QueryEngine {
         let line = line.trim();
         let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
         match cmd.to_ascii_uppercase().as_str() {
+            "RULES" | "EXPLAIN" => self.cmd_rql(line),
             "FIND" => self.cmd_find(rest),
             "TOP" => self.cmd_top(rest),
             "SUPPORT" => self.cmd_support(rest),
@@ -65,6 +78,47 @@ impl QueryEngine {
             "STATS" => self.cmd_stats(),
             "QUIT" => "BYE".to_string(),
             other => format!("ERR unknown command `{other}`"),
+        }
+    }
+
+    /// Execute a full RQL line through the query engine.
+    fn cmd_rql(&self, line: &str) -> String {
+        let query = match crate::query::parser::parse(line) {
+            Ok(q) => q,
+            Err(e) => return format!("ERR {e:#}"),
+        };
+        match execute_trie(&self.trie, &self.vocab, &query) {
+            Err(e) => format!("ERR {e:#}"),
+            Ok(QueryOutput::Explain(text)) => {
+                // Self-delimiting like every multi-line response: the
+                // header carries the body's line count.
+                let body = text.trim_end();
+                format!("EXPLAIN {}\n{body}", body.lines().count())
+            }
+            Ok(QueryOutput::Rows(rs)) => {
+                let mut out = format!("RULES {}\n", rs.rows.len());
+                let extra = query
+                    .sort
+                    .map(|s| s.metric)
+                    .filter(|m| {
+                        !matches!(*m, Metric::Support | Metric::Confidence | Metric::Lift)
+                    });
+                for row in &rs.rows {
+                    out.push_str(&format!(
+                        "  {} sup={:.6} conf={:.6} lift={:.4}",
+                        row.rule.display(&self.vocab),
+                        row.metrics.support,
+                        row.metrics.confidence,
+                        row.metrics.lift
+                    ));
+                    if let Some(m) = extra {
+                        out.push_str(&format!(" {}={:.6}", m.name(), row.metrics.get(m)));
+                    }
+                    out.push('\n');
+                }
+                out.pop();
+                out
+            }
         }
     }
 
@@ -101,6 +155,20 @@ impl QueryEngine {
         }
     }
 
+    /// Desugar a legacy command straight to the RQL AST (no text
+    /// round-trip, so item names never need re-quoting) and execute it.
+    fn run_desugared(&self, query: &RqlQuery) -> Result<Vec<Row>, String> {
+        match execute_trie(&self.trie, &self.vocab, query) {
+            Ok(QueryOutput::Rows(rs)) => Ok(rs.rows),
+            Ok(QueryOutput::Explain(_)) => unreachable!("desugared commands never explain"),
+            Err(e) => Err(format!("ERR {e:#}")),
+        }
+    }
+
+    /// Legacy sugar: `TOP m k` desugars to `RULES SORT BY m DESC LIMIT k`
+    /// and runs through the RQL engine (response format unchanged). The
+    /// population is every representable rule, so compound-consequent
+    /// rules rank too (the pre-RQL command saw stored node-rules only).
     fn cmd_top(&self, rest: &str) -> String {
         let mut parts = rest.split_whitespace();
         let Some(metric) = parts.next().and_then(Metric::parse) else {
@@ -109,23 +177,26 @@ impl QueryEngine {
         let Some(k) = parts.next().and_then(|s| s.parse::<usize>().ok()) else {
             return "ERR usage: TOP <metric> <k>".to_string();
         };
-        let top = self.trie.top_n(metric, k);
-        let mut out = format!("TOP {} {}\n", metric.name(), top.len());
-        for (idx, value) in top {
-            let path = self.trie.path_items(idx);
-            let (a, c) = path.split_at(path.len() - 1);
-            let names = |xs: &[u32]| {
-                xs.iter()
-                    .map(|&i| self.vocab.name(i))
-                    .collect::<Vec<_>>()
-                    .join(",")
-            };
+        let query = RqlQuery {
+            explain: false,
+            preds: Vec::new(),
+            sort: Some(SortSpec {
+                metric,
+                descending: true,
+            }),
+            limit: Some(k),
+        };
+        let rows = match self.run_desugared(&query) {
+            Ok(rows) => rows,
+            Err(e) => return e,
+        };
+        let mut out = format!("TOP {} {}\n", metric.name(), rows.len());
+        for row in rows {
             out.push_str(&format!(
-                "  {{{}}} => {{{}}} {}={:.6}\n",
-                names(a),
-                names(c),
+                "  {} {}={:.6}\n",
+                row.rule.display(&self.vocab),
                 metric.name(),
-                value
+                row.metrics.get(metric)
             ));
         }
         out.pop();
@@ -143,24 +214,36 @@ impl QueryEngine {
         }
     }
 
+    /// Legacy sugar: `CONSEQ c` desugars to `RULES WHERE conseq = c` — the
+    /// planner answers it via the consequent header-list access path, the
+    /// same structure `rules_with_consequent` read directly. Desugaring is
+    /// AST-level, so item names the RQL surface syntax cannot quote (e.g.
+    /// containing `'`) still resolve exactly as they did pre-RQL.
     fn cmd_conseq(&self, rest: &str) -> String {
-        let Some(item) = self.vocab.get(rest.trim()) else {
-            return format!("ERR unknown item `{}`", rest.trim());
+        let item = rest.trim();
+        let query = RqlQuery {
+            explain: false,
+            preds: vec![Pred::ConseqEq(item.to_string())],
+            sort: None,
+            limit: None,
         };
-        let rules = self.trie.rules_with_consequent(item);
-        let mut out = format!("CONSEQ {} {}\n", rest.trim(), rules.len());
-        for (idx, m) in rules.iter().take(50) {
-            let path = self.trie.path_items(*idx);
-            let a = &path[..path.len() - 1];
-            let names = a
+        let rows = match self.run_desugared(&query) {
+            Ok(rows) => rows,
+            Err(e) => return e,
+        };
+        let mut out = format!("CONSEQ {item} {}\n", rows.len());
+        for row in rows.iter().take(50) {
+            let names = row
+                .rule
+                .antecedent
+                .items()
                 .iter()
                 .map(|&i| self.vocab.name(i))
                 .collect::<Vec<_>>()
                 .join(",");
             out.push_str(&format!(
-                "  {{{names}}} => {{{}}} conf={:.4}\n",
-                rest.trim(),
-                m.confidence
+                "  {{{names}}} => {{{item}}} conf={:.4}\n",
+                row.metrics.confidence
             ));
         }
         out.pop();
@@ -272,6 +355,69 @@ mod tests {
         let resp = e.execute("CONSEQ a");
         assert!(resp.starts_with("CONSEQ a"), "{resp}");
         assert!(resp.lines().count() > 1);
+    }
+
+    #[test]
+    fn rules_command_routes_through_rql() {
+        let e = engine();
+        let resp = e.execute("RULES WHERE conseq = a SORT BY lift DESC LIMIT 5");
+        assert!(resp.starts_with("RULES "), "{resp}");
+        let n: usize = resp
+            .lines()
+            .next()
+            .unwrap()
+            .strip_prefix("RULES ")
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(n >= 1, "{resp}");
+        assert_eq!(resp.lines().count(), n + 1, "{resp}");
+        assert!(resp.contains("=> {a}"), "{resp}");
+        // Sort metric outside sup/conf/lift is appended to each row.
+        let resp = e.execute("RULES SORT BY leverage DESC LIMIT 2");
+        assert!(resp.contains("leverage="), "{resp}");
+        // Errors surface as ERR lines, like every other command.
+        assert!(e.execute("RULES WHERE conseq = nosuch").starts_with("ERR"));
+        assert!(e.execute("RULES WHERE bogus >= 1").starts_with("ERR"));
+    }
+
+    #[test]
+    fn explain_command_shows_plan_and_is_self_delimiting() {
+        let e = engine();
+        let resp = e.execute("EXPLAIN RULES WHERE conseq = a AND support >= 0.4 LIMIT 3");
+        let header = resp.lines().next().unwrap();
+        let n: usize = header.strip_prefix("EXPLAIN ").unwrap().parse().unwrap();
+        assert_eq!(resp.lines().count(), n + 1, "{resp}");
+        assert!(resp.contains("conseq-header(a)"), "{resp}");
+        assert!(resp.contains("subtree cutoff"), "{resp}");
+        let resp = e.execute("EXPLAIN RULES");
+        assert!(resp.contains("full-traversal"), "{resp}");
+    }
+
+    #[test]
+    fn conseq_desugar_handles_names_rql_cannot_quote() {
+        // AST-level desugar: a vocab name containing a single quote is
+        // unexpressable in RQL surface syntax but must keep working
+        // through the legacy CONSEQ command (as it did pre-RQL).
+        let e = engine();
+        let resp = e.execute("CONSEQ men's wallet");
+        assert!(
+            resp.starts_with("ERR unknown item `men's wallet`"),
+            "{resp}"
+        );
+    }
+
+    #[test]
+    fn desugared_top_matches_rql() {
+        let e = engine();
+        let legacy = e.execute("TOP confidence 4");
+        let rql = e.execute("RULES SORT BY confidence DESC LIMIT 4");
+        // Same rules, same order — only the header/row dressing differs.
+        assert_eq!(legacy.lines().count(), rql.lines().count());
+        for (l, r) in legacy.lines().skip(1).zip(rql.lines().skip(1)) {
+            let rule_of = |s: &str| s.trim().split(" => ").next().unwrap().to_string();
+            assert_eq!(rule_of(l), rule_of(r), "{legacy}\nvs\n{rql}");
+        }
     }
 
     #[test]

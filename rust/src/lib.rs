@@ -8,7 +8,9 @@
 //! * **L3 (this crate)** — the full association-rule-mining pipeline and the
 //!   paper's contribution: streaming ingestion, sharded mining with
 //!   backpressure, rule generation, the [`trie::TrieOfRules`] structure, the
-//!   pandas-semantics [`baseline::RuleFrame`], and a query service.
+//!   pandas-semantics [`baseline::RuleFrame`], the RQL rule-query engine
+//!   ([`query`]: parser → trie-aware planner → streaming executor), and the
+//!   query service that fronts it.
 //! * **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels for
 //!   the tensor-shaped mining hot-spot (batched itemset-support counting and
 //!   vectorized rule metrics), AOT-lowered to HLO text and executed from
@@ -23,6 +25,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod mining;
+pub mod query;
 pub mod rules;
 pub mod runtime;
 pub mod stats;

@@ -1,0 +1,195 @@
+//! RQL abstract syntax — the parsed, *unbound* form of a rule query.
+//!
+//! A query selects over the population of representable rules (every
+//! `(node, split)` pair of the trie; exactly the rows of the parity
+//! [`crate::baseline::RuleFrame`]), filters them with a conjunction of
+//! predicates, and optionally orders/limits the result:
+//!
+//! ```text
+//! [EXPLAIN] RULES [WHERE pred (AND pred)*]
+//!           [SORT BY <metric> [ASC|DESC]] [LIMIT k]
+//! ```
+//!
+//! Item references are names here; binding to [`crate::data::vocab::ItemId`]s
+//! happens in [`crate::query::plan`], which is also where access paths are
+//! chosen.
+
+use crate::rules::metrics::Metric;
+
+/// Comparison operator of a metric predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ge,
+    Gt,
+    Le,
+    Lt,
+}
+
+impl CmpOp {
+    /// Evaluate `lhs op rhs` (plain IEEE comparison; metric lanes are
+    /// always finite — see `rules::metrics`).
+    #[inline]
+    pub fn matches(&self, lhs: f64, rhs: f64) -> bool {
+        match self {
+            CmpOp::Eq => lhs == rhs,
+            CmpOp::Ge => lhs >= rhs,
+            CmpOp::Gt => lhs > rhs,
+            CmpOp::Le => lhs <= rhs,
+            CmpOp::Lt => lhs < rhs,
+        }
+    }
+
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            CmpOp::Eq => "=",
+            CmpOp::Ge => ">=",
+            CmpOp::Gt => ">",
+            CmpOp::Le => "<=",
+            CmpOp::Lt => "<",
+        }
+    }
+}
+
+/// One predicate of the WHERE conjunction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pred {
+    /// `conseq = <item>` — consequent is exactly the single item. This is
+    /// the predicate the planner turns into a header-list access path.
+    ConseqEq(String),
+    /// `conseq CONTAINS <item>` — item appears in the consequent.
+    ConseqContains(String),
+    /// `antecedent CONTAINS <item>` — item appears in the antecedent.
+    AntecedentContains(String),
+    /// `<metric> <op> <value>` — e.g. `confidence >= 0.6`.
+    MetricCmp {
+        metric: Metric,
+        op: CmpOp,
+        value: f64,
+    },
+}
+
+impl std::fmt::Display for Pred {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Pred::ConseqEq(item) => write!(f, "conseq = {item}"),
+            Pred::ConseqContains(item) => write!(f, "conseq CONTAINS {item}"),
+            Pred::AntecedentContains(item) => write!(f, "antecedent CONTAINS {item}"),
+            Pred::MetricCmp { metric, op, value } => {
+                write!(f, "{} {} {value}", metric.name(), op.symbol())
+            }
+        }
+    }
+}
+
+/// `SORT BY <metric> [ASC|DESC]` (DESC is the default, matching the
+/// knowledge-discovery convention of "best rules first").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SortSpec {
+    pub metric: Metric,
+    pub descending: bool,
+}
+
+impl std::fmt::Display for SortSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {}",
+            self.metric.name(),
+            if self.descending { "DESC" } else { "ASC" }
+        )
+    }
+}
+
+/// A parsed RQL query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    /// `EXPLAIN` prefix: return the chosen plan instead of rows.
+    pub explain: bool,
+    pub preds: Vec<Pred>,
+    pub sort: Option<SortSpec>,
+    pub limit: Option<usize>,
+}
+
+impl Query {
+    /// A bare `RULES` query (everything, canonical rule order).
+    pub fn all() -> Query {
+        Query {
+            explain: false,
+            preds: Vec::new(),
+            sort: None,
+            limit: None,
+        }
+    }
+}
+
+impl std::fmt::Display for Query {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.explain {
+            write!(f, "EXPLAIN ")?;
+        }
+        write!(f, "RULES")?;
+        for (i, p) in self.preds.iter().enumerate() {
+            write!(f, " {} {p}", if i == 0 { "WHERE" } else { "AND" })?;
+        }
+        if let Some(s) = &self.sort {
+            write!(f, " SORT BY {s}")?;
+        }
+        if let Some(k) = self.limit {
+            write!(f, " LIMIT {k}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmp_op_semantics() {
+        assert!(CmpOp::Ge.matches(0.6, 0.6));
+        assert!(CmpOp::Gt.matches(0.7, 0.6));
+        assert!(!CmpOp::Gt.matches(0.6, 0.6));
+        assert!(CmpOp::Le.matches(0.5, 0.6));
+        assert!(CmpOp::Lt.matches(0.5, 0.6));
+        assert!(CmpOp::Eq.matches(0.25, 0.25));
+    }
+
+    #[test]
+    fn display_roundtrips_through_parser_forms() {
+        let p = Pred::MetricCmp {
+            metric: Metric::Confidence,
+            op: CmpOp::Ge,
+            value: 0.6,
+        };
+        assert_eq!(p.to_string(), "confidence >= 0.6");
+        let s = SortSpec {
+            metric: Metric::Lift,
+            descending: true,
+        };
+        assert_eq!(s.to_string(), "lift DESC");
+    }
+
+    #[test]
+    fn query_display_is_canonical() {
+        let q = Query {
+            explain: true,
+            preds: vec![
+                Pred::ConseqEq("milk".into()),
+                Pred::AntecedentContains("bread".into()),
+            ],
+            sort: Some(SortSpec {
+                metric: Metric::Lift,
+                descending: true,
+            }),
+            limit: Some(20),
+        };
+        assert_eq!(
+            q.to_string(),
+            "EXPLAIN RULES WHERE conseq = milk AND antecedent CONTAINS bread \
+             SORT BY lift DESC LIMIT 20"
+        );
+        assert_eq!(Query::all().to_string(), "RULES");
+    }
+}

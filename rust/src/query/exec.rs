@@ -1,0 +1,507 @@
+//! RQL execution: a streaming executor with two interchangeable backends.
+//!
+//! * **Trie backend** — walks the Trie of Rules along the planned access
+//!   path ([`crate::query::plan::AccessPath`]): consequent header-list
+//!   jump, support-antimonotone subtree pruning, and a k-bounded heap for
+//!   `SORT BY … LIMIT k` pushdown. Candidate rules stream through the
+//!   predicate filters out of reused path buffers; `Rule` objects are
+//!   materialized only for rows that survive.
+//! * **Frame backend** — a full scan over the columnar
+//!   [`RuleFrame`] (pandas `iterrows` semantics), used for parity testing
+//!   and as the ablation comparator in `benches/rql_throughput.rs`.
+//!
+//! Both backends emit the *same rows in the same order*: the output is
+//! totally ordered by `(sort key under f64::total_cmp, rule)` — rules are
+//! unique per query population, so the order is deterministic and the
+//! parity tests can compare results exactly.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use crate::baseline::dataframe::RuleFrame;
+use crate::data::vocab::{ItemId, Vocab};
+use crate::mining::itemset::Itemset;
+use crate::query::ast::{Query, SortSpec};
+use crate::query::plan::{self, AccessPath, BoundPred, TriePlan};
+use crate::rules::metrics::RuleMetrics;
+use crate::rules::rule::Rule;
+use crate::trie::trie::TrieOfRules;
+
+/// One result row: a rule with its full metric vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub rule: Rule,
+    pub metrics: RuleMetrics,
+}
+
+/// Work counters for plan verification and EXPLAIN-style telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Trie nodes (or frame rows) touched by the access path.
+    pub scanned: usize,
+    /// Candidate rules that reached predicate evaluation.
+    pub candidates: usize,
+    /// Rules passing every predicate (before LIMIT).
+    pub matched: usize,
+}
+
+/// The rows of a query plus its work counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultSet {
+    pub rows: Vec<Row>,
+    pub stats: ExecStats,
+}
+
+/// What a query evaluates to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryOutput {
+    Rows(ResultSet),
+    Explain(String),
+}
+
+impl QueryOutput {
+    /// Unwrap the row form (tests/benches; panics on an EXPLAIN output).
+    pub fn into_rows(self) -> ResultSet {
+        match self {
+            QueryOutput::Rows(r) => r,
+            QueryOutput::Explain(e) => panic!("expected rows, got EXPLAIN:\n{e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ordered accumulation (top-k pushdown)
+// ---------------------------------------------------------------------
+
+/// A row tagged with its sort key. `Ord` is the *output* order — best row
+/// first — so `BinaryHeap`'s max-heap keeps the current worst on top and
+/// `into_sorted_vec` yields the final ordering directly.
+struct HeapRow {
+    key: Option<f64>,
+    descending: bool,
+    row: Row,
+}
+
+impl HeapRow {
+    fn cmp_order(&self, other: &Self) -> Ordering {
+        let primary = match (self.key, other.key) {
+            (Some(a), Some(b)) => {
+                if self.descending {
+                    b.total_cmp(&a)
+                } else {
+                    a.total_cmp(&b)
+                }
+            }
+            _ => Ordering::Equal,
+        };
+        primary.then_with(|| self.row.rule.cmp(&other.row.rule))
+    }
+}
+
+impl PartialEq for HeapRow {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp_order(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapRow {}
+
+impl PartialOrd for HeapRow {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapRow {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_order(other)
+    }
+}
+
+/// Streaming accumulator: a k-bounded heap under LIMIT (O(k) memory,
+/// O(rows·log k) time), a collect-then-sort otherwise.
+struct Accumulator {
+    sort: Option<SortSpec>,
+    limit: Option<usize>,
+    heap: BinaryHeap<HeapRow>,
+    rows: Vec<HeapRow>,
+}
+
+impl Accumulator {
+    fn new(sort: Option<SortSpec>, limit: Option<usize>) -> Self {
+        Self {
+            sort,
+            limit,
+            heap: BinaryHeap::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, row: Row) {
+        let entry = HeapRow {
+            key: self.sort.map(|s| row.metrics.get(s.metric)),
+            descending: self.sort.is_some_and(|s| s.descending),
+            row,
+        };
+        match self.limit {
+            Some(0) => {}
+            Some(k) => {
+                if self.heap.len() < k {
+                    self.heap.push(entry);
+                } else if let Some(mut worst) = self.heap.peek_mut() {
+                    if entry < *worst {
+                        *worst = entry;
+                    }
+                }
+            }
+            None => self.rows.push(entry),
+        }
+    }
+
+    fn finish(self) -> Vec<Row> {
+        match self.limit {
+            Some(_) => self
+                .heap
+                .into_sorted_vec()
+                .into_iter()
+                .map(|h| h.row)
+                .collect(),
+            None => {
+                let mut rows = self.rows;
+                rows.sort_unstable();
+                rows.into_iter().map(|h| h.row).collect()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// predicate evaluation
+// ---------------------------------------------------------------------
+
+/// Evaluate one bound predicate against a candidate rule. Item slices may
+/// be in any order (path order on the trie, id order on the frame).
+fn pred_matches(
+    pred: &BoundPred,
+    antecedent: &[ItemId],
+    consequent: &[ItemId],
+    metrics: &RuleMetrics,
+) -> bool {
+    match *pred {
+        BoundPred::ConseqEq(item) => consequent.len() == 1 && consequent[0] == item,
+        BoundPred::ConseqContains(item) => consequent.contains(&item),
+        BoundPred::AntecedentContains(item) => antecedent.contains(&item),
+        BoundPred::MetricCmp { metric, op, value } => op.matches(metrics.get(metric), value),
+    }
+}
+
+fn residual_pass(
+    residual: &[BoundPred],
+    antecedent: &[ItemId],
+    consequent: &[ItemId],
+    metrics: &RuleMetrics,
+) -> bool {
+    residual
+        .iter()
+        .all(|p| pred_matches(p, antecedent, consequent, metrics))
+}
+
+// ---------------------------------------------------------------------
+// trie backend
+// ---------------------------------------------------------------------
+
+/// Execute a parsed query against the trie.
+pub fn execute_trie(trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<QueryOutput> {
+    let bound = plan::bind(query, vocab)?;
+    let plan = plan::plan_trie(&bound);
+    if query.explain {
+        return Ok(QueryOutput::Explain(plan::explain_trie(&plan, trie, vocab)));
+    }
+    let mut stats = ExecStats::default();
+    let mut acc = Accumulator::new(plan.sort, plan.limit);
+    match plan.access {
+        AccessPath::Empty => {}
+        AccessPath::ConseqHeader(item) => {
+            run_header(trie, item, &plan, &mut stats, &mut acc);
+        }
+        AccessPath::FullTraversal => {
+            run_traversal(trie, &plan, &mut stats, &mut acc);
+        }
+    }
+    Ok(QueryOutput::Rows(ResultSet {
+        rows: acc.finish(),
+        stats,
+    }))
+}
+
+/// Header-list access: only the nodes carrying the consequent item are
+/// touched; each depth-≥2 node is exactly one candidate rule (consequent =
+/// the node item, antecedent = the rest of its root path), with metrics
+/// already stored on the node.
+fn run_header(
+    trie: &TrieOfRules,
+    item: ItemId,
+    plan: &TriePlan,
+    stats: &mut ExecStats,
+    acc: &mut Accumulator,
+) {
+    let n = trie.num_transactions() as f64;
+    for &idx in trie.item_nodes(item) {
+        let node = trie.node(idx);
+        stats.scanned += 1;
+        if node.depth < 2 {
+            continue; // depth-1 nodes are itemset entries, not rules
+        }
+        if plan.pruned(node.count as f64 / n) {
+            continue;
+        }
+        stats.candidates += 1;
+        let path = trie.path_items(idx);
+        let (antecedent, consequent) = path.split_at(path.len() - 1);
+        if !residual_pass(&plan.residual, antecedent, consequent, &node.metrics) {
+            continue;
+        }
+        stats.matched += 1;
+        acc.push(Row {
+            rule: Rule::new(
+                Itemset::new(antecedent.to_vec()),
+                Itemset::new(consequent.to_vec()),
+            ),
+            metrics: node.metrics,
+        });
+    }
+}
+
+/// Full DFS with support-antimonotone subtree pruning, via the trie's own
+/// [`TrieOfRules::for_each_rule_pruned`] — the same split enumeration and
+/// metric derivation `for_each_rule` (and hence the parity frame) uses, so
+/// rows match bit-for-bit by construction.
+fn run_traversal(
+    trie: &TrieOfRules,
+    plan: &TriePlan,
+    stats: &mut ExecStats,
+    acc: &mut Accumulator,
+) {
+    let visited = trie.for_each_rule_pruned(
+        |sup| plan.pruned(sup),
+        |antecedent, consequent, metrics| {
+            stats.candidates += 1;
+            if !residual_pass(&plan.residual, antecedent, consequent, metrics) {
+                return;
+            }
+            stats.matched += 1;
+            acc.push(Row {
+                rule: Rule::new(
+                    Itemset::new(antecedent.to_vec()),
+                    Itemset::new(consequent.to_vec()),
+                ),
+                metrics: *metrics,
+            });
+        },
+    );
+    stats.scanned = visited;
+}
+
+// ---------------------------------------------------------------------
+// frame backend
+// ---------------------------------------------------------------------
+
+/// Execute a parsed query by full scan over the columnar rule frame — the
+/// parity oracle and ablation comparator. Every row is materialized and
+/// every predicate evaluated (no index, no pruning), mirroring the pandas
+/// semantics the baseline documents.
+pub fn execute_frame(frame: &RuleFrame, vocab: &Vocab, query: &Query) -> Result<QueryOutput> {
+    let bound = plan::bind(query, vocab)?;
+    if query.explain {
+        return Ok(QueryOutput::Explain(plan::explain_frame(
+            &bound,
+            frame.len(),
+            vocab,
+        )));
+    }
+    let mut stats = ExecStats::default();
+    let mut acc = Accumulator::new(bound.sort, bound.limit);
+    frame.for_each_row_materialized(|_, rule, metrics| {
+        stats.scanned += 1;
+        stats.candidates += 1;
+        let pass = bound.preds.iter().all(|p| {
+            pred_matches(
+                p,
+                rule.antecedent.items(),
+                rule.consequent.items(),
+                &metrics,
+            )
+        });
+        if pass {
+            stats.matched += 1;
+            acc.push(Row { rule, metrics });
+        }
+    });
+    Ok(QueryOutput::Rows(ResultSet {
+        rows: acc.finish(),
+        stats,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::workloads::Workload;
+    use crate::data::transaction::paper_example_db;
+    use crate::query::parser::parse;
+
+    fn workload() -> Workload {
+        Workload::build("paper", paper_example_db(), 0.3)
+    }
+
+    fn trie_rows(w: &Workload, src: &str) -> ResultSet {
+        execute_trie(&w.trie, w.db.vocab(), &parse(src).unwrap())
+            .unwrap()
+            .into_rows()
+    }
+
+    fn frame_rows(w: &Workload, src: &str) -> ResultSet {
+        execute_frame(&w.frame, w.db.vocab(), &parse(src).unwrap())
+            .unwrap()
+            .into_rows()
+    }
+
+    #[test]
+    fn bare_rules_returns_whole_population_in_canonical_order() {
+        let w = workload();
+        let rs = trie_rows(&w, "RULES");
+        assert_eq!(rs.rows.len(), w.trie.num_representable_rules());
+        assert!(
+            rs.rows.windows(2).all(|p| p[0].rule < p[1].rule),
+            "not in canonical rule order"
+        );
+        assert_eq!(rs.rows, frame_rows(&w, "RULES").rows);
+    }
+
+    #[test]
+    fn conseq_eq_matches_frame_and_uses_header() {
+        let w = workload();
+        let q = "RULES WHERE conseq = a";
+        let t = trie_rows(&w, q);
+        let f = frame_rows(&w, q);
+        assert!(!t.rows.is_empty());
+        assert_eq!(t.rows, f.rows);
+        for row in &t.rows {
+            assert_eq!(row.rule.consequent.items().len(), 1);
+        }
+        // The header path touches only `a`-nodes, not the whole trie.
+        let a = w.db.vocab().get("a").unwrap();
+        assert_eq!(t.stats.scanned, w.trie.item_nodes(a).len());
+        assert!(t.stats.scanned < w.trie.num_nodes());
+        assert_eq!(f.stats.scanned, w.frame.len());
+    }
+
+    #[test]
+    fn sort_and_limit_agree_with_full_sort_prefix() {
+        let w = workload();
+        let full = trie_rows(&w, "RULES SORT BY lift DESC");
+        for k in [1, 3, 7, full.rows.len() + 5] {
+            let limited = trie_rows(&w, &format!("RULES SORT BY lift DESC LIMIT {k}"));
+            assert_eq!(limited.rows, full.rows[..k.min(full.rows.len())], "k = {k}");
+        }
+        // Ascending order is the exact reverse (rules unique, total order).
+        let asc = trie_rows(&w, "RULES SORT BY lift ASC");
+        let mut rev = full.rows.clone();
+        rev.reverse();
+        // Reverse of (lift desc, rule asc) is (lift asc, rule desc); re-sort
+        // ties by rule ascending to compare.
+        assert_eq!(asc.rows.len(), rev.len());
+        let key = |r: &Row| (r.metrics.lift.to_bits(), r.rule.clone());
+        let mut a_sorted = asc.rows.clone();
+        let mut r_sorted = rev;
+        a_sorted.sort_by_key(key);
+        r_sorted.sort_by_key(key);
+        assert_eq!(a_sorted, r_sorted);
+    }
+
+    #[test]
+    fn support_pruning_skips_subtrees() {
+        let w = workload();
+        let all = trie_rows(&w, "RULES");
+        let pruned = trie_rows(&w, "RULES WHERE support >= 0.7");
+        assert!(
+            pruned.stats.scanned < all.stats.scanned,
+            "pruning did not reduce visited nodes: {} vs {}",
+            pruned.stats.scanned,
+            all.stats.scanned
+        );
+        // And the result still matches the frame's exhaustive filter.
+        assert_eq!(pruned.rows, frame_rows(&w, "RULES WHERE support >= 0.7").rows);
+        for row in &pruned.rows {
+            assert!(row.metrics.support >= 0.7);
+        }
+    }
+
+    #[test]
+    fn combined_issue_query_is_parity_exact() {
+        let w = workload();
+        let q = "RULES WHERE conseq = a AND antecedent CONTAINS f \
+                 AND confidence >= 0.6 SORT BY lift DESC LIMIT 20";
+        let t = trie_rows(&w, q);
+        let f = frame_rows(&w, q);
+        assert_eq!(t.rows, f.rows);
+        assert!(!t.rows.is_empty());
+        for row in &t.rows {
+            assert!(row.metrics.confidence >= 0.6);
+            let fid = w.db.vocab().get("f").unwrap();
+            assert!(row.rule.antecedent.contains(fid));
+        }
+    }
+
+    #[test]
+    fn contradictory_query_is_empty_without_scanning() {
+        let w = workload();
+        let rs = trie_rows(&w, "RULES WHERE conseq = a AND conseq = f");
+        assert!(rs.rows.is_empty());
+        assert_eq!(rs.stats.scanned, 0);
+    }
+
+    #[test]
+    fn limit_zero_and_oversized_limits() {
+        let w = workload();
+        assert!(trie_rows(&w, "RULES LIMIT 0").rows.is_empty());
+        let all = trie_rows(&w, "RULES");
+        let huge = trie_rows(&w, "RULES LIMIT 100000");
+        assert_eq!(all.rows, huge.rows);
+    }
+
+    #[test]
+    fn explain_reports_access_paths() {
+        let w = workload();
+        let out = execute_trie(
+            &w.trie,
+            w.db.vocab(),
+            &parse("EXPLAIN RULES WHERE conseq = a AND support >= 0.4 SORT BY lift DESC LIMIT 5")
+                .unwrap(),
+        )
+        .unwrap();
+        let QueryOutput::Explain(text) = out else {
+            panic!("expected EXPLAIN output");
+        };
+        assert!(text.contains("conseq-header(a)"), "{text}");
+        assert!(!text.contains("full-traversal"), "{text}");
+        assert!(text.contains("subtree cutoff"), "{text}");
+        assert!(text.contains("top-k heap pushdown"), "{text}");
+
+        let out = execute_trie(&w.trie, w.db.vocab(), &parse("EXPLAIN RULES").unwrap()).unwrap();
+        let QueryOutput::Explain(text) = out else {
+            panic!("expected EXPLAIN output");
+        };
+        assert!(text.contains("full-traversal"), "{text}");
+    }
+
+    #[test]
+    fn unknown_item_errors_on_both_backends() {
+        let w = workload();
+        let q = parse("RULES WHERE conseq = nosuchitem").unwrap();
+        assert!(execute_trie(&w.trie, w.db.vocab(), &q).is_err());
+        assert!(execute_frame(&w.frame, w.db.vocab(), &q).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! RQL — the Rule Query Language subsystem.
+//!
+//! The paper's pitch is that the Trie of Rules makes *knowledge
+//! extraction* fast — "searching for a specific rule and sorting, which is
+//! the base for many knowledge discovery methods" (§1). This layer turns
+//! that capability into a query engine instead of a fixed menu of service
+//! commands:
+//!
+//! ```text
+//! RULES WHERE conseq = milk AND antecedent CONTAINS bread
+//!       AND confidence >= 0.6 SORT BY lift DESC LIMIT 20
+//! EXPLAIN RULES WHERE conseq = milk ...
+//! ```
+//!
+//! Pipeline: [`parser`] (hand-rolled tokens + recursive descent) →
+//! [`ast`] → [`plan`] (name binding, access-path selection, predicate
+//! placement) → [`exec`] (streaming execution on the trie or, for parity
+//! and ablation, on the full-scan [`crate::baseline::RuleFrame`]).
+//!
+//! The planner exploits the trie's structure (DESIGN.md §7): consequent
+//! header-list jumps for `conseq =`, support-antimonotone subtree pruning
+//! for `support >=`, and k-bounded-heap pushdown for `SORT BY … LIMIT k`.
+//! Both backends emit identical rows in an identical deterministic order
+//! (`f64::total_cmp` on the sort key, then rule order) — enforced by
+//! `rust/tests/query_parity.rs`.
+
+pub mod ast;
+pub mod exec;
+pub mod parser;
+pub mod plan;
+
+use anyhow::Result;
+
+use crate::baseline::dataframe::RuleFrame;
+use crate::data::vocab::Vocab;
+use crate::trie::trie::TrieOfRules;
+
+pub use ast::{CmpOp, Pred, Query, SortSpec};
+pub use exec::{ExecStats, QueryOutput, ResultSet, Row};
+pub use parser::parse;
+pub use plan::{bind, plan_trie, AccessPath, BoundPred, BoundQuery, TriePlan};
+
+/// Parse and execute one RQL query on the trie backend.
+pub fn query_trie(trie: &TrieOfRules, vocab: &Vocab, input: &str) -> Result<QueryOutput> {
+    exec::execute_trie(trie, vocab, &parser::parse(input)?)
+}
+
+/// Parse and execute one RQL query on the full-scan frame backend.
+pub fn query_frame(frame: &RuleFrame, vocab: &Vocab, input: &str) -> Result<QueryOutput> {
+    exec::execute_frame(frame, vocab, &parser::parse(input)?)
+}

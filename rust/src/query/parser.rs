@@ -1,0 +1,409 @@
+//! Hand-rolled RQL parser (no parser-generator in the offline vendor set;
+//! the grammar is small enough that recursive descent over a token stream
+//! is both faster and clearer).
+//!
+//! Grammar (keywords case-insensitive):
+//!
+//! ```text
+//! query  := [EXPLAIN] RULES [WHERE pred (AND pred)*]
+//!           [SORT BY metric [ASC|DESC]] [LIMIT int]
+//! pred   := (CONSEQ|CONSEQUENT) ( '=' item | CONTAINS item )
+//!         | (ANTECEDENT|ANTEC)  CONTAINS item
+//!         | metric cmp number
+//! cmp    := '>=' | '>' | '<=' | '<' | '='
+//! item   := bare word ([A-Za-z0-9_.-]+) or single-quoted string
+//! metric := support | confidence | lift | ... (see `Metric::parse`)
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::query::ast::{CmpOp, Pred, Query, SortSpec};
+use crate::rules::metrics::Metric;
+
+/// One lexical token.
+#[derive(Debug, Clone, PartialEq)]
+enum Token {
+    /// Bare word or quoted string (keywords are recognized contextually so
+    /// item names can shadow them after `=` / `CONTAINS`).
+    Word(String),
+    Number(f64),
+    Op(CmpOp),
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '-' | '+')
+}
+
+/// Tokenize an RQL line. Numbers are any token that fully parses as `f64`
+/// and starts with a digit, `.`, `+` or `-`.
+fn tokenize(input: &str) -> Result<Vec<Token>> {
+    let mut tokens = Vec::new();
+    let mut chars = input.char_indices().peekable();
+    while let Some(&(pos, c)) = chars.peek() {
+        if c.is_whitespace() {
+            chars.next();
+        } else if c == '\'' {
+            chars.next();
+            let mut word = String::new();
+            loop {
+                match chars.next() {
+                    Some((_, '\'')) => break,
+                    Some((_, ch)) => word.push(ch),
+                    None => bail!("unterminated quoted item at byte {pos}"),
+                }
+            }
+            tokens.push(Token::Word(word));
+        } else if c == '>' || c == '<' || c == '=' {
+            chars.next();
+            let eq = matches!(chars.peek(), Some(&(_, '=')));
+            if eq && c != '=' {
+                chars.next();
+            }
+            tokens.push(Token::Op(match (c, eq) {
+                ('>', true) => CmpOp::Ge,
+                ('>', false) => CmpOp::Gt,
+                ('<', true) => CmpOp::Le,
+                ('<', false) => CmpOp::Lt,
+                _ => CmpOp::Eq,
+            }));
+        } else if is_word_char(c) {
+            let mut word = String::new();
+            while let Some(&(_, ch)) = chars.peek() {
+                if is_word_char(ch) {
+                    word.push(ch);
+                    chars.next();
+                } else {
+                    break;
+                }
+            }
+            // A token like `0.6` or `20` is a number; `item_0007` is a word
+            // even though it parses nowhere as f64.
+            let numeric_start = word
+                .chars()
+                .next()
+                .is_some_and(|f| f.is_ascii_digit() || matches!(f, '.' | '+' | '-'));
+            match word.parse::<f64>() {
+                Ok(n) if numeric_start => tokens.push(Token::Number(n)),
+                _ => tokens.push(Token::Word(word)),
+            }
+        } else {
+            bail!("unexpected character `{c}` at byte {pos}");
+        }
+    }
+    Ok(tokens)
+}
+
+/// Recursive-descent parser state.
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.tokens.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    /// Consume the next token if it is the given keyword (case-insensitive).
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if let Some(Token::Word(w)) = self.peek() {
+            if w.eq_ignore_ascii_case(kw) {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<()> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            bail!("expected `{kw}`, found {}", self.describe_here())
+        }
+    }
+
+    fn describe_here(&self) -> String {
+        match self.peek() {
+            Some(Token::Word(w)) => format!("`{w}`"),
+            Some(Token::Number(n)) => format!("number `{n}`"),
+            Some(Token::Op(op)) => format!("`{}`", op.symbol()),
+            None => "end of query".to_string(),
+        }
+    }
+
+    /// An item reference: any word (quoted or bare).
+    fn item(&mut self) -> Result<String> {
+        match self.next() {
+            Some(Token::Word(w)) => Ok(w),
+            other => bail!(
+                "expected an item name, found {}",
+                match other {
+                    Some(Token::Number(n)) => format!("number `{n}`"),
+                    Some(Token::Op(op)) => format!("`{}`", op.symbol()),
+                    _ => "end of query".to_string(),
+                }
+            ),
+        }
+    }
+
+    fn pred(&mut self) -> Result<Pred> {
+        // Peek before consuming so the error names the offending token,
+        // not whatever follows it.
+        let field = match self.peek() {
+            Some(Token::Word(w)) => w.clone(),
+            _ => bail!("expected a predicate, found {}", self.describe_here()),
+        };
+        self.pos += 1;
+        if field.eq_ignore_ascii_case("conseq") || field.eq_ignore_ascii_case("consequent") {
+            if self.eat_kw("contains") {
+                return Ok(Pred::ConseqContains(self.item()?));
+            }
+            match self.next() {
+                Some(Token::Op(CmpOp::Eq)) => Ok(Pred::ConseqEq(self.item()?)),
+                _ => bail!("conseq supports `= <item>` or `CONTAINS <item>`"),
+            }
+        } else if field.eq_ignore_ascii_case("antecedent") || field.eq_ignore_ascii_case("antec") {
+            self.expect_kw("contains")
+                .context("antecedent supports `CONTAINS <item>`")?;
+            Ok(Pred::AntecedentContains(self.item()?))
+        } else if let Some(metric) = Metric::parse(&field) {
+            let Some(Token::Op(op)) = self.next() else {
+                bail!("expected a comparison after `{}`", metric.name());
+            };
+            let Some(Token::Number(value)) = self.next() else {
+                bail!("expected a number after `{} {}`", metric.name(), op.symbol());
+            };
+            Ok(Pred::MetricCmp { metric, op, value })
+        } else {
+            bail!(
+                "unknown predicate field `{field}` \
+                 (expected conseq, antecedent, or a metric name)"
+            );
+        }
+    }
+
+    fn query(&mut self) -> Result<Query> {
+        let explain = self.eat_kw("explain");
+        self.expect_kw("rules")?;
+        let mut preds = Vec::new();
+        if self.eat_kw("where") {
+            preds.push(self.pred()?);
+            while self.eat_kw("and") {
+                preds.push(self.pred()?);
+            }
+        }
+        let mut sort = None;
+        if self.eat_kw("sort") {
+            self.expect_kw("by")?;
+            let Some(Token::Word(name)) = self.next() else {
+                bail!("expected a metric after SORT BY");
+            };
+            let metric = Metric::parse(&name)
+                .with_context(|| format!("unknown sort metric `{name}`"))?;
+            let descending = if self.eat_kw("asc") {
+                false
+            } else {
+                self.eat_kw("desc");
+                true // DESC is the default
+            };
+            sort = Some(SortSpec { metric, descending });
+        }
+        let mut limit = None;
+        if self.eat_kw("limit") {
+            let Some(Token::Number(n)) = self.next() else {
+                bail!("expected a count after LIMIT");
+            };
+            anyhow::ensure!(
+                n.fract() == 0.0 && n >= 0.0 && n <= u32::MAX as f64,
+                "LIMIT must be a non-negative integer, got {n}"
+            );
+            limit = Some(n as usize);
+        }
+        anyhow::ensure!(
+            self.peek().is_none(),
+            "trailing input after query: {}",
+            self.describe_here()
+        );
+        Ok(Query {
+            explain,
+            preds,
+            sort,
+            limit,
+        })
+    }
+}
+
+/// Parse one RQL query line.
+pub fn parse(input: &str) -> Result<Query> {
+    let tokens = tokenize(input)?;
+    Parser { tokens, pos: 0 }
+        .query()
+        .with_context(|| format!("in RQL query `{}`", input.trim()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let q = parse(
+            "RULES WHERE conseq = milk AND antecedent CONTAINS bread \
+             AND confidence >= 0.6 SORT BY lift DESC LIMIT 20",
+        )
+        .unwrap();
+        assert!(!q.explain);
+        assert_eq!(q.preds.len(), 3);
+        assert_eq!(q.preds[0], Pred::ConseqEq("milk".into()));
+        assert_eq!(q.preds[1], Pred::AntecedentContains("bread".into()));
+        assert_eq!(
+            q.preds[2],
+            Pred::MetricCmp {
+                metric: Metric::Confidence,
+                op: CmpOp::Ge,
+                value: 0.6
+            }
+        );
+        assert_eq!(
+            q.sort,
+            Some(SortSpec {
+                metric: Metric::Lift,
+                descending: true
+            })
+        );
+        assert_eq!(q.limit, Some(20));
+    }
+
+    #[test]
+    fn explain_prefix_and_defaults() {
+        let q = parse("EXPLAIN RULES").unwrap();
+        assert!(q.explain && q.preds.is_empty() && q.sort.is_none() && q.limit.is_none());
+        // SORT BY defaults to DESC; ASC is explicit.
+        assert!(parse("RULES SORT BY support").unwrap().sort.unwrap().descending);
+        assert!(!parse("RULES SORT BY support ASC").unwrap().sort.unwrap().descending);
+    }
+
+    #[test]
+    fn keywords_are_case_insensitive() {
+        let q = parse("rules where Conseq = a sort by SUP desc limit 3").unwrap();
+        assert_eq!(q.preds, vec![Pred::ConseqEq("a".into())]);
+        assert_eq!(q.sort.unwrap().metric, Metric::Support);
+        assert_eq!(q.limit, Some(3));
+    }
+
+    #[test]
+    fn quoted_items_allow_spaces() {
+        let q = parse("RULES WHERE conseq = 'whole milk'").unwrap();
+        assert_eq!(q.preds, vec![Pred::ConseqEq("whole milk".into())]);
+    }
+
+    #[test]
+    fn numeric_looking_items_stay_items_after_eq() {
+        // `conseq = 42` — the item position accepts words only; a number
+        // here is a clear error, not a silent cast.
+        assert!(parse("RULES WHERE conseq = 42").is_err());
+        // but `item-42` and `2b` are words.
+        let q = parse("RULES WHERE conseq = item-42").unwrap();
+        assert_eq!(q.preds, vec![Pred::ConseqEq("item-42".into())]);
+        let q = parse("RULES WHERE conseq = 2b").unwrap();
+        assert_eq!(q.preds, vec![Pred::ConseqEq("2b".into())]);
+    }
+
+    #[test]
+    fn all_comparison_operators() {
+        for (src, op) in [
+            (">=", CmpOp::Ge),
+            (">", CmpOp::Gt),
+            ("<=", CmpOp::Le),
+            ("<", CmpOp::Lt),
+            ("=", CmpOp::Eq),
+        ] {
+            let q = parse(&format!("RULES WHERE lift {src} 1.5")).unwrap();
+            assert_eq!(
+                q.preds,
+                vec![Pred::MetricCmp {
+                    metric: Metric::Lift,
+                    op,
+                    value: 1.5
+                }],
+                "operator {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn negative_and_scientific_thresholds() {
+        let q = parse("RULES WHERE leverage >= -0.25").unwrap();
+        assert_eq!(
+            q.preds,
+            vec![Pred::MetricCmp {
+                metric: Metric::Leverage,
+                op: CmpOp::Ge,
+                value: -0.25
+            }]
+        );
+        let q = parse("RULES WHERE support >= 5e-3").unwrap();
+        assert_eq!(
+            q.preds,
+            vec![Pred::MetricCmp {
+                metric: Metric::Support,
+                op: CmpOp::Ge,
+                value: 0.005
+            }]
+        );
+    }
+
+    #[test]
+    fn error_cases_are_reported() {
+        for bad in [
+            "",
+            "FROB",
+            "RULES WHERE",
+            "RULES WHERE bogusfield = x",
+            "RULES WHERE conseq CONTAINS",
+            "RULES WHERE antecedent = x",
+            "RULES WHERE confidence >=",
+            "RULES WHERE confidence 0.5",
+            "RULES SORT BY bogus",
+            "RULES LIMIT 1.5",
+            "RULES LIMIT -2",
+            "RULES trailing garbage",
+            "RULES WHERE conseq = 'unterminated",
+        ] {
+            assert!(parse(bad).is_err(), "should reject `{bad}`");
+        }
+    }
+
+    #[test]
+    fn predicate_errors_name_the_offending_token() {
+        let err = parse("RULES WHERE >= 0.5").unwrap_err();
+        assert!(format!("{err:#}").contains("`>=`"), "{err:#}");
+        let err = parse("RULES WHERE conseq = milk AND LIMIT 3").unwrap_err();
+        // `LIMIT` is consumed as the predicate field name — the message
+        // should blame it, not the number after it.
+        assert!(format!("{err:#}").contains("LIMIT"), "{err:#}");
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        for src in [
+            "RULES",
+            "EXPLAIN RULES WHERE conseq = milk SORT BY lift DESC LIMIT 20",
+            "RULES WHERE antecedent CONTAINS bread AND support >= 0.01",
+            "RULES WHERE conseq CONTAINS a SORT BY confidence ASC",
+        ] {
+            let q = parse(src).unwrap();
+            let rendered = q.to_string();
+            assert_eq!(parse(&rendered).unwrap(), q, "roundtrip of `{src}`");
+        }
+    }
+}

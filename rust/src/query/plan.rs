@@ -1,0 +1,347 @@
+//! RQL planning: name binding and trie-aware access-path selection.
+//!
+//! The planner's leverage comes from three structural facts about the Trie
+//! of Rules:
+//!
+//! 1. **Consequent header lists** — `conseq = x` rules are exactly the
+//!    depth-≥2 nodes carrying item `x`, reachable through the FP-tree-style
+//!    header table ([`TrieOfRules::item_nodes`]) without touching the rest
+//!    of the trie.
+//! 2. **Support antimonotonicity** — node counts never grow along a path,
+//!    so a `support >= v` predicate that fails at a node fails for the
+//!    node's whole subtree: the executor cuts the subtree off instead of
+//!    filtering row by row (the trie-shaped pruning of Hosseininasab &
+//!    van Hoeve 2022).
+//! 3. **Bounded-order output** — `SORT BY m LIMIT k` never needs the full
+//!    sorted result; the executor keeps a k-bounded heap (pushdown), so
+//!    memory is O(k) and time O(rows · log k) instead of a full sort.
+//!
+//! Binding resolves item names to ids against the [`Vocab`]; an unknown
+//! name is a query error on every backend (both backends share the same
+//! vocabulary, so parity holds for errors too).
+
+use anyhow::{Context, Result};
+
+use crate::data::vocab::{ItemId, Vocab};
+use crate::query::ast::{CmpOp, Pred, Query, SortSpec};
+use crate::rules::metrics::Metric;
+use crate::trie::trie::TrieOfRules;
+
+/// A predicate with item names bound to ids.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BoundPred {
+    ConseqEq(ItemId),
+    ConseqContains(ItemId),
+    AntecedentContains(ItemId),
+    MetricCmp {
+        metric: Metric,
+        op: CmpOp,
+        value: f64,
+    },
+}
+
+impl BoundPred {
+    /// Render with names restored (EXPLAIN output).
+    pub fn display(&self, vocab: &Vocab) -> String {
+        match self {
+            BoundPred::ConseqEq(i) => format!("conseq = {}", vocab.name(*i)),
+            BoundPred::ConseqContains(i) => format!("conseq CONTAINS {}", vocab.name(*i)),
+            BoundPred::AntecedentContains(i) => {
+                format!("antecedent CONTAINS {}", vocab.name(*i))
+            }
+            BoundPred::MetricCmp { metric, op, value } => {
+                format!("{} {} {value}", metric.name(), op.symbol())
+            }
+        }
+    }
+}
+
+/// A query with all item references bound.
+#[derive(Debug, Clone)]
+pub struct BoundQuery {
+    pub preds: Vec<BoundPred>,
+    pub sort: Option<SortSpec>,
+    pub limit: Option<usize>,
+}
+
+/// Bind a parsed query's item names against a vocabulary.
+pub fn bind(query: &Query, vocab: &Vocab) -> Result<BoundQuery> {
+    let item = |name: &str| -> Result<ItemId> {
+        vocab
+            .get(name)
+            .with_context(|| format!("unknown item `{name}`"))
+    };
+    let preds = query
+        .preds
+        .iter()
+        .map(|p| {
+            Ok(match p {
+                Pred::ConseqEq(n) => BoundPred::ConseqEq(item(n)?),
+                Pred::ConseqContains(n) => BoundPred::ConseqContains(item(n)?),
+                Pred::AntecedentContains(n) => BoundPred::AntecedentContains(item(n)?),
+                Pred::MetricCmp { metric, op, value } => BoundPred::MetricCmp {
+                    metric: *metric,
+                    op: *op,
+                    value: *value,
+                },
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(BoundQuery {
+        preds,
+        sort: query.sort,
+        limit: query.limit,
+    })
+}
+
+/// How the trie executor reaches candidate rules.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AccessPath {
+    /// Jump straight to the nodes carrying the consequent item via the
+    /// header table — no traversal of unrelated subtrees.
+    ConseqHeader(ItemId),
+    /// Full DFS over the trie (still subject to subtree pruning).
+    FullTraversal,
+    /// Predicates are contradictory (e.g. two different `conseq =` items);
+    /// the result is empty without touching the structure.
+    Empty,
+}
+
+/// Support-predicate lower bounds usable for subtree pruning. Each entry is
+/// checked at every visited node; a failure cuts the subtree (descendant
+/// supports can only shrink).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SupportPrune {
+    pub op: CmpOp,
+    pub value: f64,
+}
+
+impl SupportPrune {
+    /// Does a node with relative support `sup` survive the bound? `Eq`
+    /// contributes its `>=` half (exactness is restored by the residual
+    /// filter).
+    #[inline]
+    pub fn keeps(&self, sup: f64) -> bool {
+        match self.op {
+            CmpOp::Ge | CmpOp::Eq => sup >= self.value,
+            CmpOp::Gt => sup > self.value,
+            // Upper bounds never prune: a child's support may drop below
+            // the bound even when the parent's does not.
+            CmpOp::Le | CmpOp::Lt => true,
+        }
+    }
+}
+
+/// The trie-side execution plan.
+#[derive(Debug, Clone)]
+pub struct TriePlan {
+    pub access: AccessPath,
+    /// Subtree-cutoff bounds harvested from support predicates.
+    pub prune: Vec<SupportPrune>,
+    /// Predicates still checked per candidate rule. Support `>=`/`>` preds
+    /// are absorbed by `prune` (the cutoff tests the exact same value the
+    /// emitted rows carry); everything else lands here.
+    pub residual: Vec<BoundPred>,
+    pub sort: Option<SortSpec>,
+    pub limit: Option<usize>,
+}
+
+impl TriePlan {
+    /// True when any prune bound rejects a node of relative support `sup`.
+    #[inline]
+    pub fn pruned(&self, sup: f64) -> bool {
+        self.prune.iter().any(|p| !p.keeps(sup))
+    }
+}
+
+/// Choose the trie access path and predicate placement for a bound query.
+pub fn plan_trie(query: &BoundQuery) -> TriePlan {
+    let mut access = AccessPath::FullTraversal;
+    let mut prune = Vec::new();
+    let mut residual = Vec::new();
+    for pred in &query.preds {
+        match *pred {
+            BoundPred::ConseqEq(item) => {
+                access = match access {
+                    AccessPath::FullTraversal => AccessPath::ConseqHeader(item),
+                    AccessPath::ConseqHeader(prev) if prev == item => {
+                        AccessPath::ConseqHeader(prev)
+                    }
+                    // Two different exact consequents can never both hold.
+                    _ => AccessPath::Empty,
+                };
+            }
+            BoundPred::MetricCmp {
+                metric: Metric::Support,
+                op,
+                value,
+            } => {
+                match op {
+                    CmpOp::Ge | CmpOp::Gt => {
+                        // Fully absorbed: the cutoff tests the same support
+                        // value every row emitted below it would carry.
+                        prune.push(SupportPrune { op, value });
+                    }
+                    CmpOp::Eq => {
+                        // `= v` prunes like `>= v` but still needs the
+                        // exact check on each row.
+                        prune.push(SupportPrune { op, value });
+                        residual.push(pred.clone());
+                    }
+                    CmpOp::Le | CmpOp::Lt => residual.push(pred.clone()),
+                }
+            }
+            _ => residual.push(pred.clone()),
+        }
+    }
+    if access == AccessPath::Empty {
+        prune.clear();
+        residual.clear();
+    }
+    TriePlan {
+        access,
+        prune,
+        residual,
+        sort: query.sort,
+        limit: query.limit,
+    }
+}
+
+/// Render the trie plan (the `EXPLAIN` response).
+pub fn explain_trie(plan: &TriePlan, trie: &TrieOfRules, vocab: &Vocab) -> String {
+    let mut out = String::from("plan: trie backend\n");
+    match plan.access {
+        AccessPath::ConseqHeader(item) => {
+            let header = trie.item_nodes(item).len();
+            out.push_str(&format!(
+                "  access : conseq-header({}) — {header} header nodes of {} total\n",
+                vocab.name(item),
+                trie.num_nodes()
+            ));
+        }
+        AccessPath::FullTraversal => {
+            out.push_str(&format!(
+                "  access : full-traversal — {} nodes, {} representable rules\n",
+                trie.num_nodes(),
+                trie.num_representable_rules()
+            ));
+        }
+        AccessPath::Empty => {
+            out.push_str("  access : empty — contradictory conseq predicates\n");
+        }
+    }
+    for p in &plan.prune {
+        out.push_str(&format!(
+            "  prune  : support {} {} (subtree cutoff via count antimonotonicity)\n",
+            p.op.symbol(),
+            p.value
+        ));
+    }
+    if !plan.residual.is_empty() {
+        let preds: Vec<String> = plan.residual.iter().map(|p| p.display(vocab)).collect();
+        out.push_str(&format!("  filter : {}\n", preds.join(" AND ")));
+    }
+    match (&plan.sort, plan.limit) {
+        (Some(s), Some(k)) => {
+            out.push_str(&format!("  sort   : {s} — top-k heap pushdown (k = {k})\n"));
+            out.push_str(&format!("  limit  : {k}\n"));
+        }
+        (Some(s), None) => out.push_str(&format!("  sort   : {s} — full ordering\n")),
+        (None, Some(k)) => {
+            out.push_str(&format!(
+                "  limit  : {k} — first k in canonical rule order (k-bounded heap)\n"
+            ));
+        }
+        (None, None) => {}
+    }
+    out.push_str("  output : deterministic (sort key, then rule) total order\n");
+    out
+}
+
+/// Render the frame (full-scan fallback) plan.
+pub fn explain_frame(query: &BoundQuery, rows: usize, vocab: &Vocab) -> String {
+    let mut out = String::from("plan: frame backend (ablation comparator)\n");
+    out.push_str(&format!("  access : full-scan — {rows} rows\n"));
+    if !query.preds.is_empty() {
+        let preds: Vec<String> = query.preds.iter().map(|p| p.display(vocab)).collect();
+        out.push_str(&format!("  filter : {}\n", preds.join(" AND ")));
+    }
+    match (&query.sort, query.limit) {
+        (Some(s), Some(k)) => out.push_str(&format!("  sort   : {s} LIMIT {k}\n")),
+        (Some(s), None) => out.push_str(&format!("  sort   : {s}\n")),
+        (None, Some(k)) => out.push_str(&format!("  limit  : {k}\n")),
+        (None, None) => {}
+    }
+    out.push_str("  output : deterministic (sort key, then rule) total order\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::parser::parse;
+
+    fn vocab() -> Vocab {
+        let mut v = Vocab::new();
+        for n in ["milk", "bread", "beer"] {
+            v.intern(n);
+        }
+        v
+    }
+
+    fn planned(src: &str) -> TriePlan {
+        let q = parse(src).unwrap();
+        plan_trie(&bind(&q, &vocab()).unwrap())
+    }
+
+    #[test]
+    fn conseq_eq_selects_header_access() {
+        let p = planned("RULES WHERE conseq = milk AND confidence >= 0.6");
+        assert_eq!(p.access, AccessPath::ConseqHeader(0));
+        // conseq pred absorbed by access; confidence stays residual.
+        assert_eq!(p.residual.len(), 1);
+    }
+
+    #[test]
+    fn no_conseq_means_full_traversal() {
+        let p = planned("RULES WHERE antecedent CONTAINS bread");
+        assert_eq!(p.access, AccessPath::FullTraversal);
+        assert_eq!(p.residual.len(), 1);
+    }
+
+    #[test]
+    fn support_lower_bounds_become_prunes() {
+        let p = planned("RULES WHERE support >= 0.01 AND support < 0.5 AND lift > 1");
+        assert_eq!(p.prune, vec![SupportPrune { op: CmpOp::Ge, value: 0.01 }]);
+        // `< 0.5` and lift stay residual; `>= 0.01` is absorbed.
+        assert_eq!(p.residual.len(), 2);
+        assert!(p.pruned(0.005));
+        assert!(!p.pruned(0.01));
+    }
+
+    #[test]
+    fn support_eq_prunes_and_stays_residual() {
+        let p = planned("RULES WHERE support = 0.2");
+        assert_eq!(p.prune.len(), 1);
+        assert_eq!(p.residual.len(), 1);
+        assert!(p.pruned(0.1999));
+        assert!(!p.pruned(0.3)); // prune keeps it; residual rejects later
+    }
+
+    #[test]
+    fn contradictory_conseq_is_empty() {
+        let p = planned("RULES WHERE conseq = milk AND conseq = bread");
+        assert_eq!(p.access, AccessPath::Empty);
+        assert!(p.residual.is_empty() && p.prune.is_empty());
+        // Repeating the same item is not a contradiction.
+        let p = planned("RULES WHERE conseq = milk AND conseq = milk");
+        assert_eq!(p.access, AccessPath::ConseqHeader(0));
+    }
+
+    #[test]
+    fn unknown_item_is_a_bind_error() {
+        let q = parse("RULES WHERE conseq = caviar").unwrap();
+        let err = bind(&q, &vocab()).unwrap_err();
+        assert!(err.to_string().contains("caviar"), "{err}");
+    }
+}

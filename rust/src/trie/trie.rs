@@ -412,40 +412,81 @@ impl TrieOfRules {
     /// Visit every representable rule — each (node, split) pair — deriving
     /// metrics on the fly. `f(rule, metrics)`.
     pub fn for_each_rule(&self, mut f: impl FnMut(&Rule, &RuleMetrics)) {
+        self.for_each_rule_pruned(
+            |_| false,
+            |antecedent, consequent, metrics| {
+                let rule = Rule::new(
+                    Itemset::new(antecedent.to_vec()),
+                    Itemset::new(consequent.to_vec()),
+                );
+                f(&rule, metrics);
+            },
+        );
+    }
+
+    /// The generalized split traversal behind [`Self::for_each_rule`] and
+    /// the RQL executor: DFS over the arena where `prune(support)`
+    /// returning true cuts the *whole subtree* (sound because node counts
+    /// are antimonotone along paths), and `f(antecedent, consequent,
+    /// metrics)` receives slices into a reused path buffer — no `Rule`
+    /// allocation. Returns the number of nodes visited (pruned nodes
+    /// included, their descendants not).
+    ///
+    /// This is deliberately the *single* implementation of split
+    /// enumeration + metric derivation (including the compound-consequent
+    /// `c_c` fallback to `n` when the consequent's own path is absent in a
+    /// maximal-sequence trie): the RQL engine's trie/frame parity contract
+    /// depends on these semantics never forking.
+    pub fn for_each_rule_pruned(
+        &self,
+        mut prune: impl FnMut(f64) -> bool,
+        mut f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
+    ) -> usize {
         let n = self.num_transactions as u64;
-        // Reusable path buffer: (item, count) pairs root-first.
+        let n_f = self.num_transactions as f64;
+        let mut visited = 0usize;
         let mut stack: Vec<(NodeIdx, usize)> = self.nodes[ROOT as usize]
             .children
             .iter()
             .map(|&(_, c)| (c, 1usize))
             .collect();
-        let mut path: Vec<(ItemId, u64)> = Vec::new();
+        // Reusable path buffers: items and counts root-first.
+        let mut items: Vec<ItemId> = Vec::new();
+        let mut counts: Vec<u64> = Vec::new();
         while let Some((idx, depth)) = stack.pop() {
-            path.truncate(depth - 1);
+            items.truncate(depth - 1);
+            counts.truncate(depth - 1);
             let node = &self.nodes[idx as usize];
-            path.push((node.item, node.count));
+            visited += 1;
+            items.push(node.item);
+            counts.push(node.count);
+            if prune(node.count as f64 / n_f) {
+                continue;
+            }
             // Emit all splits of this node's path.
-            for split in 1..path.len() {
-                let antecedent: Vec<ItemId> = path[..split].iter().map(|&(i, _)| i).collect();
-                let consequent: Vec<ItemId> = path[split..].iter().map(|&(i, _)| i).collect();
-                let c_a = path[split - 1].1;
-                let c_ac = node.count;
+            for split in 1..items.len() {
+                let consequent = &items[split..];
                 let c_c = if consequent.len() == 1 {
                     self.order.frequency(consequent[0])
                 } else {
-                    match self.support_of(&consequent) {
+                    match self.support_of(consequent) {
                         Some(c) => c,
                         None => n,
                     }
                 };
-                let rule = Rule::new(Itemset::new(antecedent), Itemset::new(consequent));
-                let metrics = RuleMetrics::from_counts(RuleCounts { n, c_ac, c_a, c_c });
-                f(&rule, &metrics);
+                let metrics = RuleMetrics::from_counts(RuleCounts {
+                    n,
+                    c_ac: node.count,
+                    c_a: counts[split - 1],
+                    c_c,
+                });
+                f(&items[..split], consequent, &metrics);
             }
             for &(_, child) in &node.children {
                 stack.push((child, depth + 1));
             }
         }
+        visited
     }
 
     /// Materialize all representable rules (tests / dataframe parity).

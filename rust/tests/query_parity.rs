@@ -1,0 +1,216 @@
+//! RQL backend parity: for generated rulesets and randomized queries, the
+//! trie-planned executor must return exactly the rows the full-scan
+//! RuleFrame backend returns — same rules, same metric floats, same order
+//! under the engine's total ordering (`f64::total_cmp` on the sort key,
+//! then rule order).
+//!
+//! This is the contract that makes the planner's shortcuts (header-list
+//! access, subtree pruning, top-k pushdown) *optimizations* rather than
+//! semantics changes.
+
+use trie_of_rules::bench_support::workloads::Workload;
+use trie_of_rules::data::transaction::{paper_example_db, TransactionDb};
+use trie_of_rules::data::vocab::Vocab;
+use trie_of_rules::query::{query_frame, query_trie, QueryOutput};
+use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
+use trie_of_rules::util::rng::Rng;
+
+fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
+    let num_items = g.usize_in(3, 12);
+    let num_tx = g.usize_in(4, 60);
+    (0..num_tx)
+        .map(|_| {
+            let len = g.usize_in(1, num_items.min(6) + 1);
+            (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
+        })
+        .collect()
+}
+
+fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
+    if rows.is_empty() {
+        return None;
+    }
+    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
+    let mut b = TransactionDb::builder(Vocab::synthetic(max_item as usize + 1));
+    for r in rows {
+        b.push_ids(r.clone());
+    }
+    Some(b.build())
+}
+
+/// One random RQL query over the workload's vocabulary. Items are drawn
+/// from the *whole* vocabulary (not just frequent items), so queries over
+/// infrequent consequents — empty header lists — are exercised too.
+fn random_rql(rng: &mut Rng, w: &Workload) -> String {
+    let vocab = w.db.vocab();
+    let any_item = |rng: &mut Rng| vocab.name(rng.below(vocab.len()) as u32).to_string();
+    let mut q = String::from("RULES");
+    let mut preds: Vec<String> = Vec::new();
+    if rng.chance(0.5) {
+        preds.push(format!("conseq = '{}'", any_item(rng)));
+    }
+    if rng.chance(0.3) {
+        preds.push(format!("conseq CONTAINS '{}'", any_item(rng)));
+    }
+    if rng.chance(0.4) {
+        preds.push(format!("antecedent CONTAINS '{}'", any_item(rng)));
+    }
+    if rng.chance(0.6) {
+        let metric = Metric::ALL[rng.below(Metric::ALL.len())];
+        let op = ["<=", "<", ">=", ">", "="][rng.below(5)];
+        // A range wide enough to cover every metric's span (lift and
+        // conviction exceed 1; leverage/zhang/yule_q go negative).
+        let value = rng.f64() * 3.0 - 0.5;
+        preds.push(format!("{} {op} {value:.4}", metric.name()));
+    }
+    for (i, p) in preds.iter().enumerate() {
+        q.push_str(if i == 0 { " WHERE " } else { " AND " });
+        q.push_str(p);
+    }
+    if rng.chance(0.5) {
+        let metric = Metric::ALL[rng.below(Metric::ALL.len())];
+        let dir = if rng.chance(0.5) { "DESC" } else { "ASC" };
+        q.push_str(&format!(" SORT BY {} {dir}", metric.name()));
+    }
+    if rng.chance(0.5) {
+        q.push_str(&format!(" LIMIT {}", rng.below(20)));
+    }
+    q
+}
+
+/// Run one query on both backends and compare exactly.
+fn check_parity(w: &Workload, q: &str) -> Result<(), String> {
+    let t = match query_trie(&w.trie, w.db.vocab(), q) {
+        Ok(QueryOutput::Rows(rs)) => rs,
+        Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
+        Err(e) => return Err(format!("trie failed on `{q}`: {e:#}")),
+    };
+    let f = match query_frame(&w.frame, w.db.vocab(), q) {
+        Ok(QueryOutput::Rows(rs)) => rs,
+        Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
+        Err(e) => return Err(format!("frame failed on `{q}`: {e:#}")),
+    };
+    if t.rows.len() != f.rows.len() {
+        return Err(format!(
+            "`{q}`: trie {} rows vs frame {} rows",
+            t.rows.len(),
+            f.rows.len()
+        ));
+    }
+    for (i, (a, b)) in t.rows.iter().zip(&f.rows).enumerate() {
+        if a != b {
+            return Err(format!(
+                "`{q}`: row {i} differs\n  trie : {} {:?}\n  frame: {} {:?}",
+                a.rule, a.metrics, b.rule, b.metrics
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_trie_and_frame_backends_agree_exactly() {
+    for_all(
+        "rql-trie==frame",
+        40,
+        0x5E1EC7,
+        |g| {
+            let rows = random_db(g);
+            let qseed = g.rng().next_u64();
+            (rows, qseed)
+        },
+        |(rows, qseed)| {
+            shrink_vec(rows)
+                .into_iter()
+                .map(|r| (r, *qseed))
+                .collect()
+        },
+        |(rows, qseed)| format!("qseed {qseed:#x}, rows {rows:?}"),
+        |(rows, qseed)| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("prop", db, 0.12);
+            let mut rng = Rng::new(*qseed);
+            for _ in 0..6 {
+                let q = random_rql(&mut rng, &w);
+                check_parity(&w, &q)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_unsorted_output_is_canonical_rule_order() {
+    for_all(
+        "rql-canonical-order",
+        25,
+        0x0D_E12,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("prop", db, 0.12);
+            let rs = query_trie(&w.trie, w.db.vocab(), "RULES")
+                .map_err(|e| format!("{e:#}"))?
+                .into_rows();
+            for pair in rs.rows.windows(2) {
+                if pair[0].rule >= pair[1].rule {
+                    return Err(format!(
+                        "rows out of canonical order: {} !< {}",
+                        pair[0].rule, pair[1].rule
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The ISSUE acceptance query shape, end to end on the paper's example:
+/// executes on both backends with identical results, and EXPLAIN shows the
+/// header-list access path (not a full scan).
+#[test]
+fn acceptance_conseq_metric_sort_limit() {
+    let w = Workload::build("paper", paper_example_db(), 0.3);
+    let q = "RULES WHERE conseq = a AND support >= 0.3 SORT BY confidence DESC LIMIT 5";
+    check_parity(&w, q).unwrap();
+    let rs = query_trie(&w.trie, w.db.vocab(), q).unwrap().into_rows();
+    assert!(!rs.rows.is_empty(), "acceptance query returned nothing");
+    assert!(rs.rows.len() <= 5);
+    // Descending confidence, ties broken by ascending rule order.
+    for pair in rs.rows.windows(2) {
+        let (a, b) = (&pair[0], &pair[1]);
+        let ord = b.metrics.confidence.total_cmp(&a.metrics.confidence);
+        assert!(
+            ord == std::cmp::Ordering::Less
+                || (ord == std::cmp::Ordering::Equal && a.rule < b.rule),
+            "ordering violated"
+        );
+    }
+
+    let explain = query_trie(&w.trie, w.db.vocab(), &format!("EXPLAIN {q}")).unwrap();
+    let QueryOutput::Explain(text) = explain else {
+        panic!("EXPLAIN did not explain");
+    };
+    assert!(text.contains("conseq-header(a)"), "{text}");
+    assert!(!text.contains("full-traversal"), "{text}");
+    assert!(text.contains("top-k heap pushdown"), "{text}");
+}
+
+/// Errors must agree across backends too: both reject unknown items and
+/// unparseable queries.
+#[test]
+fn error_parity() {
+    let w = Workload::build("paper", paper_example_db(), 0.3);
+    for q in [
+        "RULES WHERE conseq = nosuchitem",
+        "RULES WHERE bogusmetric >= 1",
+        "RULES SORT BY nope",
+    ] {
+        let t = query_trie(&w.trie, w.db.vocab(), q);
+        let f = query_frame(&w.frame, w.db.vocab(), q);
+        assert!(t.is_err() && f.is_err(), "both should reject `{q}`");
+    }
+}

@@ -31,6 +31,14 @@ fn missing_artifact_file_is_reported() {
 }
 
 #[test]
+// Without the `xla` feature the stub Runtime reports "built without the
+// `xla` feature" before reaching HLO parsing, so the error-text assertions
+// below only hold on a real PJRT build (environment limitation — the xla
+// bindings crate is not in the offline vendor set).
+#[cfg_attr(
+    not(feature = "xla"),
+    ignore = "needs the real PJRT runtime (--features xla)"
+)]
 fn corrupt_hlo_text_fails_at_compile_time() {
     let Some(src) = have_artifacts() else {
         eprintln!("skipping: artifacts not built");
