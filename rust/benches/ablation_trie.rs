@@ -4,7 +4,11 @@
 //! * search: O(path) child-walk vs linear scan over materialized rules;
 //! * traversal: allocation-free `for_each_split` vs `for_each_rule`
 //!   (materializes `Rule` + full metric vector) vs the frame's columnar
-//!   scan.
+//!   scan;
+//! * layout: the frozen columnar/CSR trie (preorder linear sweep, CSR
+//!   child probes, contiguous metric columns) vs the mutable builder's
+//!   pointer-shaped arena (per-node child `Vec`s, stack DFS) — the win
+//!   of `TrieBuilder::freeze`, recorded per run in the BENCH json.
 
 use std::time::Instant;
 
@@ -13,6 +17,7 @@ use trie_of_rules::bench_support::report::Report;
 use trie_of_rules::bench_support::workloads;
 use trie_of_rules::rules::metrics::Metric;
 use trie_of_rules::trie::trie::FindOutcome;
+use trie_of_rules::trie::TrieBuilder;
 
 fn main() {
     let w = workloads::groceries(0.005);
@@ -103,6 +108,49 @@ fn main() {
             ("full_metrics_s", t_full),
             ("frame_columnar_s", t_frame_cols),
             ("frame_materialized_s", t_frame_mat),
+        ],
+    );
+
+    // --- layout: frozen CSR vs mutable builder arena --------------------
+    // Same trie content, two storage layouts: the builder is rebuilt from
+    // the workload's own mining output, so both sides serve identical
+    // rules and the delta is purely the freeze.
+    let builder = TrieBuilder::from_frequent(&w.frequent, &w.order).expect("builder");
+    // Frozen-side traversal is the t_split measurement above — reuse it so
+    // the BENCH json carries one number for one quantity.
+    let frozen_trav = t_split;
+    let builder_trav = time(|| {
+        let mut acc = 0.0;
+        builder.for_each_split(|_, _, s, c| acc += s + c);
+        acc
+    });
+    let frozen_find = bench("layout-frozen-find", cfg, || {
+        probe
+            .iter()
+            .filter(|r| matches!(w.trie.find_rule(r), FindOutcome::Found(_)))
+            .count()
+    });
+    let builder_find = bench("layout-builder-find", cfg, || {
+        probe
+            .iter()
+            .filter(|r| matches!(builder.find_rule(r), FindOutcome::Found(_)))
+            .count()
+    });
+    report.row(
+        "layout",
+        &[
+            ("frozen_traverse_s", frozen_trav),
+            ("builder_traverse_s", builder_trav),
+            (
+                "traverse_speedup",
+                builder_trav / frozen_trav.max(1e-12),
+            ),
+            ("frozen_find_s", frozen_find.mean_seconds() / probe.len() as f64),
+            ("builder_find_s", builder_find.mean_seconds() / probe.len() as f64),
+            (
+                "find_speedup",
+                builder_find.mean_seconds() / frozen_find.mean_seconds().max(1e-12),
+            ),
         ],
     );
 

@@ -12,6 +12,13 @@
 //! * `top_n` — a **full stable sort** of row indices by the metric column,
 //!   then head(k) (`df.sort_values(...).head(k)`).
 //! * `for_each_row` — row-wise traversal through the column stores.
+//!
+//! As the RQL parity oracle (DESIGN.md §5.3/§7) the frame's *row order* is
+//! whatever ruleset order it was built from — since the freeze refactor
+//! that is the frozen trie's preorder enumeration when built off
+//! `collect_rules()`. Parity never depends on it: both query backends
+//! normalize rows through the same `(sort key, rule)` total order before
+//! emission, and top-N comparisons assert on metric values.
 
 use crate::rules::metrics::{Metric, RuleMetrics};
 use crate::rules::rule::Rule;

@@ -36,6 +36,7 @@ use crate::rules::rulegen::{generate_rules, RuleGenConfig};
 use crate::rules::ruleset::RuleSet;
 use crate::runtime::support_exec::XlaSupportCounter;
 use crate::runtime::Runtime;
+use crate::trie::builder::TrieBuilder;
 use crate::trie::trie::TrieOfRules;
 
 /// Where transactions come from.
@@ -131,11 +132,17 @@ pub fn run(
     report.num_rules = ruleset.len();
 
     // ---------------------------------------------------------------
-    // Stage 5: build both representations.
+    // Stage 5: build both representations. Trie construction is two
+    // phases now: the mutable builder ingests paths, then freeze()
+    // renumbers into the immutable columnar (CSR) serving layout every
+    // query path runs against.
     // ---------------------------------------------------------------
     let t0 = Instant::now();
-    let trie = TrieOfRules::from_frequent(&closed, &order)?;
-    report.push_stage("build-trie", t0.elapsed(), trie.num_nodes());
+    let trie_builder = TrieBuilder::from_frequent(&closed, &order)?;
+    report.push_stage("build-trie", t0.elapsed(), trie_builder.num_nodes());
+    let t0 = Instant::now();
+    let trie = trie_builder.freeze();
+    report.push_stage("freeze-trie", t0.elapsed(), trie.num_nodes());
     let t0 = Instant::now();
     let frame = RuleFrame::from_ruleset(&ruleset);
     report.push_stage("build-frame", t0.elapsed(), frame.len());

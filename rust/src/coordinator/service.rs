@@ -250,6 +250,11 @@ impl QueryEngine {
         out
     }
 
+    /// `STATS`: counters over the frozen trie. `mem_kib` is exact, not
+    /// estimated — the columnar layout's footprint is the sum of its
+    /// column lengths times element widths (node columns + ten metric
+    /// columns + child CSR + header CSR; see
+    /// [`TrieOfRules::memory_bytes`] and DESIGN.md §8).
     fn cmd_stats(&self) -> String {
         format!(
             "STATS nodes={} rules={} mem_kib={} queries={}",

@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::baseline::dataframe::RuleFrame;
 use crate::data::vocab::{ItemId, Vocab};
 use crate::mining::itemset::Itemset;
-use crate::query::ast::{Query, SortSpec};
+use crate::query::ast::{CmpOp, Query, SortSpec};
 use crate::query::plan::{self, AccessPath, BoundPred, TriePlan};
 use crate::rules::metrics::RuleMetrics;
 use crate::rules::rule::Rule;
@@ -237,9 +237,17 @@ pub fn execute_trie(trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<
 }
 
 /// Header-list access: only the nodes carrying the consequent item are
-/// touched; each depth-≥2 node is exactly one candidate rule (consequent =
-/// the node item, antecedent = the rest of its root path), with metrics
-/// already stored on the node.
+/// touched (a CSR slice of the frozen trie, indexed by item rank); each
+/// depth-≥2 node is exactly one candidate rule (consequent = the node
+/// item, antecedent = the rest of its root path), with metrics already
+/// sitting in the frozen metric columns.
+///
+/// Predicate placement is cheapest-first: the prune bound and every
+/// residual *metric* predicate read straight off the contiguous columns by
+/// node index — no path materialization, no `RuleMetrics` assembly, no
+/// `Rule` allocation. Only candidates surviving those reach the
+/// item-membership residuals (which need the path) and only matched rows
+/// assemble their metric vector.
 fn run_header(
     trie: &TrieOfRules,
     item: ItemId,
@@ -248,19 +256,41 @@ fn run_header(
     acc: &mut Accumulator,
 ) {
     let n = trie.num_transactions() as f64;
+    let counts = trie.counts_column();
+    let depths = trie.depths_column();
+    let mut metric_residual: Vec<(&[f64], CmpOp, f64)> = Vec::new();
+    let mut item_residual: Vec<&BoundPred> = Vec::new();
+    for pred in &plan.residual {
+        match *pred {
+            BoundPred::MetricCmp { metric, op, value } => {
+                metric_residual.push((trie.metric_column(metric), op, value))
+            }
+            ref other => item_residual.push(other),
+        }
+    }
     for &idx in trie.item_nodes(item) {
-        let node = trie.node(idx);
+        let i = idx as usize;
         stats.scanned += 1;
-        if node.depth < 2 {
+        if depths[i] < 2 {
             continue; // depth-1 nodes are itemset entries, not rules
         }
-        if plan.pruned(node.count as f64 / n) {
+        if plan.pruned(counts[i] as f64 / n) {
             continue;
         }
         stats.candidates += 1;
+        if !metric_residual
+            .iter()
+            .all(|&(col, op, value)| op.matches(col[i], value))
+        {
+            continue;
+        }
         let path = trie.path_items(idx);
         let (antecedent, consequent) = path.split_at(path.len() - 1);
-        if !residual_pass(&plan.residual, antecedent, consequent, &node.metrics) {
+        let metrics = trie.metrics(idx);
+        if !item_residual
+            .iter()
+            .all(|p| pred_matches(p, antecedent, consequent, &metrics))
+        {
             continue;
         }
         stats.matched += 1;
@@ -269,13 +299,16 @@ fn run_header(
                 Itemset::new(antecedent.to_vec()),
                 Itemset::new(consequent.to_vec()),
             ),
-            metrics: node.metrics,
+            metrics,
         });
     }
 }
 
-/// Full DFS with support-antimonotone subtree pruning, via the trie's own
-/// [`TrieOfRules::for_each_rule_pruned`] — the same split enumeration and
+/// Full traversal with support-antimonotone pruning, via the trie's own
+/// [`TrieOfRules::for_each_rule_pruned`] — on the frozen layout this is a
+/// linear preorder sweep over the node columns where a failed prune bound
+/// skips the whole contiguous subtree range (`i = subtree_end[i]`), not a
+/// per-node child-vector recursion. It is the same split enumeration and
 /// metric derivation `for_each_rule` (and hence the parity frame) uses, so
 /// rows match bit-for-bit by construction.
 fn run_traversal(

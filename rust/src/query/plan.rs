@@ -9,9 +9,11 @@
 //!    of the trie.
 //! 2. **Support antimonotonicity** — node counts never grow along a path,
 //!    so a `support >= v` predicate that fails at a node fails for the
-//!    node's whole subtree: the executor cuts the subtree off instead of
-//!    filtering row by row (the trie-shaped pruning of Hosseininasab &
-//!    van Hoeve 2022).
+//!    node's whole subtree. On the frozen preorder layout a subtree is the
+//!    contiguous index range `[i, subtree_end[i])`, so the executor cuts
+//!    it off with a single index jump instead of filtering row by row (the
+//!    trie-shaped pruning of Hosseininasab & van Hoeve 2022, flattened à
+//!    la their hybrid-trie layout).
 //! 3. **Bounded-order output** — `SORT BY m LIMIT k` never needs the full
 //!    sorted result; the executor keeps a k-bounded heap (pushdown), so
 //!    memory is O(k) and time O(rows · log k) instead of a full sort.
@@ -98,9 +100,10 @@ pub fn bind(query: &Query, vocab: &Vocab) -> Result<BoundQuery> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum AccessPath {
     /// Jump straight to the nodes carrying the consequent item via the
-    /// header table — no traversal of unrelated subtrees.
+    /// rank-indexed CSR header table — no traversal of unrelated subtrees.
     ConseqHeader(ItemId),
-    /// Full DFS over the trie (still subject to subtree pruning).
+    /// Linear preorder sweep over the frozen node columns (still subject
+    /// to subtree-range pruning).
     FullTraversal,
     /// Predicates are contradictory (e.g. two different `conseq =` items);
     /// the result is empty without touching the structure.
@@ -221,7 +224,7 @@ pub fn explain_trie(plan: &TriePlan, trie: &TrieOfRules, vocab: &Vocab) -> Strin
         }
         AccessPath::FullTraversal => {
             out.push_str(&format!(
-                "  access : full-traversal — {} nodes, {} representable rules\n",
+                "  access : full-traversal — linear preorder sweep, {} nodes, {} representable rules\n",
                 trie.num_nodes(),
                 trie.num_representable_rules()
             ));
@@ -232,7 +235,7 @@ pub fn explain_trie(plan: &TriePlan, trie: &TrieOfRules, vocab: &Vocab) -> Strin
     }
     for p in &plan.prune {
         out.push_str(&format!(
-            "  prune  : support {} {} (subtree cutoff via count antimonotonicity)\n",
+            "  prune  : support {} {} (subtree cutoff = preorder range skip, count antimonotonicity)\n",
             p.op.symbol(),
             p.value
         ));

@@ -1,0 +1,525 @@
+//! Mutable construction of the Trie of Rules.
+//!
+//! [`TrieBuilder`] owns the paper's Step-3 machinery — inserting
+//! frequency-ordered paths into an arena of [`TrieNode`]s with per-node
+//! child vectors — and nothing else. Serving happens on the immutable,
+//! preorder-renumbered, columnar [`TrieOfRules`] produced by
+//! [`TrieBuilder::freeze`].
+//!
+//! The builder intentionally keeps the *old* pointer-shaped read paths
+//! (child-vector `walk`, stack-DFS traversal, on-demand metric
+//! computation): they are the reference oracle for the freeze parity
+//! property tests (`rust/tests/freeze.rs`) and the "old layout" arm of
+//! `benches/ablation_trie.rs`. Hot serving paths must not call them.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::vocab::ItemId;
+use crate::mining::apriori::SupportCounter;
+use crate::mining::counts::ItemOrder;
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+use crate::rules::metrics::{Metric, RuleCounts, RuleMetrics};
+use crate::rules::rule::Rule;
+use crate::trie::node::{NodeIdx, TrieNode, ROOT, ROOT_ITEM};
+use crate::trie::trie::{FindOutcome, TrieOfRules};
+
+/// The mutable Trie-of-Rules under construction.
+///
+/// No header table lives here: the frozen form derives its CSR header
+/// (item-rank → preorder node list) at freeze time, so there is no
+/// `HashMap` anywhere on a serving path and two builds of the same input
+/// are bit-identical.
+#[derive(Debug, Clone)]
+pub struct TrieBuilder {
+    nodes: Vec<TrieNode>,
+    order: ItemOrder,
+    num_transactions: usize,
+}
+
+impl TrieBuilder {
+    // ------------------------------------------------------------------
+    // construction
+    // ------------------------------------------------------------------
+
+    fn empty(order: ItemOrder, num_transactions: usize) -> Self {
+        let root = TrieNode {
+            item: ROOT_ITEM,
+            count: num_transactions as u64,
+            parent: ROOT,
+            depth: 0,
+            children: Vec::new(),
+        };
+        Self {
+            nodes: vec![root],
+            order,
+            num_transactions,
+        }
+    }
+
+    /// Build from a *complete* frequent-itemset collection (e.g. Apriori or
+    /// FP-growth output — the paper's evaluation setting). Every path
+    /// prefix of a frequency-ordered frequent itemset is itself frequent,
+    /// so all node supports come from the mining output with no recounting.
+    pub fn from_frequent(fi: &FrequentItemsets, order: &ItemOrder) -> Result<TrieBuilder> {
+        let support: std::collections::HashMap<&Itemset, u64> =
+            fi.sets.iter().map(|(s, c)| (s, *c)).collect();
+        let mut trie = Self::empty(order.clone(), fi.num_transactions);
+        for (set, _) in &fi.sets {
+            let path = order.order_itemset(set.items());
+            trie.insert_path(&path, |prefix| {
+                let key = Itemset::new(prefix.to_vec());
+                support.get(&key).copied().with_context(|| {
+                    format!("prefix {key} missing from frequent set (downward closure violated)")
+                })
+            })?;
+        }
+        Ok(trie)
+    }
+
+    /// Build from frequent *sequences* (the paper's Step 1: FP-max output)
+    /// plus a support-counting backend for the prefix supports the maximal
+    /// sets don't carry. The backend may be the rust bitset counter or the
+    /// XLA-artifact counter — this is the trie-side integration point of
+    /// the L1 Pallas kernel.
+    pub fn from_sequences(
+        sequences: &[(Vec<ItemId>, u64)],
+        order: &ItemOrder,
+        counter: &mut dyn SupportCounter,
+        num_transactions: usize,
+    ) -> Result<TrieBuilder> {
+        // Gather every distinct proper prefix that needs a support count.
+        // Dedup hashes borrowed slices into `sequences` — the only
+        // allocation per distinct prefix is the one `Itemset` pushed to
+        // `need`, and first-insertion order keeps the counting batch
+        // deterministic.
+        let mut need: Vec<Itemset> = Vec::new();
+        let mut seen: HashSet<&[ItemId]> = HashSet::new();
+        for (seq, _) in sequences {
+            for d in 1..seq.len() {
+                let prefix = &seq[..d];
+                if seen.insert(prefix) {
+                    need.push(Itemset::new(prefix.to_vec()));
+                }
+            }
+        }
+        let counts = counter.count(&need);
+        let mut support: std::collections::HashMap<Itemset, u64> =
+            need.into_iter().zip(counts).collect();
+        // Full sequences carry known counts; they override any prefix
+        // count (a maximal sequence may be a proper prefix of another).
+        for (seq, count) in sequences {
+            support.insert(Itemset::new(seq.clone()), *count);
+        }
+
+        let mut trie = Self::empty(order.clone(), num_transactions);
+        for (seq, _) in sequences {
+            let path = order.order_itemset(seq);
+            trie.insert_path(&path, |prefix| {
+                let key = Itemset::new(prefix.to_vec());
+                support
+                    .get(&key)
+                    .copied()
+                    .with_context(|| format!("prefix {key} not counted"))
+            })?;
+        }
+        Ok(trie)
+    }
+
+    /// Insert one frequency-ordered path, annotating every newly created
+    /// node with its true support from `support_of` (paper Step 3).
+    pub fn insert_path(
+        &mut self,
+        path: &[ItemId],
+        mut support_of: impl FnMut(&[ItemId]) -> Result<u64>,
+    ) -> Result<()> {
+        if path.is_empty() {
+            bail!("cannot insert an empty path");
+        }
+        let mut cur = ROOT;
+        for depth in 1..=path.len() {
+            let item = path[depth - 1];
+            cur = match self.nodes[cur as usize].child(item) {
+                Some(c) => c,
+                None => {
+                    let count = support_of(&path[..depth])?;
+                    let idx = self.nodes.len() as NodeIdx;
+                    self.nodes.push(TrieNode {
+                        item,
+                        count,
+                        parent: cur,
+                        depth: depth as u16,
+                        children: Vec::new(),
+                    });
+                    self.nodes[cur as usize].link_child(item, idx);
+                    idx
+                }
+            };
+        }
+        Ok(())
+    }
+
+    /// Rebuild a builder from raw node triples `(item, parent, count)` in
+    /// parent-before-child order (the serializer's v1 wire form; see
+    /// [`TrieOfRules::raw_nodes`]).
+    pub fn from_raw_nodes(
+        order: ItemOrder,
+        num_transactions: usize,
+        raw: &[(ItemId, NodeIdx, u64)],
+    ) -> Result<TrieBuilder> {
+        let mut trie = Self::empty(order, num_transactions);
+        for &(item, parent, count) in raw {
+            let idx = trie.nodes.len() as NodeIdx;
+            anyhow::ensure!(
+                (parent as usize) < trie.nodes.len(),
+                "node {idx}: parent {parent} not yet defined (corrupt file?)"
+            );
+            anyhow::ensure!(
+                (item as usize) < trie.order.frequencies().len(),
+                "node {idx}: item {item} out of range ({} items)",
+                trie.order.frequencies().len()
+            );
+            anyhow::ensure!(
+                trie.order.is_frequent(item),
+                "node {idx}: item {item} is not frequent under the stored order"
+            );
+            let parent_node = &trie.nodes[parent as usize];
+            let c_a = parent_node.count;
+            anyhow::ensure!(
+                count <= c_a,
+                "node {idx}: count {count} exceeds parent count {c_a}"
+            );
+            let depth = parent_node.depth + 1;
+            trie.nodes.push(TrieNode {
+                item,
+                count,
+                parent,
+                depth,
+                children: Vec::new(),
+            });
+            anyhow::ensure!(
+                trie.nodes[parent as usize].link_child(item, idx),
+                "node {idx}: duplicate child {item} under {parent}"
+            );
+        }
+        Ok(trie)
+    }
+
+    // ------------------------------------------------------------------
+    // freeze — the handoff to the serving layout
+    // ------------------------------------------------------------------
+
+    /// Produce the immutable, DFS-preorder-renumbered, columnar serving
+    /// form. Children are visited in child-vector (item-id) order, so the
+    /// renumbering — and every downstream column — is deterministic.
+    ///
+    /// Preorder numbering is what turns subtrees into contiguous index
+    /// ranges `[i, subtree_end[i])`: support pruning becomes a range skip
+    /// and full traversal a linear array sweep (see `TrieOfRules`).
+    pub fn freeze(&self) -> TrieOfRules {
+        let n = self.nodes.len();
+        let mut items = Vec::with_capacity(n);
+        let mut counts = Vec::with_capacity(n);
+        let mut parents = Vec::with_capacity(n);
+        let mut depths = Vec::with_capacity(n);
+        // old index -> new (preorder) index
+        let mut renum = vec![0 as NodeIdx; n];
+        // Explicit preorder DFS; children pushed in reverse child-vector
+        // order so the smallest item pops (and numbers) first.
+        let mut stack: Vec<NodeIdx> = vec![ROOT];
+        while let Some(old) = stack.pop() {
+            let node = &self.nodes[old as usize];
+            let new = items.len() as NodeIdx;
+            renum[old as usize] = new;
+            items.push(node.item);
+            counts.push(node.count);
+            // Parents always precede children in preorder, so the parent's
+            // new index is already final.
+            parents.push(if old == ROOT { ROOT } else { renum[node.parent as usize] });
+            depths.push(node.depth);
+            for &(_, child) in node.children.iter().rev() {
+                stack.push(child);
+            }
+        }
+        debug_assert_eq!(items.len(), n, "freeze visited every node exactly once");
+        TrieOfRules::from_core_columns(
+            self.order.clone(),
+            self.num_transactions,
+            items,
+            counts,
+            parents,
+            depths,
+        )
+        .expect("builder invariants guarantee valid columns")
+    }
+
+    // ------------------------------------------------------------------
+    // accessors (tests, oracle, ablation)
+    // ------------------------------------------------------------------
+
+    pub fn num_transactions(&self) -> usize {
+        self.num_transactions
+    }
+
+    /// Number of nodes excluding the root.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    pub fn order(&self) -> &ItemOrder {
+        &self.order
+    }
+
+    pub fn node(&self, idx: NodeIdx) -> &TrieNode {
+        &self.nodes[idx as usize]
+    }
+
+    /// Items on the path root→`idx`, root-first.
+    pub fn path_items(&self, idx: NodeIdx) -> Vec<ItemId> {
+        let mut rev = Vec::new();
+        let mut cur = idx;
+        while cur != ROOT {
+            rev.push(self.nodes[cur as usize].item);
+            cur = self.nodes[cur as usize].parent;
+        }
+        rev.reverse();
+        rev
+    }
+
+    /// Walk the ordered path for `items`, returning the final node.
+    pub fn walk(&self, ordered_path: &[ItemId]) -> Option<NodeIdx> {
+        let mut cur = ROOT;
+        for &item in ordered_path {
+            cur = self.nodes[cur as usize].child(item)?;
+        }
+        Some(cur)
+    }
+
+    /// Absolute support count of an itemset, if its ordered path exists.
+    pub fn support_of(&self, items: &[ItemId]) -> Option<u64> {
+        if items.iter().any(|&i| !self.order.is_frequent(i)) {
+            return None;
+        }
+        let path = self.order.order_itemset(items);
+        self.walk(&path).map(|n| self.nodes[n as usize].count)
+    }
+
+    /// Metric vector of the stored node-rule at `idx`, computed on demand
+    /// from counts (the builder stores no metrics).
+    fn node_metrics(&self, idx: NodeIdx) -> RuleMetrics {
+        let node = &self.nodes[idx as usize];
+        RuleMetrics::from_counts(RuleCounts {
+            n: (self.num_transactions as u64).max(1),
+            c_ac: node.count,
+            c_a: self.nodes[node.parent as usize].count,
+            c_c: if node.item == ROOT_ITEM {
+                node.count
+            } else {
+                self.order.frequency(node.item)
+            },
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // oracle read paths (pointer-shaped "old layout")
+    // ------------------------------------------------------------------
+
+    /// Pointer-walk rule lookup — semantically identical to the frozen
+    /// [`TrieOfRules::find_rule`]; kept as the parity oracle and the
+    /// old-layout arm of the ablation bench.
+    pub fn find_rule(&self, rule: &Rule) -> FindOutcome {
+        let a = rule.antecedent.items();
+        let c = rule.consequent.items();
+        if a.iter().chain(c).any(|&i| !self.order.is_frequent(i)) {
+            return FindOutcome::Absent;
+        }
+        let max_a = a.iter().map(|&i| self.order.rank(i).unwrap()).max().unwrap();
+        let min_c = c.iter().map(|&i| self.order.rank(i).unwrap()).min().unwrap();
+        if max_a >= min_c {
+            return FindOutcome::NotRepresentable;
+        }
+        let a_path = self.order.order_itemset(a);
+        let c_path = self.order.order_itemset(c);
+        let Some(a_node) = self.walk(&a_path) else {
+            return FindOutcome::Absent;
+        };
+        let mut cur = a_node;
+        for &item in &c_path {
+            match self.nodes[cur as usize].child(item) {
+                Some(nxt) => cur = nxt,
+                None => return FindOutcome::Absent,
+            }
+        }
+        if c_path.len() == 1 {
+            return FindOutcome::Found(self.node_metrics(cur));
+        }
+        let c_ac = self.nodes[cur as usize].count;
+        let c_a = self.nodes[a_node as usize].count;
+        let c_c = match self.walk(&c_path) {
+            Some(c_node) => self.nodes[c_node as usize].count,
+            None => self.num_transactions as u64,
+        };
+        FindOutcome::Found(RuleMetrics::from_counts(RuleCounts {
+            n: self.num_transactions as u64,
+            c_ac,
+            c_a,
+            c_c,
+        }))
+    }
+
+    /// Stack-DFS split traversal with support pruning — the old-layout
+    /// twin of [`TrieOfRules::for_each_rule_pruned`], same emission
+    /// semantics (per-node visit order differs; callers must not depend on
+    /// it). Returns nodes visited (pruned nodes included, their
+    /// descendants not).
+    pub fn for_each_rule_pruned(
+        &self,
+        mut prune: impl FnMut(f64) -> bool,
+        mut f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
+    ) -> usize {
+        let n = self.num_transactions as u64;
+        let n_f = self.num_transactions as f64;
+        let mut visited = 0usize;
+        let mut stack: Vec<(NodeIdx, usize)> = self.nodes[ROOT as usize]
+            .children
+            .iter()
+            .map(|&(_, c)| (c, 1usize))
+            .collect();
+        let mut items: Vec<ItemId> = Vec::new();
+        let mut counts: Vec<u64> = Vec::new();
+        while let Some((idx, depth)) = stack.pop() {
+            items.truncate(depth - 1);
+            counts.truncate(depth - 1);
+            let node = &self.nodes[idx as usize];
+            visited += 1;
+            items.push(node.item);
+            counts.push(node.count);
+            if prune(node.count as f64 / n_f) {
+                continue;
+            }
+            for split in 1..items.len() {
+                let consequent = &items[split..];
+                let c_c = if consequent.len() == 1 {
+                    self.order.frequency(consequent[0])
+                } else {
+                    match self.support_of(consequent) {
+                        Some(c) => c,
+                        None => n,
+                    }
+                };
+                let metrics = RuleMetrics::from_counts(RuleCounts {
+                    n,
+                    c_ac: node.count,
+                    c_a: counts[split - 1],
+                    c_c,
+                });
+                f(&items[..split], consequent, &metrics);
+            }
+            for &(_, child) in &node.children {
+                stack.push((child, depth + 1));
+            }
+        }
+        visited
+    }
+
+    /// Stack-DFS support/confidence traversal (old-layout ablation arm).
+    pub fn for_each_split(&self, mut f: impl FnMut(&[ItemId], &[ItemId], f64, f64)) {
+        let n = self.num_transactions as f64;
+        let mut stack: Vec<(NodeIdx, usize)> = self.nodes[ROOT as usize]
+            .children
+            .iter()
+            .map(|&(_, c)| (c, 1usize))
+            .collect();
+        let mut items: Vec<ItemId> = Vec::new();
+        let mut counts: Vec<u64> = Vec::new();
+        while let Some((idx, depth)) = stack.pop() {
+            items.truncate(depth - 1);
+            counts.truncate(depth - 1);
+            let node = &self.nodes[idx as usize];
+            items.push(node.item);
+            counts.push(node.count);
+            let support = node.count as f64 / n;
+            for split in 1..items.len() {
+                let confidence = node.count as f64 / counts[split - 1] as f64;
+                f(&items[..split], &items[split..], support, confidence);
+            }
+            for &(_, child) in &node.children {
+                stack.push((child, depth + 1));
+            }
+        }
+    }
+
+    /// Top-`k` stored node-rules by `metric`, descending — oracle for the
+    /// frozen column-scan [`TrieOfRules::top_n`]. Ranks by value only (ties
+    /// may order differently across layouts).
+    pub fn top_n(&self, metric: Metric, k: usize) -> Vec<(NodeIdx, f64)> {
+        let mut all: Vec<(f64, NodeIdx)> = (1..self.nodes.len())
+            .filter(|&i| self.nodes[i].depth >= 2)
+            .map(|i| (self.node_metrics(i as NodeIdx).get(metric), i as NodeIdx))
+            .collect();
+        all.sort_by(|a, b| b.0.total_cmp(&a.0));
+        all.truncate(k);
+        all.into_iter().map(|(v, i)| (i, v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+    use crate::mining::counts::min_count;
+    use crate::mining::fpgrowth::fpgrowth;
+
+    fn paper_builder() -> (crate::data::transaction::TransactionDb, TrieBuilder) {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let b = TrieBuilder::from_frequent(&fi, &order).unwrap();
+        (db, b)
+    }
+
+    #[test]
+    fn builder_counts_are_true_supports() {
+        let (db, b) = paper_builder();
+        for idx in 1..=b.num_nodes() {
+            let items = b.path_items(idx as NodeIdx);
+            let truth = db
+                .iter()
+                .filter(|tx| items.iter().all(|i| tx.contains(i)))
+                .count() as u64;
+            assert_eq!(b.node(idx as NodeIdx).count, truth, "path {items:?}");
+        }
+    }
+
+    #[test]
+    fn freeze_preserves_node_population() {
+        let (db, b) = paper_builder();
+        let frozen = b.freeze();
+        assert_eq!(frozen.num_nodes(), b.num_nodes());
+        assert_eq!(frozen.num_transactions(), b.num_transactions());
+        // Every builder path exists in the frozen trie with the same count.
+        for idx in 1..=b.num_nodes() {
+            let items = b.path_items(idx as NodeIdx);
+            let f = frozen.walk(&items).expect("path lost in freeze");
+            assert_eq!(frozen.count(f), b.node(idx as NodeIdx).count, "path {items:?}");
+        }
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        assert_eq!(frozen.support_of(&[name("f"), name("c")]), Some(3));
+    }
+
+    #[test]
+    fn builder_find_rule_matches_frozen() {
+        let (_, b) = paper_builder();
+        let frozen = b.freeze();
+        frozen.for_each_rule(|rule, m| {
+            match b.find_rule(rule) {
+                FindOutcome::Found(bm) => {
+                    assert!((bm.confidence - m.confidence).abs() < 1e-12, "{rule}");
+                    assert!((bm.support - m.support).abs() < 1e-12, "{rule}");
+                }
+                other => panic!("builder lost {rule}: {other:?}"),
+            }
+        });
+    }
+}

@@ -31,14 +31,13 @@ pub fn confidence_by_product(trie: &TrieOfRules, rule: &Rule) -> Option<f64> {
     let mut cur = trie.walk(&a_path)?;
     let mut product = 1.0f64;
     for &item in &c_path {
-        let parent_count = trie.node(cur).count;
-        let next = trie.node(cur).child(item)?;
+        let parent_count = trie.count(cur);
+        let next = trie.child(cur, item)?;
         // Node confidence relative to its parent: sup(path)/sup(parent).
         // For nodes hanging directly off A's end this is exactly the stored
         // node confidence; recomputing from counts keeps the product exact
         // even on depth-1 antecedent boundaries.
-        let count = trie.node(next).count;
-        product *= count as f64 / parent_count as f64;
+        product *= trie.count(next) as f64 / parent_count as f64;
         cur = next;
     }
     let _ = ROOT;

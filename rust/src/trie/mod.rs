@@ -1,7 +1,15 @@
 //! The Trie of Rules — the paper's data structure (§3) plus its derived
-//! operations: O(path) rule search, arena traversal, bounded-heap top-N,
-//! compound-consequent confidence (§3.2, Eq. 1–4), and visualization.
+//! operations: O(path) rule search, linear-sweep traversal with preorder
+//! range-skip pruning, column-scan top-N, compound-consequent confidence
+//! (§3.2, Eq. 1–4), and visualization.
+//!
+//! Construction and serving are split (DESIGN.md §2): the mutable
+//! [`builder::TrieBuilder`] owns insertion; its `freeze()` emits the
+//! immutable, DFS-preorder-renumbered, columnar [`trie::TrieOfRules`]
+//! (struct-of-arrays node storage, CSR children, CSR rank-indexed header,
+//! contiguous metric columns) that every query path runs against.
 
+pub mod builder;
 pub mod compound;
 pub mod node;
 pub mod serialize;
@@ -9,6 +17,7 @@ pub mod serialize;
 pub mod trie;
 pub mod viz;
 
+pub use builder::TrieBuilder;
 pub use compound::{confidence_by_product, verify_eq4};
 pub use node::{NodeIdx, TrieNode, ROOT};
-pub use trie::{FindOutcome, TrieOfRules};
+pub use trie::{FindOutcome, NodeView, TrieOfRules};

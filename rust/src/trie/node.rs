@@ -1,24 +1,28 @@
-//! Trie node layout.
+//! Builder-side trie node layout.
 //!
-//! Arena-allocated, index-linked (no `Box`/`Rc` pointer chasing): the hot
-//! search path touches a contiguous `Vec<TrieNode>` and per-node sorted
-//! child vectors probed by binary search.
+//! [`TrieNode`] is the *mutable construction* form used by
+//! [`crate::trie::builder::TrieBuilder`]: arena-allocated, index-linked
+//! (no `Box`/`Rc` pointer chasing), with per-node sorted child vectors
+//! probed by binary search. The serving form is the frozen, columnar
+//! [`crate::trie::trie::TrieOfRules`] produced by `TrieBuilder::freeze` —
+//! metrics are *not* stored here; they are pure functions of the counts
+//! and are materialized into contiguous columns at freeze time.
 
 use crate::data::vocab::ItemId;
-use crate::rules::metrics::RuleMetrics;
 
-/// Index of a node in the trie arena.
+/// Index of a node in the trie arena (builder) or in the frozen preorder
+/// numbering (frozen trie).
 pub type NodeIdx = u32;
 
-/// The root sits at index 0.
+/// The root sits at index 0 in both forms (the root is preorder-first).
 pub const ROOT: NodeIdx = 0;
 
 /// Sentinel item carried by the root.
 pub const ROOT_ITEM: ItemId = ItemId::MAX;
 
-/// One node of the Trie of Rules = one association rule (paper Fig. 3):
-/// the node's item is the consequent, the path from the root down to the
-/// node's parent is the antecedent.
+/// One builder node of the Trie of Rules = one association rule (paper
+/// Fig. 3): the node's item is the consequent, the path from the root down
+/// to the node's parent is the antecedent.
 #[derive(Debug, Clone)]
 pub struct TrieNode {
     pub item: ItemId,
@@ -29,11 +33,9 @@ pub struct TrieNode {
     pub parent: NodeIdx,
     /// Path length from root (root = 0, its children = 1, ...).
     pub depth: u16,
-    /// Metric vector of the node's rule. For depth-1 nodes the antecedent
-    /// is empty; they carry support-only semantics (confidence == support,
-    /// computed against an implicit empty antecedent with support 1).
-    pub metrics: RuleMetrics,
-    /// (item, child index), sorted by item rank order for binary search.
+    /// (item, child index), sorted by item id for binary search. Freezing
+    /// visits children in this order, so sibling order — and therefore the
+    /// whole preorder numbering — is deterministic.
     pub children: Vec<(ItemId, NodeIdx)>,
 }
 
@@ -67,16 +69,6 @@ impl TrieNode {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rules::metrics::{RuleCounts, RuleMetrics};
-
-    fn dummy_metrics() -> RuleMetrics {
-        RuleMetrics::from_counts(RuleCounts {
-            n: 10,
-            c_ac: 2,
-            c_a: 4,
-            c_c: 5,
-        })
-    }
 
     #[test]
     fn child_links_stay_sorted() {
@@ -85,7 +77,6 @@ mod tests {
             count: 0,
             parent: ROOT,
             depth: 0,
-            metrics: dummy_metrics(),
             children: Vec::new(),
         };
         assert!(n.link_child(5, 1));

@@ -3,18 +3,36 @@
 //! Trie of Rules once, save it, and serve queries from the saved structure
 //! without re-mining.
 //!
-//! Versioned little-endian binary format:
+//! Versioned little-endian binary format. **v2** writes the frozen
+//! columnar layout directly — one length-prefixed column per array — so a
+//! load is a column read plus an integrity re-derivation, not a rebuild:
 //!
 //! ```text
-//! magic "TOR\x01" | version u32
+//! magic "TOR\x01" | version u32 (= 2)
 //! num_transactions u64 | min_count u64
 //! num_items u32 | freqs: num_items × u64
 //! vocab flag u8 | if 1: num_items × (len u32, utf-8 bytes)
-//! num_nodes u32 | nodes: (item u32, parent u32, count u64) in arena order
+//! columns, each prefixed with its u32 element count, preorder row 0 = root:
+//!   items u32[] | counts u64[] | parents u32[] | depths u16[]
+//!   subtree_end u32[]
+//!   child_offsets u32[] | child_items u32[] | child_targets u32[]
+//!   header_offsets u32[] | header_nodes u32[]
 //! ```
 //!
-//! Only raw counts are stored; metrics, the header table and depths are
-//! derived state, rebuilt (and re-validated) on load.
+//! Metric columns are *derived* state (pure functions of counts, parent
+//! counts and item frequencies) and are recomputed on load rather than
+//! stored. The derived structural columns (subtree ranges, both CSRs) are
+//! stored *and* re-derived on load; any disagreement rejects the file.
+//!
+//! The **v1** node-record format (`num_nodes u32` + `(item u32, parent
+//! u32, count u64)` triples in parent-before-child order) is still read —
+//! v1 files rebuild through [`TrieBuilder`] and freeze — and can still be
+//! written via [`save_v1`] for downgrade/interop.
+//!
+//! Because the frozen trie is preorder-renumbered with item-sorted
+//! siblings and the header is a rank-indexed CSR (no hash-map iteration
+//! anywhere), two builds from identical input serialize to identical
+//! bytes — tested in `rust/tests/freeze.rs`.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -23,17 +41,67 @@ use anyhow::{Context, Result};
 
 use crate::data::vocab::Vocab;
 use crate::mining::counts::ItemOrder;
+use crate::trie::builder::TrieBuilder;
 use crate::trie::trie::TrieOfRules;
 
 const MAGIC: [u8; 4] = *b"TOR\x01";
-const VERSION: u32 = 1;
+const VERSION_V1: u32 = 1;
+const VERSION_V2: u32 = 2;
 
-/// Save a trie (and optionally its vocabulary) to `path`.
+/// Save a trie (and optionally its vocabulary) to `path` in the current
+/// (v2, columnar) format.
 pub fn save(trie: &TrieOfRules, vocab: Option<&Vocab>, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(f);
+    save_to(trie, vocab, &mut w)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Save in v2 format to any writer (in-memory determinism tests use a
+/// `Vec<u8>`).
+pub fn save_to(trie: &TrieOfRules, vocab: Option<&Vocab>, w: &mut impl Write) -> Result<()> {
+    write_preamble(trie, vocab, VERSION_V2, w)?;
+    write_col_u32(w, trie.items_column())?;
+    write_col_u64(w, trie.counts_column())?;
+    write_col_u32(w, trie.parents_column())?;
+    write_col_u16(w, trie.depths_column())?;
+    write_col_u32(w, trie.subtree_end_column())?;
+    let (child_offsets, child_items, child_targets) = trie.child_csr();
+    write_col_u32(w, child_offsets)?;
+    write_col_u32(w, child_items)?;
+    write_col_u32(w, child_targets)?;
+    let (header_offsets, header_nodes) = trie.header_csr();
+    write_col_u32(w, header_offsets)?;
+    write_col_u32(w, header_nodes)?;
+    Ok(())
+}
+
+/// Save in the legacy v1 node-record format (downgrade/interop path; new
+/// writes should use [`save`]).
+pub fn save_v1(trie: &TrieOfRules, vocab: Option<&Vocab>, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    write_preamble(trie, vocab, VERSION_V1, &mut w)?;
+    let nodes: Vec<_> = trie.raw_nodes().collect();
+    w.write_all(&(nodes.len() as u32).to_le_bytes())?;
+    for (item, parent, count) in nodes {
+        w.write_all(&item.to_le_bytes())?;
+        w.write_all(&parent.to_le_bytes())?;
+        w.write_all(&count.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn write_preamble(
+    trie: &TrieOfRules,
+    vocab: Option<&Vocab>,
+    version: u32,
+    w: &mut impl Write,
+) -> Result<()> {
     w.write_all(&MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&version.to_le_bytes())?;
     w.write_all(&(trie.num_transactions() as u64).to_le_bytes())?;
     w.write_all(&trie.order().min_count_used().to_le_bytes())?;
     let freqs = trie.order().frequencies();
@@ -57,18 +125,11 @@ pub fn save(trie: &TrieOfRules, vocab: Option<&Vocab>, path: &Path) -> Result<()
         }
         None => w.write_all(&[0u8])?,
     }
-    let nodes: Vec<_> = trie.raw_nodes().collect();
-    w.write_all(&(nodes.len() as u32).to_le_bytes())?;
-    for (item, parent, count) in nodes {
-        w.write_all(&item.to_le_bytes())?;
-        w.write_all(&parent.to_le_bytes())?;
-        w.write_all(&count.to_le_bytes())?;
-    }
-    w.flush()?;
     Ok(())
 }
 
-/// Load a trie (and its vocabulary, when stored) from `path`.
+/// Load a trie (and its vocabulary, when stored) from `path`. Reads both
+/// the current v2 columnar format and legacy v1 node records.
 pub fn load(path: &Path) -> Result<(TrieOfRules, Option<Vocab>)> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
@@ -76,7 +137,10 @@ pub fn load(path: &Path) -> Result<(TrieOfRules, Option<Vocab>)> {
     r.read_exact(&mut magic).context("read magic")?;
     anyhow::ensure!(magic == MAGIC, "not a Trie-of-Rules file (bad magic)");
     let version = read_u32(&mut r)?;
-    anyhow::ensure!(version == VERSION, "unsupported version {version}");
+    anyhow::ensure!(
+        version == VERSION_V1 || version == VERSION_V2,
+        "unsupported version {version}"
+    );
     let num_transactions = read_u64(&mut r)? as usize;
     let min_count = read_u64(&mut r)?;
     let num_items = read_u32(&mut r)? as usize;
@@ -101,18 +165,134 @@ pub fn load(path: &Path) -> Result<(TrieOfRules, Option<Vocab>)> {
     } else {
         None
     };
-    let num_nodes = read_u32(&mut r)? as usize;
+    let order = ItemOrder::from_frequencies(freqs, min_count);
+    let trie = match version {
+        VERSION_V1 => load_v1_body(&mut r, order, num_transactions)?,
+        _ => load_v2_body(&mut r, order, num_transactions)?,
+    };
+    Ok((trie, vocab))
+}
+
+fn load_v1_body<R: Read>(
+    r: &mut R,
+    order: ItemOrder,
+    num_transactions: usize,
+) -> Result<TrieOfRules> {
+    let num_nodes = read_u32(r)? as usize;
     anyhow::ensure!(num_nodes < 1 << 30, "implausible node count {num_nodes}");
     let mut raw = Vec::with_capacity(num_nodes);
     for _ in 0..num_nodes {
-        let item = read_u32(&mut r)?;
-        let parent = read_u32(&mut r)?;
-        let count = read_u64(&mut r)?;
+        let item = read_u32(r)?;
+        let parent = read_u32(r)?;
+        let count = read_u64(r)?;
         raw.push((item, parent, count));
     }
-    let order = ItemOrder::from_frequencies(freqs, min_count);
-    let trie = TrieOfRules::from_raw_nodes(order, num_transactions, &raw)?;
-    Ok((trie, vocab))
+    Ok(TrieBuilder::from_raw_nodes(order, num_transactions, &raw)?.freeze())
+}
+
+fn load_v2_body<R: Read>(
+    r: &mut R,
+    order: ItemOrder,
+    num_transactions: usize,
+) -> Result<TrieOfRules> {
+    let items = read_col_u32(r).context("items column")?;
+    let n = items.len();
+    anyhow::ensure!(n >= 1 && n < 1 << 30, "implausible node count {n}");
+    let counts = read_col_u64(r).context("counts column")?;
+    let parents = read_col_u32(r).context("parents column")?;
+    let depths = read_col_u16(r).context("depths column")?;
+    let subtree_end = read_col_u32(r).context("subtree_end column")?;
+    let child_offsets = read_col_u32(r).context("child_offsets column")?;
+    let child_items = read_col_u32(r).context("child_items column")?;
+    let child_targets = read_col_u32(r).context("child_targets column")?;
+    let header_offsets = read_col_u32(r).context("header_offsets column")?;
+    let header_nodes = read_col_u32(r).context("header_nodes column")?;
+    // Shape checks before semantic validation.
+    for (name, len, want) in [
+        ("counts", counts.len(), n),
+        ("parents", parents.len(), n),
+        ("depths", depths.len(), n),
+        ("subtree_end", subtree_end.len(), n),
+        ("child_offsets", child_offsets.len(), n + 1),
+        ("child_items", child_items.len(), n - 1),
+        ("child_targets", child_targets.len(), n - 1),
+        ("header_offsets", header_offsets.len(), order.num_frequent() + 1),
+        ("header_nodes", header_nodes.len(), n - 1),
+    ] {
+        anyhow::ensure!(len == want, "column {name}: {len} entries, expected {want}");
+    }
+    TrieOfRules::from_columns(
+        order,
+        num_transactions,
+        items,
+        counts,
+        parents,
+        depths,
+        subtree_end,
+        child_offsets,
+        child_items,
+        child_targets,
+        header_offsets,
+        header_nodes,
+    )
+}
+
+// -- column I/O helpers ---------------------------------------------------
+
+fn write_col_u32(w: &mut impl Write, col: &[u32]) -> Result<()> {
+    w.write_all(&(col.len() as u32).to_le_bytes())?;
+    for &v in col {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_col_u64(w: &mut impl Write, col: &[u64]) -> Result<()> {
+    w.write_all(&(col.len() as u32).to_le_bytes())?;
+    for &v in col {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_col_u16(w: &mut impl Write, col: &[u16]) -> Result<()> {
+    w.write_all(&(col.len() as u32).to_le_bytes())?;
+    for &v in col {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_col_u32<R: Read>(r: &mut R) -> Result<Vec<u32>> {
+    let len = read_u32(r)? as usize;
+    anyhow::ensure!(len < 1 << 30, "implausible column length {len}");
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(read_u32(r)?);
+    }
+    Ok(out)
+}
+
+fn read_col_u64<R: Read>(r: &mut R) -> Result<Vec<u64>> {
+    let len = read_u32(r)? as usize;
+    anyhow::ensure!(len < 1 << 30, "implausible column length {len}");
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(read_u64(r)?);
+    }
+    Ok(out)
+}
+
+fn read_col_u16<R: Read>(r: &mut R) -> Result<Vec<u16>> {
+    let len = read_u32(r)? as usize;
+    anyhow::ensure!(len < 1 << 30, "implausible column length {len}");
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        let mut b = [0u8; 2];
+        r.read_exact(&mut b)?;
+        out.push(u16::from_le_bytes(b));
+    }
+    Ok(out)
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -151,6 +331,17 @@ mod tests {
         (db, trie)
     }
 
+    fn assert_equivalent(a: &TrieOfRules, b: &TrieOfRules) {
+        assert_eq!(a.num_nodes(), b.num_nodes());
+        assert_eq!(a.num_transactions(), b.num_transactions());
+        assert_eq!(a.items_column(), b.items_column());
+        assert_eq!(a.counts_column(), b.counts_column());
+        assert_eq!(a.parents_column(), b.parents_column());
+        assert_eq!(a.subtree_end_column(), b.subtree_end_column());
+        assert_eq!(a.child_csr(), b.child_csr());
+        assert_eq!(a.header_csr(), b.header_csr());
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
         let (db, trie) = build(5, 0.05);
@@ -159,8 +350,7 @@ mod tests {
         let (back, vocab) = load(&path).unwrap();
         let vocab = vocab.expect("vocab stored");
         assert_eq!(vocab.len(), db.vocab().len());
-        assert_eq!(back.num_nodes(), trie.num_nodes());
-        assert_eq!(back.num_transactions(), trie.num_transactions());
+        assert_equivalent(&trie, &back);
         // Every rule answers identically, metrics included.
         let mut checked = 0;
         trie.for_each_rule(|rule, m| {
@@ -179,6 +369,19 @@ mod tests {
         let a: Vec<f64> = trie.top_n(Metric::Lift, 5).iter().map(|&(_, v)| v).collect();
         let b: Vec<f64> = back.top_n(Metric::Lift, 5).iter().map(|&(_, v)| v).collect();
         assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_reader_rebuilds_identical_trie() {
+        let (db, trie) = build(5, 0.05);
+        let path = tmpfile("v1_roundtrip");
+        save_v1(&trie, Some(db.vocab()), &path).unwrap();
+        let (back, vocab) = load(&path).unwrap();
+        assert!(vocab.is_some());
+        // The v1 path rebuilds through the builder + freeze; the preorder
+        // renumbering is canonical, so the columns come back identical.
+        assert_equivalent(&trie, &back);
         std::fs::remove_file(&path).ok();
     }
 
@@ -213,23 +416,28 @@ mod tests {
         let path = tmpfile("garbage");
         std::fs::write(&path, b"not a trie file at all").unwrap();
         assert!(load(&path).is_err());
-        // Truncated real file.
+        // Truncated real file (both formats).
         let (db, trie) = build(7, 0.06);
-        let full = tmpfile("full");
-        save(&trie, Some(db.vocab()), &full).unwrap();
-        let bytes = std::fs::read(&full).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load(&path).is_err());
+        for (tag, saver) in [
+            ("full_v2", save as fn(&TrieOfRules, Option<&Vocab>, &Path) -> Result<()>),
+            ("full_v1", save_v1),
+        ] {
+            let full = tmpfile(tag);
+            saver(&trie, Some(db.vocab()), &full).unwrap();
+            let bytes = std::fs::read(&full).unwrap();
+            std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+            assert!(load(&path).is_err(), "{tag} truncation accepted");
+            std::fs::remove_file(&full).ok();
+        }
         std::fs::remove_file(&path).ok();
-        std::fs::remove_file(&full).ok();
     }
 
     #[test]
-    fn rejects_corrupt_counts() {
+    fn v1_rejects_corrupt_counts() {
         // Corrupt a node count so it exceeds its parent: loader must refuse.
         let (db, trie) = build(8, 0.06);
-        let path = tmpfile("corrupt");
-        save(&trie, Some(db.vocab()), &path).unwrap();
+        let path = tmpfile("corrupt_v1");
+        save_v1(&trie, Some(db.vocab()), &path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // Last 8 bytes = last node's count; blow it up.
         let n = bytes.len();
@@ -237,6 +445,22 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path).unwrap_err();
         assert!(err.to_string().contains("exceeds parent"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_tampered_columns() {
+        // Flip the tail of the header-nodes column: the loader re-derives
+        // the CSRs from the core columns and must notice the disagreement.
+        let (db, trie) = build(8, 0.06);
+        let path = tmpfile("corrupt_v2");
+        save(&trie, Some(db.vocab()), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("header CSR"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 }

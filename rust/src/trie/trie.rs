@@ -1,15 +1,37 @@
-//! The Trie of Rules — the paper's contribution.
+//! The Trie of Rules — the paper's contribution, in its frozen serving
+//! layout.
 //!
-//! A prefix tree over frequency-ordered frequent itemsets where **every node
-//! is an association rule**: the node's item is the consequent and the path
-//! from the root to the node's parent is the antecedent (paper Fig. 3).
-//! Node counts are *true* supports of their path itemsets (paper §3.2), so
-//! compound-consequent confidences can be derived by multiplying node
-//! confidences along the consequent suffix (Eq. 1–4).
+//! A prefix tree over frequency-ordered frequent itemsets where **every
+//! node is an association rule**: the node's item is the consequent and the
+//! path from the root to the node's parent is the antecedent (paper
+//! Fig. 3). Node counts are *true* supports of their path itemsets (paper
+//! §3.2), so compound-consequent confidences can be derived by multiplying
+//! node confidences along the consequent suffix (Eq. 1–4).
+//!
+//! Construction happens on the mutable [`crate::trie::builder::TrieBuilder`];
+//! this type is the immutable result of `TrieBuilder::freeze`:
+//!
+//! * nodes are renumbered in **DFS preorder** (root = 0, siblings in
+//!   item-id order), stored struct-of-arrays — `items[]`, `counts[]`,
+//!   `parents[]`, `depths[]`, `subtree_end[]`, plus one contiguous `f64`
+//!   column per rule metric;
+//! * child links live in a CSR pair (`child_offsets[]` →
+//!   `child_items[]`/`child_targets[]`), probed by binary search;
+//! * the FP-style header table is a CSR indexed by **item rank** —
+//!   `header_offsets[]` → `header_nodes[]` — no `HashMap` anywhere on a
+//!   serving path, so identical inputs produce byte-identical structures.
+//!
+//! Preorder numbering makes every subtree the contiguous range
+//! `[i, subtree_end[i])`. That is what the traversal layer exploits:
+//! support-antimonotone pruning is an index **range skip**
+//! (`i = subtree_end[i]`) instead of a recursive descent, and a full
+//! traversal is a linear sweep over the arrays. Arena order *is* DFS
+//! order; emitted rows are still normalized by the executor's total order
+//! (`sort key, then rule`), so renumbering is invisible to query results —
+//! the unsorted canonical rule order equals sorted-`Rule` order exactly as
+//! before (see DESIGN.md §7).
 
-use std::collections::{HashMap, HashSet};
-
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 use crate::data::vocab::ItemId;
 use crate::mining::apriori::SupportCounter;
@@ -17,7 +39,8 @@ use crate::mining::counts::ItemOrder;
 use crate::mining::itemset::{FrequentItemsets, Itemset};
 use crate::rules::metrics::{Metric, RuleCounts, RuleMetrics};
 use crate::rules::rule::Rule;
-use crate::trie::node::{NodeIdx, TrieNode, ROOT, ROOT_ITEM};
+use crate::trie::builder::TrieBuilder;
+use crate::trie::node::{NodeIdx, ROOT, ROOT_ITEM};
 
 /// Outcome of a rule lookup.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,203 +55,344 @@ pub enum FindOutcome {
     Absent,
 }
 
-/// The Trie of Rules.
+/// A materialized per-node view assembled from the columns (tests,
+/// diagnostics; hot paths read the columns directly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeView {
+    pub item: ItemId,
+    pub count: u64,
+    pub parent: NodeIdx,
+    pub depth: u16,
+    pub metrics: RuleMetrics,
+}
+
+/// One contiguous `f64` column per rule metric, parallel to the node
+/// arrays (row 0 = root). Residual metric predicates and top-N scans read
+/// these directly without assembling a `RuleMetrics`.
+#[derive(Debug, Clone, Default)]
+struct MetricColumns {
+    support: Vec<f64>,
+    confidence: Vec<f64>,
+    lift: Vec<f64>,
+    leverage: Vec<f64>,
+    conviction: Vec<f64>,
+    zhang: Vec<f64>,
+    jaccard: Vec<f64>,
+    cosine: Vec<f64>,
+    kulczynski: Vec<f64>,
+    yule_q: Vec<f64>,
+}
+
+impl MetricColumns {
+    fn with_capacity(n: usize) -> Self {
+        let mut c = MetricColumns::default();
+        for col in [
+            &mut c.support,
+            &mut c.confidence,
+            &mut c.lift,
+            &mut c.leverage,
+            &mut c.conviction,
+            &mut c.zhang,
+            &mut c.jaccard,
+            &mut c.cosine,
+            &mut c.kulczynski,
+            &mut c.yule_q,
+        ] {
+            col.reserve_exact(n);
+        }
+        c
+    }
+
+    fn push(&mut self, m: &RuleMetrics) {
+        self.support.push(m.support);
+        self.confidence.push(m.confidence);
+        self.lift.push(m.lift);
+        self.leverage.push(m.leverage);
+        self.conviction.push(m.conviction);
+        self.zhang.push(m.zhang);
+        self.jaccard.push(m.jaccard);
+        self.cosine.push(m.cosine);
+        self.kulczynski.push(m.kulczynski);
+        self.yule_q.push(m.yule_q);
+    }
+}
+
+/// The frozen Trie of Rules (see module docs for the layout).
 #[derive(Debug, Clone)]
 pub struct TrieOfRules {
-    nodes: Vec<TrieNode>,
     order: ItemOrder,
-    /// item -> every node carrying it (FP-tree-style header table).
-    header: HashMap<ItemId, Vec<NodeIdx>>,
     num_transactions: usize,
+    /// Representable (node, split) pairs, cached at freeze.
+    representable: usize,
+
+    // -- node columns, preorder-indexed, row 0 = root -------------------
+    items: Vec<ItemId>,
+    counts: Vec<u64>,
+    parents: Vec<NodeIdx>,
+    depths: Vec<u16>,
+    /// Exclusive end of the subtree range: descendants of `i` (including
+    /// `i`) are exactly the indices `[i, subtree_end[i])`.
+    subtree_end: Vec<NodeIdx>,
+    metrics: MetricColumns,
+
+    // -- CSR children ----------------------------------------------------
+    /// `len = nodes + 1`; children of `i` occupy
+    /// `child_items[child_offsets[i]..child_offsets[i+1]]` (item-sorted)
+    /// with parallel targets in `child_targets`.
+    child_offsets: Vec<u32>,
+    child_items: Vec<ItemId>,
+    child_targets: Vec<NodeIdx>,
+
+    // -- CSR header table, indexed by item rank --------------------------
+    /// `len = num_frequent + 1`; nodes carrying the rank-`r` item are
+    /// `header_nodes[header_offsets[r]..header_offsets[r+1]]`, ascending
+    /// preorder.
+    header_offsets: Vec<u32>,
+    header_nodes: Vec<NodeIdx>,
 }
 
 impl TrieOfRules {
     // ------------------------------------------------------------------
-    // construction
+    // construction (convenience wrappers over TrieBuilder + freeze)
     // ------------------------------------------------------------------
 
-    fn empty(order: ItemOrder, num_transactions: usize) -> Self {
-        let root = TrieNode {
-            item: ROOT_ITEM,
-            count: num_transactions as u64,
-            parent: ROOT,
-            depth: 0,
-            metrics: RuleMetrics::from_counts(RuleCounts {
-                n: num_transactions.max(1) as u64,
-                c_ac: num_transactions as u64,
-                c_a: num_transactions as u64,
-                c_c: num_transactions as u64,
-            }),
-            children: Vec::new(),
-        };
-        Self {
-            nodes: vec![root],
-            order,
-            header: HashMap::new(),
-            num_transactions,
-        }
-    }
-
-    /// Build from a *complete* frequent-itemset collection (e.g. Apriori or
-    /// FP-growth output — the paper's evaluation setting). Every path
-    /// prefix of a frequency-ordered frequent itemset is itself frequent,
-    /// so all node supports come from the mining output with no recounting.
+    /// Build from a *complete* frequent-itemset collection and freeze.
     pub fn from_frequent(fi: &FrequentItemsets, order: &ItemOrder) -> Result<TrieOfRules> {
-        let support: HashMap<&Itemset, u64> = fi.sets.iter().map(|(s, c)| (s, *c)).collect();
-        let mut trie = Self::empty(order.clone(), fi.num_transactions);
-        for (set, _) in &fi.sets {
-            let path = order.order_itemset(set.items());
-            trie.insert_path(&path, |prefix| {
-                let key = Itemset::new(prefix.to_vec());
-                support.get(&key).copied().with_context(|| {
-                    format!("prefix {key} missing from frequent set (downward closure violated)")
-                })
-            })?;
-        }
-        Ok(trie)
+        Ok(TrieBuilder::from_frequent(fi, order)?.freeze())
     }
 
-    /// Build from frequent *sequences* (the paper's Step 1: FP-max output)
-    /// plus a support-counting backend for the prefix supports the maximal
-    /// sets don't carry. The backend may be the rust bitset counter or the
-    /// XLA-artifact counter — this is the trie-side integration point of
-    /// the L1 Pallas kernel.
+    /// Build from frequent sequences (FP-max output) + a support counter
+    /// for prefix supports, and freeze.
     pub fn from_sequences(
         sequences: &[(Vec<ItemId>, u64)],
         order: &ItemOrder,
         counter: &mut dyn SupportCounter,
         num_transactions: usize,
     ) -> Result<TrieOfRules> {
-        // Gather every distinct prefix that needs a support count.
-        let mut need: Vec<Itemset> = Vec::new();
-        let mut seen: HashSet<Itemset> = HashSet::new();
-        for (seq, count) in sequences {
-            for d in 1..=seq.len() {
-                let key = Itemset::new(seq[..d].to_vec());
-                if d == seq.len() {
-                    // Full sequence has a known count — skip counting, but
-                    // remember it below.
-                    let _ = count;
-                    continue;
-                }
-                if seen.insert(key.clone()) {
-                    need.push(key);
-                }
-            }
-        }
-        let counts = counter.count(&need);
-        let mut support: HashMap<Itemset, u64> = need.into_iter().zip(counts).collect();
-        for (seq, count) in sequences {
-            support.insert(Itemset::new(seq.clone()), *count);
-        }
-
-        let mut trie = Self::empty(order.clone(), num_transactions);
-        for (seq, _) in sequences {
-            let path = order.order_itemset(seq);
-            trie.insert_path(&path, |prefix| {
-                let key = Itemset::new(prefix.to_vec());
-                support
-                    .get(&key)
-                    .copied()
-                    .with_context(|| format!("prefix {key} not counted"))
-            })?;
-        }
-        Ok(trie)
+        Ok(TrieBuilder::from_sequences(sequences, order, counter, num_transactions)?.freeze())
     }
 
-    /// Insert one frequency-ordered path, annotating every newly created
-    /// node with its true support from `support_of` (paper Step 3).
-    fn insert_path(
-        &mut self,
-        path: &[ItemId],
-        mut support_of: impl FnMut(&[ItemId]) -> Result<u64>,
-    ) -> Result<()> {
-        if path.is_empty() {
-            bail!("cannot insert an empty path");
-        }
-        let n = self.num_transactions as u64;
-        let mut cur = ROOT;
-        for depth in 1..=path.len() {
-            let item = path[depth - 1];
-            cur = match self.nodes[cur as usize].child(item) {
-                Some(c) => c,
-                None => {
-                    let c_ac = support_of(&path[..depth])?;
-                    let c_a = self.nodes[cur as usize].count;
-                    let c_c = self.order.frequency(item);
-                    let idx = self.nodes.len() as NodeIdx;
-                    self.nodes.push(TrieNode {
-                        item,
-                        count: c_ac,
-                        parent: cur,
-                        depth: depth as u16,
-                        metrics: RuleMetrics::from_counts(RuleCounts { n, c_ac, c_a, c_c }),
-                        children: Vec::new(),
-                    });
-                    self.nodes[cur as usize].link_child(item, idx);
-                    self.header.entry(item).or_default().push(idx);
-                    idx
-                }
-            };
-        }
-        Ok(())
-    }
-
-    /// Raw node triples `(item, parent, count)` in arena order (parents
-    /// always precede children) — the serializer's wire form. Metrics and
-    /// the header table are derived state and are rebuilt on load.
-    pub fn raw_nodes(&self) -> impl Iterator<Item = (ItemId, NodeIdx, u64)> + '_ {
-        self.nodes
-            .iter()
-            .skip(1)
-            .map(|n| (n.item, n.parent, n.count))
-    }
-
-    /// Rebuild a trie from raw node triples (see [`Self::raw_nodes`]).
+    /// Rebuild from raw node triples (the serializer's v1 wire form; see
+    /// [`Self::raw_nodes`]), re-validating and freezing.
     pub fn from_raw_nodes(
         order: ItemOrder,
         num_transactions: usize,
         raw: &[(ItemId, NodeIdx, u64)],
     ) -> Result<TrieOfRules> {
-        let n = num_transactions as u64;
-        let mut trie = Self::empty(order, num_transactions);
-        for &(item, parent, count) in raw {
-            let idx = trie.nodes.len() as NodeIdx;
+        Ok(TrieBuilder::from_raw_nodes(order, num_transactions, raw)?.freeze())
+    }
+
+    /// Assemble the frozen form from its four *core* columns (preorder
+    /// `items`/`counts`/`parents`/`depths`, row 0 = root). Everything else
+    /// — subtree ranges, child CSR, header CSR, metric columns — is
+    /// derived here. Validates the core invariants, so it is safe on
+    /// untrusted input (the v2 deserializer funnels through this).
+    pub(crate) fn from_core_columns(
+        order: ItemOrder,
+        num_transactions: usize,
+        items: Vec<ItemId>,
+        counts: Vec<u64>,
+        parents: Vec<NodeIdx>,
+        depths: Vec<u16>,
+    ) -> Result<TrieOfRules> {
+        let n = items.len();
+        anyhow::ensure!(n >= 1, "columns must at least contain the root row");
+        anyhow::ensure!(
+            counts.len() == n && parents.len() == n && depths.len() == n,
+            "core column lengths disagree: items {n}, counts {}, parents {}, depths {}",
+            counts.len(),
+            parents.len(),
+            depths.len()
+        );
+        anyhow::ensure!(
+            items[0] == ROOT_ITEM && parents[0] == ROOT && depths[0] == 0,
+            "row 0 is not a root row"
+        );
+        anyhow::ensure!(
+            counts[0] == num_transactions as u64,
+            "root count {} != num_transactions {num_transactions}",
+            counts[0]
+        );
+        for i in 1..n {
+            let p = parents[i] as usize;
+            anyhow::ensure!(p < i, "node {i}: parent {p} does not precede it (not preorder)");
             anyhow::ensure!(
-                (parent as usize) < trie.nodes.len(),
-                "node {idx}: parent {parent} not yet defined (corrupt file?)"
+                (items[i] as usize) < order.frequencies().len(),
+                "node {i}: item {} out of range ({} items)",
+                items[i],
+                order.frequencies().len()
             );
             anyhow::ensure!(
-                trie.order.is_frequent(item),
-                "node {idx}: item {item} is not frequent under the stored order"
+                order.is_frequent(items[i]),
+                "node {i}: item {} is not frequent under the stored order",
+                items[i]
             );
-            let parent_node = &trie.nodes[parent as usize];
-            let c_a = parent_node.count;
             anyhow::ensure!(
-                count <= c_a,
-                "node {idx}: count {count} exceeds parent count {c_a}"
+                counts[i] <= counts[p],
+                "node {i}: count {} exceeds parent count {}",
+                counts[i],
+                counts[p]
             );
-            let depth = parent_node.depth + 1;
-            let c_c = trie.order.frequency(item);
-            trie.nodes.push(TrieNode {
-                item,
-                count,
-                parent,
-                depth,
-                metrics: RuleMetrics::from_counts(RuleCounts {
-                    n,
-                    c_ac: count,
-                    c_a,
-                    c_c,
-                }),
-                children: Vec::new(),
-            });
             anyhow::ensure!(
-                trie.nodes[parent as usize].link_child(item, idx),
-                "node {idx}: duplicate child {item} under {parent}"
+                depths[i] as u32 == depths[p] as u32 + 1,
+                "node {i}: depth {} != parent depth {} + 1",
+                depths[i],
+                depths[p]
             );
-            trie.header.entry(item).or_default().push(idx);
         }
+
+        // Preorder contiguity: `parents[i] < i` alone admits non-DFS
+        // layouts (e.g. BFS) under which the subtree-range derivation
+        // below — and every range-skip traversal — would be silently
+        // wrong. A layout is DFS preorder iff each node's parent is still
+        // an *open* ancestor when the node appears: walk the rows once,
+        // popping finished subtrees off an ancestor stack.
+        let mut open: Vec<usize> = vec![0];
+        for i in 1..n {
+            let p = parents[i] as usize;
+            while open.last().is_some_and(|&top| top != p) {
+                open.pop();
+            }
+            anyhow::ensure!(
+                open.last() == Some(&p),
+                "node {i}: parent {p} is not an open ancestor (not DFS preorder)"
+            );
+            open.push(i);
+        }
+
+        // subtree_end: one reverse pass — every child's final range is
+        // known before its (lower-indexed) parent absorbs it.
+        let mut subtree_end: Vec<NodeIdx> = (1..=n as NodeIdx).collect();
+        for i in (1..n).rev() {
+            let p = parents[i] as usize;
+            subtree_end[p] = subtree_end[p].max(subtree_end[i]);
+        }
+
+        // Child CSR from parents: ascending preorder index among siblings
+        // is ascending item id (freeze visits children item-sorted), which
+        // the binary-search probe requires — verified below.
+        let mut child_offsets = vec![0u32; n + 1];
+        for i in 1..n {
+            child_offsets[parents[i] as usize + 1] += 1;
+        }
+        for i in 0..n {
+            child_offsets[i + 1] += child_offsets[i];
+        }
+        let mut cursor = child_offsets.clone();
+        let mut child_items = vec![0 as ItemId; n - 1];
+        let mut child_targets = vec![0 as NodeIdx; n - 1];
+        for i in 1..n {
+            let p = parents[i] as usize;
+            let slot = cursor[p] as usize;
+            child_items[slot] = items[i];
+            child_targets[slot] = i as NodeIdx;
+            cursor[p] += 1;
+        }
+        for i in 0..n {
+            let s = &child_items[child_offsets[i] as usize..child_offsets[i + 1] as usize];
+            anyhow::ensure!(
+                s.windows(2).all(|w| w[0] < w[1]),
+                "node {i}: sibling items not strictly item-sorted (duplicate child or \
+                 non-canonical preorder)"
+            );
+        }
+
+        // Header CSR by item rank, ascending preorder within each rank.
+        let num_ranks = order.num_frequent();
+        let mut header_offsets = vec![0u32; num_ranks + 1];
+        for &it in items.iter().skip(1) {
+            let r = order.rank(it).expect("validated frequent above") as usize;
+            header_offsets[r + 1] += 1;
+        }
+        for r in 0..num_ranks {
+            header_offsets[r + 1] += header_offsets[r];
+        }
+        let mut hcursor = header_offsets.clone();
+        let mut header_nodes = vec![0 as NodeIdx; n - 1];
+        for i in 1..n {
+            let r = order.rank(items[i]).unwrap() as usize;
+            header_nodes[hcursor[r] as usize] = i as NodeIdx;
+            hcursor[r] += 1;
+        }
+
+        // Metric columns: each stored node-rule's vector is a pure
+        // function of (n, count, parent count, item frequency).
+        let nn = (num_transactions as u64).max(1);
+        let mut metrics = MetricColumns::with_capacity(n);
+        metrics.push(&RuleMetrics::from_counts(RuleCounts {
+            n: nn,
+            c_ac: counts[0],
+            c_a: counts[0],
+            c_c: counts[0],
+        }));
+        for i in 1..n {
+            metrics.push(&RuleMetrics::from_counts(RuleCounts {
+                n: nn,
+                c_ac: counts[i],
+                c_a: counts[parents[i] as usize],
+                c_c: order.frequency(items[i]),
+            }));
+        }
+
+        let representable = depths
+            .iter()
+            .skip(1)
+            .map(|&d| (d as usize).saturating_sub(1))
+            .sum();
+
+        Ok(TrieOfRules {
+            order,
+            num_transactions,
+            representable,
+            items,
+            counts,
+            parents,
+            depths,
+            subtree_end,
+            metrics,
+            child_offsets,
+            child_items,
+            child_targets,
+            header_offsets,
+            header_nodes,
+        })
+    }
+
+    /// Assemble from a *full* column set (the v2 deserializer): the core
+    /// columns are validated and the derived columns re-derived, then
+    /// compared against the stored ones — any disagreement means a corrupt
+    /// or hand-edited file and is rejected.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_columns(
+        order: ItemOrder,
+        num_transactions: usize,
+        items: Vec<ItemId>,
+        counts: Vec<u64>,
+        parents: Vec<NodeIdx>,
+        depths: Vec<u16>,
+        subtree_end: Vec<NodeIdx>,
+        child_offsets: Vec<u32>,
+        child_items: Vec<ItemId>,
+        child_targets: Vec<NodeIdx>,
+        header_offsets: Vec<u32>,
+        header_nodes: Vec<NodeIdx>,
+    ) -> Result<TrieOfRules> {
+        let trie =
+            Self::from_core_columns(order, num_transactions, items, counts, parents, depths)?;
+        anyhow::ensure!(
+            trie.subtree_end == subtree_end,
+            "stored subtree_end column disagrees with the tree shape (corrupt file?)"
+        );
+        anyhow::ensure!(
+            trie.child_offsets == child_offsets
+                && trie.child_items == child_items
+                && trie.child_targets == child_targets,
+            "stored child CSR disagrees with the tree shape (corrupt file?)"
+        );
+        anyhow::ensure!(
+            trie.header_offsets == header_offsets && trie.header_nodes == header_nodes,
+            "stored header CSR disagrees with the tree shape (corrupt file?)"
+        );
         Ok(trie)
     }
 
@@ -243,51 +407,187 @@ impl TrieOfRules {
     /// Number of nodes excluding the root = number of stored
     /// single-consequent rules (depth-1 nodes are itemset-support entries).
     pub fn num_nodes(&self) -> usize {
-        self.nodes.len() - 1
+        self.items.len() - 1
     }
 
     /// Number of rules the trie represents directly: every (node, split)
     /// pair with non-empty antecedent and consequent.
     pub fn num_representable_rules(&self) -> usize {
-        self.nodes
-            .iter()
-            .skip(1)
-            .map(|n| (n.depth as usize).saturating_sub(1))
-            .sum()
+        self.representable
     }
 
     pub fn order(&self) -> &ItemOrder {
         &self.order
     }
 
-    pub fn node(&self, idx: NodeIdx) -> &TrieNode {
-        &self.nodes[idx as usize]
+    #[inline]
+    pub fn item(&self, idx: NodeIdx) -> ItemId {
+        self.items[idx as usize]
+    }
+
+    #[inline]
+    pub fn count(&self, idx: NodeIdx) -> u64 {
+        self.counts[idx as usize]
+    }
+
+    #[inline]
+    pub fn parent(&self, idx: NodeIdx) -> NodeIdx {
+        self.parents[idx as usize]
+    }
+
+    #[inline]
+    pub fn depth(&self, idx: NodeIdx) -> u16 {
+        self.depths[idx as usize]
+    }
+
+    /// Exclusive end of `idx`'s subtree range: the descendants of `idx`
+    /// (itself included) are exactly `idx..subtree_end(idx)`.
+    #[inline]
+    pub fn subtree_end(&self, idx: NodeIdx) -> NodeIdx {
+        self.subtree_end[idx as usize]
+    }
+
+    /// Assemble the stored metric vector of the node-rule at `idx`.
+    #[inline]
+    pub fn metrics(&self, idx: NodeIdx) -> RuleMetrics {
+        let i = idx as usize;
+        RuleMetrics {
+            support: self.metrics.support[i],
+            confidence: self.metrics.confidence[i],
+            lift: self.metrics.lift[i],
+            leverage: self.metrics.leverage[i],
+            conviction: self.metrics.conviction[i],
+            zhang: self.metrics.zhang[i],
+            jaccard: self.metrics.jaccard[i],
+            cosine: self.metrics.cosine[i],
+            kulczynski: self.metrics.kulczynski[i],
+            yule_q: self.metrics.yule_q[i],
+        }
+    }
+
+    /// One metric's contiguous column (row per node, row 0 = root) — the
+    /// access path for residual predicate evaluation and top-N scans.
+    #[inline]
+    pub fn metric_column(&self, m: Metric) -> &[f64] {
+        match m {
+            Metric::Support => &self.metrics.support,
+            Metric::Confidence => &self.metrics.confidence,
+            Metric::Lift => &self.metrics.lift,
+            Metric::Leverage => &self.metrics.leverage,
+            Metric::Conviction => &self.metrics.conviction,
+            Metric::Zhang => &self.metrics.zhang,
+            Metric::Jaccard => &self.metrics.jaccard,
+            Metric::Cosine => &self.metrics.cosine,
+            Metric::Kulczynski => &self.metrics.kulczynski,
+            Metric::YuleQ => &self.metrics.yule_q,
+        }
+    }
+
+    /// Materialized per-node view (tests/diagnostics).
+    pub fn node(&self, idx: NodeIdx) -> NodeView {
+        NodeView {
+            item: self.item(idx),
+            count: self.count(idx),
+            parent: self.parent(idx),
+            depth: self.depth(idx),
+            metrics: self.metrics(idx),
+        }
+    }
+
+    /// `idx`'s children as `(item, child)` pairs, item-sorted.
+    pub fn children(&self, idx: NodeIdx) -> impl Iterator<Item = (ItemId, NodeIdx)> + '_ {
+        let lo = self.child_offsets[idx as usize] as usize;
+        let hi = self.child_offsets[idx as usize + 1] as usize;
+        self.child_items[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.child_targets[lo..hi].iter().copied())
+    }
+
+    /// Find the child of `idx` carrying `item` (binary search over the
+    /// node's CSR slice).
+    #[inline]
+    pub fn child(&self, idx: NodeIdx, item: ItemId) -> Option<NodeIdx> {
+        let lo = self.child_offsets[idx as usize] as usize;
+        let hi = self.child_offsets[idx as usize + 1] as usize;
+        self.child_items[lo..hi]
+            .binary_search(&item)
+            .ok()
+            .map(|pos| self.child_targets[lo + pos])
     }
 
     /// Items on the path root→`idx`, root-first.
     pub fn path_items(&self, idx: NodeIdx) -> Vec<ItemId> {
-        let mut rev = Vec::new();
+        let mut rev = Vec::with_capacity(self.depth(idx) as usize);
         let mut cur = idx;
         while cur != ROOT {
-            rev.push(self.nodes[cur as usize].item);
-            cur = self.nodes[cur as usize].parent;
+            rev.push(self.item(cur));
+            cur = self.parent(cur);
         }
         rev.reverse();
         rev
     }
 
-    /// All nodes carrying `item` (header-table access).
+    /// All nodes carrying `item`, ascending preorder (CSR header-table
+    /// access, indexed by item rank).
     pub fn item_nodes(&self, item: ItemId) -> &[NodeIdx] {
-        self.header.get(&item).map(|v| v.as_slice()).unwrap_or(&[])
+        match self.order.rank(item) {
+            Some(r) => {
+                let lo = self.header_offsets[r as usize] as usize;
+                let hi = self.header_offsets[r as usize + 1] as usize;
+                &self.header_nodes[lo..hi]
+            }
+            None => &[],
+        }
     }
 
-    /// Estimated resident size in bytes (node arena + child links + header).
+    /// Resident size in bytes, computed exactly from column lengths (the
+    /// service STATS formula): node columns + metric columns + child CSR +
+    /// header CSR.
     pub fn memory_bytes(&self) -> usize {
-        let node = std::mem::size_of::<TrieNode>();
-        let link = std::mem::size_of::<(ItemId, NodeIdx)>();
-        self.nodes.len() * node
-            + self.nodes.iter().map(|n| n.children.capacity() * link).sum::<usize>()
-            + self.header.values().map(|v| v.capacity() * 4 + 16).sum::<usize>()
+        let n = self.items.len();
+        // items, counts, parents, depths, subtree_end
+        let node_cols = n * (4 + 8 + 4 + 2 + 4);
+        let metric_cols = 10 * n * 8;
+        let child_csr = self.child_offsets.len() * 4 + self.child_items.len() * (4 + 4);
+        let header_csr = self.header_offsets.len() * 4 + self.header_nodes.len() * 4;
+        node_cols + metric_cols + child_csr + header_csr
+    }
+
+    /// Raw node triples `(item, parent, count)` in preorder (parents
+    /// always precede children) — the v1 serializer's wire form.
+    pub fn raw_nodes(&self) -> impl Iterator<Item = (ItemId, NodeIdx, u64)> + '_ {
+        (1..self.items.len()).map(|i| (self.items[i], self.parents[i], self.counts[i]))
+    }
+
+    // -- column slices (serializer v2, benches, tests) -------------------
+
+    pub fn items_column(&self) -> &[ItemId] {
+        &self.items
+    }
+
+    pub fn counts_column(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn parents_column(&self) -> &[NodeIdx] {
+        &self.parents
+    }
+
+    pub fn depths_column(&self) -> &[u16] {
+        &self.depths
+    }
+
+    pub fn subtree_end_column(&self) -> &[NodeIdx] {
+        &self.subtree_end
+    }
+
+    pub fn child_csr(&self) -> (&[u32], &[ItemId], &[NodeIdx]) {
+        (&self.child_offsets, &self.child_items, &self.child_targets)
+    }
+
+    pub fn header_csr(&self) -> (&[u32], &[NodeIdx]) {
+        (&self.header_offsets, &self.header_nodes)
     }
 
     // ------------------------------------------------------------------
@@ -298,7 +598,7 @@ impl TrieOfRules {
     pub fn walk(&self, ordered_path: &[ItemId]) -> Option<NodeIdx> {
         let mut cur = ROOT;
         for &item in ordered_path {
-            cur = self.nodes[cur as usize].child(item)?;
+            cur = self.child(cur, item)?;
         }
         Some(cur)
     }
@@ -309,7 +609,7 @@ impl TrieOfRules {
             return None;
         }
         let path = self.order.order_itemset(items);
-        self.walk(&path).map(|n| self.nodes[n as usize].count)
+        self.walk(&path).map(|n| self.count(n))
     }
 
     /// Look up a rule `A => C` and derive its full metric vector.
@@ -356,27 +656,27 @@ impl TrieOfRules {
         };
         let mut cur = a_node;
         for &item in c_path {
-            match self.nodes[cur as usize].child(item) {
+            match self.child(cur, item) {
                 Some(nxt) => cur = nxt,
                 None => return FindOutcome::Absent,
             }
         }
 
         if c_path.len() == 1 {
-            // Single-item consequent: the node's stored metrics (Fig. 6).
-            return FindOutcome::Found(self.nodes[cur as usize].metrics);
+            // Single-item consequent: the stored metric columns (Fig. 6).
+            return FindOutcome::Found(self.metrics(cur));
         }
         // Compound consequent (paper §3.2): supports from the walk, with
         // sup(C) read off C's own root path (C is frequent, so the path
         // exists whenever the trie was built from a full frequent set).
-        let c_ac = self.nodes[cur as usize].count;
-        let c_a = self.nodes[a_node as usize].count;
+        let c_ac = self.count(cur);
+        let c_a = self.count(a_node);
         match self.walk(c_path) {
             Some(c_node) => FindOutcome::Found(RuleMetrics::from_counts(RuleCounts {
                 n: self.num_transactions as u64,
                 c_ac,
                 c_a,
-                c_c: self.nodes[c_node as usize].count,
+                c_c: self.count(c_node),
             })),
             // Maximal-sequence tries may lack C's own path; report what the
             // product rule alone supports (support + confidence), with
@@ -396,15 +696,13 @@ impl TrieOfRules {
     // ------------------------------------------------------------------
 
     /// Visit every stored node-rule (single-item consequent, depth >= 2)
-    /// in DFS order. The trie's traversal advantage (8x headline) comes
-    /// from this being a pointer-free arena walk.
+    /// in preorder. The trie's traversal advantage (8x headline) comes
+    /// from this being a branch-light linear sweep over the depth column.
     pub fn for_each_node_rule(&self, mut f: impl FnMut(NodeIdx, &RuleMetrics)) {
-        // The arena is append-ordered; DFS order is not required for
-        // correctness of aggregate traversals, so walk the arena linearly
-        // (cache-optimal).
-        for (idx, node) in self.nodes.iter().enumerate().skip(1) {
-            if node.depth >= 2 {
-                f(idx as NodeIdx, &node.metrics);
+        for i in 1..self.items.len() {
+            if self.depths[i] >= 2 {
+                let m = self.metrics(i as NodeIdx);
+                f(i as NodeIdx, &m);
             }
         }
     }
@@ -425,18 +723,23 @@ impl TrieOfRules {
     }
 
     /// The generalized split traversal behind [`Self::for_each_rule`] and
-    /// the RQL executor: DFS over the arena where `prune(support)`
-    /// returning true cuts the *whole subtree* (sound because node counts
-    /// are antimonotone along paths), and `f(antecedent, consequent,
-    /// metrics)` receives slices into a reused path buffer — no `Rule`
-    /// allocation. Returns the number of nodes visited (pruned nodes
-    /// included, their descendants not).
+    /// the RQL executor: a **linear preorder sweep** over the node columns
+    /// where `prune(support)` returning true skips the node's whole
+    /// contiguous subtree range in O(1) (`i = subtree_end[i]` — sound
+    /// because node counts are antimonotone along paths), and
+    /// `f(antecedent, consequent, metrics)` receives slices into a reused
+    /// path buffer — no `Rule` allocation. The final split of each node
+    /// (single-item consequent) reads its metrics straight from the
+    /// columns; only compound-consequent splits compute from counts.
+    /// Returns the number of nodes visited (pruned nodes included, their
+    /// descendants not).
     ///
     /// This is deliberately the *single* implementation of split
     /// enumeration + metric derivation (including the compound-consequent
     /// `c_c` fallback to `n` when the consequent's own path is absent in a
     /// maximal-sequence trie): the RQL engine's trie/frame parity contract
-    /// depends on these semantics never forking.
+    /// depends on these semantics never forking. The builder's stack-DFS
+    /// twin exists only as the property-test oracle.
     pub fn for_each_rule_pruned(
         &self,
         mut prune: impl FnMut(f64) -> bool,
@@ -444,47 +747,46 @@ impl TrieOfRules {
     ) -> usize {
         let n = self.num_transactions as u64;
         let n_f = self.num_transactions as f64;
+        let len = self.items.len();
         let mut visited = 0usize;
-        let mut stack: Vec<(NodeIdx, usize)> = self.nodes[ROOT as usize]
-            .children
-            .iter()
-            .map(|&(_, c)| (c, 1usize))
-            .collect();
-        // Reusable path buffers: items and counts root-first.
-        let mut items: Vec<ItemId> = Vec::new();
-        let mut counts: Vec<u64> = Vec::new();
-        while let Some((idx, depth)) = stack.pop() {
-            items.truncate(depth - 1);
-            counts.truncate(depth - 1);
-            let node = &self.nodes[idx as usize];
+        // Reusable path buffers: items and counts root-first, truncated to
+        // the node's depth on entry (preorder ⇒ ancestors are current).
+        let mut path_items: Vec<ItemId> = Vec::new();
+        let mut path_counts: Vec<u64> = Vec::new();
+        let mut i = 1usize;
+        while i < len {
             visited += 1;
-            items.push(node.item);
-            counts.push(node.count);
-            if prune(node.count as f64 / n_f) {
+            let depth = self.depths[i] as usize;
+            path_items.truncate(depth - 1);
+            path_counts.truncate(depth - 1);
+            path_items.push(self.items[i]);
+            path_counts.push(self.counts[i]);
+            if prune(self.counts[i] as f64 / n_f) {
+                // Range skip: the entire subtree is the contiguous block
+                // [i, subtree_end[i]) — step over it.
+                i = self.subtree_end[i] as usize;
                 continue;
             }
-            // Emit all splits of this node's path.
-            for split in 1..items.len() {
-                let consequent = &items[split..];
-                let c_c = if consequent.len() == 1 {
-                    self.order.frequency(consequent[0])
+            for split in 1..depth {
+                let consequent = &path_items[split..];
+                let metrics = if split == depth - 1 {
+                    // Single-item consequent == the stored node-rule.
+                    self.metrics(i as NodeIdx)
                 } else {
-                    match self.support_of(consequent) {
+                    let c_c = match self.support_of(consequent) {
                         Some(c) => c,
                         None => n,
-                    }
+                    };
+                    RuleMetrics::from_counts(RuleCounts {
+                        n,
+                        c_ac: self.counts[i],
+                        c_a: path_counts[split - 1],
+                        c_c,
+                    })
                 };
-                let metrics = RuleMetrics::from_counts(RuleCounts {
-                    n,
-                    c_ac: node.count,
-                    c_a: counts[split - 1],
-                    c_c,
-                });
-                f(&items[..split], consequent, &metrics);
+                f(&path_items[..split], consequent, &metrics);
             }
-            for &(_, child) in &node.children {
-                stack.push((child, depth + 1));
-            }
+            i += 1;
         }
         visited
     }
@@ -499,31 +801,25 @@ impl TrieOfRules {
     /// Allocation-free traversal of every representable rule with the two
     /// metrics the trie derives natively (paper §3.2): support of the full
     /// path and confidence = sup(path)/sup(antecedent boundary). This is
-    /// the hot traversal the paper's large-dataset experiment measures;
-    /// `f(antecedent, consequent, support, confidence)` receives slices
-    /// into a reused path buffer.
+    /// the hot traversal the paper's large-dataset experiment measures —
+    /// now a straight linear sweep over the `items`/`counts`/`depths`
+    /// columns; `f(antecedent, consequent, support, confidence)` receives
+    /// slices into a reused path buffer.
     pub fn for_each_split(&self, mut f: impl FnMut(&[ItemId], &[ItemId], f64, f64)) {
         let n = self.num_transactions as f64;
-        let mut stack: Vec<(NodeIdx, usize)> = self.nodes[ROOT as usize]
-            .children
-            .iter()
-            .map(|&(_, c)| (c, 1usize))
-            .collect();
-        let mut items: Vec<ItemId> = Vec::new();
-        let mut counts: Vec<u64> = Vec::new();
-        while let Some((idx, depth)) = stack.pop() {
-            items.truncate(depth - 1);
-            counts.truncate(depth - 1);
-            let node = &self.nodes[idx as usize];
-            items.push(node.item);
-            counts.push(node.count);
-            let support = node.count as f64 / n;
-            for split in 1..items.len() {
-                let confidence = node.count as f64 / counts[split - 1] as f64;
-                f(&items[..split], &items[split..], support, confidence);
-            }
-            for &(_, child) in &node.children {
-                stack.push((child, depth + 1));
+        let len = self.items.len();
+        let mut path_items: Vec<ItemId> = Vec::new();
+        let mut path_counts: Vec<u64> = Vec::new();
+        for i in 1..len {
+            let depth = self.depths[i] as usize;
+            path_items.truncate(depth - 1);
+            path_counts.truncate(depth - 1);
+            path_items.push(self.items[i]);
+            path_counts.push(self.counts[i]);
+            let support = self.counts[i] as f64 / n;
+            for split in 1..depth {
+                let confidence = self.counts[i] as f64 / path_counts[split - 1] as f64;
+                f(&path_items[..split], &path_items[split..], support, confidence);
             }
         }
     }
@@ -534,16 +830,21 @@ impl TrieOfRules {
 
     /// Top-`k` stored node-rules by `metric`, descending.
     ///
-    /// Collect values over the arena walk, then `select_nth_unstable`
-    /// (O(nodes) expected) and sort only the winning prefix — measured
-    /// faster than both a bounded heap and a full sort across k/n ratios
-    /// (EXPERIMENTS.md §Perf, iteration L3-1).
+    /// Scans the metric's contiguous column (no struct assembly), then
+    /// `select_nth_unstable` (O(nodes) expected) and sorts only the
+    /// winning prefix — measured faster than both a bounded heap and a
+    /// full sort across k/n ratios (EXPERIMENTS.md §Perf, iteration L3-1).
     pub fn top_n(&self, metric: Metric, k: usize) -> Vec<(NodeIdx, f64)> {
         if k == 0 {
             return Vec::new();
         }
+        let col = self.metric_column(metric);
         let mut all: Vec<(TotalF64, NodeIdx)> = Vec::with_capacity(self.num_nodes());
-        self.for_each_node_rule(|idx, m| all.push((TotalF64(m.get(metric)), idx)));
+        for i in 1..col.len() {
+            if self.depths[i] >= 2 {
+                all.push((TotalF64(col[i]), i as NodeIdx));
+            }
+        }
         let k = k.min(all.len());
         if k == 0 {
             return Vec::new();
@@ -559,7 +860,7 @@ impl TrieOfRules {
 
     /// Top-`k` rules by `metric` over **all representable rules** (every
     /// node split), matching the population the dataframe ranks. Supported
-    /// for the metrics the trie derives natively during the walk —
+    /// for the metrics the trie derives natively during the sweep —
     /// Support and Confidence (the paper's Figs. 12–13); other metrics live
     /// on stored node rules only (use [`Self::top_n`]).
     pub fn top_n_split_rules(&self, metric: Metric, k: usize) -> Vec<(Rule, f64)> {
@@ -570,35 +871,27 @@ impl TrieOfRules {
         if k == 0 {
             return Vec::new();
         }
-        // Collect lightweight (value, node, split) candidates, partial-
-        // select the winners, and materialize Rules only for those k
-        // (EXPERIMENTS.md §Perf, iteration L3-1).
+        // Collect lightweight (value, node, split) candidates over the
+        // linear sweep, partial-select the winners, and materialize Rules
+        // only for those k (EXPERIMENTS.md §Perf, iteration L3-1).
         let use_support = metric == Metric::Support;
         let n = self.num_transactions as f64;
         let mut cands: Vec<(TotalF64, NodeIdx, u16)> =
             Vec::with_capacity(self.num_representable_rules());
-        let mut stack: Vec<NodeIdx> = self.nodes[ROOT as usize]
-            .children
-            .iter()
-            .map(|&(_, c)| c)
-            .collect();
-        // Per-depth ancestor counts for confidence; maintained along the DFS.
-        let mut counts: Vec<u64> = Vec::new();
-        while let Some(idx) = stack.pop() {
-            let node = &self.nodes[idx as usize];
-            counts.truncate(node.depth as usize - 1);
-            counts.push(node.count);
-            let sup = node.count as f64 / n;
-            for split in 1..node.depth {
+        // Per-depth ancestor counts maintained along the preorder sweep.
+        let mut path_counts: Vec<u64> = Vec::new();
+        for i in 1..self.items.len() {
+            let depth = self.depths[i];
+            path_counts.truncate(depth as usize - 1);
+            path_counts.push(self.counts[i]);
+            let sup = self.counts[i] as f64 / n;
+            for split in 1..depth {
                 let v = if use_support {
                     sup
                 } else {
-                    node.count as f64 / counts[split as usize - 1] as f64
+                    self.counts[i] as f64 / path_counts[split as usize - 1] as f64
                 };
-                cands.push((TotalF64(v), idx, split));
-            }
-            for &(_, child) in &node.children {
-                stack.push(child);
+                cands.push((TotalF64(v), i as NodeIdx, split));
             }
         }
         let k = k.min(cands.len());
@@ -627,13 +920,13 @@ impl TrieOfRules {
     pub fn rules_with_consequent(&self, item: ItemId) -> Vec<(NodeIdx, RuleMetrics)> {
         self.item_nodes(item)
             .iter()
-            .filter(|&&n| self.nodes[n as usize].depth >= 2)
-            .map(|&n| (n, self.nodes[n as usize].metrics))
+            .filter(|&&n| self.depth(n) >= 2)
+            .map(|&n| (n, self.metrics(n)))
             .collect()
     }
 }
 
-/// Total-order f64 wrapper for heap use.
+/// Total-order f64 wrapper for partial-selection use.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct TotalF64(f64);
 
@@ -671,13 +964,61 @@ mod tests {
     #[test]
     fn node_counts_are_true_supports() {
         let (db, trie) = paper_trie();
-        for idx in 1..trie.nodes.len() {
+        for idx in 1..=trie.num_nodes() {
             let items = trie.path_items(idx as NodeIdx);
             let truth = db
                 .iter()
                 .filter(|tx| items.iter().all(|i| tx.contains(i)))
                 .count() as u64;
-            assert_eq!(trie.node(idx as NodeIdx).count, truth, "path {items:?}");
+            assert_eq!(trie.count(idx as NodeIdx), truth, "path {items:?}");
+        }
+    }
+
+    #[test]
+    fn preorder_structure_invariants() {
+        let (_, trie) = paper_trie();
+        let n = trie.num_nodes() + 1;
+        for i in 1..n {
+            let idx = i as NodeIdx;
+            let p = trie.parent(idx);
+            assert!((p as usize) < i, "parent must precede child in preorder");
+            assert_eq!(trie.depth(idx), trie.depth(p) + 1);
+            // Subtree ranges: i sits inside its parent's range.
+            assert!(trie.subtree_end(idx) > idx);
+            assert!(trie.subtree_end(idx) <= trie.subtree_end(p) || p == ROOT);
+        }
+        assert_eq!(trie.subtree_end(ROOT) as usize, n);
+        // Range membership == ancestor relation, checked exhaustively.
+        for i in 0..n as NodeIdx {
+            for j in 1..n as NodeIdx {
+                let mut anc = j;
+                let mut is_desc = false;
+                loop {
+                    if anc == i {
+                        is_desc = true;
+                        break;
+                    }
+                    if anc == ROOT {
+                        break;
+                    }
+                    anc = trie.parent(anc);
+                }
+                let in_range = j >= i && j < trie.subtree_end(i);
+                assert_eq!(is_desc, in_range, "i={i} j={j}");
+            }
+        }
+        // Child CSR: slices item-sorted, targets point back to parent.
+        for i in 0..n as NodeIdx {
+            let mut prev: Option<ItemId> = None;
+            for (item, child) in trie.children(i) {
+                if let Some(p) = prev {
+                    assert!(p < item, "children not item-sorted");
+                }
+                prev = Some(item);
+                assert_eq!(trie.parent(child), i);
+                assert_eq!(trie.item(child), item);
+                assert_eq!(trie.child(i, item), Some(child));
+            }
         }
     }
 
@@ -785,12 +1126,12 @@ mod tests {
             TrieOfRules::from_sequences(&seqs, &order2, &mut counter, db.num_transactions())
                 .unwrap();
         // Every maximal-trie node exists in the full trie with equal count.
-        for idx in 1..maximal.nodes.len() {
+        for idx in 1..=maximal.num_nodes() {
             let items = maximal.path_items(idx as NodeIdx);
             let full_node = full.walk(&items).expect("path missing in full trie");
             assert_eq!(
-                maximal.node(idx as NodeIdx).count,
-                full.node(full_node).count,
+                maximal.count(idx as NodeIdx),
+                full.count(full_node),
                 "path {items:?}"
             );
         }
@@ -850,6 +1191,31 @@ mod tests {
     }
 
     #[test]
+    fn pruned_traversal_range_skips() {
+        let (_, trie) = paper_trie();
+        // Prune everything below 0.7 support: visited must shrink and
+        // every emitted rule must meet the bound.
+        let all = trie.for_each_rule_pruned(|_| false, |_, _, _| {});
+        let mut emitted = 0usize;
+        let pruned = trie.for_each_rule_pruned(
+            |sup| sup < 0.7,
+            |_, _, m| {
+                assert!(m.support >= 0.7);
+                emitted += 1;
+            },
+        );
+        assert!(pruned < all, "range skip did not reduce visits: {pruned} vs {all}");
+        // Reference: filter the unpruned enumeration.
+        let mut want = 0usize;
+        trie.for_each_rule(|_, m| {
+            if m.support >= 0.7 {
+                want += 1;
+            }
+        });
+        assert_eq!(emitted, want);
+    }
+
+    #[test]
     fn top_n_split_rules_matches_reference() {
         let (_, trie) = paper_trie();
         for metric in [Metric::Support, Metric::Confidence] {
@@ -883,15 +1249,18 @@ mod tests {
         let name = |s: &str| db.vocab().get(s).unwrap();
         for n in ["f", "c", "a", "m", "p", "b"] {
             let item = name(n);
-            for &idx in trie.item_nodes(item) {
-                assert_eq!(trie.node(idx).item, item);
+            let nodes = trie.item_nodes(item);
+            // Ascending preorder, every entry carries the item.
+            assert!(nodes.windows(2).all(|w| w[0] < w[1]));
+            for &idx in nodes {
+                assert_eq!(trie.item(idx), item);
             }
         }
         let with_a = trie.rules_with_consequent(name("a"));
         assert!(!with_a.is_empty());
         for (idx, _) in with_a {
-            assert_eq!(trie.node(idx).item, name("a"));
-            assert!(trie.node(idx).depth >= 2);
+            assert_eq!(trie.item(idx), name("a"));
+            assert!(trie.depth(idx) >= 2);
         }
     }
 
@@ -910,5 +1279,68 @@ mod tests {
     fn memory_accounting_nonzero() {
         let (_, trie) = paper_trie();
         assert!(trie.memory_bytes() > trie.num_nodes() * 32);
+        // The formula is exactly the column-length sum; spot-check one term.
+        let (off, items, _) = trie.child_csr();
+        assert_eq!(off.len(), trie.num_nodes() + 2);
+        assert_eq!(items.len(), trie.num_nodes());
+    }
+
+    #[test]
+    fn from_core_columns_rejects_non_preorder_layouts() {
+        // BFS layout: parents precede children and every per-node check
+        // passes, but node 3 (child of 1) appears after 1's sibling 2 —
+        // subtree ranges would be silently wrong, so it must be rejected.
+        let order = ItemOrder::from_frequencies(vec![5, 4, 3], 1);
+        let err = TrieOfRules::from_core_columns(
+            order,
+            5,
+            vec![ROOT_ITEM, 0, 1, 2],
+            vec![5, 4, 3, 2],
+            vec![0, 0, 0, 1],
+            vec![0, 1, 1, 2],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not DFS preorder"), "{err}");
+    }
+
+    #[test]
+    fn from_core_columns_rejects_out_of_range_items() {
+        let order = ItemOrder::from_frequencies(vec![5, 4], 1);
+        let err = TrieOfRules::from_core_columns(
+            order,
+            5,
+            vec![ROOT_ITEM, 9],
+            vec![5, 3],
+            vec![0, 0],
+            vec![0, 1],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn from_columns_rejects_tampered_derived_state() {
+        let (_, trie) = paper_trie();
+        let (co, ci, ct) = trie.child_csr();
+        let (ho, hn) = trie.header_csr();
+        let mut bad_end = trie.subtree_end_column().to_vec();
+        let last = bad_end.len() - 1;
+        bad_end[last] = bad_end[last].wrapping_add(1);
+        let err = TrieOfRules::from_columns(
+            trie.order().clone(),
+            trie.num_transactions(),
+            trie.items_column().to_vec(),
+            trie.counts_column().to_vec(),
+            trie.parents_column().to_vec(),
+            trie.depths_column().to_vec(),
+            bad_end,
+            co.to_vec(),
+            ci.to_vec(),
+            ct.to_vec(),
+            ho.to_vec(),
+            hn.to_vec(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("subtree_end"), "{err}");
     }
 }

@@ -13,15 +13,15 @@ pub fn to_dot(trie: &TrieOfRules, vocab: &Vocab) -> String {
     out.push_str("  n0 [label=\"(root)\"];\n");
     let mut stack: Vec<NodeIdx> = vec![ROOT];
     while let Some(idx) = stack.pop() {
-        for &(item, child) in &trie.node(idx).children {
-            let cn = trie.node(child);
+        for (item, child) in trie.children(idx) {
+            let m = trie.metrics(child);
             out.push_str(&format!(
                 "  n{child} [label=\"{} ({})\\nsup={:.3} conf={:.3} lift={:.2}\"];\n",
                 vocab.name(item),
-                cn.count,
-                cn.metrics.support,
-                cn.metrics.confidence,
-                cn.metrics.lift,
+                trie.count(child),
+                m.support,
+                m.confidence,
+                m.lift,
             ));
             out.push_str(&format!("  n{idx} -> n{child};\n"));
             stack.push(child);
@@ -45,15 +45,15 @@ pub fn to_ascii(trie: &TrieOfRules, vocab: &Vocab, max_depth: usize) -> String {
         if depth > max_depth {
             return;
         }
-        for &(item, child) in &trie.node(idx).children {
-            let cn = trie.node(child);
+        for (item, child) in trie.children(idx) {
+            let m = trie.metrics(child);
             out.push_str(&"  ".repeat(depth));
             out.push_str(&format!(
                 "{} ({}) sup={:.3} conf={:.3}\n",
                 vocab.name(item),
-                cn.count,
-                cn.metrics.support,
-                cn.metrics.confidence
+                trie.count(child),
+                m.support,
+                m.confidence
             ));
             rec(trie, vocab, child, depth + 1, max_depth, out);
         }
@@ -95,7 +95,7 @@ mod tests {
         let capped = to_ascii(&trie, db.vocab(), 1);
         assert!(full.lines().count() > capped.lines().count());
         // depth-1 render lists only root children (+ root line)
-        let root_children = trie.node(crate::trie::node::ROOT).children.len();
+        let root_children = trie.children(crate::trie::node::ROOT).count();
         assert_eq!(capped.lines().count(), root_children + 1);
     }
 }

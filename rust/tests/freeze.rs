@@ -1,0 +1,266 @@
+//! Freeze parity: the frozen, preorder-renumbered, columnar
+//! [`TrieOfRules`] must answer every operation exactly like the mutable
+//! [`TrieBuilder`] it was frozen from (the builder keeps the old
+//! pointer-walk / stack-DFS implementations as the oracle), and the
+//! preorder `subtree_end` ranges must cover each node's descendant set
+//! exactly — the invariant the query planner's range-skip pruning rests
+//! on. Plus: builds are deterministic down to the serialized byte.
+
+use trie_of_rules::bench_support::workloads::Workload;
+use trie_of_rules::data::transaction::TransactionDb;
+use trie_of_rules::data::vocab::Vocab;
+use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::rules::rule::Rule;
+use trie_of_rules::trie::node::ROOT;
+use trie_of_rules::trie::serialize;
+use trie_of_rules::trie::{TrieBuilder, TrieOfRules};
+use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
+use trie_of_rules::util::rng::Rng;
+
+fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
+    let num_items = g.usize_in(3, 12);
+    let num_tx = g.usize_in(4, 60);
+    (0..num_tx)
+        .map(|_| {
+            let len = g.usize_in(1, num_items.min(6) + 1);
+            (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
+        })
+        .collect()
+}
+
+fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
+    if rows.is_empty() {
+        return None;
+    }
+    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
+    let mut b = TransactionDb::builder(Vocab::synthetic(max_item as usize + 1));
+    for r in rows {
+        b.push_ids(r.clone());
+    }
+    Some(b.build())
+}
+
+/// Builder rebuilt from the workload's own mining output — the exact
+/// input `Workload::build` froze.
+fn builder_of(w: &Workload) -> TrieBuilder {
+    TrieBuilder::from_frequent(&w.frequent, &w.order).expect("builder build")
+}
+
+#[test]
+fn prop_find_rule_builder_vs_frozen() {
+    for_all(
+        "freeze-find-rule-parity",
+        40,
+        0xF2EE2E,
+        |g| {
+            let rows = random_db(g);
+            let rule_seed = g.rng().next_u64();
+            (rows, rule_seed)
+        },
+        |(rows, s)| shrink_vec(rows).into_iter().map(|r| (r, *s)).collect(),
+        |(rows, s)| format!("rule_seed {s:#x}, rows {rows:?}"),
+        |(rows, rule_seed)| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("freeze", db, 0.12);
+            let b = builder_of(&w);
+            // Every representable rule, plus random (often absent or
+            // non-representable) rules over the full vocabulary.
+            let mut probes: Vec<Rule> = w.search_rules();
+            let mut rng = Rng::new(*rule_seed);
+            let num_items = w.db.vocab().len();
+            if num_items >= 2 {
+                for _ in 0..40 {
+                    // total in [2, min(5, num_items)] keeps the distinct-
+                    // item draw below terminating on tiny vocabularies.
+                    let max_len = num_items.min(5);
+                    let total = 2 + rng.below(max_len - 1);
+                    let a_len = 1 + rng.below(total - 1);
+                    let mut items: Vec<u32> = Vec::new();
+                    while items.len() < total {
+                        let it = rng.below(num_items) as u32;
+                        if !items.contains(&it) {
+                            items.push(it);
+                        }
+                    }
+                    let (a, c) = items.split_at(a_len);
+                    probes.push(Rule::from_ids(a.to_vec(), c.to_vec()));
+                }
+            }
+            for rule in &probes {
+                let frozen = w.trie.find_rule(rule);
+                let oracle = b.find_rule(rule);
+                if frozen != oracle {
+                    return Err(format!(
+                        "find_rule diverged on {rule}: frozen {frozen:?} vs builder {oracle:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pruned_traversal_builder_vs_frozen() {
+    for_all(
+        "freeze-pruned-traversal-parity",
+        40,
+        0x5117,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("freeze", db, 0.1);
+            let b = builder_of(&w);
+            for bound in [0.0, 0.15, 0.35, 0.8] {
+                type Emitted = Vec<(Vec<u32>, Vec<u32>, u64, u64)>;
+                let collect = |rows: &mut Emitted, a: &[u32], c: &[u32], sup: f64, conf: f64| {
+                    let mut a = a.to_vec();
+                    let mut c = c.to_vec();
+                    a.sort_unstable();
+                    c.sort_unstable();
+                    rows.push((a, c, sup.to_bits(), conf.to_bits()));
+                };
+                let mut frozen_rows: Emitted = Vec::new();
+                let frozen_visited = w.trie.for_each_rule_pruned(
+                    |sup| sup < bound,
+                    |a, c, m| collect(&mut frozen_rows, a, c, m.support, m.confidence),
+                );
+                let mut oracle_rows: Emitted = Vec::new();
+                let oracle_visited = b.for_each_rule_pruned(
+                    |sup| sup < bound,
+                    |a, c, m| collect(&mut oracle_rows, a, c, m.support, m.confidence),
+                );
+                if frozen_visited != oracle_visited {
+                    return Err(format!(
+                        "visited diverged at bound {bound}: {frozen_visited} vs {oracle_visited}"
+                    ));
+                }
+                frozen_rows.sort();
+                oracle_rows.sort();
+                if frozen_rows != oracle_rows {
+                    return Err(format!(
+                        "emitted rules diverged at bound {bound}: {} vs {} rows",
+                        frozen_rows.len(),
+                        oracle_rows.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_top_k_builder_vs_frozen() {
+    for_all(
+        "freeze-topk-parity",
+        30,
+        0x70B5,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("freeze", db, 0.12);
+            let b = builder_of(&w);
+            let n = w.trie.num_nodes();
+            for metric in [Metric::Support, Metric::Confidence, Metric::Lift, Metric::Zhang] {
+                for k in [1, 3, n / 2, n + 5] {
+                    let k = k.max(1);
+                    let frozen: Vec<u64> = w
+                        .trie
+                        .top_n(metric, k)
+                        .iter()
+                        .map(|&(_, v)| v.to_bits())
+                        .collect();
+                    let oracle: Vec<u64> =
+                        b.top_n(metric, k).iter().map(|&(_, v)| v.to_bits()).collect();
+                    if frozen != oracle {
+                        return Err(format!("top-{k} by {metric:?} value lists diverged"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_subtree_ranges_cover_descendants_exactly() {
+    for_all(
+        "freeze-subtree-ranges",
+        50,
+        0x5B72EE,
+        random_db,
+        |v| shrink_vec(v),
+        |v| format!("{v:?}"),
+        |rows| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("freeze", db, 0.1);
+            let t: &TrieOfRules = &w.trie;
+            let n = t.num_nodes() + 1;
+            if t.subtree_end(ROOT) as usize != n {
+                return Err(format!(
+                    "root range {} != node count {n}",
+                    t.subtree_end(ROOT)
+                ));
+            }
+            // Membership in [i, subtree_end[i]) must equal the ancestor
+            // relation, for every (i, j) pair.
+            for i in 0..n as u32 {
+                let end = t.subtree_end(i);
+                if end <= i || end as usize > n {
+                    return Err(format!("malformed range [{i}, {end})"));
+                }
+                for j in 1..n as u32 {
+                    let mut anc = j;
+                    let is_desc = loop {
+                        if anc == i {
+                            break true;
+                        }
+                        if anc == ROOT {
+                            break false;
+                        }
+                        anc = t.parent(anc);
+                    };
+                    let in_range = j >= i && j < end;
+                    if is_desc != in_range {
+                        return Err(format!(
+                            "range/ancestor mismatch: i={i} j={j} desc={is_desc} range={in_range}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Two builds from the same input serialize to byte-identical files: no
+/// hash-map iteration order leaks into the structure (the header is a
+/// rank-indexed CSR, the renumbering is canonical preorder).
+#[test]
+fn identical_builds_serialize_identically() {
+    let rows: Vec<Vec<u32>> = vec![
+        vec![0, 1, 2, 5],
+        vec![1, 2, 3],
+        vec![0, 2, 3, 4],
+        vec![0, 1, 2],
+        vec![2, 3, 4, 5],
+        vec![0, 1],
+        vec![1, 2, 4],
+        vec![0, 1, 2, 4],
+    ];
+    let mut bytes: Vec<Vec<u8>> = Vec::new();
+    for _ in 0..2 {
+        let db = to_db(&rows).unwrap();
+        let w = Workload::build("det", db, 0.2);
+        let mut out = Vec::new();
+        serialize::save_to(&w.trie, Some(w.db.vocab()), &mut out).unwrap();
+        assert!(w.trie.num_nodes() > 3, "degenerate determinism fixture");
+        bytes.push(out);
+    }
+    assert_eq!(bytes[0], bytes[1], "same input produced different bytes");
+}

@@ -62,22 +62,26 @@ fn fig5_step2_trie_shape() {
         TrieOfRules::from_sequences(&seqs, &order, &mut counter, db.num_transactions()).unwrap();
     assert_eq!(trie.num_nodes(), 8);
 
-    let f = trie.node(ROOT).child(name(&db, "f")).expect("f under root");
-    assert_eq!(trie.node(f).count, 4);
-    let c_under_f = trie.node(f).child(name(&db, "c")).expect("c under f");
-    assert_eq!(trie.node(c_under_f).count, 3);
-    let a = trie.node(c_under_f).child(name(&db, "a")).expect("a under c");
-    assert_eq!(trie.node(a).count, 3);
-    let m = trie.node(a).child(name(&db, "m")).expect("m under a");
-    assert_eq!(trie.node(m).count, 3);
-    let p = trie.node(m).child(name(&db, "p")).expect("p under m");
-    assert_eq!(trie.node(p).count, 2);
-    let b_under_f = trie.node(f).child(name(&db, "b")).expect("b under f");
-    assert_eq!(trie.node(b_under_f).count, 2);
-    let c_root = trie.node(ROOT).child(name(&db, "c")).expect("c under root");
-    assert_eq!(trie.node(c_root).count, 4);
-    let b_under_c = trie.node(c_root).child(name(&db, "b")).expect("b under c");
-    assert_eq!(trie.node(b_under_c).count, 2);
+    let f = trie.child(ROOT, name(&db, "f")).expect("f under root");
+    assert_eq!(trie.count(f), 4);
+    let c_under_f = trie.child(f, name(&db, "c")).expect("c under f");
+    assert_eq!(trie.count(c_under_f), 3);
+    let a = trie.child(c_under_f, name(&db, "a")).expect("a under c");
+    assert_eq!(trie.count(a), 3);
+    let m = trie.child(a, name(&db, "m")).expect("m under a");
+    assert_eq!(trie.count(m), 3);
+    let p = trie.child(m, name(&db, "p")).expect("p under m");
+    assert_eq!(trie.count(p), 2);
+    let b_under_f = trie.child(f, name(&db, "b")).expect("b under f");
+    assert_eq!(trie.count(b_under_f), 2);
+    let c_root = trie.child(ROOT, name(&db, "c")).expect("c under root");
+    assert_eq!(trie.count(c_root), 4);
+    let b_under_c = trie.child(c_root, name(&db, "b")).expect("b under c");
+    assert_eq!(trie.count(b_under_c), 2);
+    // Freezing renumbers in DFS preorder: the f-subtree is a contiguous
+    // range and the paper's first sequence is the leftmost path.
+    assert!(f < c_under_f && c_under_f < a && a < m && m < p);
+    assert!(trie.subtree_end(f) as usize - f as usize == 6, "f subtree = 6 nodes");
 }
 
 #[test]
