@@ -8,13 +8,19 @@
 //! * layout: the frozen columnar/CSR trie (preorder linear sweep, CSR
 //!   child probes, contiguous metric columns) vs the mutable builder's
 //!   pointer-shaped arena (per-node child `Vec`s, stack DFS) — the win
-//!   of `TrieBuilder::freeze`, recorded per run in the BENCH json.
+//!   of `TrieBuilder::freeze`, recorded per run in the BENCH json;
+//! * parallel: the morsel-driven executor vs the sequential one on a
+//!   full-traversal RQL query at 2 and 4 threads (parity asserted before
+//!   timing), written to `BENCH_ablation_trie.json` via the shared
+//!   `BenchReport` helper.
 
 use std::time::Instant;
 
 use trie_of_rules::bench_support::harness::{bench, BenchConfig};
-use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::report::{BenchReport, Report};
 use trie_of_rules::bench_support::workloads;
+use trie_of_rules::query::parallel::ParallelExecutor;
+use trie_of_rules::query::query_trie;
 use trie_of_rules::rules::metrics::Metric;
 use trie_of_rules::trie::trie::FindOutcome;
 use trie_of_rules::trie::TrieBuilder;
@@ -154,8 +160,65 @@ fn main() {
         ],
     );
 
+    // --- parallel: morsel-driven traversal vs sequential executor ------
+    // A full-traversal RQL query (the worst case for per-query work):
+    // morsel sweeps + per-worker top-k heaps + deterministic merge vs the
+    // single-threaded executor, identical rows asserted before timing.
+    let mut bench_json = BenchReport::new("ablation_trie");
+    let query = "RULES WHERE support >= 0.006 SORT BY lift DESC LIMIT 50";
+    let seq_rows = query_trie(&w.trie, w.db.vocab(), query)
+        .expect("seq query")
+        .into_rows();
+    let seq_q = bench("parallel-seq", cfg, || {
+        query_trie(&w.trie, w.db.vocab(), query)
+            .unwrap()
+            .into_rows()
+            .rows
+            .len()
+    });
+    bench_json.row("parallel-traversal/seq", &[("mean_s", seq_q.mean_seconds())]);
+    for degree in [2usize, 4] {
+        let exec = ParallelExecutor::new(degree);
+        let par_rows = exec
+            .query(&w.trie, w.db.vocab(), query)
+            .expect("par query")
+            .into_rows();
+        assert_eq!(seq_rows.rows, par_rows.rows, "parallel parity broke");
+        let par_q = bench("parallel-par", cfg, || {
+            exec.query(&w.trie, w.db.vocab(), query)
+                .unwrap()
+                .into_rows()
+                .rows
+                .len()
+        });
+        report.row(
+            &format!("parallel-t{degree}"),
+            &[
+                ("seq_s", seq_q.mean_seconds()),
+                ("par_s", par_q.mean_seconds()),
+                (
+                    "speedup",
+                    seq_q.mean_seconds() / par_q.mean_seconds().max(1e-12),
+                ),
+            ],
+        );
+        bench_json.row(
+            &format!("parallel-traversal/t{degree}"),
+            &[
+                ("mean_s", par_q.mean_seconds()),
+                ("threads", degree as f64),
+                (
+                    "speedup_vs_seq",
+                    seq_q.mean_seconds() / par_q.mean_seconds().max(1e-12),
+                ),
+            ],
+        );
+    }
+
     print!("{}", report.render());
     report.save("ablation_trie").expect("save results");
+    let path = bench_json.save().expect("save BENCH_ablation_trie.json");
+    eprintln!("[ablation_trie] wrote {}", path.display());
 }
 
 fn time(f: impl Fn() -> f64) -> f64 {

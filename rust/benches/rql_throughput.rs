@@ -1,45 +1,108 @@
-//! RQL end-to-end throughput: trie-planned execution vs the frame
-//! full-scan fallback, on uniform and Zipf-skewed (hot-consequent) query
-//! workloads.
+//! RQL end-to-end throughput: sequential trie plan vs frame full-scan vs
+//! the morsel-parallel executor across a thread sweep, on uniform and
+//! Zipf-skewed (hot-consequent) query workloads.
 //!
 //! Each sample is one whole query — parse → bind/plan → execute — so the
 //! numbers measure what a service request actually costs. The trie side
 //! wins by skipping work (header-list access, subtree pruning, top-k
-//! pushdown); the frame side scans and filters every row. Skewed traffic
-//! concentrates queries on the most frequent consequents, whose header
-//! lists are the *longest* — the interesting case for the planner, since
-//! the naive expectation "hot item ⇒ cheap query" is exactly backwards.
+//! pushdown); the parallel executor adds morsel-driven traversal sweeps,
+//! header posting-list shards, and batched column-at-a-time residual
+//! predicates. Skewed traffic concentrates queries on the most frequent
+//! consequents, whose header lists are the *longest* — the interesting
+//! case for both the planner and the sharder, since the naive expectation
+//! "hot item ⇒ cheap query" is exactly backwards.
+//!
+//! Flags (after `--`): `--test` runs a fast smoke (smaller workload, CI's
+//! release-mode gate), `--query-threads N` caps the thread sweep. Results
+//! go to the console, `bench_results/rql_throughput.json`, and the
+//! machine-readable cross-PR snapshot `BENCH_rql.json` (ops/s, p50/p99,
+//! thread sweep — see `bench_support::report::BenchReport`).
 
 use trie_of_rules::bench_support::harness::bench_each;
-use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::report::{BenchReport, Report};
 use trie_of_rules::bench_support::workloads::{self, rql_queries, QuerySkew};
+use trie_of_rules::query::parallel::ParallelExecutor;
 use trie_of_rules::query::{query_frame, query_trie};
 use trie_of_rules::stats::descriptive::Summary;
 
+struct Args {
+    test: bool,
+    query_threads: usize,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        test: false,
+        query_threads: 8,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--test" => args.test = true,
+            "--query-threads" => {
+                args.query_threads = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--query-threads needs a positive integer");
+            }
+            // `cargo bench` forwards its own flags (e.g. `--bench`).
+            _ => {}
+        }
+    }
+    args.query_threads = args.query_threads.max(1);
+    args
+}
+
 fn main() {
-    let w = workloads::groceries(0.005);
+    let args = parse_args();
+    let (minsup, num_queries) = if args.test { (0.01, 60) } else { (0.005, 200) };
+    let w = workloads::groceries(minsup);
     eprintln!(
-        "[rql_throughput] {} rules, {} trie nodes",
+        "[rql_throughput] {} rules, {} trie nodes{}",
         w.ruleset.len(),
-        w.trie.num_nodes()
+        w.trie.num_nodes(),
+        if args.test { " (--test smoke)" } else { "" }
     );
 
-    let mut report = Report::new("RQL throughput: trie plan vs frame scan (per-query seconds)");
-    report.note("population: all representable rules; identical rows from both backends");
+    // Sweep degrees 1,2,4,8 … capped by --query-threads (always includes
+    // the cap itself so `--query-threads 3` still measures degree 3).
+    let mut sweep: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t <= args.query_threads)
+        .collect();
+    if !sweep.contains(&args.query_threads) {
+        sweep.push(args.query_threads);
+    }
+    let execs: Vec<ParallelExecutor> = sweep.iter().map(|&t| ParallelExecutor::new(t)).collect();
+
+    let mut report =
+        Report::new("RQL throughput: trie seq vs frame scan vs parallel (per-query seconds)");
+    report.note("population: all representable rules; identical rows from every backend/degree");
+    let mut bench = BenchReport::new("rql");
+
     for (label, skew) in [
         ("uniform", QuerySkew::Uniform),
         ("zipf1.1", QuerySkew::Zipf(1.1)),
     ] {
-        let qw = rql_queries(&w, 200, skew, 0x59_1D);
+        let qw = rql_queries(&w, num_queries, skew, 0x59_1D);
 
         // Parity gate before timing: a fast backend that returns different
-        // rows is a bug, not a speedup.
+        // rows is a bug, not a speedup. The parallel executor must agree
+        // at every swept degree — rows AND order.
         for q in qw.queries.iter().take(25) {
             let t = query_trie(&w.trie, w.db.vocab(), q).expect("trie query").into_rows();
             let f = query_frame(&w.frame, w.db.vocab(), q)
                 .expect("frame query")
                 .into_rows();
-            assert_eq!(t.rows, f.rows, "parity broke on `{q}`");
+            assert_eq!(t.rows, f.rows, "trie/frame parity broke on `{q}`");
+            for (degree, exec) in sweep.iter().zip(&execs) {
+                let p = exec
+                    .query(&w.trie, w.db.vocab(), q)
+                    .expect("parallel query")
+                    .into_rows();
+                assert_eq!(t.rows, p.rows, "parallel(t={degree}) parity broke on `{q}`");
+                assert_eq!(t.stats, p.stats, "parallel(t={degree}) stats broke on `{q}`");
+            }
         }
 
         let trie_times = bench_each(&qw.queries, 1, |q| {
@@ -64,7 +127,7 @@ fn main() {
         let ts = Summary::of(&trie_times);
         let fs = Summary::of(&frame_times);
         report.row(
-            &format!("trie/{label}"),
+            &format!("trie-seq/{label}"),
             &[
                 ("mean_s", ts.mean),
                 ("p95_s", ts.p95),
@@ -80,10 +143,48 @@ fn main() {
             ],
         );
         report.row(
-            &format!("speedup/{label}"),
+            &format!("speedup-vs-frame/{label}"),
             &[("mean_s", fs.mean / ts.mean.max(1e-12))],
         );
+        bench.samples(&format!("trie-seq/{label}"), &trie_times, &[("threads", 1.0)]);
+        bench.samples(&format!("frame/{label}"), &frame_times, &[("threads", 1.0)]);
+
+        for (degree, exec) in sweep.iter().zip(&execs) {
+            let par_times = bench_each(&qw.queries, 1, |q| {
+                std::hint::black_box(
+                    exec.query(&w.trie, w.db.vocab(), q)
+                        .unwrap()
+                        .into_rows()
+                        .rows
+                        .len(),
+                )
+            });
+            let ps = Summary::of(&par_times);
+            report.row(
+                &format!("par-t{degree}/{label}"),
+                &[
+                    ("mean_s", ps.mean),
+                    ("p95_s", ps.p95),
+                    ("qps", 1.0 / ps.mean.max(1e-12)),
+                ],
+            );
+            report.row(
+                &format!("par-speedup-t{degree}/{label}"),
+                &[("mean_s", ts.mean / ps.mean.max(1e-12))],
+            );
+            bench.samples(
+                &format!("par-t{degree}/{label}"),
+                &par_times,
+                &[
+                    ("threads", *degree as f64),
+                    ("speedup_vs_seq", ts.mean / ps.mean.max(1e-12)),
+                ],
+            );
+        }
     }
+
     print!("{}", report.render());
     report.save("rql_throughput").expect("save results");
+    let path = bench.save().expect("save BENCH_rql.json");
+    eprintln!("[rql_throughput] wrote {}", path.display());
 }

@@ -7,7 +7,7 @@ pub mod report;
 pub mod workloads;
 
 pub use harness::{bench, bench_each, speedup, BenchConfig, BenchResult};
-pub use report::Report;
+pub use report::{BenchReport, Report};
 pub use workloads::{
     groceries, retail_scaled, rql_queries, QuerySkew, RqlWorkload, Workload, FIG10_SWEEP,
 };

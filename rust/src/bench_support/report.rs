@@ -1,6 +1,8 @@
 //! Bench result reporting: aligned text tables for the console plus
 //! JSON-lines files under `bench_results/` so EXPERIMENTS.md numbers are
-//! regenerable and diffable.
+//! regenerable and diffable — and [`BenchReport`], the machine-readable
+//! `BENCH_<name>.json` snapshot that makes the repo's perf trajectory
+//! trackable across PRs.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -8,6 +10,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
+use crate::stats::descriptive::Summary;
 use crate::util::json::Json;
 
 /// A figure/table report: named rows of named numeric cells.
@@ -83,17 +86,82 @@ impl Report {
     pub fn save_to(&self, dir: &std::path::Path, slug: &str) -> Result<PathBuf> {
         std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
         let path = dir.join(format!("{slug}.json"));
-        let mut f = std::fs::File::create(&path)
+        self.write_json_lines(&path, slug)?;
+        Ok(path)
+    }
+
+    /// The shared JSON-lines serializer: one `{bench, row, cells…}` object
+    /// per row (also behind [`BenchReport::save_to`]).
+    fn write_json_lines(&self, path: &std::path::Path, bench: &str) -> Result<()> {
+        let mut f = std::fs::File::create(path)
             .with_context(|| format!("create {}", path.display()))?;
         for (label, cells) in &self.rows {
             let mut obj = BTreeMap::new();
-            obj.insert("bench".to_string(), Json::Str(slug.to_string()));
+            obj.insert("bench".to_string(), Json::Str(bench.to_string()));
             obj.insert("row".to_string(), Json::Str(label.clone()));
             for (k, &v) in cells {
                 obj.insert(k.clone(), Json::Num(v));
             }
             writeln!(f, "{}", Json::Obj(obj).to_string_compact())?;
         }
+        Ok(())
+    }
+}
+
+/// The shared machine-readable bench snapshot: `BENCH_<name>.json` in the
+/// working directory, JSON lines with one object per row (storage and
+/// serializer reused from [`Report`]). Rows derived from raw per-op
+/// samples carry a fixed metric vocabulary — `ops_s`, `mean_s`, `p50_s`,
+/// `p99_s` — so thread sweeps and cross-PR diffs are comparable without
+/// knowing which bench emitted them.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    name: String,
+    report: Report,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            report: Report::new(name),
+        }
+    }
+
+    /// Add a row of named numeric cells.
+    pub fn row(&mut self, label: &str, cells: &[(&str, f64)]) {
+        self.report.row(label, cells);
+    }
+
+    /// Add a row summarizing raw per-operation times (seconds): ops/s plus
+    /// latency mean/p50/p99. Extra cells (e.g. a thread count) ride along;
+    /// an empty sample set adds nothing rather than aborting the run.
+    pub fn samples(&mut self, label: &str, times_s: &[f64], extra: &[(&str, f64)]) {
+        if times_s.is_empty() {
+            return;
+        }
+        let s = Summary::of(times_s);
+        let mut cells: Vec<(&str, f64)> = vec![
+            ("ops_s", 1.0 / s.mean.max(1e-12)),
+            ("mean_s", s.mean),
+            ("p50_s", s.median),
+            ("p99_s", s.p99),
+        ];
+        cells.extend_from_slice(extra);
+        self.row(label, &cells);
+    }
+
+    /// Write `BENCH_<name>.json` in the current directory, one JSON object
+    /// per row.
+    pub fn save(&self) -> Result<PathBuf> {
+        self.save_to(&PathBuf::from("."))
+    }
+
+    /// Write `<dir>/BENCH_<name>.json`.
+    pub fn save_to(&self, dir: &std::path::Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        self.report.write_json_lines(&path, &self.name)?;
         Ok(path)
     }
 }
@@ -113,6 +181,25 @@ mod tests {
         assert!(text.contains("a note"));
         assert!(text.contains("trie"));
         assert!(text.contains('-'), "missing cell placeholder");
+    }
+
+    #[test]
+    fn bench_report_derives_rates_and_percentiles() {
+        let mut b = BenchReport::new("demo");
+        let times = vec![0.001; 100];
+        b.samples("trie/t4", &times, &[("threads", 4.0)]);
+        let tmp = std::env::temp_dir().join(format!("tor_bench_{}", std::process::id()));
+        let path = b.save_to(&tmp).unwrap();
+        assert!(path.ends_with("BENCH_demo.json"), "{}", path.display());
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&tmp).ok();
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("demo"));
+        assert_eq!(v.get("row").unwrap().as_str(), Some("trie/t4"));
+        assert_eq!(v.get("threads").unwrap().as_f64(), Some(4.0));
+        let ops = v.get("ops_s").unwrap().as_f64().unwrap();
+        assert!((ops - 1000.0).abs() < 1.0, "{ops}");
+        assert!(v.get("p50_s").is_some() && v.get("p99_s").is_some());
     }
 
     #[test]

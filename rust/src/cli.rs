@@ -150,6 +150,9 @@ PIPELINE OPTS:
   --miner apriori|fpgrowth|fpmax|eclat
   --counter bitset|horizontal|xla   Apriori counting backend
   --workers N                       ingest worker threads
+  --query-threads N                 query-executor parallelism for serve/query
+                                    (default 0 = auto: available cores capped
+                                    at 8; 1 = sequential) — shown in STATS
   --transactions N --seed N         generator overrides
   --config FILE                     key=value config file
   --set key=value                   single config override (repeatable)
@@ -299,6 +302,9 @@ fn parse_pipeline_opts_with(
                     CounterKind::parse(&v).with_context(|| format!("unknown counter `{v}`"))?;
             }
             "--workers" => opts.config.set("workers", &value("--workers")?)?,
+            "--query-threads" => {
+                opts.config.set("query_threads", &value("--query-threads")?)?
+            }
             "--config" => {
                 opts.config = PipelineConfig::load(&PathBuf::from(value("--config")?))?;
             }
@@ -364,6 +370,19 @@ mod tests {
             Command::Serve(_, port) => assert_eq!(port, 7878),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_query_threads() {
+        match parse(&argv("serve --dataset tiny --port 7878 --query-threads 4")).unwrap() {
+            Command::Serve(o, _) => assert_eq!(o.config.query_threads, 4),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("query --dataset tiny --cmd STATS --query-threads 1")).unwrap() {
+            Command::Query(o, ..) => assert_eq!(o.config.effective_query_threads(), 1),
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --port 1 --query-threads nope")).is_err());
     }
 
     #[test]

@@ -55,6 +55,10 @@ pub struct PipelineConfig {
     pub queue_capacity: usize,
     /// Virtual shard slots for the router.
     pub shard_slots: usize,
+    /// Degree of parallelism for the query executor (and the pipeline's
+    /// overlapped build stages): 0 = auto (available cores, capped — see
+    /// [`crate::query::parallel::default_query_threads`]), 1 = sequential.
+    pub query_threads: usize,
 }
 
 impl Default for PipelineConfig {
@@ -68,6 +72,7 @@ impl Default for PipelineConfig {
             chunk_size: 512,
             queue_capacity: 16,
             shard_slots: 64,
+            query_threads: 0,
         }
     }
 }
@@ -90,6 +95,7 @@ impl PipelineConfig {
             "chunk_size" => self.chunk_size = parse_usize_min(value, 1)?,
             "queue_capacity" => self.queue_capacity = parse_usize_min(value, 1)?,
             "shard_slots" => self.shard_slots = parse_usize_min(value, 1)?,
+            "query_threads" => self.query_threads = parse_usize_min(value, 0)?,
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -125,10 +131,20 @@ impl PipelineConfig {
         Ok(())
     }
 
+    /// Effective query-executor parallelism: the configured degree, or the
+    /// auto default (available cores, capped) when 0.
+    pub fn effective_query_threads(&self) -> usize {
+        if self.query_threads == 0 {
+            crate::query::parallel::default_query_threads()
+        } else {
+            self.query_threads
+        }
+    }
+
     /// Render as a `key=value` block (round-trips through `load`).
     pub fn render(&self) -> String {
         format!(
-            "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\n",
+            "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\nquery_threads={}\n",
             self.minsup,
             self.min_confidence,
             self.miner.name(),
@@ -136,7 +152,8 @@ impl PipelineConfig {
             self.workers,
             self.chunk_size,
             self.queue_capacity,
-            self.shard_slots
+            self.shard_slots,
+            self.query_threads
         )
     }
 }
@@ -174,6 +191,18 @@ mod tests {
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("minsup", "1.5").is_err());
         assert!(c.set("workers", "0").is_err());
+    }
+
+    #[test]
+    fn query_threads_zero_means_auto() {
+        let mut c = PipelineConfig::default();
+        assert_eq!(c.query_threads, 0);
+        assert!(c.effective_query_threads() >= 1);
+        c.set("query_threads", "3").unwrap();
+        assert_eq!(c.effective_query_threads(), 3);
+        assert!(c.set("query_threads", "nope").is_err());
+        // Round-trips through render/load like every other key.
+        assert!(c.render().contains("query_threads=3"), "{}", c.render());
     }
 
     #[test]

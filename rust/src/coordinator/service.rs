@@ -14,7 +14,7 @@
 //! TOP <metric> <k>         -> sugar for `RULES SORT BY <metric> DESC LIMIT k`
 //! CONSEQ c                 -> sugar for `RULES WHERE conseq = c`
 //! SUPPORT a,b              -> SUPPORT <count>               | ABSENT
-//! STATS                    -> node/rule/memory counters
+//! STATS                    -> node/rule/memory/thread counters
 //! QUIT
 //! ```
 //!
@@ -35,29 +35,54 @@ use anyhow::{Context, Result};
 
 use crate::data::vocab::Vocab;
 use crate::query::ast::{Pred, Query as RqlQuery, SortSpec};
-use crate::query::exec::{execute_trie, QueryOutput, Row};
+use crate::query::exec::{QueryOutput, Row};
+use crate::query::parallel::{default_query_threads, ParallelExecutor};
 use crate::rules::metrics::Metric;
 use crate::rules::rule::Rule;
 use crate::trie::trie::{FindOutcome, TrieOfRules};
 
-/// In-process query engine over a built trie.
+/// In-process query engine over a built trie. Owns one
+/// [`ParallelExecutor`] — and with it one worker pool — for its whole
+/// lifetime: every request (in-process or from any TCP connection) runs
+/// through the same pool, so thread spin-up is paid once per process, not
+/// per query.
 pub struct QueryEngine {
     trie: TrieOfRules,
     vocab: Vocab,
     queries: AtomicU64,
+    exec: ParallelExecutor,
 }
 
 impl QueryEngine {
+    /// Engine with the default degree of parallelism
+    /// ([`default_query_threads`]: available cores, capped).
     pub fn new(trie: TrieOfRules, vocab: Vocab) -> Self {
+        Self::with_threads(trie, vocab, default_query_threads())
+    }
+
+    /// Engine with an explicit degree (`--query-threads`; 1 = sequential).
+    pub fn with_threads(trie: TrieOfRules, vocab: Vocab, threads: usize) -> Self {
+        Self::with_executor(trie, vocab, ParallelExecutor::new(threads))
+    }
+
+    /// Engine around an existing executor (so its pool can be shared with
+    /// the pipeline's build stages before serving starts).
+    pub fn with_executor(trie: TrieOfRules, vocab: Vocab, exec: ParallelExecutor) -> Self {
         Self {
             trie,
             vocab,
             queries: AtomicU64::new(0),
+            exec,
         }
     }
 
     pub fn trie(&self) -> &TrieOfRules {
         &self.trie
+    }
+
+    /// Effective degree of query parallelism (STATS `threads=`).
+    pub fn threads(&self) -> usize {
+        self.exec.degree()
     }
 
     pub fn queries_served(&self) -> u64 {
@@ -87,7 +112,7 @@ impl QueryEngine {
             Ok(q) => q,
             Err(e) => return format!("ERR {e:#}"),
         };
-        match execute_trie(&self.trie, &self.vocab, &query) {
+        match self.exec.execute(&self.trie, &self.vocab, &query) {
             Err(e) => format!("ERR {e:#}"),
             Ok(QueryOutput::Explain(text)) => {
                 // Self-delimiting like every multi-line response: the
@@ -158,7 +183,7 @@ impl QueryEngine {
     /// Desugar a legacy command straight to the RQL AST (no text
     /// round-trip, so item names never need re-quoting) and execute it.
     fn run_desugared(&self, query: &RqlQuery) -> Result<Vec<Row>, String> {
-        match execute_trie(&self.trie, &self.vocab, query) {
+        match self.exec.execute(&self.trie, &self.vocab, query) {
             Ok(QueryOutput::Rows(rs)) => Ok(rs.rows),
             Ok(QueryOutput::Explain(_)) => unreachable!("desugared commands never explain"),
             Err(e) => Err(format!("ERR {e:#}")),
@@ -257,10 +282,11 @@ impl QueryEngine {
     /// [`TrieOfRules::memory_bytes`] and DESIGN.md §8).
     fn cmd_stats(&self) -> String {
         format!(
-            "STATS nodes={} rules={} mem_kib={} queries={}",
+            "STATS nodes={} rules={} mem_kib={} threads={} queries={}",
             self.trie.num_nodes(),
             self.trie.num_representable_rules(),
             self.trie.memory_bytes() / 1024,
+            self.threads(),
             self.queries_served()
         )
     }
@@ -279,6 +305,17 @@ pub fn serve_tcp(
     std::thread::spawn(move || {
         let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
         while !shutdown.load(Ordering::Relaxed) {
+            // Reap finished connection handlers each iteration so a
+            // long-lived server holds O(live connections) handles, not one
+            // per connection ever accepted.
+            let mut i = 0;
+            while i < workers.len() {
+                if workers[i].is_finished() {
+                    workers.swap_remove(i).join().ok();
+                } else {
+                    i += 1;
+                }
+            }
             match listener.accept() {
                 Ok((stream, _)) => {
                     let engine = Arc::clone(&engine);
@@ -431,7 +468,38 @@ mod tests {
         e.execute("FIND f => c");
         let resp = e.execute("STATS");
         assert!(resp.contains("nodes="), "{resp}");
+        assert!(
+            resp.contains(&format!("threads={}", e.threads())),
+            "{resp}"
+        );
         assert!(e.queries_served() >= 2);
+    }
+
+    #[test]
+    fn engine_thread_degrees_agree_byte_for_byte() {
+        // The same request must produce byte-identical responses whatever
+        // the engine's degree of parallelism — the service-level face of
+        // the executor parity contract.
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let seq = QueryEngine::with_threads(trie.clone(), db.vocab().clone(), 1);
+        let par = QueryEngine::with_threads(trie, db.vocab().clone(), 4);
+        assert_eq!(seq.threads(), 1);
+        assert_eq!(par.threads(), 4);
+        for cmd in [
+            "RULES",
+            "RULES WHERE conseq = a AND confidence >= 0.6 SORT BY lift DESC LIMIT 5",
+            "RULES WHERE support >= 0.6",
+            "TOP confidence 4",
+            "CONSEQ a",
+        ] {
+            assert_eq!(seq.execute(cmd), par.execute(cmd), "diverged on `{cmd}`");
+        }
+        // EXPLAIN through the engine reports the parallel partitioning.
+        let resp = par.execute("EXPLAIN RULES");
+        assert!(resp.contains("parallel: degree=4"), "{resp}");
     }
 
     #[test]
@@ -449,6 +517,26 @@ mod tests {
         assert!(lines[0].starts_with("FOUND"), "{lines:?}");
         assert!(lines[1].starts_with("STATS"), "{lines:?}");
         assert_eq!(lines[2], "BYE");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn tcp_serves_many_sequential_connections() {
+        // Exercises the accept loop's handle reaping: every connection
+        // fully closes before the next opens, so finished handles pile up
+        // unless the loop drains them.
+        use std::io::{BufRead, BufReader, Write};
+        let e = Arc::new(engine());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = serve_tcp(Arc::clone(&e), "127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        for _ in 0..12 {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            stream.write_all(b"STATS\nQUIT\n").unwrap();
+            let reader = BufReader::new(stream.try_clone().unwrap());
+            let lines: Vec<String> = reader.lines().map_while(|l| l.ok()).collect();
+            assert!(lines[0].starts_with("STATS"), "{lines:?}");
+            assert_eq!(lines[1], "BYE");
+        }
         shutdown.store(true, Ordering::Relaxed);
     }
 }

@@ -14,6 +14,7 @@ use trie_of_rules::cli::{self, Command, PipelineOpts};
 use trie_of_rules::coordinator::config::CounterKind;
 use trie_of_rules::coordinator::pipeline::{self, PipelineOutput, Source};
 use trie_of_rules::coordinator::service::{serve_tcp, QueryEngine};
+use trie_of_rules::query::parallel::{ParallelExecutor, WorkerPool};
 use trie_of_rules::runtime::{default_artifacts_dir, Runtime};
 use trie_of_rules::trie::viz;
 
@@ -33,7 +34,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         Command::Example => run_example(),
         Command::Pipeline(opts, save) => {
-            let out = run_pipeline(&opts)?;
+            let out = run_pipeline(&opts, None)?;
             print!("{}", out.report.render());
             if let Some(path) = save {
                 trie_of_rules::trie::serialize::save(&out.trie, Some(out.db.vocab()), &path)?;
@@ -42,6 +43,10 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         Command::Query(opts, cmds, load) => {
+            // One executor (and worker pool) for the whole process: the
+            // pipeline build overlaps its stages on it, then every query
+            // command runs through it.
+            let exec = ParallelExecutor::new(opts.config.effective_query_threads());
             let engine = match load {
                 Some(path) => {
                     let (trie, vocab) = trie_of_rules::trie::serialize::load(&path)?;
@@ -52,13 +57,13 @@ fn run(args: &[String]) -> Result<()> {
                         trie.num_nodes(),
                         trie.num_representable_rules()
                     );
-                    QueryEngine::new(trie, vocab)
+                    QueryEngine::with_executor(trie, vocab, exec)
                 }
                 None => {
-                    let out = run_pipeline(&opts)?;
+                    let out = run_pipeline(&opts, Some(exec.pool()))?;
                     eprint!("{}", out.report.render());
                     let vocab = out.db.vocab().clone();
-                    QueryEngine::new(out.trie, vocab)
+                    QueryEngine::with_executor(out.trie, vocab, exec)
                 }
             };
             for cmd in cmds {
@@ -68,7 +73,7 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         Command::Export { opts, format, out } => {
-            let result = run_pipeline(&opts)?;
+            let result = run_pipeline(&opts, None)?;
             eprint!("{}", result.report.render());
             let f = std::fs::File::create(&out)
                 .with_context(|| format!("create {}", out.display()))?;
@@ -87,10 +92,12 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         Command::Serve(opts, port) => {
-            let out = run_pipeline(&opts)?;
+            let exec = ParallelExecutor::new(opts.config.effective_query_threads());
+            let out = run_pipeline(&opts, Some(exec.pool()))?;
             eprint!("{}", out.report.render());
             let vocab = out.db.vocab().clone();
-            let engine = Arc::new(QueryEngine::new(out.trie, vocab));
+            let engine = Arc::new(QueryEngine::with_executor(out.trie, vocab, exec));
+            eprintln!("query threads: {}", engine.threads());
             let shutdown = Arc::new(AtomicBool::new(false));
             let addr = serve_tcp(engine, &format!("127.0.0.1:{port}"), Arc::clone(&shutdown))?;
             println!("serving on {addr} (Ctrl-C to stop)");
@@ -103,13 +110,13 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         Command::Show(opts, depth) => {
-            let out = run_pipeline(&opts)?;
+            let out = run_pipeline(&opts, None)?;
             eprint!("{}", out.report.render());
             print!("{}", viz::to_ascii(&out.trie, out.db.vocab(), depth));
             Ok(())
         }
         Command::Dot(opts, out_path) => {
-            let out = run_pipeline(&opts)?;
+            let out = run_pipeline(&opts, None)?;
             let dot = viz::to_dot(&out.trie, out.db.vocab());
             match out_path {
                 Some(p) => {
@@ -143,8 +150,10 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
-/// Shared pipeline-run logic for the subcommands.
-fn run_pipeline(opts: &PipelineOpts) -> Result<PipelineOutput> {
+/// Shared pipeline-run logic for the subcommands. `pool` lets serve/query
+/// hand their query executor's worker pool down so the build stages and
+/// the request path share one set of threads.
+fn run_pipeline(opts: &PipelineOpts, pool: Option<&WorkerPool>) -> Result<PipelineOutput> {
     let runtime = if opts.config.counter == CounterKind::Xla {
         let dir = opts
             .artifacts
@@ -166,7 +175,7 @@ fn run_pipeline(opts: &PipelineOpts) -> Result<PipelineOutput> {
             Source::Generated(cfg)
         }
     };
-    pipeline::run(source, &opts.config, runtime.as_ref())
+    pipeline::run_with_pool(source, &opts.config, runtime.as_ref(), pool)
 }
 
 /// Walk the paper's worked example (Figs. 4–7) end to end.

@@ -27,7 +27,8 @@ use crate::query::ast::{CmpOp, Query, SortSpec};
 use crate::query::plan::{self, AccessPath, BoundPred, TriePlan};
 use crate::rules::metrics::RuleMetrics;
 use crate::rules::rule::Rule;
-use crate::trie::trie::TrieOfRules;
+use crate::trie::node::NodeIdx;
+use crate::trie::trie::{and_column_pred, TrieOfRules, PRED_BATCH};
 
 /// One result row: a rule with its full metric vector.
 #[derive(Debug, Clone, PartialEq)]
@@ -122,7 +123,14 @@ impl Ord for HeapRow {
 
 /// Streaming accumulator: a k-bounded heap under LIMIT (O(k) memory,
 /// O(rows·log k) time), a collect-then-sort otherwise.
-struct Accumulator {
+///
+/// `finish` imposes the engine's total output order — `(sort key under
+/// `f64::total_cmp`, then rule)` — and rules are unique per query
+/// population, so the result is independent of *insertion* order. That is
+/// the property the parallel executor leans on: per-worker accumulators
+/// merged in any deterministic sequence yield exactly the sequential rows
+/// (see [`crate::query::parallel`]).
+pub(crate) struct Accumulator {
     sort: Option<SortSpec>,
     limit: Option<usize>,
     heap: BinaryHeap<HeapRow>,
@@ -130,7 +138,7 @@ struct Accumulator {
 }
 
 impl Accumulator {
-    fn new(sort: Option<SortSpec>, limit: Option<usize>) -> Self {
+    pub(crate) fn new(sort: Option<SortSpec>, limit: Option<usize>) -> Self {
         Self {
             sort,
             limit,
@@ -139,7 +147,7 @@ impl Accumulator {
         }
     }
 
-    fn push(&mut self, row: Row) {
+    pub(crate) fn push(&mut self, row: Row) {
         let entry = HeapRow {
             key: self.sort.map(|s| row.metrics.get(s.metric)),
             descending: self.sort.is_some_and(|s| s.descending),
@@ -160,7 +168,20 @@ impl Accumulator {
         }
     }
 
-    fn finish(self) -> Vec<Row> {
+    /// Tear down into the accumulated rows *without* imposing the output
+    /// order: under LIMIT the k-bounded heap has already reduced to the k
+    /// best rows (that reduction is the point of per-worker accumulators),
+    /// but sorting them here would be wasted work when the rows are only
+    /// going to be re-pushed into a merge accumulator whose own `finish`
+    /// imposes the total order. Exact-output callers use [`Self::finish`].
+    pub(crate) fn into_unordered_rows(self) -> Vec<Row> {
+        match self.limit {
+            Some(_) => self.heap.into_iter().map(|h| h.row).collect(),
+            None => self.rows.into_iter().map(|h| h.row).collect(),
+        }
+    }
+
+    pub(crate) fn finish(self) -> Vec<Row> {
         match self.limit {
             Some(_) => self
                 .heap
@@ -212,22 +233,26 @@ fn residual_pass(
 // trie backend
 // ---------------------------------------------------------------------
 
-/// Execute a parsed query against the trie.
+/// Execute a parsed query against the trie (sequential executor; the
+/// morsel-parallel twin lives in [`crate::query::parallel`] and reuses the
+/// slice/range runners below, so the two can never diverge semantically).
 pub fn execute_trie(trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<QueryOutput> {
     let bound = plan::bind(query, vocab)?;
     let plan = plan::plan_trie(&bound);
     if query.explain {
-        return Ok(QueryOutput::Explain(plan::explain_trie(&plan, trie, vocab)));
+        return Ok(QueryOutput::Explain(plan::explain_trie(
+            &plan, trie, vocab, None,
+        )));
     }
     let mut stats = ExecStats::default();
     let mut acc = Accumulator::new(plan.sort, plan.limit);
     match plan.access {
         AccessPath::Empty => {}
         AccessPath::ConseqHeader(item) => {
-            run_header(trie, item, &plan, &mut stats, &mut acc);
+            run_header_slice(trie, trie.item_nodes(item), &plan, &mut stats, &mut acc);
         }
         AccessPath::FullTraversal => {
-            run_traversal(trie, &plan, &mut stats, &mut acc);
+            run_traversal_range(trie, 1..trie.num_nodes() + 1, &plan, &mut stats, &mut acc);
         }
     }
     Ok(QueryOutput::Rows(ResultSet {
@@ -236,21 +261,23 @@ pub fn execute_trie(trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<
     }))
 }
 
-/// Header-list access: only the nodes carrying the consequent item are
-/// touched (a CSR slice of the frozen trie, indexed by item rank); each
-/// depth-≥2 node is exactly one candidate rule (consequent = the node
-/// item, antecedent = the rest of its root path), with metrics already
-/// sitting in the frozen metric columns.
+/// Header-list access over a slice of posting-list node ids: each depth-≥2
+/// node is exactly one candidate rule (consequent = the node item,
+/// antecedent = the rest of its root path), with metrics already sitting
+/// in the frozen metric columns. The sequential executor passes the whole
+/// CSR header slice; the parallel executor passes contiguous shards of it.
 ///
-/// Predicate placement is cheapest-first: the prune bound and every
-/// residual *metric* predicate read straight off the contiguous columns by
-/// node index — no path materialization, no `RuleMetrics` assembly, no
-/// `Rule` allocation. Only candidates surviving those reach the
-/// item-membership residuals (which need the path) and only matched rows
-/// assemble their metric vector.
-fn run_header(
+/// Predicate placement is cheapest-first and **batched**: ids are
+/// processed in [`PRED_BATCH`]-sized chunks — the prune bound and depth
+/// filter gather candidates from the `counts`/`depths` columns, then every
+/// residual *metric* predicate runs column-at-a-time over the chunk into a
+/// selection vector ([`and_column_pred`]). No path materialization, no
+/// `RuleMetrics` assembly, no `Rule` allocation happens for nodes the
+/// columns reject; only survivors reach the item-membership residuals
+/// (which need the path) and only matched rows assemble their vector.
+pub(crate) fn run_header_slice(
     trie: &TrieOfRules,
-    item: ItemId,
+    ids: &[NodeIdx],
     plan: &TriePlan,
     stats: &mut ExecStats,
     acc: &mut Accumulator,
@@ -268,56 +295,68 @@ fn run_header(
             ref other => item_residual.push(other),
         }
     }
-    for &idx in trie.item_nodes(item) {
-        let i = idx as usize;
-        stats.scanned += 1;
-        if depths[i] < 2 {
-            continue; // depth-1 nodes are itemset entries, not rules
+    let mut cand: Vec<NodeIdx> = Vec::with_capacity(PRED_BATCH.min(ids.len()));
+    let mut sel: Vec<bool> = Vec::with_capacity(PRED_BATCH.min(ids.len()));
+    for chunk in ids.chunks(PRED_BATCH) {
+        stats.scanned += chunk.len();
+        cand.clear();
+        for &idx in chunk {
+            let i = idx as usize;
+            // depth-1 nodes are itemset entries, not rules.
+            if depths[i] >= 2 && !plan.pruned(counts[i] as f64 / n) {
+                cand.push(idx);
+            }
         }
-        if plan.pruned(counts[i] as f64 / n) {
-            continue;
+        stats.candidates += cand.len();
+        sel.clear();
+        sel.resize(cand.len(), true);
+        for &(col, op, value) in &metric_residual {
+            and_column_pred(col, &cand, &mut sel, |v| op.matches(v, value));
         }
-        stats.candidates += 1;
-        if !metric_residual
-            .iter()
-            .all(|&(col, op, value)| op.matches(col[i], value))
-        {
-            continue;
+        for (j, &idx) in cand.iter().enumerate() {
+            if !sel[j] {
+                continue;
+            }
+            let path = trie.path_items(idx);
+            let (antecedent, consequent) = path.split_at(path.len() - 1);
+            let metrics = trie.metrics(idx);
+            if !item_residual
+                .iter()
+                .all(|p| pred_matches(p, antecedent, consequent, &metrics))
+            {
+                continue;
+            }
+            stats.matched += 1;
+            acc.push(Row {
+                rule: Rule::new(
+                    Itemset::new(antecedent.to_vec()),
+                    Itemset::new(consequent.to_vec()),
+                ),
+                metrics,
+            });
         }
-        let path = trie.path_items(idx);
-        let (antecedent, consequent) = path.split_at(path.len() - 1);
-        let metrics = trie.metrics(idx);
-        if !item_residual
-            .iter()
-            .all(|p| pred_matches(p, antecedent, consequent, &metrics))
-        {
-            continue;
-        }
-        stats.matched += 1;
-        acc.push(Row {
-            rule: Rule::new(
-                Itemset::new(antecedent.to_vec()),
-                Itemset::new(consequent.to_vec()),
-            ),
-            metrics,
-        });
     }
 }
 
-/// Full traversal with support-antimonotone pruning, via the trie's own
-/// [`TrieOfRules::for_each_rule_pruned`] — on the frozen layout this is a
-/// linear preorder sweep over the node columns where a failed prune bound
-/// skips the whole contiguous subtree range (`i = subtree_end[i]`), not a
-/// per-node child-vector recursion. It is the same split enumeration and
-/// metric derivation `for_each_rule` (and hence the parity frame) uses, so
-/// rows match bit-for-bit by construction.
-fn run_traversal(
+/// Full traversal with support-antimonotone pruning over one preorder
+/// range, via [`TrieOfRules::for_each_rule_pruned_range`] — on the frozen
+/// layout this is a linear preorder sweep over the node columns where a
+/// failed prune bound skips the whole contiguous subtree range
+/// (`i = subtree_end[i]`), not a per-node child-vector recursion. The
+/// sequential executor passes `1..len`; the parallel executor passes the
+/// subtree-aligned morsels of [`TrieOfRules::morsels`]. Either way it is
+/// the same split enumeration and metric derivation `for_each_rule` (and
+/// hence the parity frame) uses, so rows match bit-for-bit by
+/// construction.
+pub(crate) fn run_traversal_range(
     trie: &TrieOfRules,
+    range: std::ops::Range<usize>,
     plan: &TriePlan,
     stats: &mut ExecStats,
     acc: &mut Accumulator,
 ) {
-    let visited = trie.for_each_rule_pruned(
+    let visited = trie.for_each_rule_pruned_range(
+        range,
         |sup| plan.pruned(sup),
         |antecedent, consequent, metrics| {
             stats.candidates += 1;
@@ -334,7 +373,7 @@ fn run_traversal(
             });
         },
     );
-    stats.scanned = visited;
+    stats.scanned += visited;
 }
 
 // ---------------------------------------------------------------------

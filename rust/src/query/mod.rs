@@ -15,7 +15,11 @@
 //! Pipeline: [`parser`] (hand-rolled tokens + recursive descent) →
 //! [`ast`] → [`plan`] (name binding, access-path selection, predicate
 //! placement) → [`exec`] (streaming execution on the trie or, for parity
-//! and ablation, on the full-scan [`crate::baseline::RuleFrame`]).
+//! and ablation, on the full-scan [`crate::baseline::RuleFrame`]) or
+//! [`parallel`] (the morsel-parallel executor: subtree-aligned morsels /
+//! header-list shards over a reusable `std::thread` worker pool, with a
+//! deterministic merge that is parity-exact — rows *and* order — with the
+//! sequential executor at any thread count; DESIGN.md §11).
 //!
 //! The planner exploits the trie's structure (DESIGN.md §7): consequent
 //! header-list jumps for `conseq =`, support-antimonotone subtree pruning
@@ -26,6 +30,7 @@
 
 pub mod ast;
 pub mod exec;
+pub mod parallel;
 pub mod parser;
 pub mod plan;
 
@@ -37,8 +42,9 @@ use crate::trie::trie::TrieOfRules;
 
 pub use ast::{CmpOp, Pred, Query, SortSpec};
 pub use exec::{ExecStats, QueryOutput, ResultSet, Row};
+pub use parallel::{default_query_threads, ParallelExecutor, WorkerPool};
 pub use parser::parse;
-pub use plan::{bind, plan_trie, AccessPath, BoundPred, BoundQuery, TriePlan};
+pub use plan::{bind, plan_trie, AccessPath, BoundPred, BoundQuery, Parallelism, TriePlan};
 
 /// Parse and execute one RQL query on the trie backend.
 pub fn query_trie(trie: &TrieOfRules, vocab: &Vocab, input: &str) -> Result<QueryOutput> {

@@ -1,0 +1,610 @@
+//! Morsel-driven parallel RQL execution over the frozen trie.
+//!
+//! The frozen layout (PR 2) made every subtree a contiguous preorder range
+//! `[i, subtree_end[i])` — exactly the shape morsel-driven parallelism
+//! wants: [`TrieOfRules::morsels`] partitions the column space into
+//! subtree-aligned ranges that workers claim dynamically, so a worker's
+//! range-skip prune never looks outside its morsel and per-morsel work
+//! composes back into the sequential sweep exactly. All three access paths
+//! go parallel:
+//!
+//! * **FullTraversal** — workers sweep morsels concurrently through the
+//!   same [`exec::run_traversal_range`] the sequential executor uses;
+//! * **ConseqHeader** — the CSR posting list is sharded into contiguous
+//!   chunks, each run through the batched [`exec::run_header_slice`];
+//! * **Empty** — no work, sequentially or otherwise.
+//!
+//! **Determinism.** Each worker keeps a private [`Accumulator`] (its own
+//! top-k heap / row buffer); partial results land in per-partition slots
+//! and are merged *in partition order* into a final accumulator. Because
+//! the engine's output order is total (`sort key under f64::total_cmp`,
+//! then rule) and rules are unique per query population, the merged rows —
+//! values AND order — are identical to the sequential executor's at any
+//! thread count, and repeated runs of the same query are byte-identical.
+//! Work counters sum to the sequential counters for the same reason the
+//! morsel invariants give: no subtree is ever cut.
+//!
+//! **Pool lifecycle.** [`WorkerPool`] is a small reusable pool built on
+//! `std::thread` (no new dependencies — DESIGN.md §3): helpers park on a
+//! condvar and claim task indices from a shared cursor; `run` borrows its
+//! closure for the duration of the call and only returns once every helper
+//! has quiesced, which is what makes the lifetime erasure inside sound.
+//! One pool per [`ParallelExecutor`]; the service engine owns one executor
+//! for its whole lifetime and the pipeline reuses the same pool to overlap
+//! its freeze/frame build stages (see `coordinator::pipeline`).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::data::vocab::Vocab;
+use crate::query::ast::Query;
+use crate::query::exec::{self, Accumulator, ExecStats, QueryOutput, ResultSet, Row};
+use crate::query::plan::{self, AccessPath, Parallelism, TriePlan};
+use crate::trie::node::NodeIdx;
+use crate::trie::trie::TrieOfRules;
+
+/// Cap applied to the auto-detected thread default: rule queries are
+/// short; past a handful of cores, merge and dispatch overheads dominate.
+const MAX_DEFAULT_THREADS: usize = 8;
+
+/// Floor for the auto morsel target: below this, per-morsel dispatch and
+/// merge overheads (a slot, an accumulator, a re-push of survivors)
+/// outweigh the balance gained from finer partitions. Kept small enough
+/// that benchmark-scale tries (~2k nodes) still split into ~a dozen
+/// morsels at realistic degrees.
+const MIN_MORSEL_TARGET: usize = 128;
+
+/// Auto morsel sizing aims for this many morsels per worker, so dynamic
+/// claiming can rebalance around skewed subtree sizes.
+const MORSELS_PER_THREAD: usize = 8;
+
+/// Default query-execution parallelism: the machine's available cores,
+/// capped ([`MAX_DEFAULT_THREADS`]). `--query-threads` / `query_threads`
+/// overrides it.
+pub fn default_query_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_DEFAULT_THREADS)
+}
+
+// ---------------------------------------------------------------------
+// worker pool
+// ---------------------------------------------------------------------
+
+/// Lifetime-erased pointer to the closure of one [`WorkerPool::run`] call.
+/// Only dereferenced by [`RunState::work`]; validity is guaranteed by the
+/// completion barrier in `run` (safety argument there).
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls are safe) and the pointer is
+// only dereferenced while `run`'s borrow of the closure is alive.
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+/// Shared state of one `run` call: the erased closure, the dynamic task
+/// cursor workers claim indices from, and the completion barrier.
+struct RunState {
+    task: TaskPtr,
+    tasks: usize,
+    cursor: AtomicUsize,
+    /// First panic payload caught in a task, re-raised by the caller.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Helpers that have not yet finished [`Self::work`] for this run
+    /// (or had their unconsumed queue token reclaimed by the caller).
+    pending: Mutex<usize>,
+    done: Condvar,
+}
+
+impl RunState {
+    /// Claim task indices until exhausted. Panics in the closure are
+    /// caught (stopping further claims; the first payload is kept for the
+    /// caller to re-raise) so a helper never unwinds out of the pool and
+    /// the barrier always completes.
+    fn work(&self) {
+        // SAFETY: `WorkerPool::run` keeps the closure alive until
+        // `pending` reaches zero, and a helper only decrements after
+        // returning from here.
+        let f = unsafe { &*self.task.0 };
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks {
+                break;
+            }
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+                drop(slot);
+                self.cursor.store(self.tasks, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn helper_done(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<RunState>>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A small reusable worker pool on `std::thread`: `helpers` parked threads
+/// plus the calling thread cooperate on each [`Self::run`]. Safe to share
+/// (`run` takes `&self`); concurrent runs interleave their dispatch
+/// tokens, each scoped by its own [`RunState`].
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `helpers` background threads (0 is valid: every
+    /// `run` then executes inline on the caller).
+    pub fn new(helpers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..helpers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Background helper threads (degree of parallelism minus the caller).
+    pub fn helpers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(0), f(1), …, f(tasks - 1)`, claimed dynamically by the
+    /// caller and up to `helpers` pool threads; returns once all tasks
+    /// finished. Task→thread assignment is nondeterministic — callers
+    /// that need determinism must make each `f(i)` write only to its own
+    /// slot (as the executor below does). If any task panics, remaining
+    /// unclaimed tasks are skipped and the first panic payload is
+    /// re-raised here after the barrier.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if tasks == 0 {
+            return;
+        }
+        let helpers = self.handles.len().min(tasks - 1);
+        if helpers == 0 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: `f` outlives this call frame, every dereference of the
+        // erased pointer happens inside a helper's `work`, and the
+        // barrier below does not let this function return until every
+        // helper that received the pointer has finished `work` (`pending
+        // == 0`). The pointer never escapes the `RunState`; every queue
+        // token is either popped by a helper (which then runs `work` and
+        // decrements `pending`) or reclaimed below by the caller (which
+        // decrements `pending` without ever touching the pointer).
+        #[allow(clippy::transmutes_expressible_as_ptr_casts)]
+        let task = TaskPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f_ref)
+        });
+        let state = Arc::new(RunState {
+            task,
+            tasks,
+            cursor: AtomicUsize::new(0),
+            payload: Mutex::new(None),
+            pending: Mutex::new(helpers),
+            done: Condvar::new(),
+        });
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                queue.push_back(Arc::clone(&state));
+            }
+        }
+        self.shared.available.notify_all();
+        // The caller is a full participant, not just a coordinator.
+        state.work();
+        // Reclaim tokens no helper has picked up yet: with the cursor
+        // exhausted they would be pure no-ops, but leaving them queued
+        // would couple this run's latency to whatever long job the
+        // helpers are currently busy with (concurrent queries share the
+        // service pool). Lock order queue→pending matches the helpers'
+        // pop→helper_done order.
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            let before = queue.len();
+            queue.retain(|queued| !Arc::ptr_eq(queued, &state));
+            let reclaimed = before - queue.len();
+            if reclaimed > 0 {
+                let mut pending = state.pending.lock().unwrap();
+                *pending -= reclaimed;
+            }
+        }
+        // Completion barrier: `f` must stay alive until no helper can
+        // still call through the erased pointer.
+        let mut pending = state.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = state.done.wait(pending).unwrap();
+        }
+        drop(pending);
+        let payload = state.payload.lock().unwrap().take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.available.notify_all();
+        for handle in self.handles.drain(..) {
+            handle.join().ok();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let state = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if let Some(state) = queue.pop_front() {
+                    break state;
+                }
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                queue = shared.available.wait(queue).unwrap();
+            }
+        };
+        state.work();
+        state.helper_done();
+    }
+}
+
+// ---------------------------------------------------------------------
+// parallel executor
+// ---------------------------------------------------------------------
+
+/// The morsel-parallel twin of [`exec::execute_trie`]: same plans, same
+/// runners, same rows in the same order (enforced by
+/// `rust/tests/query_parity.rs` across thread counts), plus `EXPLAIN`
+/// annotations for the degree of parallelism and partition count.
+pub struct ParallelExecutor {
+    pool: WorkerPool,
+    degree: usize,
+    /// Override for the auto morsel target (tests force multi-morsel runs
+    /// on tiny tries with this).
+    morsel_target: Option<usize>,
+}
+
+impl ParallelExecutor {
+    /// An executor of the given degree (1 = no helpers; every query
+    /// delegates straight to the sequential [`exec::execute_trie`]).
+    pub fn new(degree: usize) -> ParallelExecutor {
+        let degree = degree.max(1);
+        ParallelExecutor {
+            pool: WorkerPool::new(degree - 1),
+            degree,
+            morsel_target: None,
+        }
+    }
+
+    /// Force a fixed morsel target length (nodes per morsel before
+    /// packing stops). Primarily for tests and benches; the default sizes
+    /// morsels from the trie and the degree.
+    pub fn with_morsel_target(mut self, target: usize) -> ParallelExecutor {
+        self.morsel_target = Some(target.max(1));
+        self
+    }
+
+    /// Degree of parallelism: pool helpers + the calling thread.
+    pub fn degree(&self) -> usize {
+        self.degree
+    }
+
+    /// The underlying pool, for sharing with other stages (the pipeline
+    /// reuses it to overlap its build phases).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    fn morsel_target_for(&self, trie: &TrieOfRules) -> usize {
+        self.morsel_target.unwrap_or_else(|| {
+            (trie.num_nodes() / (self.degree * MORSELS_PER_THREAD)).max(MIN_MORSEL_TARGET)
+        })
+    }
+
+    /// Parse and execute one RQL query string.
+    pub fn query(&self, trie: &TrieOfRules, vocab: &Vocab, input: &str) -> Result<QueryOutput> {
+        self.execute(trie, vocab, &crate::query::parser::parse(input)?)
+    }
+
+    /// Execute a parsed query. Parity-exact with
+    /// [`exec::execute_trie`] — rows, order, and work counters.
+    pub fn execute(&self, trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<QueryOutput> {
+        // Degree 1 is documented as "sequential": delegate wholly to the
+        // plain executor (no fan-out machinery on the hot path, and
+        // EXPLAIN honestly reports a plan without parallel annotations).
+        if self.pool.helpers() == 0 {
+            return exec::execute_trie(trie, vocab, query);
+        }
+        let bound = plan::bind(query, vocab)?;
+        let plan = plan::plan_trie(&bound);
+        if query.explain {
+            let par = Parallelism {
+                degree: self.degree,
+                partitions: self.partitions(trie, &plan),
+            };
+            return Ok(QueryOutput::Explain(plan::explain_trie(
+                &plan,
+                trie,
+                vocab,
+                Some(par),
+            )));
+        }
+        match plan.access {
+            AccessPath::Empty => Ok(QueryOutput::Rows(ResultSet {
+                rows: Accumulator::new(plan.sort, plan.limit).finish(),
+                stats: ExecStats::default(),
+            })),
+            AccessPath::ConseqHeader(item) => {
+                let ids = trie.item_nodes(item);
+                let shards = shard_slices(ids, self.degree);
+                self.fan_out(&plan, shards.len(), |shard, stats, acc| {
+                    exec::run_header_slice(trie, shards[shard], &plan, stats, acc);
+                })
+            }
+            AccessPath::FullTraversal => {
+                let morsels = trie.morsels(self.morsel_target_for(trie));
+                self.fan_out(&plan, morsels.len(), |m, stats, acc| {
+                    exec::run_traversal_range(trie, morsels[m].clone(), &plan, stats, acc);
+                })
+            }
+        }
+    }
+
+    /// How many partitions `plan` would fan out into (EXPLAIN reporting).
+    fn partitions(&self, trie: &TrieOfRules, plan: &TriePlan) -> usize {
+        match plan.access {
+            AccessPath::Empty => 0,
+            AccessPath::ConseqHeader(item) => {
+                shard_slices(trie.item_nodes(item), self.degree).len()
+            }
+            AccessPath::FullTraversal => trie.morsels(self.morsel_target_for(trie)).len(),
+        }
+    }
+
+    /// Run `work(partition, stats, acc)` for each partition on the pool
+    /// (each writing only its own slot), then merge partials in partition
+    /// order. The final accumulator re-imposes the engine's total output
+    /// order, so the merged rows equal the sequential executor's exactly.
+    fn fan_out(
+        &self,
+        plan: &TriePlan,
+        partitions: usize,
+        work: impl Fn(usize, &mut ExecStats, &mut Accumulator) + Sync,
+    ) -> Result<QueryOutput> {
+        type Partial = (ExecStats, Vec<Row>);
+        let slots: Vec<Mutex<Option<Partial>>> =
+            (0..partitions).map(|_| Mutex::new(None)).collect();
+        self.pool.run(partitions, |p| {
+            let mut stats = ExecStats::default();
+            let mut acc = Accumulator::new(plan.sort, plan.limit);
+            work(p, &mut stats, &mut acc);
+            // Unordered teardown: the k-bounded reduction has happened;
+            // ordering is the final merge accumulator's job.
+            *slots[p].lock().unwrap() = Some((stats, acc.into_unordered_rows()));
+        });
+        let mut stats = ExecStats::default();
+        let mut acc = Accumulator::new(plan.sort, plan.limit);
+        for slot in slots {
+            let (partial_stats, rows) = slot
+                .into_inner()
+                .unwrap()
+                .expect("every partition fills its slot");
+            stats.scanned += partial_stats.scanned;
+            stats.candidates += partial_stats.candidates;
+            stats.matched += partial_stats.matched;
+            for row in rows {
+                acc.push(row);
+            }
+        }
+        Ok(QueryOutput::Rows(ResultSet {
+            rows: acc.finish(),
+            stats,
+        }))
+    }
+}
+
+/// Split a posting list into at most `parts` contiguous, non-empty,
+/// near-equal shards (deterministic in the inputs).
+fn shard_slices(ids: &[NodeIdx], parts: usize) -> Vec<&[NodeIdx]> {
+    if ids.is_empty() {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, ids.len());
+    let base = ids.len() / parts;
+    let extra = ids.len() % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(&ids[start..start + len]);
+        start += len;
+    }
+    debug_assert_eq!(start, ids.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::workloads::Workload;
+    use crate::data::transaction::paper_example_db;
+    use crate::query::exec::execute_trie;
+    use crate::query::parser::parse;
+
+    #[test]
+    fn pool_runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for tasks in [0usize, 1, 2, 7, 64] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "tasks {tasks}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_with_zero_helpers_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_and_after_concurrent_runs() {
+        let pool = WorkerPool::new(2);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let pool = &pool;
+                scope.spawn(move || {
+                    for _ in 0..5 {
+                        let count = AtomicUsize::new(0);
+                        pool.run(16, |_| {
+                            count.fetch_add(1, Ordering::Relaxed);
+                        });
+                        assert_eq!(count.load(Ordering::Relaxed), 16);
+                    }
+                });
+            }
+        });
+        let count = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn pool_propagates_task_panics_and_survives_them() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        let payload = caught.expect_err("panic must propagate to the caller");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"boom"),
+            "original panic payload must be preserved"
+        );
+        // The pool must remain fully usable afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run(8, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn shard_slices_partition_exactly() {
+        let ids: Vec<NodeIdx> = (0..10).collect();
+        for parts in [1usize, 2, 3, 4, 10, 25] {
+            let shards = shard_slices(&ids, parts);
+            assert_eq!(shards.len(), parts.min(ids.len()));
+            let flat: Vec<NodeIdx> = shards.iter().flat_map(|s| s.iter().copied()).collect();
+            assert_eq!(flat, ids, "parts {parts}");
+            assert!(shards.iter().all(|s| !s.is_empty()));
+        }
+        assert!(shard_slices(&[], 4).is_empty());
+    }
+
+    fn workload() -> Workload {
+        Workload::build("paper", paper_example_db(), 0.3)
+    }
+
+    #[test]
+    fn parallel_matches_sequential_on_every_access_path() {
+        let w = workload();
+        let exec = ParallelExecutor::new(4).with_morsel_target(2);
+        for q in [
+            "RULES",
+            "RULES WHERE conseq = a",
+            "RULES WHERE support >= 0.6",
+            "RULES WHERE conseq = a AND confidence >= 0.8 SORT BY lift DESC LIMIT 3",
+            "RULES WHERE conseq = a AND conseq = f",
+            "RULES SORT BY support ASC LIMIT 7",
+        ] {
+            let query = parse(q).unwrap();
+            let seq = execute_trie(&w.trie, w.db.vocab(), &query)
+                .unwrap()
+                .into_rows();
+            let par = exec
+                .execute(&w.trie, w.db.vocab(), &query)
+                .unwrap()
+                .into_rows();
+            assert_eq!(seq.rows, par.rows, "rows diverged on `{q}`");
+            assert_eq!(seq.stats, par.stats, "stats diverged on `{q}`");
+        }
+    }
+
+    #[test]
+    fn explain_reports_degree_and_partitions() {
+        let w = workload();
+        let exec = ParallelExecutor::new(4).with_morsel_target(2);
+        let out = exec
+            .query(&w.trie, w.db.vocab(), "EXPLAIN RULES")
+            .unwrap();
+        let QueryOutput::Explain(text) = out else {
+            panic!("expected EXPLAIN");
+        };
+        assert!(text.contains("parallel: degree=4"), "{text}");
+        assert!(text.contains("morsel"), "{text}");
+
+        let out = exec
+            .query(&w.trie, w.db.vocab(), "EXPLAIN RULES WHERE conseq = a")
+            .unwrap();
+        let QueryOutput::Explain(text) = out else {
+            panic!("expected EXPLAIN");
+        };
+        assert!(text.contains("parallel: degree=4"), "{text}");
+        assert!(text.contains("header shard"), "{text}");
+        assert!(text.contains("batched column-at-a-time"), "{text}");
+    }
+
+    #[test]
+    fn default_query_threads_is_positive_and_capped() {
+        let t = default_query_threads();
+        assert!((1..=MAX_DEFAULT_THREADS).contains(&t));
+    }
+}

@@ -210,8 +210,27 @@ pub fn plan_trie(query: &BoundQuery) -> TriePlan {
     }
 }
 
-/// Render the trie plan (the `EXPLAIN` response).
-pub fn explain_trie(plan: &TriePlan, trie: &TrieOfRules, vocab: &Vocab) -> String {
+/// How a parallel run will partition the access path — reported by
+/// `EXPLAIN` when the query executes on the morsel-parallel executor
+/// ([`crate::query::parallel`]); the sequential executor passes `None`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Degree of parallelism: helper threads + the calling thread.
+    pub degree: usize,
+    /// Work partitions: subtree-aligned morsels (full traversal) or
+    /// contiguous header-list shards (conseq-header access).
+    pub partitions: usize,
+}
+
+/// Render the trie plan (the `EXPLAIN` response). `par` annotates the
+/// plan with the parallel executor's partitioning when the query will run
+/// on it.
+pub fn explain_trie(
+    plan: &TriePlan,
+    trie: &TrieOfRules,
+    vocab: &Vocab,
+    par: Option<Parallelism>,
+) -> String {
     let mut out = String::from("plan: trie backend\n");
     match plan.access {
         AccessPath::ConseqHeader(item) => {
@@ -221,6 +240,15 @@ pub fn explain_trie(plan: &TriePlan, trie: &TrieOfRules, vocab: &Vocab) -> Strin
                 vocab.name(item),
                 trie.num_nodes()
             ));
+            if let Some(p) = par {
+                out.push_str(&format!(
+                    "  parallel: degree={}, {} header shard(s), residual metric predicates \
+                     batched column-at-a-time (chunks of {})\n",
+                    p.degree,
+                    p.partitions,
+                    crate::trie::trie::PRED_BATCH
+                ));
+            }
         }
         AccessPath::FullTraversal => {
             out.push_str(&format!(
@@ -228,6 +256,13 @@ pub fn explain_trie(plan: &TriePlan, trie: &TrieOfRules, vocab: &Vocab) -> Strin
                 trie.num_nodes(),
                 trie.num_representable_rules()
             ));
+            if let Some(p) = par {
+                out.push_str(&format!(
+                    "  parallel: degree={}, {} subtree-aligned morsel(s), dynamic claim, \
+                     deterministic preorder merge\n",
+                    p.degree, p.partitions
+                ));
+            }
         }
         AccessPath::Empty => {
             out.push_str("  access : empty — contradictory conseq predicates\n");

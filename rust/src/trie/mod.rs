@@ -20,4 +20,4 @@ pub mod viz;
 pub use builder::TrieBuilder;
 pub use compound::{confidence_by_product, verify_eq4};
 pub use node::{NodeIdx, TrieNode, ROOT};
-pub use trie::{FindOutcome, NodeView, TrieOfRules};
+pub use trie::{and_column_pred, FindOutcome, NodeView, TrieOfRules, PRED_BATCH};

@@ -742,19 +742,60 @@ impl TrieOfRules {
     /// twin exists only as the property-test oracle.
     pub fn for_each_rule_pruned(
         &self,
+        prune: impl FnMut(f64) -> bool,
+        f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
+    ) -> usize {
+        self.for_each_rule_pruned_range(1..self.items.len(), prune, f)
+    }
+
+    /// [`Self::for_each_rule_pruned`] restricted to a preorder index
+    /// `range` — the per-morsel worker loop of the parallel executor.
+    ///
+    /// The path buffers are seeded from the ancestors of `range.start`, so
+    /// a range may begin at any depth; `prune`, however, is only evaluated
+    /// at nodes *inside* the range. For both the visit count and the prune
+    /// semantics to compose back into exactly the sequential sweep, the
+    /// range must be **subtree-closed**: `subtree_end(i) <= range.end` for
+    /// every `i` in it — which is precisely what [`Self::morsels`]
+    /// guarantees (its ranges start at depth-1 nodes, whose only strict
+    /// ancestor is the never-pruned root). Concatenating the emissions of
+    /// consecutive morsels in morsel order reproduces the sequential
+    /// enumeration bit-for-bit.
+    pub fn for_each_rule_pruned_range(
+        &self,
+        range: std::ops::Range<usize>,
         mut prune: impl FnMut(f64) -> bool,
         mut f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
     ) -> usize {
+        let len = self.items.len();
+        let lo = range.start.max(1);
+        let hi = range.end.min(len);
+        if lo >= hi {
+            return 0;
+        }
         let n = self.num_transactions as u64;
         let n_f = self.num_transactions as f64;
-        let len = self.items.len();
         let mut visited = 0usize;
         // Reusable path buffers: items and counts root-first, truncated to
         // the node's depth on entry (preorder ⇒ ancestors are current).
+        // Seeded with lo's strict ancestors so mid-trie ranges see the
+        // same antecedent context the full sweep would have built up.
         let mut path_items: Vec<ItemId> = Vec::new();
         let mut path_counts: Vec<u64> = Vec::new();
-        let mut i = 1usize;
-        while i < len {
+        {
+            let mut rev: Vec<usize> = Vec::new();
+            let mut anc = self.parents[lo];
+            while anc != ROOT {
+                rev.push(anc as usize);
+                anc = self.parents[anc as usize];
+            }
+            for &a in rev.iter().rev() {
+                path_items.push(self.items[a]);
+                path_counts.push(self.counts[a]);
+            }
+        }
+        let mut i = lo;
+        while i < hi {
             visited += 1;
             let depth = self.depths[i] as usize;
             path_items.truncate(depth - 1);
@@ -789,6 +830,43 @@ impl TrieOfRules {
             i += 1;
         }
         visited
+    }
+
+    /// Partition the preorder column space `1..len` into **subtree-aligned
+    /// morsels** for parallel traversal: contiguous ranges, each a union of
+    /// one or more *whole* depth-1 (root-child) subtrees, greedily packed
+    /// until at least `target_len` nodes.
+    ///
+    /// Invariants (tested below, relied on by the parallel executor):
+    /// * the ranges are disjoint, ascending, and cover `1..len` exactly;
+    /// * no range cuts a subtree: `subtree_end(i) <= range.end` for every
+    ///   `i` in a range, so a worker's range-skip prune
+    ///   (`i = subtree_end[i]`) never needs to look outside its morsel and
+    ///   per-morsel visit counts sum to the sequential sweep's count;
+    /// * the partition is a pure function of the frozen layout and
+    ///   `target_len` — deterministic across runs and thread counts.
+    ///
+    /// A single root-child subtree larger than `target_len` becomes one
+    /// oversized morsel (alignment is never sacrificed); balance across
+    /// workers comes from dynamic morsel claiming, not equal sizes.
+    pub fn morsels(&self, target_len: usize) -> Vec<std::ops::Range<usize>> {
+        let len = self.items.len();
+        let target = target_len.max(1);
+        let mut out = Vec::new();
+        let mut start = 1usize;
+        let mut cur = 1usize;
+        while cur < len {
+            // Step over one whole root-child subtree.
+            cur = self.subtree_end[cur] as usize;
+            if cur - start >= target {
+                out.push(start..cur);
+                start = cur;
+            }
+        }
+        if start < len {
+            out.push(start..len);
+        }
+        out
     }
 
     /// Materialize all representable rules (tests / dataframe parity).
@@ -923,6 +1001,30 @@ impl TrieOfRules {
             .filter(|&&n| self.depth(n) >= 2)
             .map(|&n| (n, self.metrics(n)))
             .collect()
+    }
+}
+
+/// Batch size for column-at-a-time residual predicate evaluation: small
+/// enough that one chunk's node ids + selection vector stay cache-resident
+/// next to the metric column stripes they gather from.
+pub const PRED_BATCH: usize = 1024;
+
+/// AND one metric predicate into a selection vector, column-at-a-time:
+/// for each node id in `ids`, gather `col[id]` and keep the parallel
+/// `sel` entry only if `keep` holds. Running one predicate per pass over
+/// a [`PRED_BATCH`]-sized chunk lets the executor reject candidates from
+/// the contiguous f64 columns alone — no path walk, no `RuleMetrics`
+/// assembly, no `Rule` allocation for filtered-out nodes.
+#[inline]
+pub fn and_column_pred(
+    col: &[f64],
+    ids: &[NodeIdx],
+    sel: &mut [bool],
+    keep: impl Fn(f64) -> bool,
+) {
+    debug_assert_eq!(ids.len(), sel.len());
+    for (s, &id) in sel.iter_mut().zip(ids) {
+        *s = *s && keep(col[id as usize]);
     }
 }
 
@@ -1342,5 +1444,100 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("subtree_end"), "{err}");
+    }
+
+    #[test]
+    fn morsels_are_disjoint_subtree_closed_and_cover_everything() {
+        let (_, trie) = paper_trie();
+        let len = trie.num_nodes() + 1;
+        for target in [1, 2, 3, 5, 8, len, len * 4] {
+            let morsels = trie.morsels(target);
+            // Ascending, disjoint, exact cover of 1..len.
+            let mut expect_start = 1usize;
+            for m in &morsels {
+                assert_eq!(m.start, expect_start, "target {target}");
+                assert!(m.end > m.start, "empty morsel at target {target}");
+                expect_start = m.end;
+            }
+            assert_eq!(expect_start, len, "morsels do not cover 1..{len}");
+            // Subtree-closed: no range cuts a subtree, and every start is
+            // a depth-1 node (only strict ancestor = the root).
+            for m in &morsels {
+                assert_eq!(trie.depth(m.start as NodeIdx), 1);
+                for i in m.clone() {
+                    assert!(
+                        trie.subtree_end(i as NodeIdx) as usize <= m.end,
+                        "morsel {m:?} cuts subtree of node {i} (target {target})"
+                    );
+                }
+            }
+            // Deterministic: same input, same partition.
+            assert_eq!(morsels, trie.morsels(target));
+        }
+    }
+
+    #[test]
+    fn morsel_ranges_concatenate_to_the_sequential_sweep() {
+        let (_, trie) = paper_trie();
+        type Emit = (Vec<ItemId>, Vec<ItemId>, f64);
+        for bound in [0.0, 0.5, 0.7] {
+            let mut seq: Vec<Emit> = Vec::new();
+            let seq_visited = trie.for_each_rule_pruned(
+                |sup| sup < bound,
+                |a, c, m| seq.push((a.to_vec(), c.to_vec(), m.confidence)),
+            );
+            for target in [1, 3, 7, trie.num_nodes() + 1] {
+                let mut par: Vec<Emit> = Vec::new();
+                let mut par_visited = 0usize;
+                for m in trie.morsels(target) {
+                    par_visited += trie.for_each_rule_pruned_range(
+                        m,
+                        |sup| sup < bound,
+                        |a, c, met| par.push((a.to_vec(), c.to_vec(), met.confidence)),
+                    );
+                }
+                assert_eq!(par_visited, seq_visited, "bound {bound} target {target}");
+                assert_eq!(par, seq, "bound {bound} target {target}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_traversal_seeds_ancestor_context_mid_subtree() {
+        // Even for a range starting below depth 1 (not a morsel boundary),
+        // the seeded path buffers must reproduce the sequential emissions
+        // for exactly the nodes inside the range.
+        let (_, trie) = paper_trie();
+        let len = trie.num_nodes() + 1;
+        let deep = (1..len as NodeIdx)
+            .find(|&i| trie.depth(i) >= 2)
+            .expect("paper trie has depth-2 nodes");
+        let range = deep as usize..trie.subtree_end(deep) as usize;
+        let mut got: Vec<(Vec<ItemId>, Vec<ItemId>)> = Vec::new();
+        trie.for_each_rule_pruned_range(
+            range.clone(),
+            |_| false,
+            |a, c, _| got.push((a.to_vec(), c.to_vec())),
+        );
+        let mut want: Vec<(Vec<ItemId>, Vec<ItemId>)> = Vec::new();
+        for i in range {
+            let path = trie.path_items(i as NodeIdx);
+            for split in 1..path.len() {
+                want.push((path[..split].to_vec(), path[split..].to_vec()));
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn and_column_pred_gathers_and_ands() {
+        let col = [0.1, 0.5, 0.9, 0.3];
+        let ids: [NodeIdx; 3] = [2, 0, 3];
+        let mut sel = [true, true, true];
+        and_column_pred(&col, &ids, &mut sel, |v| v >= 0.3);
+        assert_eq!(sel, [true, false, true]);
+        // AND semantics: already-false entries stay false.
+        and_column_pred(&col, &ids, &mut sel, |v| v < 0.5);
+        assert_eq!(sel, [false, false, true]);
     }
 }

@@ -2,15 +2,19 @@
 //! trie-planned executor must return exactly the rows the full-scan
 //! RuleFrame backend returns — same rules, same metric floats, same order
 //! under the engine's total ordering (`f64::total_cmp` on the sort key,
-//! then rule order).
+//! then rule order) — and the morsel-parallel executor must match the
+//! sequential one exactly (rows, order, AND work counters) at every
+//! thread count, with repeated runs byte-identical.
 //!
 //! This is the contract that makes the planner's shortcuts (header-list
-//! access, subtree pruning, top-k pushdown) *optimizations* rather than
+//! access, subtree pruning, top-k pushdown) and the parallel layer's
+//! morsels/shards/batched predicates *optimizations* rather than
 //! semantics changes.
 
 use trie_of_rules::bench_support::workloads::Workload;
 use trie_of_rules::data::transaction::{paper_example_db, TransactionDb};
 use trie_of_rules::data::vocab::Vocab;
+use trie_of_rules::query::parallel::ParallelExecutor;
 use trie_of_rules::query::{query_frame, query_trie, QueryOutput};
 use trie_of_rules::rules::metrics::Metric;
 use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
@@ -138,6 +142,147 @@ fn prop_trie_and_frame_backends_agree_exactly() {
             Ok(())
         },
     );
+}
+
+/// Run one query on the sequential executor and on each parallel executor,
+/// demanding exact equality of rows, order, and work counters.
+fn check_parallel_parity(
+    w: &Workload,
+    execs: &[ParallelExecutor],
+    q: &str,
+) -> Result<(), String> {
+    let seq = match query_trie(&w.trie, w.db.vocab(), q) {
+        Ok(QueryOutput::Rows(rs)) => rs,
+        Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
+        Err(e) => return Err(format!("sequential failed on `{q}`: {e:#}")),
+    };
+    for exec in execs {
+        let par = match exec.query(&w.trie, w.db.vocab(), q) {
+            Ok(QueryOutput::Rows(rs)) => rs,
+            Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
+            Err(e) => {
+                return Err(format!(
+                    "parallel (t={}) failed on `{q}`: {e:#}",
+                    exec.degree()
+                ))
+            }
+        };
+        if par.rows != seq.rows {
+            return Err(format!(
+                "`{q}` (t={}): parallel returned {} rows vs sequential {} (or rows/order differ)",
+                exec.degree(),
+                par.rows.len(),
+                seq.rows.len()
+            ));
+        }
+        if par.stats != seq.stats {
+            return Err(format!(
+                "`{q}` (t={}): stats diverged — parallel {:?} vs sequential {:?}",
+                exec.degree(),
+                par.stats,
+                seq.stats
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Extend the trie==frame harness to the parallel executor: at thread
+/// counts {1, 2, 4, 8} (with a tiny morsel target forcing genuinely
+/// multi-morsel runs even on small random tries), parallel == sequential
+/// exactly — rows, order, and counters — on randomized queries.
+#[test]
+fn prop_parallel_matches_sequential_across_thread_counts() {
+    let execs: Vec<ParallelExecutor> = [1usize, 2, 4, 8]
+        .into_iter()
+        .map(|t| ParallelExecutor::new(t).with_morsel_target(3))
+        .collect();
+    for_all(
+        "rql-parallel==sequential",
+        30,
+        0x9A_2A_11E1,
+        |g| {
+            let rows = random_db(g);
+            let qseed = g.rng().next_u64();
+            (rows, qseed)
+        },
+        |(rows, qseed)| {
+            shrink_vec(rows)
+                .into_iter()
+                .map(|r| (r, *qseed))
+                .collect()
+        },
+        |(rows, qseed)| format!("qseed {qseed:#x}, rows {rows:?}"),
+        |(rows, qseed)| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            let w = Workload::build("prop", db, 0.12);
+            let mut rng = Rng::new(*qseed);
+            for _ in 0..5 {
+                let q = random_rql(&mut rng, &w);
+                check_parallel_parity(&w, &execs, &q)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Repeated parallel runs of the same query are byte-identical — the
+/// dynamic morsel→thread assignment must never leak into the output.
+#[test]
+fn parallel_runs_are_byte_identical() {
+    let w = Workload::build("paper", paper_example_db(), 0.3);
+    let exec = ParallelExecutor::new(4).with_morsel_target(2);
+    for q in [
+        "RULES",
+        "RULES WHERE support >= 0.4 SORT BY lift DESC LIMIT 5",
+        "RULES WHERE conseq = a SORT BY confidence ASC",
+        "RULES LIMIT 9",
+    ] {
+        let render = || {
+            let rs = exec.query(&w.trie, w.db.vocab(), q).unwrap().into_rows();
+            let mut out = String::new();
+            for row in &rs.rows {
+                out.push_str(&format!("{} {:?}\n", row.rule, row.metrics));
+            }
+            out
+        };
+        let first = render();
+        for run in 1..4 {
+            assert_eq!(first, render(), "run {run} of `{q}` differed");
+        }
+        // And the bytes match a fresh executor (no per-pool state leaks).
+        let other = ParallelExecutor::new(2).with_morsel_target(5);
+        let rs = other.query(&w.trie, w.db.vocab(), q).unwrap().into_rows();
+        let mut out = String::new();
+        for row in &rs.rows {
+            out.push_str(&format!("{} {:?}\n", row.rule, row.metrics));
+        }
+        assert_eq!(first, out, "different executor configs diverged on `{q}`");
+    }
+}
+
+/// EXPLAIN on the parallel executor reports the degree of parallelism and
+/// the partition counts for both access paths.
+#[test]
+fn parallel_explain_reports_partitioning() {
+    let w = Workload::build("paper", paper_example_db(), 0.3);
+    let exec = ParallelExecutor::new(4).with_morsel_target(2);
+    let QueryOutput::Explain(text) = exec
+        .query(&w.trie, w.db.vocab(), "EXPLAIN RULES WHERE support >= 0.4")
+        .unwrap()
+    else {
+        panic!("expected EXPLAIN");
+    };
+    assert!(text.contains("parallel: degree=4"), "{text}");
+    assert!(text.contains("morsel"), "{text}");
+    let QueryOutput::Explain(text) = exec
+        .query(&w.trie, w.db.vocab(), "EXPLAIN RULES WHERE conseq = a")
+        .unwrap()
+    else {
+        panic!("expected EXPLAIN");
+    };
+    assert!(text.contains("parallel: degree=4"), "{text}");
+    assert!(text.contains("header shard"), "{text}");
 }
 
 #[test]
