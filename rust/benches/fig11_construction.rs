@@ -14,30 +14,93 @@
 //!           mlxtend/arulespy path, which reuses mined supports).
 //!
 //! A third column shows the trie built directly from a subset-closed
-//! frequent set (`from_frequent`), where no recounting is needed — the
-//! optimization our architecture enables (see DESIGN.md §Perf).
+//! frequent set, where no recounting is needed — now via the sort-based
+//! direct-to-CSR `from_sorted_paths` (see DESIGN.md §12).
+//!
+//! The second half is the **parallel-build thread sweep**: sharded
+//! FP-growth, chunked ap-genrules, and the direct-to-CSR trie constructor
+//! at degrees {1, 2, 4, 8} (capped by `--query-threads`), with parity
+//! gates asserting every parallel output equals the sequential one before
+//! anything is timed. Results go to the console,
+//! `bench_results/fig11_construction.json`, and the machine-readable
+//! cross-PR snapshot `BENCH_build.json` (`ops_s`/`p50_s`/`p99_s` per
+//! stage/threads row). Flags (after `--`): `--test` runs the fast
+//! CI-release smoke, `--query-threads N` caps the sweep.
 
 use std::time::Instant;
 
 use trie_of_rules::baseline::dataframe::RuleFrame;
-use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::report::{BenchReport, Report};
 use trie_of_rules::bench_support::workloads::FIG10_SWEEP;
 use trie_of_rules::data::generator::GeneratorConfig;
 use trie_of_rules::mining::apriori::BitsetCounter;
 use trie_of_rules::mining::counts::{min_count, ItemOrder};
-use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::mining::fpgrowth::{fpgrowth, fpgrowth_parallel};
 use trie_of_rules::mining::fpmax::frequent_sequences;
-use trie_of_rules::rules::rulegen::{generate_rules, RuleGenConfig};
+use trie_of_rules::query::parallel::WorkerPool;
+use trie_of_rules::rules::rulegen::{generate_rules, generate_rules_parallel, RuleGenConfig};
+use trie_of_rules::trie::builder::TrieBuilder;
 use trie_of_rules::trie::trie::TrieOfRules;
 
+struct Args {
+    test: bool,
+    query_threads: usize,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        test: false,
+        query_threads: 8,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--test" => args.test = true,
+            "--query-threads" => {
+                args.query_threads = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--query-threads needs a positive integer");
+            }
+            // `cargo bench` forwards its own flags (e.g. `--bench`).
+            _ => {}
+        }
+    }
+    args.query_threads = args.query_threads.max(1);
+    args
+}
+
+/// Time `f` for `reps` repetitions, returning per-rep seconds and the last
+/// result (kept so parity gates can inspect it).
+fn time_reps<T>(reps: usize, mut f: impl FnMut() -> T) -> (Vec<f64>, T) {
+    assert!(reps >= 1);
+    let mut times = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        last = Some(std::hint::black_box(f()));
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    (times, last.unwrap())
+}
+
 fn main() {
+    let args = parse_args();
     let db = GeneratorConfig::groceries_like().generate();
     let n = db.num_transactions();
     let mut report = Report::new("Fig 11: ruleset creation time from transactions (s) vs minsup");
     report.note("paper: trie creation is slower (Step-3 labeling recounts prefix supports)");
-    report.note("trie_closed_s: our from_frequent fast path (no recounting) for comparison");
+    report.note("trie_closed_s: our from_sorted_paths fast path (no recounting) for comparison");
 
-    for &minsup in FIG10_SWEEP.iter().rev() {
+    // --test keeps only the cheapest sweep point (highest minsup): the CI
+    // smoke cares about the parity gates and the snapshot shape, not the
+    // full curve.
+    let sweep_points: &[f64] = if args.test {
+        &FIG10_SWEEP[FIG10_SWEEP.len() - 1..]
+    } else {
+        &FIG10_SWEEP
+    };
+    for &minsup in sweep_points.iter().rev() {
         // --- trie pipeline: fpmax -> insert -> recount-label ------------
         let t0 = Instant::now();
         let (order, seqs) = frequent_sequences(&db, minsup);
@@ -58,7 +121,7 @@ fn main() {
         let t0 = Instant::now();
         let fi2 = fpgrowth(&db, minsup);
         let order2 = ItemOrder::new(&db, min_count(minsup, n));
-        let trie2 = TrieOfRules::from_frequent(&fi2, &order2).expect("trie");
+        let trie2 = TrieOfRules::from_sorted_paths(&fi2, &order2).expect("trie");
         std::hint::black_box(trie2.num_nodes());
         let closed_s = t0.elapsed().as_secs_f64();
 
@@ -77,6 +140,101 @@ fn main() {
             trie_s / frame_s.max(1e-12)
         );
     }
+
+    // ------------------------------------------------------------------
+    // Parallel-build thread sweep → BENCH_build.json
+    // ------------------------------------------------------------------
+    let minsup = if args.test { 0.0135 } else { 0.005 };
+    let reps = if args.test { 1 } else { 3 };
+    let mut sweep: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t <= args.query_threads)
+        .collect();
+    if !sweep.contains(&args.query_threads) {
+        sweep.push(args.query_threads);
+    }
+    let mut bench = BenchReport::new("build");
+    let order = ItemOrder::new(&db, min_count(minsup, n));
+
+    // Sequential baselines (threads=1 rows).
+    let (mine_t1, fi_seq) = time_reps(reps, || fpgrowth(&db, minsup));
+    let (rulegen_t1, rs_seq) =
+        time_reps(reps, || generate_rules(&fi_seq, RuleGenConfig::default()));
+    let (trie_t1, trie_direct) = time_reps(reps, || {
+        TrieOfRules::from_sorted_paths(&fi_seq, &order).expect("trie")
+    });
+    // The pre-PR two-phase arena build, as the ablation reference.
+    let (trie_builder_t, trie_frozen) = time_reps(reps, || {
+        TrieBuilder::from_frequent(&fi_seq, &order)
+            .expect("builder")
+            .freeze()
+    });
+    // Parity gate: direct-to-CSR equals builder+freeze byte for byte.
+    assert_eq!(trie_direct.items_column(), trie_frozen.items_column());
+    assert_eq!(trie_direct.counts_column(), trie_frozen.counts_column());
+    assert_eq!(trie_direct.parents_column(), trie_frozen.parents_column());
+    assert_eq!(trie_direct.child_csr(), trie_frozen.child_csr());
+    assert_eq!(trie_direct.header_csr(), trie_frozen.header_csr());
+    bench.samples("mine/t1", &mine_t1, &[("threads", 1.0)]);
+    bench.samples("rulegen/t1", &rulegen_t1, &[("threads", 1.0)]);
+    bench.samples("trie_csr/t1", &trie_t1, &[("threads", 1.0)]);
+    bench.samples("trie_builder_freeze/t1", &trie_builder_t, &[("threads", 1.0)]);
+    let mine_mean = mean(&mine_t1);
+    let rulegen_mean = mean(&rulegen_t1);
+    eprintln!(
+        "[fig11] sweep @ minsup {minsup}: {} frequent, {} rules, {} nodes",
+        fi_seq.len(),
+        rs_seq.len(),
+        trie_direct.num_nodes()
+    );
+
+    for &threads in &sweep {
+        if threads == 1 {
+            continue; // the t1 rows above are the sequential entry points
+        }
+        let pool = WorkerPool::new(threads - 1);
+        let (mine_t, fi_par) = time_reps(reps, || fpgrowth_parallel(&db, minsup, &pool));
+        assert_eq!(
+            fi_seq.sets, fi_par.sets,
+            "parallel mining diverged at t={threads}"
+        );
+        let (rulegen_t, rs_par) = time_reps(reps, || {
+            generate_rules_parallel(&fi_seq, RuleGenConfig::default(), &pool)
+        });
+        assert_eq!(
+            rs_seq.rules(),
+            rs_par.rules(),
+            "parallel rulegen diverged at t={threads}"
+        );
+        bench.samples(
+            &format!("mine/t{threads}"),
+            &mine_t,
+            &[
+                ("threads", threads as f64),
+                ("speedup_vs_seq", mine_mean / mean(&mine_t).max(1e-12)),
+            ],
+        );
+        bench.samples(
+            &format!("rulegen/t{threads}"),
+            &rulegen_t,
+            &[
+                ("threads", threads as f64),
+                ("speedup_vs_seq", rulegen_mean / mean(&rulegen_t).max(1e-12)),
+            ],
+        );
+        eprintln!(
+            "[fig11] t={threads}: mine x{:.2}, rulegen x{:.2}",
+            mine_mean / mean(&mine_t).max(1e-12),
+            rulegen_mean / mean(&rulegen_t).max(1e-12)
+        );
+    }
+
     print!("{}", report.render());
     report.save("fig11_construction").expect("save results");
+    let path = bench.save().expect("save BENCH_build.json");
+    eprintln!("[fig11] wrote {}", path.display());
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
 }

@@ -10,9 +10,13 @@
 use std::time::Instant;
 
 use trie_of_rules::baseline::dataframe::RuleFrame;
-use trie_of_rules::bench_support::report::Report;
+use trie_of_rules::bench_support::report::{BenchReport, Report};
 use trie_of_rules::bench_support::workloads;
+use trie_of_rules::mining::fpgrowth::{fpgrowth, fpgrowth_parallel};
+use trie_of_rules::query::parallel::WorkerPool;
+use trie_of_rules::rules::rulegen::{generate_rules, generate_rules_parallel, RuleGenConfig};
 use trie_of_rules::rules::ruleset::ScoredRule;
+use trie_of_rules::trie::trie::TrieOfRules;
 
 fn main() {
     let scale: f64 = std::env::var("TOR_BENCH_SCALE")
@@ -117,6 +121,58 @@ fn main() {
             ("frame_s", w.frame.memory_bytes() as f64),
         ],
     );
+
+    // Parallel-build thread sweep at retail scale: the whole
+    // mine → rulegen → direct-to-CSR chain per degree, parity-gated
+    // against the sequential outputs, snapshotted to
+    // BENCH_build_retail.json (same metric vocabulary as fig11's
+    // BENCH_build.json).
+    let mut bench = BenchReport::new("build_retail");
+    let seq_t0 = Instant::now();
+    let fi_seq = fpgrowth(&w.db, minsup);
+    let rs_seq = generate_rules(&fi_seq, RuleGenConfig::default());
+    let trie_seq = TrieOfRules::from_sorted_paths(&fi_seq, &w.order).expect("trie");
+    let seq_s = seq_t0.elapsed().as_secs_f64();
+    bench.samples("build_chain/t1", &[seq_s], &[("threads", 1.0)]);
+    eprintln!("[tab01] build chain t=1: {seq_s:.3}s");
+    for threads in [2usize, 4, 8] {
+        let pool = WorkerPool::new(threads - 1);
+        let t0 = Instant::now();
+        let fi = fpgrowth_parallel(&w.db, minsup, &pool);
+        let rs2 = generate_rules_parallel(&fi, RuleGenConfig::default(), &pool);
+        let trie2 = TrieOfRules::from_sorted_paths(&fi, &w.order).expect("trie");
+        let par_s = t0.elapsed().as_secs_f64();
+        assert_eq!(fi_seq.sets, fi.sets, "parallel mining diverged at t={threads}");
+        assert_eq!(
+            rs_seq.rules(),
+            rs2.rules(),
+            "parallel rulegen diverged at t={threads}"
+        );
+        assert_eq!(
+            trie_seq.counts_column(),
+            trie2.counts_column(),
+            "trie diverged at t={threads}"
+        );
+        bench.samples(
+            &format!("build_chain/t{threads}"),
+            &[par_s],
+            &[
+                ("threads", threads as f64),
+                ("speedup_vs_seq", seq_s / par_s.max(1e-12)),
+            ],
+        );
+        report.row(
+            &format!("build_par_t{threads}"),
+            &[("chain_s", par_s), ("speedup_vs_seq", seq_s / par_s.max(1e-12))],
+        );
+        eprintln!(
+            "[tab01] build chain t={threads}: {par_s:.3}s (x{:.2} vs sequential)",
+            seq_s / par_s.max(1e-12)
+        );
+    }
+    let bench_path = bench.save().expect("save BENCH_build_retail.json");
+    eprintln!("[tab01] wrote {}", bench_path.display());
+
     print!("{}", report.render());
     println!(
         "note: frame_columnar_s is the ablation row — a raw columnar scan with no row\n\

@@ -9,7 +9,11 @@
 //!       (generator/file)                        (shard-local counts + rows)
 //!                                    │ barrier: merge counts, assemble DB
 //!                                    ▼
-//!             leader: ItemOrder → miner → rulegen → trie + frame
+//!             ItemOrder → miner → rulegen → trie + frame
+//!             (FP-growth shards, rulegen chunks, and the trie/frame
+//!              overlap all run on the shared WorkerPool when one is
+//!              handed in — DESIGN.md §12; outputs are byte-identical
+//!              to the sequential path at any thread count)
 //! ```
 //!
 //! Ingestion is genuinely streaming (the source never materializes the
@@ -30,14 +34,14 @@ use crate::data::transaction::{TransactionDb, TransactionDbBuilder};
 use crate::data::vocab::{ItemId, Vocab};
 use crate::mining::apriori::{apriori_with, BitsetCounter, HorizontalCounter};
 use crate::mining::counts::{min_count, ItemOrder};
+use crate::mining::fpgrowth::{fpgrowth, fpgrowth_parallel};
 use crate::mining::itemset::FrequentItemsets;
 use crate::mining::{mine, MinerKind};
 use crate::query::parallel::WorkerPool;
-use crate::rules::rulegen::{generate_rules, RuleGenConfig};
+use crate::rules::rulegen::{generate_rules, generate_rules_parallel, RuleGenConfig};
 use crate::rules::ruleset::RuleSet;
 use crate::runtime::support_exec::XlaSupportCounter;
 use crate::runtime::Runtime;
-use crate::trie::builder::TrieBuilder;
 use crate::trie::trie::TrieOfRules;
 
 /// Where transactions come from.
@@ -73,9 +77,12 @@ pub fn run(
 }
 
 /// [`run`] with an optional worker pool. The serve/query launchers hand in
-/// the query executor's pool so one pool serves the whole process: here it
-/// overlaps the independent freeze-trie and build-frame stages, then the
-/// same threads execute queries (DESIGN.md §11, pool lifecycle).
+/// the query executor's pool so one pool serves the whole process: the
+/// mining shard loop, the rulegen chunk loop, and the overlapped
+/// build-trie/build-frame stages all run on it, then the same threads
+/// execute queries (DESIGN.md §11/§12, pool lifecycle). Every parallel
+/// stage is parity-exact with its sequential twin, so `run` and
+/// `run_with_pool` produce byte-identical outputs at any thread count.
 pub fn run_with_pool(
     source: Source,
     config: &PipelineConfig,
@@ -85,6 +92,10 @@ pub fn run_with_pool(
     config.validate()?;
     let mut report = PipelineReport::default();
     report.counter_backend = config.counter.name();
+    // A pool with no helpers adds dispatch overhead and zero concurrency;
+    // treat it as absent for the build stages.
+    let build_pool = pool.filter(|p| p.helpers() > 0);
+    report.build_threads = build_pool.map(|p| p.helpers() + 1).unwrap_or(1);
 
     // ---------------------------------------------------------------
     // Stage 1+2: streaming ingestion through the bounded queue into
@@ -98,7 +109,8 @@ pub fn run_with_pool(
     debug_assert_eq!(merged.freqs, db.item_frequencies());
 
     // ---------------------------------------------------------------
-    // Stage 3: mining (leader).
+    // Stage 3: mining — header-sharded across the pool for FP-growth
+    // (parity-exact with the sequential miner), leader-only otherwise.
     // ---------------------------------------------------------------
     let t0 = Instant::now();
     let order = ItemOrder::from_frequencies(
@@ -119,6 +131,10 @@ pub fn run_with_pool(
             let mut c = XlaSupportCounter::new(rt, &db)?;
             apriori_with(&db, config.minsup, &mut c)
         }
+        (MinerKind::FpGrowth, _) => match build_pool {
+            Some(p) => fpgrowth_parallel(&db, config.minsup, p),
+            None => fpgrowth(&db, config.minsup),
+        },
         (kind, _) => mine(&db, config.minsup, kind),
     };
     report.push_stage("mine", t0.elapsed(), frequent.len());
@@ -131,41 +147,43 @@ pub fn run_with_pool(
     // ---------------------------------------------------------------
     let t0 = Instant::now();
     let closed = if config.miner == MinerKind::FpMax {
-        mine(&db, config.minsup, MinerKind::FpGrowth)
+        match build_pool {
+            Some(p) => fpgrowth_parallel(&db, config.minsup, p),
+            None => fpgrowth(&db, config.minsup),
+        }
     } else {
         frequent.clone()
     };
-    let ruleset = generate_rules(
-        &closed,
-        RuleGenConfig {
-            min_confidence: config.min_confidence,
-            max_consequent: usize::MAX,
-        },
-    );
+    let rule_cfg = RuleGenConfig {
+        min_confidence: config.min_confidence,
+        max_consequent: usize::MAX,
+    };
+    let ruleset = match build_pool {
+        Some(p) => generate_rules_parallel(&closed, rule_cfg, p),
+        None => generate_rules(&closed, rule_cfg),
+    };
     report.push_stage("rulegen", t0.elapsed(), ruleset.len());
     report.num_rules = ruleset.len();
 
     // ---------------------------------------------------------------
-    // Stage 5: build both representations. Trie construction is two
-    // phases now: the mutable builder ingests paths, then freeze()
-    // renumbers into the immutable columnar (CSR) serving layout every
-    // query path runs against.
-    // ---------------------------------------------------------------
-    let t0 = Instant::now();
-    let trie_builder = TrieBuilder::from_frequent(&closed, &order)?;
-    report.push_stage("build-trie", t0.elapsed(), trie_builder.num_nodes());
-    // Freeze (trie) and frame construction are independent of each other;
-    // with a worker pool they overlap on two tasks. Durations are measured
-    // inside each task, so the report still attributes per-stage time
-    // truthfully when the stages run concurrently.
-    let (trie, freeze_t, frame, frame_t) = match pool {
-        Some(pool) if pool.helpers() > 0 => {
-            let trie_slot: Mutex<Option<(TrieOfRules, std::time::Duration)>> = Mutex::new(None);
+    // Stage 5: build both representations. The trie goes straight to its
+    // frozen columnar (CSR) serving layout via the sort-based one-pass
+    // constructor — no mutable TrieNode arena in the pipeline anymore
+    // (TrieBuilder remains as the parity oracle and the
+    // maximal-sequence path). Trie and frame construction are
+    // independent; with a worker pool they overlap on two tasks.
+    // Durations are measured inside each task, so the report still
+    // attributes per-stage time truthfully when the stages run
+    // concurrently.
+    let (trie, trie_t, frame, frame_t) = match build_pool {
+        Some(pool) => {
+            type TrieSlot = Option<(Result<TrieOfRules>, std::time::Duration)>;
+            let trie_slot: Mutex<TrieSlot> = Mutex::new(None);
             let frame_slot: Mutex<Option<(RuleFrame, std::time::Duration)>> = Mutex::new(None);
             pool.run(2, |task| {
                 if task == 0 {
                     let t0 = Instant::now();
-                    let trie = trie_builder.freeze();
+                    let trie = TrieOfRules::from_sorted_paths(&closed, &order);
                     *trie_slot.lock().unwrap() = Some((trie, t0.elapsed()));
                 } else {
                     let t0 = Instant::now();
@@ -173,20 +191,20 @@ pub fn run_with_pool(
                     *frame_slot.lock().unwrap() = Some((frame, t0.elapsed()));
                 }
             });
-            let (trie, freeze_t) = trie_slot.into_inner().unwrap().expect("freeze task ran");
+            let (trie, trie_t) = trie_slot.into_inner().unwrap().expect("trie task ran");
             let (frame, frame_t) = frame_slot.into_inner().unwrap().expect("frame task ran");
-            (trie, freeze_t, frame, frame_t)
+            (trie?, trie_t, frame, frame_t)
         }
-        _ => {
+        None => {
             let t0 = Instant::now();
-            let trie = trie_builder.freeze();
-            let freeze_t = t0.elapsed();
+            let trie = TrieOfRules::from_sorted_paths(&closed, &order)?;
+            let trie_t = t0.elapsed();
             let t0 = Instant::now();
             let frame = RuleFrame::from_ruleset(&ruleset);
-            (trie, freeze_t, frame, t0.elapsed())
+            (trie, trie_t, frame, t0.elapsed())
         }
     };
-    report.push_stage("freeze-trie", freeze_t, trie.num_nodes());
+    report.push_stage("build-trie", trie_t, trie.num_nodes());
     report.push_stage("build-frame", frame_t, frame.len());
     report.trie_nodes = trie.num_nodes();
     report.trie_rules_representable = trie.num_representable_rules();
@@ -443,23 +461,40 @@ mod tests {
 
     #[test]
     fn pooled_build_matches_sequential_build() {
-        // The overlapped freeze/frame stages must produce byte-identical
-        // structures to the sequential build.
+        // The parallel build pipeline (sharded mining, chunked rulegen,
+        // overlapped trie/frame stages) must produce byte-identical
+        // outputs to the sequential build at every thread count.
         let gen = GeneratorConfig::tiny(21);
         let cfg = PipelineConfig {
             minsup: 0.05,
             ..Default::default()
         };
         let seq = run(Source::Generated(gen.clone()), &cfg, None).unwrap();
-        let pool = WorkerPool::new(2);
-        let par = run_with_pool(Source::Generated(gen), &cfg, None, Some(&pool)).unwrap();
-        assert_eq!(seq.trie.items_column(), par.trie.items_column());
-        assert_eq!(seq.trie.counts_column(), par.trie.counts_column());
-        assert_eq!(seq.trie.parents_column(), par.trie.parents_column());
-        assert_eq!(seq.frame.len(), par.frame.len());
-        // Both stages were still timed and reported.
-        let stages: Vec<&str> = par.report.stages.iter().map(|s| s.name.as_str()).collect();
-        assert!(stages.contains(&"freeze-trie") && stages.contains(&"build-frame"));
+        assert_eq!(seq.report.build_threads, 1);
+        for helpers in [1usize, 3, 7] {
+            let pool = WorkerPool::new(helpers);
+            let par =
+                run_with_pool(Source::Generated(gen.clone()), &cfg, None, Some(&pool)).unwrap();
+            assert_eq!(seq.frequent.sets, par.frequent.sets, "helpers={helpers}");
+            assert_eq!(
+                seq.ruleset.rules(),
+                par.ruleset.rules(),
+                "helpers={helpers}"
+            );
+            assert_eq!(seq.trie.items_column(), par.trie.items_column());
+            assert_eq!(seq.trie.counts_column(), par.trie.counts_column());
+            assert_eq!(seq.trie.parents_column(), par.trie.parents_column());
+            assert_eq!(seq.trie.depths_column(), par.trie.depths_column());
+            assert_eq!(seq.trie.subtree_end_column(), par.trie.subtree_end_column());
+            assert_eq!(seq.trie.child_csr(), par.trie.child_csr());
+            assert_eq!(seq.trie.header_csr(), par.trie.header_csr());
+            assert_eq!(seq.frame.len(), par.frame.len());
+            // Both build stages were still timed and reported, and the
+            // report carries the effective build parallelism.
+            let stages: Vec<&str> = par.report.stages.iter().map(|s| s.name.as_str()).collect();
+            assert!(stages.contains(&"build-trie") && stages.contains(&"build-frame"));
+            assert_eq!(par.report.build_threads, helpers + 1);
+        }
     }
 
     #[test]

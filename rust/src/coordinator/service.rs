@@ -51,6 +51,9 @@ pub struct QueryEngine {
     vocab: Vocab,
     queries: AtomicU64,
     exec: ParallelExecutor,
+    /// Threads the build pipeline ran with (0 = unknown, e.g. a trie
+    /// loaded from disk); surfaced in STATS as `build_threads=`.
+    build_threads: usize,
 }
 
 impl QueryEngine {
@@ -73,7 +76,16 @@ impl QueryEngine {
             vocab,
             queries: AtomicU64::new(0),
             exec,
+            build_threads: 0,
         }
+    }
+
+    /// Record the build pipeline's thread count (from
+    /// [`crate::coordinator::telemetry::PipelineReport::build_threads`])
+    /// so STATS can report it alongside the query degree.
+    pub fn with_build_threads(mut self, build_threads: usize) -> Self {
+        self.build_threads = build_threads;
+        self
     }
 
     pub fn trie(&self) -> &TrieOfRules {
@@ -282,11 +294,12 @@ impl QueryEngine {
     /// [`TrieOfRules::memory_bytes`] and DESIGN.md §8).
     fn cmd_stats(&self) -> String {
         format!(
-            "STATS nodes={} rules={} mem_kib={} threads={} queries={}",
+            "STATS nodes={} rules={} mem_kib={} threads={} build_threads={} queries={}",
             self.trie.num_nodes(),
             self.trie.num_representable_rules(),
             self.trie.memory_bytes() / 1024,
             self.threads(),
+            self.build_threads,
             self.queries_served()
         )
     }
@@ -472,7 +485,16 @@ mod tests {
             resp.contains(&format!("threads={}", e.threads())),
             "{resp}"
         );
+        // No pipeline ran here, so the build thread count is unknown (0).
+        assert!(resp.contains("build_threads=0"), "{resp}");
         assert!(e.queries_served() >= 2);
+    }
+
+    #[test]
+    fn stats_reports_build_threads_from_pipeline() {
+        let e = engine().with_build_threads(4);
+        let resp = e.execute("STATS");
+        assert!(resp.contains("build_threads=4"), "{resp}");
     }
 
     #[test]

@@ -39,6 +39,10 @@ pub struct PipelineReport {
     pub trie_memory_bytes: usize,
     pub frame_memory_bytes: usize,
     pub counter_backend: &'static str,
+    /// Threads the build stages (mine/rulegen/build-trie/build-frame) ran
+    /// with: 1 for the sequential path, pool helpers + 1 when a worker
+    /// pool was shared in (service STATS echoes this as `build_threads=`).
+    pub build_threads: usize,
 }
 
 impl PipelineReport {
@@ -79,8 +83,12 @@ impl PipelineReport {
             fmt_duration(self.consumer_blocked)
         ));
         out.push_str(&format!(
-            "  transactions={} frequent={} rules={} (counter={})\n",
-            self.num_transactions, self.num_frequent_itemsets, self.num_rules, self.counter_backend
+            "  transactions={} frequent={} rules={} (counter={}, build_threads={})\n",
+            self.num_transactions,
+            self.num_frequent_itemsets,
+            self.num_rules,
+            self.counter_backend,
+            self.build_threads.max(1)
         ));
         out.push_str(&format!(
             "  trie: {} nodes, {} representable rules, {} KiB (frame: {} KiB)\n",
@@ -108,6 +116,10 @@ mod tests {
         assert!(text.contains("ingest"));
         assert!(text.contains("mine"));
         assert!(text.contains("counter=bitset"));
+        // Default (unset) build_threads renders as the sequential floor.
+        assert!(text.contains("build_threads=1"), "{text}");
+        r.build_threads = 4;
+        assert!(r.render().contains("build_threads=4"));
         assert_eq!(r.total_duration(), Duration::from_millis(40));
     }
 

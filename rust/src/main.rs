@@ -64,6 +64,7 @@ fn run(args: &[String]) -> Result<()> {
                     eprint!("{}", out.report.render());
                     let vocab = out.db.vocab().clone();
                     QueryEngine::with_executor(out.trie, vocab, exec)
+                        .with_build_threads(out.report.build_threads)
                 }
             };
             for cmd in cmds {
@@ -96,7 +97,10 @@ fn run(args: &[String]) -> Result<()> {
             let out = run_pipeline(&opts, Some(exec.pool()))?;
             eprint!("{}", out.report.render());
             let vocab = out.db.vocab().clone();
-            let engine = Arc::new(QueryEngine::with_executor(out.trie, vocab, exec));
+            let engine = Arc::new(
+                QueryEngine::with_executor(out.trie, vocab, exec)
+                    .with_build_threads(out.report.build_threads),
+            );
             eprintln!("query threads: {}", engine.threads());
             let shutdown = Arc::new(AtomicBool::new(false));
             let addr = serve_tcp(engine, &format!("127.0.0.1:{port}"), Arc::clone(&shutdown))?;

@@ -1,11 +1,28 @@
 //! FP-growth (Han, Pei, Yin, Mao 2004): frequent-itemset mining without
 //! candidate generation, recursing over conditional FP-trees.
+//!
+//! Two entry points share one recursion: [`fpgrowth`] runs the classic
+//! sequential bottom-up loop; [`fpgrowth_parallel`] shards that loop's
+//! first level — one conditional FP-tree per first-level item is fully
+//! independent work — across a [`WorkerPool`], each worker emitting into a
+//! private buffer merged back in deterministic rank order. Both paths end
+//! with the same `canonicalize()`, so their outputs are byte-identical at
+//! any thread count (enforced by `rust/tests/build_parity.rs`).
+
+use std::sync::Mutex;
 
 use crate::data::transaction::TransactionDb;
 use crate::data::vocab::ItemId;
 use crate::mining::counts::{min_count, ItemOrder};
 use crate::mining::fptree::FpTree;
 use crate::mining::itemset::{FrequentItemsets, Itemset};
+use crate::query::parallel::WorkerPool;
+
+/// Longest single path the mask-enumeration shortcut handles: `1u64 <<
+/// path.len()` masks must fit a u64 with headroom. Longer paths fall back
+/// to the general conditional-tree recursion, which streams combinations
+/// (and prunes sub-threshold branches) instead of aborting the process.
+const MASK_PATH_LIMIT: usize = 40;
 
 /// Mine all frequent itemsets at relative threshold `minsup`.
 pub fn fpgrowth(db: &TransactionDb, minsup: f64) -> FrequentItemsets {
@@ -14,18 +31,82 @@ pub fn fpgrowth(db: &TransactionDb, minsup: f64) -> FrequentItemsets {
     let order = ItemOrder::new(db, mc);
     let tree = FpTree::from_db(db, &order);
 
+    let mut out = seed_singletons(n, &order);
+    let mut suffix = Vec::new();
+    grow(&tree, mc, &mut suffix, &order, &mut out);
+    out.canonicalize();
+    out
+}
+
+/// [`fpgrowth`] with the bottom-up header loop sharded across `pool`.
+///
+/// The global FP-tree is built once and shared read-only; each first-level
+/// item (in the canonical bottom-up order, rank descending) becomes one
+/// dynamically-claimed task whose worker builds that item's conditional
+/// tree and runs the ordinary [`grow`] recursion into a private buffer.
+/// Partial buffers are concatenated in task (rank) order — the exact
+/// sequence the sequential loop would have produced — then canonicalized,
+/// so the result is byte-identical to [`fpgrowth`]'s.
+pub fn fpgrowth_parallel(db: &TransactionDb, minsup: f64, pool: &WorkerPool) -> FrequentItemsets {
+    let n = db.num_transactions();
+    let mc = min_count(minsup, n);
+    let order = ItemOrder::new(db, mc);
+    let tree = FpTree::from_db(db, &order);
+
+    let mut out = seed_singletons(n, &order);
+    // No helpers, or the whole tree is one path (the shortcut handles it
+    // in microseconds): run the sequential recursion — same code path the
+    // sequential entry takes, so parity is trivial.
+    if pool.helpers() == 0 || tree.is_single_path() {
+        let mut suffix = Vec::new();
+        grow(&tree, mc, &mut suffix, &order, &mut out);
+        out.canonicalize();
+        return out;
+    }
+
+    // One task per first-level item, in the sequential loop's order.
+    let mut items: Vec<ItemId> = tree.items().collect();
+    items.sort_by_key(|&i| std::cmp::Reverse(order.rank(i).unwrap_or(u32::MAX)));
+    let slots: Vec<Mutex<Option<Vec<(Itemset, u64)>>>> =
+        (0..items.len()).map(|_| Mutex::new(None)).collect();
+    pool.run(items.len(), |t| {
+        let item = items[t];
+        let mut local = FrequentItemsets {
+            num_transactions: n,
+            sets: Vec::new(),
+        };
+        // Mirror of one iteration of the general case in `grow` at the
+        // top level: the 1-itemset is already seeded from global counts,
+        // so only the conditional recursion emits here.
+        let count = tree.item_count(item);
+        if count >= mc {
+            let mut suffix = vec![item];
+            let (cond, _) = tree.conditional_tree(item, mc);
+            grow(&cond, mc, &mut suffix, &order, &mut local);
+        }
+        *slots[t].lock().unwrap() = Some(local.sets);
+    });
+    for slot in slots {
+        let sets = slot
+            .into_inner()
+            .unwrap()
+            .expect("every mining shard fills its slot");
+        out.sets.extend(sets);
+    }
+    out.canonicalize();
+    out
+}
+
+/// The shared mining preamble: 1-itemsets straight from global frequencies.
+fn seed_singletons(num_transactions: usize, order: &ItemOrder) -> FrequentItemsets {
     let mut out = FrequentItemsets {
-        num_transactions: n,
-        sets: Vec::new(),
+        num_transactions,
+        sets: Vec::with_capacity(order.num_frequent()),
     };
-    // 1-itemsets straight from the global frequencies.
     for &item in order.frequent_items() {
         out.sets
             .push((Itemset::new(vec![item]), order.frequency(item)));
     }
-    let mut suffix = Vec::new();
-    grow(&tree, mc, &mut suffix, &order, &mut out);
-    out.canonicalize();
     out
 }
 
@@ -43,10 +124,13 @@ fn grow(
     }
     if tree.is_single_path() {
         // Single-path shortcut: every sub-combination of the path, with the
-        // count of its deepest element.
+        // count of its deepest element. Paths beyond the mask limit fall
+        // through to the general recursion instead of aborting.
         let path = tree.single_path();
-        emit_path_combinations(&path, suffix, mc, out);
-        return;
+        if path.len() <= MASK_PATH_LIMIT {
+            emit_path_combinations(&path, suffix, mc, out);
+            return;
+        }
     }
     // General case: one conditional tree per item in this tree.
     let mut items: Vec<ItemId> = tree.items().collect();
@@ -73,6 +157,8 @@ fn grow(
 
 /// Emit every non-empty combination of `path` items appended to `suffix`.
 /// The support of a combination is the count of its deepest (last) element.
+/// Combinations are assembled in one reusable scratch buffer truncated per
+/// mask; the only allocation is the sorted copy for each *emitted* itemset.
 fn emit_path_combinations(
     path: &[(ItemId, u64)],
     suffix: &[ItemId],
@@ -80,20 +166,22 @@ fn emit_path_combinations(
     out: &mut FrequentItemsets,
 ) {
     let n = path.len();
-    assert!(n <= 40, "single path too long for mask enumeration");
+    debug_assert!(n <= MASK_PATH_LIMIT, "caller gates mask enumeration length");
+    let mut scratch: Vec<ItemId> = Vec::with_capacity(suffix.len() + n);
+    scratch.extend_from_slice(suffix);
     for mask in 1u64..(1 << n) {
+        scratch.truncate(suffix.len());
         let mut count = u64::MAX;
-        let mut items: Vec<ItemId> = suffix.to_vec();
         for (b, &(item, c)) in path.iter().enumerate() {
             if mask >> b & 1 == 1 {
-                items.push(item);
+                scratch.push(item);
                 count = count.min(c);
             }
         }
-        if count >= mc && !suffix.is_empty() {
-            items.sort_unstable();
-            out.sets.push((Itemset::from_sorted(dedup(items)), count));
-        } else if count >= mc && suffix.is_empty() && mask.count_ones() > 1 {
+        // With an empty suffix, single-item masks duplicate the caller's
+        // global 1-itemset emission — skip those.
+        if count >= mc && (!suffix.is_empty() || mask.count_ones() > 1) {
+            let mut items = scratch.clone();
             items.sort_unstable();
             out.sets.push((Itemset::from_sorted(dedup(items)), count));
         }
@@ -164,5 +252,70 @@ mod tests {
         let fi = fpgrowth(&db, 0.2);
         let uniq: std::collections::HashSet<_> = fi.sets.iter().map(|(s, _)| s.clone()).collect();
         assert_eq!(uniq.len(), fi.sets.len());
+    }
+
+    #[test]
+    fn parallel_matches_sequential_on_paper_example() {
+        let db = paper_example_db();
+        for helpers in [0usize, 1, 3] {
+            let pool = WorkerPool::new(helpers);
+            for minsup in [0.2, 0.3, 0.6] {
+                let seq = fpgrowth(&db, minsup);
+                let par = fpgrowth_parallel(&db, minsup, &pool);
+                assert_eq!(seq.sets, par.sets, "helpers={helpers} minsup={minsup}");
+                assert_eq!(seq.num_transactions, par.num_transactions);
+            }
+        }
+    }
+
+    #[test]
+    fn long_sparse_single_path_falls_back_without_abort() {
+        // A single path longer than MASK_PATH_LIMIT used to abort the
+        // process. The fallback recursion must handle it — cheaply, when
+        // the threshold prunes the deep low-count tail.
+        let mut tree = FpTree::empty();
+        let long_path: Vec<ItemId> = (0..(MASK_PATH_LIMIT as ItemId + 3)).collect();
+        tree.insert(&long_path, 1);
+        tree.insert(&[0], 9); // only item 0 clears the threshold below
+        assert!(tree.is_single_path());
+        assert!(tree.single_path().len() > MASK_PATH_LIMIT);
+        let order = ItemOrder::from_frequencies(
+            (0..long_path.len() as ItemId)
+                .map(|i| if i == 0 { 10 } else { 1 })
+                .collect(),
+            1,
+        );
+        let mut out = FrequentItemsets {
+            num_transactions: 10,
+            sets: Vec::new(),
+        };
+        let mut suffix = Vec::new();
+        grow(&tree, 5, &mut suffix, &order, &mut out);
+        // Item 0 (count 10) survives; it is a 1-itemset, which `grow`
+        // leaves to the caller — so nothing is emitted, and nothing panics.
+        assert!(out.sets.is_empty(), "{:?}", out.sets);
+    }
+
+    #[test]
+    fn emit_combinations_reuses_scratch_and_matches_spec() {
+        // 3-item path: 7 masks; with a non-empty suffix every one emits.
+        let path = [(5 as ItemId, 4u64), (7, 3), (9, 2)];
+        let mut out = FrequentItemsets {
+            num_transactions: 10,
+            sets: Vec::new(),
+        };
+        emit_path_combinations(&path, &[2], 1, &mut out);
+        assert_eq!(out.sets.len(), 7);
+        // Deepest-element counts: {2,5}=4, {2,7}=3, {2,5,7}=3, {2,9}=2 ...
+        let get = |items: &[ItemId]| {
+            out.sets
+                .iter()
+                .find(|(s, _)| s.items() == items)
+                .map(|&(_, c)| c)
+                .unwrap()
+        };
+        assert_eq!(get(&[2, 5]), 4);
+        assert_eq!(get(&[2, 5, 7]), 3);
+        assert_eq!(get(&[2, 5, 7, 9]), 2);
     }
 }

@@ -155,6 +155,12 @@ impl FrequentItemsets {
         self.sets.iter().cloned().collect()
     }
 
+    /// Sorted-table support index borrowing this collection — the
+    /// allocation-free probe structure rule generation runs on.
+    pub fn support_index(&self) -> SupportIndex<'_> {
+        SupportIndex::new(self)
+    }
+
     /// Relative support of an entry.
     pub fn rel_support(&self, count: u64) -> f64 {
         count as f64 / self.num_transactions as f64
@@ -165,6 +171,46 @@ impl FrequentItemsets {
     pub fn canonicalize(&mut self) {
         self.sets
             .sort_by(|a, b| (a.0.len(), &a.0).cmp(&(b.0.len(), &b.0)));
+    }
+}
+
+/// A binary-searchable support table over a [`FrequentItemsets`], built
+/// once and probed with **borrowed** `&[ItemId]` keys — no `Itemset`
+/// allocation and no hashing per lookup, unlike
+/// [`FrequentItemsets::support_map`]. Entries are ordered by the canonical
+/// (length, lexicographic) key, the same total order
+/// [`FrequentItemsets::canonicalize`] imposes, so the index is independent
+/// of the miner's emission order.
+#[derive(Debug, Clone)]
+pub struct SupportIndex<'a> {
+    /// (items, count), sorted by (len, items); slices borrow the table.
+    entries: Vec<(&'a [ItemId], u64)>,
+}
+
+impl<'a> SupportIndex<'a> {
+    pub fn new(fi: &'a FrequentItemsets) -> Self {
+        let mut entries: Vec<(&'a [ItemId], u64)> =
+            fi.sets.iter().map(|(s, c)| (s.items(), *c)).collect();
+        entries.sort_unstable_by(|a, b| (a.0.len(), a.0).cmp(&(b.0.len(), b.0)));
+        SupportIndex { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Absolute support of `items` (sorted ascending, unique), if frequent.
+    #[inline]
+    pub fn get(&self, items: &[ItemId]) -> Option<u64> {
+        debug_assert!(items.windows(2).all(|w| w[0] < w[1]), "key not sorted/unique");
+        self.entries
+            .binary_search_by(|&(e, _)| (e.len(), e).cmp(&(items.len(), items)))
+            .ok()
+            .map(|i| self.entries[i].1)
     }
 }
 
@@ -213,5 +259,32 @@ mod tests {
     fn display_format() {
         assert_eq!(Itemset::new(vec![2, 1]).to_string(), "{1,2}");
         assert_eq!(Itemset::new(vec![]).to_string(), "{}");
+    }
+
+    #[test]
+    fn support_index_agrees_with_support_map() {
+        // Deliberately non-canonical emission order: the index must not
+        // depend on it.
+        let fi = FrequentItemsets {
+            num_transactions: 10,
+            sets: vec![
+                (Itemset::new(vec![1, 2]), 3),
+                (Itemset::new(vec![2]), 7),
+                (Itemset::new(vec![1]), 5),
+                (Itemset::new(vec![1, 2, 4]), 2),
+                (Itemset::new(vec![4]), 4),
+            ],
+        };
+        let index = fi.support_index();
+        assert_eq!(index.len(), fi.len());
+        assert!(!index.is_empty());
+        let map = fi.support_map();
+        for (set, count) in &fi.sets {
+            assert_eq!(index.get(set.items()), Some(*count), "{set}");
+            assert_eq!(map[set], *count);
+        }
+        assert_eq!(index.get(&[3]), None);
+        assert_eq!(index.get(&[1, 4]), None);
+        assert_eq!(index.get(&[]), None);
     }
 }

@@ -5,13 +5,30 @@
 //! Consequents grow level-wise with the standard confidence-based pruning:
 //! if (F \ C) => C fails minconf, every rule with a superset consequent of C
 //! (for the same F) fails too.
+//!
+//! Support probes run against a [`SupportIndex`] — one sorted borrowed-slice
+//! table built per call, binary-searched with zero per-probe allocation —
+//! and antecedents are assembled in a reused scratch buffer, so the hot
+//! lookup side of ap-genrules never touches the heap. The per-itemset loop
+//! is embarrassingly parallel: [`generate_rules_parallel`] runs contiguous
+//! chunks of the itemset table on a [`WorkerPool`], each worker emitting
+//! into a private buffer, concatenated back in itemset order — rows AND
+//! order identical to [`generate_rules`] at any thread count (enforced by
+//! `rust/tests/build_parity.rs`).
 
-use std::collections::HashMap;
+use std::sync::Mutex;
 
-use crate::mining::itemset::{FrequentItemsets, Itemset};
+use crate::data::vocab::ItemId;
+use crate::mining::itemset::{FrequentItemsets, Itemset, SupportIndex};
+use crate::query::parallel::WorkerPool;
 use crate::rules::metrics::{RuleCounts, RuleMetrics};
 use crate::rules::rule::Rule;
 use crate::rules::ruleset::{RuleSet, ScoredRule};
+
+/// Chunks handed to the pool per worker thread: enough for the dynamic
+/// cursor to balance around skewed itemset sizes, few enough that slot
+/// bookkeeping stays negligible.
+const RULEGEN_CHUNKS_PER_THREAD: usize = 8;
 
 /// Configuration for rule generation.
 #[derive(Debug, Clone, Copy)]
@@ -34,51 +51,159 @@ impl Default for RuleGenConfig {
 /// Generate the full ruleset from mined frequent itemsets.
 ///
 /// `frequent` must be closed under subsets (i.e. produced by a *frequent*
-/// miner, not FP-max) so every antecedent/consequent support is available;
-/// supports that would be missing are resolved through `support_of`.
+/// miner, not FP-max) so every antecedent/consequent support is available
+/// in the [`SupportIndex`].
 pub fn generate_rules(frequent: &FrequentItemsets, config: RuleGenConfig) -> RuleSet {
-    let support: HashMap<Itemset, u64> = frequent.support_map();
+    let index = frequent.support_index();
     let n = frequent.num_transactions as u64;
-
     let mut rules: Vec<ScoredRule> = Vec::new();
-    for (itemset, &count) in frequent.sets.iter().map(|(s, c)| (s, c)) {
-        if itemset.len() < 2 {
-            continue;
-        }
-        // Level-wise consequents: start with 1-item consequents, grow.
-        let mut level: Vec<Itemset> = itemset
-            .items()
-            .iter()
-            .map(|&i| Itemset::new(vec![i]))
-            .collect();
-        let mut size = 1usize;
-        while !level.is_empty() && size < itemset.len() && size <= config.max_consequent {
-            let mut kept: Vec<Itemset> = Vec::new();
-            for consequent in &level {
-                let antecedent = itemset.difference(consequent);
-                debug_assert!(!antecedent.is_empty());
-                let c_a = support[&antecedent];
-                let c_c = support[consequent];
-                let metrics = RuleMetrics::from_counts(RuleCounts {
-                    n,
-                    c_ac: count,
-                    c_a,
-                    c_c,
-                });
-                if metrics.confidence + 1e-12 >= config.min_confidence {
-                    rules.push(ScoredRule {
-                        rule: Rule::new(antecedent, consequent.clone()),
-                        metrics,
-                    });
-                    kept.push(consequent.clone());
-                }
-            }
-            // Grow consequents by joining kept ones (Apriori-style).
-            level = join_consequents(&kept, itemset);
-            size += 1;
-        }
+    let mut scratch = GenScratch::default();
+    for (itemset, count) in &frequent.sets {
+        genrules_for_itemset(itemset, *count, n, &index, &config, &mut scratch, &mut rules);
     }
     RuleSet::new(frequent.num_transactions, rules)
+}
+
+/// [`generate_rules`] with the per-itemset ap-genrules loop sharded across
+/// `pool`. Contiguous near-equal chunks of the itemset table are claimed
+/// dynamically; each worker runs the identical per-itemset generator into
+/// a private buffer, and the partials are concatenated in chunk (= itemset)
+/// order — byte-identical rows and order to the sequential path.
+pub fn generate_rules_parallel(
+    frequent: &FrequentItemsets,
+    config: RuleGenConfig,
+    pool: &WorkerPool,
+) -> RuleSet {
+    if pool.helpers() == 0 {
+        return generate_rules(frequent, config);
+    }
+    let index = frequent.support_index();
+    let n = frequent.num_transactions as u64;
+    let chunks = chunk_ranges(
+        frequent.sets.len(),
+        (pool.helpers() + 1) * RULEGEN_CHUNKS_PER_THREAD,
+    );
+    let slots: Vec<Mutex<Option<Vec<ScoredRule>>>> =
+        (0..chunks.len()).map(|_| Mutex::new(None)).collect();
+    pool.run(chunks.len(), |t| {
+        let mut local: Vec<ScoredRule> = Vec::new();
+        let mut scratch = GenScratch::default();
+        for i in chunks[t].clone() {
+            let (itemset, count) = &frequent.sets[i];
+            genrules_for_itemset(itemset, *count, n, &index, &config, &mut scratch, &mut local);
+        }
+        *slots[t].lock().unwrap() = Some(local);
+    });
+    let mut rules: Vec<ScoredRule> = Vec::new();
+    for slot in slots {
+        rules.extend(
+            slot.into_inner()
+                .unwrap()
+                .expect("every rulegen chunk fills its slot"),
+        );
+    }
+    RuleSet::new(frequent.num_transactions, rules)
+}
+
+/// Reused per-worker buffers: the antecedent under construction and the
+/// level-wise consequent frontier.
+#[derive(Default)]
+struct GenScratch {
+    antecedent: Vec<ItemId>,
+    level: Vec<Itemset>,
+    kept: Vec<Itemset>,
+}
+
+/// Ap-genrules for one frequent itemset: level-wise consequents with
+/// confidence-based pruning. Support probes go through `index` on borrowed
+/// slices; the antecedent is built in `scratch` — the probe/lookup side
+/// performs no per-candidate heap allocation (owned `Itemset`s are created
+/// only for rules that are actually emitted).
+fn genrules_for_itemset(
+    itemset: &Itemset,
+    count: u64,
+    n: u64,
+    index: &SupportIndex<'_>,
+    config: &RuleGenConfig,
+    scratch: &mut GenScratch,
+    out: &mut Vec<ScoredRule>,
+) {
+    if itemset.len() < 2 {
+        return;
+    }
+    let GenScratch {
+        antecedent,
+        level,
+        kept,
+    } = scratch;
+    // Level 1: single-item consequents, in itemset order.
+    level.clear();
+    level.extend(itemset.items().iter().map(|&i| Itemset::new(vec![i])));
+    let mut size = 1usize;
+    while !level.is_empty() && size < itemset.len() && size <= config.max_consequent {
+        kept.clear();
+        for consequent in level.iter() {
+            difference_into(itemset.items(), consequent.items(), antecedent);
+            debug_assert!(!antecedent.is_empty());
+            let c_a = index
+                .get(antecedent)
+                .expect("antecedent support missing (frequent set not subset-closed)");
+            let c_c = index
+                .get(consequent.items())
+                .expect("consequent support missing (frequent set not subset-closed)");
+            let metrics = RuleMetrics::from_counts(RuleCounts {
+                n,
+                c_ac: count,
+                c_a,
+                c_c,
+            });
+            if metrics.confidence + 1e-12 >= config.min_confidence {
+                out.push(ScoredRule {
+                    rule: Rule::new(Itemset::from_sorted(antecedent.clone()), consequent.clone()),
+                    metrics,
+                });
+                kept.push(consequent.clone());
+            }
+        }
+        // Grow consequents by joining kept ones (Apriori-style).
+        *level = join_consequents(kept, itemset);
+        size += 1;
+    }
+}
+
+/// `a \ b` for sorted unique slices, written into `out` (no allocation
+/// beyond `out`'s amortized capacity).
+fn difference_into(a: &[ItemId], b: &[ItemId], out: &mut Vec<ItemId>) {
+    out.clear();
+    let mut j = 0usize;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            out.push(x);
+        }
+    }
+}
+
+/// Split `0..len` into at most `parts` contiguous, non-empty, near-equal
+/// ranges (deterministic in the inputs).
+fn chunk_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let l = base + usize::from(p < extra);
+        out.push(start..start + l);
+        start += l;
+    }
+    debug_assert_eq!(start, len);
+    out
 }
 
 /// Join k-item consequents sharing their first k-1 items into (k+1)-item
@@ -198,5 +323,52 @@ mod tests {
             },
         );
         assert!(rs.iter().all(|sr| sr.rule.consequent.len() == 1));
+    }
+
+    #[test]
+    fn parallel_rulegen_matches_sequential_rows_and_order() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        for minconf in [0.0, 0.5, 0.9] {
+            let cfg = RuleGenConfig {
+                min_confidence: minconf,
+                max_consequent: usize::MAX,
+            };
+            let seq = generate_rules(&fi, cfg);
+            for helpers in [0usize, 1, 3] {
+                let pool = WorkerPool::new(helpers);
+                let par = generate_rules_parallel(&fi, cfg, &pool);
+                assert_eq!(
+                    seq.rules(),
+                    par.rules(),
+                    "helpers={helpers} minconf={minconf}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for (len, parts) in [(0usize, 4usize), (1, 4), (10, 3), (10, 25), (7, 7)] {
+            let chunks = chunk_ranges(len, parts);
+            let mut expect = 0usize;
+            for c in &chunks {
+                assert_eq!(c.start, expect);
+                assert!(c.end > c.start, "empty chunk for len={len} parts={parts}");
+                expect = c.end;
+            }
+            assert_eq!(expect, len, "len={len} parts={parts}");
+        }
+    }
+
+    #[test]
+    fn difference_into_matches_itemset_difference() {
+        let a = Itemset::new(vec![1, 2, 5, 9]);
+        let b = Itemset::new(vec![2, 9]);
+        let mut out = vec![99]; // stale contents must be cleared
+        difference_into(a.items(), b.items(), &mut out);
+        assert_eq!(out, a.difference(&b).items());
+        difference_into(a.items(), &[], &mut out);
+        assert_eq!(out, a.items());
     }
 }

@@ -182,6 +182,81 @@ impl TrieOfRules {
         Ok(TrieBuilder::from_raw_nodes(order, num_transactions, raw)?.freeze())
     }
 
+    /// Sort-based direct-to-CSR construction from a *complete* (subset-
+    /// closed) frequent-itemset collection: order every itemset into its
+    /// frequency-ordered path, sort the paths lexicographically by item id
+    /// — exactly the frozen layout's sibling order — and emit the preorder
+    /// core columns in **one pass** over the sorted list. No `TrieNode`
+    /// arena, no per-prefix `Itemset` hashing: in lexicographic order all
+    /// extensions of a prefix are contiguous, so an ancestor stack is the
+    /// only construction state, and (closure) every proper prefix of a
+    /// path is its own entry sorting strictly before it, so each entry
+    /// creates exactly the one node it names, carrying its own mined
+    /// count. The result is byte-identical to
+    /// `TrieBuilder::from_frequent(fi, order)?.freeze()` (enforced by
+    /// `rust/tests/build_parity.rs`); the builder remains the parity
+    /// oracle and the maximal-sequence (`from_sequences`) path.
+    pub fn from_sorted_paths(fi: &FrequentItemsets, order: &ItemOrder) -> Result<TrieOfRules> {
+        let mut paths: Vec<(Vec<ItemId>, u64)> = fi
+            .sets
+            .iter()
+            .map(|(s, c)| (order.order_itemset(s.items()), *c))
+            .collect();
+        paths.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+
+        let cap = paths.len() + 1;
+        let mut items: Vec<ItemId> = Vec::with_capacity(cap);
+        let mut counts: Vec<u64> = Vec::with_capacity(cap);
+        let mut parents: Vec<NodeIdx> = Vec::with_capacity(cap);
+        let mut depths: Vec<u16> = Vec::with_capacity(cap);
+        items.push(ROOT_ITEM);
+        counts.push(fi.num_transactions as u64);
+        parents.push(ROOT);
+        depths.push(0);
+
+        // stack[d] = preorder index of the current path's depth-d node
+        // (stack[0] = root). Shared-prefix length against the previous
+        // sorted path tells how far to unwind.
+        let mut stack: Vec<NodeIdx> = vec![ROOT];
+        let mut prev: &[ItemId] = &[];
+        for (path, count) in &paths {
+            let mut common = 0usize;
+            while common < path.len() && common < prev.len() && path[common] == prev[common] {
+                common += 1;
+            }
+            if common == path.len() {
+                // Duplicate itemset: the builder's insert is idempotent
+                // here (walks the existing path, creates nothing) — but
+                // only when the counts agree; a conflicting duplicate has
+                // no well-defined support and must not silently pick a
+                // winner.
+                anyhow::ensure!(
+                    counts[stack[common] as usize] == *count,
+                    "duplicate itemset {} with conflicting supports ({} vs {})",
+                    Itemset::new(path.clone()),
+                    counts[stack[common] as usize],
+                    count
+                );
+                prev = path;
+                continue;
+            }
+            anyhow::ensure!(
+                common + 1 == path.len(),
+                "prefix {} missing from frequent set (downward closure violated)",
+                Itemset::new(path[..=common].to_vec())
+            );
+            let idx = items.len() as NodeIdx;
+            items.push(path[common]);
+            counts.push(*count);
+            parents.push(stack[common]);
+            depths.push(path.len() as u16);
+            stack.truncate(common + 1);
+            stack.push(idx);
+            prev = path;
+        }
+        Self::from_core_columns(order.clone(), fi.num_transactions, items, counts, parents, depths)
+    }
+
     /// Assemble the frozen form from its four *core* columns (preorder
     /// `items`/`counts`/`parents`/`depths`, row 0 = root). Everything else
     /// — subtree ranges, child CSR, header CSR, metric columns — is
@@ -1385,6 +1460,46 @@ mod tests {
         let (off, items, _) = trie.child_csr();
         assert_eq!(off.len(), trie.num_nodes() + 2);
         assert_eq!(items.len(), trie.num_nodes());
+    }
+
+    #[test]
+    fn from_sorted_paths_is_byte_identical_to_builder_freeze() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let frozen = TrieBuilder::from_frequent(&fi, &order).unwrap().freeze();
+        let direct = TrieOfRules::from_sorted_paths(&fi, &order).unwrap();
+        assert_eq!(direct.items_column(), frozen.items_column());
+        assert_eq!(direct.counts_column(), frozen.counts_column());
+        assert_eq!(direct.parents_column(), frozen.parents_column());
+        assert_eq!(direct.depths_column(), frozen.depths_column());
+        assert_eq!(direct.subtree_end_column(), frozen.subtree_end_column());
+        assert_eq!(direct.child_csr(), frozen.child_csr());
+        assert_eq!(direct.header_csr(), frozen.header_csr());
+        for m in Metric::ALL {
+            assert_eq!(direct.metric_column(m), frozen.metric_column(m), "{m:?}");
+        }
+        assert_eq!(
+            direct.num_representable_rules(),
+            frozen.num_representable_rules()
+        );
+    }
+
+    #[test]
+    fn from_sorted_paths_rejects_non_closed_input() {
+        // {f, c} without {f} violates downward closure: the builder bails
+        // on the missing prefix support, and the sort-based constructor
+        // must too.
+        let db = paper_example_db();
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        let fi = FrequentItemsets {
+            num_transactions: db.num_transactions(),
+            sets: vec![(Itemset::new(vec![name("f"), name("c")]), 3)],
+        };
+        let err = TrieOfRules::from_sorted_paths(&fi, &order).unwrap_err();
+        assert!(err.to_string().contains("downward closure"), "{err}");
+        assert!(TrieBuilder::from_frequent(&fi, &order).is_err());
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Build-pipeline parity: the parallel/allocation-lean build path must be
+//! byte-identical to the sequential reference at every thread count.
+//!
+//! Three contracts, each over randomized databases (≥200 per property) and
+//! worker pools of degree {1, 2, 4, 8}:
+//!
+//! * `fpgrowth_parallel == fpgrowth` — canonicalized frequent sets, sets
+//!   AND counts AND order (both entry points canonicalize);
+//! * `generate_rules_parallel == generate_rules` — rows and order, exact
+//!   float equality (identical per-rule computation);
+//! * `TrieOfRules::from_sorted_paths == TrieBuilder::from_frequent(..)
+//!   .freeze()` — every column byte-identical (the builder is the oracle).
+//!
+//! These are the guarantees that let `coordinator::pipeline` swap the
+//! sequential stages for the pooled ones without any observable change.
+
+use trie_of_rules::data::transaction::{paper_example_db, TransactionDb};
+use trie_of_rules::data::vocab::Vocab;
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::{fpgrowth, fpgrowth_parallel};
+use trie_of_rules::query::parallel::WorkerPool;
+use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::rules::rulegen::{generate_rules, generate_rules_parallel, RuleGenConfig};
+use trie_of_rules::trie::builder::TrieBuilder;
+use trie_of_rules::trie::trie::TrieOfRules;
+use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
+
+fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
+    let num_items = g.usize_in(3, 12);
+    let num_tx = g.usize_in(4, 60);
+    (0..num_tx)
+        .map(|_| {
+            let len = g.usize_in(1, num_items.min(6) + 1);
+            (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
+        })
+        .collect()
+}
+
+fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
+    if rows.is_empty() {
+        return None;
+    }
+    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
+    let mut b = TransactionDb::builder(Vocab::synthetic(max_item as usize + 1));
+    for r in rows {
+        b.push_ids(r.clone());
+    }
+    Some(b.build())
+}
+
+/// Degrees the ISSUE acceptance demands: {1, 2, 4, 8} ⇒ helpers {0,1,3,7}.
+fn pools() -> Vec<WorkerPool> {
+    [1usize, 2, 4, 8]
+        .into_iter()
+        .map(|t| WorkerPool::new(t - 1))
+        .collect()
+}
+
+/// One end-to-end parity check for a database at a threshold: mining,
+/// rulegen, and trie columns across every pool degree.
+fn check_build_parity(
+    db: &TransactionDb,
+    minsup: f64,
+    minconf: f64,
+    pools: &[WorkerPool],
+) -> Result<(), String> {
+    // -- mining ------------------------------------------------------
+    let fi_seq = fpgrowth(db, minsup);
+    for pool in pools {
+        let fi_par = fpgrowth_parallel(db, minsup, pool);
+        if fi_seq.num_transactions != fi_par.num_transactions {
+            return Err("num_transactions diverged".into());
+        }
+        if fi_seq.sets != fi_par.sets {
+            return Err(format!(
+                "mining diverged at degree {}: {} vs {} sets",
+                pool.helpers() + 1,
+                fi_seq.sets.len(),
+                fi_par.sets.len()
+            ));
+        }
+    }
+
+    // -- rulegen -----------------------------------------------------
+    let cfg = RuleGenConfig {
+        min_confidence: minconf,
+        max_consequent: usize::MAX,
+    };
+    let rs_seq = generate_rules(&fi_seq, cfg);
+    for pool in pools {
+        let rs_par = generate_rules_parallel(&fi_seq, cfg, pool);
+        if rs_seq.rules() != rs_par.rules() {
+            return Err(format!(
+                "rulegen diverged at degree {} (minconf {minconf}): {} vs {} rules \
+                 (or rows/order/metrics differ)",
+                pool.helpers() + 1,
+                rs_seq.len(),
+                rs_par.len()
+            ));
+        }
+    }
+
+    // -- trie columns ------------------------------------------------
+    let order = ItemOrder::new(db, min_count(minsup, db.num_transactions()));
+    let frozen = TrieBuilder::from_frequent(&fi_seq, &order)
+        .map_err(|e| format!("builder failed: {e:#}"))?
+        .freeze();
+    let direct = TrieOfRules::from_sorted_paths(&fi_seq, &order)
+        .map_err(|e| format!("from_sorted_paths failed: {e:#}"))?;
+    if direct.items_column() != frozen.items_column()
+        || direct.counts_column() != frozen.counts_column()
+        || direct.parents_column() != frozen.parents_column()
+        || direct.depths_column() != frozen.depths_column()
+        || direct.subtree_end_column() != frozen.subtree_end_column()
+        || direct.child_csr() != frozen.child_csr()
+        || direct.header_csr() != frozen.header_csr()
+    {
+        return Err(format!(
+            "trie columns diverged: direct {} nodes vs frozen {} nodes",
+            direct.num_nodes(),
+            frozen.num_nodes()
+        ));
+    }
+    for m in Metric::ALL {
+        if direct.metric_column(m) != frozen.metric_column(m) {
+            return Err(format!("metric column {m:?} diverged"));
+        }
+    }
+    Ok(())
+}
+
+/// The headline acceptance property: ≥200 randomized databases, thread
+/// counts {1, 2, 4, 8}, all three build stages parity-exact.
+#[test]
+fn prop_parallel_build_matches_sequential_across_thread_counts() {
+    let pools = pools();
+    for_all(
+        "build-parallel==sequential",
+        200,
+        0xB111D_04,
+        |g| {
+            let rows = random_db(g);
+            // Vary the thresholds so pruning-heavy and pruning-light
+            // configurations are both exercised.
+            let minsup = [0.05, 0.12, 0.25][g.usize_in(0, 3)];
+            let minconf = [0.0, 0.5, 0.9][g.usize_in(0, 3)];
+            (rows, minsup, minconf)
+        },
+        |(rows, minsup, minconf)| {
+            shrink_vec(rows)
+                .into_iter()
+                .map(|r| (r, *minsup, *minconf))
+                .collect()
+        },
+        |(rows, minsup, minconf)| format!("minsup {minsup}, minconf {minconf}, rows {rows:?}"),
+        |(rows, minsup, minconf)| {
+            let Some(db) = to_db(rows) else { return Ok(()) };
+            check_build_parity(&db, *minsup, *minconf, &pools)
+        },
+    );
+}
+
+/// Repeated parallel builds are byte-identical — the dynamic task→thread
+/// assignment must never leak into any output.
+#[test]
+fn parallel_build_runs_are_deterministic() {
+    let db = paper_example_db();
+    let pool = WorkerPool::new(3);
+    let first_fi = fpgrowth_parallel(&db, 0.3, &pool);
+    let first_rs = generate_rules_parallel(&first_fi, RuleGenConfig::default(), &pool);
+    for _ in 0..5 {
+        let fi = fpgrowth_parallel(&db, 0.3, &pool);
+        assert_eq!(first_fi.sets, fi.sets);
+        let rs = generate_rules_parallel(&fi, RuleGenConfig::default(), &pool);
+        assert_eq!(first_rs.rules(), rs.rules());
+    }
+}
+
+/// The consequent-size cap must behave identically through the parallel
+/// path (it changes which consequents survive each level).
+#[test]
+fn parallel_rulegen_respects_max_consequent() {
+    let db = paper_example_db();
+    let fi = fpgrowth(&db, 0.3);
+    let pool = WorkerPool::new(3);
+    for max_consequent in [1usize, 2] {
+        let cfg = RuleGenConfig {
+            min_confidence: 0.0,
+            max_consequent,
+        };
+        let seq = generate_rules(&fi, cfg);
+        let par = generate_rules_parallel(&fi, cfg, &pool);
+        assert_eq!(seq.rules(), par.rules(), "max_consequent={max_consequent}");
+        assert!(par
+            .iter()
+            .all(|sr| sr.rule.consequent.len() <= max_consequent));
+    }
+}
+
+/// The paper's worked example, end to end through the parallel build: the
+/// same headline rule with the same metrics as the sequential pipeline.
+#[test]
+fn paper_example_survives_parallel_build() {
+    let db = paper_example_db();
+    let pool = WorkerPool::new(3);
+    let fi = fpgrowth_parallel(&db, 0.3, &pool);
+    let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+    let trie = TrieOfRules::from_sorted_paths(&fi, &order).unwrap();
+    let name = |s: &str| db.vocab().get(s).unwrap();
+    let rule = trie_of_rules::rules::rule::Rule::from_ids(
+        vec![name("f"), name("c")],
+        vec![name("a")],
+    );
+    match trie.find_rule(&rule) {
+        trie_of_rules::trie::trie::FindOutcome::Found(m) => {
+            assert!((m.support - 0.6).abs() < 1e-12);
+            assert!((m.confidence - 1.0).abs() < 1e-12);
+        }
+        other => panic!("expected Found, got {other:?}"),
+    }
+}
