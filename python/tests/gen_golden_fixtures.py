@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Generate the golden serialization fixtures under rust/tests/fixtures/.
+
+Mirrors, byte for byte, the rust writers in rust/src/trie/serialize.rs:
+
+* ``tiny_v2.tor`` — the current v2 columnar format (``save_to``),
+* ``tiny_v1.tor`` — the legacy v1 node-record format (``save_v1``),
+
+for the fixed tiny database below, mined at minsup 0.3 with the canonical
+frequency order (freq desc, item id asc on ties) and the sorted-path
+preorder construction of ``TrieOfRules::from_sorted_paths``. The rust test
+``rust/tests/serialization_golden.rs`` rebuilds the same trie through the
+real pipeline and asserts byte identity against these files — any format
+drift (magic, endianness, column order, preorder numbering, CSR layout)
+fails loudly.
+
+Run from the repo root:  python3 python/tests/gen_golden_fixtures.py
+"""
+
+import struct
+from itertools import combinations
+from pathlib import Path
+
+# The fixture database (item ids over a 4-item synthetic vocabulary;
+# rust side: Vocab::synthetic(4), one push_ids per row). Rows are already
+# sorted + deduped, matching TransactionDbBuilder::push_ids.
+ROWS = [
+    [0, 1, 2],
+    [0, 1],
+    [0, 2],
+    [1, 2],
+    [0, 1, 2, 3],
+    [2, 3],
+]
+NUM_ITEMS = 4
+MINSUP = 0.3
+
+ROOT = 0
+ROOT_ITEM = 0xFFFFFFFF
+
+
+def min_count(minsup: float, n: int) -> int:
+    """Mirror mining::counts::min_count (epsilon'd ceiling, floor 1)."""
+    import math
+
+    return max(int(math.ceil(minsup * n - 1e-9)), 1)
+
+
+def build_columns():
+    n = len(ROWS)
+    minc = min_count(MINSUP, n)
+    freqs = [0] * NUM_ITEMS
+    for row in ROWS:
+        for it in row:
+            freqs[it] += 1
+
+    # ItemOrder: frequency-descending, ties by ascending id.
+    frequent = [i for i in range(NUM_ITEMS) if freqs[i] >= minc]
+    frequent.sort(key=lambda i: (-freqs[i], i))
+    rank = {it: r for r, it in enumerate(frequent)}
+
+    # Complete frequent-itemset mining (brute force == fpgrowth output).
+    sets = []
+    for size in range(1, NUM_ITEMS + 1):
+        for combo in combinations(range(NUM_ITEMS), size):
+            count = sum(1 for row in ROWS if all(it in row for it in combo))
+            if count >= minc and all(it in rank for it in combo):
+                sets.append((combo, count))
+
+    # from_sorted_paths: frequency-order each itemset, sort paths
+    # lexicographically by item id, emit preorder columns via an
+    # ancestor stack.
+    paths = sorted(
+        ([sorted(combo, key=lambda i: rank[i]), count] for combo, count in sets),
+        key=lambda pc: pc[0],
+    )
+    items = [ROOT_ITEM]
+    counts = [n]
+    parents = [ROOT]
+    depths = [0]
+    stack = [ROOT]
+    prev = []
+    for path, count in paths:
+        common = 0
+        while common < len(path) and common < len(prev) and path[common] == prev[common]:
+            common += 1
+        assert common + 1 == len(path), "closure violated in fixture"
+        idx = len(items)
+        items.append(path[common])
+        counts.append(count)
+        parents.append(stack[common])
+        depths.append(len(path))
+        del stack[common + 1 :]
+        stack.append(idx)
+        prev = path
+
+    nn = len(items)
+    # subtree_end: reverse pass.
+    subtree_end = list(range(1, nn + 1))
+    for i in range(nn - 1, 0, -1):
+        p = parents[i]
+        subtree_end[p] = max(subtree_end[p], subtree_end[i])
+
+    # Child CSR (counting sort by parent; preorder fill keeps siblings
+    # item-sorted because sibling paths sort by item id).
+    child_offsets = [0] * (nn + 1)
+    for i in range(1, nn):
+        child_offsets[parents[i] + 1] += 1
+    for i in range(nn):
+        child_offsets[i + 1] += child_offsets[i]
+    cursor = list(child_offsets)
+    child_items = [0] * (nn - 1)
+    child_targets = [0] * (nn - 1)
+    for i in range(1, nn):
+        p = parents[i]
+        child_items[cursor[p]] = items[i]
+        child_targets[cursor[p]] = i
+        cursor[p] += 1
+
+    # Header CSR by item rank, ascending preorder.
+    num_ranks = len(frequent)
+    header_offsets = [0] * (num_ranks + 1)
+    for it in items[1:]:
+        header_offsets[rank[it] + 1] += 1
+    for r in range(num_ranks):
+        header_offsets[r + 1] += header_offsets[r]
+    hcursor = list(header_offsets)
+    header_nodes = [0] * (nn - 1)
+    for i in range(1, nn):
+        r = rank[items[i]]
+        header_nodes[hcursor[r]] = i
+        hcursor[r] += 1
+
+    return {
+        "n": n,
+        "minc": minc,
+        "freqs": freqs,
+        "items": items,
+        "counts": counts,
+        "parents": parents,
+        "depths": depths,
+        "subtree_end": subtree_end,
+        "child_offsets": child_offsets,
+        "child_items": child_items,
+        "child_targets": child_targets,
+        "header_offsets": header_offsets,
+        "header_nodes": header_nodes,
+    }
+
+
+def preamble(c, version: int) -> bytes:
+    out = b"TOR\x01"
+    out += struct.pack("<I", version)
+    out += struct.pack("<Q", c["n"])
+    out += struct.pack("<Q", c["minc"])
+    out += struct.pack("<I", NUM_ITEMS)
+    for f in c["freqs"]:
+        out += struct.pack("<Q", f)
+    out += b"\x00"  # vocab flag: not stored
+    return out
+
+
+def col(values, fmt) -> bytes:
+    out = struct.pack("<I", len(values))
+    for v in values:
+        out += struct.pack(fmt, v)
+    return out
+
+
+def v2_bytes(c) -> bytes:
+    out = preamble(c, 2)
+    out += col(c["items"], "<I")
+    out += col(c["counts"], "<Q")
+    out += col(c["parents"], "<I")
+    out += col(c["depths"], "<H")
+    out += col(c["subtree_end"], "<I")
+    out += col(c["child_offsets"], "<I")
+    out += col(c["child_items"], "<I")
+    out += col(c["child_targets"], "<I")
+    out += col(c["header_offsets"], "<I")
+    out += col(c["header_nodes"], "<I")
+    return out
+
+
+def v1_bytes(c) -> bytes:
+    out = preamble(c, 1)
+    nn = len(c["items"])
+    out += struct.pack("<I", nn - 1)
+    for i in range(1, nn):
+        out += struct.pack("<I", c["items"][i])
+        out += struct.pack("<I", c["parents"][i])
+        out += struct.pack("<Q", c["counts"][i])
+    return out
+
+
+def main():
+    c = build_columns()
+    fixtures = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures"
+    fixtures.mkdir(parents=True, exist_ok=True)
+    (fixtures / "tiny_v2.tor").write_bytes(v2_bytes(c))
+    (fixtures / "tiny_v1.tor").write_bytes(v1_bytes(c))
+    print(f"nodes (incl. root): {len(c['items'])}")
+    print(f"min_count: {c['minc']}  freqs: {c['freqs']}")
+    print(f"items:   {c['items']}")
+    print(f"counts:  {c['counts']}")
+    print(f"parents: {c['parents']}")
+    print(f"depths:  {c['depths']}")
+    print(f"v2: {len(v2_bytes(c))} bytes, v1: {len(v1_bytes(c))} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,619 @@
+#!/usr/bin/env python3
+"""Differential oracle for the incremental delta-trie (rust/src/trie/delta.rs).
+
+The container used to author the Rust has no cargo, so this script
+re-implements the delta algebra *line for line* in Python and checks it
+differentially against brute-force batch rebuilds:
+
+  * candidate completeness (partition lemma with the ceiling'd min_count),
+  * exact cumulative candidate counts under the batch-only counting rule,
+  * live[] / owned-overlay partition == the batch trie's node set,
+  * merged full-traversal sweep (base live sweep + overlay DFS) ==
+    batch trie sweep — emissions AND visited counters, under several
+    prune bounds,
+  * merged header access == batch header access (scanned/candidate
+    counters and emissions), for every item,
+  * merged support_of == batch support_of for random itemsets,
+  * compaction's maintained frequent set == batch-mined frequent set
+    (=> byte-identical from_sorted_paths snapshots).
+
+Run:  python3 python/tests/oracle_incremental.py  [cases]
+"""
+
+import math
+import random
+import sys
+
+# ---------------------------------------------------------------------
+# shared primitives (mirror mining::counts / trie construction)
+# ---------------------------------------------------------------------
+
+
+def min_count(minsup, n):
+    return max(int(math.ceil(minsup * n - 1e-9)), 1)
+
+
+def frequencies(rows, num_items):
+    freqs = [0] * num_items
+    for row in rows:
+        for it in row:
+            freqs[it] += 1
+    return freqs
+
+
+def item_order(freqs, minc):
+    frequent = [i for i in range(len(freqs)) if freqs[i] >= minc]
+    frequent.sort(key=lambda i: (-freqs[i], i))
+    rank = {}
+    for r, it in enumerate(frequent):
+        rank[it] = r
+    return rank
+
+
+def brute_frequent(rows, num_items, minc):
+    """Complete mining: every itemset with support >= minc (== fpgrowth)."""
+    from itertools import combinations
+
+    out = {}
+    items = list(range(num_items))
+    for size in range(1, num_items + 1):
+        any_at_size = False
+        for combo in combinations(items, size):
+            c = sum(1 for row in rows if set(combo) <= set(row))
+            if c >= minc:
+                out[frozenset(combo)] = c
+                any_at_size = True
+        if not any_at_size:
+            break
+    return out
+
+
+class Trie:
+    """Frozen preorder columns, built exactly like from_sorted_paths."""
+
+    def __init__(self, fi, rank, n):
+        paths = sorted(
+            (sorted(s, key=lambda i: rank[i]), c) for s, c in fi.items()
+        )
+        self.n = n
+        self.items = [None]
+        self.counts = [n]
+        self.parents = [0]
+        self.depths = [0]
+        stack = [0]
+        prev = []
+        for path, count in paths:
+            common = 0
+            while common < len(path) and common < len(prev) and path[common] == prev[common]:
+                common += 1
+            assert common + 1 == len(path), "closure violated"
+            idx = len(self.items)
+            self.items.append(path[common])
+            self.counts.append(count)
+            self.parents.append(stack[common])
+            self.depths.append(len(path))
+            del stack[common + 1 :]
+            stack.append(idx)
+            prev = path
+        nn = len(self.items)
+        self.subtree_end = list(range(1, nn + 1))
+        for i in range(nn - 1, 0, -1):
+            p = self.parents[i]
+            self.subtree_end[p] = max(self.subtree_end[p], self.subtree_end[i])
+        self.children = [dict() for _ in range(nn)]
+        for i in range(1, nn):
+            self.children[self.parents[i]][self.items[i]] = i
+
+    def walk(self, path):
+        cur = 0
+        for it in path:
+            cur = self.children[cur].get(it)
+            if cur is None:
+                return None
+        return cur
+
+    def path_items(self, idx):
+        rev = []
+        while idx != 0:
+            rev.append(self.items[idx])
+            idx = self.parents[idx]
+        rev.reverse()
+        return rev
+
+    def header(self, item):
+        return [i for i in range(1, len(self.items)) if self.items[i] == item]
+
+    def support_of(self, itemset, rank):
+        if any(i not in rank for i in itemset):
+            return None
+        node = self.walk(sorted(itemset, key=lambda i: rank[i]))
+        return None if node is None else self.counts[node]
+
+    def sweep(self, prune_bound, rank):
+        """for_each_rule_pruned_range(1..len): (visited, emissions).
+
+        Emission = (antecedent frozenset, consequent frozenset,
+        c_ac, c_a, c_c) with the same c_c rules the Rust uses.
+        """
+        n = self.n
+        visited = 0
+        out = []
+        path_items = []
+        path_counts = []
+        i = 1
+        nn = len(self.items)
+        while i < nn:
+            visited += 1
+            depth = self.depths[i]
+            del path_items[depth - 1 :]
+            del path_counts[depth - 1 :]
+            path_items.append(self.items[i])
+            path_counts.append(self.counts[i])
+            if self.counts[i] / n < prune_bound:
+                i = self.subtree_end[i]
+                continue
+            for split in range(1, depth):
+                conseq = path_items[split:]
+                if split == depth - 1:
+                    c_c = FREQS_CUM[self.items[i]]
+                else:
+                    s = self.support_of(conseq, rank)
+                    c_c = n if s is None else s
+                out.append(
+                    (
+                        tuple(sorted(path_items[:split])),
+                        tuple(sorted(conseq)),
+                        self.counts[i],
+                        path_counts[split - 1],
+                        c_c,
+                    )
+                )
+            i += 1
+        return visited, out
+
+    def header_access(self, item, prune_bound):
+        """run_header_slice counters + emissions."""
+        n = self.n
+        scanned = 0
+        cands = 0
+        out = []
+        for idx in self.header(item):
+            scanned += 1
+            if self.depths[idx] < 2:
+                continue
+            if self.counts[idx] / n < prune_bound:
+                continue
+            cands += 1
+            path = self.path_items(idx)
+            out.append(
+                (
+                    tuple(sorted(path[:-1])),
+                    tuple(path[-1:]),
+                    self.counts[idx],
+                    self.counts[self.parents[idx]],
+                    FREQS_CUM[self.items[idx]],
+                )
+            )
+        return scanned, cands, out
+
+
+# Global cumulative freqs used for the single-consequent c_c (mirrors
+# order.frequency(item)); set per comparison.
+FREQS_CUM = None
+
+
+# ---------------------------------------------------------------------
+# the incremental store (mirror of IncrementalTrie + DeltaOverlay)
+# ---------------------------------------------------------------------
+
+
+class Incremental:
+    def __init__(self, rows, num_items, minsup):
+        self.num_items = num_items
+        self.minsup = minsup
+        self.base_rows = [sorted(set(r)) for r in rows]
+        n = len(self.base_rows)
+        minc = min_count(minsup, n)
+        self.base_freqs = frequencies(self.base_rows, num_items)
+        self.base_rank = item_order(self.base_freqs, minc)
+        self.fi = brute_frequent(self.base_rows, num_items, minc)
+        self.base = Trie(self.fi, self.base_rank, n)
+        self.cands = dict(self.fi)
+        self.pending = []
+        self.pending_freqs = [0] * num_items
+        self.add = [0] * len(self.base.items)
+        self.epoch = 0
+
+    # -- ingest --------------------------------------------------------
+    def ingest(self, txs):
+        batch = [sorted(set(t)) for t in txs]
+        if not batch:
+            return
+        bn = len(batch)
+        fi_batch = brute_frequent(batch, self.num_items, min_count(self.minsup, bn))
+        count_in = lambda rows, s: sum(1 for r in rows if s <= set(r))
+        # existing candidates += batch counts
+        for s in list(self.cands):
+            self.cands[s] += count_in(batch, s)
+        # new candidates: base + previous pending + batch
+        for s, c_batch in fi_batch.items():
+            if s not in self.cands:
+                self.cands[s] = (
+                    count_in(self.base_rows, s) + count_in(self.pending, s) + c_batch
+                )
+        # add[] subset walk + pending
+        for t in batch:
+            seq = sorted(
+                (i for i in t if i in self.base_rank), key=lambda i: self.base_rank[i]
+            )
+            self._walk_add(0, seq, 0)
+            for it in t:
+                self.pending_freqs[it] += 1
+            self.pending.append(t)
+        self._rebuild_overlay()
+
+    def _walk_add(self, node, seq, pos):
+        for k in range(pos, len(seq)):
+            child = self.base.children[node].get(seq[k])
+            if child is not None:
+                self.add[child] += 1
+                self._walk_add(child, seq, k + 1)
+
+    def cum_params(self):
+        n = len(self.base_rows) + len(self.pending)
+        minc = min_count(self.minsup, n)
+        freqs = [a + b for a, b in zip(self.base_freqs, self.pending_freqs)]
+        return n, minc, freqs
+
+    # -- overlay (DeltaOverlay::build) ---------------------------------
+    def _rebuild_overlay(self):
+        if not self.pending:
+            self.overlay = None
+            return
+        n, minc, freqs = self.cum_params()
+        rank = item_order(freqs, minc)
+        base = self.base
+        nn = len(base.items)
+        live = [False] * nn
+        live[0] = True
+        for i in range(1, nn):
+            p = base.parents[i]
+            ok = live[p] and base.items[i] in rank
+            if ok and p != 0:
+                ok = rank[base.items[i]] > rank[base.items[p]]
+            ok = ok and base.counts[i] + self.add[i] >= minc
+            live[i] = ok
+        epaths = []
+        for s, c in self.cands.items():
+            if c < minc:
+                continue
+            path = sorted(s, key=lambda i: rank[i])
+            node = base.walk(path)
+            if node is not None and live[node]:
+                continue
+            epaths.append((path, c))
+        epaths.sort()
+        # overlay trie
+        ov_items = [None]
+        ov_counts = [n]
+        ov_parents = [0]
+        ov_depths = [0]
+        ov_owned = [False]
+        ov_children = [dict()]
+        for path, c in epaths:
+            cur = 0
+            for d in range(1, len(path) + 1):
+                it = path[d - 1]
+                nxt = ov_children[cur].get(it)
+                if nxt is None:
+                    cnt = c if d == len(path) else self.cands[frozenset(path[:d])]
+                    nxt = len(ov_items)
+                    ov_items.append(it)
+                    ov_counts.append(cnt)
+                    ov_parents.append(cur)
+                    ov_depths.append(d)
+                    ov_owned.append(False)
+                    ov_children.append(dict())
+                    ov_children[cur][it] = nxt
+                cur = nxt
+            ov_owned[cur] = True
+        self.overlay = {
+            "n": n,
+            "minc": minc,
+            "rank": rank,
+            "freqs": freqs,
+            "live": live,
+            "items": ov_items,
+            "counts": ov_counts,
+            "parents": ov_parents,
+            "depths": ov_depths,
+            "owned": ov_owned,
+            "children": ov_children,
+        }
+
+    # -- merged lookups -------------------------------------------------
+    def merged_support_ordered(self, path):
+        ov = self.overlay
+        cur = 0
+        ok = True
+        for it in path:
+            nxt = ov["children"][cur].get(it)
+            if nxt is None:
+                ok = False
+                break
+            cur = nxt
+        if ok and cur != 0:
+            return ov["counts"][cur]
+        node = self.base.walk(path)
+        if node is not None and ov["live"][node]:
+            return self.base.counts[node] + self.add[node]
+        return None
+
+    def merged_support_of(self, itemset):
+        ov = self.overlay
+        if any(i not in ov["rank"] for i in itemset):
+            return None
+        return self.merged_support_ordered(
+            sorted(itemset, key=lambda i: ov["rank"][i])
+        )
+
+    # -- merged sweeps ---------------------------------------------------
+    def merged_sweep(self, prune_bound):
+        ov = self.overlay
+        base = self.base
+        n = ov["n"]
+        visited = 0
+        out = []
+        # base half
+        path_items = []
+        path_counts = []
+        i = 1
+        nn = len(base.items)
+        while i < nn:
+            if not ov["live"][i]:
+                i = base.subtree_end[i]
+                continue
+            visited += 1
+            depth = base.depths[i]
+            mc = base.counts[i] + self.add[i]
+            del path_items[depth - 1 :]
+            del path_counts[depth - 1 :]
+            path_items.append(base.items[i])
+            path_counts.append(mc)
+            if mc / n < prune_bound:
+                i = base.subtree_end[i]
+                continue
+            for split in range(1, depth):
+                conseq = path_items[split:]
+                if split == depth - 1:
+                    c_c = ov["freqs"][base.items[i]]
+                else:
+                    s = self.merged_support_ordered(conseq)
+                    c_c = n if s is None else s
+                out.append(
+                    (
+                        tuple(sorted(path_items[:split])),
+                        tuple(sorted(conseq)),
+                        mc,
+                        path_counts[split - 1],
+                        c_c,
+                    )
+                )
+            i += 1
+        # delta half (stack DFS)
+        stack = [(c, 1) for _, c in sorted(ov["children"][0].items(), reverse=True)]
+        path_items = []
+        path_counts = []
+        while stack:
+            idx, depth = stack.pop()
+            del path_items[depth - 1 :]
+            del path_counts[depth - 1 :]
+            path_items.append(ov["items"][idx])
+            path_counts.append(ov["counts"][idx])
+            if ov["owned"][idx]:
+                visited += 1
+            if ov["counts"][idx] / n < prune_bound:
+                continue
+            if ov["owned"][idx]:
+                for split in range(1, depth):
+                    conseq = path_items[split:]
+                    if split == depth - 1:
+                        c_c = ov["freqs"][ov["items"][idx]]
+                    else:
+                        s = self.merged_support_ordered(conseq)
+                        c_c = n if s is None else s
+                    out.append(
+                        (
+                            tuple(sorted(path_items[:split])),
+                            tuple(sorted(conseq)),
+                            ov["counts"][idx],
+                            path_counts[split - 1],
+                            c_c,
+                        )
+                    )
+            for _, c in sorted(ov["children"][idx].items(), reverse=True):
+                stack.append((c, depth + 1))
+        return visited, out
+
+    def merged_header(self, item, prune_bound):
+        ov = self.overlay
+        base = self.base
+        n = ov["n"]
+        scanned = 0
+        cands = 0
+        out = []
+        for idx in base.header(item):
+            if not ov["live"][idx]:
+                continue
+            scanned += 1
+            if base.depths[idx] < 2:
+                continue
+            mc = base.counts[idx] + self.add[idx]
+            if mc / n < prune_bound:
+                continue
+            cands += 1
+            path = base.path_items(idx)
+            p = base.parents[idx]
+            c_a = n if p == 0 else base.counts[p] + self.add[p]
+            out.append(
+                (tuple(sorted(path[:-1])), tuple(path[-1:]), mc, c_a, ov["freqs"][item])
+            )
+        # overlay owned nodes carrying the item, preorder
+        for idx in range(1, len(ov["items"])):
+            if ov["items"][idx] != item or not ov["owned"][idx]:
+                continue
+            scanned += 1
+            if ov["depths"][idx] < 2:
+                continue
+            c = ov["counts"][idx]
+            if c / n < prune_bound:
+                continue
+            cands += 1
+            # reconstruct path
+            rev = []
+            cur = idx
+            while cur != 0:
+                rev.append(ov["items"][cur])
+                cur = ov["parents"][cur]
+            rev.reverse()
+            c_a = ov["counts"][ov["parents"][idx]]
+            out.append(
+                (tuple(sorted(rev[:-1])), tuple(rev[-1:]), c, c_a, ov["freqs"][item])
+            )
+        return scanned, cands, out
+
+    # -- compaction ------------------------------------------------------
+    def compact(self):
+        if not self.pending:
+            return False
+        n, minc, freqs = self.cum_params()
+        fi = {s: c for s, c in self.cands.items() if c >= minc}
+        rank = item_order(freqs, minc)
+        self.base_rows = self.base_rows + self.pending
+        self.base_freqs = freqs
+        self.base_rank = rank
+        self.fi = fi
+        self.base = Trie(fi, rank, n)
+        self.cands = dict(fi)
+        self.pending = []
+        self.pending_freqs = [0] * self.num_items
+        self.add = [0] * len(self.base.items)
+        self.overlay = None
+        self.epoch += 1
+        return True
+
+
+# ---------------------------------------------------------------------
+# the differential check
+# ---------------------------------------------------------------------
+
+
+def check_case(rng, case_id):
+    global FREQS_CUM
+    num_items = rng.randint(3, 8)
+    minsup = rng.choice([0.1, 0.2, 0.35])
+    base_rows = [
+        sorted(set(rng.randint(0, num_items - 1) for _ in range(rng.randint(1, 5))))
+        for _ in range(rng.randint(4, 30))
+    ]
+    inc = Incremental(base_rows, num_items, minsup)
+    cumulative = [list(r) for r in inc.base_rows]
+
+    for step in range(rng.randint(1, 6)):
+        if rng.random() < 0.75 or not inc.pending:
+            batch = [
+                sorted(
+                    set(rng.randint(0, num_items - 1) for _ in range(rng.randint(1, 5)))
+                )
+                for _ in range(rng.randint(1, 6))
+            ]
+            inc.ingest(batch)
+            cumulative.extend(batch)
+        else:
+            inc.compact()
+
+        # batch oracle on cumulative data
+        n = len(cumulative)
+        minc = min_count(minsup, n)
+        freqs = frequencies(cumulative, num_items)
+        rank = item_order(freqs, minc)
+        fi = brute_frequent(cumulative, num_items, minc)
+        batch_trie = Trie(fi, rank, n)
+        FREQS_CUM = freqs
+
+        if inc.overlay is None:
+            # compacted (or never ingested): frozen base must equal batch.
+            assert inc.base.items == batch_trie.items, f"case {case_id}: items col"
+            assert inc.base.counts == batch_trie.counts, f"case {case_id}: counts col"
+            assert inc.base.parents == batch_trie.parents, f"case {case_id}: parents"
+            assert inc.fi == fi, f"case {case_id}: compacted fi"
+            continue
+
+        ov = inc.overlay
+        assert ov["n"] == n and ov["minc"] == minc and ov["freqs"] == freqs
+        assert ov["rank"] == rank, f"case {case_id}: cumulative order"
+
+        # candidate exactness for every cumulative-frequent itemset
+        for s, c in fi.items():
+            assert inc.cands.get(s) == c, (
+                f"case {case_id} step {step}: candidate {set(s)} "
+                f"count {inc.cands.get(s)} != {c}"
+            )
+
+        # merged sweep == batch sweep, several prune bounds
+        for bound in [0.0, 0.15, 0.4, 0.9]:
+            bv, brows = batch_trie.sweep(bound, rank)
+            mv, mrows = inc.merged_sweep(bound)
+            assert bv == mv, (
+                f"case {case_id} step {step} bound {bound}: visited {mv} != {bv}"
+            )
+            assert sorted(brows) == sorted(mrows), (
+                f"case {case_id} step {step} bound {bound}: emissions differ "
+                f"({len(mrows)} vs {len(brows)})"
+            )
+
+        # merged header == batch header, every item, two bounds
+        for item in range(num_items):
+            for bound in [0.0, 0.3]:
+                bs, bc, brows = batch_trie.header_access(item, bound)
+                ms, mc, mrows = inc.merged_header(item, bound)
+                assert (bs, bc) == (ms, mc), (
+                    f"case {case_id} step {step} item {item}: header counters "
+                    f"({ms},{mc}) != ({bs},{bc})"
+                )
+                assert sorted(brows) == sorted(mrows), (
+                    f"case {case_id} step {step} item {item}: header rows differ"
+                )
+
+        # merged support == batch support for random itemsets
+        for _ in range(12):
+            size = rng.randint(1, 3)
+            probe = set()
+            while len(probe) < size:
+                probe.add(rng.randint(0, num_items - 1))
+            want = batch_trie.support_of(probe, rank)
+            got = inc.merged_support_of(probe)
+            assert got == want, (
+                f"case {case_id} step {step}: support {probe} {got} != {want}"
+            )
+
+    # final compaction parity
+    if inc.pending:
+        inc.compact()
+    n = len(cumulative)
+    fi = brute_frequent(cumulative, num_items, min_count(minsup, n))
+    assert inc.fi == fi, f"case {case_id}: final compacted fi differs"
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 300
+    rng = random.Random(0xDE17A)
+    for case_id in range(cases):
+        check_case(rng, case_id)
+        if (case_id + 1) % 50 == 0:
+            print(f"  {case_id + 1}/{cases} cases ok")
+    print(f"oracle_incremental: {cases} randomized update streams, 0 mismatches")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,32 +13,45 @@
 //! "hot item ⇒ cheap query" is exactly backwards.
 //!
 //! Flags (after `--`): `--test` runs a fast smoke (smaller workload, CI's
-//! release-mode gate), `--query-threads N` caps the thread sweep. Results
-//! go to the console, `bench_results/rql_throughput.json`, and the
-//! machine-readable cross-PR snapshot `BENCH_rql.json` (ops/s, p50/p99,
-//! thread sweep — see `bench_support::report::BenchReport`).
+//! release-mode gate), `--query-threads N` caps the thread sweep, and
+//! `--incremental` switches to the streaming-update benchmark: ingest
+//! throughput through the delta overlay, query latency *while a
+//! compaction runs concurrently* (snapshot pinning means queries never
+//! block on it), and the compaction wall time — written to
+//! `BENCH_incremental.json`. Results go to the console,
+//! `bench_results/rql_throughput.json`, and the machine-readable cross-PR
+//! snapshot `BENCH_rql.json` (ops/s, p50/p99, thread sweep — see
+//! `bench_support::report::BenchReport`).
 
 use trie_of_rules::bench_support::harness::bench_each;
 use trie_of_rules::bench_support::report::{BenchReport, Report};
 use trie_of_rules::bench_support::workloads::{self, rql_queries, QuerySkew};
+use trie_of_rules::data::generator::GeneratorConfig;
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::fpgrowth;
 use trie_of_rules::query::parallel::ParallelExecutor;
 use trie_of_rules::query::{query_frame, query_trie};
 use trie_of_rules::stats::descriptive::Summary;
+use trie_of_rules::trie::delta::IncrementalTrie;
+use trie_of_rules::trie::trie::TrieOfRules;
 
 struct Args {
     test: bool,
+    incremental: bool,
     query_threads: usize,
 }
 
 fn parse_args() -> Args {
     let mut args = Args {
         test: false,
+        incremental: false,
         query_threads: 8,
     };
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
         match arg.as_str() {
             "--test" => args.test = true,
+            "--incremental" => args.incremental = true,
             "--query-threads" => {
                 args.query_threads = it
                     .next()
@@ -53,8 +66,160 @@ fn parse_args() -> Args {
     args
 }
 
+/// The `--incremental` benchmark: ingest throughput, query latency during
+/// a concurrent compaction, and parity gates against a batch rebuild.
+fn run_incremental(args: &Args) {
+    // Ingest batches are sized so the batch-relative mining threshold
+    // stays meaningfully above 1 (minsup · batch_len ≥ ~4): a tiny batch
+    // at a small relative minsup would mine at absolute threshold 1 and
+    // enumerate every subset of every basket (DESIGN.md §13, costs).
+    let (minsup, num_queries, extra_tx, batch_len) = if args.test {
+        (0.01, 40, 800, 400)
+    } else {
+        (0.005, 120, 3000, 1000)
+    };
+    let w = workloads::groceries(minsup);
+    let vocab = w.db.vocab().clone();
+    eprintln!(
+        "[rql_throughput --incremental] {} trie nodes, ingesting {extra_tx} tx in batches of {batch_len}",
+        w.trie.num_nodes()
+    );
+    let mut store = IncrementalTrie::new(w.trie.clone(), w.db.clone(), &w.frequent, minsup)
+        .expect("incremental store");
+    let exec = ParallelExecutor::new(args.query_threads);
+    let qw = rql_queries(&w, num_queries, QuerySkew::Zipf(1.1), 0x1_4C4);
+
+    // Fresh traffic from the same generator family, different seed.
+    let mut gen = GeneratorConfig::groceries_like();
+    gen.seed = 0xFEED;
+    gen.num_transactions = extra_tx;
+    let extra_db = gen.generate();
+    assert!(extra_db.num_items() <= w.db.num_items(), "vocab mismatch");
+    let extra: Vec<Vec<u32>> = extra_db.iter().map(|t| t.to_vec()).collect();
+
+    let mut report =
+        Report::new("Incremental serving: ingest throughput + latency under compaction");
+    let mut bench = BenchReport::new("incremental");
+
+    // -- ingest throughput -------------------------------------------------
+    let mut batch_times: Vec<f64> = Vec::new();
+    for batch in extra.chunks(batch_len) {
+        let t0 = std::time::Instant::now();
+        store.ingest(batch).expect("ingest");
+        batch_times.push(t0.elapsed().as_secs_f64());
+    }
+    let ingest_total: f64 = batch_times.iter().sum();
+    let ingest_tx_s = extra.len() as f64 / ingest_total.max(1e-12);
+    report.row(
+        "ingest",
+        &[
+            ("tx_s", ingest_tx_s),
+            ("batches", batch_times.len() as f64),
+            ("delta_nodes", store.delta_nodes() as f64),
+        ],
+    );
+    bench.samples("ingest-batch", &batch_times, &[("tx_s", ingest_tx_s)]);
+
+    // -- parity gate: merged view == batch rebuild on cumulative data ------
+    let mut builder =
+        trie_of_rules::data::transaction::TransactionDb::builder(vocab.clone());
+    for tx in w.db.iter() {
+        builder.push_ids(tx.to_vec());
+    }
+    for tx in &extra {
+        builder.push_ids(tx.clone());
+    }
+    let cum_db = builder.build();
+    let cum_fi = fpgrowth(&cum_db, minsup);
+    let cum_order = ItemOrder::new(&cum_db, min_count(minsup, cum_db.num_transactions()));
+    let batch_trie = TrieOfRules::from_sorted_paths(&cum_fi, &cum_order).expect("batch build");
+    let view = store.view();
+    for q in qw.queries.iter().take(20) {
+        let want = query_trie(&batch_trie, &vocab, q).expect("batch query").into_rows();
+        let got = exec.query_view(&view, &vocab, q).expect("merged query").into_rows();
+        assert_eq!(want.rows, got.rows, "incremental parity broke on `{q}`");
+        assert_eq!(want.stats, got.stats, "incremental counters broke on `{q}`");
+    }
+
+    // -- query latency during a concurrent compaction ----------------------
+    // Queries pin the pre-compaction view; the compaction runs on its own
+    // thread and swaps nothing out from under them.
+    let (store_back, compact_s, during_times) = {
+        let view = store.view();
+        let handle = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            store.compact(None).expect("compact");
+            (store, t0.elapsed().as_secs_f64())
+        });
+        let during_times = bench_each(&qw.queries, 0, |q| {
+            std::hint::black_box(
+                exec.query_view(&view, &vocab, q)
+                    .unwrap()
+                    .into_rows()
+                    .rows
+                    .len(),
+            )
+        });
+        let (store, compact_s) = handle.join().expect("compaction thread");
+        (store, compact_s, during_times)
+    };
+    let store = store_back;
+    let during = Summary::of(&during_times);
+    report.row(
+        "query-during-compaction",
+        &[
+            ("mean_s", during.mean),
+            ("p95_s", during.p95),
+            ("qps", 1.0 / during.mean.max(1e-12)),
+        ],
+    );
+    bench.samples(
+        "query-during-compaction",
+        &during_times,
+        &[("threads", args.query_threads as f64), ("compact_s", compact_s)],
+    );
+    report.row("compaction", &[("mean_s", compact_s)]);
+
+    // -- post-compaction latency (frozen again) ----------------------------
+    let view = store.view();
+    assert!(view.overlay.is_none(), "compaction left a delta behind");
+    let mut post_bytes = Vec::new();
+    trie_of_rules::trie::serialize::save_to(&view.base, Some(&vocab), &mut post_bytes).unwrap();
+    let mut batch_bytes = Vec::new();
+    trie_of_rules::trie::serialize::save_to(&batch_trie, Some(&vocab), &mut batch_bytes).unwrap();
+    assert_eq!(post_bytes, batch_bytes, "compacted snapshot != batch rebuild bytes");
+    let after_times = bench_each(&qw.queries, 0, |q| {
+        std::hint::black_box(
+            exec.query_view(&view, &vocab, q)
+                .unwrap()
+                .into_rows()
+                .rows
+                .len(),
+        )
+    });
+    let after = Summary::of(&after_times);
+    report.row(
+        "query-post-compaction",
+        &[
+            ("mean_s", after.mean),
+            ("p95_s", after.p95),
+            ("qps", 1.0 / after.mean.max(1e-12)),
+        ],
+    );
+    bench.samples("query-post-compaction", &after_times, &[]);
+
+    print!("{}", report.render());
+    report.save("rql_incremental").expect("save results");
+    let path = bench.save().expect("save BENCH_incremental.json");
+    eprintln!("[rql_throughput --incremental] wrote {}", path.display());
+}
+
 fn main() {
     let args = parse_args();
+    if args.incremental {
+        run_incremental(&args);
+        return;
+    }
     let (minsup, num_queries) = if args.test { (0.01, 60) } else { (0.005, 200) };
     let w = workloads::groceries(minsup);
     eprintln!(

@@ -81,8 +81,10 @@ impl Default for PipelineOpts {
 #[derive(Debug)]
 pub enum Command {
     Pipeline(PipelineOpts, Option<PathBuf>),
-    Query(PipelineOpts, Vec<String>, Option<PathBuf>),
-    Serve(PipelineOpts, u16),
+    /// (opts, commands, --load-trie, --replay-delta)
+    Query(PipelineOpts, Vec<String>, Option<PathBuf>, Option<PathBuf>),
+    /// (opts, port, --replay-delta)
+    Serve(PipelineOpts, u16, Option<PathBuf>),
     Show(PipelineOpts, usize),
     Dot(PipelineOpts, Option<PathBuf>),
     Export {
@@ -124,6 +126,8 @@ USAGE:
   tor pipeline [opts] [--save-trie FILE]   run the pipeline, print the report
   tor query [opts] --cmd CMD...            run pipeline, execute query commands
         [--load-trie FILE]                 ...or serve them from a saved trie
+        [--replay-delta FILE]              replay a SNAPSHOT .delta sidecar into
+                                           the pipeline-built incremental engine
 
 QUERY COMMANDS (RQL — see DESIGN.md §7-8):
   RULES [WHERE pred [AND pred]...] [SORT BY metric [ASC|DESC]] [LIMIT k]
@@ -136,7 +140,13 @@ QUERY COMMANDS (RQL — see DESIGN.md §7-8):
   FIND a,b => c | SUPPORT a,b | TOP metric k | CONSEQ c | STATS
                                  legacy point commands (TOP and CONSEQ are
                                  sugar desugared to RQL)
+  INGEST a,b,c;d,e | COMPACT | SNAPSHOT /path
+                                 incremental serving: absorb transactions
+                                 online (the delta overlay serves merged,
+                                 batch-parity results), merge the delta into
+                                 a fresh frozen snapshot, persist it
   tor serve [opts] --port P      run pipeline, serve the TCP query protocol
+        [--replay-delta FILE]    ...replaying a .delta sidecar first
   tor show [opts] [--depth N]    render the trie as an ASCII tree
   tor dot  [opts] [--out FILE]   export the trie as Graphviz DOT
   tor export [opts] --out FILE [--format csv|jsonl]   export the ruleset
@@ -153,6 +163,9 @@ PIPELINE OPTS:
   --query-threads N                 query-executor parallelism for serve/query
                                     (default 0 = auto: available cores capped
                                     at 8; 1 = sequential) — shown in STATS
+  --compact-threshold N             auto-compact the ingest delta once N
+                                    transactions are pending (default 0 =
+                                    only on explicit COMPACT)
   --transactions N --seed N         generator overrides
   --config FILE                     key=value config file
   --set key=value                   single config override (repeatable)
@@ -176,7 +189,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
             Ok(Command::Pipeline(opts, save))
         }
         "query" => {
-            let (opts, extras) = parse_pipeline_opts_with(rest, &["--cmd", "--load-trie"])?;
+            let (opts, extras) =
+                parse_pipeline_opts_with(rest, &["--cmd", "--load-trie", "--replay-delta"])?;
             let cmds: Vec<String> = extras
                 .iter()
                 .filter(|(k, _)| k == "--cmd")
@@ -186,8 +200,17 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .iter()
                 .find(|(k, _)| k == "--load-trie")
                 .map(|(_, v)| PathBuf::from(v));
+            let replay = extras
+                .iter()
+                .find(|(k, _)| k == "--replay-delta")
+                .map(|(_, v)| PathBuf::from(v));
             anyhow::ensure!(!cmds.is_empty(), "query requires at least one --cmd");
-            Ok(Command::Query(opts, cmds, load))
+            anyhow::ensure!(
+                load.is_none() || replay.is_none(),
+                "--replay-delta needs the pipeline-built incremental engine; it cannot \
+                 combine with --load-trie (a loaded snapshot has no base database)"
+            );
+            Ok(Command::Query(opts, cmds, load, replay))
         }
         "export" => {
             let (opts, extras) = parse_pipeline_opts_with(rest, &["--format", "--out"])?;
@@ -204,7 +227,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
             Ok(Command::Export { opts, format, out })
         }
         "serve" => {
-            let (opts, extras) = parse_pipeline_opts_with(rest, &["--port"])?;
+            let (opts, extras) = parse_pipeline_opts_with(rest, &["--port", "--replay-delta"])?;
             let port = extras
                 .iter()
                 .find(|(k, _)| k == "--port")
@@ -212,7 +235,11 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .1
                 .parse::<u16>()
                 .context("bad --port")?;
-            Ok(Command::Serve(opts, port))
+            let replay = extras
+                .iter()
+                .find(|(k, _)| k == "--replay-delta")
+                .map(|(_, v)| PathBuf::from(v));
+            Ok(Command::Serve(opts, port, replay))
         }
         "show" => {
             let (opts, extras) = parse_pipeline_opts_with(rest, &["--depth"])?;
@@ -305,6 +332,9 @@ fn parse_pipeline_opts_with(
             "--query-threads" => {
                 opts.config.set("query_threads", &value("--query-threads")?)?
             }
+            "--compact-threshold" => {
+                opts.config.set("compact_threshold", &value("--compact-threshold")?)?
+            }
             "--config" => {
                 opts.config = PipelineConfig::load(&PathBuf::from(value("--config")?))?;
             }
@@ -354,7 +384,7 @@ mod tests {
     fn parses_query_with_cmds() {
         let cmd = parse(&argv("query --dataset tiny --minsup 0.05 --cmd STATS")).unwrap();
         match cmd {
-            Command::Query(_, cmds, _) => assert_eq!(cmds, vec!["STATS".to_string()]),
+            Command::Query(_, cmds, _, _) => assert_eq!(cmds, vec!["STATS".to_string()]),
             other => panic!("{other:?}"),
         }
     }
@@ -367,7 +397,7 @@ mod tests {
     #[test]
     fn parses_serve_port() {
         match parse(&argv("serve --dataset tiny --port 7878")).unwrap() {
-            Command::Serve(_, port) => assert_eq!(port, 7878),
+            Command::Serve(_, port, _) => assert_eq!(port, 7878),
             other => panic!("{other:?}"),
         }
     }
@@ -375,7 +405,7 @@ mod tests {
     #[test]
     fn parses_query_threads() {
         match parse(&argv("serve --dataset tiny --port 7878 --query-threads 4")).unwrap() {
-            Command::Serve(o, _) => assert_eq!(o.config.query_threads, 4),
+            Command::Serve(o, _, _) => assert_eq!(o.config.query_threads, 4),
             other => panic!("{other:?}"),
         }
         match parse(&argv("query --dataset tiny --cmd STATS --query-threads 1")).unwrap() {
@@ -383,6 +413,42 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(parse(&argv("serve --port 1 --query-threads nope")).is_err());
+    }
+
+    #[test]
+    fn parses_replay_delta() {
+        match parse(&argv(
+            "serve --dataset tiny --port 7878 --replay-delta /tmp/s.tor.delta",
+        ))
+        .unwrap()
+        {
+            Command::Serve(_, _, Some(p)) => assert_eq!(p, PathBuf::from("/tmp/s.tor.delta")),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv(
+            "query --dataset tiny --cmd STATS --replay-delta /tmp/s.tor.delta",
+        ))
+        .unwrap()
+        {
+            Command::Query(_, _, None, Some(p)) => {
+                assert_eq!(p, PathBuf::from("/tmp/s.tor.delta"))
+            }
+            other => panic!("{other:?}"),
+        }
+        // A loaded snapshot has no base database to replay into.
+        assert!(parse(&argv(
+            "query --load-trie /tmp/t.tor --replay-delta /tmp/s.tor.delta --cmd STATS"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn parses_compact_threshold() {
+        match parse(&argv("serve --dataset tiny --port 7878 --compact-threshold 128")).unwrap() {
+            Command::Serve(o, _, _) => assert_eq!(o.config.compact_threshold, 128),
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --port 1 --compact-threshold nope")).is_err());
     }
 
     #[test]
@@ -425,7 +491,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match parse(&argv("query --load-trie /tmp/t.tor --cmd STATS")).unwrap() {
-            Command::Query(_, cmds, Some(p)) => {
+            Command::Query(_, cmds, Some(p), _) => {
                 assert_eq!(cmds, vec!["STATS".to_string()]);
                 assert_eq!(p, PathBuf::from("/tmp/t.tor"));
             }

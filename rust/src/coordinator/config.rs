@@ -59,6 +59,10 @@ pub struct PipelineConfig {
     /// overlapped build stages): 0 = auto (available cores, capped — see
     /// [`crate::query::parallel::default_query_threads`]), 1 = sequential.
     pub query_threads: usize,
+    /// Incremental serving: auto-compact the delta into a fresh frozen
+    /// snapshot once this many ingested transactions are pending
+    /// (`--compact-threshold`; 0 = compact only on explicit `COMPACT`).
+    pub compact_threshold: usize,
 }
 
 impl Default for PipelineConfig {
@@ -73,6 +77,7 @@ impl Default for PipelineConfig {
             queue_capacity: 16,
             shard_slots: 64,
             query_threads: 0,
+            compact_threshold: 0,
         }
     }
 }
@@ -96,6 +101,7 @@ impl PipelineConfig {
             "queue_capacity" => self.queue_capacity = parse_usize_min(value, 1)?,
             "shard_slots" => self.shard_slots = parse_usize_min(value, 1)?,
             "query_threads" => self.query_threads = parse_usize_min(value, 0)?,
+            "compact_threshold" => self.compact_threshold = parse_usize_min(value, 0)?,
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -144,7 +150,7 @@ impl PipelineConfig {
     /// Render as a `key=value` block (round-trips through `load`).
     pub fn render(&self) -> String {
         format!(
-            "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\nquery_threads={}\n",
+            "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\nquery_threads={}\ncompact_threshold={}\n",
             self.minsup,
             self.min_confidence,
             self.miner.name(),
@@ -153,7 +159,8 @@ impl PipelineConfig {
             self.chunk_size,
             self.queue_capacity,
             self.shard_slots,
-            self.query_threads
+            self.query_threads,
+            self.compact_threshold
         )
     }
 }
@@ -203,6 +210,16 @@ mod tests {
         assert!(c.set("query_threads", "nope").is_err());
         // Round-trips through render/load like every other key.
         assert!(c.render().contains("query_threads=3"), "{}", c.render());
+    }
+
+    #[test]
+    fn compact_threshold_roundtrips() {
+        let mut c = PipelineConfig::default();
+        assert_eq!(c.compact_threshold, 0);
+        c.set("compact_threshold", "256").unwrap();
+        assert_eq!(c.compact_threshold, 256);
+        assert!(c.render().contains("compact_threshold=256"), "{}", c.render());
+        assert!(c.set("compact_threshold", "nope").is_err());
     }
 
     #[test]

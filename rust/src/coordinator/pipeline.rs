@@ -60,10 +60,36 @@ pub struct PipelineOutput {
     pub db: TransactionDb,
     pub order: ItemOrder,
     pub frequent: FrequentItemsets,
+    /// The complete (subset-closed) frequent collection the trie and the
+    /// ruleset were built from — identical to `frequent` except under the
+    /// FP-max miner, whose own output is maximal-only. The incremental
+    /// serving layer seeds its candidate table from this.
+    pub closed: FrequentItemsets,
     pub ruleset: RuleSet,
     pub trie: TrieOfRules,
     pub frame: RuleFrame,
     pub report: PipelineReport,
+}
+
+impl PipelineOutput {
+    /// Convert a pipeline run into the incremental serving store (the
+    /// `INGEST`/`COMPACT` stage of the service): the trie keeps serving as
+    /// the frozen base while the retained database and candidate counts
+    /// let ingested batches merge exactly. Returns the store, the
+    /// vocabulary (for the engine), and the build report.
+    pub fn into_incremental(
+        self,
+        config: &PipelineConfig,
+    ) -> Result<(crate::trie::delta::IncrementalTrie, Vocab, PipelineReport)> {
+        let vocab = self.db.vocab().clone();
+        let store = crate::trie::delta::IncrementalTrie::new(
+            self.trie,
+            self.db,
+            &self.closed,
+            config.minsup,
+        )?;
+        Ok((store, vocab, self.report))
+    }
 }
 
 /// Run the full pipeline. `runtime` is required only for
@@ -215,6 +241,7 @@ pub fn run_with_pool(
         db,
         order,
         frequent,
+        closed,
         ruleset,
         trie,
         frame,

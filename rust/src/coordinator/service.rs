@@ -25,11 +25,27 @@
 //! `SUPPORT` stay native point lookups — they answer in O(path) via
 //! [`TrieOfRules::find_rule`] and need the three-way
 //! FOUND/ABSENT/NOTREP distinction that a row-set query cannot express.
+//!
+//! **Incremental serving** (DESIGN.md §13): an engine built with
+//! [`QueryEngine::with_incremental`] additionally accepts
+//!
+//! ```text
+//! INGEST a,b,c;d,e     -> absorb transactions (`;`-separated) online
+//! COMPACT              -> merge the delta into a fresh frozen snapshot
+//! SNAPSHOT /path       -> persist the snapshot (+ pending-delta sidecar)
+//! ```
+//!
+//! Every request pins the current [`MergedView`] (an `Arc` pair of frozen
+//! base + delta overlay); `INGEST`/`COMPACT` build the next view and swap
+//! it in atomically, so in-flight queries finish on the epoch they
+//! started on and `RULES` output is parity-exact with a from-scratch
+//! batch rebuild at every point in the update stream
+//! (`rust/tests/incremental_parity.rs`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -39,6 +55,7 @@ use crate::query::exec::{QueryOutput, Row};
 use crate::query::parallel::{default_query_threads, ParallelExecutor};
 use crate::rules::metrics::Metric;
 use crate::rules::rule::Rule;
+use crate::trie::delta::{IncrementalTrie, MergedView};
 use crate::trie::trie::{FindOutcome, TrieOfRules};
 
 /// In-process query engine over a built trie. Owns one
@@ -46,11 +63,23 @@ use crate::trie::trie::{FindOutcome, TrieOfRules};
 /// lifetime: every request (in-process or from any TCP connection) runs
 /// through the same pool, so thread spin-up is paid once per process, not
 /// per query.
+///
+/// The serving state is a swappable [`MergedView`]: requests clone the
+/// `Arc` under a short lock and run on that pinned snapshot; `INGEST` /
+/// `COMPACT` (available when the engine carries an [`IncrementalTrie`])
+/// replace it atomically.
 pub struct QueryEngine {
-    trie: TrieOfRules,
     vocab: Vocab,
     queries: AtomicU64,
     exec: ParallelExecutor,
+    /// The pinned serving state; swapped whole on ingest/compaction.
+    serving: Mutex<Arc<MergedView>>,
+    /// The mutable incremental store (None for static engines, e.g. a trie
+    /// loaded from disk without its database).
+    store: Option<Mutex<IncrementalTrie>>,
+    /// Pending-transaction count that triggers auto-compaction inside
+    /// `INGEST` (0 = compact only on explicit `COMPACT`).
+    compact_threshold: usize,
     /// Threads the build pipeline ran with (0 = unknown, e.g. a trie
     /// loaded from disk); surfaced in STATS as `build_threads=`.
     build_threads: usize,
@@ -72,10 +101,27 @@ impl QueryEngine {
     /// the pipeline's build stages before serving starts).
     pub fn with_executor(trie: TrieOfRules, vocab: Vocab, exec: ParallelExecutor) -> Self {
         Self {
-            trie,
             vocab,
             queries: AtomicU64::new(0),
             exec,
+            serving: Mutex::new(Arc::new(MergedView::from_trie(trie))),
+            store: None,
+            compact_threshold: 0,
+            build_threads: 0,
+        }
+    }
+
+    /// Engine over an incremental store: serves the store's current view
+    /// and accepts `INGEST`/`COMPACT`/`SNAPSHOT`.
+    pub fn with_incremental(store: IncrementalTrie, vocab: Vocab, exec: ParallelExecutor) -> Self {
+        let view = Arc::new(store.view());
+        Self {
+            vocab,
+            queries: AtomicU64::new(0),
+            exec,
+            serving: Mutex::new(view),
+            store: Some(Mutex::new(store)),
+            compact_threshold: 0,
             build_threads: 0,
         }
     }
@@ -88,8 +134,21 @@ impl QueryEngine {
         self
     }
 
-    pub fn trie(&self) -> &TrieOfRules {
-        &self.trie
+    /// Auto-compact once this many transactions are pending (config key
+    /// `compact_threshold` / `--compact-threshold`; 0 = manual only).
+    pub fn with_compact_threshold(mut self, threshold: usize) -> Self {
+        self.compact_threshold = threshold;
+        self
+    }
+
+    /// Pin the current serving state.
+    pub fn view(&self) -> Arc<MergedView> {
+        Arc::clone(&self.serving.lock().unwrap())
+    }
+
+    /// The current frozen base snapshot.
+    pub fn base_trie(&self) -> Arc<TrieOfRules> {
+        Arc::clone(&self.view().base)
     }
 
     /// Effective degree of query parallelism (STATS `threads=`).
@@ -112,6 +171,9 @@ impl QueryEngine {
             "TOP" => self.cmd_top(rest),
             "SUPPORT" => self.cmd_support(rest),
             "CONSEQ" => self.cmd_conseq(rest),
+            "INGEST" => self.cmd_ingest(rest),
+            "COMPACT" => self.cmd_compact(),
+            "SNAPSHOT" => self.cmd_snapshot(rest),
             "STATS" => self.cmd_stats(),
             "QUIT" => "BYE".to_string(),
             other => format!("ERR unknown command `{other}`"),
@@ -124,7 +186,8 @@ impl QueryEngine {
             Ok(q) => q,
             Err(e) => return format!("ERR {e:#}"),
         };
-        match self.exec.execute(&self.trie, &self.vocab, &query) {
+        let view = self.view();
+        match self.exec.execute_view(&view, &self.vocab, &query) {
             Err(e) => format!("ERR {e:#}"),
             Ok(QueryOutput::Explain(text)) => {
                 // Self-delimiting like every multi-line response: the
@@ -182,7 +245,7 @@ impl QueryEngine {
         if a.iter().any(|i| c.contains(i)) {
             return "ERR overlapping rule sides".to_string();
         }
-        match self.trie.find_rule(&Rule::from_ids(a, c)) {
+        match self.view().find_rule(&Rule::from_ids(a, c)) {
             FindOutcome::Found(m) => format!(
                 "FOUND sup={:.6} conf={:.6} lift={:.4} lev={:.6} conv={:.4}",
                 m.support, m.confidence, m.lift, m.leverage, m.conviction
@@ -195,7 +258,8 @@ impl QueryEngine {
     /// Desugar a legacy command straight to the RQL AST (no text
     /// round-trip, so item names never need re-quoting) and execute it.
     fn run_desugared(&self, query: &RqlQuery) -> Result<Vec<Row>, String> {
-        match self.exec.execute(&self.trie, &self.vocab, query) {
+        let view = self.view();
+        match self.exec.execute_view(&view, &self.vocab, query) {
             Ok(QueryOutput::Rows(rs)) => Ok(rs.rows),
             Ok(QueryOutput::Explain(_)) => unreachable!("desugared commands never explain"),
             Err(e) => Err(format!("ERR {e:#}")),
@@ -242,7 +306,7 @@ impl QueryEngine {
 
     fn cmd_support(&self, rest: &str) -> String {
         match self.parse_items(rest) {
-            Ok(items) if !items.is_empty() => match self.trie.support_of(&items) {
+            Ok(items) if !items.is_empty() => match self.view().support_of(&items) {
                 Some(c) => format!("SUPPORT {c}"),
                 None => "ABSENT".to_string(),
             },
@@ -287,22 +351,169 @@ impl QueryEngine {
         out
     }
 
-    /// `STATS`: counters over the frozen trie. `mem_kib` is exact, not
+    /// `INGEST a,b,c;d,e`: absorb a `;`-separated batch of transactions
+    /// into the incremental store, rebuild the delta overlay, auto-compact
+    /// at the configured threshold, and swap the serving view.
+    fn cmd_ingest(&self, rest: &str) -> String {
+        let Some(store) = &self.store else {
+            return "ERR INGEST requires an incremental engine (a pipeline-built service \
+                    retains its base database; a trie loaded from disk cannot ingest)"
+                .to_string();
+        };
+        if rest.trim().is_empty() {
+            return "ERR usage: INGEST a,b,c[;d,e...]".to_string();
+        }
+        let mut txs: Vec<Vec<u32>> = Vec::new();
+        for part in rest.split(';') {
+            match self.parse_items(part) {
+                Ok(items) if !items.is_empty() => txs.push(items),
+                Ok(_) => return "ERR empty transaction".to_string(),
+                Err(e) => return format!("ERR {e}"),
+            }
+        }
+        let mut store = store.lock().unwrap();
+        let report = match store.ingest(&txs) {
+            Ok(r) => r,
+            Err(e) => return format!("ERR {e:#}"),
+        };
+        // The ingest itself succeeded; whatever happens to the optional
+        // auto-compaction below, the new view must be swapped in and the
+        // response must say OK — otherwise a client retry would double-
+        // count the batch.
+        let mut suffix = String::new();
+        if self.compact_threshold > 0 && store.pending_len() >= self.compact_threshold {
+            match store.compact(Some(self.exec.pool())) {
+                Ok(true) => suffix = " compacted".to_string(),
+                Ok(false) => {}
+                Err(e) => suffix = format!(" (auto-compaction failed: {e:#})"),
+            }
+        }
+        *self.serving.lock().unwrap() = Arc::new(store.view());
+        format!(
+            "OK ingested={} pending={} delta_nodes={} epoch={}{suffix}",
+            report.ingested,
+            store.pending_len(),
+            store.delta_nodes(),
+            store.epoch()
+        )
+    }
+
+    /// `COMPACT`: merge the pending delta into a fresh frozen snapshot on
+    /// the shared worker pool and swap it in atomically.
+    fn cmd_compact(&self) -> String {
+        let Some(store) = &self.store else {
+            return "ERR COMPACT requires an incremental engine".to_string();
+        };
+        let mut store = store.lock().unwrap();
+        match store.compact(Some(self.exec.pool())) {
+            Ok(true) => {
+                *self.serving.lock().unwrap() = Arc::new(store.view());
+                format!(
+                    "OK compacted epoch={} nodes={} compactions={}",
+                    store.epoch(),
+                    store.base().num_nodes(),
+                    store.compactions()
+                )
+            }
+            Ok(false) => format!("OK epoch={} pending=0 (nothing to compact)", store.epoch()),
+            Err(e) => format!("ERR {e:#}"),
+        }
+    }
+
+    /// `SNAPSHOT /path`: persist the current frozen base (v2 columnar) and,
+    /// when updates are pending, a `<path>.delta` sidecar holding the
+    /// uncompacted transaction tail.
+    fn cmd_snapshot(&self, rest: &str) -> String {
+        let path = rest.trim();
+        if path.is_empty() {
+            return "ERR usage: SNAPSHOT <path>".to_string();
+        }
+        let path = std::path::PathBuf::from(path);
+        match &self.store {
+            Some(store) => {
+                let store = store.lock().unwrap();
+                if let Err(e) =
+                    crate::trie::serialize::save(store.base(), Some(&self.vocab), &path)
+                {
+                    return format!("ERR {e:#}");
+                }
+                let mut extra = String::new();
+                let sidecar = sidecar_path(&path);
+                if store.pending_len() > 0 {
+                    if let Err(e) = crate::trie::serialize::save_delta(
+                        &sidecar,
+                        store.epoch(),
+                        store.minsup(),
+                        store.pending(),
+                    ) {
+                        return format!("ERR {e:#}");
+                    }
+                    extra = format!(" sidecar={}", sidecar.display());
+                } else {
+                    // Nothing pending: remove any sidecar a previous
+                    // snapshot to the same path left behind, so the pair
+                    // on disk can never describe two different epochs.
+                    std::fs::remove_file(&sidecar).ok();
+                }
+                format!(
+                    "OK snapshot={} epoch={} pending={}{extra}",
+                    path.display(),
+                    store.epoch(),
+                    store.pending_len()
+                )
+            }
+            None => {
+                let view = self.view();
+                match crate::trie::serialize::save(&view.base, Some(&self.vocab), &path) {
+                    Ok(()) => format!(
+                        "OK snapshot={} epoch={} pending=0",
+                        path.display(),
+                        view.epoch
+                    ),
+                    Err(e) => format!("ERR {e:#}"),
+                }
+            }
+        }
+    }
+
+    /// `STATS`: counters over the serving state. `mem_kib` is exact, not
     /// estimated — the columnar layout's footprint is the sum of its
     /// column lengths times element widths (node columns + ten metric
     /// columns + child CSR + header CSR; see
-    /// [`TrieOfRules::memory_bytes`] and DESIGN.md §8).
+    /// [`TrieOfRules::memory_bytes`] and DESIGN.md §8). The incremental
+    /// tail reports the snapshot epoch, the pending-transaction count, the
+    /// delta overlay size, and how many compactions have run.
     fn cmd_stats(&self) -> String {
+        let view = self.view();
+        let (pending, delta_nodes, compactions) = match &self.store {
+            Some(store) => {
+                let store = store.lock().unwrap();
+                (store.pending_len(), store.delta_nodes(), store.compactions())
+            }
+            None => (0, 0, 0),
+        };
         format!(
-            "STATS nodes={} rules={} mem_kib={} threads={} build_threads={} queries={}",
-            self.trie.num_nodes(),
-            self.trie.num_representable_rules(),
-            self.trie.memory_bytes() / 1024,
+            "STATS nodes={} rules={} mem_kib={} threads={} build_threads={} queries={} \
+             epoch={} pending_tx={} delta_nodes={} compactions={}",
+            view.base.num_nodes(),
+            view.base.num_representable_rules(),
+            view.base.memory_bytes() / 1024,
             self.threads(),
             self.build_threads,
-            self.queries_served()
+            self.queries_served(),
+            view.epoch,
+            pending,
+            delta_nodes,
+            compactions
         )
     }
+}
+
+/// Sidecar path for a snapshot's pending-delta tail: `<path>.delta`.
+fn sidecar_path(path: &std::path::Path) -> std::path::PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".delta");
+    std::path::PathBuf::from(s)
 }
 
 /// Serve the engine over TCP until `shutdown` flips true. Binds `addr`
@@ -522,6 +733,128 @@ mod tests {
         // EXPLAIN through the engine reports the parallel partitioning.
         let resp = par.execute("EXPLAIN RULES");
         assert!(resp.contains("parallel: degree=4"), "{resp}");
+    }
+
+    fn incremental_engine(threads: usize) -> QueryEngine {
+        use crate::mining::counts::min_count;
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let vocab = db.vocab().clone();
+        let store = crate::trie::delta::IncrementalTrie::new(trie, db, &fi, 0.3).unwrap();
+        QueryEngine::with_incremental(store, vocab, ParallelExecutor::new(threads))
+    }
+
+    #[test]
+    fn ingest_compact_verbs_roundtrip() {
+        let e = incremental_engine(2);
+        let before = e.execute("RULES");
+        let resp = e.execute("INGEST f,c,a;b,p");
+        assert!(resp.starts_with("OK ingested=2 pending=2"), "{resp}");
+        // The merged view serves immediately: counts (and so the rendered
+        // metrics) shift with the cumulative n.
+        let during = e.execute("RULES");
+        assert_ne!(before, during, "delta did not reach the serving view");
+        let stats = e.execute("STATS");
+        assert!(stats.contains("pending_tx=2"), "{stats}");
+        assert!(stats.contains("epoch=0"), "{stats}");
+        // EXPLAIN reports the delta overlay rows.
+        let explain = e.execute("EXPLAIN RULES");
+        assert!(explain.contains("delta  : epoch 0, 2 pending tx"), "{explain}");
+        let resp = e.execute("COMPACT");
+        assert!(resp.starts_with("OK compacted epoch=1"), "{resp}");
+        // Post-compaction the frozen snapshot serves the same rows the
+        // merged view did (batch parity at the compaction boundary).
+        let after = e.execute("RULES");
+        assert_eq!(during, after, "compaction changed query results");
+        let stats = e.execute("STATS");
+        assert!(stats.contains("epoch=1"), "{stats}");
+        assert!(stats.contains("pending_tx=0"), "{stats}");
+        assert!(stats.contains("compactions=1"), "{stats}");
+        // Compacting an empty delta is a cheap no-op.
+        assert!(e.execute("COMPACT").contains("nothing to compact"));
+    }
+
+    #[test]
+    fn ingest_auto_compacts_at_threshold() {
+        let e = incremental_engine(2).with_compact_threshold(2);
+        let resp = e.execute("INGEST f,c");
+        assert!(resp.starts_with("OK ingested=1 pending=1"), "{resp}");
+        assert!(!resp.contains("compacted"), "{resp}");
+        let resp = e.execute("INGEST b,p");
+        assert!(resp.contains("compacted"), "{resp}");
+        let stats = e.execute("STATS");
+        assert!(stats.contains("pending_tx=0"), "{stats}");
+        assert!(stats.contains("compactions=1"), "{stats}");
+    }
+
+    #[test]
+    fn ingest_errors_are_reported() {
+        let e = incremental_engine(1);
+        assert!(e.execute("INGEST nosuchitem").starts_with("ERR"));
+        assert!(e.execute("INGEST").starts_with("ERR usage"));
+        // Static engines refuse INGEST/COMPACT outright.
+        let s = engine();
+        assert!(s.execute("INGEST f,c").starts_with("ERR INGEST requires"));
+        assert!(s.execute("COMPACT").starts_with("ERR COMPACT requires"));
+    }
+
+    #[test]
+    fn ingested_rules_match_a_batch_built_engine() {
+        use crate::mining::counts::min_count;
+        let e = incremental_engine(4);
+        e.execute("INGEST f,c,a,m;f,b;c,b,p");
+        // Batch oracle: rebuild from scratch on the cumulative data.
+        let db = paper_example_db();
+        let mut b = crate::data::transaction::TransactionDb::builder(db.vocab().clone());
+        for tx in db.iter() {
+            b.push_ids(tx.to_vec());
+        }
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        b.push_ids(vec![name("f"), name("c"), name("a"), name("m")]);
+        b.push_ids(vec![name("f"), name("b")]);
+        b.push_ids(vec![name("c"), name("b"), name("p")]);
+        let cum = b.build();
+        let fi = fpgrowth(&cum, 0.3);
+        let order = ItemOrder::new(&cum, min_count(0.3, cum.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let oracle = QueryEngine::with_threads(trie, cum.vocab().clone(), 1);
+        for cmd in [
+            "RULES",
+            "RULES WHERE conseq = a SORT BY lift DESC LIMIT 5",
+            "RULES WHERE support >= 0.4",
+            "TOP confidence 4",
+            "FIND f,c => a",
+            "SUPPORT f,c",
+        ] {
+            assert_eq!(e.execute(cmd), oracle.execute(cmd), "diverged on `{cmd}`");
+        }
+        // ...and still after compaction.
+        e.execute("COMPACT");
+        for cmd in ["RULES", "FIND f,c => a", "SUPPORT f,c"] {
+            assert_eq!(e.execute(cmd), oracle.execute(cmd), "post-compact `{cmd}`");
+        }
+    }
+
+    #[test]
+    fn snapshot_writes_base_and_delta_sidecar() {
+        let dir = std::env::temp_dir().join(format!("tor_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("svc.tor");
+        let e = incremental_engine(1);
+        e.execute("INGEST f,c;b,p");
+        let resp = e.execute(&format!("SNAPSHOT {}", path.display()));
+        assert!(resp.starts_with("OK snapshot="), "{resp}");
+        assert!(resp.contains("pending=2"), "{resp}");
+        let (_trie, vocab) = crate::trie::serialize::load(&path).unwrap();
+        assert!(vocab.is_some());
+        let sidecar = dir.join("svc.tor.delta");
+        let (epoch, minsup, txs) = crate::trie::serialize::load_delta(&sidecar).unwrap();
+        assert_eq!(epoch, 0);
+        assert!((minsup - 0.3).abs() < 1e-12);
+        assert_eq!(txs.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

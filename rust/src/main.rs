@@ -42,7 +42,7 @@ fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
-        Command::Query(opts, cmds, load) => {
+        Command::Query(opts, cmds, load, replay) => {
             // One executor (and worker pool) for the whole process: the
             // pipeline build overlaps its stages on it, then every query
             // command runs through it.
@@ -62,9 +62,15 @@ fn run(args: &[String]) -> Result<()> {
                 None => {
                     let out = run_pipeline(&opts, Some(exec.pool()))?;
                     eprint!("{}", out.report.render());
-                    let vocab = out.db.vocab().clone();
-                    QueryEngine::with_executor(out.trie, vocab, exec)
-                        .with_build_threads(out.report.build_threads)
+                    // Pipeline-built engines serve incrementally: the
+                    // retained database lets INGEST/COMPACT merge exactly.
+                    let (mut store, vocab, report) = out.into_incremental(&opts.config)?;
+                    if let Some(sidecar) = &replay {
+                        replay_sidecar(&mut store, sidecar)?;
+                    }
+                    QueryEngine::with_incremental(store, vocab, exec)
+                        .with_build_threads(report.build_threads)
+                        .with_compact_threshold(opts.config.compact_threshold)
                 }
             };
             for cmd in cmds {
@@ -92,14 +98,18 @@ fn run(args: &[String]) -> Result<()> {
             println!("exported {} rules to {}", result.ruleset.len(), out.display());
             Ok(())
         }
-        Command::Serve(opts, port) => {
+        Command::Serve(opts, port, replay) => {
             let exec = ParallelExecutor::new(opts.config.effective_query_threads());
             let out = run_pipeline(&opts, Some(exec.pool()))?;
             eprint!("{}", out.report.render());
-            let vocab = out.db.vocab().clone();
+            let (mut store, vocab, report) = out.into_incremental(&opts.config)?;
+            if let Some(sidecar) = &replay {
+                replay_sidecar(&mut store, sidecar)?;
+            }
             let engine = Arc::new(
-                QueryEngine::with_executor(out.trie, vocab, exec)
-                    .with_build_threads(out.report.build_threads),
+                QueryEngine::with_incremental(store, vocab, exec)
+                    .with_build_threads(report.build_threads)
+                    .with_compact_threshold(opts.config.compact_threshold),
             );
             eprintln!("query threads: {}", engine.threads());
             let shutdown = Arc::new(AtomicBool::new(false));
@@ -152,6 +162,40 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// Replay a `SNAPSHOT` pending-delta sidecar into a freshly built
+/// incremental store: the restore path for an interrupted service —
+/// re-run the pipeline on the base source, then fold the uncompacted
+/// tail back in (exactness is the 2-part partition argument of
+/// DESIGN.md §13, so the restored merged view equals the pre-restart
+/// one).
+fn replay_sidecar(
+    store: &mut trie_of_rules::trie::delta::IncrementalTrie,
+    path: &std::path::Path,
+) -> Result<()> {
+    let (epoch, minsup, txs) = trie_of_rules::trie::serialize::load_delta(path)?;
+    anyhow::ensure!(
+        (minsup - store.minsup()).abs() < 1e-12,
+        "sidecar was written at minsup {minsup} but the engine mined at {} — \
+         replay would not reproduce the original merged view",
+        store.minsup()
+    );
+    anyhow::ensure!(
+        epoch == store.epoch(),
+        "sidecar was written at snapshot epoch {epoch} but this engine is at epoch {} — \
+         the snapshot's base already folded in compacted ingests the pipeline source \
+         does not contain, so replaying only the tail would silently drop them; \
+         rebuild from a source that includes the compacted transactions",
+        store.epoch()
+    );
+    let report = store.ingest(&txs)?;
+    eprintln!(
+        "replayed {} pending transactions from {} (sidecar epoch {epoch})",
+        report.ingested,
+        path.display()
+    );
+    Ok(())
 }
 
 /// Shared pipeline-run logic for the subcommands. `pool` lets serve/query

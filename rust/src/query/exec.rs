@@ -27,6 +27,7 @@ use crate::query::ast::{CmpOp, Query, SortSpec};
 use crate::query::plan::{self, AccessPath, BoundPred, TriePlan};
 use crate::rules::metrics::RuleMetrics;
 use crate::rules::rule::Rule;
+use crate::trie::delta::DeltaOverlay;
 use crate::trie::node::NodeIdx;
 use crate::trie::trie::{and_column_pred, TrieOfRules, PRED_BATCH};
 
@@ -229,6 +230,33 @@ fn residual_pass(
         .all(|p| pred_matches(p, antecedent, consequent, metrics))
 }
 
+/// Shared emission tail of every traversal runner (sequential, merged
+/// base, merged delta): count the candidate, apply the residual
+/// predicates, and materialize the `Rule` only on a match. One
+/// implementation, so the rows/counters parity contract between the
+/// executors can never fork here.
+fn emit_candidate(
+    plan: &TriePlan,
+    stats: &mut ExecStats,
+    acc: &mut Accumulator,
+    antecedent: &[ItemId],
+    consequent: &[ItemId],
+    metrics: &RuleMetrics,
+) {
+    stats.candidates += 1;
+    if !residual_pass(&plan.residual, antecedent, consequent, metrics) {
+        return;
+    }
+    stats.matched += 1;
+    acc.push(Row {
+        rule: Rule::new(
+            Itemset::new(antecedent.to_vec()),
+            Itemset::new(consequent.to_vec()),
+        ),
+        metrics: *metrics,
+    });
+}
+
 // ---------------------------------------------------------------------
 // trie backend
 // ---------------------------------------------------------------------
@@ -241,7 +269,7 @@ pub fn execute_trie(trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<
     let plan = plan::plan_trie(&bound);
     if query.explain {
         return Ok(QueryOutput::Explain(plan::explain_trie(
-            &plan, trie, vocab, None,
+            &plan, trie, vocab, None, None,
         )));
     }
     let mut stats = ExecStats::default();
@@ -359,21 +387,177 @@ pub(crate) fn run_traversal_range(
         range,
         |sup| plan.pruned(sup),
         |antecedent, consequent, metrics| {
-            stats.candidates += 1;
-            if !residual_pass(&plan.residual, antecedent, consequent, metrics) {
-                return;
-            }
-            stats.matched += 1;
-            acc.push(Row {
-                rule: Rule::new(
-                    Itemset::new(antecedent.to_vec()),
-                    Itemset::new(consequent.to_vec()),
-                ),
-                metrics: *metrics,
-            });
+            emit_candidate(plan, stats, acc, antecedent, consequent, metrics)
         },
     );
     stats.scanned += visited;
+}
+
+// ---------------------------------------------------------------------
+// merged backend (frozen base + incremental delta overlay)
+// ---------------------------------------------------------------------
+
+/// Execute a parsed query over the **merged view**: the frozen base trie
+/// plus a [`DeltaOverlay`] of pending updates. Rows, order, and work
+/// counters are parity-exact with [`execute_trie`] on a from-scratch
+/// batch rebuild of the cumulative data (`rust/tests/incremental_parity.rs`):
+/// the overlay's live/owned partition maps every cumulative rule to
+/// exactly one side, and the shared [`Accumulator`] re-imposes the
+/// engine's total output order over both emission streams.
+pub fn execute_merged(
+    base: &TrieOfRules,
+    overlay: &DeltaOverlay,
+    vocab: &Vocab,
+    query: &Query,
+) -> Result<QueryOutput> {
+    let bound = plan::bind(query, vocab)?;
+    let plan = plan::plan_trie(&bound);
+    if query.explain {
+        return Ok(QueryOutput::Explain(plan::explain_trie(
+            &plan,
+            base,
+            vocab,
+            None,
+            Some(overlay.stat()),
+        )));
+    }
+    let mut stats = ExecStats::default();
+    let mut acc = Accumulator::new(plan.sort, plan.limit);
+    match plan.access {
+        AccessPath::Empty => {}
+        AccessPath::ConseqHeader(item) => {
+            run_merged_header_base(
+                base,
+                overlay,
+                base.item_nodes(item),
+                &plan,
+                &mut stats,
+                &mut acc,
+            );
+            run_merged_header_delta(
+                overlay,
+                overlay.delta_item_nodes(item),
+                &plan,
+                &mut stats,
+                &mut acc,
+            );
+        }
+        AccessPath::FullTraversal => {
+            run_merged_traversal_range(
+                base,
+                overlay,
+                1..base.num_nodes() + 1,
+                &plan,
+                &mut stats,
+                &mut acc,
+            );
+            run_merged_delta_traversal(base, overlay, &plan, &mut stats, &mut acc);
+        }
+    }
+    Ok(QueryOutput::Rows(ResultSet {
+        rows: acc.finish(),
+        stats,
+    }))
+}
+
+/// Merged full-traversal over one base preorder range (dead rows skipped
+/// uncounted, live rows carrying merged counts/metrics) — the morsel unit
+/// of the parallel merged executor, mirroring [`run_traversal_range`].
+pub(crate) fn run_merged_traversal_range(
+    base: &TrieOfRules,
+    overlay: &DeltaOverlay,
+    range: std::ops::Range<usize>,
+    plan: &TriePlan,
+    stats: &mut ExecStats,
+    acc: &mut Accumulator,
+) {
+    let visited = overlay.for_each_base_rule_pruned_range(
+        base,
+        range,
+        |sup| plan.pruned(sup),
+        |antecedent, consequent, metrics| {
+            emit_candidate(plan, stats, acc, antecedent, consequent, metrics)
+        },
+    );
+    stats.scanned += visited;
+}
+
+/// The overlay half of the merged full traversal (owned delta rules).
+pub(crate) fn run_merged_delta_traversal(
+    base: &TrieOfRules,
+    overlay: &DeltaOverlay,
+    plan: &TriePlan,
+    stats: &mut ExecStats,
+    acc: &mut Accumulator,
+) {
+    let visited = overlay.for_each_delta_rule_pruned(
+        base,
+        |sup| plan.pruned(sup),
+        |antecedent, consequent, metrics| {
+            emit_candidate(plan, stats, acc, antecedent, consequent, metrics)
+        },
+    );
+    stats.scanned += visited;
+}
+
+/// Merged header-list access over a slice of *base* posting-list ids:
+/// dead rows are skipped uncounted; live rows re-derive their metric
+/// vector from merged counts (the frozen metric columns are stale under a
+/// delta). Counter semantics mirror [`run_header_slice`] — scanned counts
+/// every serving header node of any depth, candidates gate on depth ≥ 2
+/// and the prune bound.
+pub(crate) fn run_merged_header_base(
+    base: &TrieOfRules,
+    overlay: &DeltaOverlay,
+    ids: &[NodeIdx],
+    plan: &TriePlan,
+    stats: &mut ExecStats,
+    acc: &mut Accumulator,
+) {
+    let n = overlay.num_transactions() as f64;
+    for &idx in ids {
+        if !overlay.live_node(idx) {
+            continue;
+        }
+        stats.scanned += 1;
+        if base.depth(idx) < 2 {
+            continue;
+        }
+        let mc = overlay.merged_count(base, idx);
+        if plan.pruned(mc as f64 / n) {
+            continue;
+        }
+        let path = base.path_items(idx);
+        let (antecedent, consequent) = path.split_at(path.len() - 1);
+        let metrics = overlay.base_node_metrics(base, idx);
+        emit_candidate(plan, stats, acc, antecedent, consequent, &metrics);
+    }
+}
+
+/// Merged header-list access over the overlay's owned posting list for
+/// the consequent item.
+pub(crate) fn run_merged_header_delta(
+    overlay: &DeltaOverlay,
+    ids: &[u32],
+    plan: &TriePlan,
+    stats: &mut ExecStats,
+    acc: &mut Accumulator,
+) {
+    let n = overlay.num_transactions() as f64;
+    for &idx in ids {
+        stats.scanned += 1;
+        if overlay.delta_depth(idx) < 2 {
+            continue;
+        }
+        let count = overlay.delta_count(idx);
+        if plan.pruned(count as f64 / n) {
+            continue;
+        }
+        let path = overlay.delta_path_items(idx);
+        let (antecedent, consequent) = path.split_at(path.len() - 1);
+        let metrics = overlay.delta_metrics(idx);
+        emit_candidate(plan, stats, acc, antecedent, consequent, &metrics);
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -41,7 +41,7 @@ use crate::data::vocab::Vocab;
 use crate::trie::trie::TrieOfRules;
 
 pub use ast::{CmpOp, Pred, Query, SortSpec};
-pub use exec::{ExecStats, QueryOutput, ResultSet, Row};
+pub use exec::{execute_frame, execute_merged, execute_trie, ExecStats, QueryOutput, ResultSet, Row};
 pub use parallel::{default_query_threads, ParallelExecutor, WorkerPool};
 pub use parser::parse;
 pub use plan::{bind, plan_trie, AccessPath, BoundPred, BoundQuery, Parallelism, TriePlan};
@@ -54,4 +54,19 @@ pub fn query_trie(trie: &TrieOfRules, vocab: &Vocab, input: &str) -> Result<Quer
 /// Parse and execute one RQL query on the full-scan frame backend.
 pub fn query_frame(frame: &RuleFrame, vocab: &Vocab, input: &str) -> Result<QueryOutput> {
     exec::execute_frame(frame, vocab, &parser::parse(input)?)
+}
+
+/// Parse and execute one RQL query on a pinned merged serving view
+/// (sequentially): the frozen base alone, or base + delta overlay when
+/// updates are pending — parity-exact with a batch rebuild either way.
+pub fn query_view(
+    view: &crate::trie::delta::MergedView,
+    vocab: &Vocab,
+    input: &str,
+) -> Result<QueryOutput> {
+    let query = parser::parse(input)?;
+    match view.overlay.as_deref() {
+        Some(overlay) => exec::execute_merged(&view.base, overlay, vocab, &query),
+        None => exec::execute_trie(&view.base, vocab, &query),
+    }
 }

@@ -44,6 +44,7 @@ use crate::data::vocab::Vocab;
 use crate::query::ast::Query;
 use crate::query::exec::{self, Accumulator, ExecStats, QueryOutput, ResultSet, Row};
 use crate::query::plan::{self, AccessPath, Parallelism, TriePlan};
+use crate::trie::delta::{DeltaOverlay, MergedView};
 use crate::trie::node::NodeIdx;
 use crate::trie::trie::TrieOfRules;
 
@@ -359,6 +360,7 @@ impl ParallelExecutor {
                 trie,
                 vocab,
                 Some(par),
+                None,
             )));
         }
         match plan.access {
@@ -390,6 +392,107 @@ impl ParallelExecutor {
                 shard_slices(trie.item_nodes(item), self.degree).len()
             }
             AccessPath::FullTraversal => trie.morsels(self.morsel_target_for(trie)).len(),
+        }
+    }
+
+    /// Parse and execute one RQL query string against a pinned serving
+    /// view (frozen base + optional delta overlay).
+    pub fn query_view(&self, view: &MergedView, vocab: &Vocab, input: &str) -> Result<QueryOutput> {
+        self.execute_view(view, vocab, &crate::query::parser::parse(input)?)
+    }
+
+    /// Execute a parsed query against a pinned serving view. With no
+    /// overlay this is exactly [`Self::execute`] on the frozen base; with
+    /// one, the base morsels / header shards run through the merged
+    /// runners and the overlay sweeps as one extra partition, merged under
+    /// the same total output order — parity-exact (rows, order, counters)
+    /// with a sequential merged run *and* with a batch rebuild, at any
+    /// thread count (`rust/tests/incremental_parity.rs`).
+    pub fn execute_view(
+        &self,
+        view: &MergedView,
+        vocab: &Vocab,
+        query: &Query,
+    ) -> Result<QueryOutput> {
+        let Some(overlay) = view.overlay.as_deref() else {
+            return self.execute(&view.base, vocab, query);
+        };
+        let base: &TrieOfRules = &view.base;
+        if self.pool.helpers() == 0 {
+            return exec::execute_merged(base, overlay, vocab, query);
+        }
+        let bound = plan::bind(query, vocab)?;
+        let plan = plan::plan_trie(&bound);
+        if query.explain {
+            let par = Parallelism {
+                degree: self.degree,
+                partitions: self.merged_partitions(base, overlay, &plan),
+            };
+            return Ok(QueryOutput::Explain(plan::explain_trie(
+                &plan,
+                base,
+                vocab,
+                Some(par),
+                Some(overlay.stat()),
+            )));
+        }
+        match plan.access {
+            AccessPath::Empty => Ok(QueryOutput::Rows(ResultSet {
+                rows: Accumulator::new(plan.sort, plan.limit).finish(),
+                stats: ExecStats::default(),
+            })),
+            AccessPath::ConseqHeader(item) => {
+                let ids = view.base.item_nodes(item);
+                let shards = shard_slices(ids, self.degree);
+                let parts = shards.len() + 1;
+                self.fan_out(&plan, parts, |p, stats, acc| {
+                    if p < shards.len() {
+                        exec::run_merged_header_base(base, overlay, shards[p], &plan, stats, acc);
+                    } else {
+                        exec::run_merged_header_delta(
+                            overlay,
+                            overlay.delta_item_nodes(item),
+                            &plan,
+                            stats,
+                            acc,
+                        );
+                    }
+                })
+            }
+            AccessPath::FullTraversal => {
+                let morsels = view.base.morsels(self.morsel_target_for(base));
+                let parts = morsels.len() + 1;
+                self.fan_out(&plan, parts, |p, stats, acc| {
+                    if p < morsels.len() {
+                        exec::run_merged_traversal_range(
+                            base,
+                            overlay,
+                            morsels[p].clone(),
+                            &plan,
+                            stats,
+                            acc,
+                        );
+                    } else {
+                        exec::run_merged_delta_traversal(base, overlay, &plan, stats, acc);
+                    }
+                })
+            }
+        }
+    }
+
+    /// Partition count of a merged run (base partitions + the overlay).
+    fn merged_partitions(
+        &self,
+        base: &TrieOfRules,
+        _overlay: &DeltaOverlay,
+        plan: &TriePlan,
+    ) -> usize {
+        match plan.access {
+            AccessPath::Empty => 0,
+            AccessPath::ConseqHeader(item) => {
+                shard_slices(base.item_nodes(item), self.degree).len() + 1
+            }
+            AccessPath::FullTraversal => base.morsels(self.morsel_target_for(base)).len() + 1,
         }
     }
 

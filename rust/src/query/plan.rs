@@ -27,6 +27,7 @@ use anyhow::{Context, Result};
 use crate::data::vocab::{ItemId, Vocab};
 use crate::query::ast::{CmpOp, Pred, Query, SortSpec};
 use crate::rules::metrics::Metric;
+use crate::trie::delta::DeltaStat;
 use crate::trie::trie::TrieOfRules;
 
 /// A predicate with item names bound to ids.
@@ -224,12 +225,15 @@ pub struct Parallelism {
 
 /// Render the trie plan (the `EXPLAIN` response). `par` annotates the
 /// plan with the parallel executor's partitioning when the query will run
-/// on it.
+/// on it; `delta` annotates it with the incremental overlay the merged
+/// executor will sweep alongside the frozen base (absent on a purely
+/// frozen snapshot).
 pub fn explain_trie(
     plan: &TriePlan,
     trie: &TrieOfRules,
     vocab: &Vocab,
     par: Option<Parallelism>,
+    delta: Option<DeltaStat>,
 ) -> String {
     let mut out = String::from("plan: trie backend\n");
     match plan.access {
@@ -267,6 +271,13 @@ pub fn explain_trie(
         AccessPath::Empty => {
             out.push_str("  access : empty — contradictory conseq predicates\n");
         }
+    }
+    if let Some(d) = delta {
+        out.push_str(&format!(
+            "  delta  : epoch {}, {} pending tx, {} overlay rule nodes \
+             ({} retired base rows) — merged base+delta sweep, cumulative metrics\n",
+            d.epoch, d.pending_tx, d.delta_nodes, d.dead_base_nodes
+        ));
     }
     for p in &plan.prune {
         out.push_str(&format!(

@@ -1,0 +1,1198 @@
+//! Incremental delta-trie: streaming rule updates over the frozen CSR.
+//!
+//! The frozen [`TrieOfRules`] is immutable by design (PR 2) — great for
+//! serving, useless for a service under live traffic where transactions
+//! keep arriving. This module adds an LSM-style incremental layer on top:
+//!
+//! * [`IncrementalTrie`] — the mutable store. It retains the base
+//!   [`TransactionDb`] and the exact frequent-itemset counts the frozen
+//!   snapshot was built from, absorbs `INGEST`-ed transaction batches, and
+//!   periodically **compacts** the accumulated delta into a fresh frozen
+//!   snapshot via [`TrieOfRules::from_sorted_paths`] (byte-identical to a
+//!   from-scratch batch build — the PR 4 construction guarantee).
+//! * [`DeltaOverlay`] — the immutable per-epoch query overlay, rebuilt on
+//!   every ingest and swapped in atomically (an `Arc`, so in-flight
+//!   queries finish on the view they pinned). Queries execute over the
+//!   **merged view** = frozen sweep + delta sweep; the merged rows, their
+//!   order, and the executor work counters are parity-exact with a batch
+//!   rebuild on the cumulative data (`rust/tests/incremental_parity.rs`).
+//!
+//! ## Why this is exact (DESIGN.md §13 has the full argument)
+//!
+//! **Candidate completeness** (Slimani's incremental-extraction setting,
+//! via the Partition lemma): an itemset frequent over the cumulative data
+//! at relative threshold `s` must be frequent in the base *or* in at least
+//! one ingested batch at the same relative `s` — otherwise its count is
+//! `< s·n_base + Σ s·n_batch = s·n`. So mining **only each arriving
+//! batch** (plus the base frequent set the trie already stores) yields a
+//! complete candidate set; exact cumulative counts are maintained by
+//! counting each batch against the standing candidates and each *new*
+//! candidate once against the retained base.
+//!
+//! **Merged-node partition**: every cumulatively-frequent itemset is
+//! served from exactly one side —
+//! * a **live** base node (`live[i]`): still frequent at the cumulative
+//!   threshold *and* its frequency-ordered path is unchanged under the
+//!   cumulative item order. Both conditions are antimonotone along paths,
+//!   so a dead node's whole subtree is dead and the merged sweep skips it
+//!   with the same `i = subtree_end[i]` range jump pruning uses;
+//! * an **owned** overlay node otherwise (new itemsets, or base itemsets
+//!   whose path re-ordered). Overlay ancestors shared with live base nodes
+//!   are stored but *unowned*: they steer the DFS (and carry cumulative
+//!   counts for prune/confidence) without re-counting or re-emitting what
+//!   the base sweep already produced — which is what makes the merged
+//!   work counters equal the batch executor's, node for node.
+//!
+//! Metrics are recomputed from merged counts and the cumulative `n`
+//! through the same [`RuleMetrics::from_counts`] the freeze path uses, so
+//! every float is bit-identical to the batch trie's stored columns.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::data::transaction::TransactionDb;
+use crate::data::vocab::ItemId;
+use crate::mining::apriori::{BitsetCounter, SupportCounter};
+use crate::mining::counts::{min_count, ItemOrder};
+use crate::mining::fpgrowth::fpgrowth;
+use crate::mining::itemset::{sorted_subset, FrequentItemsets, Itemset};
+use crate::query::parallel::WorkerPool;
+use crate::rules::metrics::{RuleCounts, RuleMetrics};
+use crate::rules::rule::Rule;
+use crate::trie::node::{NodeIdx, ROOT, ROOT_ITEM};
+use crate::trie::trie::{FindOutcome, TrieOfRules};
+
+/// One node of the mutable overlay trie (pointer-shaped, like the
+/// [`crate::trie::builder::TrieBuilder`] arena it reuses the machinery
+/// of): item-sorted child vector, cumulative count, plus the `owned` flag
+/// that decides whether the node emits rules or merely steers the DFS.
+#[derive(Debug, Clone)]
+struct DeltaNode {
+    item: ItemId,
+    /// Cumulative (base + pending) support count of the path itemset.
+    count: u64,
+    parent: u32,
+    depth: u16,
+    /// True when this node's itemset is served by the overlay (not by a
+    /// live base node); only owned nodes count as scanned or emit rules.
+    owned: bool,
+    children: Vec<(ItemId, u32)>,
+}
+
+/// EXPLAIN-facing summary of an overlay (see [`DeltaOverlay::stat`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeltaStat {
+    pub epoch: u64,
+    pub pending_tx: usize,
+    /// Owned overlay nodes (itemsets served by the delta side).
+    pub delta_nodes: usize,
+    /// Base nodes retired by the cumulative threshold / order change.
+    pub dead_base_nodes: usize,
+}
+
+/// The immutable query-time overlay for one ingest state: which base rows
+/// still serve (`live`), their pending-count adjustments (`add`), the
+/// cumulative item order/threshold, and the overlay trie of itemsets the
+/// frozen columns cannot represent. Rebuilt by
+/// [`IncrementalTrie::ingest`] and shared via `Arc` ([`MergedView`]).
+#[derive(Debug, Clone)]
+pub struct DeltaOverlay {
+    /// Cumulative transaction count (base + pending).
+    n: usize,
+    /// Cumulative absolute support threshold.
+    min_count: u64,
+    /// Cumulative item order (frequencies over base + pending).
+    order: ItemOrder,
+    /// Per-base-node (preorder, row 0 = root): does the node still serve?
+    live: Vec<bool>,
+    /// Per-base-node pending-transaction support counts.
+    add: Vec<u64>,
+    /// Overlay trie, root at index 0 (root count = cumulative `n`).
+    nodes: Vec<DeltaNode>,
+    /// Owned overlay nodes carrying each item, preorder (the delta twin of
+    /// the frozen header CSR).
+    item_nodes: Vec<Vec<u32>>,
+    owned_nodes: usize,
+    /// Representable (node, split) pairs on owned overlay nodes.
+    owned_rules: usize,
+    dead_base_nodes: usize,
+    pending_tx: usize,
+    epoch: u64,
+}
+
+impl DeltaOverlay {
+    /// Build the overlay for the current cumulative state. `cands` must
+    /// hold the exact cumulative count of every base-frequent itemset and
+    /// every batch-frequent itemset (candidate completeness — see module
+    /// docs); entries below `minc` are ignored.
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        base: &TrieOfRules,
+        order: ItemOrder,
+        n: usize,
+        minc: u64,
+        add: Vec<u64>,
+        cands: &HashMap<Itemset, u64>,
+        pending_tx: usize,
+        epoch: u64,
+    ) -> Result<DeltaOverlay> {
+        let items = base.items_column();
+        let counts = base.counts_column();
+        let parents = base.parents_column();
+        let len = items.len();
+        debug_assert_eq!(add.len(), len);
+
+        // live[]: frequent at the cumulative threshold AND the base path
+        // is still rank-increasing under the cumulative order. Both
+        // conditions fail monotonically down a path, so live[parent] is a
+        // sound gate and dead subtrees are contiguous preorder ranges.
+        let mut live = vec![false; len];
+        live[0] = true;
+        let mut dead = 0usize;
+        for i in 1..len {
+            let p = parents[i] as usize;
+            let ok = live[p]
+                && match order.rank(items[i]) {
+                    None => false,
+                    Some(r) => p == 0 || r > order.rank(items[p]).expect("live parent"),
+                }
+                && counts[i] + add[i] >= minc;
+            live[i] = ok;
+            if !ok {
+                dead += 1;
+            }
+        }
+
+        // Overlay population: every cumulatively-frequent candidate whose
+        // cumulative path is NOT a live base path. Sorted lexicographically
+        // so the overlay structure is deterministic regardless of hash-map
+        // iteration order.
+        let mut epaths: Vec<(Vec<ItemId>, u64)> = Vec::new();
+        for (set, &c) in cands {
+            if c < minc {
+                continue;
+            }
+            let path = order.order_itemset(set.items());
+            let mut cur = ROOT;
+            let mut in_base = true;
+            for &it in &path {
+                match base.child(cur, it) {
+                    Some(nxt) => cur = nxt,
+                    None => {
+                        in_base = false;
+                        break;
+                    }
+                }
+            }
+            if in_base && live[cur as usize] {
+                continue;
+            }
+            epaths.push((path, c));
+        }
+        epaths.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+
+        let mut nodes = vec![DeltaNode {
+            item: ROOT_ITEM,
+            count: n as u64,
+            parent: 0,
+            depth: 0,
+            owned: false,
+            children: Vec::new(),
+        }];
+        for (path, count) in &epaths {
+            let mut cur = 0u32;
+            for d in 1..=path.len() {
+                let it = path[d - 1];
+                let probe = nodes[cur as usize]
+                    .children
+                    .binary_search_by_key(&it, |&(i, _)| i);
+                cur = match probe {
+                    Ok(pos) => nodes[cur as usize].children[pos].1,
+                    Err(pos) => {
+                        // Every proper prefix of a cumulative-frequent
+                        // itemset is itself cumulative-frequent and hence a
+                        // candidate (downward closure of the candidate set).
+                        let cnt = if d == path.len() {
+                            *count
+                        } else {
+                            *cands
+                                .get(&Itemset::new(path[..d].to_vec()))
+                                .context("delta prefix not counted (closure violated)")?
+                        };
+                        let idx = nodes.len() as u32;
+                        nodes.push(DeltaNode {
+                            item: it,
+                            count: cnt,
+                            parent: cur,
+                            depth: d as u16,
+                            owned: false,
+                            children: Vec::new(),
+                        });
+                        nodes[cur as usize].children.insert(pos, (it, idx));
+                        idx
+                    }
+                };
+            }
+            nodes[cur as usize].owned = true;
+        }
+
+        // Per-item owned lists + counters, preorder over the overlay.
+        let num_items = order.frequencies().len();
+        let mut item_nodes: Vec<Vec<u32>> = vec![Vec::new(); num_items];
+        let mut owned_nodes = 0usize;
+        let mut owned_rules = 0usize;
+        let mut stack: Vec<u32> = nodes[0].children.iter().rev().map(|&(_, c)| c).collect();
+        while let Some(idx) = stack.pop() {
+            let node = &nodes[idx as usize];
+            if node.owned {
+                owned_nodes += 1;
+                owned_rules += (node.depth as usize).saturating_sub(1);
+                item_nodes[node.item as usize].push(idx);
+            }
+            for &(_, child) in node.children.iter().rev() {
+                stack.push(child);
+            }
+        }
+
+        Ok(DeltaOverlay {
+            n,
+            min_count: minc,
+            order,
+            live,
+            add,
+            nodes,
+            item_nodes,
+            owned_nodes,
+            owned_rules,
+            dead_base_nodes: dead,
+            pending_tx,
+            epoch,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // accessors
+    // ------------------------------------------------------------------
+
+    /// Cumulative transaction count.
+    pub fn num_transactions(&self) -> usize {
+        self.n
+    }
+
+    /// Cumulative item order.
+    pub fn order(&self) -> &ItemOrder {
+        &self.order
+    }
+
+    /// Cumulative absolute support threshold.
+    pub fn min_count(&self) -> u64 {
+        self.min_count
+    }
+
+    /// Does the base node still serve under the merged view?
+    #[inline]
+    pub fn live_node(&self, idx: NodeIdx) -> bool {
+        self.live[idx as usize]
+    }
+
+    /// Merged (base + pending) count of a base node's itemset.
+    #[inline]
+    pub fn merged_count(&self, base: &TrieOfRules, idx: NodeIdx) -> u64 {
+        base.count(idx) + self.add[idx as usize]
+    }
+
+    /// Owned overlay nodes (delta-served itemsets).
+    pub fn delta_nodes(&self) -> usize {
+        self.owned_nodes
+    }
+
+    /// Representable rules on owned overlay nodes.
+    pub fn delta_rules(&self) -> usize {
+        self.owned_rules
+    }
+
+    pub fn pending_tx(&self) -> usize {
+        self.pending_tx
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Summary for EXPLAIN / STATS.
+    pub fn stat(&self) -> DeltaStat {
+        DeltaStat {
+            epoch: self.epoch,
+            pending_tx: self.pending_tx,
+            delta_nodes: self.owned_nodes,
+            dead_base_nodes: self.dead_base_nodes,
+        }
+    }
+
+    /// Owned overlay nodes carrying `item`, preorder (the delta side of
+    /// the consequent header-list access path).
+    pub fn delta_item_nodes(&self, item: ItemId) -> &[u32] {
+        match self.item_nodes.get(item as usize) {
+            Some(v) => v.as_slice(),
+            None => &[],
+        }
+    }
+
+    pub fn delta_depth(&self, idx: u32) -> u16 {
+        self.nodes[idx as usize].depth
+    }
+
+    pub fn delta_count(&self, idx: u32) -> u64 {
+        self.nodes[idx as usize].count
+    }
+
+    /// Items on the overlay path root→`idx`, root-first (cumulative
+    /// frequency order).
+    pub fn delta_path_items(&self, idx: u32) -> Vec<ItemId> {
+        let mut rev = Vec::with_capacity(self.nodes[idx as usize].depth as usize);
+        let mut cur = idx;
+        while cur != 0 {
+            rev.push(self.nodes[cur as usize].item);
+            cur = self.nodes[cur as usize].parent;
+        }
+        rev.reverse();
+        rev
+    }
+
+    /// Stored-rule metric vector of an owned overlay node — the same
+    /// `(n, c_ac, c_a, c_c)` formula the freeze path bakes into the metric
+    /// columns, evaluated on cumulative counts.
+    pub fn delta_metrics(&self, idx: u32) -> RuleMetrics {
+        let node = &self.nodes[idx as usize];
+        let c_a = self.nodes[node.parent as usize].count;
+        RuleMetrics::from_counts(RuleCounts {
+            n: (self.n as u64).max(1),
+            c_ac: node.count,
+            c_a,
+            c_c: self.order.frequency(node.item),
+        })
+    }
+
+    /// Merged stored-rule metric vector of a live base node.
+    pub fn base_node_metrics(&self, base: &TrieOfRules, idx: NodeIdx) -> RuleMetrics {
+        let p = base.parent(idx);
+        let c_a = if p == ROOT {
+            self.n as u64
+        } else {
+            self.merged_count(base, p)
+        };
+        RuleMetrics::from_counts(RuleCounts {
+            n: (self.n as u64).max(1),
+            c_ac: self.merged_count(base, idx),
+            c_a,
+            c_c: self.order.frequency(base.item(idx)),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // merged lookups
+    // ------------------------------------------------------------------
+
+    /// Cumulative support of an itemset whose path is already ordered by
+    /// the cumulative order. `Some` exactly for cumulatively-frequent
+    /// itemsets: overlay paths cover the delta side, live base paths the
+    /// frozen side.
+    fn support_of_ordered(&self, base: &TrieOfRules, path: &[ItemId]) -> Option<u64> {
+        if path.is_empty() {
+            return None;
+        }
+        let mut cur = 0u32;
+        let mut in_overlay = true;
+        for &it in path {
+            let probe = self.nodes[cur as usize]
+                .children
+                .binary_search_by_key(&it, |&(i, _)| i);
+            match probe {
+                Ok(pos) => cur = self.nodes[cur as usize].children[pos].1,
+                Err(_) => {
+                    in_overlay = false;
+                    break;
+                }
+            }
+        }
+        if in_overlay {
+            return Some(self.nodes[cur as usize].count);
+        }
+        let mut cur = ROOT;
+        for &it in path {
+            cur = base.child(cur, it)?;
+        }
+        if self.live[cur as usize] {
+            Some(self.merged_count(base, cur))
+        } else {
+            None
+        }
+    }
+
+    /// Cumulative support of an itemset (merged twin of
+    /// [`TrieOfRules::support_of`]).
+    pub fn support_of(&self, base: &TrieOfRules, items: &[ItemId]) -> Option<u64> {
+        if items.iter().any(|&i| !self.order.is_frequent(i)) {
+            return None;
+        }
+        let path = self.order.order_itemset(items);
+        self.support_of_ordered(base, &path)
+    }
+
+    /// Merged twin of [`TrieOfRules::find_rule`]: same outcomes and the
+    /// same metric derivation a batch-rebuilt trie would produce.
+    pub fn find_rule(&self, base: &TrieOfRules, rule: &Rule) -> FindOutcome {
+        let a = rule.antecedent.items();
+        let c = rule.consequent.items();
+        if a.iter().chain(c).any(|&i| !self.order.is_frequent(i)) {
+            return FindOutcome::Absent;
+        }
+        let max_a = a.iter().map(|&i| self.order.rank(i).unwrap()).max().unwrap();
+        let min_c = c.iter().map(|&i| self.order.rank(i).unwrap()).min().unwrap();
+        if max_a >= min_c {
+            return FindOutcome::NotRepresentable;
+        }
+        let a_path = self.order.order_itemset(a);
+        let c_path = self.order.order_itemset(c);
+        let mut full = a_path.clone();
+        full.extend_from_slice(&c_path);
+        let Some(c_ac) = self.support_of_ordered(base, &full) else {
+            return FindOutcome::Absent;
+        };
+        let Some(c_a) = self.support_of_ordered(base, &a_path) else {
+            return FindOutcome::Absent;
+        };
+        let n = (self.n as u64).max(1);
+        let c_c = if c_path.len() == 1 {
+            self.order.frequency(c_path[0])
+        } else {
+            self.support_of_ordered(base, &c_path).unwrap_or(n)
+        };
+        FindOutcome::Found(RuleMetrics::from_counts(RuleCounts { n, c_ac, c_a, c_c }))
+    }
+
+    // ------------------------------------------------------------------
+    // merged traversal
+    // ------------------------------------------------------------------
+
+    /// Merged twin of [`TrieOfRules::for_each_rule_pruned_range`] over the
+    /// *base* columns: dead nodes are skipped (uncounted) with the same
+    /// subtree range jump pruning uses, live nodes carry merged counts,
+    /// and metrics are derived against the cumulative `n`/order. Returns
+    /// live nodes visited (pruned ones included, their descendants not) —
+    /// together with [`Self::for_each_delta_rule_pruned`] this reproduces
+    /// the batch executor's visit count exactly.
+    pub fn for_each_base_rule_pruned_range(
+        &self,
+        base: &TrieOfRules,
+        range: std::ops::Range<usize>,
+        mut prune: impl FnMut(f64) -> bool,
+        mut f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
+    ) -> usize {
+        let items = base.items_column();
+        let counts = base.counts_column();
+        let depths = base.depths_column();
+        let parents = base.parents_column();
+        let sub_end = base.subtree_end_column();
+        let len = items.len();
+        let lo = range.start.max(1);
+        let hi = range.end.min(len);
+        if lo >= hi {
+            return 0;
+        }
+        let n = (self.n as u64).max(1);
+        let n_f = self.n as f64;
+        let mut visited = 0usize;
+        let mut path_items: Vec<ItemId> = Vec::new();
+        let mut path_counts: Vec<u64> = Vec::new();
+        {
+            // Seed with lo's strict ancestors (merged counts). Ancestors
+            // of a live node are live; if lo's subtree is dead the buffers
+            // simply go unused.
+            let mut rev: Vec<usize> = Vec::new();
+            let mut anc = parents[lo];
+            while anc != ROOT {
+                rev.push(anc as usize);
+                anc = parents[anc as usize];
+            }
+            for &a in rev.iter().rev() {
+                path_items.push(items[a]);
+                path_counts.push(counts[a] + self.add[a]);
+            }
+        }
+        let mut i = lo;
+        while i < hi {
+            if !self.live[i] {
+                // Dead itemsets are dead down the whole subtree (threshold
+                // and path-order failures are both antimonotone): range
+                // skip, uncounted — a batch trie has no such rows.
+                i = sub_end[i] as usize;
+                continue;
+            }
+            visited += 1;
+            let depth = depths[i] as usize;
+            let mc = counts[i] + self.add[i];
+            path_items.truncate(depth - 1);
+            path_counts.truncate(depth - 1);
+            path_items.push(items[i]);
+            path_counts.push(mc);
+            if prune(mc as f64 / n_f) {
+                i = sub_end[i] as usize;
+                continue;
+            }
+            for split in 1..depth {
+                let consequent = &path_items[split..];
+                let metrics = if split == depth - 1 {
+                    RuleMetrics::from_counts(RuleCounts {
+                        n,
+                        c_ac: mc,
+                        c_a: path_counts[split - 1],
+                        c_c: self.order.frequency(items[i]),
+                    })
+                } else {
+                    let c_c = self.support_of_ordered(base, consequent).unwrap_or(n);
+                    RuleMetrics::from_counts(RuleCounts {
+                        n,
+                        c_ac: mc,
+                        c_a: path_counts[split - 1],
+                        c_c,
+                    })
+                };
+                f(&path_items[..split], consequent, &metrics);
+            }
+            i += 1;
+        }
+        visited
+    }
+
+    /// The overlay half of the merged traversal: a stack DFS over the
+    /// overlay trie. Owned nodes count as visited and emit their splits;
+    /// shared (unowned) nodes only steer — their prune decision still cuts
+    /// the descent, mirroring the subtree the base sweep (and the batch
+    /// executor) would cut at the same itemset. Returns owned nodes
+    /// visited.
+    pub fn for_each_delta_rule_pruned(
+        &self,
+        base: &TrieOfRules,
+        mut prune: impl FnMut(f64) -> bool,
+        mut f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
+    ) -> usize {
+        let n = (self.n as u64).max(1);
+        let n_f = self.n as f64;
+        let mut visited = 0usize;
+        let mut stack: Vec<(u32, usize)> = self.nodes[0]
+            .children
+            .iter()
+            .rev()
+            .map(|&(_, c)| (c, 1usize))
+            .collect();
+        let mut path_items: Vec<ItemId> = Vec::new();
+        let mut path_counts: Vec<u64> = Vec::new();
+        while let Some((idx, depth)) = stack.pop() {
+            let node = &self.nodes[idx as usize];
+            path_items.truncate(depth - 1);
+            path_counts.truncate(depth - 1);
+            path_items.push(node.item);
+            path_counts.push(node.count);
+            if node.owned {
+                visited += 1;
+            }
+            if prune(node.count as f64 / n_f) {
+                continue;
+            }
+            if node.owned {
+                for split in 1..depth {
+                    let consequent = &path_items[split..];
+                    let metrics = if split == depth - 1 {
+                        RuleMetrics::from_counts(RuleCounts {
+                            n,
+                            c_ac: node.count,
+                            c_a: path_counts[split - 1],
+                            c_c: self.order.frequency(node.item),
+                        })
+                    } else {
+                        let c_c = self.support_of_ordered(base, consequent).unwrap_or(n);
+                        RuleMetrics::from_counts(RuleCounts {
+                            n,
+                            c_ac: node.count,
+                            c_a: path_counts[split - 1],
+                            c_c,
+                        })
+                    };
+                    f(&path_items[..split], consequent, &metrics);
+                }
+            }
+            for &(_, child) in node.children.iter().rev() {
+                stack.push((child, depth + 1));
+            }
+        }
+        visited
+    }
+}
+
+/// One pinned, immutable serving state: a frozen base snapshot plus (when
+/// transactions are pending) its delta overlay. Cheap to clone
+/// (`Arc`s); the service swaps a fresh view in after every
+/// ingest/compaction while in-flight queries finish on the one they hold.
+#[derive(Debug, Clone)]
+pub struct MergedView {
+    pub epoch: u64,
+    pub base: Arc<TrieOfRules>,
+    pub overlay: Option<Arc<DeltaOverlay>>,
+}
+
+impl MergedView {
+    /// A static view over a bare frozen trie (no incremental layer).
+    pub fn from_trie(trie: TrieOfRules) -> MergedView {
+        MergedView {
+            epoch: 0,
+            base: Arc::new(trie),
+            overlay: None,
+        }
+    }
+
+    /// Cumulative transaction count.
+    pub fn num_transactions(&self) -> usize {
+        match &self.overlay {
+            Some(ov) => ov.num_transactions(),
+            None => self.base.num_transactions(),
+        }
+    }
+
+    /// Merged rule lookup.
+    pub fn find_rule(&self, rule: &Rule) -> FindOutcome {
+        match &self.overlay {
+            Some(ov) => ov.find_rule(&self.base, rule),
+            None => self.base.find_rule(rule),
+        }
+    }
+
+    /// Merged itemset support.
+    pub fn support_of(&self, items: &[ItemId]) -> Option<u64> {
+        match &self.overlay {
+            Some(ov) => ov.support_of(&self.base, items),
+            None => self.base.support_of(items),
+        }
+    }
+}
+
+/// Outcome of one [`IncrementalTrie::ingest`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestReport {
+    /// Transactions absorbed by this call.
+    pub ingested: usize,
+    /// Pending (uncompacted) transactions after the call.
+    pub pending: usize,
+    /// New candidate itemsets discovered by mining the batch.
+    pub new_candidates: usize,
+}
+
+/// The mutable incremental store behind a serving engine: base snapshot +
+/// retained base database + exact cumulative candidate counts + pending
+/// transaction tail, with [`Self::ingest`]/[`Self::compact`] maintaining
+/// the invariants the merged executor's batch-parity proof rests on.
+pub struct IncrementalTrie {
+    minsup: f64,
+    base: Arc<TrieOfRules>,
+    base_db: TransactionDb,
+    /// Vertical bitsets over `base_db`, built once per epoch so counting
+    /// never-seen candidates against the base costs probes, not a full
+    /// re-verticalization of the database on every ingest.
+    base_counter: BitsetCounter,
+    /// Normalized (sorted, deduped) transactions since the last compaction.
+    pending: Vec<Vec<ItemId>>,
+    /// Item frequencies over `pending` alone.
+    pending_freqs: Vec<u64>,
+    /// Exact cumulative counts of every candidate itemset (base-frequent ∪
+    /// batch-frequent for every ingested batch).
+    cands: HashMap<Itemset, u64>,
+    /// Pending counts per base node (preorder; add[0] unused).
+    add: Vec<u64>,
+    overlay: Option<Arc<DeltaOverlay>>,
+    epoch: u64,
+    compactions: u64,
+}
+
+impl IncrementalTrie {
+    /// Wrap a frozen snapshot for incremental serving. `frequent` must be
+    /// the *complete* frequent-itemset collection the trie was built from
+    /// (one trie node per itemset) and `db` the database it was mined on.
+    pub fn new(
+        trie: TrieOfRules,
+        db: TransactionDb,
+        frequent: &FrequentItemsets,
+        minsup: f64,
+    ) -> Result<IncrementalTrie> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&minsup),
+            "minsup {minsup} outside [0, 1]"
+        );
+        anyhow::ensure!(
+            trie.num_transactions() == db.num_transactions(),
+            "trie built on {} transactions but the database holds {}",
+            trie.num_transactions(),
+            db.num_transactions()
+        );
+        anyhow::ensure!(
+            trie.num_nodes() == frequent.len(),
+            "trie has {} nodes but the frequent set has {} itemsets — the \
+             incremental layer needs the complete (subset-closed) collection",
+            trie.num_nodes(),
+            frequent.len()
+        );
+        anyhow::ensure!(
+            trie.order().min_count_used() == min_count(minsup, db.num_transactions()),
+            "trie threshold {} disagrees with minsup {minsup} over {} transactions",
+            trie.order().min_count_used(),
+            db.num_transactions()
+        );
+        let cands: HashMap<Itemset, u64> =
+            frequent.sets.iter().map(|(s, c)| (s.clone(), *c)).collect();
+        let add = vec![0u64; trie.num_nodes() + 1];
+        let pending_freqs = vec![0u64; db.num_items()];
+        let base_counter = BitsetCounter::new(&db);
+        Ok(IncrementalTrie {
+            minsup,
+            base: Arc::new(trie),
+            base_db: db,
+            base_counter,
+            pending: Vec::new(),
+            pending_freqs,
+            cands,
+            add,
+            overlay: None,
+            epoch: 0,
+            compactions: 0,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // accessors
+    // ------------------------------------------------------------------
+
+    pub fn base(&self) -> &Arc<TrieOfRules> {
+        &self.base
+    }
+
+    pub fn minsup(&self) -> f64 {
+        self.minsup
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn pending(&self) -> &[Vec<ItemId>] {
+        &self.pending
+    }
+
+    /// Owned overlay nodes (0 when no delta is pending).
+    pub fn delta_nodes(&self) -> usize {
+        self.overlay.as_ref().map(|o| o.delta_nodes()).unwrap_or(0)
+    }
+
+    /// Cumulative transaction count.
+    pub fn num_transactions(&self) -> usize {
+        self.base_db.num_transactions() + self.pending.len()
+    }
+
+    /// The current pinned serving state.
+    pub fn view(&self) -> MergedView {
+        MergedView {
+            epoch: self.epoch,
+            base: Arc::clone(&self.base),
+            overlay: self.overlay.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // ingest
+    // ------------------------------------------------------------------
+
+    /// Absorb a batch of transactions (item ids against the fixed base
+    /// vocabulary) and rebuild the overlay. Cost is dominated by mining
+    /// the *batch* and counting it against the standing candidates — the
+    /// retained base is touched only for candidates never seen before.
+    pub fn ingest(&mut self, txs: &[Vec<ItemId>]) -> Result<IngestReport> {
+        let num_items = self.base_db.num_items();
+        let mut batch: Vec<Vec<ItemId>> = Vec::with_capacity(txs.len());
+        for tx in txs {
+            let mut t = tx.clone();
+            t.sort_unstable();
+            t.dedup();
+            anyhow::ensure!(
+                t.iter().all(|&i| (i as usize) < num_items),
+                "transaction references item id outside the fixed vocabulary \
+                 ({num_items} items)"
+            );
+            batch.push(t);
+        }
+        if batch.is_empty() {
+            return Ok(IngestReport {
+                ingested: 0,
+                pending: self.pending.len(),
+                new_candidates: 0,
+            });
+        }
+
+        // Mine the batch alone: by the partition lemma, base-frequent ∪
+        // (batch-frequent per batch) is a complete cumulative candidate
+        // set at the shared relative threshold.
+        let mut builder = TransactionDb::builder(self.base_db.vocab().clone());
+        for t in &batch {
+            builder.push_ids(t.clone());
+        }
+        let batch_db = builder.build();
+        let fi_batch = fpgrowth(&batch_db, self.minsup);
+
+        // Existing candidates: add their exact batch counts.
+        let mut existing: Vec<Itemset> = self.cands.keys().cloned().collect();
+        existing.sort_unstable_by(|a, b| a.items().cmp(b.items()));
+        let mut batch_counter = BitsetCounter::new(&batch_db);
+        let batch_counts = batch_counter.count(&existing);
+        for (set, extra) in existing.iter().zip(batch_counts) {
+            if extra > 0 {
+                *self.cands.get_mut(set).expect("existing candidate") += extra;
+            }
+        }
+
+        // New candidates: count once against the retained base and the
+        // previous pending tail (their batch count is exact from mining).
+        let new_sets: Vec<(Itemset, u64)> = fi_batch
+            .sets
+            .iter()
+            .filter(|(s, _)| !self.cands.contains_key(s))
+            .cloned()
+            .collect();
+        let new_candidates = new_sets.len();
+        if !new_sets.is_empty() {
+            let keys: Vec<Itemset> = new_sets.iter().map(|(s, _)| s.clone()).collect();
+            // Base side: probe the per-epoch vertical bitsets (no database
+            // re-scan). Pending side: the tail is small by construction
+            // (compaction bounds it), so a direct sorted-subset scan beats
+            // re-materializing it into a TransactionDb every ingest.
+            let base_counts = self.base_counter.count(&keys);
+            for (k, (set, in_batch)) in new_sets.into_iter().enumerate() {
+                let in_prev = self
+                    .pending
+                    .iter()
+                    .filter(|tx| sorted_subset(set.items(), tx))
+                    .count() as u64;
+                self.cands.insert(set, in_batch + base_counts[k] + in_prev);
+            }
+        }
+
+        // Fold the batch into the pending tail: frequencies, per-base-node
+        // pending counts (incremental support counting: each transaction
+        // walks only the base subtrees it actually contains), and the raw
+        // rows the next compaction will fold in.
+        let ingested = batch.len();
+        for t in batch {
+            for &it in &t {
+                self.pending_freqs[it as usize] += 1;
+            }
+            self.count_into_base(&t);
+            self.pending.push(t);
+        }
+
+        self.rebuild_overlay()?;
+        Ok(IngestReport {
+            ingested,
+            pending: self.pending.len(),
+            new_candidates,
+        })
+    }
+
+    /// Subset-walk one transaction over the base trie, incrementing the
+    /// pending count of every base node whose path itemset the
+    /// transaction contains. Paths are rank-increasing sequences, so the
+    /// walk descends only through matching children — O(matching nodes).
+    fn count_into_base(&mut self, tx: &[ItemId]) {
+        let base = &self.base;
+        let order = base.order();
+        let mut seq: Vec<ItemId> = tx
+            .iter()
+            .copied()
+            .filter(|&i| order.is_frequent(i))
+            .collect();
+        seq.sort_by_key(|&i| order.rank(i).expect("filtered frequent"));
+        fn walk(base: &TrieOfRules, add: &mut [u64], node: NodeIdx, seq: &[ItemId], pos: usize) {
+            for k in pos..seq.len() {
+                if let Some(child) = base.child(node, seq[k]) {
+                    add[child as usize] += 1;
+                    walk(base, add, child, seq, k + 1);
+                }
+            }
+        }
+        walk(base, &mut self.add, ROOT, &seq, 0);
+    }
+
+    /// Cumulative (n, absolute threshold, item frequencies).
+    fn cum_params(&self) -> (usize, u64, Vec<u64>) {
+        let n = self.base_db.num_transactions() + self.pending.len();
+        let minc = min_count(self.minsup, n);
+        let freqs: Vec<u64> = self
+            .base
+            .order()
+            .frequencies()
+            .iter()
+            .zip(&self.pending_freqs)
+            .map(|(a, b)| a + b)
+            .collect();
+        (n, minc, freqs)
+    }
+
+    fn rebuild_overlay(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            self.overlay = None;
+            return Ok(());
+        }
+        let (n, minc, freqs) = self.cum_params();
+        let order = ItemOrder::from_frequencies(freqs, minc);
+        let overlay = DeltaOverlay::build(
+            &self.base,
+            order,
+            n,
+            minc,
+            self.add.clone(),
+            &self.cands,
+            self.pending.len(),
+            self.epoch,
+        )?;
+        self.overlay = Some(Arc::new(overlay));
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // compaction
+    // ------------------------------------------------------------------
+
+    /// Merge the pending delta into a fresh frozen snapshot (the
+    /// maintained cumulative frequent set through
+    /// [`TrieOfRules::from_sorted_paths`] — byte-identical to a
+    /// from-scratch batch build on the cumulative data) and reset the
+    /// delta state. With a worker pool the trie build and the database
+    /// fold-in overlap. Returns false when nothing was pending.
+    pub fn compact(&mut self, pool: Option<&WorkerPool>) -> Result<bool> {
+        if self.pending.is_empty() {
+            return Ok(false);
+        }
+        let (n, minc, freqs) = self.cum_params();
+        let order = ItemOrder::from_frequencies(freqs, minc);
+        let mut sets: Vec<(Itemset, u64)> = self
+            .cands
+            .iter()
+            .filter(|(_, &c)| c >= minc)
+            .map(|(s, &c)| (s.clone(), c))
+            .collect();
+        sets.sort_unstable_by(|a, b| a.0.items().cmp(b.0.items()));
+        let fi = FrequentItemsets {
+            num_transactions: n,
+            sets,
+        };
+
+        let build_trie = || TrieOfRules::from_sorted_paths(&fi, &order);
+        let build_db = || {
+            let mut builder = TransactionDb::builder(self.base_db.vocab().clone());
+            for tx in self.base_db.iter() {
+                builder.push_ids(tx.to_vec());
+            }
+            for tx in &self.pending {
+                builder.push_ids(tx.clone());
+            }
+            builder.build()
+        };
+        let (trie, db) = match pool.filter(|p| p.helpers() > 0) {
+            Some(pool) => {
+                let trie_slot: Mutex<Option<Result<TrieOfRules>>> = Mutex::new(None);
+                let db_slot: Mutex<Option<TransactionDb>> = Mutex::new(None);
+                pool.run(2, |task| {
+                    if task == 0 {
+                        *trie_slot.lock().unwrap() = Some(build_trie());
+                    } else {
+                        *db_slot.lock().unwrap() = Some(build_db());
+                    }
+                });
+                let trie = trie_slot.into_inner().unwrap().expect("trie task ran")?;
+                let db = db_slot.into_inner().unwrap().expect("db task ran");
+                (trie, db)
+            }
+            None => (build_trie()?, build_db()),
+        };
+
+        self.cands = fi.sets.into_iter().collect();
+        self.base = Arc::new(trie);
+        self.base_db = db;
+        self.base_counter = BitsetCounter::new(&self.base_db);
+        self.pending.clear();
+        self.pending_freqs = vec![0u64; self.base_db.num_items()];
+        self.add = vec![0u64; self.base.num_nodes() + 1];
+        self.overlay = None;
+        self.epoch += 1;
+        self.compactions += 1;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::paper_example_db;
+    use crate::trie::serialize;
+
+    fn paper_store() -> (TransactionDb, IncrementalTrie) {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let store = IncrementalTrie::new(trie, db.clone(), &fi, 0.3).unwrap();
+        (db, store)
+    }
+
+    fn batch_trie(
+        rows: &[Vec<ItemId>],
+        vocab: &crate::data::vocab::Vocab,
+        minsup: f64,
+    ) -> TrieOfRules {
+        let mut b = TransactionDb::builder(vocab.clone());
+        for r in rows {
+            b.push_ids(r.clone());
+        }
+        let db = b.build();
+        let fi = fpgrowth(&db, minsup);
+        let order = ItemOrder::new(&db, min_count(minsup, db.num_transactions()));
+        TrieOfRules::from_sorted_paths(&fi, &order).unwrap()
+    }
+
+    #[test]
+    fn empty_ingest_is_a_noop() {
+        let (_, mut store) = paper_store();
+        let r = store.ingest(&[]).unwrap();
+        assert_eq!(r.ingested, 0);
+        assert!(store.view().overlay.is_none());
+        assert!(!store.compact(None).unwrap());
+        assert_eq!(store.epoch(), 0);
+    }
+
+    #[test]
+    fn ingest_then_compact_matches_batch_snapshot_bytes() {
+        let (db, mut store) = paper_store();
+        let mut cumulative: Vec<Vec<ItemId>> = db.iter().map(|t| t.to_vec()).collect();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        let batches: Vec<Vec<Vec<ItemId>>> = vec![
+            vec![vec![name("f"), name("c"), name("a")], vec![name("b"), name("p")]],
+            vec![vec![name("f"), name("b"), name("m")]],
+        ];
+        for batch in batches {
+            store.ingest(&batch).unwrap();
+            cumulative.extend(batch);
+            // Merged support equals the cumulative truth for a few probes.
+            let view = store.view();
+            for probe in [vec![name("f")], vec![name("f"), name("c")], vec![name("b")]] {
+                let truth = cumulative
+                    .iter()
+                    .filter(|tx| probe.iter().all(|i| tx.contains(i)))
+                    .count() as u64;
+                let minc = min_count(0.3, cumulative.len());
+                let got = view.support_of(&probe);
+                if truth >= minc {
+                    assert_eq!(got, Some(truth), "probe {probe:?}");
+                }
+            }
+        }
+        assert!(store.compact(None).unwrap());
+        assert_eq!(store.epoch(), 1);
+        assert_eq!(store.compactions(), 1);
+        assert_eq!(store.pending_len(), 0);
+        let batch = batch_trie(&cumulative, db.vocab(), 0.3);
+        let mut a = Vec::new();
+        serialize::save_to(store.base(), Some(db.vocab()), &mut a).unwrap();
+        let mut b = Vec::new();
+        serialize::save_to(&batch, Some(db.vocab()), &mut b).unwrap();
+        assert_eq!(a, b, "compacted snapshot differs from batch rebuild");
+    }
+
+    #[test]
+    fn overlay_partition_covers_every_cumulative_itemset_once() {
+        let (db, mut store) = paper_store();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        store
+            .ingest(&[
+                vec![name("f"), name("b"), name("a")],
+                vec![name("b"), name("a")],
+                vec![name("b"), name("a"), name("m")],
+            ])
+            .unwrap();
+        let view = store.view();
+        let ov = view.overlay.as_ref().unwrap();
+        let base = &view.base;
+        // Enumerate merged stored itemsets: live base paths + owned
+        // overlay paths; compare against the batch trie's node paths.
+        let mut cumulative: Vec<Vec<ItemId>> = db.iter().map(|t| t.to_vec()).collect();
+        for tx in store.pending() {
+            cumulative.push(tx.clone());
+        }
+        let batch = batch_trie(&cumulative, db.vocab(), 0.3);
+        let mut merged_sets: Vec<(Vec<ItemId>, u64)> = Vec::new();
+        for i in 1..=base.num_nodes() {
+            let i = i as NodeIdx;
+            if ov.live_node(i) {
+                let mut items = base.path_items(i);
+                items.sort_unstable();
+                merged_sets.push((items, ov.merged_count(base, i)));
+            }
+        }
+        for item in 0..db.vocab().len() as ItemId {
+            for &d in ov.delta_item_nodes(item) {
+                let mut items = ov.delta_path_items(d);
+                items.sort_unstable();
+                merged_sets.push((items, ov.delta_count(d)));
+            }
+        }
+        merged_sets.sort();
+        let mut batch_sets: Vec<(Vec<ItemId>, u64)> = (1..=batch.num_nodes())
+            .map(|i| {
+                let mut items = batch.path_items(i as NodeIdx);
+                items.sort_unstable();
+                (items, batch.count(i as NodeIdx))
+            })
+            .collect();
+        batch_sets.sort();
+        assert_eq!(merged_sets, batch_sets);
+    }
+
+    #[test]
+    fn ingest_rejects_unknown_items() {
+        let (db, mut store) = paper_store();
+        let bad = db.vocab().len() as ItemId + 5;
+        assert!(store.ingest(&[vec![bad]]).is_err());
+    }
+
+    #[test]
+    fn pooled_compaction_matches_sequential() {
+        let (db, mut a) = paper_store();
+        let (_, mut b) = paper_store();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        let batch = vec![vec![name("f"), name("c")], vec![name("p"), name("b")]];
+        a.ingest(&batch).unwrap();
+        b.ingest(&batch).unwrap();
+        let pool = WorkerPool::new(3);
+        a.compact(Some(&pool)).unwrap();
+        b.compact(None).unwrap();
+        let mut ab = Vec::new();
+        serialize::save_to(a.base(), Some(db.vocab()), &mut ab).unwrap();
+        let mut bb = Vec::new();
+        serialize::save_to(b.base(), Some(db.vocab()), &mut bb).unwrap();
+        assert_eq!(ab, bb);
+    }
+}

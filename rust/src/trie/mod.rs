@@ -11,6 +11,7 @@
 
 pub mod builder;
 pub mod compound;
+pub mod delta;
 pub mod node;
 pub mod serialize;
 #[allow(clippy::module_inception)]
@@ -19,5 +20,6 @@ pub mod viz;
 
 pub use builder::TrieBuilder;
 pub use compound::{confidence_by_product, verify_eq4};
+pub use delta::{DeltaOverlay, DeltaStat, IncrementalTrie, IngestReport, MergedView};
 pub use node::{NodeIdx, TrieNode, ROOT};
 pub use trie::{and_column_pred, FindOutcome, NodeView, TrieOfRules, PRED_BATCH};

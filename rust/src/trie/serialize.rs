@@ -48,6 +48,10 @@ const MAGIC: [u8; 4] = *b"TOR\x01";
 const VERSION_V1: u32 = 1;
 const VERSION_V2: u32 = 2;
 
+/// Magic of the incremental delta sidecar (`<snapshot>.delta`).
+const DELTA_MAGIC: [u8; 4] = *b"TORD";
+const DELTA_VERSION: u32 = 1;
+
 /// Save a trie (and optionally its vocabulary) to `path` in the current
 /// (v2, columnar) format.
 pub fn save(trie: &TrieOfRules, vocab: Option<&Vocab>, path: &Path) -> Result<()> {
@@ -235,6 +239,72 @@ fn load_v2_body<R: Read>(
         header_offsets,
         header_nodes,
     )
+}
+
+// -- incremental delta sidecar -------------------------------------------
+
+/// Persist the pending (uncompacted) transaction tail of an incremental
+/// service next to its frozen snapshot (`SNAPSHOT` writes the v2 snapshot
+/// plus this sidecar). Format, little-endian:
+///
+/// ```text
+/// magic "TORD" | version u32 (= 1) | epoch u64 | minsup f64 (bit pattern)
+/// num_tx u32 | per tx: len u32, item ids u32…
+/// ```
+///
+/// Restoring a service: the v2 snapshot does **not** carry the base
+/// transaction database the incremental store needs, so restore = re-run
+/// the pipeline on the base source and fold the sidecar back in via
+/// [`crate::trie::delta::IncrementalTrie::ingest`] — that is what
+/// `tor query|serve --replay-delta FILE` does (exactness: the 2-part
+/// partition argument of DESIGN.md §13; the replayed merged view equals
+/// the pre-restart one, tested in `rust/tests/incremental_parity.rs`).
+pub fn save_delta(path: &Path, epoch: u64, minsup: f64, pending: &[Vec<u32>]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&DELTA_MAGIC)?;
+    w.write_all(&DELTA_VERSION.to_le_bytes())?;
+    w.write_all(&epoch.to_le_bytes())?;
+    w.write_all(&minsup.to_bits().to_le_bytes())?;
+    w.write_all(&(pending.len() as u32).to_le_bytes())?;
+    for tx in pending {
+        w.write_all(&(tx.len() as u32).to_le_bytes())?;
+        for &it in tx {
+            w.write_all(&it.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a delta sidecar: `(epoch, minsup, pending transactions)`.
+pub fn load_delta(path: &Path) -> Result<(u64, f64, Vec<Vec<u32>>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("read delta magic")?;
+    anyhow::ensure!(magic == DELTA_MAGIC, "not a delta sidecar (bad magic)");
+    let version = read_u32(&mut r)?;
+    anyhow::ensure!(version == DELTA_VERSION, "unsupported delta version {version}");
+    let epoch = read_u64(&mut r)?;
+    let minsup = f64::from_bits(read_u64(&mut r)?);
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&minsup),
+        "implausible minsup {minsup} in sidecar"
+    );
+    let num_tx = read_u32(&mut r)? as usize;
+    anyhow::ensure!(num_tx < 1 << 28, "implausible transaction count {num_tx}");
+    let mut pending = Vec::with_capacity(num_tx);
+    for _ in 0..num_tx {
+        let len = read_u32(&mut r)? as usize;
+        anyhow::ensure!(len < 1 << 24, "implausible transaction length {len}");
+        let mut tx = Vec::with_capacity(len);
+        for _ in 0..len {
+            tx.push(read_u32(&mut r)?);
+        }
+        pending.push(tx);
+    }
+    Ok((epoch, minsup, pending))
 }
 
 // -- column I/O helpers ---------------------------------------------------
@@ -445,6 +515,25 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path).unwrap_err();
         assert!(err.to_string().contains("exceeds parent"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn delta_sidecar_roundtrip_and_rejection() {
+        let path = tmpfile("sidecar");
+        let pending: Vec<Vec<u32>> = vec![vec![0, 3, 5], vec![2], vec![1, 4]];
+        save_delta(&path, 7, 0.005, &pending).unwrap();
+        let (epoch, minsup, back) = load_delta(&path).unwrap();
+        assert_eq!(epoch, 7);
+        assert!((minsup - 0.005).abs() < 1e-15);
+        assert_eq!(back, pending);
+        // Garbage and truncation are rejected.
+        std::fs::write(&path, b"not a sidecar").unwrap();
+        assert!(load_delta(&path).is_err());
+        save_delta(&path, 7, 0.005, &pending).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_delta(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 

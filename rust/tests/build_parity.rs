@@ -14,8 +14,10 @@
 //! These are the guarantees that let `coordinator::pipeline` swap the
 //! sequential stages for the pooled ones without any observable change.
 
+mod common;
+
+use common::{for_all, random_db, shrink_vec, test_degrees, to_db};
 use trie_of_rules::data::transaction::{paper_example_db, TransactionDb};
-use trie_of_rules::data::vocab::Vocab;
 use trie_of_rules::mining::counts::{min_count, ItemOrder};
 use trie_of_rules::mining::fpgrowth::{fpgrowth, fpgrowth_parallel};
 use trie_of_rules::query::parallel::WorkerPool;
@@ -23,34 +25,11 @@ use trie_of_rules::rules::metrics::Metric;
 use trie_of_rules::rules::rulegen::{generate_rules, generate_rules_parallel, RuleGenConfig};
 use trie_of_rules::trie::builder::TrieBuilder;
 use trie_of_rules::trie::trie::TrieOfRules;
-use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
 
-fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
-    let num_items = g.usize_in(3, 12);
-    let num_tx = g.usize_in(4, 60);
-    (0..num_tx)
-        .map(|_| {
-            let len = g.usize_in(1, num_items.min(6) + 1);
-            (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
-        })
-        .collect()
-}
-
-fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
-    if rows.is_empty() {
-        return None;
-    }
-    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
-    let mut b = TransactionDb::builder(Vocab::synthetic(max_item as usize + 1));
-    for r in rows {
-        b.push_ids(r.clone());
-    }
-    Some(b.build())
-}
-
-/// Degrees the ISSUE acceptance demands: {1, 2, 4, 8} ⇒ helpers {0,1,3,7}.
+/// Degrees the ISSUE acceptance demands: {1, 2, 4, 8} ⇒ helpers {t-1};
+/// `TOR_QUERY_THREADS` pins a single degree (the CI matrix legs).
 fn pools() -> Vec<WorkerPool> {
-    [1usize, 2, 4, 8]
+    test_degrees()
         .into_iter()
         .map(|t| WorkerPool::new(t - 1))
         .collect()

@@ -1,0 +1,122 @@
+//! Shared property-test harness for the integration suite.
+//!
+//! The three build/freeze/query parity suites used to carry their own
+//! copy-pasted generators; this module is the single home for
+//!
+//! * the seeded **random database** generator (and its fixed-vocabulary
+//!   variant, for tests that keep ingesting into one item universe);
+//! * the **random RQL query** generator exercised against every backend;
+//! * the **thread-degree matrix** (`TOR_QUERY_THREADS=N` pins the suite to
+//!   one degree — the CI matrix legs run it at 1 and 8);
+//! * re-exports of the in-house mini-proptest engine
+//!   ([`for_all`]/[`shrink_vec`]/[`Gen`]: seeded xorshift RNG with
+//!   greedy shrink-on-failure — see `util::proptest`).
+//!
+//! Each integration test binary pulls this in with `mod common;`, so the
+//! generators stay byte-for-byte identical across suites and a seed
+//! printed by one failure reproduces everywhere.
+
+#![allow(dead_code)]
+
+pub use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen, PropResult};
+pub use trie_of_rules::util::rng::Rng;
+
+use trie_of_rules::data::transaction::TransactionDb;
+use trie_of_rules::data::vocab::Vocab;
+use trie_of_rules::rules::metrics::Metric;
+
+/// Random transaction rows over a random-sized vocabulary (3–11 items,
+/// 4–59 transactions, 1–6 items each) — the shared shape of every parity
+/// property in the suite.
+pub fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
+    let num_items = g.usize_in(3, 12);
+    let num_tx = g.usize_in(4, 60);
+    (0..num_tx)
+        .map(|_| random_tx_sized(g, num_items))
+        .collect()
+}
+
+/// One random transaction over a fixed item universe.
+pub fn random_tx_sized(g: &mut Gen, num_items: usize) -> Vec<u32> {
+    let len = g.usize_in(1, num_items.min(6) + 1);
+    (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
+}
+
+/// Materialize rows into a [`TransactionDb`] over a synthetic vocabulary
+/// sized by the largest item id (None when `rows` is empty).
+pub fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
+    if rows.is_empty() {
+        return None;
+    }
+    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
+    to_db_sized(rows, max_item as usize + 1)
+}
+
+/// [`to_db`] with an explicit vocabulary size — required when later
+/// ingests may reference items the base rows never mention.
+pub fn to_db_sized(rows: &[Vec<u32>], num_items: usize) -> Option<TransactionDb> {
+    if rows.is_empty() {
+        return None;
+    }
+    let mut b = TransactionDb::builder(Vocab::synthetic(num_items));
+    for r in rows {
+        b.push_ids(r.clone());
+    }
+    Some(b.build())
+}
+
+/// One random RQL query over a vocabulary. Items are drawn from the
+/// *whole* vocabulary (not just frequent items), so queries over
+/// infrequent consequents — empty header lists — are exercised too.
+pub fn random_rql(rng: &mut Rng, vocab: &Vocab) -> String {
+    let any_item = |rng: &mut Rng| vocab.name(rng.below(vocab.len()) as u32).to_string();
+    let mut q = String::from("RULES");
+    let mut preds: Vec<String> = Vec::new();
+    if rng.chance(0.5) {
+        preds.push(format!("conseq = '{}'", any_item(rng)));
+    }
+    if rng.chance(0.3) {
+        preds.push(format!("conseq CONTAINS '{}'", any_item(rng)));
+    }
+    if rng.chance(0.4) {
+        preds.push(format!("antecedent CONTAINS '{}'", any_item(rng)));
+    }
+    if rng.chance(0.6) {
+        let metric = Metric::ALL[rng.below(Metric::ALL.len())];
+        let op = ["<=", "<", ">=", ">", "="][rng.below(5)];
+        // A range wide enough to cover every metric's span (lift and
+        // conviction exceed 1; leverage/zhang/yule_q go negative).
+        let value = rng.f64() * 3.0 - 0.5;
+        preds.push(format!("{} {op} {value:.4}", metric.name()));
+    }
+    for (i, p) in preds.iter().enumerate() {
+        q.push_str(if i == 0 { " WHERE " } else { " AND " });
+        q.push_str(p);
+    }
+    if rng.chance(0.5) {
+        let metric = Metric::ALL[rng.below(Metric::ALL.len())];
+        let dir = if rng.chance(0.5) { "DESC" } else { "ASC" };
+        q.push_str(&format!(" SORT BY {} {dir}", metric.name()));
+    }
+    if rng.chance(0.5) {
+        q.push_str(&format!(" LIMIT {}", rng.below(20)));
+    }
+    q
+}
+
+/// Thread degrees the parallel parity suites sweep. Defaults to the
+/// acceptance matrix {1, 2, 4, 8}; the CI test-matrix legs pin one degree
+/// via `TOR_QUERY_THREADS=N` so the whole suite runs sequential-only and
+/// 8-way in separate jobs.
+pub fn test_degrees() -> Vec<usize> {
+    match std::env::var("TOR_QUERY_THREADS") {
+        Ok(v) => {
+            let d: usize = v
+                .trim()
+                .parse()
+                .expect("TOR_QUERY_THREADS must be a positive integer");
+            vec![d.max(1)]
+        }
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}

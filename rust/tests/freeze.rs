@@ -6,39 +6,15 @@
 //! exactly — the invariant the query planner's range-skip pruning rests
 //! on. Plus: builds are deterministic down to the serialized byte.
 
+mod common;
+
+use common::{for_all, random_db, shrink_vec, to_db, Rng};
 use trie_of_rules::bench_support::workloads::Workload;
-use trie_of_rules::data::transaction::TransactionDb;
-use trie_of_rules::data::vocab::Vocab;
 use trie_of_rules::rules::metrics::Metric;
 use trie_of_rules::rules::rule::Rule;
 use trie_of_rules::trie::node::ROOT;
 use trie_of_rules::trie::serialize;
 use trie_of_rules::trie::{TrieBuilder, TrieOfRules};
-use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
-use trie_of_rules::util::rng::Rng;
-
-fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
-    let num_items = g.usize_in(3, 12);
-    let num_tx = g.usize_in(4, 60);
-    (0..num_tx)
-        .map(|_| {
-            let len = g.usize_in(1, num_items.min(6) + 1);
-            (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
-        })
-        .collect()
-}
-
-fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
-    if rows.is_empty() {
-        return None;
-    }
-    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
-    let mut b = TransactionDb::builder(Vocab::synthetic(max_item as usize + 1));
-    for r in rows {
-        b.push_ids(r.clone());
-    }
-    Some(b.build())
-}
 
 /// Builder rebuilt from the workload's own mining output — the exact
 /// input `Workload::build` froze.

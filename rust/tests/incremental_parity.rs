@@ -1,0 +1,389 @@
+//! Incremental-vs-batch differential tests: for randomized streams of
+//! `INGEST` / `COMPACT` / RQL operations, the merged view (frozen base +
+//! delta overlay) must be indistinguishable from a from-scratch batch
+//! rebuild on the cumulative data at **every** point of the stream —
+//!
+//! * RQL result rows, their order, and the executor work counters are
+//!   compared exactly (not approximately), at every thread degree in the
+//!   acceptance matrix {1, 2, 4, 8};
+//! * `FIND` outcomes and `SUPPORT` counts are spot-checked the same way;
+//! * at every compaction boundary the new frozen snapshot must serialize
+//!   to **byte-identical** v2 bytes as a batch `from_sorted_paths` build
+//!   on the cumulative database.
+//!
+//! This is the executable statement of the ISSUE acceptance property:
+//! the incremental layer is an *optimization* of the batch pipeline, not
+//! a semantics change.
+
+mod common;
+
+use common::{for_all, random_rql, random_tx_sized, shrink_vec, test_degrees, to_db_sized, Gen, Rng};
+use trie_of_rules::data::transaction::TransactionDb;
+use trie_of_rules::data::vocab::ItemId;
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::query::parallel::ParallelExecutor;
+use trie_of_rules::query::{execute_trie, parser, QueryOutput};
+use trie_of_rules::rules::rule::Rule;
+use trie_of_rules::trie::delta::IncrementalTrie;
+use trie_of_rules::trie::serialize;
+use trie_of_rules::trie::trie::TrieOfRules;
+
+/// One randomized update-stream scenario.
+#[derive(Clone, Debug)]
+struct StreamCase {
+    num_items: usize,
+    base_rows: Vec<Vec<u32>>,
+    ops: Vec<Op>,
+    minsup: f64,
+    qseed: u64,
+}
+
+#[derive(Clone, Debug)]
+enum Op {
+    Ingest(Vec<Vec<u32>>),
+    Compact,
+}
+
+fn gen_case(g: &mut Gen) -> StreamCase {
+    let num_items = g.usize_in(3, 10);
+    let num_tx = g.usize_in(4, 36);
+    let base_rows: Vec<Vec<u32>> = (0..num_tx).map(|_| random_tx_sized(g, num_items)).collect();
+    let num_ops = g.usize_in(1, 6);
+    let ops = (0..num_ops)
+        .map(|_| {
+            if g.usize_in(0, 10) < 7 {
+                let batch = (0..g.usize_in(1, 7))
+                    .map(|_| random_tx_sized(g, num_items))
+                    .collect();
+                Op::Ingest(batch)
+            } else {
+                Op::Compact
+            }
+        })
+        .collect();
+    StreamCase {
+        num_items,
+        base_rows,
+        ops,
+        minsup: [0.08, 0.15, 0.3][g.usize_in(0, 3)],
+        qseed: g.rng().next_u64(),
+    }
+}
+
+fn shrink_case(c: &StreamCase) -> Vec<StreamCase> {
+    let mut out = Vec::new();
+    for rows in shrink_vec(&c.base_rows) {
+        let mut s = c.clone();
+        s.base_rows = rows;
+        out.push(s);
+    }
+    for ops in shrink_vec(&c.ops) {
+        let mut s = c.clone();
+        s.ops = ops;
+        out.push(s);
+    }
+    out
+}
+
+/// Batch oracle on the cumulative rows: mine + freeze from scratch.
+fn batch_build(rows: &[Vec<u32>], num_items: usize, minsup: f64) -> (TransactionDb, TrieOfRules) {
+    let db = to_db_sized(rows, num_items).expect("non-empty cumulative rows");
+    let fi = fpgrowth(&db, minsup);
+    let order = ItemOrder::new(&db, min_count(minsup, db.num_transactions()));
+    let trie = TrieOfRules::from_sorted_paths(&fi, &order).expect("batch build");
+    (db, trie)
+}
+
+/// A random rule probe over the full vocabulary (mostly absent/notrep).
+fn random_rule(rng: &mut Rng, num_items: usize) -> Option<Rule> {
+    if num_items < 2 {
+        return None;
+    }
+    let total = 2 + rng.below(num_items.min(4) - 1);
+    let mut items: Vec<ItemId> = Vec::new();
+    while items.len() < total {
+        let it = rng.below(num_items) as ItemId;
+        if !items.contains(&it) {
+            items.push(it);
+        }
+    }
+    let a_len = 1 + rng.below(total - 1);
+    let (a, c) = items.split_at(a_len);
+    Some(Rule::from_ids(a.to_vec(), c.to_vec()))
+}
+
+fn check_stream(case: &StreamCase, execs: &[ParallelExecutor]) -> Result<(), String> {
+    let Some(db) = to_db_sized(&case.base_rows, case.num_items) else {
+        return Ok(());
+    };
+    let minsup = case.minsup;
+    let fi = fpgrowth(&db, minsup);
+    let order = ItemOrder::new(&db, min_count(minsup, db.num_transactions()));
+    let trie =
+        TrieOfRules::from_frequent(&fi, &order).map_err(|e| format!("base build: {e:#}"))?;
+    let vocab = db.vocab().clone();
+    let mut store = IncrementalTrie::new(trie, db, &fi, minsup)
+        .map_err(|e| format!("store init: {e:#}"))?;
+    let mut cumulative = case.base_rows.clone();
+
+    for (step, op) in case.ops.iter().enumerate() {
+        match op {
+            Op::Ingest(batch) => {
+                store
+                    .ingest(batch)
+                    .map_err(|e| format!("step {step}: ingest failed: {e:#}"))?;
+                cumulative.extend(batch.iter().cloned());
+            }
+            Op::Compact => {
+                let had_pending = store.pending_len() > 0;
+                let did = store
+                    .compact(None)
+                    .map_err(|e| format!("step {step}: compact failed: {e:#}"))?;
+                if did != had_pending {
+                    return Err(format!("step {step}: compact did={did} pending={had_pending}"));
+                }
+                // Snapshot byte parity at the compaction boundary.
+                let (_odb, otrie) = batch_build(&cumulative, case.num_items, minsup);
+                let mut got = Vec::new();
+                serialize::save_to(store.base(), Some(&vocab), &mut got)
+                    .map_err(|e| format!("{e:#}"))?;
+                let mut want = Vec::new();
+                serialize::save_to(&otrie, Some(&vocab), &mut want)
+                    .map_err(|e| format!("{e:#}"))?;
+                if got != want {
+                    return Err(format!(
+                        "step {step}: compacted snapshot bytes differ from batch rebuild \
+                         ({} vs {} bytes)",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+            }
+        }
+
+        // Query parity after every operation, at every degree.
+        let (odb, otrie) = batch_build(&cumulative, case.num_items, minsup);
+        let view = store.view();
+        if view.num_transactions() != odb.num_transactions() {
+            return Err(format!(
+                "step {step}: cumulative n {} vs batch {}",
+                view.num_transactions(),
+                odb.num_transactions()
+            ));
+        }
+        let mut rng = Rng::new(case.qseed.wrapping_add(step as u64 * 0x9E3779B9));
+        for _ in 0..4 {
+            let q = random_rql(&mut rng, &vocab);
+            let query = parser::parse(&q).map_err(|e| format!("parse `{q}`: {e:#}"))?;
+            let want = match execute_trie(&otrie, &vocab, &query) {
+                Ok(QueryOutput::Rows(rs)) => rs,
+                Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN `{q}`")),
+                Err(e) => return Err(format!("step {step}: batch failed on `{q}`: {e:#}")),
+            };
+            for exec in execs {
+                let got = match exec.execute_view(&view, &vocab, &query) {
+                    Ok(QueryOutput::Rows(rs)) => rs,
+                    Ok(QueryOutput::Explain(_)) => {
+                        return Err(format!("unexpected EXPLAIN `{q}`"))
+                    }
+                    Err(e) => {
+                        return Err(format!(
+                            "step {step} (t={}): merged failed on `{q}`: {e:#}",
+                            exec.degree()
+                        ))
+                    }
+                };
+                if got.rows != want.rows {
+                    return Err(format!(
+                        "step {step} (t={}): `{q}` rows diverged — merged {} vs batch {}",
+                        exec.degree(),
+                        got.rows.len(),
+                        want.rows.len()
+                    ));
+                }
+                if got.stats != want.stats {
+                    return Err(format!(
+                        "step {step} (t={}): `{q}` counters diverged — merged {:?} vs batch {:?}",
+                        exec.degree(),
+                        got.stats,
+                        want.stats
+                    ));
+                }
+            }
+        }
+
+        // FIND / SUPPORT spot parity.
+        for _ in 0..6 {
+            if let Some(rule) = random_rule(&mut rng, case.num_items) {
+                let want = otrie.find_rule(&rule);
+                let got = view.find_rule(&rule);
+                if got != want {
+                    return Err(format!(
+                        "step {step}: FIND {rule} diverged — merged {got:?} vs batch {want:?}"
+                    ));
+                }
+            }
+            let len = 1 + rng.below(3);
+            let mut probe: Vec<ItemId> = Vec::new();
+            while probe.len() < len.min(case.num_items) {
+                let it = rng.below(case.num_items) as ItemId;
+                if !probe.contains(&it) {
+                    probe.push(it);
+                }
+            }
+            let want = otrie.support_of(&probe);
+            let got = view.support_of(&probe);
+            if got != want {
+                return Err(format!(
+                    "step {step}: SUPPORT {probe:?} diverged — merged {got:?} vs batch {want:?}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The headline acceptance property: 200+ randomized update streams, each
+/// checked for exact query/find/support parity after every operation and
+/// byte-identical snapshots at every compaction boundary, across the
+/// thread-degree matrix.
+#[test]
+fn prop_incremental_stream_matches_batch_rebuild() {
+    let execs: Vec<ParallelExecutor> = test_degrees()
+        .into_iter()
+        .map(|t| ParallelExecutor::new(t).with_morsel_target(3))
+        .collect();
+    for_all(
+        "incremental==batch",
+        200,
+        0x1_DE17A,
+        gen_case,
+        shrink_case,
+        |c| {
+            format!(
+                "minsup {}, qseed {:#x}, items {}, base {:?}, ops {:?}",
+                c.minsup, c.qseed, c.num_items, c.base_rows, c.ops
+            )
+        },
+        |case| check_stream(case, &execs),
+    );
+}
+
+/// The SNAPSHOT-sidecar restore loop: ingest into one store across
+/// several batches, persist the pending tail as a `.delta` sidecar,
+/// rebuild a *fresh* store from the same base, replay the sidecar in one
+/// shot (what `--replay-delta` does after re-running the pipeline), and
+/// demand the two merged views answer identically — rows, order,
+/// counters, and the delta bookkeeping itself.
+#[test]
+fn sidecar_replay_restores_the_merged_view() {
+    let minsup = 0.15;
+    let rows: Vec<Vec<u32>> = vec![
+        vec![0, 1, 2],
+        vec![0, 1],
+        vec![1, 2, 3],
+        vec![0, 2],
+        vec![2, 3],
+        vec![0, 1, 2],
+    ];
+    let build_store = || {
+        let db = to_db_sized(&rows, 5).unwrap();
+        let fi = fpgrowth(&db, minsup);
+        let order = ItemOrder::new(&db, min_count(minsup, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        IncrementalTrie::new(trie, db, &fi, minsup).unwrap()
+    };
+    let mut original = build_store();
+    original.ingest(&[vec![0, 4], vec![1, 4]]).unwrap();
+    original.ingest(&[vec![0, 1, 4]]).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("tor_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sidecar = dir.join("svc.tor.delta");
+    serialize::save_delta(&sidecar, original.epoch(), minsup, original.pending()).unwrap();
+
+    let mut restored = build_store();
+    let (epoch, sc_minsup, txs) = serialize::load_delta(&sidecar).unwrap();
+    assert_eq!(epoch, 0);
+    assert!((sc_minsup - minsup).abs() < 1e-15);
+    restored.ingest(&txs).unwrap();
+    assert_eq!(restored.pending_len(), original.pending_len());
+    assert_eq!(restored.delta_nodes(), original.delta_nodes());
+
+    let vocab = trie_of_rules::data::vocab::Vocab::synthetic(5);
+    let exec = ParallelExecutor::new(2).with_morsel_target(3);
+    let (a, b) = (original.view(), restored.view());
+    for q in [
+        "RULES",
+        "RULES WHERE conseq = 'item_0004'",
+        "RULES WHERE support >= 0.2 SORT BY lift DESC LIMIT 6",
+    ] {
+        let query = parser::parse(q).unwrap();
+        let want = exec.execute_view(&a, &vocab, &query).unwrap().into_rows();
+        let got = exec.execute_view(&b, &vocab, &query).unwrap().into_rows();
+        assert_eq!(want.rows, got.rows, "replayed rows diverged on `{q}`");
+        assert_eq!(want.stats, got.stats, "replayed stats diverged on `{q}`");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Deterministic end-to-end stream on the paper's example: ingest in two
+/// batches, query between them, compact, ingest again, compact again —
+/// epochs and counters advance, parity holds throughout (this is the
+/// "any interleaving" shape in miniature, kept readable).
+#[test]
+fn paper_example_stream_end_to_end() {
+    use trie_of_rules::data::transaction::paper_example_db;
+    let db = paper_example_db();
+    let minsup = 0.3;
+    let fi = fpgrowth(&db, minsup);
+    let order = ItemOrder::new(&db, min_count(minsup, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    let vocab = db.vocab().clone();
+    let name = |s: &str| vocab.get(s).unwrap();
+    let mut cumulative: Vec<Vec<ItemId>> = db.iter().map(|t| t.to_vec()).collect();
+    let mut store = IncrementalTrie::new(trie, db, &fi, minsup).unwrap();
+    let exec = ParallelExecutor::new(4).with_morsel_target(2);
+
+    let steps: Vec<(bool, Vec<Vec<ItemId>>)> = vec![
+        (false, vec![vec![name("f"), name("c"), name("a")]]),
+        (false, vec![vec![name("b"), name("p")], vec![name("f"), name("b")]]),
+        (true, vec![]),
+        (false, vec![vec![name("f"), name("c"), name("a"), name("m")]]),
+        (true, vec![]),
+    ];
+    for (compact, batch) in steps {
+        if compact {
+            assert!(store.compact(None).unwrap());
+        } else {
+            store.ingest(&batch).unwrap();
+            cumulative.extend(batch);
+        }
+        // Batch oracle over the real vocabulary (names must keep binding).
+        let mut b = TransactionDb::builder(vocab.clone());
+        for tx in &cumulative {
+            b.push_ids(tx.clone());
+        }
+        let odb = b.build();
+        let ofi = fpgrowth(&odb, minsup);
+        let oorder = ItemOrder::new(&odb, min_count(minsup, odb.num_transactions()));
+        let otrie = TrieOfRules::from_frequent(&ofi, &oorder).unwrap();
+        let view = store.view();
+        for q in [
+            "RULES",
+            "RULES WHERE conseq = a SORT BY lift DESC LIMIT 5",
+            "RULES WHERE support >= 0.4",
+            "RULES WHERE antecedent CONTAINS f AND confidence >= 0.5",
+        ] {
+            let query = parser::parse(q).unwrap();
+            let want = execute_trie(&otrie, &vocab, &query).unwrap().into_rows();
+            let got = exec.execute_view(&view, &vocab, &query).unwrap().into_rows();
+            assert_eq!(want.rows, got.rows, "rows diverged on `{q}`");
+            assert_eq!(want.stats, got.stats, "stats diverged on `{q}`");
+        }
+    }
+    assert_eq!(store.compactions(), 2);
+    assert_eq!(store.epoch(), 2);
+    assert_eq!(store.pending_len(), 0);
+}

@@ -6,10 +6,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use trie_of_rules::coordinator::config::{CounterKind, PipelineConfig};
-use trie_of_rules::coordinator::pipeline::{run, Source};
+use trie_of_rules::coordinator::pipeline::{run, run_with_pool, Source};
 use trie_of_rules::coordinator::service::{serve_tcp, QueryEngine};
 use trie_of_rules::data::generator::GeneratorConfig;
 use trie_of_rules::mining::MinerKind;
+use trie_of_rules::query::parallel::{ParallelExecutor, WorkerPool};
 use trie_of_rules::runtime::{default_artifacts_dir, Runtime};
 
 #[test]
@@ -60,6 +61,72 @@ fn all_miners_produce_equivalent_tries() {
             Some(r) => assert_eq!(r, &sig, "miner {miner:?} built a different trie"),
         }
     }
+}
+
+#[test]
+fn pooled_pipeline_end_to_end_matches_sequential_and_reports_threads() {
+    // The e2e suite used to exercise only the sequential `run`; this
+    // drives `run_with_pool` at degree > 1 end to end and checks that the
+    // effective build parallelism reaches the report AND the service
+    // STATS line.
+    let gen = GeneratorConfig::tiny(55);
+    let cfg = PipelineConfig {
+        minsup: 0.05,
+        miner: MinerKind::FpGrowth,
+        workers: 3,
+        chunk_size: 19,
+        ..Default::default()
+    };
+    let seq = run(Source::Generated(gen.clone()), &cfg, None).unwrap();
+    assert_eq!(seq.report.build_threads, 1);
+    let pool = WorkerPool::new(3);
+    let par = run_with_pool(Source::Generated(gen), &cfg, None, Some(&pool)).unwrap();
+    assert_eq!(par.report.build_threads, 4);
+    // Byte-identical build outputs at degree 4.
+    assert_eq!(seq.trie.items_column(), par.trie.items_column());
+    assert_eq!(seq.trie.counts_column(), par.trie.counts_column());
+    assert_eq!(seq.trie.child_csr(), par.trie.child_csr());
+    assert_eq!(seq.trie.header_csr(), par.trie.header_csr());
+    assert_eq!(seq.ruleset.rules(), par.ruleset.rules());
+    // PipelineReport.build_threads surfaces in STATS (the satellite fix).
+    let build_threads = par.report.build_threads;
+    let engine = QueryEngine::with_executor(
+        par.trie,
+        par.db.vocab().clone(),
+        ParallelExecutor::new(2),
+    )
+    .with_build_threads(build_threads);
+    let stats = engine.execute("STATS");
+    assert!(stats.contains("build_threads=4"), "{stats}");
+    assert!(stats.contains("threads=2"), "{stats}");
+}
+
+#[test]
+fn pooled_pipeline_feeds_the_incremental_engine() {
+    // run_with_pool → into_incremental → INGEST/COMPACT on the same pool:
+    // the serve-path composition, end to end.
+    let cfg = PipelineConfig {
+        minsup: 0.05,
+        ..Default::default()
+    };
+    let exec = ParallelExecutor::new(4);
+    let out = run_with_pool(
+        Source::Generated(GeneratorConfig::tiny(56)),
+        &cfg,
+        None,
+        Some(exec.pool()),
+    )
+    .unwrap();
+    let (store, vocab, report) = out.into_incremental(&cfg).unwrap();
+    let engine = QueryEngine::with_incremental(store, vocab.clone(), exec)
+        .with_build_threads(report.build_threads);
+    let names: Vec<String> = (0..3).map(|i| vocab.name(i).to_string()).collect();
+    let resp = engine.execute(&format!("INGEST {}", names.join(",")));
+    assert!(resp.starts_with("OK ingested=1"), "{resp}");
+    let resp = engine.execute("COMPACT");
+    assert!(resp.starts_with("OK compacted epoch=1"), "{resp}");
+    let stats = engine.execute("STATS");
+    assert!(stats.contains("compactions=1"), "{stats}");
 }
 
 #[test]

@@ -11,77 +11,13 @@
 //! morsels/shards/batched predicates *optimizations* rather than
 //! semantics changes.
 
+mod common;
+
+use common::{for_all, random_db, random_rql, shrink_vec, to_db, Rng};
 use trie_of_rules::bench_support::workloads::Workload;
-use trie_of_rules::data::transaction::{paper_example_db, TransactionDb};
-use trie_of_rules::data::vocab::Vocab;
+use trie_of_rules::data::transaction::paper_example_db;
 use trie_of_rules::query::parallel::ParallelExecutor;
 use trie_of_rules::query::{query_frame, query_trie, QueryOutput};
-use trie_of_rules::rules::metrics::Metric;
-use trie_of_rules::util::proptest::{for_all, shrink_vec, Gen};
-use trie_of_rules::util::rng::Rng;
-
-fn random_db(g: &mut Gen) -> Vec<Vec<u32>> {
-    let num_items = g.usize_in(3, 12);
-    let num_tx = g.usize_in(4, 60);
-    (0..num_tx)
-        .map(|_| {
-            let len = g.usize_in(1, num_items.min(6) + 1);
-            (0..len).map(|_| g.usize_in(0, num_items) as u32).collect()
-        })
-        .collect()
-}
-
-fn to_db(rows: &[Vec<u32>]) -> Option<TransactionDb> {
-    if rows.is_empty() {
-        return None;
-    }
-    let max_item = rows.iter().flatten().max().copied().unwrap_or(0);
-    let mut b = TransactionDb::builder(Vocab::synthetic(max_item as usize + 1));
-    for r in rows {
-        b.push_ids(r.clone());
-    }
-    Some(b.build())
-}
-
-/// One random RQL query over the workload's vocabulary. Items are drawn
-/// from the *whole* vocabulary (not just frequent items), so queries over
-/// infrequent consequents — empty header lists — are exercised too.
-fn random_rql(rng: &mut Rng, w: &Workload) -> String {
-    let vocab = w.db.vocab();
-    let any_item = |rng: &mut Rng| vocab.name(rng.below(vocab.len()) as u32).to_string();
-    let mut q = String::from("RULES");
-    let mut preds: Vec<String> = Vec::new();
-    if rng.chance(0.5) {
-        preds.push(format!("conseq = '{}'", any_item(rng)));
-    }
-    if rng.chance(0.3) {
-        preds.push(format!("conseq CONTAINS '{}'", any_item(rng)));
-    }
-    if rng.chance(0.4) {
-        preds.push(format!("antecedent CONTAINS '{}'", any_item(rng)));
-    }
-    if rng.chance(0.6) {
-        let metric = Metric::ALL[rng.below(Metric::ALL.len())];
-        let op = ["<=", "<", ">=", ">", "="][rng.below(5)];
-        // A range wide enough to cover every metric's span (lift and
-        // conviction exceed 1; leverage/zhang/yule_q go negative).
-        let value = rng.f64() * 3.0 - 0.5;
-        preds.push(format!("{} {op} {value:.4}", metric.name()));
-    }
-    for (i, p) in preds.iter().enumerate() {
-        q.push_str(if i == 0 { " WHERE " } else { " AND " });
-        q.push_str(p);
-    }
-    if rng.chance(0.5) {
-        let metric = Metric::ALL[rng.below(Metric::ALL.len())];
-        let dir = if rng.chance(0.5) { "DESC" } else { "ASC" };
-        q.push_str(&format!(" SORT BY {} {dir}", metric.name()));
-    }
-    if rng.chance(0.5) {
-        q.push_str(&format!(" LIMIT {}", rng.below(20)));
-    }
-    q
-}
 
 /// Run one query on both backends and compare exactly.
 fn check_parity(w: &Workload, q: &str) -> Result<(), String> {
@@ -136,7 +72,7 @@ fn prop_trie_and_frame_backends_agree_exactly() {
             let w = Workload::build("prop", db, 0.12);
             let mut rng = Rng::new(*qseed);
             for _ in 0..6 {
-                let q = random_rql(&mut rng, &w);
+                let q = random_rql(&mut rng, w.db.vocab());
                 check_parity(&w, &q)?;
             }
             Ok(())
@@ -193,7 +129,7 @@ fn check_parallel_parity(
 /// exactly — rows, order, and counters — on randomized queries.
 #[test]
 fn prop_parallel_matches_sequential_across_thread_counts() {
-    let execs: Vec<ParallelExecutor> = [1usize, 2, 4, 8]
+    let execs: Vec<ParallelExecutor> = common::test_degrees()
         .into_iter()
         .map(|t| ParallelExecutor::new(t).with_morsel_target(3))
         .collect();
@@ -218,7 +154,7 @@ fn prop_parallel_matches_sequential_across_thread_counts() {
             let w = Workload::build("prop", db, 0.12);
             let mut rng = Rng::new(*qseed);
             for _ in 0..5 {
-                let q = random_rql(&mut rng, &w);
+                let q = random_rql(&mut rng, w.db.vocab());
                 check_parallel_parity(&w, &execs, &q)?;
             }
             Ok(())

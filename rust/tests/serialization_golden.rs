@@ -1,0 +1,117 @@
+//! Golden-file serialization tests: the committed byte fixtures under
+//! `rust/tests/fixtures/` pin the on-disk formats (v1 node records and v2
+//! columns) to exact bytes, generated independently by
+//! `python/tests/gen_golden_fixtures.py`. Any drift — magic, endianness,
+//! column order, preorder numbering, CSR layout, threshold encoding —
+//! fails loudly here instead of silently orphaning previously saved
+//! tries. Cross-version coverage: a v1 fixture loads and re-saves as a
+//! byte-identical v2 (and vice versa via `save_v1`).
+
+mod common;
+
+use common::to_db_sized;
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::trie::serialize;
+use trie_of_rules::trie::trie::TrieOfRules;
+
+const GOLDEN_V1: &[u8] = include_bytes!("fixtures/tiny_v1.tor");
+const GOLDEN_V2: &[u8] = include_bytes!("fixtures/tiny_v2.tor");
+
+/// The fixture database (must match gen_golden_fixtures.py exactly).
+fn fixture_trie() -> TrieOfRules {
+    let rows: Vec<Vec<u32>> = vec![
+        vec![0, 1, 2],
+        vec![0, 1],
+        vec![0, 2],
+        vec![1, 2],
+        vec![0, 1, 2, 3],
+        vec![2, 3],
+    ];
+    let db = to_db_sized(&rows, 4).unwrap();
+    let fi = fpgrowth(&db, 0.3);
+    let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+    TrieOfRules::from_frequent(&fi, &order).unwrap()
+}
+
+fn tmpfile(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tor_golden_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.tor"))
+}
+
+#[test]
+fn pipeline_build_serializes_to_the_golden_v2_bytes() {
+    let trie = fixture_trie();
+    // The fixture pins the exact shape: 9 frequent itemsets + root.
+    assert_eq!(trie.num_nodes(), 9, "fixture mining drifted");
+    let mut got = Vec::new();
+    serialize::save_to(&trie, None, &mut got).unwrap();
+    assert_eq!(
+        got, GOLDEN_V2,
+        "v2 serialization drifted from the committed golden bytes"
+    );
+}
+
+#[test]
+fn pipeline_build_serializes_to_the_golden_v1_bytes() {
+    let trie = fixture_trie();
+    let path = tmpfile("v1_out");
+    serialize::save_v1(&trie, None, &path).unwrap();
+    let got = std::fs::read(&path).unwrap();
+    assert_eq!(
+        got, GOLDEN_V1,
+        "v1 serialization drifted from the committed golden bytes"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn golden_v2_loads_and_resaves_byte_identically() {
+    let path = tmpfile("v2_golden");
+    std::fs::write(&path, GOLDEN_V2).unwrap();
+    let (trie, vocab) = serialize::load(&path).unwrap();
+    assert!(vocab.is_none(), "fixture stores no vocabulary");
+    let mut resaved = Vec::new();
+    serialize::save_to(&trie, None, &mut resaved).unwrap();
+    assert_eq!(resaved, GOLDEN_V2, "v2 load→save round trip not identity");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn golden_v1_loads_and_upgrades_to_the_golden_v2_bytes() {
+    // Cross-version: the legacy node-record file rebuilds through the
+    // builder + freeze, and the canonical preorder renumbering makes its
+    // v2 re-save land on exactly the golden v2 bytes.
+    let path = tmpfile("v1_golden");
+    std::fs::write(&path, GOLDEN_V1).unwrap();
+    let (from_v1, _) = serialize::load(&path).unwrap();
+    let mut upgraded = Vec::new();
+    serialize::save_to(&from_v1, None, &mut upgraded).unwrap();
+    assert_eq!(upgraded, GOLDEN_V2, "v1 → v2 upgrade not byte-identical");
+    // And downgrading the loaded trie reproduces the golden v1 bytes.
+    let down = tmpfile("v1_down");
+    serialize::save_v1(&from_v1, None, &down).unwrap();
+    assert_eq!(std::fs::read(&down).unwrap(), GOLDEN_V1);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&down).ok();
+}
+
+#[test]
+fn golden_files_answer_queries_identically_to_the_fresh_build() {
+    let path = tmpfile("v2_answers");
+    std::fs::write(&path, GOLDEN_V2).unwrap();
+    let (loaded, _) = serialize::load(&path).unwrap();
+    let fresh = fixture_trie();
+    assert_eq!(loaded.items_column(), fresh.items_column());
+    assert_eq!(loaded.counts_column(), fresh.counts_column());
+    assert_eq!(loaded.parents_column(), fresh.parents_column());
+    assert_eq!(loaded.depths_column(), fresh.depths_column());
+    assert_eq!(loaded.subtree_end_column(), fresh.subtree_end_column());
+    assert_eq!(loaded.child_csr(), fresh.child_csr());
+    assert_eq!(loaded.header_csr(), fresh.header_csr());
+    // Support lookups behave (count of {2,0} = 3 in the fixture rows).
+    assert_eq!(loaded.support_of(&[0, 2]), Some(3));
+    assert_eq!(loaded.support_of(&[0, 3]), None);
+    std::fs::remove_file(&path).ok();
+}
