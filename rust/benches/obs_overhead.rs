@@ -1,0 +1,186 @@
+//! Observability overhead: the full service request path
+//! (`QueryEngine::execute` — parse → plan → execute → format) with the
+//! metrics plane enabled vs stripped (`with_metrics_enabled(false)`).
+//!
+//! The instrumentation contract is "always-on telemetry is effectively
+//! free": per request it adds one `Instant` pair, two relaxed atomic
+//! updates, and one histogram observe — nothing on the per-row hot path.
+//! This bench enforces that two ways:
+//!
+//! 1. **Parity gate**: responses must be byte-identical instrumented or
+//!    stripped (and `EXPLAIN ANALYZE` work counters must match exactly),
+//!    at degree 1 and degree 8 — instrumentation that changes results is
+//!    a bug, whatever it costs.
+//! 2. **Overhead gate**: the instrumented sweep must stay within 5% of
+//!    the stripped sweep. Totals are compared min-of-rounds with the
+//!    measurement order alternated each round, which cancels clock noise
+//!    and thermal drift that per-query comparisons would drown in.
+//!
+//! Results go to `BENCH_obs.json` (`--test` shrinks the workload for the
+//! CI smoke; the gates still run).
+
+use std::time::Instant;
+
+use trie_of_rules::bench_support::report::BenchReport;
+use trie_of_rules::bench_support::workloads::{self, rql_queries, QuerySkew};
+use trie_of_rules::coordinator::service::QueryEngine;
+
+struct Args {
+    test: bool,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args { test: false };
+    for arg in std::env::args().skip(1) {
+        if arg == "--test" {
+            args.test = true;
+        }
+        // `cargo bench` forwards its own flags (e.g. `--bench`).
+    }
+    args
+}
+
+/// The stable work-counter tokens of an `EXPLAIN ANALYZE` response (wall
+/// times are nondeterministic; these must not be).
+fn work_counters(resp: &str) -> Vec<&str> {
+    resp.split_whitespace()
+        .filter(|t| {
+            t.starts_with("visited=")
+                || t.starts_with("probes=")
+                || t.starts_with("matched=")
+                || t.starts_with("rows=")
+                || t.starts_with("partitions=")
+        })
+        .collect()
+}
+
+/// One timed sweep over the whole query set; returns (total seconds,
+/// per-query seconds).
+fn sweep(engine: &QueryEngine, queries: &[String]) -> (f64, Vec<f64>) {
+    let mut times = Vec::with_capacity(queries.len());
+    let t0 = Instant::now();
+    for q in queries {
+        let tq = Instant::now();
+        std::hint::black_box(engine.execute(q));
+        times.push(tq.elapsed().as_secs_f64());
+    }
+    (t0.elapsed().as_secs_f64(), times)
+}
+
+fn main() {
+    let args = parse_args();
+    let (minsup, num_queries, rounds) = if args.test {
+        (0.01, 40, 7)
+    } else {
+        (0.005, 120, 7)
+    };
+    let w = workloads::groceries(minsup);
+    let vocab = w.db.vocab().clone();
+    eprintln!(
+        "[obs_overhead] {} trie nodes, {num_queries} queries x {rounds} rounds{}",
+        w.trie.num_nodes(),
+        if args.test { " (--test smoke)" } else { "" }
+    );
+
+    let mut bench = BenchReport::new("obs");
+
+    for degree in [1usize, 8] {
+        let on = QueryEngine::with_threads(w.trie.clone(), vocab.clone(), degree);
+        let off = QueryEngine::with_threads(w.trie.clone(), vocab.clone(), degree)
+            .with_metrics_enabled(false);
+        let qw = rql_queries(&w, num_queries, QuerySkew::Zipf(1.1), 0x0B5_0B5);
+
+        // -- parity gate: instrumentation must not change a single byte --
+        for q in &qw.queries {
+            assert_eq!(
+                on.execute(q),
+                off.execute(q),
+                "instrumentation changed response bytes on `{q}` (degree {degree})"
+            );
+        }
+        for q in qw.queries.iter().take(15) {
+            let line = format!("EXPLAIN ANALYZE {q}");
+            let a = on.execute(&line);
+            let b = off.execute(&line);
+            assert!(a.contains("analyze:"), "{a}");
+            assert_eq!(
+                work_counters(&a),
+                work_counters(&b),
+                "analyze work counters diverged on `{q}` (degree {degree})"
+            );
+        }
+
+        // -- overhead gate: min-of-rounds totals, order alternated --------
+        let mut best_on = f64::INFINITY;
+        let mut best_off = f64::INFINITY;
+        let mut on_times: Vec<f64> = Vec::new();
+        let mut off_times: Vec<f64> = Vec::new();
+        // Warmup sweep each (also primes the worker pool).
+        sweep(&on, &qw.queries);
+        sweep(&off, &qw.queries);
+        for round in 0..rounds {
+            let measure = |first: &QueryEngine, second: &QueryEngine| {
+                (sweep(first, &qw.queries), sweep(second, &qw.queries))
+            };
+            let ((t_on, s_on), (t_off, s_off)) = if round % 2 == 0 {
+                let (a, b) = measure(&on, &off);
+                (a, b)
+            } else {
+                let (b, a) = measure(&off, &on);
+                (a, b)
+            };
+            if t_on < best_on {
+                best_on = t_on;
+                on_times = s_on;
+            }
+            if t_off < best_off {
+                best_off = t_off;
+                off_times = s_off;
+            }
+        }
+        let overhead = best_on / best_off.max(1e-12) - 1.0;
+        eprintln!(
+            "[obs_overhead] degree {degree}: instrumented {best_on:.6}s, stripped {best_off:.6}s, overhead {:.2}%",
+            overhead * 100.0
+        );
+        bench.samples(
+            &format!("instrumented/t{degree}"),
+            &on_times,
+            &[("threads", degree as f64)],
+        );
+        bench.samples(
+            &format!("stripped/t{degree}"),
+            &off_times,
+            &[("threads", degree as f64)],
+        );
+        bench.row(
+            &format!("overhead/t{degree}"),
+            &[
+                ("threads", degree as f64),
+                ("overhead_frac", overhead),
+                ("instrumented_total_s", best_on),
+                ("stripped_total_s", best_off),
+            ],
+        );
+        assert!(
+            overhead <= 0.05,
+            "instrumentation overhead {:.2}% exceeds the 5% budget at degree {degree}",
+            overhead * 100.0
+        );
+
+        // The instrumented engine actually recorded the traffic.
+        let served = on
+            .metrics_registry()
+            .counter("tor_queries_total{verb=\"rules\"}")
+            .get();
+        assert!(served > 0, "instrumented engine recorded no rules queries");
+        let stripped = off
+            .metrics_registry()
+            .counter("tor_queries_total{verb=\"rules\"}")
+            .get();
+        assert_eq!(stripped, 0, "stripped engine should record nothing");
+    }
+
+    let path = bench.save().expect("save BENCH_obs.json");
+    eprintln!("[obs_overhead] wrote {}", path.display());
+}

@@ -13,7 +13,10 @@
 //! "hot item ⇒ cheap query" is exactly backwards.
 //!
 //! Flags (after `--`): `--test` runs a fast smoke (smaller workload, CI's
-//! release-mode gate), `--query-threads N` caps the thread sweep, and
+//! release-mode gate), `--query-threads N` caps the thread sweep,
+//! `--telemetry-out FILE` additionally drives the service path with a
+//! JSONL telemetry exporter attached and validates every exported record
+//! parses (the CI observability smoke), and
 //! `--incremental` switches to the streaming-update benchmark: ingest
 //! throughput through the delta overlay, query latency *while a
 //! compaction runs concurrently* (snapshot pinning means queries never
@@ -39,6 +42,7 @@ struct Args {
     test: bool,
     incremental: bool,
     query_threads: usize,
+    telemetry_out: Option<String>,
 }
 
 fn parse_args() -> Args {
@@ -46,6 +50,7 @@ fn parse_args() -> Args {
         test: false,
         incremental: false,
         query_threads: 8,
+        telemetry_out: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -57,6 +62,9 @@ fn parse_args() -> Args {
                     .next()
                     .and_then(|v| v.parse().ok())
                     .expect("--query-threads needs a positive integer");
+            }
+            "--telemetry-out" => {
+                args.telemetry_out = Some(it.next().expect("--telemetry-out needs a path"));
             }
             // `cargo bench` forwards its own flags (e.g. `--bench`).
             _ => {}
@@ -352,4 +360,43 @@ fn main() {
     report.save("rql_throughput").expect("save results");
     let path = bench.save().expect("save BENCH_rql.json");
     eprintln!("[rql_throughput] wrote {}", path.display());
+
+    // -- telemetry smoke (`--telemetry-out FILE`) --------------------------
+    // Drives the same workload through the service path with the JSONL
+    // exporter attached, then reads the file back and checks every record
+    // is valid JSON with a `type` field. CI runs this after the throughput
+    // gate so the exported plane is validated with the tool that wrote it.
+    if let Some(tpath) = &args.telemetry_out {
+        use std::sync::Arc;
+        use trie_of_rules::coordinator::service::QueryEngine;
+        use trie_of_rules::obs::export::TelemetryExporter;
+        use trie_of_rules::obs::registry::MetricsRegistry;
+        use trie_of_rules::util::json::Json;
+
+        let registry = Arc::new(MetricsRegistry::new());
+        let exporter = Arc::new(TelemetryExporter::create(tpath).expect("create telemetry file"));
+        let threads = args.query_threads;
+        let engine = QueryEngine::with_threads(w.trie.clone(), w.db.vocab().clone(), threads)
+            .with_observability(Arc::clone(&registry), Some(Arc::clone(&exporter)));
+        let qw = rql_queries(&w, if args.test { 20 } else { 60 }, QuerySkew::Uniform, 0x7E1);
+        for q in &qw.queries {
+            std::hint::black_box(engine.execute(q));
+        }
+        std::hint::black_box(engine.execute("STATS"));
+        std::hint::black_box(engine.execute("METRICS"));
+        exporter.emit_metrics(&registry, 0);
+        exporter.sync();
+        let text = std::fs::read_to_string(tpath).expect("read telemetry file back");
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert!(!lines.is_empty(), "telemetry file {tpath} is empty");
+        for line in &lines {
+            let record = Json::parse(line)
+                .unwrap_or_else(|e| panic!("invalid telemetry JSONL line `{line}`: {e}"));
+            assert!(
+                record.get("type").is_some(),
+                "telemetry record missing `type`: {line}"
+            );
+        }
+        eprintln!("[rql_throughput] telemetry: {} valid records at {tpath}", lines.len());
+    }
 }

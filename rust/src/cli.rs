@@ -166,6 +166,10 @@ PIPELINE OPTS:
   --compact-threshold N             auto-compact the ingest delta once N
                                     transactions are pending (default 0 =
                                     only on explicit COMPACT)
+  --telemetry-out FILE              stream build + serving telemetry to FILE
+                                    as JSONL (epoch-tagged records; see
+                                    DESIGN.md §14); METRICS / METRICS JSON
+                                    serve the same registry on demand
   --transactions N --seed N         generator overrides
   --config FILE                     key=value config file
   --set key=value                   single config override (repeatable)
@@ -335,6 +339,9 @@ fn parse_pipeline_opts_with(
             "--compact-threshold" => {
                 opts.config.set("compact_threshold", &value("--compact-threshold")?)?
             }
+            "--telemetry-out" => {
+                opts.config.set("telemetry_out", &value("--telemetry-out")?)?
+            }
             "--config" => {
                 opts.config = PipelineConfig::load(&PathBuf::from(value("--config")?))?;
             }
@@ -449,6 +456,27 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(parse(&argv("serve --port 1 --compact-threshold nope")).is_err());
+    }
+
+    #[test]
+    fn parses_telemetry_out() {
+        match parse(&argv(
+            "serve --dataset tiny --port 7878 --telemetry-out /tmp/tel.jsonl",
+        ))
+        .unwrap()
+        {
+            Command::Serve(o, _, _) => {
+                assert_eq!(o.config.telemetry_out.as_deref(), Some("/tmp/tel.jsonl"))
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("pipeline --dataset tiny --telemetry-out out.jsonl")).unwrap() {
+            Command::Pipeline(o, _) => {
+                assert_eq!(o.config.telemetry_out.as_deref(), Some("out.jsonl"))
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --port 1 --telemetry-out")).is_err());
     }
 
     #[test]

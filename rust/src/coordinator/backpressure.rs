@@ -8,8 +8,17 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+use crate::obs::registry::{Counter, Gauge, MetricsRegistry};
+
+/// Registry handles mirrored by the queue when observability is bound.
+struct QueueObs {
+    depth: Gauge,
+    producer_blocked_ns: Counter,
+    consumer_blocked_ns: Counter,
+}
 
 struct Inner<T> {
     queue: Mutex<State<T>>,
@@ -20,6 +29,9 @@ struct Inner<T> {
     producer_blocked_ns: AtomicU64,
     /// Nanoseconds consumers spent blocked on an empty queue.
     consumer_blocked_ns: AtomicU64,
+    /// Bound once via [`BoundedQueue::bind_metrics`]; `None` keeps the hot
+    /// path free of registry traffic.
+    obs: OnceLock<QueueObs>,
 }
 
 struct State<T> {
@@ -54,8 +66,20 @@ impl<T> BoundedQueue<T> {
                 capacity,
                 producer_blocked_ns: AtomicU64::new(0),
                 consumer_blocked_ns: AtomicU64::new(0),
+                obs: OnceLock::new(),
             }),
         }
+    }
+
+    /// Mirror queue depth and blocked time into `registry` under the given
+    /// metric prefix (e.g. `tor_pipeline_queue`). Idempotent: later calls
+    /// are no-ops, so shared clones can all attempt the bind safely.
+    pub fn bind_metrics(&self, registry: &MetricsRegistry, prefix: &str) {
+        let _ = self.inner.obs.set(QueueObs {
+            depth: registry.gauge(&format!("{prefix}_depth")),
+            producer_blocked_ns: registry.counter(&format!("{prefix}_producer_blocked_ns_total")),
+            consumer_blocked_ns: registry.counter(&format!("{prefix}_consumer_blocked_ns_total")),
+        });
     }
 
     /// Blocking push. Returns `Err(item)` if the queue is closed.
@@ -69,15 +93,23 @@ impl<T> BoundedQueue<T> {
             while state.items.len() >= self.inner.capacity && !state.closed {
                 state = self.inner.not_full.wait(state).unwrap();
             }
+            let blocked = start.elapsed().as_nanos() as u64;
             self.inner
                 .producer_blocked_ns
-                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                .fetch_add(blocked, Ordering::Relaxed);
+            if let Some(obs) = self.inner.obs.get() {
+                obs.producer_blocked_ns.add(blocked);
+            }
             if state.closed {
                 return Err(item);
             }
         }
         state.items.push_back(item);
+        let depth = state.items.len();
         drop(state);
+        if let Some(obs) = self.inner.obs.get() {
+            obs.depth.set(depth as i64);
+        }
         self.inner.not_empty.notify_one();
         Ok(())
     }
@@ -90,13 +122,21 @@ impl<T> BoundedQueue<T> {
             while state.items.is_empty() && !state.closed {
                 state = self.inner.not_empty.wait(state).unwrap();
             }
+            let blocked = start.elapsed().as_nanos() as u64;
             self.inner
                 .consumer_blocked_ns
-                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                .fetch_add(blocked, Ordering::Relaxed);
+            if let Some(obs) = self.inner.obs.get() {
+                obs.consumer_blocked_ns.add(blocked);
+            }
         }
         let item = state.items.pop_front();
+        let depth = state.items.len();
         drop(state);
         if item.is_some() {
+            if let Some(obs) = self.inner.obs.get() {
+                obs.depth.set(depth as i64);
+            }
             self.inner.not_full.notify_one();
         }
         item
@@ -173,6 +213,32 @@ mod tests {
         assert_eq!(q.len(), 2);
         let (prod, _) = q.blocked_times();
         assert!(prod >= Duration::from_millis(10), "blocked time {prod:?}");
+    }
+
+    #[test]
+    fn bound_metrics_mirror_depth_and_blocked_time() {
+        let registry = MetricsRegistry::new();
+        let q = BoundedQueue::new(2);
+        q.bind_metrics(&registry, "tor_test_queue");
+        q.bind_metrics(&registry, "tor_test_queue"); // idempotent
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(registry.gauge("tor_test_queue_depth").get(), 2);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(3));
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert!(
+            registry
+                .counter("tor_test_queue_producer_blocked_ns_total")
+                .get()
+                > 0,
+            "producer blocked time should be mirrored"
+        );
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(registry.gauge("tor_test_queue_depth").get(), 0);
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct PipelineConfig {
     /// snapshot once this many ingested transactions are pending
     /// (`--compact-threshold`; 0 = compact only on explicit `COMPACT`).
     pub compact_threshold: usize,
+    /// JSONL telemetry destination (`--telemetry-out <path>`; None = no
+    /// export). Build-stage and serving records stream here through the
+    /// background [`crate::obs::export::TelemetryExporter`].
+    pub telemetry_out: Option<String>,
 }
 
 impl Default for PipelineConfig {
@@ -78,6 +82,7 @@ impl Default for PipelineConfig {
             shard_slots: 64,
             query_threads: 0,
             compact_threshold: 0,
+            telemetry_out: None,
         }
     }
 }
@@ -102,6 +107,10 @@ impl PipelineConfig {
             "shard_slots" => self.shard_slots = parse_usize_min(value, 1)?,
             "query_threads" => self.query_threads = parse_usize_min(value, 0)?,
             "compact_threshold" => self.compact_threshold = parse_usize_min(value, 0)?,
+            "telemetry_out" => {
+                anyhow::ensure!(!value.is_empty(), "telemetry_out needs a path");
+                self.telemetry_out = Some(value.to_string());
+            }
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -149,7 +158,7 @@ impl PipelineConfig {
 
     /// Render as a `key=value` block (round-trips through `load`).
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\nquery_threads={}\ncompact_threshold={}\n",
             self.minsup,
             self.min_confidence,
@@ -161,7 +170,11 @@ impl PipelineConfig {
             self.shard_slots,
             self.query_threads,
             self.compact_threshold
-        )
+        );
+        if let Some(path) = &self.telemetry_out {
+            out.push_str(&format!("telemetry_out={path}\n"));
+        }
+        out
     }
 }
 
@@ -220,6 +233,29 @@ mod tests {
         assert_eq!(c.compact_threshold, 256);
         assert!(c.render().contains("compact_threshold=256"), "{}", c.render());
         assert!(c.set("compact_threshold", "nope").is_err());
+    }
+
+    #[test]
+    fn telemetry_out_roundtrips() {
+        let mut c = PipelineConfig::default();
+        assert!(c.telemetry_out.is_none());
+        assert!(!c.render().contains("telemetry_out="), "{}", c.render());
+        c.set("telemetry_out", "artifacts/telemetry.jsonl").unwrap();
+        assert_eq!(c.telemetry_out.as_deref(), Some("artifacts/telemetry.jsonl"));
+        assert!(
+            c.render().contains("telemetry_out=artifacts/telemetry.jsonl"),
+            "{}",
+            c.render()
+        );
+        assert!(c.set("telemetry_out", "").is_err());
+        // Round-trips through a config file like every other key.
+        let dir = std::env::temp_dir().join(format!("tor_cfg_tel_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pipeline.cfg");
+        std::fs::write(&path, c.render()).unwrap();
+        let back = PipelineConfig::load(&path).unwrap();
+        assert_eq!(back.telemetry_out.as_deref(), Some("artifacts/telemetry.jsonl"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

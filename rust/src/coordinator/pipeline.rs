@@ -21,7 +21,7 @@
 //! the queues' blocked time land in the [`PipelineReport`].
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -30,6 +30,8 @@ use crate::coordinator::backpressure::BoundedQueue;
 use crate::coordinator::config::{CounterKind, PipelineConfig};
 use crate::coordinator::sharding::{PartialCounts, ShardRouter};
 use crate::coordinator::telemetry::PipelineReport;
+use crate::obs::export::TelemetryExporter;
+use crate::obs::registry::MetricsRegistry;
 use crate::data::transaction::{TransactionDb, TransactionDbBuilder};
 use crate::data::vocab::{ItemId, Vocab};
 use crate::mining::apriori::{apriori_with, BitsetCounter, HorizontalCounter};
@@ -115,6 +117,23 @@ pub fn run_with_pool(
     runtime: Option<&Runtime>,
     pool: Option<&WorkerPool>,
 ) -> Result<PipelineOutput> {
+    run_observed(source, config, runtime, pool, None, None)
+}
+
+/// [`run_with_pool`] with the observability plane attached. A registry
+/// receives the ingest queue's live depth/blocked gauges during the run and
+/// the full [`PipelineReport`] afterwards
+/// ([`PipelineReport::record_into`]); an exporter receives one
+/// `pipeline_stage` JSONL record per stage. Both are pure mirrors — the
+/// built outputs are byte-identical with or without them.
+pub fn run_observed(
+    source: Source,
+    config: &PipelineConfig,
+    runtime: Option<&Runtime>,
+    pool: Option<&WorkerPool>,
+    registry: Option<&MetricsRegistry>,
+    exporter: Option<&TelemetryExporter>,
+) -> Result<PipelineOutput> {
     config.validate()?;
     let mut report = PipelineReport::default();
     report.counter_backend = config.counter.name();
@@ -128,9 +147,11 @@ pub fn run_with_pool(
     // shard workers (counts + shard-local rows), then merge.
     // ---------------------------------------------------------------
     let t0 = Instant::now();
-    let (db, merged) = ingest(source, config)?;
+    let (db, merged, (producer_blocked, consumer_blocked)) = ingest(source, config, registry)?;
     report.push_stage("ingest+shard", t0.elapsed(), db.num_transactions());
     report.num_transactions = db.num_transactions();
+    report.producer_blocked = producer_blocked;
+    report.consumer_blocked = consumer_blocked;
     anyhow::ensure!(db.num_transactions() > 0, "no transactions ingested");
     debug_assert_eq!(merged.freqs, db.item_frequencies());
 
@@ -237,6 +258,16 @@ pub fn run_with_pool(
     report.trie_memory_bytes = trie.memory_bytes();
     report.frame_memory_bytes = frame.memory_bytes();
 
+    if let Some(registry) = registry {
+        report.record_into(registry);
+    }
+    if let Some(exporter) = exporter {
+        for s in &report.stages {
+            exporter.emit_pipeline_stage(&s.name, s.duration, s.items, s.throughput());
+        }
+        exporter.flush();
+    }
+
     Ok(PipelineOutput {
         db,
         order,
@@ -250,7 +281,13 @@ pub fn run_with_pool(
 }
 
 /// Stage 1+2: stream chunks through the bounded queue into shard workers.
-fn ingest(source: Source, config: &PipelineConfig) -> Result<(TransactionDb, PartialCounts)> {
+/// Returns the DB, merged counts, and the queue's (producer, consumer)
+/// blocked time for the report's backpressure line.
+fn ingest(
+    source: Source,
+    config: &PipelineConfig,
+    registry: Option<&MetricsRegistry>,
+) -> Result<(TransactionDb, PartialCounts, (Duration, Duration))> {
     // Fast path: an already-materialized DB skips the thread topology but
     // still produces merged counts (tests rely on identical outputs).
     if let Source::Db(db) = source {
@@ -258,7 +295,7 @@ fn ingest(source: Source, config: &PipelineConfig) -> Result<(TransactionDb, Par
         for tx in db.iter() {
             counts.observe(tx);
         }
-        return Ok((db, counts));
+        return Ok((db, counts, (Duration::ZERO, Duration::ZERO)));
     }
 
     let (vocab, mut next_chunk): (Vocab, Box<dyn FnMut(usize) -> Vec<Vec<ItemId>> + Send>) =
@@ -287,6 +324,9 @@ fn ingest(source: Source, config: &PipelineConfig) -> Result<(TransactionDb, Par
         };
 
     let queue: BoundedQueue<(u64, Vec<Vec<ItemId>>)> = BoundedQueue::new(config.queue_capacity);
+    if let Some(registry) = registry {
+        queue.bind_metrics(registry, "tor_pipeline_queue");
+    }
     let router = ShardRouter::new(config.workers, config.shard_slots);
     let num_items = vocab.len();
 
@@ -373,7 +413,7 @@ fn ingest(source: Source, config: &PipelineConfig) -> Result<(TransactionDb, Par
     } else {
         merged
     };
-    Ok((db, merged))
+    Ok((db, merged, queue.blocked_times()))
 }
 
 #[cfg(test)]
@@ -522,6 +562,59 @@ mod tests {
             assert!(stages.contains(&"build-trie") && stages.contains(&"build-frame"));
             assert_eq!(par.report.build_threads, helpers + 1);
         }
+    }
+
+    #[test]
+    fn observed_run_mirrors_stages_without_changing_outputs() {
+        let gen = GeneratorConfig::tiny(13);
+        let cfg = PipelineConfig {
+            minsup: 0.05,
+            workers: 2,
+            chunk_size: 16,
+            queue_capacity: 2,
+            ..Default::default()
+        };
+        let plain = run(Source::Generated(gen.clone()), &cfg, None).unwrap();
+        let registry = MetricsRegistry::new();
+        let path = std::env::temp_dir().join(format!(
+            "tor_pipe_obs_{}.jsonl",
+            std::process::id()
+        ));
+        let exporter = TelemetryExporter::create(path.to_str().unwrap()).unwrap();
+        let observed = run_observed(
+            Source::Generated(gen),
+            &cfg,
+            None,
+            None,
+            Some(&registry),
+            Some(&exporter),
+        )
+        .unwrap();
+        // Pure mirror: identical build outputs.
+        assert_eq!(plain.frequent.sets, observed.frequent.sets);
+        assert_eq!(plain.trie.items_column(), observed.trie.items_column());
+        // Registry carries every stage plus the structural gauges.
+        let text = registry.render_prometheus();
+        for stage in ["ingest+shard", "mine", "rulegen", "build-trie", "build-frame"] {
+            assert!(
+                text.contains(&format!("tor_pipeline_stage_seconds{{stage=\"{stage}\"")),
+                "missing {stage} in:\n{text}"
+            );
+        }
+        assert!(text.contains("tor_trie_nodes"), "{text}");
+        assert!(text.contains("tor_pipeline_queue_depth"), "{text}");
+        // Exporter wrote one pipeline_stage record per stage.
+        exporter.sync();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), observed.report.stages.len());
+        for line in lines {
+            let v = crate::util::json::Json::parse(line).unwrap();
+            assert_eq!(v.get("type").unwrap().as_str(), Some("pipeline_stage"));
+            assert!(v.get("duration_s").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        drop(exporter);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

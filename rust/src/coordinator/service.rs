@@ -46,10 +46,13 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::data::vocab::Vocab;
+use crate::obs::export::TelemetryExporter;
+use crate::obs::registry::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::query::ast::{Pred, Query as RqlQuery, SortSpec};
 use crate::query::exec::{QueryOutput, Row};
 use crate::query::parallel::{default_query_threads, ParallelExecutor};
@@ -57,6 +60,134 @@ use crate::rules::metrics::Metric;
 use crate::rules::rule::Rule;
 use crate::trie::delta::{IncrementalTrie, MergedView};
 use crate::trie::trie::{FindOutcome, TrieOfRules};
+
+/// Protocol verbs, as bucketed for per-verb service metrics. `Other`
+/// absorbs unknown commands so malformed input still shows up in latency
+/// and error accounting instead of vanishing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verb {
+    Rules,
+    Explain,
+    Find,
+    Top,
+    Conseq,
+    Support,
+    Ingest,
+    Compact,
+    Snapshot,
+    Stats,
+    Metrics,
+    Other,
+}
+
+impl Verb {
+    /// Every verb, in the fixed order used for metric registration and the
+    /// `q_<verb>=` tail of STATS.
+    const ALL: [Verb; 12] = [
+        Verb::Rules,
+        Verb::Explain,
+        Verb::Find,
+        Verb::Top,
+        Verb::Conseq,
+        Verb::Support,
+        Verb::Ingest,
+        Verb::Compact,
+        Verb::Snapshot,
+        Verb::Stats,
+        Verb::Metrics,
+        Verb::Other,
+    ];
+
+    fn name(self) -> &'static str {
+        match self {
+            Verb::Rules => "rules",
+            Verb::Explain => "explain",
+            Verb::Find => "find",
+            Verb::Top => "top",
+            Verb::Conseq => "conseq",
+            Verb::Support => "support",
+            Verb::Ingest => "ingest",
+            Verb::Compact => "compact",
+            Verb::Snapshot => "snapshot",
+            Verb::Stats => "stats",
+            Verb::Metrics => "metrics",
+            Verb::Other => "other",
+        }
+    }
+
+    /// Classify an already-uppercased command word.
+    fn of(cmd: &str) -> Verb {
+        match cmd {
+            "RULES" => Verb::Rules,
+            "EXPLAIN" => Verb::Explain,
+            "FIND" => Verb::Find,
+            "TOP" => Verb::Top,
+            "CONSEQ" => Verb::Conseq,
+            "SUPPORT" => Verb::Support,
+            "INGEST" => Verb::Ingest,
+            "COMPACT" => Verb::Compact,
+            "SNAPSHOT" => Verb::Snapshot,
+            "STATS" => Verb::Stats,
+            "METRICS" => Verb::Metrics,
+            _ => Verb::Other,
+        }
+    }
+}
+
+/// The engine's observability plane: a metrics registry plus pre-bound
+/// handles for everything the request path touches. Always present (so
+/// `METRICS` works on any engine); `enabled = false` strips the per-query
+/// clock reads and counter updates for overhead measurement
+/// (`benches/obs_overhead.rs`) while leaving response bytes identical.
+struct ServiceObs {
+    registry: Arc<MetricsRegistry>,
+    enabled: bool,
+    start: Instant,
+    /// Per-verb request counters (`tor_queries_total{verb="..."}`),
+    /// indexed by `Verb as usize`.
+    verb_count: [Counter; 12],
+    /// Per-verb latency histograms (`tor_query_seconds{verb="..."}`).
+    verb_latency: [Histogram; 12],
+    active_conns: Gauge,
+    uptime_seconds: Gauge,
+    ingest_batch_tx: Histogram,
+    compact_pause_seconds: Histogram,
+    epoch: Gauge,
+    pending_tx: Gauge,
+    delta_nodes: Gauge,
+    exporter: Option<Arc<TelemetryExporter>>,
+}
+
+impl ServiceObs {
+    fn new(registry: Arc<MetricsRegistry>, exporter: Option<Arc<TelemetryExporter>>) -> Self {
+        let verb_count = Verb::ALL
+            .map(|v| registry.counter(&format!("tor_queries_total{{verb=\"{}\"}}", v.name())));
+        let verb_latency = Verb::ALL.map(|v| {
+            registry.histogram_seconds(&format!("tor_query_seconds{{verb=\"{}\"}}", v.name()))
+        });
+        ServiceObs {
+            enabled: true,
+            start: Instant::now(),
+            verb_count,
+            verb_latency,
+            active_conns: registry.gauge("tor_active_connections"),
+            uptime_seconds: registry.gauge("tor_uptime_seconds"),
+            ingest_batch_tx: registry.histogram("tor_ingest_batch_tx"),
+            compact_pause_seconds: registry.histogram_seconds("tor_compact_pause_seconds"),
+            epoch: registry.gauge("tor_epoch"),
+            pending_tx: registry.gauge("tor_pending_tx"),
+            delta_nodes: registry.gauge("tor_delta_nodes"),
+            exporter,
+            registry,
+        }
+    }
+
+    fn uptime_s(&self) -> u64 {
+        let s = self.start.elapsed().as_secs();
+        self.uptime_seconds.set(s as i64);
+        s
+    }
+}
 
 /// In-process query engine over a built trie. Owns one
 /// [`ParallelExecutor`] — and with it one worker pool — for its whole
@@ -83,6 +214,8 @@ pub struct QueryEngine {
     /// Threads the build pipeline ran with (0 = unknown, e.g. a trie
     /// loaded from disk); surfaced in STATS as `build_threads=`.
     build_threads: usize,
+    /// Metrics + telemetry plane (always constructed; see [`ServiceObs`]).
+    obs: ServiceObs,
 }
 
 impl QueryEngine {
@@ -108,6 +241,7 @@ impl QueryEngine {
             store: None,
             compact_threshold: 0,
             build_threads: 0,
+            obs: ServiceObs::new(Arc::new(MetricsRegistry::new()), None),
         }
     }
 
@@ -123,6 +257,7 @@ impl QueryEngine {
             store: Some(Mutex::new(store)),
             compact_threshold: 0,
             build_threads: 0,
+            obs: ServiceObs::new(Arc::new(MetricsRegistry::new()), None),
         }
     }
 
@@ -139,6 +274,36 @@ impl QueryEngine {
     pub fn with_compact_threshold(mut self, threshold: usize) -> Self {
         self.compact_threshold = threshold;
         self
+    }
+
+    /// Rebind the engine's observability plane onto an external registry
+    /// (so build-pipeline metrics and serving metrics land in one
+    /// exposition) and optionally attach a JSONL telemetry exporter. Also
+    /// binds the worker pool's counters into the same registry.
+    pub fn with_observability(
+        mut self,
+        registry: Arc<MetricsRegistry>,
+        exporter: Option<Arc<TelemetryExporter>>,
+    ) -> Self {
+        self.exec.pool().bind_metrics(&registry);
+        let enabled = self.obs.enabled;
+        self.obs = ServiceObs::new(registry, exporter);
+        self.obs.enabled = enabled;
+        self
+    }
+
+    /// Toggle per-request instrumentation (clock reads, counters, exporter
+    /// records). `METRICS`/`STATS` keep working either way; response bytes
+    /// for every verb except `STATS`' counters are identical on both
+    /// settings — that parity is what `benches/obs_overhead.rs` gates on.
+    pub fn with_metrics_enabled(mut self, enabled: bool) -> Self {
+        self.obs.enabled = enabled;
+        self
+    }
+
+    /// The engine's metrics registry (for embedding, tests, and benches).
+    pub fn metrics_registry(&self) -> &Arc<MetricsRegistry> {
+        &self.obs.registry
     }
 
     /// Pin the current serving state.
@@ -161,11 +326,18 @@ impl QueryEngine {
     }
 
     /// Execute one text command, returning the response line(s).
+    ///
+    /// When instrumentation is enabled the dispatch is wrapped in one
+    /// clock-read pair feeding the verb's latency histogram and (if
+    /// attached) a `query` telemetry record; the response bytes are the
+    /// same either way.
     pub fn execute(&self, line: &str) -> String {
         self.queries.fetch_add(1, Ordering::Relaxed);
         let line = line.trim();
         let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
-        match cmd.to_ascii_uppercase().as_str() {
+        let cmd = cmd.to_ascii_uppercase();
+        let t0 = self.obs.enabled.then(Instant::now);
+        let resp = match cmd.as_str() {
             "RULES" | "EXPLAIN" => self.cmd_rql(line),
             "FIND" => self.cmd_find(rest),
             "TOP" => self.cmd_top(rest),
@@ -175,9 +347,21 @@ impl QueryEngine {
             "COMPACT" => self.cmd_compact(),
             "SNAPSHOT" => self.cmd_snapshot(rest),
             "STATS" => self.cmd_stats(),
+            "METRICS" => self.cmd_metrics(rest),
             "QUIT" => "BYE".to_string(),
             other => format!("ERR unknown command `{other}`"),
+        };
+        if let Some(t0) = t0 {
+            let latency = t0.elapsed();
+            let verb = Verb::of(&cmd);
+            self.obs.verb_count[verb as usize].inc();
+            self.obs.verb_latency[verb as usize].observe_duration(latency);
+            if let Some(exporter) = &self.obs.exporter {
+                let ok = !resp.starts_with("ERR");
+                exporter.emit_query(verb.name(), latency, ok, self.view().epoch);
+            }
         }
+        resp
     }
 
     /// Execute a full RQL line through the query engine.
@@ -280,6 +464,7 @@ impl QueryEngine {
         };
         let query = RqlQuery {
             explain: false,
+            analyze: false,
             preds: Vec::new(),
             sort: Some(SortSpec {
                 metric,
@@ -324,6 +509,7 @@ impl QueryEngine {
         let item = rest.trim();
         let query = RqlQuery {
             explain: false,
+            analyze: false,
             preds: vec![Pred::ConseqEq(item.to_string())],
             sort: None,
             limit: None,
@@ -382,13 +568,48 @@ impl QueryEngine {
         // count the batch.
         let mut suffix = String::new();
         if self.compact_threshold > 0 && store.pending_len() >= self.compact_threshold {
+            let pause_t = self.obs.enabled.then(Instant::now);
             match store.compact(Some(self.exec.pool())) {
-                Ok(true) => suffix = " compacted".to_string(),
+                Ok(true) => {
+                    suffix = " compacted".to_string();
+                    if let Some(t0) = pause_t {
+                        let pause = t0.elapsed();
+                        self.obs.compact_pause_seconds.observe_duration(pause);
+                        if let Some(exporter) = &self.obs.exporter {
+                            exporter.emit_compact(
+                                pause,
+                                store.base().num_nodes(),
+                                store.compactions(),
+                                store.epoch(),
+                            );
+                        }
+                    }
+                }
                 Ok(false) => {}
                 Err(e) => suffix = format!(" (auto-compaction failed: {e:#})"),
             }
         }
         *self.serving.lock().unwrap() = Arc::new(store.view());
+        if self.obs.enabled {
+            self.obs.ingest_batch_tx.observe(txs.len() as u64);
+            self.obs.epoch.set(store.epoch() as i64);
+            self.obs.pending_tx.set(store.pending_len() as i64);
+            self.obs.delta_nodes.set(store.delta_nodes() as i64);
+            if let Some(exporter) = &self.obs.exporter {
+                exporter.emit_ingest(
+                    txs.len(),
+                    store.pending_len(),
+                    store.delta_nodes(),
+                    store.epoch(),
+                );
+                exporter.emit_snapshot_swap(
+                    store.delta_nodes(),
+                    store.pending_len(),
+                    store.epoch(),
+                );
+                exporter.flush();
+            }
+        }
         format!(
             "OK ingested={} pending={} delta_nodes={} epoch={}{suffix}",
             report.ingested,
@@ -405,9 +626,32 @@ impl QueryEngine {
             return "ERR COMPACT requires an incremental engine".to_string();
         };
         let mut store = store.lock().unwrap();
+        let pause_t = self.obs.enabled.then(Instant::now);
         match store.compact(Some(self.exec.pool())) {
             Ok(true) => {
                 *self.serving.lock().unwrap() = Arc::new(store.view());
+                if let Some(t0) = pause_t {
+                    let pause = t0.elapsed();
+                    self.obs.compact_pause_seconds.observe_duration(pause);
+                    self.obs.epoch.set(store.epoch() as i64);
+                    self.obs.pending_tx.set(store.pending_len() as i64);
+                    self.obs.delta_nodes.set(store.delta_nodes() as i64);
+                    if let Some(exporter) = &self.obs.exporter {
+                        exporter.emit_compact(
+                            pause,
+                            store.base().num_nodes(),
+                            store.compactions(),
+                            store.epoch(),
+                        );
+                        exporter.emit_snapshot_swap(
+                            store.delta_nodes(),
+                            store.pending_len(),
+                            store.epoch(),
+                        );
+                        exporter.emit_metrics(&self.obs.registry, store.epoch());
+                        exporter.flush();
+                    }
+                }
                 format!(
                     "OK compacted epoch={} nodes={} compactions={}",
                     store.epoch(),
@@ -455,6 +699,16 @@ impl QueryEngine {
                     // on disk can never describe two different epochs.
                     std::fs::remove_file(&sidecar).ok();
                 }
+                if self.obs.enabled {
+                    if let Some(exporter) = &self.obs.exporter {
+                        exporter.emit_snapshot(
+                            &path.display().to_string(),
+                            store.pending_len(),
+                            store.epoch(),
+                        );
+                        exporter.flush();
+                    }
+                }
                 format!(
                     "OK snapshot={} epoch={} pending={}{extra}",
                     path.display(),
@@ -465,11 +719,19 @@ impl QueryEngine {
             None => {
                 let view = self.view();
                 match crate::trie::serialize::save(&view.base, Some(&self.vocab), &path) {
-                    Ok(()) => format!(
-                        "OK snapshot={} epoch={} pending=0",
-                        path.display(),
-                        view.epoch
-                    ),
+                    Ok(()) => {
+                        if self.obs.enabled {
+                            if let Some(exporter) = &self.obs.exporter {
+                                exporter.emit_snapshot(&path.display().to_string(), 0, view.epoch);
+                                exporter.flush();
+                            }
+                        }
+                        format!(
+                            "OK snapshot={} epoch={} pending=0",
+                            path.display(),
+                            view.epoch
+                        )
+                    }
                     Err(e) => format!("ERR {e:#}"),
                 }
             }
@@ -492,7 +754,7 @@ impl QueryEngine {
             }
             None => (0, 0, 0),
         };
-        format!(
+        let mut out = format!(
             "STATS nodes={} rules={} mem_kib={} threads={} build_threads={} queries={} \
              epoch={} pending_tx={} delta_nodes={} compactions={}",
             view.base.num_nodes(),
@@ -505,7 +767,55 @@ impl QueryEngine {
             pending,
             delta_nodes,
             compactions
-        )
+        );
+        // Observability tail (append-only so the pre-existing key order
+        // stays stable for scrapers): wall uptime, live TCP connections,
+        // and the per-verb request counters in Verb::ALL order. The
+        // counters exclude the STATS request being answered — its verb
+        // accounting happens after the response is built.
+        out.push_str(&format!(
+            " uptime_s={} active_conns={}",
+            self.obs.uptime_s(),
+            self.obs.active_conns.get()
+        ));
+        for verb in Verb::ALL {
+            out.push_str(&format!(
+                " q_{}={}",
+                verb.name(),
+                self.obs.verb_count[verb as usize].get()
+            ));
+        }
+        out
+    }
+
+    /// `METRICS` — the full registry in Prometheus text exposition,
+    /// self-delimiting like every multi-line response (`METRICS <n>` header
+    /// carrying the body's line count). `METRICS JSON` — the same snapshot
+    /// as one compact JSON line (`METRICS JSON {...}`), parseable with
+    /// `util::json`.
+    fn cmd_metrics(&self, rest: &str) -> String {
+        // Refresh the point-in-time gauges so a scrape is never staler
+        // than the request that asked for it.
+        self.obs.uptime_s();
+        let view = self.view();
+        self.obs.epoch.set(view.epoch as i64);
+        if let Some(store) = &self.store {
+            let store = store.lock().unwrap();
+            self.obs.pending_tx.set(store.pending_len() as i64);
+            self.obs.delta_nodes.set(store.delta_nodes() as i64);
+        }
+        match rest.trim().to_ascii_uppercase().as_str() {
+            "" => {
+                let body = self.obs.registry.render_prometheus();
+                let body = body.trim_end();
+                format!("METRICS {}\n{body}", body.lines().count())
+            }
+            "JSON" => format!(
+                "METRICS JSON {}",
+                self.obs.registry.to_json().to_string_compact()
+            ),
+            _ => "ERR usage: METRICS [JSON]".to_string(),
+        }
     }
 }
 
@@ -543,7 +853,14 @@ pub fn serve_tcp(
             match listener.accept() {
                 Ok((stream, _)) => {
                     let engine = Arc::clone(&engine);
+                    // Counted on accept (not inside the handler thread) so
+                    // the gauge never under-reports a connection that is
+                    // alive but not yet scheduled; the guard decrements on
+                    // every exit path of the handler.
+                    engine.obs.active_conns.add(1);
+                    let guard = ConnGuard(engine.obs.active_conns.clone());
                     workers.push(std::thread::spawn(move || {
+                        let _guard = guard;
                         let _ = handle_client(stream, &engine);
                     }));
                 }
@@ -558,6 +875,16 @@ pub fn serve_tcp(
         }
     });
     Ok(local)
+}
+
+/// Decrements the active-connection gauge when a handler thread exits,
+/// whether the client said QUIT, hung up, or the stream errored.
+struct ConnGuard(Gauge);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.sub(1);
+    }
 }
 
 fn handle_client(stream: TcpStream, engine: &QueryEngine) -> Result<()> {
@@ -699,6 +1026,156 @@ mod tests {
         // No pipeline ran here, so the build thread count is unknown (0).
         assert!(resp.contains("build_threads=0"), "{resp}");
         assert!(e.queries_served() >= 2);
+    }
+
+    #[test]
+    fn stats_carries_observability_tail() {
+        let e = engine();
+        e.execute("FIND f,c => a");
+        e.execute("RULES LIMIT 1");
+        let resp = e.execute("STATS");
+        assert!(resp.contains(" uptime_s="), "{resp}");
+        assert!(resp.contains(" active_conns=0"), "{resp}");
+        assert!(resp.contains(" q_rules=1"), "{resp}");
+        assert!(resp.contains(" q_find=1"), "{resp}");
+        // The STATS being answered is counted after its response renders.
+        assert!(resp.contains(" q_stats=0"), "{resp}");
+        let resp = e.execute("STATS");
+        assert!(resp.contains(" q_stats=1"), "{resp}");
+        // The tail keys come in fixed Verb::ALL order.
+        let tail: Vec<&str> = resp
+            .split_whitespace()
+            .filter(|t| t.starts_with("q_"))
+            .collect();
+        assert_eq!(tail.len(), 12, "{resp}");
+        assert!(tail[0].starts_with("q_rules="), "{resp}");
+        assert!(tail[11].starts_with("q_other="), "{resp}");
+    }
+
+    #[test]
+    fn metrics_command_serves_prometheus_summaries() {
+        let e = engine();
+        e.execute("RULES LIMIT 1");
+        e.execute("FIND f,c => a");
+        let resp = e.execute("METRICS");
+        let header = resp.lines().next().unwrap();
+        let n: usize = header.strip_prefix("METRICS ").unwrap().parse().unwrap();
+        assert_eq!(resp.lines().count(), n + 1, "{resp}");
+        assert!(
+            resp.contains("tor_queries_total{verb=\"rules\"} 1"),
+            "{resp}"
+        );
+        assert!(resp.contains("# TYPE tor_query_seconds summary"), "{resp}");
+        for q in ["0.5", "0.99", "0.999"] {
+            assert!(
+                resp.contains(&format!("tor_query_seconds{{verb=\"find\",quantile=\"{q}\"}}")),
+                "{resp}"
+            );
+        }
+        assert!(
+            resp.contains("tor_query_seconds_count{verb=\"rules\"} 1"),
+            "{resp}"
+        );
+        assert!(resp.contains("tor_uptime_seconds"), "{resp}");
+        assert!(resp.contains("tor_active_connections 0"), "{resp}");
+    }
+
+    #[test]
+    fn metrics_json_variant_is_one_parseable_line() {
+        let e = engine();
+        e.execute("RULES LIMIT 2");
+        let resp = e.execute("METRICS JSON");
+        assert_eq!(resp.lines().count(), 1, "{resp}");
+        let json = resp.strip_prefix("METRICS JSON ").unwrap();
+        let v = crate::util::json::Json::parse(json).unwrap();
+        let hist = v
+            .get("histograms")
+            .unwrap()
+            .get("tor_query_seconds{verb=\"rules\"}")
+            .unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(1.0));
+        assert!(hist.get("p99").unwrap().as_f64().unwrap() >= 0.0);
+        let counters = v.get("counters").unwrap();
+        assert_eq!(
+            counters
+                .get("tor_queries_total{verb=\"rules\"}")
+                .unwrap()
+                .as_f64(),
+            Some(1.0)
+        );
+        assert!(e.execute("METRICS bogus").starts_with("ERR usage"));
+    }
+
+    #[test]
+    fn disabled_metrics_leave_responses_identical() {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let on = QueryEngine::with_threads(trie.clone(), db.vocab().clone(), 2);
+        let off = QueryEngine::with_threads(trie, db.vocab().clone(), 2)
+            .with_metrics_enabled(false);
+        for cmd in [
+            "RULES WHERE conseq = a SORT BY lift DESC LIMIT 5",
+            "EXPLAIN ANALYZE RULES WHERE support >= 0.4",
+            "FIND f,c => a",
+            "TOP confidence 4",
+        ] {
+            let a = on.execute(cmd);
+            let b = off.execute(cmd);
+            if cmd.starts_with("EXPLAIN ANALYZE") {
+                // Wall times differ run to run; the work counters may not.
+                let tokens = |s: &str| {
+                    s.split_whitespace()
+                        .filter(|t| {
+                            t.starts_with("visited=")
+                                || t.starts_with("probes=")
+                                || t.starts_with("matched=")
+                                || t.starts_with("rows=")
+                        })
+                        .map(str::to_string)
+                        .collect::<Vec<_>>()
+                };
+                assert_eq!(tokens(&a), tokens(&b), "diverged on `{cmd}`");
+            } else {
+                assert_eq!(a, b, "diverged on `{cmd}`");
+            }
+        }
+        // Stripped mode records nothing.
+        let resp = off.execute("STATS");
+        assert!(resp.contains(" q_rules=0"), "{resp}");
+        assert_eq!(
+            on.metrics_registry()
+                .counter("tor_queries_total{verb=\"find\"}")
+                .get(),
+            1
+        );
+    }
+
+    #[test]
+    fn explain_analyze_through_the_service_is_self_delimiting() {
+        let e = engine();
+        let resp = e.execute("EXPLAIN ANALYZE RULES WHERE conseq = a LIMIT 3");
+        let header = resp.lines().next().unwrap();
+        let n: usize = header.strip_prefix("EXPLAIN ").unwrap().parse().unwrap();
+        assert_eq!(resp.lines().count(), n + 1, "{resp}");
+        assert!(resp.contains("conseq-header(a)"), "{resp}");
+        assert!(resp.contains("analyze:"), "{resp}");
+        assert!(resp.contains("visited="), "{resp}");
+        assert!(resp.contains("rows="), "{resp}");
+    }
+
+    #[test]
+    fn ingest_and_compact_update_registry_gauges() {
+        let e = incremental_engine(2);
+        e.execute("INGEST f,c,a;b,p");
+        let reg = e.metrics_registry();
+        assert_eq!(reg.gauge("tor_pending_tx").get(), 2);
+        assert_eq!(reg.histogram("tor_ingest_batch_tx").count(), 1);
+        e.execute("COMPACT");
+        assert_eq!(reg.gauge("tor_pending_tx").get(), 0);
+        assert_eq!(reg.gauge("tor_epoch").get(), 1);
+        assert_eq!(reg.histogram_seconds("tor_compact_pause_seconds").count(), 1);
     }
 
     #[test]

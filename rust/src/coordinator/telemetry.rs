@@ -3,6 +3,7 @@
 
 use std::time::Duration;
 
+use crate::obs::registry::MetricsRegistry;
 use crate::util::timer::fmt_duration;
 
 /// One pipeline stage's timing record.
@@ -15,12 +16,15 @@ pub struct StageReport {
 }
 
 impl StageReport {
+    /// Items/s. Zero-duration stages report 0.0, not infinity: the value
+    /// flows into the JSON/JSONL export path, where non-finite floats have
+    /// no representation.
     pub fn throughput(&self) -> f64 {
         let secs = self.duration.as_secs_f64();
         if secs > 0.0 {
             self.items as f64 / secs
         } else {
-            f64::INFINITY
+            0.0
         }
     }
 }
@@ -56,6 +60,36 @@ impl PipelineReport {
             duration,
             items,
         });
+    }
+
+    /// Mirror the report into a live metrics registry: one
+    /// `tor_pipeline_stage_seconds{stage="..."}` histogram observation and a
+    /// `tor_pipeline_stage_items` counter per stage, plus gauges for the
+    /// run-level totals. Idempotent per run — call once after the pipeline
+    /// completes.
+    pub fn record_into(&self, registry: &MetricsRegistry) {
+        for s in &self.stages {
+            registry
+                .histogram_seconds(&format!("tor_pipeline_stage_seconds{{stage=\"{}\"}}", s.name))
+                .observe_duration(s.duration);
+            registry
+                .counter(&format!("tor_pipeline_stage_items_total{{stage=\"{}\"}}", s.name))
+                .add(s.items as u64);
+        }
+        registry
+            .counter("tor_pipeline_producer_blocked_ns_total")
+            .add(self.producer_blocked.as_nanos().min(u64::MAX as u128) as u64);
+        registry
+            .counter("tor_pipeline_consumer_blocked_ns_total")
+            .add(self.consumer_blocked.as_nanos().min(u64::MAX as u128) as u64);
+        registry.gauge("tor_pipeline_transactions").set(self.num_transactions as i64);
+        registry.gauge("tor_pipeline_frequent_itemsets").set(self.num_frequent_itemsets as i64);
+        registry.gauge("tor_pipeline_rules").set(self.num_rules as i64);
+        registry.gauge("tor_trie_nodes").set(self.trie_nodes as i64);
+        registry.gauge("tor_trie_rules_representable").set(self.trie_rules_representable as i64);
+        registry.gauge("tor_trie_memory_bytes").set(self.trie_memory_bytes as i64);
+        registry.gauge("tor_frame_memory_bytes").set(self.frame_memory_bytes as i64);
+        registry.gauge("tor_pipeline_build_threads").set(self.build_threads.max(1) as i64);
     }
 
     /// Markdown-ish rendering for CLI output and EXPERIMENTS.md capture.
@@ -131,5 +165,35 @@ mod tests {
             items: 100,
         };
         assert!((s.throughput() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_duration_stage_reports_zero_throughput() {
+        let s = StageReport {
+            name: "x".into(),
+            duration: Duration::ZERO,
+            items: 100,
+        };
+        assert_eq!(s.throughput(), 0.0);
+        assert!(s.throughput().is_finite());
+    }
+
+    #[test]
+    fn record_into_registers_stage_and_total_metrics() {
+        let mut r = PipelineReport::default();
+        r.push_stage("ingest+shard", Duration::from_millis(10), 100);
+        r.push_stage("mine", Duration::from_millis(30), 42);
+        r.num_transactions = 100;
+        r.trie_nodes = 57;
+        r.producer_blocked = Duration::from_millis(2);
+        let reg = MetricsRegistry::new();
+        r.record_into(&reg);
+        let text = reg.render_prometheus();
+        assert!(text.contains("tor_pipeline_stage_seconds{stage=\"ingest+shard\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("tor_pipeline_stage_items_total{stage=\"mine\"} 42"));
+        assert!(text.contains("tor_pipeline_transactions 100"));
+        assert!(text.contains("tor_trie_nodes 57"));
+        assert!(text.contains("tor_pipeline_build_threads 1"));
+        assert_eq!(reg.counter("tor_pipeline_producer_blocked_ns_total").get(), 2_000_000);
     }
 }

@@ -25,6 +25,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod mining;
+pub mod obs;
 pub mod query;
 pub mod rules;
 pub mod runtime;

@@ -14,6 +14,8 @@ use trie_of_rules::cli::{self, Command, PipelineOpts};
 use trie_of_rules::coordinator::config::CounterKind;
 use trie_of_rules::coordinator::pipeline::{self, PipelineOutput, Source};
 use trie_of_rules::coordinator::service::{serve_tcp, QueryEngine};
+use trie_of_rules::obs::export::TelemetryExporter;
+use trie_of_rules::obs::registry::MetricsRegistry;
 use trie_of_rules::query::parallel::{ParallelExecutor, WorkerPool};
 use trie_of_rules::runtime::{default_artifacts_dir, Runtime};
 use trie_of_rules::trie::viz;
@@ -34,19 +36,30 @@ fn run(args: &[String]) -> Result<()> {
         }
         Command::Example => run_example(),
         Command::Pipeline(opts, save) => {
-            let out = run_pipeline(&opts, None)?;
+            let registry = Arc::new(MetricsRegistry::new());
+            let exporter = build_telemetry(&opts)?;
+            let out = run_pipeline(&opts, None, Some(&registry), exporter.as_deref())?;
             print!("{}", out.report.render());
             if let Some(path) = save {
                 trie_of_rules::trie::serialize::save(&out.trie, Some(out.db.vocab()), &path)?;
                 println!("saved trie ({} nodes) to {}", out.trie.num_nodes(), path.display());
+            }
+            if let Some(exporter) = &exporter {
+                exporter.emit_metrics(&registry, 0);
+                exporter.sync();
+                eprintln!("telemetry written to {}", exporter.path());
             }
             Ok(())
         }
         Command::Query(opts, cmds, load, replay) => {
             // One executor (and worker pool) for the whole process: the
             // pipeline build overlaps its stages on it, then every query
-            // command runs through it.
+            // command runs through it. One registry spans both phases, so
+            // METRICS exposes build-stage and per-verb serving series
+            // side by side.
             let exec = ParallelExecutor::new(opts.config.effective_query_threads());
+            let registry = Arc::new(MetricsRegistry::new());
+            let exporter = build_telemetry(&opts)?;
             let engine = match load {
                 Some(path) => {
                     let (trie, vocab) = trie_of_rules::trie::serialize::load(&path)?;
@@ -60,7 +73,12 @@ fn run(args: &[String]) -> Result<()> {
                     QueryEngine::with_executor(trie, vocab, exec)
                 }
                 None => {
-                    let out = run_pipeline(&opts, Some(exec.pool()))?;
+                    let out = run_pipeline(
+                        &opts,
+                        Some(exec.pool()),
+                        Some(&registry),
+                        exporter.as_deref(),
+                    )?;
                     eprint!("{}", out.report.render());
                     // Pipeline-built engines serve incrementally: the
                     // retained database lets INGEST/COMPACT merge exactly.
@@ -72,15 +90,21 @@ fn run(args: &[String]) -> Result<()> {
                         .with_build_threads(report.build_threads)
                         .with_compact_threshold(opts.config.compact_threshold)
                 }
-            };
+            }
+            .with_observability(Arc::clone(&registry), exporter.clone());
             for cmd in cmds {
                 println!("> {cmd}");
                 println!("{}", engine.execute(&cmd));
             }
+            if let Some(exporter) = &exporter {
+                exporter.emit_metrics(&registry, engine.view().epoch);
+                exporter.sync();
+                eprintln!("telemetry written to {}", exporter.path());
+            }
             Ok(())
         }
         Command::Export { opts, format, out } => {
-            let result = run_pipeline(&opts, None)?;
+            let result = run_pipeline(&opts, None, None, None)?;
             eprint!("{}", result.report.render());
             let f = std::fs::File::create(&out)
                 .with_context(|| format!("create {}", out.display()))?;
@@ -100,7 +124,14 @@ fn run(args: &[String]) -> Result<()> {
         }
         Command::Serve(opts, port, replay) => {
             let exec = ParallelExecutor::new(opts.config.effective_query_threads());
-            let out = run_pipeline(&opts, Some(exec.pool()))?;
+            let registry = Arc::new(MetricsRegistry::new());
+            let exporter = build_telemetry(&opts)?;
+            let out = run_pipeline(
+                &opts,
+                Some(exec.pool()),
+                Some(&registry),
+                exporter.as_deref(),
+            )?;
             eprint!("{}", out.report.render());
             let (mut store, vocab, report) = out.into_incremental(&opts.config)?;
             if let Some(sidecar) = &replay {
@@ -109,9 +140,13 @@ fn run(args: &[String]) -> Result<()> {
             let engine = Arc::new(
                 QueryEngine::with_incremental(store, vocab, exec)
                     .with_build_threads(report.build_threads)
-                    .with_compact_threshold(opts.config.compact_threshold),
+                    .with_compact_threshold(opts.config.compact_threshold)
+                    .with_observability(Arc::clone(&registry), exporter.clone()),
             );
             eprintln!("query threads: {}", engine.threads());
+            if let Some(exporter) = &exporter {
+                eprintln!("telemetry streaming to {}", exporter.path());
+            }
             let shutdown = Arc::new(AtomicBool::new(false));
             let addr = serve_tcp(engine, &format!("127.0.0.1:{port}"), Arc::clone(&shutdown))?;
             println!("serving on {addr} (Ctrl-C to stop)");
@@ -124,13 +159,13 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         Command::Show(opts, depth) => {
-            let out = run_pipeline(&opts, None)?;
+            let out = run_pipeline(&opts, None, None, None)?;
             eprint!("{}", out.report.render());
             print!("{}", viz::to_ascii(&out.trie, out.db.vocab(), depth));
             Ok(())
         }
         Command::Dot(opts, out_path) => {
-            let out = run_pipeline(&opts, None)?;
+            let out = run_pipeline(&opts, None, None, None)?;
             let dot = viz::to_dot(&out.trie, out.db.vocab());
             match out_path {
                 Some(p) => {
@@ -198,10 +233,25 @@ fn replay_sidecar(
     Ok(())
 }
 
+/// Open the JSONL telemetry sink when `--telemetry-out` was given.
+fn build_telemetry(opts: &PipelineOpts) -> Result<Option<Arc<TelemetryExporter>>> {
+    match &opts.config.telemetry_out {
+        Some(path) => Ok(Some(Arc::new(TelemetryExporter::create(path)?))),
+        None => Ok(None),
+    }
+}
+
 /// Shared pipeline-run logic for the subcommands. `pool` lets serve/query
 /// hand their query executor's worker pool down so the build stages and
-/// the request path share one set of threads.
-fn run_pipeline(opts: &PipelineOpts, pool: Option<&WorkerPool>) -> Result<PipelineOutput> {
+/// the request path share one set of threads; `registry`/`exporter`
+/// mirror the build into the observability plane (see
+/// [`pipeline::run_observed`]).
+fn run_pipeline(
+    opts: &PipelineOpts,
+    pool: Option<&WorkerPool>,
+    registry: Option<&MetricsRegistry>,
+    exporter: Option<&TelemetryExporter>,
+) -> Result<PipelineOutput> {
     let runtime = if opts.config.counter == CounterKind::Xla {
         let dir = opts
             .artifacts
@@ -223,7 +273,7 @@ fn run_pipeline(opts: &PipelineOpts, pool: Option<&WorkerPool>) -> Result<Pipeli
             Source::Generated(cfg)
         }
     };
-    pipeline::run_with_pool(source, &opts.config, runtime.as_ref(), pool)
+    pipeline::run_observed(source, &opts.config, runtime.as_ref(), pool, registry, exporter)
 }
 
 /// Walk the paper's worked example (Figs. 4–7) end to end.

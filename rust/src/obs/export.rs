@@ -1,0 +1,249 @@
+//! Background JSONL telemetry exporter (`--telemetry-out <path>`).
+//!
+//! Serving threads never touch the file: `emit_*` renders one compact JSON
+//! object and hands the line to a dedicated writer thread over an unbounded
+//! channel, so a slow or full disk degrades telemetry, not query latency.
+//! Every record carries `type`, a monotonic `t_s` offset from exporter
+//! creation, and (where meaningful) the serving `epoch`, so a soak harness
+//! can `tail -f` the file and correlate latency shifts with snapshot swaps.
+//!
+//! Record types and their exact field sets are pinned by the golden-schema
+//! test in `tests/telemetry_plane.rs` and documented in DESIGN.md §14.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::obs::registry::MetricsRegistry;
+use crate::util::json::Json;
+
+enum Msg {
+    Line(String),
+    Flush,
+    Sync(mpsc::Sender<()>),
+    Shutdown,
+}
+
+/// Handle to the writer thread. Cloned-`Arc` friendly: all methods take
+/// `&self`; dropping the last handle flushes and joins the writer.
+pub struct TelemetryExporter {
+    tx: mpsc::Sender<Msg>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    start: Instant,
+    path: String,
+}
+
+impl TelemetryExporter {
+    /// Open (truncate) `path` and spawn the writer thread.
+    pub fn create(path: &str) -> Result<Self> {
+        let file =
+            File::create(path).with_context(|| format!("creating telemetry file {path}"))?;
+        let mut out = BufWriter::new(file);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("tor-telemetry".into())
+            .spawn(move || {
+                loop {
+                    match rx.recv() {
+                        Ok(Msg::Line(line)) => {
+                            let _ = out.write_all(line.as_bytes());
+                            let _ = out.write_all(b"\n");
+                        }
+                        Ok(Msg::Flush) => {
+                            let _ = out.flush();
+                        }
+                        Ok(Msg::Sync(ack)) => {
+                            let _ = out.flush();
+                            let _ = ack.send(());
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => {
+                            let _ = out.flush();
+                            break;
+                        }
+                    }
+                }
+            })
+            .context("spawning telemetry writer thread")?;
+        Ok(TelemetryExporter {
+            tx,
+            handle: Mutex::new(Some(handle)),
+            start: Instant::now(),
+            path: path.to_string(),
+        })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    fn record(&self, kind: &str, epoch: Option<u64>, fields: Vec<(&str, Json)>) {
+        let mut o = BTreeMap::new();
+        o.insert("type".to_string(), Json::Str(kind.to_string()));
+        o.insert("t_s".to_string(), Json::Num(self.start.elapsed().as_secs_f64()));
+        if let Some(e) = epoch {
+            o.insert("epoch".to_string(), Json::Num(e as f64));
+        }
+        for (k, v) in fields {
+            o.insert(k.to_string(), v);
+        }
+        let _ = self.tx.send(Msg::Line(Json::Obj(o).to_string_compact()));
+    }
+
+    /// One served query: verb, wall latency, success flag.
+    pub fn emit_query(&self, verb: &str, latency: Duration, ok: bool, epoch: u64) {
+        self.record(
+            "query",
+            Some(epoch),
+            vec![
+                ("verb", Json::Str(verb.to_string())),
+                ("latency_s", Json::Num(latency.as_secs_f64())),
+                ("ok", Json::Bool(ok)),
+            ],
+        );
+    }
+
+    /// One INGEST batch absorbed into the delta overlay.
+    pub fn emit_ingest(&self, batch_tx: usize, pending_tx: usize, delta_nodes: usize, epoch: u64) {
+        self.record(
+            "ingest",
+            Some(epoch),
+            vec![
+                ("batch_tx", Json::Num(batch_tx as f64)),
+                ("pending_tx", Json::Num(pending_tx as f64)),
+                ("delta_nodes", Json::Num(delta_nodes as f64)),
+            ],
+        );
+    }
+
+    /// One compaction: pause duration and the post-compaction trie size.
+    pub fn emit_compact(&self, pause: Duration, nodes: usize, compactions: u64, epoch: u64) {
+        self.record(
+            "compact",
+            Some(epoch),
+            vec![
+                ("pause_s", Json::Num(pause.as_secs_f64())),
+                ("nodes", Json::Num(nodes as f64)),
+                ("compactions", Json::Num(compactions as f64)),
+            ],
+        );
+    }
+
+    /// One SNAPSHOT save.
+    pub fn emit_snapshot(&self, path: &str, pending_tx: usize, epoch: u64) {
+        self.record(
+            "snapshot",
+            Some(epoch),
+            vec![
+                ("path", Json::Str(path.to_string())),
+                ("pending_tx", Json::Num(pending_tx as f64)),
+            ],
+        );
+    }
+
+    /// The serving view was swapped (post-ingest or post-compaction); the
+    /// caller follows this with `flush()` so `tail -f` observes the swap.
+    pub fn emit_snapshot_swap(&self, delta_nodes: usize, pending_tx: usize, epoch: u64) {
+        self.record(
+            "snapshot_swap",
+            Some(epoch),
+            vec![
+                ("delta_nodes", Json::Num(delta_nodes as f64)),
+                ("pending_tx", Json::Num(pending_tx as f64)),
+            ],
+        );
+    }
+
+    /// Full registry snapshot embedded as one record.
+    pub fn emit_metrics(&self, registry: &MetricsRegistry, epoch: u64) {
+        self.record("metrics", Some(epoch), vec![("metrics", registry.to_json())]);
+    }
+
+    /// One build-pipeline stage (from `PipelineReport`).
+    pub fn emit_pipeline_stage(&self, stage: &str, duration: Duration, items: usize, throughput: f64) {
+        self.record(
+            "pipeline_stage",
+            None,
+            vec![
+                ("stage", Json::Str(stage.to_string())),
+                ("duration_s", Json::Num(duration.as_secs_f64())),
+                ("items", Json::Num(items as f64)),
+                ("throughput", Json::Num(throughput)),
+            ],
+        );
+    }
+
+    /// Ask the writer to flush; returns immediately.
+    pub fn flush(&self) {
+        let _ = self.tx.send(Msg::Flush);
+    }
+
+    /// Block until every record emitted so far is flushed to disk.
+    pub fn sync(&self) {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if self.tx.send(Msg::Sync(ack_tx)).is_ok() {
+            let _ = ack_rx.recv();
+        }
+    }
+}
+
+impl Drop for TelemetryExporter {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tor_obs_export_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn records_render_as_valid_jsonl_and_sync_flushes() {
+        let path = temp_path("basic");
+        let exporter = TelemetryExporter::create(path.to_str().unwrap()).unwrap();
+        exporter.emit_query("rules", Duration::from_micros(120), true, 0);
+        exporter.emit_ingest(5, 5, 12, 0);
+        exporter.emit_compact(Duration::from_millis(2), 40, 1, 1);
+        exporter.emit_snapshot_swap(0, 0, 1);
+        exporter.flush();
+        exporter.sync();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let v = Json::parse(line).expect("telemetry line must be valid JSON");
+            assert!(v.get("type").is_some());
+            assert!(v.get("t_s").is_some());
+            assert!(v.get("epoch").is_some());
+        }
+        assert_eq!(Json::parse(lines[0]).unwrap().get("verb").unwrap().as_str(), Some("rules"));
+        drop(exporter);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn drop_flushes_pending_records() {
+        let path = temp_path("drop");
+        {
+            let exporter = TelemetryExporter::create(path.to_str().unwrap()).unwrap();
+            exporter.emit_snapshot("artifacts/x.bin", 3, 2);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("type").unwrap().as_str(), Some("snapshot"));
+        assert_eq!(v.get("pending_tx").unwrap().as_f64(), Some(3.0));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,14 @@
+//! Observability plane: metrics registry, per-query trace spans, and the
+//! background JSONL telemetry exporter.
+//!
+//! Std-only and lock-light by construction — see DESIGN.md §14 for the
+//! registry design, the histogram bucket scheme, the trace-span lifecycle,
+//! and the METRICS / EXPLAIN ANALYZE / JSONL wire formats.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::TelemetryExporter;
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{SpanTimer, TraceSpan};

@@ -1,0 +1,495 @@
+//! Lock-light metrics registry: atomic counters, gauges, and log-bucketed
+//! latency histograms.
+//!
+//! The registry's interior mutex guards *registration only* — every handle
+//! (`Counter`, `Gauge`, `Histogram`) is an `Arc` around plain atomics, so the
+//! hot path (a query thread recording a latency, a worker claiming a task)
+//! never takes a lock. Histograms use 16 linear sub-buckets per power of two
+//! (976 buckets covering the full `u64` range), which bounds the relative
+//! error of any reported quantile to 3.125% while keeping `observe` at two
+//! relaxed atomic adds plus min/max maintenance. Count, sum, min, and max are
+//! tracked exactly.
+//!
+//! Metric names follow Prometheus conventions: `tor_query_latency_seconds`
+//! optionally followed by a `{label="value"}` set. The labeled full string is
+//! the registry key; `render_prometheus` groups keys by base name so one
+//! `# TYPE` line covers every label combination.
+
+use std::collections::{BTreeMap, HashSet};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Linear sub-buckets per power of two (log2).
+const SUB_BITS: u32 = 4;
+/// Sub-bucket count per power of two.
+const SUBS: usize = 1 << SUB_BITS;
+/// Buckets 0..16 are exact; groups for exponents 4..=63 add 60 * 16 more.
+const NUM_BUCKETS: usize = SUBS + 60 * SUBS;
+
+/// Monotonic event counter.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, active connections, epoch).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramCore {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    /// Reported value = raw u64 * scale (1e-9 for nanosecond-recorded
+    /// seconds histograms, 1.0 for unit histograms such as batch sizes).
+    scale: f64,
+}
+
+/// Log-bucketed distribution of `u64` observations.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+/// Raw observation -> bucket index. Values below 16 map exactly; above that,
+/// the top `SUB_BITS` bits after the leading one select a linear sub-bucket
+/// within the value's power-of-two group.
+fn bucket_index(n: u64) -> usize {
+    if n < SUBS as u64 {
+        n as usize
+    } else {
+        let exp = 63 - n.leading_zeros();
+        (((exp - 3) as usize) << SUB_BITS) | ((n >> (exp - SUB_BITS)) as usize & (SUBS - 1))
+    }
+}
+
+/// Bucket index -> representative (midpoint) raw value.
+fn bucket_mid(idx: usize) -> u64 {
+    if idx < SUBS {
+        idx as u64
+    } else {
+        let group = (idx >> SUB_BITS) as u32;
+        let sub = (idx & (SUBS - 1)) as u64;
+        let exp = group + 3;
+        let width = 1u64 << (exp - SUB_BITS);
+        let lower = (1u64 << exp) + sub * width;
+        lower + width / 2
+    }
+}
+
+impl Histogram {
+    fn with_scale(scale: f64) -> Self {
+        Histogram(Arc::new(HistogramCore {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            scale,
+        }))
+    }
+
+    /// Record one raw observation.
+    pub fn observe(&self, v: u64) {
+        let c = &self.0;
+        c.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.min.fetch_min(v, Ordering::Relaxed);
+        c.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a wall-clock duration (raw unit: nanoseconds; pair with a
+    /// 1e-9 scale so reported values are seconds).
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of observations, in reported units.
+    pub fn sum(&self) -> f64 {
+        self.0.sum.load(Ordering::Relaxed) as f64 * self.0.scale
+    }
+
+    /// Exact minimum observation, in reported units (0 when empty).
+    pub fn min(&self) -> f64 {
+        let m = self.0.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0.0
+        } else {
+            m as f64 * self.0.scale
+        }
+    }
+
+    /// Exact maximum observation, in reported units.
+    pub fn max(&self) -> f64 {
+        self.0.max.load(Ordering::Relaxed) as f64 * self.0.scale
+    }
+
+    /// Quantile estimate in reported units: walks cumulative bucket counts
+    /// to the target rank and returns the bucket midpoint clamped into the
+    /// exact observed [min, max]. Relative error <= 3.125%.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let c = &self.0;
+        let count = c.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let lo = c.min.load(Ordering::Relaxed);
+        let hi = c.max.load(Ordering::Relaxed);
+        let mut cum = 0u64;
+        for (i, b) in c.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_mid(i).clamp(lo, hi) as f64 * c.scale;
+            }
+        }
+        hi as f64 * c.scale
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Named metric store. Cheap to clone handles out of; the mutex is taken
+/// only to register or enumerate, never on the record path.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get_or_insert(&self, name: &str, make: impl FnOnce() -> Metric) -> Metric {
+        let mut m = self.inner.lock().unwrap();
+        let entry = m.entry(name.to_string()).or_insert_with(make);
+        entry.clone()
+    }
+
+    /// Get-or-register a counter. Panics if `name` is already registered as
+    /// a different metric kind (a programming error, not a runtime state).
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.get_or_insert(name, || Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get-or-register a gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.get_or_insert(name, || Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get-or-register a unit-valued histogram (batch sizes, node counts).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        match self.get_or_insert(name, || Metric::Histogram(Histogram::with_scale(1.0))) {
+            Metric::Histogram(h) => h,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get-or-register a latency histogram: observations are nanoseconds
+    /// (use [`Histogram::observe_duration`]), reported values are seconds.
+    pub fn histogram_seconds(&self, name: &str) -> Histogram {
+        match self.get_or_insert(name, || Metric::Histogram(Histogram::with_scale(1e-9))) {
+            Metric::Histogram(h) => h,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Prometheus text exposition. Counters and gauges render as single
+    /// samples; histograms render as summaries with `quantile` labels plus
+    /// `_sum`/`_count` series.
+    pub fn render_prometheus(&self) -> String {
+        let snapshot: Vec<(String, Metric)> = {
+            let m = self.inner.lock().unwrap();
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut out = String::new();
+        let mut typed: HashSet<String> = HashSet::new();
+        for (name, metric) in &snapshot {
+            let (base, labels) = split_name(name);
+            let prom_type = match metric {
+                Metric::Counter(_) => "counter",
+                Metric::Gauge(_) => "gauge",
+                Metric::Histogram(_) => "summary",
+            };
+            if typed.insert(base.to_string()) {
+                let _ = writeln!(out, "# TYPE {base} {prom_type}");
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    for (q, v) in [
+                        ("0.5", h.quantile(0.5)),
+                        ("0.99", h.quantile(0.99)),
+                        ("0.999", h.quantile(0.999)),
+                    ] {
+                        let series = with_label(base, labels, &format!("quantile=\"{q}\""));
+                        let _ = writeln!(out, "{series} {}", fmt_sample(v));
+                    }
+                    let sum = relabel(&format!("{base}_sum"), labels);
+                    let _ = writeln!(out, "{sum} {}", fmt_sample(h.sum()));
+                    let count = relabel(&format!("{base}_count"), labels);
+                    let _ = writeln!(out, "{count} {}", h.count());
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot: `{"counters": {...}, "gauges": {...}, "histograms":
+    /// {name: {count, sum, min, max, p50, p99, p999}}}`.
+    pub fn to_json(&self) -> Json {
+        let snapshot: Vec<(String, Metric)> = {
+            let m = self.inner.lock().unwrap();
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        for (name, metric) in snapshot {
+            match metric {
+                Metric::Counter(c) => {
+                    counters.insert(name, Json::Num(c.get() as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(name, Json::Num(g.get() as f64));
+                }
+                Metric::Histogram(h) => {
+                    let mut o = BTreeMap::new();
+                    o.insert("count".into(), Json::Num(h.count() as f64));
+                    o.insert("sum".into(), Json::Num(h.sum()));
+                    o.insert("min".into(), Json::Num(h.min()));
+                    o.insert("max".into(), Json::Num(h.max()));
+                    o.insert("p50".into(), Json::Num(h.quantile(0.5)));
+                    o.insert("p99".into(), Json::Num(h.quantile(0.99)));
+                    o.insert("p999".into(), Json::Num(h.quantile(0.999)));
+                    hists.insert(name, Json::Obj(o));
+                }
+            }
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".into(), Json::Obj(counters));
+        root.insert("gauges".into(), Json::Obj(gauges));
+        root.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+/// Split `base{labels}` into `(base, Some(labels))`; labels exclude braces.
+fn split_name(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) => (&name[..i], Some(name[i + 1..].trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// `base` + existing labels + one extra label.
+fn with_label(base: &str, labels: Option<&str>, extra: &str) -> String {
+    match labels {
+        Some(l) if !l.is_empty() => format!("{base}{{{l},{extra}}}"),
+        _ => format!("{base}{{{extra}}}"),
+    }
+}
+
+/// Reattach a label set to a derived series name (`_sum`, `_count`).
+fn relabel(base: &str, labels: Option<&str>) -> String {
+    match labels {
+        Some(l) if !l.is_empty() => format!("{base}{{{l}}}"),
+        _ => base.to_string(),
+    }
+}
+
+/// Format a float sample: integers without a fraction, floats via Display
+/// (shortest round-trip).
+fn fmt_sample(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut last = 0usize;
+        for n in 0..200_000u64 {
+            let i = bucket_index(n);
+            assert!(i >= last, "index regressed at {n}");
+            assert!(i < NUM_BUCKETS);
+            last = i;
+        }
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_mid_relative_error_within_bound() {
+        // Deterministic LCG sweep across magnitudes.
+        let mut x = 0x243f_6a88_85a3_08d3u64;
+        for _ in 0..100_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let n = x >> (x % 48);
+            if n == 0 {
+                continue;
+            }
+            let m = bucket_mid(bucket_index(n));
+            let err = (m as f64 - n as f64).abs() / n as f64;
+            assert!(err <= 0.03125 + 1e-12, "err {err} at {n}");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_uniform_distribution() {
+        let h = Histogram::with_scale(1.0);
+        for v in 1..=100_000u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 100_000);
+        assert_eq!(h.sum(), (100_000u64 * 100_001 / 2) as f64);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100_000.0);
+        for (q, exact) in [(0.5, 50_000.0), (0.99, 99_000.0), (0.999, 99_900.0)] {
+            let est = h.quantile(q);
+            let err = (est - exact).abs() / exact;
+            assert!(err <= 0.0625, "q={q} est={est} err={err}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::with_scale(1e-9);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn seconds_scale_applies_to_reported_values() {
+        let h = Histogram::with_scale(1e-9);
+        h.observe_duration(Duration::from_millis(10));
+        assert_eq!(h.count(), 1);
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.010).abs() / 0.010 <= 0.03125, "p50={p50}");
+    }
+
+    #[test]
+    fn registry_handles_share_state() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("tor_test_total");
+        let b = r.counter("tor_test_total");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        let g = r.gauge("tor_depth");
+        g.set(5);
+        g.sub(2);
+        assert_eq!(r.gauge("tor_depth").get(), 3);
+    }
+
+    #[test]
+    fn prometheus_rendering_groups_by_base_name() {
+        let r = MetricsRegistry::new();
+        r.counter("tor_queries_total{verb=\"rules\"}").add(7);
+        r.counter("tor_queries_total{verb=\"top\"}").add(2);
+        let h = r.histogram_seconds("tor_query_latency_seconds{verb=\"rules\"}");
+        h.observe_duration(Duration::from_micros(250));
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# TYPE tor_queries_total counter").count(), 1);
+        assert!(text.contains("tor_queries_total{verb=\"rules\"} 7"));
+        assert!(text.contains("tor_queries_total{verb=\"top\"} 2"));
+        assert!(text.contains("# TYPE tor_query_latency_seconds summary"));
+        assert!(text.contains("tor_query_latency_seconds{verb=\"rules\",quantile=\"0.5\"}"));
+        assert!(text.contains("tor_query_latency_seconds{verb=\"rules\",quantile=\"0.999\"}"));
+        assert!(text.contains("tor_query_latency_seconds_count{verb=\"rules\"} 1"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_carries_quantiles() {
+        let r = MetricsRegistry::new();
+        r.counter("tor_c").inc();
+        r.gauge("tor_g").set(-2);
+        let h = r.histogram("tor_h");
+        h.observe(10);
+        h.observe(20);
+        let j = r.to_json();
+        let text = j.to_string_compact();
+        let back = Json::parse(&text).expect("registry json must parse");
+        assert_eq!(back.get("counters").unwrap().get("tor_c").unwrap().as_f64(), Some(1.0));
+        assert_eq!(back.get("gauges").unwrap().get("tor_g").unwrap().as_f64(), Some(-2.0));
+        let hist = back.get("histograms").unwrap().get("tor_h").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(hist.get("min").unwrap().as_f64(), Some(10.0));
+        assert_eq!(hist.get("max").unwrap().as_f64(), Some(20.0));
+        assert!(hist.get("p999").is_some());
+    }
+}

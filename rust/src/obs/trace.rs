@@ -1,0 +1,132 @@
+//! Per-query trace spans: a lightweight wall-time tree with key=value
+//! annotations, built by the executor under `EXPLAIN ANALYZE` and rendered
+//! as indented text under the plan.
+//!
+//! A span is not sampled or exported continuously — it exists only for the
+//! lifetime of one analyzed query, so construction is plain owned data with
+//! no atomics and no registry involvement.
+
+use std::time::{Duration, Instant};
+
+use crate::util::timer::fmt_duration;
+
+/// One timed node in a query trace. `wall` is the span's own wall-clock
+/// duration; children nest inside it (their sum may be less than `wall`
+/// when the parent does work of its own, e.g. the merge after a fan-out).
+#[derive(Debug, Clone)]
+pub struct TraceSpan {
+    pub name: String,
+    pub wall: Duration,
+    pub annotations: Vec<(String, String)>,
+    pub children: Vec<TraceSpan>,
+}
+
+impl TraceSpan {
+    pub fn new(name: impl Into<String>) -> Self {
+        TraceSpan {
+            name: name.into(),
+            wall: Duration::ZERO,
+            annotations: Vec::new(),
+            children: Vec::new(),
+        }
+    }
+
+    /// Attach a key=value annotation (work counters, partition counts).
+    pub fn annotate(&mut self, key: impl Into<String>, value: impl ToString) -> &mut Self {
+        self.annotations.push((key.into(), value.to_string()));
+        self
+    }
+
+    pub fn set_wall(&mut self, wall: Duration) -> &mut Self {
+        self.wall = wall;
+        self
+    }
+
+    pub fn push_child(&mut self, child: TraceSpan) -> &mut Self {
+        self.children.push(child);
+        self
+    }
+
+    /// Render the tree, two spaces of indent per depth level, one span per
+    /// line: `name: <wall> k=v k2=v2`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, depth: usize) {
+        for _ in 0..depth {
+            out.push_str("  ");
+        }
+        out.push_str(&self.name);
+        out.push_str(": ");
+        out.push_str(&fmt_duration(self.wall));
+        for (k, v) in &self.annotations {
+            out.push(' ');
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+        }
+        out.push('\n');
+        for c in &self.children {
+            c.render_into(out, depth + 1);
+        }
+    }
+}
+
+/// Scope helper: measures from construction to `finish`, producing a span.
+pub struct SpanTimer {
+    span: TraceSpan,
+    start: Instant,
+}
+
+impl SpanTimer {
+    pub fn start(name: impl Into<String>) -> Self {
+        SpanTimer {
+            span: TraceSpan::new(name),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn span_mut(&mut self) -> &mut TraceSpan {
+        &mut self.span
+    }
+
+    pub fn finish(mut self) -> TraceSpan {
+        self.span.wall = self.start.elapsed();
+        self.span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_tree_with_annotations() {
+        let mut root = TraceSpan::new("query");
+        root.set_wall(Duration::from_millis(3)).annotate("rows", 42);
+        let mut access = TraceSpan::new("access");
+        access.set_wall(Duration::from_millis(2)).annotate("visited", 100).annotate("probes", 7);
+        root.push_child(access);
+        let text = root.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("query: "));
+        assert!(lines[0].ends_with("rows=42"));
+        assert!(lines[1].starts_with("  access: "));
+        assert!(lines[1].contains("visited=100"));
+        assert!(lines[1].contains("probes=7"));
+    }
+
+    #[test]
+    fn span_timer_measures_elapsed() {
+        let mut t = SpanTimer::start("scope");
+        t.span_mut().annotate("k", "v");
+        std::thread::sleep(Duration::from_millis(1));
+        let span = t.finish();
+        assert!(span.wall >= Duration::from_millis(1));
+        assert_eq!(span.annotations[0], ("k".to_string(), "v".to_string()));
+    }
+}

@@ -6,7 +6,7 @@
 //! predicates, and optionally orders/limits the result:
 //!
 //! ```text
-//! [EXPLAIN] RULES [WHERE pred (AND pred)*]
+//! [EXPLAIN [ANALYZE]] RULES [WHERE pred (AND pred)*]
 //!           [SORT BY <metric> [ASC|DESC]] [LIMIT k]
 //! ```
 //!
@@ -106,6 +106,9 @@ impl std::fmt::Display for SortSpec {
 pub struct Query {
     /// `EXPLAIN` prefix: return the chosen plan instead of rows.
     pub explain: bool,
+    /// `EXPLAIN ANALYZE`: execute the plan and annotate it with measured
+    /// wall times and work counters (implies `explain` for output shape).
+    pub analyze: bool,
     pub preds: Vec<Pred>,
     pub sort: Option<SortSpec>,
     pub limit: Option<usize>,
@@ -116,6 +119,7 @@ impl Query {
     pub fn all() -> Query {
         Query {
             explain: false,
+            analyze: false,
             preds: Vec::new(),
             sort: None,
             limit: None,
@@ -127,6 +131,9 @@ impl std::fmt::Display for Query {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         if self.explain {
             write!(f, "EXPLAIN ")?;
+            if self.analyze {
+                write!(f, "ANALYZE ")?;
+            }
         }
         write!(f, "RULES")?;
         for (i, p) in self.preds.iter().enumerate() {
@@ -175,6 +182,7 @@ mod tests {
     fn query_display_is_canonical() {
         let q = Query {
             explain: true,
+            analyze: false,
             preds: vec![
                 Pred::ConseqEq("milk".into()),
                 Pred::AntecedentContains("bread".into()),
@@ -191,5 +199,10 @@ mod tests {
              SORT BY lift DESC LIMIT 20"
         );
         assert_eq!(Query::all().to_string(), "RULES");
+        let analyzed = Query {
+            analyze: true,
+            ..q
+        };
+        assert!(analyzed.to_string().starts_with("EXPLAIN ANALYZE RULES WHERE"));
     }
 }

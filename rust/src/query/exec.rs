@@ -17,6 +17,7 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -54,6 +55,33 @@ pub struct ExecStats {
 pub struct ResultSet {
     pub rows: Vec<Row>,
     pub stats: ExecStats,
+}
+
+/// Wall time and work counters of one analyzed work partition (the whole
+/// access sweep sequentially; one morsel/shard slot on the parallel
+/// executor).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PartitionProfile {
+    pub wall: Duration,
+    pub stats: ExecStats,
+}
+
+/// Measurements of one `EXPLAIN ANALYZE` execution: the plan actually ran
+/// (same rows, order, and counters as a plain run — analyze only adds
+/// timestamps around the existing work), and these numbers annotate the
+/// rendered plan via [`plan::render_analyze`].
+#[derive(Debug, Clone, Default)]
+pub struct AnalyzeProfile {
+    /// End-to-end execution wall time (access + filter + merge/sort).
+    pub total: Duration,
+    /// Final merge + output-ordering time.
+    pub merge: Duration,
+    /// Summed work counters (identical to the plain run's `ResultSet`).
+    pub stats: ExecStats,
+    /// Rows the query would have returned.
+    pub rows_out: usize,
+    /// Per-partition measurements, in partition order.
+    pub partitions: Vec<PartitionProfile>,
 }
 
 /// What a query evaluates to.
@@ -267,11 +295,12 @@ fn emit_candidate(
 pub fn execute_trie(trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<QueryOutput> {
     let bound = plan::bind(query, vocab)?;
     let plan = plan::plan_trie(&bound);
-    if query.explain {
+    if query.explain && !query.analyze {
         return Ok(QueryOutput::Explain(plan::explain_trie(
             &plan, trie, vocab, None, None,
         )));
     }
+    let analyze_t = query.analyze.then(Instant::now);
     let mut stats = ExecStats::default();
     let mut acc = Accumulator::new(plan.sort, plan.limit);
     match plan.access {
@@ -283,10 +312,50 @@ pub fn execute_trie(trie: &TrieOfRules, vocab: &Vocab, query: &Query) -> Result<
             run_traversal_range(trie, 1..trie.num_nodes() + 1, &plan, &mut stats, &mut acc);
         }
     }
+    if let Some(t0) = analyze_t {
+        let access_wall = t0.elapsed();
+        return Ok(finish_analyze(
+            plan::explain_trie(&plan, trie, vocab, None, None),
+            plan::access_label(&plan.access),
+            t0,
+            access_wall,
+            stats,
+            acc,
+        ));
+    }
     Ok(QueryOutput::Rows(ResultSet {
         rows: acc.finish(),
         stats,
     }))
+}
+
+/// Shared tail of every sequential `EXPLAIN ANALYZE` run: time the final
+/// ordering, assemble the profile (one partition — the whole access
+/// sweep), and append the measured annotations under the plan text.
+fn finish_analyze(
+    explain_text: String,
+    access_label: &str,
+    t0: Instant,
+    access_wall: Duration,
+    stats: ExecStats,
+    acc: Accumulator,
+) -> QueryOutput {
+    let merge_t = Instant::now();
+    let rows = acc.finish();
+    let merge = merge_t.elapsed();
+    let profile = AnalyzeProfile {
+        total: t0.elapsed(),
+        merge,
+        stats,
+        rows_out: rows.len(),
+        partitions: vec![PartitionProfile {
+            wall: access_wall,
+            stats,
+        }],
+    };
+    let mut text = explain_text;
+    text.push_str(&plan::render_analyze(access_label, &profile));
+    QueryOutput::Explain(text)
 }
 
 /// Header-list access over a slice of posting-list node ids: each depth-≥2
@@ -412,7 +481,7 @@ pub fn execute_merged(
 ) -> Result<QueryOutput> {
     let bound = plan::bind(query, vocab)?;
     let plan = plan::plan_trie(&bound);
-    if query.explain {
+    if query.explain && !query.analyze {
         return Ok(QueryOutput::Explain(plan::explain_trie(
             &plan,
             base,
@@ -421,6 +490,7 @@ pub fn execute_merged(
             Some(overlay.stat()),
         )));
     }
+    let analyze_t = query.analyze.then(Instant::now);
     let mut stats = ExecStats::default();
     let mut acc = Accumulator::new(plan.sort, plan.limit);
     match plan.access {
@@ -453,6 +523,17 @@ pub fn execute_merged(
             );
             run_merged_delta_traversal(base, overlay, &plan, &mut stats, &mut acc);
         }
+    }
+    if let Some(t0) = analyze_t {
+        let access_wall = t0.elapsed();
+        return Ok(finish_analyze(
+            plan::explain_trie(&plan, base, vocab, None, Some(overlay.stat())),
+            plan::access_label(&plan.access),
+            t0,
+            access_wall,
+            stats,
+            acc,
+        ));
     }
     Ok(QueryOutput::Rows(ResultSet {
         rows: acc.finish(),
@@ -570,13 +651,14 @@ pub(crate) fn run_merged_header_delta(
 /// semantics the baseline documents.
 pub fn execute_frame(frame: &RuleFrame, vocab: &Vocab, query: &Query) -> Result<QueryOutput> {
     let bound = plan::bind(query, vocab)?;
-    if query.explain {
+    if query.explain && !query.analyze {
         return Ok(QueryOutput::Explain(plan::explain_frame(
             &bound,
             frame.len(),
             vocab,
         )));
     }
+    let analyze_t = query.analyze.then(Instant::now);
     let mut stats = ExecStats::default();
     let mut acc = Accumulator::new(bound.sort, bound.limit);
     frame.for_each_row_materialized(|_, rule, metrics| {
@@ -595,6 +677,17 @@ pub fn execute_frame(frame: &RuleFrame, vocab: &Vocab, query: &Query) -> Result<
             acc.push(Row { rule, metrics });
         }
     });
+    if let Some(t0) = analyze_t {
+        let access_wall = t0.elapsed();
+        return Ok(finish_analyze(
+            plan::explain_frame(&bound, frame.len(), vocab),
+            "full-scan",
+            t0,
+            access_wall,
+            stats,
+            acc,
+        ));
+    }
     Ok(QueryOutput::Rows(ResultSet {
         rows: acc.finish(),
         stats,
@@ -751,6 +844,46 @@ mod tests {
             panic!("expected EXPLAIN output");
         };
         assert!(text.contains("full-traversal"), "{text}");
+    }
+
+    #[test]
+    fn explain_analyze_executes_and_carries_exact_work_counters() {
+        let w = workload();
+        let q = "RULES WHERE conseq = a AND confidence >= 0.6";
+        let plain = trie_rows(&w, q);
+        let out = execute_trie(
+            &w.trie,
+            w.db.vocab(),
+            &parse(&format!("EXPLAIN ANALYZE {q}")).unwrap(),
+        )
+        .unwrap();
+        let QueryOutput::Explain(text) = out else {
+            panic!("expected EXPLAIN output");
+        };
+        // The plan text is still there, with the analyze block below it.
+        assert!(text.contains("conseq-header(a)"), "{text}");
+        assert!(text.contains("analyze:"), "{text}");
+        assert!(text.contains("access+filter: conseq-header"), "{text}");
+        assert!(text.contains("merge+sort:"), "{text}");
+        // Counters must equal the plain run's exactly (analyze is a
+        // measured execution of the same plan, not an estimate).
+        assert!(text.contains(&format!("visited={}", plain.stats.scanned)), "{text}");
+        assert!(text.contains(&format!("probes={}", plain.stats.candidates)), "{text}");
+        assert!(text.contains(&format!("matched={}", plain.stats.matched)), "{text}");
+        assert!(text.contains(&format!("rows={}", plain.rows.len())), "{text}");
+
+        // The frame backend analyzes too.
+        let out = execute_frame(
+            &w.frame,
+            w.db.vocab(),
+            &parse("EXPLAIN ANALYZE RULES").unwrap(),
+        )
+        .unwrap();
+        let QueryOutput::Explain(text) = out else {
+            panic!("expected EXPLAIN output");
+        };
+        assert!(text.contains("access+filter: full-scan"), "{text}");
+        assert!(text.contains(&format!("visited={}", w.frame.len())), "{text}");
     }
 
     #[test]

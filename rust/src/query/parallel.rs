@@ -36,13 +36,17 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::data::vocab::Vocab;
+use crate::obs::registry::{Counter, Histogram, MetricsRegistry};
 use crate::query::ast::Query;
-use crate::query::exec::{self, Accumulator, ExecStats, QueryOutput, ResultSet, Row};
+use crate::query::exec::{
+    self, Accumulator, AnalyzeProfile, ExecStats, PartitionProfile, QueryOutput, ResultSet, Row,
+};
 use crate::query::plan::{self, AccessPath, Parallelism, TriePlan};
 use crate::trie::delta::{DeltaOverlay, MergedView};
 use crate::trie::node::NodeIdx;
@@ -136,10 +140,20 @@ impl RunState {
     }
 }
 
+/// Metric handles bound to a pool via [`WorkerPool::bind_metrics`]. Held
+/// in a `OnceLock` so the claim/run hot path reads them lock-free; an
+/// unbound pool (the default) pays only a branch per run.
+struct PoolObs {
+    tasks_claimed: Counter,
+    run_seconds: Histogram,
+    helper_idle_ns: Counter,
+}
+
 struct PoolShared {
     queue: Mutex<VecDeque<Arc<RunState>>>,
     available: Condvar,
     shutdown: AtomicBool,
+    obs: OnceLock<PoolObs>,
 }
 
 /// A small reusable worker pool on `std::thread`: `helpers` parked threads
@@ -159,6 +173,7 @@ impl WorkerPool {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            obs: OnceLock::new(),
         });
         let handles = (0..helpers)
             .map(|_| {
@@ -174,6 +189,18 @@ impl WorkerPool {
         self.handles.len()
     }
 
+    /// Bind pool metrics into `registry`: tasks claimed, run durations,
+    /// and helper idle (condvar-wait) time. Idempotent — the first bind
+    /// wins; recording never takes a lock and never changes task order or
+    /// results (parity-neutral by construction).
+    pub fn bind_metrics(&self, registry: &MetricsRegistry) {
+        let _ = self.shared.obs.set(PoolObs {
+            tasks_claimed: registry.counter("tor_pool_tasks_claimed_total"),
+            run_seconds: registry.histogram_seconds("tor_pool_run_seconds"),
+            helper_idle_ns: registry.counter("tor_pool_helper_idle_ns_total"),
+        });
+    }
+
     /// Run `f(0), f(1), …, f(tasks - 1)`, claimed dynamically by the
     /// caller and up to `helpers` pool threads; returns once all tasks
     /// finished. Task→thread assignment is nondeterministic — callers
@@ -185,6 +212,20 @@ impl WorkerPool {
         if tasks == 0 {
             return;
         }
+        // Metrics are recorded around the run, never inside the claim
+        // loop: task assignment and execution are untouched whether or not
+        // a registry is bound.
+        let t0 = self.shared.obs.get().map(|obs| {
+            obs.tasks_claimed.add(tasks as u64);
+            Instant::now()
+        });
+        self.run_inner(tasks, f);
+        if let (Some(t0), Some(obs)) = (t0, self.shared.obs.get()) {
+            obs.run_seconds.observe_duration(t0.elapsed());
+        }
+    }
+
+    fn run_inner<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
         let helpers = self.handles.len().min(tasks - 1);
         if helpers == 0 {
             for i in 0..tasks {
@@ -266,12 +307,22 @@ fn worker_loop(shared: &PoolShared) {
     loop {
         let state = {
             let mut queue = shared.queue.lock().unwrap();
+            // Idle time = condvar-wait span between popping tokens; only
+            // tracked once a registry is bound (no clocks otherwise).
+            let mut idle_since: Option<Instant> = None;
             loop {
                 if let Some(state) = queue.pop_front() {
+                    if let (Some(t), Some(obs)) = (idle_since, shared.obs.get()) {
+                        obs.helper_idle_ns
+                            .add(t.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+                    }
                     break state;
                 }
                 if shared.shutdown.load(Ordering::Relaxed) {
                     return;
+                }
+                if idle_since.is_none() && shared.obs.get().is_some() {
+                    idle_since = Some(Instant::now());
                 }
                 queue = shared.available.wait(queue).unwrap();
             }
@@ -350,11 +401,11 @@ impl ParallelExecutor {
         }
         let bound = plan::bind(query, vocab)?;
         let plan = plan::plan_trie(&bound);
-        if query.explain {
-            let par = Parallelism {
-                degree: self.degree,
-                partitions: self.partitions(trie, &plan),
-            };
+        let par = Parallelism {
+            degree: self.degree,
+            partitions: self.partitions(trie, &plan),
+        };
+        if query.explain && !query.analyze {
             return Ok(QueryOutput::Explain(plan::explain_trie(
                 &plan,
                 trie,
@@ -363,25 +414,43 @@ impl ParallelExecutor {
                 None,
             )));
         }
-        match plan.access {
-            AccessPath::Empty => Ok(QueryOutput::Rows(ResultSet {
-                rows: Accumulator::new(plan.sort, plan.limit).finish(),
-                stats: ExecStats::default(),
-            })),
+        let analyze_t = query.analyze.then(Instant::now);
+        let (rs, profiles, merge) = match plan.access {
+            AccessPath::Empty => (
+                ResultSet {
+                    rows: Accumulator::new(plan.sort, plan.limit).finish(),
+                    stats: ExecStats::default(),
+                },
+                Vec::new(),
+                Duration::ZERO,
+            ),
             AccessPath::ConseqHeader(item) => {
                 let ids = trie.item_nodes(item);
                 let shards = shard_slices(ids, self.degree);
-                self.fan_out(&plan, shards.len(), |shard, stats, acc| {
+                self.fan_out(&plan, shards.len(), query.analyze, |shard, stats, acc| {
                     exec::run_header_slice(trie, shards[shard], &plan, stats, acc);
                 })
             }
             AccessPath::FullTraversal => {
                 let morsels = trie.morsels(self.morsel_target_for(trie));
-                self.fan_out(&plan, morsels.len(), |m, stats, acc| {
+                self.fan_out(&plan, morsels.len(), query.analyze, |m, stats, acc| {
                     exec::run_traversal_range(trie, morsels[m].clone(), &plan, stats, acc);
                 })
             }
+        };
+        if let Some(t0) = analyze_t {
+            let profile = AnalyzeProfile {
+                total: t0.elapsed(),
+                merge,
+                stats: rs.stats,
+                rows_out: rs.rows.len(),
+                partitions: profiles,
+            };
+            let mut text = plan::explain_trie(&plan, trie, vocab, Some(par), None);
+            text.push_str(&plan::render_analyze(plan::access_label(&plan.access), &profile));
+            return Ok(QueryOutput::Explain(text));
         }
+        Ok(QueryOutput::Rows(rs))
     }
 
     /// How many partitions `plan` would fan out into (EXPLAIN reporting).
@@ -423,11 +492,11 @@ impl ParallelExecutor {
         }
         let bound = plan::bind(query, vocab)?;
         let plan = plan::plan_trie(&bound);
-        if query.explain {
-            let par = Parallelism {
-                degree: self.degree,
-                partitions: self.merged_partitions(base, overlay, &plan),
-            };
+        let par = Parallelism {
+            degree: self.degree,
+            partitions: self.merged_partitions(base, overlay, &plan),
+        };
+        if query.explain && !query.analyze {
             return Ok(QueryOutput::Explain(plan::explain_trie(
                 &plan,
                 base,
@@ -436,16 +505,21 @@ impl ParallelExecutor {
                 Some(overlay.stat()),
             )));
         }
-        match plan.access {
-            AccessPath::Empty => Ok(QueryOutput::Rows(ResultSet {
-                rows: Accumulator::new(plan.sort, plan.limit).finish(),
-                stats: ExecStats::default(),
-            })),
+        let analyze_t = query.analyze.then(Instant::now);
+        let (rs, profiles, merge) = match plan.access {
+            AccessPath::Empty => (
+                ResultSet {
+                    rows: Accumulator::new(plan.sort, plan.limit).finish(),
+                    stats: ExecStats::default(),
+                },
+                Vec::new(),
+                Duration::ZERO,
+            ),
             AccessPath::ConseqHeader(item) => {
                 let ids = view.base.item_nodes(item);
                 let shards = shard_slices(ids, self.degree);
                 let parts = shards.len() + 1;
-                self.fan_out(&plan, parts, |p, stats, acc| {
+                self.fan_out(&plan, parts, query.analyze, |p, stats, acc| {
                     if p < shards.len() {
                         exec::run_merged_header_base(base, overlay, shards[p], &plan, stats, acc);
                     } else {
@@ -462,7 +536,7 @@ impl ParallelExecutor {
             AccessPath::FullTraversal => {
                 let morsels = view.base.morsels(self.morsel_target_for(base));
                 let parts = morsels.len() + 1;
-                self.fan_out(&plan, parts, |p, stats, acc| {
+                self.fan_out(&plan, parts, query.analyze, |p, stats, acc| {
                     if p < morsels.len() {
                         exec::run_merged_traversal_range(
                             base,
@@ -477,7 +551,21 @@ impl ParallelExecutor {
                     }
                 })
             }
+        };
+        if let Some(t0) = analyze_t {
+            let profile = AnalyzeProfile {
+                total: t0.elapsed(),
+                merge,
+                stats: rs.stats,
+                rows_out: rs.rows.len(),
+                partitions: profiles,
+            };
+            let mut text =
+                plan::explain_trie(&plan, base, vocab, Some(par), Some(overlay.stat()));
+            text.push_str(&plan::render_analyze(plan::access_label(&plan.access), &profile));
+            return Ok(QueryOutput::Explain(text));
         }
+        Ok(QueryOutput::Rows(rs))
     }
 
     /// Partition count of a merged run (base partitions + the overlay).
@@ -500,41 +588,59 @@ impl ParallelExecutor {
     /// (each writing only its own slot), then merge partials in partition
     /// order. The final accumulator re-imposes the engine's total output
     /// order, so the merged rows equal the sequential executor's exactly.
+    ///
+    /// With `timed` set (`EXPLAIN ANALYZE`), each partition and the final
+    /// merge are wall-clocked; the clocks sit strictly outside the work
+    /// closure and the merge loop, so rows, order, and counters are
+    /// byte-identical either way.
     fn fan_out(
         &self,
         plan: &TriePlan,
         partitions: usize,
+        timed: bool,
         work: impl Fn(usize, &mut ExecStats, &mut Accumulator) + Sync,
-    ) -> Result<QueryOutput> {
-        type Partial = (ExecStats, Vec<Row>);
+    ) -> (ResultSet, Vec<PartitionProfile>, Duration) {
+        type Partial = (ExecStats, Vec<Row>, Duration);
         let slots: Vec<Mutex<Option<Partial>>> =
             (0..partitions).map(|_| Mutex::new(None)).collect();
         self.pool.run(partitions, |p| {
+            let t0 = timed.then(Instant::now);
             let mut stats = ExecStats::default();
             let mut acc = Accumulator::new(plan.sort, plan.limit);
             work(p, &mut stats, &mut acc);
+            let wall = t0.map(|t| t.elapsed()).unwrap_or_default();
             // Unordered teardown: the k-bounded reduction has happened;
             // ordering is the final merge accumulator's job.
-            *slots[p].lock().unwrap() = Some((stats, acc.into_unordered_rows()));
+            *slots[p].lock().unwrap() = Some((stats, acc.into_unordered_rows(), wall));
         });
+        let merge_t = timed.then(Instant::now);
         let mut stats = ExecStats::default();
         let mut acc = Accumulator::new(plan.sort, plan.limit);
+        let mut profiles = Vec::new();
         for slot in slots {
-            let (partial_stats, rows) = slot
+            let (partial_stats, rows, wall) = slot
                 .into_inner()
                 .unwrap()
                 .expect("every partition fills its slot");
             stats.scanned += partial_stats.scanned;
             stats.candidates += partial_stats.candidates;
             stats.matched += partial_stats.matched;
+            if timed {
+                profiles.push(PartitionProfile {
+                    wall,
+                    stats: partial_stats,
+                });
+            }
             for row in rows {
                 acc.push(row);
             }
         }
-        Ok(QueryOutput::Rows(ResultSet {
+        let rs = ResultSet {
             rows: acc.finish(),
             stats,
-        }))
+        };
+        let merge = merge_t.map(|t| t.elapsed()).unwrap_or_default();
+        (rs, profiles, merge)
     }
 }
 
@@ -703,6 +809,48 @@ mod tests {
         assert!(text.contains("parallel: degree=4"), "{text}");
         assert!(text.contains("header shard"), "{text}");
         assert!(text.contains("batched column-at-a-time"), "{text}");
+    }
+
+    #[test]
+    fn pool_metrics_record_runs_without_changing_results() {
+        let pool = WorkerPool::new(2);
+        let reg = MetricsRegistry::new();
+        pool.bind_metrics(&reg);
+        pool.bind_metrics(&reg); // idempotent
+        let count = AtomicUsize::new(0);
+        pool.run(8, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+        assert_eq!(reg.counter("tor_pool_tasks_claimed_total").get(), 8);
+        assert_eq!(reg.histogram_seconds("tor_pool_run_seconds").count(), 1);
+        pool.run(3, |_| {});
+        assert_eq!(reg.counter("tor_pool_tasks_claimed_total").get(), 11);
+        assert_eq!(reg.histogram_seconds("tor_pool_run_seconds").count(), 2);
+    }
+
+    #[test]
+    fn explain_analyze_parallel_reports_partitions_and_exact_counters() {
+        let w = workload();
+        let exec = ParallelExecutor::new(4).with_morsel_target(2);
+        let plain = exec
+            .execute(&w.trie, w.db.vocab(), &parse("RULES").unwrap())
+            .unwrap()
+            .into_rows();
+        let out = exec
+            .execute(&w.trie, w.db.vocab(), &parse("EXPLAIN ANALYZE RULES").unwrap())
+            .unwrap();
+        let QueryOutput::Explain(text) = out else {
+            panic!("expected EXPLAIN");
+        };
+        assert!(text.contains("parallel: degree=4"), "{text}");
+        assert!(text.contains("analyze:"), "{text}");
+        assert!(text.contains("access+filter: full-traversal"), "{text}");
+        assert!(text.contains("partitions="), "{text}");
+        assert!(text.contains(&format!("visited={}", plain.stats.scanned)), "{text}");
+        assert!(text.contains(&format!("probes={}", plain.stats.candidates)), "{text}");
+        assert!(text.contains(&format!("matched={}", plain.stats.matched)), "{text}");
+        assert!(text.contains(&format!("rows={}", plain.rows.len())), "{text}");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! Grammar (keywords case-insensitive):
 //!
 //! ```text
-//! query  := [EXPLAIN] RULES [WHERE pred (AND pred)*]
+//! query  := [EXPLAIN [ANALYZE]] RULES [WHERE pred (AND pred)*]
 //!           [SORT BY metric [ASC|DESC]] [LIMIT int]
 //! pred   := (CONSEQ|CONSEQUENT) ( '=' item | CONTAINS item )
 //!         | (ANTECEDENT|ANTEC)  CONTAINS item
@@ -193,6 +193,7 @@ impl Parser {
 
     fn query(&mut self) -> Result<Query> {
         let explain = self.eat_kw("explain");
+        let analyze = explain && self.eat_kw("analyze");
         self.expect_kw("rules")?;
         let mut preds = Vec::new();
         if self.eat_kw("where") {
@@ -235,6 +236,7 @@ impl Parser {
         );
         Ok(Query {
             explain,
+            analyze,
             preds,
             sort,
             limit,
@@ -287,6 +289,12 @@ mod tests {
     fn explain_prefix_and_defaults() {
         let q = parse("EXPLAIN RULES").unwrap();
         assert!(q.explain && q.preds.is_empty() && q.sort.is_none() && q.limit.is_none());
+        assert!(!q.analyze);
+        let q = parse("EXPLAIN ANALYZE RULES WHERE conseq = milk").unwrap();
+        assert!(q.explain && q.analyze);
+        // `ANALYZE` is only a keyword after `EXPLAIN`: bare it is the RULES
+        // keyword position and must error, not silently parse.
+        assert!(parse("ANALYZE RULES").is_err());
         // SORT BY defaults to DESC; ASC is explicit.
         assert!(parse("RULES SORT BY support").unwrap().sort.unwrap().descending);
         assert!(!parse("RULES SORT BY support ASC").unwrap().sort.unwrap().descending);
@@ -398,6 +406,7 @@ mod tests {
         for src in [
             "RULES",
             "EXPLAIN RULES WHERE conseq = milk SORT BY lift DESC LIMIT 20",
+            "EXPLAIN ANALYZE RULES WHERE conseq = milk SORT BY lift DESC LIMIT 20",
             "RULES WHERE antecedent CONTAINS bread AND support >= 0.01",
             "RULES WHERE conseq CONTAINS a SORT BY confidence ASC",
         ] {

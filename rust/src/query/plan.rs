@@ -25,10 +25,13 @@
 use anyhow::{Context, Result};
 
 use crate::data::vocab::{ItemId, Vocab};
+use crate::obs::trace::TraceSpan;
 use crate::query::ast::{CmpOp, Pred, Query, SortSpec};
+use crate::query::exec::AnalyzeProfile;
 use crate::rules::metrics::Metric;
 use crate::trie::delta::DeltaStat;
 use crate::trie::trie::TrieOfRules;
+use crate::util::timer::fmt_duration;
 
 /// A predicate with item names bound to ids.
 #[derive(Debug, Clone, PartialEq)]
@@ -305,6 +308,46 @@ pub fn explain_trie(
     }
     out.push_str("  output : deterministic (sort key, then rule) total order\n");
     out
+}
+
+/// Short label of a plan's access node, used in `EXPLAIN ANALYZE` spans.
+pub fn access_label(access: &AccessPath) -> &'static str {
+    match access {
+        AccessPath::ConseqHeader(_) => "conseq-header",
+        AccessPath::FullTraversal => "full-traversal",
+        AccessPath::Empty => "empty",
+    }
+}
+
+/// Render the `EXPLAIN ANALYZE` annotation block appended below the plan
+/// text: a trace-span tree carrying measured wall times and the executor's
+/// work counters (`visited` = nodes/rows touched, `probes` = candidates
+/// that reached predicate evaluation, `matched` = rows passing every
+/// predicate). The access and filter stages stream through one sweep, so
+/// they share a span; `merge+sort` is the final ordering (and, on the
+/// parallel executor, the partition-order merge). The access span's wall
+/// is the slowest partition (the critical path); `wall_min` exposes
+/// imbalance when more than one partition ran.
+pub fn render_analyze(access_label: &str, profile: &AnalyzeProfile) -> String {
+    let mut root = TraceSpan::new("analyze");
+    root.set_wall(profile.total).annotate("rows", profile.rows_out);
+    let mut access = TraceSpan::new(format!("access+filter: {access_label}"));
+    let wall_max = profile.partitions.iter().map(|p| p.wall).max().unwrap_or_default();
+    let wall_min = profile.partitions.iter().map(|p| p.wall).min().unwrap_or_default();
+    access
+        .set_wall(wall_max)
+        .annotate("partitions", profile.partitions.len())
+        .annotate("visited", profile.stats.scanned)
+        .annotate("probes", profile.stats.candidates)
+        .annotate("matched", profile.stats.matched);
+    if profile.partitions.len() > 1 {
+        access.annotate("wall_min", fmt_duration(wall_min));
+    }
+    root.push_child(access);
+    let mut merge = TraceSpan::new("merge+sort");
+    merge.set_wall(profile.merge).annotate("rows", profile.rows_out);
+    root.push_child(merge);
+    root.render()
 }
 
 /// Render the frame (full-scan fallback) plan.

@@ -113,7 +113,13 @@ impl Json {
 }
 
 fn write_num(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 1e15 {
+    // JSON has no representation for NaN/Infinity; emitting them would
+    // corrupt every downstream reader (including our own parser). Sanitize
+    // to null, mirroring what serde_json's `arbitrary_precision`-less
+    // serializers reject outright.
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
         let _ = write!(out, "{}", n as i64);
     } else {
         let _ = write!(out, "{n}");
@@ -368,6 +374,18 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let out = v.to_string_compact();
         assert_eq!(Json::parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let out = Json::Num(bad).to_string_compact();
+            assert_eq!(out, "null", "non-finite {bad} must sanitize");
+            // The sanitized output must round-trip through our own parser.
+            assert_eq!(Json::parse(&out).unwrap(), Json::Null);
+        }
+        let nested = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN)]);
+        assert_eq!(nested.to_string_compact(), "[1,null]");
     }
 
     #[test]
