@@ -1,0 +1,439 @@
+#!/usr/bin/env python3
+"""Differential oracle for the nonblocking service front end.
+
+The container used to author the Rust has no cargo, so this script
+re-implements the front end's pure logic and checks it differentially:
+
+  * `ProtoState` (rust/src/coordinator/frontend.rs): a line-for-line
+    Python port of the incremental negotiation + parsing state machine,
+    driven under randomized fragmentation (including 1-byte drips) and
+    compared against an independent whole-stream reference decoder.
+    The invariant is the tentpole's core claim: the sequence of parsed
+    requests and the terminal verdict (TooLong / BadUtf8 / clean) must
+    not depend on how the bytes were split across reads, and must match
+    what the blocking server's `take(MAX+1).read_until` + `lines()`
+    semantics produce (\r stripping, EOF-unterminated final line,
+    oversized-line rejection even when the newline is already buffered,
+    binary frame caps).
+
+  * `ResultCache` (rust/src/query/cache.rs): a port of the
+    generation-keyed byte-bounded LRU (HashMap + seq-ordered BTreeMap)
+    compared op-for-op against a brute-force list-based model — entries,
+    byte accounting, hit/miss/eviction/invalidation counters, LRU victim
+    order, stale-generation eviction-on-contact, oversized refusal.
+
+  * batch admission (frontend.rs sweep + backpressure.rs): simulate
+    interleaved per-connection sweeps claiming one permit per parsed
+    request up front; check in-flight never exceeds the bound and each
+    sweep sheds exactly the overflow.
+
+Run:  python3 python/tests/oracle_service.py  [cases]
+"""
+
+import random
+import sys
+
+# ---------------------------------------------------------------------
+# ProtoState mirror (frontend.rs, ported line for line)
+# ---------------------------------------------------------------------
+
+MAGIC = b"RQL2"
+
+NEED_MORE = "NeedMore"
+TOO_LONG = "TooLong"
+BAD_UTF8 = "BadUtf8"
+
+
+class ProtoState:
+    def __init__(self, max_request):
+        self.mode = "negotiating"
+        self.max = max_request
+
+    def next_request(self, buf, pos, eof):
+        """Returns (step, payload_or_None, new_pos)."""
+        if self.mode == "negotiating":
+            avail = buf[pos:]
+            if len(avail) >= len(MAGIC):
+                if avail[: len(MAGIC)] == MAGIC:
+                    pos += len(MAGIC)
+                    self.mode = "binary"
+                else:
+                    self.mode = "text"
+            elif b"\n" in avail or (eof and avail):
+                self.mode = "text"
+            else:
+                return NEED_MORE, None, pos
+        avail = buf[pos:]
+        if self.mode == "text":
+            i = avail.find(b"\n")
+            if i >= 0:
+                if i > self.max:
+                    return TOO_LONG, None, pos
+                line = avail[:i]
+                if line.endswith(b"\r"):
+                    line = line[:-1]
+                try:
+                    return "req", line.decode("utf-8"), pos + i + 1
+                except UnicodeDecodeError:
+                    return BAD_UTF8, None, pos + i + 1
+            if len(avail) > self.max:
+                return TOO_LONG, None, pos
+            if eof and avail:
+                try:
+                    return "req", avail.decode("utf-8"), len(buf)
+                except UnicodeDecodeError:
+                    return BAD_UTF8, None, len(buf)
+            return NEED_MORE, None, pos
+        # binary
+        if len(avail) < 4:
+            return NEED_MORE, None, pos
+        n = int.from_bytes(avail[:4], "big")
+        if n > self.max:
+            return TOO_LONG, None, pos
+        if len(avail) < 4 + n:
+            return NEED_MORE, None, pos
+        try:
+            return "req", avail[4 : 4 + n].decode("utf-8"), pos + 4 + n
+        except UnicodeDecodeError:
+            return BAD_UTF8, None, pos + 4 + n
+
+
+def drive(stream, chunks, max_request):
+    """Feed `stream` split at `chunks` boundaries through the mirror the
+    way Conn::service does: after each read, pull requests until NeedMore
+    or a terminal verdict (which stops parsing for good)."""
+    st = ProtoState(max_request)
+    buf = b""
+    pos = 0
+    reqs = []
+    bounds = list(chunks) + [len(stream)]
+    prev = 0
+    for b in bounds:
+        buf += stream[prev:b]
+        prev = b
+        eof = b == len(stream)
+        while True:
+            step, payload, pos = st.next_request(buf, pos, eof)
+            if step == "req":
+                reqs.append(payload)
+            elif step == NEED_MORE:
+                break
+            else:
+                return reqs, step
+    return reqs, None
+
+
+def reference_decode(stream, max_request):
+    """Independent whole-stream decoder with the blocking server's
+    semantics; (requests, terminal)."""
+    if len(stream) >= 4 and stream[:4] == MAGIC:
+        reqs = []
+        rest = stream[4:]
+        while True:
+            if len(rest) < 4:
+                return reqs, None  # incomplete tail abandoned at EOF
+            n = int.from_bytes(rest[:4], "big")
+            if n > max_request:
+                return reqs, TOO_LONG
+            if len(rest) < 4 + n:
+                return reqs, None
+            try:
+                reqs.append(rest[4 : 4 + n].decode("utf-8"))
+            except UnicodeDecodeError:
+                return reqs, BAD_UTF8
+            rest = rest[4 + n :]
+    # text (a <4-byte prefix of the magic with no newline resolves to text
+    # at EOF; the callers below always drive with eof at the end)
+    reqs = []
+    rest = stream
+    while rest:
+        i = rest.find(b"\n")
+        if i >= 0:
+            if i > max_request:
+                return reqs, TOO_LONG
+            line = rest[:i]
+            rest = rest[i + 1 :]
+        else:
+            if len(rest) > max_request:
+                return reqs, TOO_LONG
+            line, rest = rest, b""
+        if line.endswith(b"\r"):
+            line = line[:-1]
+        try:
+            reqs.append(line.decode("utf-8"))
+        except UnicodeDecodeError:
+            return reqs, BAD_UTF8
+    return reqs, None
+
+
+def random_stream(rng, max_request):
+    """A random protocol stream exercising every verdict path."""
+    binary = rng.random() < 0.5
+    parts = []
+    if binary:
+        parts.append(MAGIC)
+    n_cmds = rng.randrange(0, 6)
+    for _ in range(n_cmds):
+        kind = rng.random()
+        if kind < 0.70:
+            body = bytes(
+                rng.choice(b"ABC abc,=>0123") for _ in range(rng.randrange(0, 12))
+            )
+        elif kind < 0.80:
+            body = bytes(rng.choice(b"xy") for _ in range(max_request + rng.randrange(1, 4)))
+        elif kind < 0.90:
+            body = b"\xff\xfe" + bytes(rng.randrange(256) for _ in range(3))
+        else:
+            body = b""
+        if binary:
+            parts.append(len(body).to_bytes(4, "big") + body)
+        else:
+            crlf = rng.random() < 0.3
+            parts.append(body + (b"\r\n" if crlf else b"\n"))
+    if rng.random() < 0.3:  # ragged tail: unterminated line / truncated frame
+        tail = bytes(rng.choice(b"qr") for _ in range(rng.randrange(1, 7)))
+        if binary:
+            frame = len(tail).to_bytes(4, "big") + tail
+            parts.append(frame[: rng.randrange(1, len(frame))])
+        else:
+            parts.append(tail)
+    return b"".join(parts)
+
+
+def check_proto(cases, rng):
+    max_request = 48  # small cap so oversized paths are cheap to hit
+    for case in range(cases):
+        stream = random_stream(rng, max_request)
+        want = reference_decode(stream, max_request)
+        # whole-buffer-at-once
+        got = drive(stream, [], max_request)
+        assert got == want, f"case {case}: at-once {got} != ref {want} for {stream!r}"
+        # random fragmentation, several splits per stream
+        for _ in range(4):
+            k = rng.randrange(0, max(len(stream), 1))
+            cuts = sorted(rng.randrange(len(stream) + 1) for _ in range(k))
+            got = drive(stream, cuts, max_request)
+            assert got == want, (
+                f"case {case}: split {cuts} {got} != ref {want} for {stream!r}"
+            )
+        # 1-byte drip
+        got = drive(stream, list(range(1, len(stream))), max_request)
+        assert got == want, f"case {case}: drip {got} != ref {want} for {stream!r}"
+
+    # pinned boundaries at the real constant
+    real = 64 * 1024
+    line = b"x" * real + b"\n"
+    assert drive(line, [], real) == ([("x" * real)], None)
+    over = b"x" * (real + 1) + b"\nSTATS\n"
+    assert drive(over, [], real) == ([], TOO_LONG)
+    assert drive(b"x" * (real + 1), [], real) == ([], TOO_LONG)
+    hdr = MAGIC + (real + 1).to_bytes(4, "big")
+    assert drive(hdr, [], real) == ([], TOO_LONG)
+    assert drive(b"RQL", [1, 2], 48) == (["RQL"], None)  # magic prefix + EOF: text
+    st = ProtoState(48)  # ...but without EOF it stays undecidable
+    assert st.next_request(b"RQL", 0, False) == (NEED_MORE, None, 0)
+    assert st.mode == "negotiating"
+
+
+# ---------------------------------------------------------------------
+# ResultCache mirror vs brute-force model (query/cache.rs)
+# ---------------------------------------------------------------------
+
+OVERHEAD = 96
+
+
+def cost(key, resp):
+    return len(key) + len(resp) + OVERHEAD
+
+
+class CacheMirror:
+    """Port of ResultCache: map + seq-ordered victim table."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.map = {}  # key -> (generation, resp, seq)
+        self.order = {}  # seq -> key
+        self.next_seq = 0
+        self.bytes = 0
+        self.hits = self.misses = self.evictions = self.invalidations = 0
+
+    def get(self, generation, query):
+        e = self.map.get(query)
+        if e is None:
+            self.misses += 1
+            return None
+        gen, resp, seq = e
+        if gen != generation:
+            del self.order[seq]
+            del self.map[query]
+            self.bytes -= cost(query, resp)
+            self.misses += 1
+            return None
+        del self.order[seq]
+        self.next_seq += 1
+        self.order[self.next_seq] = query
+        self.map[query] = (gen, resp, self.next_seq)
+        self.hits += 1
+        return resp
+
+    def insert(self, generation, query, resp):
+        c = cost(query, resp)
+        if c > self.capacity // 4:
+            return 0
+        old = self.map.pop(query, None)
+        if old is not None:
+            del self.order[old[2]]
+            self.bytes -= cost(query, old[1])
+        self.next_seq += 1
+        self.order[self.next_seq] = query
+        self.map[query] = (generation, resp, self.next_seq)
+        self.bytes += c
+        evicted = 0
+        while self.bytes > self.capacity:
+            victim_seq = min(self.order)
+            victim_key = self.order.pop(victim_seq)
+            _, vresp, _ = self.map.pop(victim_key)
+            self.bytes -= cost(victim_key, vresp)
+            self.evictions += 1
+            evicted += 1
+        return evicted
+
+    def clear(self):
+        n = len(self.map)
+        self.map.clear()
+        self.order.clear()
+        self.bytes = 0
+        self.invalidations += n
+        return n
+
+
+class CacheModel:
+    """Independent model: a recency-ordered list, front = LRU victim."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.entries = []  # [key, gen, resp] — most recent last
+        self.hits = self.misses = self.evictions = self.invalidations = 0
+
+    def _bytes(self):
+        return sum(cost(k, r) for k, _, r in self.entries)
+
+    def _find(self, query):
+        for i, e in enumerate(self.entries):
+            if e[0] == query:
+                return i
+        return -1
+
+    def get(self, generation, query):
+        i = self._find(query)
+        if i < 0:
+            self.misses += 1
+            return None
+        if self.entries[i][1] != generation:
+            self.entries.pop(i)
+            self.misses += 1
+            return None
+        e = self.entries.pop(i)
+        self.entries.append(e)
+        self.hits += 1
+        return e[2]
+
+    def insert(self, generation, query, resp):
+        if cost(query, resp) > self.capacity // 4:
+            return 0
+        i = self._find(query)
+        if i >= 0:
+            self.entries.pop(i)
+        self.entries.append([query, generation, resp])
+        evicted = 0
+        while self._bytes() > self.capacity:
+            self.entries.pop(0)
+            self.evictions += 1
+            evicted += 1
+        return evicted
+
+    def clear(self):
+        n = len(self.entries)
+        self.invalidations += n
+        self.entries = []
+        return n
+
+
+def check_cache(cases, rng):
+    for case in range(cases):
+        capacity = rng.choice([0, 1, 4 * (OVERHEAD + 6), 6 * (OVERHEAD + 10), 1 << 14])
+        mirror = CacheMirror(capacity)
+        model = CacheModel(capacity)
+        gen = 0
+        keys = [f"q{i}" for i in range(rng.randrange(2, 9))]
+        for op in range(rng.randrange(30, 120)):
+            r = rng.random()
+            if r < 0.45:
+                k = rng.choice(keys)
+                resp = "v" * rng.randrange(0, 40)
+                g = gen if rng.random() < 0.8 else rng.randrange(gen + 1)
+                a = mirror.insert(g, k, resp)
+                b = model.insert(g, k, resp)
+                assert a == b, f"case {case} op {op}: evicted {a} != {b}"
+            elif r < 0.85:
+                k = rng.choice(keys)
+                a = mirror.get(gen, k)
+                b = model.get(gen, k)
+                assert a == b, f"case {case} op {op}: get {a!r} != {b!r}"
+            elif r < 0.95:
+                gen += 1  # view swap...
+                a = mirror.clear()
+                b = model.clear()
+                assert a == b
+            else:
+                gen += 1  # swap whose clear lost the race with an insert
+            assert mirror.bytes == model._bytes(), f"case {case} op {op}: bytes"
+            assert set(mirror.map) == {e[0] for e in model.entries}
+            assert mirror.bytes <= max(capacity, 0)
+            stats_a = (mirror.hits, mirror.misses, mirror.evictions, mirror.invalidations)
+            stats_b = (model.hits, model.misses, model.evictions, model.invalidations)
+            assert stats_a == stats_b, f"case {case} op {op}: {stats_a} != {stats_b}"
+        # after any history, a fresh generation never serves old bytes
+        for k in keys:
+            assert mirror.get(gen + 1, k) is None
+
+
+# ---------------------------------------------------------------------
+# batch admission (frontend.rs parse loop + backpressure.rs)
+# ---------------------------------------------------------------------
+
+
+def check_admission(cases, rng):
+    for case in range(cases):
+        cap = rng.randrange(1, 9)
+        in_flight = 0
+        for sweep in range(rng.randrange(5, 40)):
+            k = rng.randrange(0, 12)  # requests parsed this sweep
+            granted = min(k, cap - in_flight)
+            shed = k - granted
+            in_flight += granted
+            assert in_flight <= cap, f"case {case}: bound violated"
+            assert shed == max(0, k - (cap - (in_flight - granted)))
+            # the sweep executes its batch in order, releasing each permit
+            # after the response — by the end of the sweep all are back
+            in_flight -= granted
+            assert in_flight >= 0
+
+
+# ---------------------------------------------------------------------
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 400
+    rng = random.Random(0x5E12FA11)
+    check_proto(cases, rng)
+    print(f"proto: {cases} randomized streams x 6 fragmentations OK")
+    check_cache(cases, rng)
+    print(f"cache: {cases} randomized op sequences OK")
+    check_admission(cases, rng)
+    print(f"admission: {cases} randomized sweep schedules OK")
+    print("0 mismatches")
+
+
+if __name__ == "__main__":
+    main()

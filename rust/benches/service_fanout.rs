@@ -1,0 +1,461 @@
+//! Service fan-out: the nonblocking front end (`coordinator/frontend.rs`)
+//! under thousands of concurrent pipelined connections, parity-gated
+//! against the original thread-per-connection server.
+//!
+//! Two phases, gates before timing:
+//!
+//! 1. **Parity gates.** The same per-connection pipelined request streams
+//!    are replayed against `serve_tcp_blocking` (plain engine — the
+//!    baseline) and against `serve_nonblocking` at shards {1, 4} ×
+//!    result-cache {off, on}; every connection's full response byte
+//!    stream must be identical. A separate gate drives the `RQL2` binary
+//!    framing with the same commands and checks the de-framed payloads
+//!    reconstruct the text stream byte-for-byte — negotiation must change
+//!    framing only, never content. The command mix deliberately avoids
+//!    STATS/METRICS (uptime and cache counters legitimately differ
+//!    between engines).
+//!
+//! 2. **Throughput run.** N connections (default 10 000, clamped to the
+//!    process fd limit — each loopback connection burns two fds in this
+//!    process) speak the binary protocol at pipeline depth `p`: each
+//!    client thread writes a batch of `p` frames per connection, then
+//!    reads the `p` responses, timestamping every response against its
+//!    batch send. One warmup round primes the result cache; timed rounds
+//!    then measure req/s and per-request latency p50/p99/p999. The cache
+//!    hit rate is read back over the wire from the `STATS` tail.
+//!
+//! Results go to the console, `bench_results/service_fanout.json`, and
+//! the cross-PR snapshot `BENCH_service.json` (conns, req_s, p50_s,
+//! p99_s, p999_s, cache_hit_rate). Flags (after `--`): `--test` shrinks
+//! everything for the CI smoke (gates still run), `--conns N`,
+//! `--pipeline N`, `--shards N` pins the throughput shard count.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use trie_of_rules::bench_support::report::{BenchReport, Report};
+use trie_of_rules::bench_support::workloads::{self, rql_queries, QuerySkew};
+use trie_of_rules::coordinator::frontend::{serve_nonblocking, ServeOptions, BINARY_MAGIC};
+use trie_of_rules::coordinator::service::{serve_tcp_blocking, QueryEngine};
+
+struct Args {
+    test: bool,
+    conns: usize,
+    pipeline: usize,
+    shards: usize,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        test: false,
+        conns: 0, // 0 = mode default
+        pipeline: 4,
+        shards: 0, // 0 = run both 1 and 4
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--test" => args.test = true,
+            "--conns" => {
+                args.conns = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--conns needs a positive integer");
+            }
+            "--pipeline" => {
+                args.pipeline = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--pipeline needs a positive integer");
+            }
+            "--shards" => {
+                args.shards = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--shards needs a positive integer");
+            }
+            // `cargo bench` forwards its own flags (e.g. `--bench`).
+            _ => {}
+        }
+    }
+    args.pipeline = args.pipeline.max(1);
+    args
+}
+
+/// Soft fd limit from /proc/self/limits (Linux); generous fallback
+/// elsewhere — the clamp only has to stop obvious EMFILE storms.
+fn fd_soft_limit() -> usize {
+    if let Ok(text) = std::fs::read_to_string("/proc/self/limits") {
+        for line in text.lines() {
+            if line.starts_with("Max open files") {
+                if let Some(v) = line.split_whitespace().nth(3) {
+                    if let Ok(n) = v.parse::<usize>() {
+                        return n;
+                    }
+                }
+            }
+        }
+    }
+    65536
+}
+
+/// Both socket ends live in this process, so one benched connection costs
+/// two fds; keep headroom for the suite's own files and sockets.
+fn clamp_conns(requested: usize) -> usize {
+    let budget = fd_soft_limit().saturating_sub(256) / 2;
+    requested.min(budget.max(16))
+}
+
+fn connect_retry(addr: std::net::SocketAddr) -> TcpStream {
+    let mut delay = Duration::from_micros(200);
+    for _ in 0..200 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(_) => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(20));
+            }
+        }
+    }
+    panic!("could not connect to {addr}");
+}
+
+/// u32 big-endian length-prefixed `RQL2` frame.
+fn frame(payload: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload.as_bytes());
+    out
+}
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    stream.read_exact(&mut hdr)?;
+    let n = u32::from_be_bytes(hdr) as usize;
+    let mut payload = vec![0u8; n];
+    stream.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+fn build_engine(minsup: f64, cache_mb: usize, threads: usize) -> QueryEngine {
+    let w = workloads::groceries(minsup);
+    QueryEngine::with_threads(w.trie.clone(), w.db.vocab().clone(), threads)
+        .with_result_cache(cache_mb)
+}
+
+/// Send one pipelined text stream (commands end with QUIT) and drain the
+/// full response byte stream until the server closes.
+fn roundtrip_text(addr: std::net::SocketAddr, cmds: &[String]) -> Vec<u8> {
+    let mut stream = connect_retry(addr);
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut wire = String::new();
+    for c in cmds {
+        wire.push_str(c);
+        wire.push('\n');
+    }
+    stream.write_all(wire.as_bytes()).unwrap();
+    let mut out = Vec::new();
+    stream.read_to_end(&mut out).expect("read text responses");
+    out
+}
+
+/// Same commands over the binary protocol; returns the de-framed payloads.
+fn roundtrip_binary(addr: std::net::SocketAddr, cmds: &[String]) -> Vec<String> {
+    let mut stream = connect_retry(addr);
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut wire: Vec<u8> = BINARY_MAGIC.to_vec();
+    for c in cmds {
+        wire.extend_from_slice(&frame(c));
+    }
+    stream.write_all(&wire).unwrap();
+    let mut out = Vec::with_capacity(cmds.len());
+    for _ in 0..cmds.len() {
+        out.push(String::from_utf8(read_frame(&mut stream).unwrap()).unwrap());
+    }
+    out
+}
+
+/// The parity gates: blocking baseline vs nonblocking at shards {1,4} ×
+/// cache {off,on}, plus binary↔text framing equivalence.
+fn parity_gates(minsup: f64, conns: usize, per_conn: usize) {
+    let qw = rql_queries(
+        &workloads::groceries(minsup),
+        conns * 4 + per_conn,
+        QuerySkew::Zipf(1.1),
+        0x5E12_FA11,
+    );
+    // Per-connection pipelined streams: rotated slices of one query pool,
+    // salted with an error case and an EXPLAIN so parity covers ERR and
+    // multi-clause responses, QUIT-terminated so the server closes.
+    let streams: Vec<Vec<String>> = (0..conns)
+        .map(|c| {
+            let mut cmds: Vec<String> = (0..per_conn)
+                .map(|k| qw.queries[(c * 4 + k) % qw.queries.len()].clone())
+                .collect();
+            cmds.push("RULES WHERE nonsense".to_string()); // ERR path
+            cmds.push(format!("EXPLAIN {}", qw.queries[c % qw.queries.len()]));
+            cmds.push("QUIT".to_string());
+            cmds
+        })
+        .collect();
+
+    // Baseline: the original thread-per-connection server, plain engine.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let engine = Arc::new(build_engine(minsup, 0, 2));
+    let addr = serve_tcp_blocking(engine, "127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+    let baseline: Vec<Vec<u8>> = streams.iter().map(|s| roundtrip_text(addr, s)).collect();
+    shutdown.store(true, Ordering::Relaxed);
+
+    for shards in [1usize, 4] {
+        for cache_mb in [0usize, 8] {
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let engine = Arc::new(build_engine(minsup, cache_mb, 2));
+            let opts = ServeOptions {
+                shards,
+                max_pending: 4096,
+                idle_timeout: None,
+            };
+            let addr =
+                serve_nonblocking(engine, "127.0.0.1:0", Arc::clone(&shutdown), opts).unwrap();
+            for (i, cmds) in streams.iter().enumerate() {
+                let got = roundtrip_text(addr, cmds);
+                assert_eq!(
+                    got, baseline[i],
+                    "text parity broke: conn {i}, shards {shards}, cache {cache_mb} MiB"
+                );
+            }
+            // Binary framing must carry the very same payloads: joining
+            // the de-framed responses with '\n' reconstructs the text
+            // stream exactly.
+            let bin = roundtrip_binary(addr, &streams[0]);
+            let mut rebuilt = Vec::new();
+            for payload in &bin {
+                rebuilt.extend_from_slice(payload.as_bytes());
+                rebuilt.push(b'\n');
+            }
+            assert_eq!(
+                rebuilt, baseline[0],
+                "binary/text parity broke: shards {shards}, cache {cache_mb} MiB"
+            );
+            shutdown.store(true, Ordering::Relaxed);
+        }
+    }
+    eprintln!(
+        "[service_fanout] parity OK: {conns} conns x {} cmds, shards {{1,4}} x cache {{off,on}}, binary framing",
+        per_conn + 3
+    );
+}
+
+struct RunResult {
+    reqs: usize,
+    wall_s: f64,
+    latencies_s: Vec<f64>,
+}
+
+/// The fan-out run: `conns` binary-mode connections split over `threads`
+/// client threads, each pipelining `depth` requests per batch.
+fn fanout_run(
+    addr: std::net::SocketAddr,
+    queries: Arc<Vec<String>>,
+    conns: usize,
+    threads: usize,
+    depth: usize,
+    warmup_rounds: usize,
+    timed_rounds: usize,
+) -> RunResult {
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let queries = Arc::clone(&queries);
+        let barrier = Arc::clone(&barrier);
+        let my_conns = conns / threads + usize::from(t < conns % threads);
+        handles.push(std::thread::spawn(move || {
+            // Connect phase: each socket announces binary mode up front.
+            let mut socks: Vec<TcpStream> = (0..my_conns)
+                .map(|_| {
+                    let mut s = connect_retry(addr);
+                    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                    s.set_nodelay(true).ok();
+                    s.write_all(BINARY_MAGIC).unwrap();
+                    s
+                })
+                .collect();
+            barrier.wait(); // all threads connected
+            let mut latencies: Vec<f64> = Vec::new();
+            for round in 0..warmup_rounds + timed_rounds {
+                let timed = round >= warmup_rounds;
+                // Write batches to every connection first so the server
+                // sees the full fan-out in flight...
+                let mut sent_at: Vec<Instant> = Vec::with_capacity(socks.len());
+                for (c, s) in socks.iter_mut().enumerate() {
+                    let mut batch = Vec::new();
+                    for k in 0..depth {
+                        let q = &queries[(t + c * 7 + k + round) % queries.len()];
+                        batch.extend_from_slice(&frame(q));
+                    }
+                    sent_at.push(Instant::now());
+                    s.write_all(&batch).unwrap();
+                }
+                // ...then drain responses, timestamping each against its
+                // batch send.
+                for (c, s) in socks.iter_mut().enumerate() {
+                    for _ in 0..depth {
+                        read_frame(s).expect("response frame");
+                        if timed {
+                            latencies.push(sent_at[c].elapsed().as_secs_f64());
+                        }
+                    }
+                }
+                barrier.wait(); // round boundary (aligns the timed window)
+            }
+            drop(socks);
+            latencies
+        }));
+    }
+    barrier.wait(); // connect barrier
+    let mut t0 = Instant::now();
+    for round in 0..warmup_rounds + timed_rounds {
+        barrier.wait(); // round boundary
+        if round + 1 == warmup_rounds {
+            t0 = Instant::now(); // timed window starts after last warmup
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut latencies_s = Vec::new();
+    for h in handles {
+        latencies_s.extend(h.join().expect("client thread"));
+    }
+    RunResult {
+        reqs: latencies_s.len(),
+        wall_s,
+        latencies_s,
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Cache hit rate read back over the wire from the STATS tail.
+fn cache_hit_rate(addr: std::net::SocketAddr) -> f64 {
+    let resp = roundtrip_text(addr, &["STATS".to_string(), "QUIT".to_string()]);
+    let text = String::from_utf8_lossy(&resp);
+    let mut hits = 0.0;
+    let mut misses = 0.0;
+    for tok in text.split_whitespace() {
+        if let Some(v) = tok.strip_prefix("cache_hits=") {
+            hits = v.parse().unwrap_or(0.0);
+        } else if let Some(v) = tok.strip_prefix("cache_misses=") {
+            misses = v.parse().unwrap_or(0.0);
+        }
+    }
+    if hits + misses == 0.0 {
+        0.0
+    } else {
+        hits / (hits + misses)
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    let (minsup, parity_conns, parity_cmds, conns, threads, warmup, rounds) = if args.test {
+        (0.01, 6, 16, 128, 4, 1, 2)
+    } else {
+        (0.01, 8, 24, 10_000, 8, 1, 3)
+    };
+    let want_conns = if args.conns > 0 { args.conns } else { conns };
+    let conns = clamp_conns(want_conns);
+    if conns < want_conns {
+        eprintln!(
+            "[service_fanout] fd limit clamps connections {want_conns} -> {conns} \
+             (raise `ulimit -n`; each loopback conn costs two fds here)"
+        );
+    }
+    let depth = args.pipeline;
+
+    // -- gates first: a fast wrong server is worthless ---------------------
+    parity_gates(minsup, parity_conns, parity_cmds);
+
+    // -- fan-out throughput ------------------------------------------------
+    let w = workloads::groceries(minsup);
+    let queries = Arc::new(
+        rql_queries(&w, 512, QuerySkew::Zipf(1.1), 0xFA_9007)
+            .queries,
+    );
+    let mut report = Report::new("Service fan-out: nonblocking front end, pipelined binary protocol");
+    report.note(format!(
+        "{conns} connections, pipeline depth {depth}, {threads} client threads, {rounds} timed rounds"
+    ));
+    let mut bench = BenchReport::new("service");
+
+    let shard_list: Vec<usize> = if args.shards > 0 {
+        vec![args.shards]
+    } else if args.test {
+        vec![4]
+    } else {
+        vec![1, 4]
+    };
+    for &shards in &shard_list {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let engine = Arc::new(build_engine(minsup, 64, 2));
+        let opts = ServeOptions {
+            shards,
+            // Sized so admission never sheds: shedding is correct behavior
+            // under overload (tests/service_fanout.rs pins it) but would
+            // turn this throughput figure into a drop counter.
+            max_pending: (conns * depth).max(1024),
+            idle_timeout: None,
+        };
+        let addr = serve_nonblocking(engine, "127.0.0.1:0", Arc::clone(&shutdown), opts).unwrap();
+        eprintln!("[service_fanout] shards {shards}: connecting {conns} sockets...");
+        let r = fanout_run(addr, Arc::clone(&queries), conns, threads, depth, warmup, rounds);
+        let hit_rate = cache_hit_rate(addr);
+        shutdown.store(true, Ordering::Relaxed);
+
+        let mut sorted = r.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let req_s = r.reqs as f64 / r.wall_s.max(1e-12);
+        let cells: Vec<(&str, f64)> = vec![
+            ("conns", conns as f64),
+            ("pipeline", depth as f64),
+            ("req_s", req_s),
+            ("p50_s", percentile(&sorted, 0.50)),
+            ("p99_s", percentile(&sorted, 0.99)),
+            ("p999_s", percentile(&sorted, 0.999)),
+            ("cache_hit_rate", hit_rate),
+        ];
+        let label = format!("fanout/shards{shards}");
+        report.row(&label, &cells);
+        bench.row(&label, &cells);
+        eprintln!(
+            "[service_fanout] shards {shards}: {:.0} req/s over {} reqs, p50 {:.3} ms, p99 {:.3} ms, p999 {:.3} ms, cache hit rate {:.2}",
+            req_s,
+            r.reqs,
+            percentile(&sorted, 0.50) * 1e3,
+            percentile(&sorted, 0.99) * 1e3,
+            percentile(&sorted, 0.999) * 1e3,
+            hit_rate
+        );
+    }
+
+    print!("{}", report.render());
+    match report.save("service_fanout") {
+        Ok(p) => eprintln!("[service_fanout] wrote {}", p.display()),
+        Err(e) => eprintln!("[service_fanout] save failed: {e:#}"),
+    }
+    match bench.save() {
+        Ok(p) => eprintln!("[service_fanout] wrote {}", p.display()),
+        Err(e) => eprintln!("[service_fanout] save failed: {e:#}"),
+    }
+}

@@ -170,6 +170,16 @@ PIPELINE OPTS:
                                     as JSONL (epoch-tagged records; see
                                     DESIGN.md §14); METRICS / METRICS JSON
                                     serve the same registry on demand
+  --service-shards N                event-loop shards for the nonblocking
+                                    TCP front end (default 0 = auto:
+                                    available cores capped at 4)
+  --max-pending N                   admission bound on in-flight service
+                                    requests; beyond it requests get BUSY
+                                    (default 1024)
+  --idle-timeout-s N                evict service connections idle for N
+                                    seconds (default 0 = never)
+  --result-cache-mb N               generation-keyed query-result cache
+                                    size in MiB (default 0 = off)
   --transactions N --seed N         generator overrides
   --config FILE                     key=value config file
   --set key=value                   single config override (repeatable)
@@ -342,6 +352,16 @@ fn parse_pipeline_opts_with(
             "--telemetry-out" => {
                 opts.config.set("telemetry_out", &value("--telemetry-out")?)?
             }
+            "--service-shards" => {
+                opts.config.set("service_shards", &value("--service-shards")?)?
+            }
+            "--max-pending" => opts.config.set("max_pending", &value("--max-pending")?)?,
+            "--idle-timeout-s" => {
+                opts.config.set("idle_timeout_s", &value("--idle-timeout-s")?)?
+            }
+            "--result-cache-mb" => {
+                opts.config.set("result_cache_mb", &value("--result-cache-mb")?)?
+            }
             "--config" => {
                 opts.config = PipelineConfig::load(&PathBuf::from(value("--config")?))?;
             }
@@ -456,6 +476,31 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(parse(&argv("serve --port 1 --compact-threshold nope")).is_err());
+    }
+
+    #[test]
+    fn parses_service_frontend_flags() {
+        match parse(&argv(
+            "serve --dataset tiny --port 7878 --service-shards 4 --max-pending 64 \
+             --idle-timeout-s 30 --result-cache-mb 16",
+        ))
+        .unwrap()
+        {
+            Command::Serve(o, _, _) => {
+                assert_eq!(o.config.service_shards, 4);
+                assert_eq!(o.config.max_pending, 64);
+                assert_eq!(o.config.idle_timeout_s, 30);
+                assert_eq!(o.config.result_cache_mb, 16);
+            }
+            other => panic!("{other:?}"),
+        }
+        // The result cache also applies to one-shot `query` runs.
+        match parse(&argv("query --dataset tiny --cmd STATS --result-cache-mb 8")).unwrap() {
+            Command::Query(o, ..) => assert_eq!(o.config.result_cache_mb, 8),
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --port 1 --max-pending 0")).is_err());
+        assert!(parse(&argv("serve --port 1 --service-shards nope")).is_err());
     }
 
     #[test]

@@ -114,6 +114,40 @@ impl<T> BoundedQueue<T> {
         Ok(())
     }
 
+    /// Nonblocking push. Returns `Err(item)` when the queue is closed or at
+    /// capacity, so a readiness-loop producer (the service acceptor) can
+    /// fall back instead of stalling its event loop.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        if state.closed || state.items.len() >= self.inner.capacity {
+            return Err(item);
+        }
+        state.items.push_back(item);
+        let depth = state.items.len();
+        drop(state);
+        if let Some(obs) = self.inner.obs.get() {
+            obs.depth.set(depth as i64);
+        }
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Nonblocking pop. `None` when the queue is currently empty (closed or
+    /// not) — event-loop consumers poll between sweeps rather than parking.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        let item = state.items.pop_front();
+        let depth = state.items.len();
+        drop(state);
+        if item.is_some() {
+            if let Some(obs) = self.inner.obs.get() {
+                obs.depth.set(depth as i64);
+            }
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
     /// Blocking pop. `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
         let mut state = self.inner.queue.lock().unwrap();
@@ -170,6 +204,102 @@ impl<T> BoundedQueue<T> {
             Duration::from_nanos(self.inner.producer_blocked_ns.load(Ordering::Relaxed)),
             Duration::from_nanos(self.inner.consumer_blocked_ns.load(Ordering::Relaxed)),
         )
+    }
+}
+
+/// Global admission control for the service front end: a bounded count of
+/// in-flight (parsed but not yet answered) requests across every shard.
+///
+/// Each admitted request holds an [`AdmissionPermit`]; dropping the permit
+/// releases the slot. When the bound is hit, [`AdmissionControl::try_acquire`]
+/// returns `None` and the caller sheds the request with a `BUSY` response
+/// instead of queueing unboundedly — the nonblocking analogue of the thread
+/// growth the old per-connection server suffered under overload.
+pub struct AdmissionControl {
+    inner: Arc<AdmissionInner>,
+}
+
+struct AdmissionInner {
+    pending: std::sync::atomic::AtomicUsize,
+    capacity: usize,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// RAII admission slot; releases the in-flight count when dropped.
+pub struct AdmissionPermit {
+    inner: Arc<AdmissionInner>,
+}
+
+impl Clone for AdmissionControl {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl AdmissionControl {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "admission capacity must be positive");
+        Self {
+            inner: Arc::new(AdmissionInner {
+                pending: std::sync::atomic::AtomicUsize::new(0),
+                capacity,
+                admitted: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Claim one in-flight slot, or record a shed and return `None` when the
+    /// pending bound is already met.
+    pub fn try_acquire(&self) -> Option<AdmissionPermit> {
+        let claimed = self
+            .inner
+            .pending
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |p| {
+                if p < self.inner.capacity {
+                    Some(p + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok();
+        if claimed {
+            self.inner.admitted.fetch_add(1, Ordering::Relaxed);
+            Some(AdmissionPermit {
+                inner: Arc::clone(&self.inner),
+            })
+        } else {
+            self.inner.shed.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Requests currently holding a permit.
+    pub fn pending(&self) -> usize {
+        self.inner.pending.load(Ordering::Acquire)
+    }
+
+    /// Total requests ever admitted.
+    pub fn admitted_count(&self) -> u64 {
+        self.inner.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Total requests refused (answered `BUSY`).
+    pub fn shed_count(&self) -> u64 {
+        self.inner.shed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        self.inner.pending.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -246,6 +376,66 @@ mod tests {
         let q = BoundedQueue::new(2);
         q.close();
         assert!(q.push(7).is_err());
+    }
+
+    #[test]
+    fn try_push_and_try_pop_never_block() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(2);
+        assert_eq!(q.try_pop(), None);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(3), "full queue refuses");
+        assert_eq!(q.try_pop(), Some(1));
+        q.try_push(3).unwrap();
+        q.close();
+        assert_eq!(q.try_push(4), Err(4), "closed queue refuses");
+        assert_eq!(q.try_pop(), Some(2), "pending items drain after close");
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn admission_caps_pending_and_counts_sheds() {
+        let ac = AdmissionControl::new(2);
+        let p1 = ac.try_acquire().expect("slot 1");
+        let p2 = ac.try_acquire().expect("slot 2");
+        assert_eq!(ac.pending(), 2);
+        assert!(ac.try_acquire().is_none(), "bound met");
+        assert!(ac.try_acquire().is_none());
+        assert_eq!(ac.shed_count(), 2);
+        drop(p1);
+        let p3 = ac.try_acquire().expect("slot freed by drop");
+        assert_eq!(ac.pending(), 2);
+        drop(p2);
+        drop(p3);
+        assert_eq!(ac.pending(), 0);
+        assert_eq!(ac.admitted_count(), 3);
+        assert_eq!(ac.shed_count(), 2);
+    }
+
+    #[test]
+    fn admission_is_race_free_across_threads() {
+        let ac = AdmissionControl::new(8);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let ac = ac.clone();
+                thread::spawn(move || {
+                    let mut admitted = 0u64;
+                    for _ in 0..1000 {
+                        if let Some(p) = ac.try_acquire() {
+                            admitted += 1;
+                            assert!(ac.pending() <= 8, "bound violated");
+                            drop(p);
+                        }
+                    }
+                    admitted
+                })
+            })
+            .collect();
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(ac.pending(), 0);
+        assert_eq!(ac.admitted_count(), total);
+        assert_eq!(ac.admitted_count() + ac.shed_count(), 4000);
     }
 
     #[test]

@@ -67,6 +67,19 @@ pub struct PipelineConfig {
     /// export). Build-stage and serving records stream here through the
     /// background [`crate::obs::export::TelemetryExporter`].
     pub telemetry_out: Option<String>,
+    /// Event-loop shards for the nonblocking TCP front end
+    /// (`--service-shards`; 0 = auto — available cores, capped; see
+    /// [`crate::coordinator::frontend::default_service_shards`]).
+    pub service_shards: usize,
+    /// Admission-control bound on in-flight service requests; requests
+    /// beyond it are answered `BUSY` (`--max-pending`).
+    pub max_pending: usize,
+    /// Evict a service connection after this many seconds of inactivity
+    /// (`--idle-timeout-s`; 0 = never).
+    pub idle_timeout_s: usize,
+    /// Generation-keyed query-result cache size in MiB
+    /// (`--result-cache-mb`; 0 = off).
+    pub result_cache_mb: usize,
 }
 
 impl Default for PipelineConfig {
@@ -83,6 +96,10 @@ impl Default for PipelineConfig {
             query_threads: 0,
             compact_threshold: 0,
             telemetry_out: None,
+            service_shards: 0,
+            max_pending: 1024,
+            idle_timeout_s: 0,
+            result_cache_mb: 0,
         }
     }
 }
@@ -111,6 +128,10 @@ impl PipelineConfig {
                 anyhow::ensure!(!value.is_empty(), "telemetry_out needs a path");
                 self.telemetry_out = Some(value.to_string());
             }
+            "service_shards" => self.service_shards = parse_usize_min(value, 0)?,
+            "max_pending" => self.max_pending = parse_usize_min(value, 1)?,
+            "idle_timeout_s" => self.idle_timeout_s = parse_usize_min(value, 0)?,
+            "result_cache_mb" => self.result_cache_mb = parse_usize_min(value, 0)?,
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -159,7 +180,7 @@ impl PipelineConfig {
     /// Render as a `key=value` block (round-trips through `load`).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\nquery_threads={}\ncompact_threshold={}\n",
+            "minsup={}\nmin_confidence={}\nminer={}\ncounter={}\nworkers={}\nchunk_size={}\nqueue_capacity={}\nshard_slots={}\nquery_threads={}\ncompact_threshold={}\nservice_shards={}\nmax_pending={}\nidle_timeout_s={}\nresult_cache_mb={}\n",
             self.minsup,
             self.min_confidence,
             self.miner.name(),
@@ -169,7 +190,11 @@ impl PipelineConfig {
             self.queue_capacity,
             self.shard_slots,
             self.query_threads,
-            self.compact_threshold
+            self.compact_threshold,
+            self.service_shards,
+            self.max_pending,
+            self.idle_timeout_s,
+            self.result_cache_mb
         );
         if let Some(path) = &self.telemetry_out {
             out.push_str(&format!("telemetry_out={path}\n"));
@@ -255,6 +280,31 @@ mod tests {
         std::fs::write(&path, c.render()).unwrap();
         let back = PipelineConfig::load(&path).unwrap();
         assert_eq!(back.telemetry_out.as_deref(), Some("artifacts/telemetry.jsonl"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn service_keys_roundtrip() {
+        let mut c = PipelineConfig::default();
+        assert_eq!(c.service_shards, 0);
+        assert_eq!(c.max_pending, 1024);
+        assert_eq!(c.idle_timeout_s, 0);
+        assert_eq!(c.result_cache_mb, 0);
+        c.set("service_shards", "4").unwrap();
+        c.set("max_pending", "64").unwrap();
+        c.set("idle_timeout_s", "30").unwrap();
+        c.set("result_cache_mb", "16").unwrap();
+        assert!(c.set("max_pending", "0").is_err(), "pending bound needs >=1");
+        assert!(c.set("service_shards", "nope").is_err());
+        let dir = std::env::temp_dir().join(format!("tor_cfg_svc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pipeline.cfg");
+        std::fs::write(&path, c.render()).unwrap();
+        let back = PipelineConfig::load(&path).unwrap();
+        assert_eq!(back.service_shards, 4);
+        assert_eq!(back.max_pending, 64);
+        assert_eq!(back.idle_timeout_s, 30);
+        assert_eq!(back.result_cache_mb, 16);
         std::fs::remove_dir_all(&dir).ok();
     }
 

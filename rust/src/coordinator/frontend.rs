@@ -1,0 +1,826 @@
+//! Nonblocking high-fanout TCP front end for the query service.
+//!
+//! Replaces the thread-per-connection server (kept as
+//! [`super::service::serve_tcp_blocking`], the parity baseline) with one
+//! acceptor plus N event-loop **shards**. Each shard owns a
+//! [`Slab`](crate::coordinator::netpoll::Slab) of per-connection state
+//! machines and sweeps them with *readiness-by-attempt* I/O: every socket
+//! is nonblocking and a `WouldBlock` return is the "not ready" signal (the
+//! vendor set has no `libc`, so there is no `poll(2)` to park on — see
+//! `coordinator/netpoll.rs`). 10k+ connections therefore cost 10k+ slab
+//! entries and buffers, not 10k+ OS threads.
+//!
+//! **Wire protocols.** A connection speaks one of two framings, negotiated
+//! by its first bytes:
+//!
+//! * *Text* (the legacy protocol, byte-for-byte compatible with the
+//!   blocking server): one `\n`-terminated request line per command, one
+//!   `\n`-terminated (possibly multi-line, self-delimiting) response.
+//! * *Binary* (`RQL2`): the client's first 4 bytes are the magic
+//!   `b"RQL2"`; thereafter every request **and** response is a
+//!   `u32`-big-endian length prefix followed by that many payload bytes.
+//!   Payloads are exactly the text commands/responses, minus the line
+//!   framing — so binary and text parity is structural, not coincidental.
+//!   The magic cannot collide with the text protocol: no RQL verb starts
+//!   with `RQL2`.
+//!
+//! Requests **pipeline**: a client may send many frames without waiting;
+//! each connection's responses are generated strictly in request order
+//! (the per-connection state machine is swept by exactly one shard).
+//!
+//! **Admission control.** Parsed requests claim a slot from a global
+//! [`AdmissionControl`] bound (`max_pending` config key). A request that
+//! finds the bound exhausted is answered `BUSY` in-order instead of
+//! queueing unboundedly — the nonblocking analogue of the unbounded thread
+//! growth the old server suffered under overload. Sheds are counted
+//! (`tor_shed_requests_total`).
+//!
+//! **Robustness.** Request size is capped at [`MAX_REQUEST_BYTES`] in both
+//! framings (`ERR line too long` / `ERR frame too long`, then close), and
+//! an optional per-connection idle timeout (`idle_timeout_s`) evicts dead
+//! clients (`tor_idle_evicted_conns_total`).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::backpressure::{AdmissionControl, AdmissionPermit, BoundedQueue};
+use super::netpoll::{IdleBackoff, Interest, Slab, Token};
+use super::service::QueryEngine;
+
+/// Hard cap on one request's payload (text line or binary frame body).
+pub const MAX_REQUEST_BYTES: usize = 64 * 1024;
+
+/// Magic prefix a client sends to negotiate the binary framing.
+pub const BINARY_MAGIC: &[u8; 4] = b"RQL2";
+
+/// Bytes pulled per `read` attempt.
+const READ_CHUNK: usize = 16 * 1024;
+/// Per-connection, per-sweep read budget, so one firehose client cannot
+/// starve its shard's other connections.
+const READ_SWEEP_MAX: usize = 256 * 1024;
+/// Stop reading (but keep writing) once this many response bytes are
+/// queued: a client that sends fast and reads slowly is backpressured by
+/// its own socket instead of growing our buffer without bound.
+const WRITE_HIGH_WATER: usize = 1 << 20;
+/// After this many consecutive no-progress sweeps a connection is "cold"…
+const COLD_AFTER_SWEEPS: u32 = 64;
+/// …and is probed only every this-many sweeps (staggered by token), so
+/// 10k idle connections cost ~1/8 of the syscalls per sweep.
+const COLD_PROBE_PERIOD: u64 = 8;
+/// Acceptor→shard handoff queue depth (per shard).
+const ACCEPT_QUEUE_CAP: usize = 256;
+/// Compact consumed buffer prefixes past this size.
+const COMPACT_THRESHOLD: usize = 64 * 1024;
+
+/// Front-end tuning knobs (config keys `service_shards`, `max_pending`,
+/// `idle_timeout_s`; flags `--service-shards`, `--max-pending`,
+/// `--idle-timeout-s`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Event-loop shard count; 0 = auto ([`default_service_shards`]).
+    pub shards: usize,
+    /// Global bound on in-flight admitted requests (`BUSY` beyond it).
+    pub max_pending: usize,
+    /// Evict a connection after this much inactivity; `None` = never.
+    pub idle_timeout: Option<Duration>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            shards: 0,
+            max_pending: 1024,
+            idle_timeout: None,
+        }
+    }
+}
+
+/// Auto shard count: available cores, capped — the shards only shuffle
+/// bytes and parse; query execution parallelism lives in the engine's
+/// worker pool, so a handful of loops drives a lot of connections.
+pub fn default_service_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
+
+/// Which framing a connection settled on (or hasn't yet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Mode {
+    Negotiating,
+    Text,
+    Binary,
+}
+
+/// One step of the incremental request parser.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum Step {
+    /// A complete request payload (UTF-8, framing stripped).
+    Request(String),
+    /// The buffer holds no complete request; read more.
+    NeedMore,
+    /// The current request exceeds [`MAX_REQUEST_BYTES`].
+    TooLong,
+    /// The current request is not valid UTF-8 (connection is dropped, as
+    /// the blocking server's `lines()` did).
+    BadUtf8,
+}
+
+/// Incremental, fragmentation-proof protocol state machine. Pure w.r.t.
+/// I/O: it only looks at `buf[*pos..]` and advances `*pos` past each
+/// consumed request, so it is directly testable on byte-split inputs.
+#[derive(Debug)]
+pub(crate) struct ProtoState {
+    mode: Mode,
+}
+
+impl ProtoState {
+    pub(crate) fn new() -> Self {
+        ProtoState {
+            mode: Mode::Negotiating,
+        }
+    }
+
+    pub(crate) fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Try to extract the next complete request from `buf[*pos..]`.
+    /// `eof` marks that no more bytes will ever arrive (peer half-closed):
+    /// a final unterminated text line is then processed — exactly what
+    /// `BufRead::lines` gave the blocking server — while an incomplete
+    /// binary frame is abandoned as `NeedMore` (the caller closes).
+    pub(crate) fn next_request(&mut self, buf: &[u8], pos: &mut usize, eof: bool) -> Step {
+        if self.mode == Mode::Negotiating {
+            let avail = &buf[*pos..];
+            if avail.len() >= BINARY_MAGIC.len() {
+                if &avail[..BINARY_MAGIC.len()] == BINARY_MAGIC {
+                    *pos += BINARY_MAGIC.len();
+                    self.mode = Mode::Binary;
+                } else {
+                    self.mode = Mode::Text;
+                }
+            } else if avail.contains(&b'\n') || (eof && !avail.is_empty()) {
+                // Too short to be the magic, provably a text line.
+                self.mode = Mode::Text;
+            } else {
+                return Step::NeedMore;
+            }
+        }
+        let avail = &buf[*pos..];
+        match self.mode {
+            Mode::Text => match avail.iter().position(|&b| b == b'\n') {
+                // The cap must not depend on how the bytes were fragmented:
+                // the blocking server's `take(MAX+1).read_until` rejects any
+                // line whose pre-`\n` bytes exceed the cap, so an oversized
+                // line is TooLong even when its newline is already buffered.
+                Some(i) if i > MAX_REQUEST_BYTES => Step::TooLong,
+                Some(i) => {
+                    let mut line = &avail[..i];
+                    if line.last() == Some(&b'\r') {
+                        line = &line[..line.len() - 1];
+                    }
+                    let step = match std::str::from_utf8(line) {
+                        Ok(s) => Step::Request(s.to_string()),
+                        Err(_) => Step::BadUtf8,
+                    };
+                    *pos += i + 1;
+                    step
+                }
+                None if avail.len() > MAX_REQUEST_BYTES => Step::TooLong,
+                None if eof && !avail.is_empty() => {
+                    let step = match std::str::from_utf8(avail) {
+                        Ok(s) => Step::Request(s.to_string()),
+                        Err(_) => Step::BadUtf8,
+                    };
+                    *pos = buf.len();
+                    step
+                }
+                None => Step::NeedMore,
+            },
+            Mode::Binary => {
+                if avail.len() < 4 {
+                    return Step::NeedMore;
+                }
+                let n = u32::from_be_bytes([avail[0], avail[1], avail[2], avail[3]]) as usize;
+                if n > MAX_REQUEST_BYTES {
+                    return Step::TooLong;
+                }
+                if avail.len() < 4 + n {
+                    return Step::NeedMore;
+                }
+                let step = match std::str::from_utf8(&avail[4..4 + n]) {
+                    Ok(s) => Step::Request(s.to_string()),
+                    Err(_) => Step::BadUtf8,
+                };
+                *pos += 4 + n;
+                step
+            }
+            Mode::Negotiating => unreachable!("negotiation resolved above"),
+        }
+    }
+}
+
+/// Append one response to a connection's write buffer in its framing.
+pub(crate) fn push_response(mode: Mode, wbuf: &mut Vec<u8>, resp: &str) {
+    match mode {
+        Mode::Binary => {
+            wbuf.extend_from_slice(&(resp.len() as u32).to_be_bytes());
+            wbuf.extend_from_slice(resp.as_bytes());
+        }
+        // Negotiating can only reach here for the degenerate "reply while
+        // still negotiating" path, which never happens: responses are only
+        // produced from parsed requests, and parsing fixes the mode.
+        Mode::Text | Mode::Negotiating => {
+            wbuf.extend_from_slice(resp.as_bytes());
+            wbuf.push(b'\n');
+        }
+    }
+}
+
+/// What one connection sweep concluded.
+struct Sweep {
+    progress: bool,
+    close: bool,
+    idle_evicted: bool,
+}
+
+impl Sweep {
+    fn close_now(progress: bool) -> Sweep {
+        Sweep {
+            progress,
+            close: true,
+            idle_evicted: false,
+        }
+    }
+}
+
+/// Per-connection state machine: nonblocking socket + incremental read
+/// buffer (`rbuf[rpos..]` unparsed) + pending write buffer
+/// (`wbuf[wpos..]` unsent).
+struct Conn {
+    stream: TcpStream,
+    proto: ProtoState,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    last_active: Instant,
+    /// Consecutive sweeps without progress (drives cold-probe skipping).
+    idle_sweeps: u32,
+    /// Peer half-closed its send side (read returned 0).
+    read_closed: bool,
+    /// We decided to finish: flush `wbuf`, then drop the connection.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            proto: ProtoState::new(),
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            last_active: Instant::now(),
+            idle_sweeps: 0,
+            read_closed: false,
+            closing: false,
+        }
+    }
+
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Readiness set this connection currently wants probed.
+    fn interest(&self) -> Interest {
+        let mut interest = Interest::NONE;
+        if !self.read_closed && !self.closing && self.pending_write() < WRITE_HIGH_WATER {
+            interest = interest.with(Interest::READ);
+        }
+        if self.pending_write() > 0 {
+            interest = interest.with(Interest::WRITE);
+        }
+        interest
+    }
+
+    /// One readiness-by-attempt sweep: read what's there, parse + execute
+    /// complete requests in order, flush what fits.
+    fn service(
+        &mut self,
+        engine: &QueryEngine,
+        admission: &AdmissionControl,
+        now: Instant,
+        idle_timeout: Option<Duration>,
+    ) -> Sweep {
+        let interest = self.interest();
+        let mut progress = false;
+
+        // ---- read phase -------------------------------------------------
+        if interest.readable() {
+            let mut swept = 0usize;
+            loop {
+                let old_len = self.rbuf.len();
+                self.rbuf.resize(old_len + READ_CHUNK, 0);
+                match self.stream.read(&mut self.rbuf[old_len..]) {
+                    Ok(0) => {
+                        self.rbuf.truncate(old_len);
+                        self.read_closed = true;
+                        progress = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.rbuf.truncate(old_len + n);
+                        progress = true;
+                        swept += n;
+                        if swept >= READ_SWEEP_MAX {
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                        self.rbuf.truncate(old_len);
+                        break;
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {
+                        self.rbuf.truncate(old_len);
+                    }
+                    Err(_) => {
+                        self.rbuf.truncate(old_len);
+                        return Sweep::close_now(true);
+                    }
+                }
+            }
+        }
+
+        // ---- parse + execute phase --------------------------------------
+        if !self.closing && (self.rpos < self.rbuf.len() || self.read_closed) {
+            // Parse every complete frame first, claiming one admission slot
+            // per request *up front*: a pipelined burst is admitted or shed
+            // as the load it actually is, not serialized through one slot.
+            let mut batch: Vec<(String, Option<AdmissionPermit>)> = Vec::new();
+            let mut fatal: Option<Step> = None;
+            loop {
+                match self
+                    .proto
+                    .next_request(&self.rbuf, &mut self.rpos, self.read_closed)
+                {
+                    Step::Request(req) => {
+                        let permit = admission.try_acquire();
+                        if permit.is_none() {
+                            engine.note_shed();
+                        }
+                        batch.push((req, permit));
+                    }
+                    Step::NeedMore => break,
+                    step @ (Step::TooLong | Step::BadUtf8) => {
+                        fatal = Some(step);
+                        break;
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                progress = true;
+            }
+            for (req, permit) in batch {
+                let resp = if permit.is_some() {
+                    engine.execute(&req)
+                } else {
+                    "BUSY".to_string()
+                };
+                push_response(self.proto.mode(), &mut self.wbuf, &resp);
+                drop(permit);
+                if resp == "BYE" {
+                    // Mirror the blocking server: nothing after QUIT is
+                    // ever parsed or answered.
+                    self.closing = true;
+                    self.rpos = self.rbuf.len();
+                    break;
+                }
+            }
+            match fatal {
+                Some(Step::TooLong) => {
+                    progress = true;
+                    let msg = match self.proto.mode() {
+                        Mode::Binary => "ERR frame too long",
+                        _ => "ERR line too long",
+                    };
+                    push_response(self.proto.mode(), &mut self.wbuf, msg);
+                    self.closing = true;
+                    self.read_closed = true;
+                    self.rpos = self.rbuf.len();
+                }
+                Some(Step::BadUtf8) => {
+                    // The blocking server's `lines()` erred out without a
+                    // response; match it.
+                    progress = true;
+                    self.closing = true;
+                    self.read_closed = true;
+                    self.rpos = self.rbuf.len();
+                }
+                _ => {}
+            }
+            if self.read_closed && !self.closing {
+                // EOF and everything parseable is answered (an incomplete
+                // trailing frame can never complete): flush and finish.
+                self.closing = true;
+            }
+            // Compact the consumed prefix so long-lived pipelined
+            // connections don't accrete their whole history.
+            if self.rpos == self.rbuf.len() {
+                self.rbuf.clear();
+                self.rpos = 0;
+            } else if self.rpos > COMPACT_THRESHOLD {
+                self.rbuf.drain(..self.rpos);
+                self.rpos = 0;
+            }
+        }
+
+        // ---- write phase ------------------------------------------------
+        if self.pending_write() > 0 {
+            loop {
+                match self.stream.write(&self.wbuf[self.wpos..]) {
+                    Ok(0) => return Sweep::close_now(progress),
+                    Ok(n) => {
+                        self.wpos += n;
+                        progress = true;
+                        if self.wpos == self.wbuf.len() {
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => return Sweep::close_now(progress),
+                }
+            }
+            if self.wpos == self.wbuf.len() {
+                self.wbuf.clear();
+                self.wpos = 0;
+            } else if self.wpos > COMPACT_THRESHOLD {
+                self.wbuf.drain(..self.wpos);
+                self.wpos = 0;
+            }
+        }
+
+        if self.closing && self.pending_write() == 0 {
+            return Sweep::close_now(progress);
+        }
+
+        if progress {
+            self.last_active = now;
+            self.idle_sweeps = 0;
+        } else {
+            self.idle_sweeps = self.idle_sweeps.saturating_add(1);
+            if let Some(limit) = idle_timeout {
+                if now.duration_since(self.last_active) >= limit {
+                    return Sweep {
+                        progress: false,
+                        close: true,
+                        idle_evicted: true,
+                    };
+                }
+            }
+        }
+        Sweep {
+            progress,
+            close: false,
+            idle_evicted: false,
+        }
+    }
+}
+
+/// Serve `engine` over TCP with the nonblocking front end until `shutdown`
+/// flips true. Returns the bound address (port 0 supported). Threads are
+/// detached, exactly like the blocking server: flip `shutdown` to stop.
+pub fn serve_nonblocking(
+    engine: Arc<QueryEngine>,
+    addr: &str,
+    shutdown: Arc<AtomicBool>,
+    opts: ServeOptions,
+) -> Result<SocketAddr> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let shards = if opts.shards == 0 {
+        default_service_shards()
+    } else {
+        opts.shards
+    };
+    let admission = AdmissionControl::new(opts.max_pending);
+    let queues: Vec<BoundedQueue<TcpStream>> =
+        (0..shards).map(|_| BoundedQueue::new(ACCEPT_QUEUE_CAP)).collect();
+    for (i, queue) in queues.iter().enumerate() {
+        let engine = Arc::clone(&engine);
+        let queue = queue.clone();
+        let admission = admission.clone();
+        let shutdown = Arc::clone(&shutdown);
+        let idle_timeout = opts.idle_timeout;
+        std::thread::Builder::new()
+            .name(format!("tor-shard-{i}"))
+            .spawn(move || shard_loop(engine, queue, admission, shutdown, idle_timeout))
+            .expect("spawn shard thread");
+    }
+    std::thread::Builder::new()
+        .name("tor-acceptor".to_string())
+        .spawn(move || acceptor_loop(listener, queues, engine, shutdown))
+        .expect("spawn acceptor thread");
+    Ok(local)
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    queues: Vec<BoundedQueue<TcpStream>>,
+    engine: Arc<QueryEngine>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut next = 0usize;
+    let mut backoff = IdleBackoff::new(50, 2000);
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                backoff.reset();
+                // Counted on accept (as the blocking server did) so the
+                // gauge never under-reports a connection awaiting its
+                // shard; shards decrement on every close path.
+                engine.conn_gauge().add(1);
+                let mut stream = stream;
+                'place: loop {
+                    for k in 0..queues.len() {
+                        let q = &queues[(next + k) % queues.len()];
+                        match q.try_push(stream) {
+                            Ok(()) => {
+                                next = (next + k + 1) % queues.len();
+                                break 'place;
+                            }
+                            Err(back) => stream = back,
+                        }
+                    }
+                    // Every shard's handoff queue is full: wait for the
+                    // loops to adopt their backlog rather than dropping
+                    // the connection on the floor.
+                    if shutdown.load(Ordering::Relaxed) {
+                        engine.conn_gauge().sub(1);
+                        break 'place;
+                    }
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => backoff.idle(),
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    for q in &queues {
+        q.close();
+    }
+}
+
+fn shard_loop(
+    engine: Arc<QueryEngine>,
+    queue: BoundedQueue<TcpStream>,
+    admission: AdmissionControl,
+    shutdown: Arc<AtomicBool>,
+    idle_timeout: Option<Duration>,
+) {
+    let mut conns: Slab<Conn> = Slab::new();
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut backoff = IdleBackoff::new(50, 2000);
+    let mut sweep_no: u64 = 0;
+    while !shutdown.load(Ordering::Relaxed) {
+        sweep_no = sweep_no.wrapping_add(1);
+        let mut progress = false;
+        // Adopt newly accepted connections.
+        while let Some(stream) = queue.try_pop() {
+            if stream.set_nonblocking(true).is_err() {
+                engine.conn_gauge().sub(1);
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            conns.insert(Conn::new(stream));
+            progress = true;
+        }
+        let now = Instant::now();
+        conns.collect_tokens(&mut tokens);
+        for &token in &tokens {
+            let Some(conn) = conns.get_mut(token) else {
+                continue;
+            };
+            // Cold-connection probe skipping: long-idle sockets are swept
+            // only every COLD_PROBE_PERIOD-th pass (staggered by token) so
+            // a mostly-idle 10k-connection herd doesn't cost 10k syscalls
+            // per sweep. Connections with queued writes are never cold.
+            let cold = conn.idle_sweeps >= COLD_AFTER_SWEEPS && conn.pending_write() == 0;
+            if cold && (sweep_no.wrapping_add(token.0 as u64)) % COLD_PROBE_PERIOD != 0 {
+                // Unprobed sweeps still advance the idle clock.
+                conn.idle_sweeps = conn.idle_sweeps.saturating_add(1);
+                if let Some(limit) = idle_timeout {
+                    if now.duration_since(conn.last_active) >= limit {
+                        conns.remove(token);
+                        engine.conn_gauge().sub(1);
+                        engine.note_idle_evicted();
+                    }
+                }
+                continue;
+            }
+            let sweep = conn.service(&engine, &admission, now, idle_timeout);
+            progress |= sweep.progress;
+            if sweep.close {
+                conns.remove(token);
+                engine.conn_gauge().sub(1);
+                if sweep.idle_evicted {
+                    engine.note_idle_evicted();
+                }
+                progress = true;
+            }
+        }
+        if progress {
+            backoff.reset();
+        } else {
+            backoff.idle();
+        }
+    }
+    // Shutdown: account for every connection this shard still owns, plus
+    // any stranded in the handoff queue.
+    for token in conns.tokens() {
+        conns.remove(token);
+        engine.conn_gauge().sub(1);
+    }
+    while queue.try_pop().is_some() {
+        engine.conn_gauge().sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(state: &mut ProtoState, buf: &[u8], eof: bool) -> (Vec<String>, Option<Step>) {
+        let mut pos = 0;
+        let mut out = Vec::new();
+        loop {
+            match state.next_request(buf, &mut pos, eof) {
+                Step::Request(r) => out.push(r),
+                Step::NeedMore => return (out, None),
+                terminal => return (out, Some(terminal)),
+            }
+        }
+    }
+
+    #[test]
+    fn text_lines_parse_with_crlf_and_eof_tail() {
+        let mut st = ProtoState::new();
+        let (reqs, term) = feed(&mut st, b"STATS\r\nFIND a => b\nTAIL", true);
+        assert_eq!(reqs, vec!["STATS", "FIND a => b", "TAIL"]);
+        assert_eq!(term, None);
+        assert_eq!(st.mode(), Mode::Text);
+    }
+
+    #[test]
+    fn text_tail_without_eof_waits() {
+        let mut st = ProtoState::new();
+        let (reqs, term) = feed(&mut st, b"STATS\nPART", false);
+        assert_eq!(reqs, vec!["STATS"]);
+        assert_eq!(term, None);
+    }
+
+    #[test]
+    fn binary_negotiation_and_frames() {
+        let mut st = ProtoState::new();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(BINARY_MAGIC);
+        for payload in ["STATS", "QUIT"] {
+            buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+            buf.extend_from_slice(payload.as_bytes());
+        }
+        let (reqs, term) = feed(&mut st, &buf, false);
+        assert_eq!(reqs, vec!["STATS", "QUIT"]);
+        assert_eq!(term, None);
+        assert_eq!(st.mode(), Mode::Binary);
+    }
+
+    #[test]
+    fn one_byte_fragments_reassemble_in_both_modes() {
+        // Text, drip-fed a byte at a time into a growing buffer.
+        let stream = b"RULES LIMIT 2\nSTATS\n";
+        let mut st = ProtoState::new();
+        let mut buf = Vec::new();
+        let mut pos = 0;
+        let mut got = Vec::new();
+        for &b in stream {
+            buf.push(b);
+            loop {
+                match st.next_request(&buf, &mut pos, false) {
+                    Step::Request(r) => got.push(r),
+                    Step::NeedMore => break,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+        assert_eq!(got, vec!["RULES LIMIT 2", "STATS"]);
+
+        // Binary: the magic and the frame header may themselves fragment.
+        let mut bin = Vec::new();
+        bin.extend_from_slice(BINARY_MAGIC);
+        bin.extend_from_slice(&5u32.to_be_bytes());
+        bin.extend_from_slice(b"STATS");
+        let mut st = ProtoState::new();
+        let mut buf = Vec::new();
+        let mut pos = 0;
+        let mut got = Vec::new();
+        for &b in &bin {
+            buf.push(b);
+            loop {
+                match st.next_request(&buf, &mut pos, false) {
+                    Step::Request(r) => got.push(r),
+                    Step::NeedMore => break,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+        assert_eq!(got, vec!["STATS"]);
+        assert_eq!(st.mode(), Mode::Binary);
+    }
+
+    #[test]
+    fn short_first_line_negotiates_text() {
+        // "A\n" is shorter than the magic but the newline proves text.
+        let mut st = ProtoState::new();
+        let (reqs, _) = feed(&mut st, b"A\n", false);
+        assert_eq!(reqs, vec!["A"]);
+        assert_eq!(st.mode(), Mode::Text);
+        // A short EOF'd fragment likewise resolves to text.
+        let mut st = ProtoState::new();
+        let (reqs, _) = feed(&mut st, b"HI", true);
+        assert_eq!(reqs, vec!["HI"]);
+        // Three bytes of the magic alone: still undecidable.
+        let mut st = ProtoState::new();
+        let mut pos = 0;
+        assert_eq!(st.next_request(b"RQL", &mut pos, false), Step::NeedMore);
+        assert_eq!(st.mode(), Mode::Negotiating);
+    }
+
+    #[test]
+    fn oversized_requests_are_rejected_in_both_modes() {
+        let mut st = ProtoState::new();
+        let long = vec![b'x'; MAX_REQUEST_BYTES + 1];
+        let mut pos = 0;
+        assert_eq!(st.next_request(&long, &mut pos, false), Step::TooLong);
+
+        let mut st = ProtoState::new();
+        let mut bin = Vec::new();
+        bin.extend_from_slice(BINARY_MAGIC);
+        bin.extend_from_slice(&((MAX_REQUEST_BYTES as u32) + 1).to_be_bytes());
+        let mut pos = 0;
+        assert_eq!(st.next_request(&bin, &mut pos, false), Step::TooLong);
+        // But a maximal in-bounds line is fine.
+        let mut st = ProtoState::new();
+        let mut ok = vec![b'y'; MAX_REQUEST_BYTES];
+        ok.push(b'\n');
+        let mut pos = 0;
+        match st.next_request(&ok, &mut pos, false) {
+            Step::Request(r) => assert_eq!(r.len(), MAX_REQUEST_BYTES),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_line_rejected_even_with_newline_buffered() {
+        // Fragmentation must not change the verdict: a line one byte past
+        // the cap is TooLong even when its terminating newline arrived in
+        // the same read (the blocking server's capped read never sees the
+        // newline at all, so both servers must reject).
+        let mut st = ProtoState::new();
+        let mut buf = vec![b'x'; MAX_REQUEST_BYTES + 1];
+        buf.push(b'\n');
+        buf.extend_from_slice(b"STATS\n");
+        let mut pos = 0;
+        assert_eq!(st.next_request(&buf, &mut pos, false), Step::TooLong);
+        assert_eq!(pos, 0, "TooLong must not consume");
+    }
+
+    #[test]
+    fn invalid_utf8_is_fatal() {
+        let mut st = ProtoState::new();
+        let (reqs, term) = feed(&mut st, b"STATS\n\xff\xfe\n", false);
+        assert_eq!(reqs, vec!["STATS"]);
+        assert_eq!(term, Some(Step::BadUtf8));
+    }
+
+    #[test]
+    fn push_response_frames_per_mode() {
+        let mut wbuf = Vec::new();
+        push_response(Mode::Text, &mut wbuf, "OK");
+        assert_eq!(wbuf, b"OK\n");
+        let mut wbuf = Vec::new();
+        push_response(Mode::Binary, &mut wbuf, "OK");
+        assert_eq!(&wbuf[..4], &2u32.to_be_bytes());
+        assert_eq!(&wbuf[4..], b"OK");
+    }
+}

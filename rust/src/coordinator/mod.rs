@@ -1,17 +1,23 @@
 //! L3 coordinator: the streaming ARM pipeline (source → sharded ingest with
 //! backpressure → mine → rulegen → build), its configuration and telemetry,
-//! and the query service over the built Trie of Rules.
+//! and the query service over the built Trie of Rules — served by a
+//! nonblocking high-fanout TCP front end ([`frontend`]) with admission
+//! control ([`backpressure::AdmissionControl`]) and a generation-keyed
+//! result cache ([`crate::query::cache`]).
 
 pub mod backpressure;
 pub mod config;
+pub mod frontend;
+pub mod netpoll;
 pub mod pipeline;
 pub mod service;
 pub mod sharding;
 pub mod telemetry;
 
-pub use backpressure::BoundedQueue;
+pub use backpressure::{AdmissionControl, AdmissionPermit, BoundedQueue};
 pub use config::{CounterKind, PipelineConfig};
+pub use frontend::{serve_nonblocking, ServeOptions};
 pub use pipeline::{run, PipelineOutput, Source};
-pub use service::{serve_tcp, QueryEngine};
+pub use service::{serve_tcp, serve_tcp_blocking, QueryEngine};
 pub use sharding::{PartialCounts, ShardRouter};
 pub use telemetry::{PipelineReport, StageReport};

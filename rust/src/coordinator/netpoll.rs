@@ -1,0 +1,244 @@
+//! Minimal, dependency-free event-registry plumbing for the nonblocking
+//! service front end (`coordinator/frontend.rs`).
+//!
+//! The vendor set has no `libc`, so there is no `poll(2)`/`epoll(7)` to
+//! park on. Instead the front end runs *readiness-by-attempt*: every socket
+//! is `set_nonblocking(true)` and a sweep simply attempts the I/O it is
+//! interested in — a `WouldBlock` return **is** the "not ready" signal.
+//! What this module provides is the mio-shaped bookkeeping around that
+//! idea:
+//!
+//! * [`Token`] / [`Slab`] — a stable-index connection registry (mio's
+//!   `Token` + slab idiom) with O(1) insert/remove and free-slot reuse, so
+//!   connection identity survives neighbours closing.
+//! * [`Interest`] — the READ/WRITE readiness set a connection currently
+//!   wants, used to skip attempts that cannot progress (e.g. no read probe
+//!   while the write buffer is over its high-water mark).
+//! * [`IdleBackoff`] — exponential sleep escalation (50 µs → 2 ms) for
+//!   sweeps that made no progress, bounding idle CPU without adding more
+//!   than ~2 ms of latency to a cold wakeup.
+
+use std::time::Duration;
+
+/// Stable identifier of a registered connection (an index into a [`Slab`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Token(pub usize);
+
+/// Readiness interest set: which I/O directions a connection wants probed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest(u8);
+
+impl Interest {
+    pub const NONE: Interest = Interest(0);
+    pub const READ: Interest = Interest(1);
+    pub const WRITE: Interest = Interest(2);
+
+    pub fn with(self, other: Interest) -> Interest {
+        Interest(self.0 | other.0)
+    }
+
+    pub fn readable(self) -> bool {
+        self.0 & Interest::READ.0 != 0
+    }
+
+    pub fn writable(self) -> bool {
+        self.0 & Interest::WRITE.0 != 0
+    }
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// Vec-backed slab with a free list: insert returns a [`Token`] that stays
+/// valid (and is never reassigned to another live entry) until `remove`.
+#[derive(Debug)]
+pub struct Slab<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn insert(&mut self, value: T) -> Token {
+        self.len += 1;
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.slots[i].is_none());
+                self.slots[i] = Some(value);
+                Token(i)
+            }
+            None => {
+                self.slots.push(Some(value));
+                Token(self.slots.len() - 1)
+            }
+        }
+    }
+
+    pub fn remove(&mut self, token: Token) -> Option<T> {
+        let slot = self.slots.get_mut(token.0)?;
+        let value = slot.take()?;
+        self.free.push(token.0);
+        self.len -= 1;
+        Some(value)
+    }
+
+    pub fn get_mut(&mut self, token: Token) -> Option<&mut T> {
+        self.slots.get_mut(token.0)?.as_mut()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Iterate occupied slots in token order.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (Token, &mut T)> {
+        self.slots
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, slot)| slot.as_mut().map(|v| (Token(i), v)))
+    }
+
+    /// Tokens of occupied slots, collected (for remove-while-iterating).
+    pub fn tokens(&self) -> Vec<Token> {
+        let mut out = Vec::new();
+        self.collect_tokens(&mut out);
+        out
+    }
+
+    /// Like [`Slab::tokens`], reusing the caller's buffer so a hot sweep
+    /// loop does not allocate per iteration.
+    pub fn collect_tokens(&self, out: &mut Vec<Token>) {
+        out.clear();
+        out.extend(
+            self.slots
+                .iter()
+                .enumerate()
+                .filter_map(|(i, slot)| slot.as_ref().map(|_| Token(i))),
+        );
+    }
+}
+
+/// Exponential idle backoff for readiness-by-attempt sweeps.
+#[derive(Debug)]
+pub struct IdleBackoff {
+    current_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl IdleBackoff {
+    pub fn new(min_us: u64, max_us: u64) -> Self {
+        assert!(min_us > 0 && min_us <= max_us);
+        IdleBackoff {
+            current_us: min_us,
+            min_us,
+            max_us,
+        }
+    }
+
+    /// A sweep made progress: next idle sleep restarts at the minimum.
+    pub fn reset(&mut self) {
+        self.current_us = self.min_us;
+    }
+
+    /// A sweep made no progress: sleep, then double toward the cap.
+    pub fn idle(&mut self) {
+        std::thread::sleep(Duration::from_micros(self.current_us));
+        self.current_us = (self.current_us * 2).min(self.max_us);
+    }
+
+    /// Current sleep length (exposed for tests; no side effects).
+    pub fn current(&self) -> Duration {
+        Duration::from_micros(self.current_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interest_bits_compose() {
+        let both = Interest::READ.with(Interest::WRITE);
+        assert!(both.readable() && both.writable());
+        assert!(Interest::READ.readable() && !Interest::READ.writable());
+        assert!(!Interest::WRITE.readable() && Interest::WRITE.writable());
+        assert!(Interest::NONE.is_none());
+        assert!(!both.is_none());
+    }
+
+    #[test]
+    fn slab_reuses_freed_slots_and_keeps_neighbours() {
+        let mut slab = Slab::new();
+        let a = slab.insert("a");
+        let b = slab.insert("b");
+        let c = slab.insert("c");
+        assert_eq!(slab.len(), 3);
+        assert_eq!(slab.remove(b), Some("b"));
+        assert_eq!(slab.len(), 2);
+        assert_eq!(slab.remove(b), None, "double remove is None");
+        assert_eq!(slab.get_mut(a), Some(&mut "a"));
+        assert_eq!(slab.get_mut(c), Some(&mut "c"));
+        let d = slab.insert("d");
+        assert_eq!(d, b, "freed slot is reused");
+        let tokens = slab.tokens();
+        assert_eq!(tokens, vec![a, d, c]);
+        let seen: Vec<_> = slab.iter_mut().map(|(t, v)| (t, *v)).collect();
+        assert_eq!(seen, vec![(a, "a"), (d, "d"), (c, "c")]);
+    }
+
+    #[test]
+    fn slab_grows_past_initial_allocations() {
+        let mut slab = Slab::new();
+        let tokens: Vec<Token> = (0..100).map(|i| slab.insert(i)).collect();
+        for (i, t) in tokens.iter().enumerate() {
+            assert_eq!(slab.get_mut(*t), Some(&mut (i as i32)));
+        }
+        for t in tokens.iter().step_by(2) {
+            slab.remove(*t);
+        }
+        assert_eq!(slab.len(), 50);
+        for _ in 0..50 {
+            slab.insert(-1);
+        }
+        assert_eq!(slab.len(), 100);
+        assert_eq!(
+            slab.tokens().len(),
+            100,
+            "free-list reuse must not clobber live slots"
+        );
+    }
+
+    #[test]
+    fn backoff_escalates_and_resets() {
+        let mut b = IdleBackoff::new(50, 2000);
+        assert_eq!(b.current(), Duration::from_micros(50));
+        b.idle();
+        assert_eq!(b.current(), Duration::from_micros(100));
+        for _ in 0..10 {
+            b.idle();
+        }
+        assert_eq!(b.current(), Duration::from_micros(2000), "capped");
+        b.reset();
+        assert_eq!(b.current(), Duration::from_micros(50));
+    }
+}

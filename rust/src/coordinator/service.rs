@@ -42,7 +42,7 @@
 //! batch rebuild at every point in the update stream
 //! (`rust/tests/incremental_parity.rs`).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -50,9 +50,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::frontend::{self, ServeOptions, MAX_REQUEST_BYTES};
 use crate::data::vocab::Vocab;
 use crate::obs::export::TelemetryExporter;
 use crate::obs::registry::{Counter, Gauge, Histogram, MetricsRegistry};
+use crate::query::cache::ResultCache;
 use crate::query::ast::{Pred, Query as RqlQuery, SortSpec};
 use crate::query::exec::{QueryOutput, Row};
 use crate::query::parallel::{default_query_threads, ParallelExecutor};
@@ -134,6 +136,24 @@ impl Verb {
     }
 }
 
+/// Whether a request line may be answered from the result cache: its verb
+/// must be a pure function of (request text, serving view). `INGEST` /
+/// `COMPACT` / `SNAPSHOT` mutate, `STATS` / `METRICS` report live
+/// counters, and `ANALYZE` runs carry wall-clock work numbers — all are
+/// excluded. The key is the *trimmed request line verbatim*; no further
+/// normalization, because RQL item names are case- and
+/// whitespace-sensitive, so any rewriting could merge distinct queries.
+fn cacheable(verb: Verb, line: &str) -> bool {
+    match verb {
+        Verb::Rules | Verb::Explain | Verb::Find | Verb::Top | Verb::Conseq | Verb::Support => {
+            !line
+                .split_whitespace()
+                .any(|t| t.eq_ignore_ascii_case("ANALYZE"))
+        }
+        _ => false,
+    }
+}
+
 /// The engine's observability plane: a metrics registry plus pre-bound
 /// handles for everything the request path touches. Always present (so
 /// `METRICS` works on any engine); `enabled = false` strips the per-query
@@ -155,6 +175,18 @@ struct ServiceObs {
     epoch: Gauge,
     pending_tx: Gauge,
     delta_nodes: Gauge,
+    /// Requests refused with `BUSY` by the front end's admission control.
+    shed_requests: Counter,
+    /// Connections evicted by the front end's idle timeout.
+    idle_evicted_conns: Counter,
+    /// Result-cache accounting (`tor_result_cache_*`); all zero unless the
+    /// engine was built `with_result_cache`.
+    result_cache_hits: Counter,
+    result_cache_misses: Counter,
+    result_cache_evictions: Counter,
+    result_cache_invalidations: Counter,
+    result_cache_bytes: Gauge,
+    result_cache_entries: Gauge,
     exporter: Option<Arc<TelemetryExporter>>,
 }
 
@@ -177,6 +209,14 @@ impl ServiceObs {
             epoch: registry.gauge("tor_epoch"),
             pending_tx: registry.gauge("tor_pending_tx"),
             delta_nodes: registry.gauge("tor_delta_nodes"),
+            shed_requests: registry.counter("tor_shed_requests_total"),
+            idle_evicted_conns: registry.counter("tor_idle_evicted_conns_total"),
+            result_cache_hits: registry.counter("tor_result_cache_hits_total"),
+            result_cache_misses: registry.counter("tor_result_cache_misses_total"),
+            result_cache_evictions: registry.counter("tor_result_cache_evictions_total"),
+            result_cache_invalidations: registry.counter("tor_result_cache_invalidations_total"),
+            result_cache_bytes: registry.gauge("tor_result_cache_bytes"),
+            result_cache_entries: registry.gauge("tor_result_cache_entries"),
             exporter,
             registry,
         }
@@ -199,12 +239,25 @@ impl ServiceObs {
 /// `Arc` under a short lock and run on that pinned snapshot; `INGEST` /
 /// `COMPACT` (available when the engine carries an [`IncrementalTrie`])
 /// replace it atomically.
+/// The swappable serving state. `generation` advances on **every** view
+/// install — INGEST and COMPACT alike — which is what the result cache
+/// keys on. (`MergedView::epoch` is *not* a safe cache key: it only
+/// advances on compaction, while INGEST changes query results without
+/// touching it.) View and generation live under one lock so a reader can
+/// never observe a new view paired with a stale generation or vice versa.
+struct Serving {
+    view: Arc<MergedView>,
+    generation: u64,
+}
+
 pub struct QueryEngine {
     vocab: Vocab,
     queries: AtomicU64,
     exec: ParallelExecutor,
     /// The pinned serving state; swapped whole on ingest/compaction.
-    serving: Mutex<Arc<MergedView>>,
+    serving: Mutex<Serving>,
+    /// Generation-keyed response cache (`--result-cache-mb`; `None` = off).
+    cache: Option<ResultCache>,
     /// The mutable incremental store (None for static engines, e.g. a trie
     /// loaded from disk without its database).
     store: Option<Mutex<IncrementalTrie>>,
@@ -237,7 +290,11 @@ impl QueryEngine {
             vocab,
             queries: AtomicU64::new(0),
             exec,
-            serving: Mutex::new(Arc::new(MergedView::from_trie(trie))),
+            serving: Mutex::new(Serving {
+                view: Arc::new(MergedView::from_trie(trie)),
+                generation: 0,
+            }),
+            cache: None,
             store: None,
             compact_threshold: 0,
             build_threads: 0,
@@ -253,7 +310,11 @@ impl QueryEngine {
             vocab,
             queries: AtomicU64::new(0),
             exec,
-            serving: Mutex::new(view),
+            serving: Mutex::new(Serving {
+                view,
+                generation: 0,
+            }),
+            cache: None,
             store: Some(Mutex::new(store)),
             compact_threshold: 0,
             build_threads: 0,
@@ -273,6 +334,18 @@ impl QueryEngine {
     /// `compact_threshold` / `--compact-threshold`; 0 = manual only).
     pub fn with_compact_threshold(mut self, threshold: usize) -> Self {
         self.compact_threshold = threshold;
+        self
+    }
+
+    /// Attach a generation-keyed result cache bounded to `mb` MiB (config
+    /// key `result_cache_mb` / `--result-cache-mb`; 0 = off). Cacheable
+    /// verbs (`RULES`/`EXPLAIN`/`FIND`/`TOP`/`CONSEQ`/`SUPPORT`, minus
+    /// `ANALYZE` runs) answer repeated request lines from memory; every
+    /// serving-view install invalidates wholesale, so a stale answer is
+    /// never served (`rust/tests/service_fanout.rs` gates byte parity with
+    /// a cache-less engine across INGEST and COMPACT swaps).
+    pub fn with_result_cache(mut self, mb: usize) -> Self {
+        self.cache = (mb > 0).then(|| ResultCache::with_capacity_mb(mb));
         self
     }
 
@@ -308,7 +381,56 @@ impl QueryEngine {
 
     /// Pin the current serving state.
     pub fn view(&self) -> Arc<MergedView> {
-        Arc::clone(&self.serving.lock().unwrap())
+        Arc::clone(&self.serving.lock().unwrap().view)
+    }
+
+    /// Pin the serving view *and* its cache generation atomically (one
+    /// lock), so a cached entry can never be stored or served against the
+    /// wrong snapshot.
+    fn pinned(&self) -> (u64, Arc<MergedView>) {
+        let serving = self.serving.lock().unwrap();
+        (serving.generation, Arc::clone(&serving.view))
+    }
+
+    /// Install a freshly built serving view: swap the `Arc` and advance
+    /// the generation under one lock, then clear the result cache. A query
+    /// racing this install may have pinned the old view and can insert a
+    /// stale-generation entry *after* the clear; such stragglers are
+    /// memory-bounded noise — [`ResultCache::get`] evicts them on contact
+    /// and never serves them.
+    fn install_view(&self, view: Arc<MergedView>) {
+        {
+            let mut serving = self.serving.lock().unwrap();
+            serving.view = view;
+            serving.generation += 1;
+        }
+        if let Some(cache) = &self.cache {
+            let invalidated = cache.clear();
+            if self.obs.enabled {
+                self.obs.result_cache_invalidations.add(invalidated);
+                self.obs.result_cache_bytes.set(0);
+                self.obs.result_cache_entries.set(0);
+            }
+        }
+    }
+
+    /// Live-connection gauge handle for the TCP front ends.
+    pub(crate) fn conn_gauge(&self) -> Gauge {
+        self.obs.active_conns.clone()
+    }
+
+    /// Record one admission-control shed (a `BUSY` response).
+    pub(crate) fn note_shed(&self) {
+        if self.obs.enabled {
+            self.obs.shed_requests.inc();
+        }
+    }
+
+    /// Record one idle-timeout connection eviction.
+    pub(crate) fn note_idle_evicted(&self) {
+        if self.obs.enabled {
+            self.obs.idle_evicted_conns.inc();
+        }
     }
 
     /// The current frozen base snapshot.
@@ -336,24 +458,28 @@ impl QueryEngine {
         let line = line.trim();
         let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
         let cmd = cmd.to_ascii_uppercase();
+        let verb = Verb::of(&cmd);
         let t0 = self.obs.enabled.then(Instant::now);
-        let resp = match cmd.as_str() {
-            "RULES" | "EXPLAIN" => self.cmd_rql(line),
-            "FIND" => self.cmd_find(rest),
-            "TOP" => self.cmd_top(rest),
-            "SUPPORT" => self.cmd_support(rest),
-            "CONSEQ" => self.cmd_conseq(rest),
-            "INGEST" => self.cmd_ingest(rest),
-            "COMPACT" => self.cmd_compact(),
-            "SNAPSHOT" => self.cmd_snapshot(rest),
-            "STATS" => self.cmd_stats(),
-            "METRICS" => self.cmd_metrics(rest),
-            "QUIT" => "BYE".to_string(),
-            other => format!("ERR unknown command `{other}`"),
+        let resp = if self.cache.is_some() && cacheable(verb, line) {
+            self.execute_cached(verb, line, rest)
+        } else {
+            match cmd.as_str() {
+                "RULES" | "EXPLAIN" => self.cmd_rql(line, &self.view()),
+                "FIND" => self.cmd_find(rest, &self.view()),
+                "TOP" => self.cmd_top(rest, &self.view()),
+                "SUPPORT" => self.cmd_support(rest, &self.view()),
+                "CONSEQ" => self.cmd_conseq(rest, &self.view()),
+                "INGEST" => self.cmd_ingest(rest),
+                "COMPACT" => self.cmd_compact(),
+                "SNAPSHOT" => self.cmd_snapshot(rest),
+                "STATS" => self.cmd_stats(),
+                "METRICS" => self.cmd_metrics(rest),
+                "QUIT" => "BYE".to_string(),
+                other => format!("ERR unknown command `{other}`"),
+            }
         };
         if let Some(t0) = t0 {
             let latency = t0.elapsed();
-            let verb = Verb::of(&cmd);
             self.obs.verb_count[verb as usize].inc();
             self.obs.verb_latency[verb as usize].observe_duration(latency);
             if let Some(exporter) = &self.obs.exporter {
@@ -364,14 +490,50 @@ impl QueryEngine {
         resp
     }
 
-    /// Execute a full RQL line through the query engine.
-    fn cmd_rql(&self, line: &str) -> String {
+    /// Cache-aware path for the pure query verbs: pin `(generation, view)`
+    /// once, answer from the cache on a hit, record the rendered response
+    /// on a miss. Hits skip execution but keep full verb accounting (the
+    /// caller's latency/counter block runs either way).
+    fn execute_cached(&self, verb: Verb, line: &str, rest: &str) -> String {
+        let cache = self.cache.as_ref().expect("caller checked cache presence");
+        let (generation, view) = self.pinned();
+        if let Some(hit) = cache.get(generation, line) {
+            if self.obs.enabled {
+                self.obs.result_cache_hits.inc();
+            }
+            return hit.to_string();
+        }
+        if self.obs.enabled {
+            self.obs.result_cache_misses.inc();
+        }
+        let resp = match verb {
+            Verb::Rules | Verb::Explain => self.cmd_rql(line, &view),
+            Verb::Find => self.cmd_find(rest, &view),
+            Verb::Top => self.cmd_top(rest, &view),
+            Verb::Conseq => self.cmd_conseq(rest, &view),
+            Verb::Support => self.cmd_support(rest, &view),
+            _ => unreachable!("cacheable() admits query verbs only"),
+        };
+        // Errors are not cached: they are cheap to recompute and would
+        // otherwise occupy LRU space proportional to client typos.
+        if !resp.starts_with("ERR") {
+            let evicted = cache.insert(generation, line, &resp);
+            if self.obs.enabled {
+                self.obs.result_cache_evictions.add(evicted);
+                self.obs.result_cache_bytes.set(cache.bytes() as i64);
+                self.obs.result_cache_entries.set(cache.len() as i64);
+            }
+        }
+        resp
+    }
+
+    /// Execute a full RQL line through the query engine on a pinned view.
+    fn cmd_rql(&self, line: &str, view: &MergedView) -> String {
         let query = match crate::query::parser::parse(line) {
             Ok(q) => q,
             Err(e) => return format!("ERR {e:#}"),
         };
-        let view = self.view();
-        match self.exec.execute_view(&view, &self.vocab, &query) {
+        match self.exec.execute_view(view, &self.vocab, &query) {
             Err(e) => format!("ERR {e:#}"),
             Ok(QueryOutput::Explain(text)) => {
                 // Self-delimiting like every multi-line response: the
@@ -417,7 +579,7 @@ impl QueryEngine {
             .collect()
     }
 
-    fn cmd_find(&self, rest: &str) -> String {
+    fn cmd_find(&self, rest: &str, view: &MergedView) -> String {
         let Some((a, c)) = rest.split_once("=>") else {
             return "ERR usage: FIND a,b => c".to_string();
         };
@@ -429,7 +591,7 @@ impl QueryEngine {
         if a.iter().any(|i| c.contains(i)) {
             return "ERR overlapping rule sides".to_string();
         }
-        match self.view().find_rule(&Rule::from_ids(a, c)) {
+        match view.find_rule(&Rule::from_ids(a, c)) {
             FindOutcome::Found(m) => format!(
                 "FOUND sup={:.6} conf={:.6} lift={:.4} lev={:.6} conv={:.4}",
                 m.support, m.confidence, m.lift, m.leverage, m.conviction
@@ -441,9 +603,8 @@ impl QueryEngine {
 
     /// Desugar a legacy command straight to the RQL AST (no text
     /// round-trip, so item names never need re-quoting) and execute it.
-    fn run_desugared(&self, query: &RqlQuery) -> Result<Vec<Row>, String> {
-        let view = self.view();
-        match self.exec.execute_view(&view, &self.vocab, query) {
+    fn run_desugared(&self, query: &RqlQuery, view: &MergedView) -> Result<Vec<Row>, String> {
+        match self.exec.execute_view(view, &self.vocab, query) {
             Ok(QueryOutput::Rows(rs)) => Ok(rs.rows),
             Ok(QueryOutput::Explain(_)) => unreachable!("desugared commands never explain"),
             Err(e) => Err(format!("ERR {e:#}")),
@@ -454,7 +615,7 @@ impl QueryEngine {
     /// and runs through the RQL engine (response format unchanged). The
     /// population is every representable rule, so compound-consequent
     /// rules rank too (the pre-RQL command saw stored node-rules only).
-    fn cmd_top(&self, rest: &str) -> String {
+    fn cmd_top(&self, rest: &str, view: &MergedView) -> String {
         let mut parts = rest.split_whitespace();
         let Some(metric) = parts.next().and_then(Metric::parse) else {
             return "ERR usage: TOP <metric> <k>".to_string();
@@ -472,7 +633,7 @@ impl QueryEngine {
             }),
             limit: Some(k),
         };
-        let rows = match self.run_desugared(&query) {
+        let rows = match self.run_desugared(&query, view) {
             Ok(rows) => rows,
             Err(e) => return e,
         };
@@ -489,9 +650,9 @@ impl QueryEngine {
         out
     }
 
-    fn cmd_support(&self, rest: &str) -> String {
+    fn cmd_support(&self, rest: &str, view: &MergedView) -> String {
         match self.parse_items(rest) {
-            Ok(items) if !items.is_empty() => match self.view().support_of(&items) {
+            Ok(items) if !items.is_empty() => match view.support_of(&items) {
                 Some(c) => format!("SUPPORT {c}"),
                 None => "ABSENT".to_string(),
             },
@@ -505,7 +666,7 @@ impl QueryEngine {
     /// same structure `rules_with_consequent` read directly. Desugaring is
     /// AST-level, so item names the RQL surface syntax cannot quote (e.g.
     /// containing `'`) still resolve exactly as they did pre-RQL.
-    fn cmd_conseq(&self, rest: &str) -> String {
+    fn cmd_conseq(&self, rest: &str, view: &MergedView) -> String {
         let item = rest.trim();
         let query = RqlQuery {
             explain: false,
@@ -514,7 +675,7 @@ impl QueryEngine {
             sort: None,
             limit: None,
         };
-        let rows = match self.run_desugared(&query) {
+        let rows = match self.run_desugared(&query, view) {
             Ok(rows) => rows,
             Err(e) => return e,
         };
@@ -589,7 +750,7 @@ impl QueryEngine {
                 Err(e) => suffix = format!(" (auto-compaction failed: {e:#})"),
             }
         }
-        *self.serving.lock().unwrap() = Arc::new(store.view());
+        self.install_view(Arc::new(store.view()));
         if self.obs.enabled {
             self.obs.ingest_batch_tx.observe(txs.len() as u64);
             self.obs.epoch.set(store.epoch() as i64);
@@ -629,7 +790,7 @@ impl QueryEngine {
         let pause_t = self.obs.enabled.then(Instant::now);
         match store.compact(Some(self.exec.pool())) {
             Ok(true) => {
-                *self.serving.lock().unwrap() = Arc::new(store.view());
+                self.install_view(Arc::new(store.view()));
                 if let Some(t0) = pause_t {
                     let pause = t0.elapsed();
                     self.obs.compact_pause_seconds.observe_duration(pause);
@@ -785,6 +946,18 @@ impl QueryEngine {
                 self.obs.verb_count[verb as usize].get()
             ));
         }
+        // Front-end tail (append-only, like the block above): admission
+        // sheds, idle evictions, and the result cache's counters.
+        out.push_str(&format!(
+            " shed={} idle_evicted={} cache_hits={} cache_misses={} cache_evictions={} \
+             cache_entries={}",
+            self.obs.shed_requests.get(),
+            self.obs.idle_evicted_conns.get(),
+            self.obs.result_cache_hits.get(),
+            self.obs.result_cache_misses.get(),
+            self.obs.result_cache_evictions.get(),
+            self.cache.as_ref().map_or(0, |c| c.len())
+        ));
         out
     }
 
@@ -828,7 +1001,27 @@ fn sidecar_path(path: &std::path::Path) -> std::path::PathBuf {
 
 /// Serve the engine over TCP until `shutdown` flips true. Binds `addr`
 /// (e.g. `127.0.0.1:7878`); returns the bound address (port 0 supported).
+///
+/// This is the nonblocking front end (`coordinator/frontend.rs`) with
+/// default options — one acceptor plus auto-sized event-loop shards,
+/// admission control, text/`RQL2` negotiation. Use
+/// [`frontend::serve_nonblocking`] directly to tune shards, the pending
+/// bound, or the idle timeout; [`serve_tcp_blocking`] keeps the original
+/// thread-per-connection server as the parity baseline.
 pub fn serve_tcp(
+    engine: Arc<QueryEngine>,
+    addr: &str,
+    shutdown: Arc<AtomicBool>,
+) -> Result<std::net::SocketAddr> {
+    frontend::serve_nonblocking(engine, addr, shutdown, ServeOptions::default())
+}
+
+/// The original thread-per-connection blocking server. Retained (not
+/// dead code) as the byte-parity baseline the nonblocking front end is
+/// gated against in `benches/service_fanout.rs` and
+/// `rust/tests/service_fanout.rs`, and for minimal embeddings that want
+/// one thread per client.
+pub fn serve_tcp_blocking(
     engine: Arc<QueryEngine>,
     addr: &str,
     shutdown: Arc<AtomicBool>,
@@ -890,10 +1083,37 @@ impl Drop for ConnGuard {
 fn handle_client(stream: TcpStream, engine: &QueryEngine) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        let resp = engine.execute(&line);
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        // Read one line, but never more than the request cap (+1 so an
+        // exactly-at-cap line that *is* terminated still passes): a client
+        // streaming garbage without a newline used to grow this buffer
+        // without bound.
+        buf.clear();
+        let n = reader
+            .by_ref()
+            .take(MAX_REQUEST_BYTES as u64 + 1)
+            .read_until(b'\n', &mut buf)?;
+        if n == 0 {
+            break; // EOF
+        }
+        if !buf.ends_with(b"\n") && buf.len() > MAX_REQUEST_BYTES {
+            writer.write_all(b"ERR line too long\n")?;
+            break; // drop the connection
+        }
+        if buf.last() == Some(&b'\n') {
+            buf.pop();
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+        }
+        // `BufRead::lines` aborted the connection on invalid UTF-8; keep
+        // that behavior (silent close, no response).
+        let Ok(line) = std::str::from_utf8(&buf) else {
+            break;
+        };
+        let resp = engine.execute(line);
         writer.write_all(resp.as_bytes())?;
         writer.write_all(b"\n")?;
         if resp == "BYE" {
@@ -1369,6 +1589,148 @@ mod tests {
             assert!(lines[0].starts_with("STATS"), "{lines:?}");
             assert_eq!(lines[1], "BYE");
         }
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn result_cache_serves_identical_bytes_and_counts() {
+        let cached = engine().with_result_cache(4);
+        let plain = engine();
+        let cmds = [
+            "RULES WHERE conseq = a SORT BY lift DESC LIMIT 5",
+            "FIND f,c => a",
+            "TOP confidence 4",
+            "SUPPORT f,c",
+            "CONSEQ a",
+            "EXPLAIN RULES WHERE conseq = a",
+        ];
+        for cmd in cmds {
+            let first = cached.execute(cmd);
+            let second = cached.execute(cmd);
+            assert_eq!(first, second, "cache changed bytes for `{cmd}`");
+            assert_eq!(first, plain.execute(cmd), "cache diverged on `{cmd}`");
+        }
+        let reg = cached.metrics_registry();
+        assert_eq!(
+            reg.counter("tor_result_cache_hits_total").get(),
+            cmds.len() as u64
+        );
+        assert_eq!(
+            reg.counter("tor_result_cache_misses_total").get(),
+            cmds.len() as u64
+        );
+        assert_eq!(reg.gauge("tor_result_cache_entries").get(), cmds.len() as i64);
+        // Mutating/reporting/ANALYZE verbs bypass the cache entirely.
+        cached.execute("STATS");
+        cached.execute("STATS");
+        cached.execute("EXPLAIN ANALYZE RULES");
+        cached.execute("EXPLAIN ANALYZE RULES");
+        assert_eq!(
+            reg.counter("tor_result_cache_hits_total").get(),
+            cmds.len() as u64,
+            "non-cacheable verbs must not hit"
+        );
+        // Errors are recomputed, not cached.
+        cached.execute("RULES WHERE bogus >= 1");
+        cached.execute("RULES WHERE bogus >= 1");
+        assert_eq!(
+            reg.counter("tor_result_cache_hits_total").get(),
+            cmds.len() as u64
+        );
+    }
+
+    #[test]
+    fn result_cache_invalidates_on_every_view_swap() {
+        // The sharp edge this test pins down: INGEST changes query results
+        // *without* advancing MergedView::epoch, so a cache keyed on the
+        // epoch would serve stale bytes. The generation key must
+        // invalidate on both INGEST and COMPACT swaps.
+        let cached = incremental_engine(2).with_result_cache(4);
+        let plain = incremental_engine(2);
+        let probes = ["RULES", "FIND f,c => a", "SUPPORT f,c", "TOP confidence 4"];
+        let run_both = |label: &str| {
+            for cmd in probes {
+                // Twice on the cached engine: the second answer comes from
+                // the cache and must still match the uncached engine.
+                cached.execute(cmd);
+                assert_eq!(
+                    cached.execute(cmd),
+                    plain.execute(cmd),
+                    "stale cache after {label} on `{cmd}`"
+                );
+            }
+        };
+        run_both("build");
+        cached.execute("INGEST f,c,a,m;f,b");
+        plain.execute("INGEST f,c,a,m;f,b");
+        run_both("INGEST");
+        cached.execute("COMPACT");
+        plain.execute("COMPACT");
+        run_both("COMPACT");
+        let reg = cached.metrics_registry();
+        assert!(
+            reg.counter("tor_result_cache_invalidations_total").get() >= probes.len() as u64,
+            "swaps must invalidate the populated cache"
+        );
+        assert!(reg.counter("tor_result_cache_hits_total").get() >= probes.len() as u64);
+    }
+
+    #[test]
+    fn result_cache_accounting_gauges_track_entries() {
+        // Byte/entry gauges follow the cache; repeated hits on one key
+        // keep exactly one entry and never evict. (LRU eviction itself is
+        // pinned down by `query::cache` unit tests.)
+        let e = engine().with_result_cache(1);
+        for _ in 0..4 {
+            e.execute("RULES LIMIT 3");
+        }
+        let reg = e.metrics_registry();
+        assert_eq!(reg.counter("tor_result_cache_evictions_total").get(), 0);
+        assert_eq!(reg.gauge("tor_result_cache_entries").get(), 1);
+        assert!(reg.gauge("tor_result_cache_bytes").get() > 0);
+    }
+
+    #[test]
+    fn stats_carries_frontend_and_cache_tail() {
+        let e = engine().with_result_cache(2);
+        e.execute("RULES LIMIT 1");
+        e.execute("RULES LIMIT 1");
+        let resp = e.execute("STATS");
+        assert!(resp.contains(" shed=0"), "{resp}");
+        assert!(resp.contains(" idle_evicted=0"), "{resp}");
+        assert!(resp.contains(" cache_hits=1"), "{resp}");
+        assert!(resp.contains(" cache_misses=1"), "{resp}");
+        assert!(resp.contains(" cache_evictions=0"), "{resp}");
+        assert!(resp.contains(" cache_entries=1"), "{resp}");
+        // Cache-less engines report zeros, not missing keys (scrapers see
+        // a fixed schema).
+        let plain = engine();
+        let resp = plain.execute("STATS");
+        assert!(resp.contains(" cache_hits=0"), "{resp}");
+        assert!(resp.contains(" cache_entries=0"), "{resp}");
+    }
+
+    #[test]
+    fn blocking_server_caps_runaway_lines() {
+        use std::io::{BufRead, BufReader, Write};
+        let e = Arc::new(engine());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr =
+            serve_tcp_blocking(Arc::clone(&e), "127.0.0.1:0", Arc::clone(&shutdown)).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        // A well-formed command first, so the cap provably doesn't break
+        // normal lines…
+        stream.write_all(b"SUPPORT f,c\n").unwrap();
+        // …then a newline-free flood one byte past the cap (exactly what
+        // the capped read consumes: a close with unread client bytes
+        // would RST and could clobber the buffered error reply).
+        let junk = vec![b'x'; MAX_REQUEST_BYTES + 1];
+        stream.write_all(&junk).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().map_while(|l| l.ok()).collect();
+        assert_eq!(lines[0], "SUPPORT 3", "{lines:?}");
+        assert_eq!(lines[1], "ERR line too long", "{lines:?}");
+        assert_eq!(lines.len(), 2, "connection must close after the cap");
         shutdown.store(true, Ordering::Relaxed);
     }
 }

@@ -13,7 +13,8 @@ use anyhow::{Context, Result};
 use trie_of_rules::cli::{self, Command, PipelineOpts};
 use trie_of_rules::coordinator::config::CounterKind;
 use trie_of_rules::coordinator::pipeline::{self, PipelineOutput, Source};
-use trie_of_rules::coordinator::service::{serve_tcp, QueryEngine};
+use trie_of_rules::coordinator::frontend::{serve_nonblocking, ServeOptions};
+use trie_of_rules::coordinator::service::QueryEngine;
 use trie_of_rules::obs::export::TelemetryExporter;
 use trie_of_rules::obs::registry::MetricsRegistry;
 use trie_of_rules::query::parallel::{ParallelExecutor, WorkerPool};
@@ -91,6 +92,7 @@ fn run(args: &[String]) -> Result<()> {
                         .with_compact_threshold(opts.config.compact_threshold)
                 }
             }
+            .with_result_cache(opts.config.result_cache_mb)
             .with_observability(Arc::clone(&registry), exporter.clone());
             for cmd in cmds {
                 println!("> {cmd}");
@@ -141,14 +143,36 @@ fn run(args: &[String]) -> Result<()> {
                 QueryEngine::with_incremental(store, vocab, exec)
                     .with_build_threads(report.build_threads)
                     .with_compact_threshold(opts.config.compact_threshold)
+                    .with_result_cache(opts.config.result_cache_mb)
                     .with_observability(Arc::clone(&registry), exporter.clone()),
             );
             eprintln!("query threads: {}", engine.threads());
             if let Some(exporter) = &exporter {
                 eprintln!("telemetry streaming to {}", exporter.path());
             }
+            let serve_opts = ServeOptions {
+                shards: opts.config.service_shards,
+                max_pending: opts.config.max_pending,
+                idle_timeout: (opts.config.idle_timeout_s > 0).then(|| {
+                    std::time::Duration::from_secs(opts.config.idle_timeout_s as u64)
+                }),
+            };
+            let shards = if serve_opts.shards == 0 {
+                trie_of_rules::coordinator::frontend::default_service_shards()
+            } else {
+                serve_opts.shards
+            };
             let shutdown = Arc::new(AtomicBool::new(false));
-            let addr = serve_tcp(engine, &format!("127.0.0.1:{port}"), Arc::clone(&shutdown))?;
+            let addr = serve_nonblocking(
+                engine,
+                &format!("127.0.0.1:{port}"),
+                Arc::clone(&shutdown),
+                serve_opts,
+            )?;
+            eprintln!(
+                "service shards: {shards}, max pending: {}, result cache: {} MiB",
+                opts.config.max_pending, opts.config.result_cache_mb
+            );
             println!("serving on {addr} (Ctrl-C to stop)");
             // Block forever; the process exits on signal.
             loop {

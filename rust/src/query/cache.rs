@@ -1,0 +1,288 @@
+//! Generation-keyed query-result cache for the serving front end.
+//!
+//! The cache memoises the *rendered response string* for a query line, keyed
+//! on the exact request text plus the serving **generation** — a counter the
+//! engine bumps every time it installs a new [`MergedView`] (INGEST swap or
+//! COMPACT swap alike). The compaction `epoch` alone is not a safe key:
+//! INGEST replaces the serving view (and therefore changes query results)
+//! without advancing the epoch, so the engine keys on its own per-swap
+//! generation instead. A stale-generation entry is never served; touching
+//! one evicts it on the spot.
+//!
+//! Size is bounded in bytes (keys + responses + a fixed per-entry estimate)
+//! with least-recently-used eviction. The structure is a plain
+//! `Mutex<Inner>`: the expensive part of a query is execution, not this map,
+//! and a single lock keeps hit/miss/eviction accounting exact for the
+//! observability plane (`tor_result_cache_*` series).
+//!
+//! [`MergedView`]: crate::trie::delta::MergedView
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// Fixed per-entry overhead estimate charged on top of key + response bytes
+/// (map entry, LRU node, `Arc` header, sequence bookkeeping).
+const ENTRY_OVERHEAD: usize = 96;
+
+#[derive(Debug)]
+struct Entry {
+    /// Serving generation the response was computed under.
+    generation: u64,
+    /// Rendered wire response (without the transport's framing/newline).
+    resp: Arc<str>,
+    /// LRU sequence number; also the key into `Inner::order`.
+    seq: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<Arc<str>, Entry>,
+    /// LRU order: lowest sequence number = least recently used.
+    order: BTreeMap<u64, Arc<str>>,
+    next_seq: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    invalidations: u64,
+}
+
+/// Byte-bounded, generation-keyed LRU cache of rendered query responses.
+#[derive(Debug)]
+pub struct ResultCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time counters, read by STATS/tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+}
+
+impl ResultCache {
+    /// Create a cache bounded to `capacity_bytes`. A zero capacity is legal
+    /// but useless (every insert is refused); callers normally gate cache
+    /// construction on a non-zero `result_cache_mb` instead.
+    pub fn new(capacity_bytes: usize) -> Self {
+        ResultCache {
+            capacity: capacity_bytes,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Cache bounded to `mb` mebibytes.
+    pub fn with_capacity_mb(mb: usize) -> Self {
+        ResultCache::new(mb.saturating_mul(1024 * 1024))
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity
+    }
+
+    fn cost(key: &str, resp: &str) -> usize {
+        key.len() + resp.len() + ENTRY_OVERHEAD
+    }
+
+    /// Look up `query` under serving generation `generation`. A hit bumps
+    /// the entry to most-recently-used. An entry recorded under an older
+    /// generation is removed on contact and reported as a miss — swaps
+    /// already clear the cache, but a racing insert from a query pinned to
+    /// the pre-swap view can land *after* that clear, and this check is
+    /// what keeps such a straggler from ever being served.
+    pub fn get(&self, generation: u64, query: &str) -> Option<Arc<str>> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let (old_seq, fresh) = match inner.map.get(query) {
+            Some(e) => (e.seq, e.generation == generation),
+            None => {
+                inner.misses += 1;
+                return None;
+            }
+        };
+        if !fresh {
+            // Stale generation: drop it so it can't shadow a fresh insert.
+            if let Some(key) = inner.order.remove(&old_seq) {
+                if let Some(e) = inner.map.remove(&*key) {
+                    inner.bytes -= Self::cost(&key, &e.resp);
+                }
+            }
+            inner.misses += 1;
+            return None;
+        }
+        let key = inner.order.remove(&old_seq).expect("LRU entry for seq");
+        inner.next_seq += 1;
+        let seq = inner.next_seq;
+        inner.order.insert(seq, Arc::clone(&key));
+        inner.hits += 1;
+        let e = inner.map.get_mut(query).expect("entry just seen");
+        e.seq = seq;
+        Some(Arc::clone(&e.resp))
+    }
+
+    /// Record `resp` for `query` under `generation`, evicting LRU entries
+    /// until the byte bound holds. Returns how many entries were evicted.
+    /// Oversized responses (more than a quarter of capacity) are refused so
+    /// one huge answer cannot wipe the working set.
+    pub fn insert(&self, generation: u64, query: &str, resp: &str) -> u64 {
+        let cost = Self::cost(query, resp);
+        if cost > self.capacity / 4 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let key: Arc<str> = Arc::from(query);
+        if let Some(old) = inner.map.remove(&*key) {
+            inner.order.remove(&old.seq);
+            inner.bytes -= Self::cost(&key, &old.resp);
+        }
+        inner.next_seq += 1;
+        let seq = inner.next_seq;
+        inner.order.insert(seq, Arc::clone(&key));
+        inner.map.insert(
+            key,
+            Entry {
+                generation,
+                resp: Arc::from(resp),
+                seq,
+            },
+        );
+        inner.bytes += cost;
+        let mut evicted = 0u64;
+        while inner.bytes > self.capacity {
+            let (&victim_seq, _) = inner.order.iter().next().expect("bytes>0 implies entries");
+            let victim_key = inner.order.remove(&victim_seq).expect("victim in order");
+            let victim = inner.map.remove(&*victim_key).expect("victim in map");
+            inner.bytes -= Self::cost(&victim_key, &victim.resp);
+            inner.evictions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Drop every entry (called on serving-view swaps). Returns the number
+    /// of entries invalidated.
+    pub fn clear(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.map.len() as u64;
+        inner.map.clear();
+        inner.order.clear();
+        inner.bytes = 0;
+        inner.invalidations += n;
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            invalidations: inner.invalidations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_requires_matching_generation() {
+        let c = ResultCache::new(1 << 20);
+        assert!(c.get(1, "RULES").is_none());
+        c.insert(1, "RULES", "RULES 0");
+        assert_eq!(c.get(1, "RULES").as_deref(), Some("RULES 0"));
+        // Same key under a newer generation: miss, and the stale entry dies.
+        assert!(c.get(2, "RULES").is_none());
+        assert_eq!(c.len(), 0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+    }
+
+    #[test]
+    fn clear_counts_invalidations() {
+        let c = ResultCache::new(1 << 20);
+        c.insert(7, "a", "1");
+        c.insert(7, "b", "2");
+        assert_eq!(c.clear(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.stats().invalidations, 2);
+        assert!(c.get(7, "a").is_none());
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first_and_hits_refresh() {
+        // Capacity fits exactly three minimal entries.
+        let one = ResultCache::cost("k0", "v0");
+        let c = ResultCache::new(3 * one);
+        c.insert(1, "k0", "v0");
+        c.insert(1, "k1", "v1");
+        c.insert(1, "k2", "v2");
+        assert_eq!(c.len(), 3);
+        // Touch k0 so k1 becomes the LRU victim.
+        assert!(c.get(1, "k0").is_some());
+        let evicted = c.insert(1, "k3", "v3");
+        assert_eq!(evicted, 1);
+        assert!(c.get(1, "k1").is_none());
+        assert!(c.get(1, "k0").is_some());
+        assert!(c.get(1, "k2").is_some());
+        assert!(c.get(1, "k3").is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_without_leaking_bytes() {
+        let c = ResultCache::new(1 << 20);
+        c.insert(1, "q", "short");
+        let b1 = c.bytes();
+        c.insert(1, "q", "a considerably longer response body");
+        assert_eq!(c.len(), 1);
+        assert!(c.bytes() > b1);
+        c.insert(1, "q", "short");
+        assert_eq!(c.bytes(), b1);
+        assert_eq!(c.get(1, "q").as_deref(), Some("short"));
+    }
+
+    #[test]
+    fn oversized_responses_are_refused() {
+        let c = ResultCache::new(1024);
+        let big = "x".repeat(512); // > 1024/4 once overhead is added
+        assert_eq!(c.insert(1, "q", &big), 0);
+        assert!(c.is_empty());
+        assert!(c.get(1, "q").is_none());
+    }
+
+    #[test]
+    fn byte_accounting_matches_recomputation() {
+        let c = ResultCache::new(1 << 20);
+        let pairs = [("alpha", "1"), ("beta", "22"), ("gamma", "333")];
+        for (k, v) in pairs {
+            c.insert(3, k, v);
+        }
+        let expect: usize = pairs.iter().map(|(k, v)| ResultCache::cost(k, v)).sum();
+        assert_eq!(c.bytes(), expect);
+        c.get(3, "alpha");
+        assert_eq!(c.bytes(), expect, "hits must not change accounting");
+    }
+}

@@ -29,6 +29,7 @@
 //! `rust/tests/query_parity.rs`.
 
 pub mod ast;
+pub mod cache;
 pub mod exec;
 pub mod parallel;
 pub mod parser;
@@ -41,6 +42,7 @@ use crate::data::vocab::Vocab;
 use crate::trie::trie::TrieOfRules;
 
 pub use ast::{CmpOp, Pred, Query, SortSpec};
+pub use cache::{CacheStats, ResultCache};
 pub use exec::{execute_frame, execute_merged, execute_trie, ExecStats, QueryOutput, ResultSet, Row};
 pub use parallel::{default_query_threads, ParallelExecutor, WorkerPool};
 pub use parser::parse;

@@ -1,0 +1,364 @@
+//! Integration suite for the nonblocking service front end
+//! (`coordinator/frontend.rs`): pipelined ordering, fragmented frames,
+//! text/`RQL2` negotiation, BUSY load-shedding, generation-keyed
+//! result-cache correctness across view swaps, idle-timeout eviction,
+//! oversized-request rejection, and shard-count byte parity against the
+//! blocking baseline — all over real sockets.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use trie_of_rules::coordinator::frontend::{serve_nonblocking, ServeOptions, BINARY_MAGIC};
+use trie_of_rules::coordinator::service::{serve_tcp_blocking, QueryEngine};
+use trie_of_rules::data::paper_example_db;
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::query::parallel::ParallelExecutor;
+use trie_of_rules::trie::delta::IncrementalTrie;
+use trie_of_rules::trie::trie::TrieOfRules;
+
+const READ_TIMEOUT: Duration = Duration::from_secs(20);
+
+fn static_engine() -> QueryEngine {
+    let db = paper_example_db();
+    let fi = fpgrowth(&db, 0.3);
+    let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    QueryEngine::with_threads(trie, db.vocab().clone(), 2)
+}
+
+fn incremental_engine() -> QueryEngine {
+    let db = paper_example_db();
+    let fi = fpgrowth(&db, 0.3);
+    let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    let vocab = db.vocab().clone();
+    let store = IncrementalTrie::new(trie, db, &fi, 0.3).unwrap();
+    QueryEngine::with_incremental(store, vocab, ParallelExecutor::new(2))
+}
+
+fn serve(engine: QueryEngine, opts: ServeOptions) -> (SocketAddr, Arc<AtomicBool>) {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let addr = serve_nonblocking(
+        Arc::new(engine),
+        "127.0.0.1:0",
+        Arc::clone(&shutdown),
+        opts,
+    )
+    .unwrap();
+    (addr, shutdown)
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+    s
+}
+
+/// Write one pipelined text stream (must end in QUIT) and drain the full
+/// response byte stream until the server closes.
+fn text_roundtrip(addr: SocketAddr, wire: &[u8]) -> Vec<u8> {
+    let mut s = connect(addr);
+    s.write_all(wire).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    out
+}
+
+fn frame(payload: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload.as_bytes());
+    out
+}
+
+fn read_frame(s: &mut TcpStream) -> std::io::Result<String> {
+    let mut hdr = [0u8; 4];
+    s.read_exact(&mut hdr)?;
+    let mut payload = vec![0u8; u32::from_be_bytes(hdr) as usize];
+    s.read_exact(&mut payload)?;
+    Ok(String::from_utf8(payload).expect("utf8 payload"))
+}
+
+/// Fetch one counter token (`key=value`) from a fresh STATS connection.
+fn stats_counter(addr: SocketAddr, key: &str) -> u64 {
+    let resp = text_roundtrip(addr, b"STATS\nQUIT\n");
+    let text = String::from_utf8(resp).unwrap();
+    let prefix = format!("{key}=");
+    text.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&prefix))
+        .unwrap_or_else(|| panic!("no {key}= in {text}"))
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn pipelined_responses_arrive_in_request_order() {
+    let (addr, shutdown) = serve(static_engine(), ServeOptions::default());
+    // Distinct single-line responses so order is observable: SUPPORT of
+    // different itemsets, FIND hits and misses, interleaved errors.
+    let wire = b"SUPPORT f\nSUPPORT f,c\nFIND f,c => a\nSUPPORT nosuchitem\nSUPPORT c\nQUIT\n";
+    let resp = text_roundtrip(addr, wire);
+    let lines: Vec<String> = BufReader::new(&resp[..])
+        .lines()
+        .map(|l| l.unwrap())
+        .collect();
+    assert_eq!(lines.len(), 6, "{lines:?}");
+    assert!(lines[0].starts_with("SUPPORT "), "{lines:?}");
+    assert_eq!(lines[1], "SUPPORT 3", "{lines:?}");
+    assert!(lines[2].starts_with("FOUND "), "{lines:?}");
+    assert!(lines[3].starts_with("ERR "), "{lines:?}");
+    assert!(lines[4].starts_with("SUPPORT "), "{lines:?}");
+    assert_eq!(lines[5], "BYE", "{lines:?}");
+    // f alone is at least as frequent as {f,c}: sanity that these are
+    // genuinely the right responses in the right slots, not reordered.
+    let f: u64 = lines[0].strip_prefix("SUPPORT ").unwrap().parse().unwrap();
+    assert!(f >= 3, "{lines:?}");
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn one_byte_text_fragments_reassemble() {
+    let (addr, shutdown) = serve(static_engine(), ServeOptions::default());
+    let mut s = connect(addr);
+    for &b in b"FIND f,c => a\r\nSUPPORT f,c\nQUIT\n" {
+        s.write_all(&[b]).unwrap();
+        s.flush().unwrap();
+    }
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    let lines: Vec<String> = BufReader::new(&out[..]).lines().map(|l| l.unwrap()).collect();
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    assert!(lines[0].starts_with("FOUND "), "{lines:?}");
+    assert_eq!(lines[1], "SUPPORT 3", "{lines:?}");
+    assert_eq!(lines[2], "BYE", "{lines:?}");
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn one_byte_binary_fragments_reassemble() {
+    let (addr, shutdown) = serve(static_engine(), ServeOptions::default());
+    let mut s = connect(addr);
+    let mut wire: Vec<u8> = BINARY_MAGIC.to_vec();
+    wire.extend_from_slice(&frame("SUPPORT f,c"));
+    wire.extend_from_slice(&frame("FIND f,c => a"));
+    // One byte per write splits the magic, every length header, and every
+    // payload across reads.
+    for &b in &wire {
+        s.write_all(&[b]).unwrap();
+        s.flush().unwrap();
+    }
+    assert_eq!(read_frame(&mut s).unwrap(), "SUPPORT 3");
+    assert!(read_frame(&mut s).unwrap().starts_with("FOUND "));
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn binary_negotiation_carries_text_payloads_verbatim() {
+    let (addr, shutdown) = serve(static_engine(), ServeOptions::default());
+    let cmds = [
+        "RULES WHERE conseq = a SORT BY lift DESC LIMIT 5",
+        "SUPPORT f,c",
+        "FIND f,c => a",
+        "RULES WHERE nonsense",
+        "QUIT",
+    ];
+    // Text side: one pipelined stream, full bytes.
+    let mut text_wire = String::new();
+    for c in &cmds {
+        text_wire.push_str(c);
+        text_wire.push('\n');
+    }
+    let text = text_roundtrip(addr, text_wire.as_bytes());
+    // Binary side: same commands framed; payloads joined by '\n' must
+    // reconstruct the text stream exactly (multi-line responses included).
+    let mut s = connect(addr);
+    let mut wire: Vec<u8> = BINARY_MAGIC.to_vec();
+    for c in &cmds {
+        wire.extend_from_slice(&frame(c));
+    }
+    s.write_all(&wire).unwrap();
+    let mut rebuilt = Vec::new();
+    for _ in &cmds {
+        rebuilt.extend_from_slice(read_frame(&mut s).unwrap().as_bytes());
+        rebuilt.push(b'\n');
+    }
+    assert_eq!(rebuilt, text, "binary payloads diverged from text framing");
+    // After BYE the server closes the binary connection too.
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "bytes after BYE frame: {rest:?}");
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn admission_full_sheds_busy_and_counts() {
+    let opts = ServeOptions {
+        shards: 1,
+        max_pending: 2,
+        idle_timeout: None,
+    };
+    let (addr, shutdown) = serve(static_engine(), opts);
+    // 40 identical requests land in one burst; the sweep parses them as
+    // one batch, admission grants 2 permits, the rest must shed BUSY —
+    // in order, without dropping the connection.
+    let mut wire = Vec::new();
+    for _ in 0..40 {
+        wire.extend_from_slice(b"SUPPORT f,c\n");
+    }
+    wire.extend_from_slice(b"QUIT\n");
+    let resp = text_roundtrip(addr, &wire);
+    let lines: Vec<String> = BufReader::new(&resp[..]).lines().map(|l| l.unwrap()).collect();
+    assert_eq!(lines.len(), 41, "{}", lines.len());
+    assert_eq!(lines[40], "BYE");
+    let served = lines[..40].iter().filter(|l| *l == "SUPPORT 3").count();
+    let shed = lines[..40].iter().filter(|l| *l == "BUSY").count();
+    assert_eq!(served + shed, 40, "{lines:?}");
+    assert!(served >= 2, "admission must serve at least the permit cap");
+    assert!(shed >= 1, "40 pipelined requests over cap 2 must shed");
+    // The first request of an idle server always gets a permit.
+    assert_eq!(lines[0], "SUPPORT 3", "{lines:?}");
+    // Shed counter on the metrics plane matches what the client saw.
+    assert_eq!(stats_counter(addr, "shed"), shed as u64);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn result_cache_stays_correct_across_ingest_and_compact_over_tcp() {
+    let opts = ServeOptions {
+        shards: 2,
+        max_pending: 64,
+        idle_timeout: None,
+    };
+    let (addr, shutdown) = serve(incremental_engine().with_result_cache(4), opts);
+    let oracle = incremental_engine();
+    // Each probe runs twice (second hit comes from the cache); every
+    // response must match an uncached oracle engine driven through the
+    // same view swaps. SUPPORT counts change with n, so a stale cache
+    // entry would be visible immediately.
+    let probes = ["SUPPORT f,c", "FIND f,c => a", "RULES WHERE conseq = a"];
+    let steps = ["INGEST f,c,a;f,c", "COMPACT", "INGEST b,p", "COMPACT"];
+    let check = |addr: SocketAddr, oracle: &QueryEngine| {
+        for q in &probes {
+            let expect = oracle.execute(q);
+            for round in 0..2 {
+                let wire = format!("{q}\nQUIT\n");
+                let got = text_roundtrip(addr, wire.as_bytes());
+                let want = format!("{expect}\nBYE\n").into_bytes();
+                assert_eq!(got, want, "probe `{q}` round {round} diverged");
+            }
+        }
+    };
+    check(addr, &oracle);
+    for step in &steps {
+        let wire = format!("{step}\nQUIT\n");
+        let resp = text_roundtrip(addr, wire.as_bytes());
+        let resp = String::from_utf8(resp).unwrap();
+        assert!(resp.starts_with("OK "), "{step}: {resp}");
+        let o = oracle.execute(step);
+        assert!(o.starts_with("OK "), "{step}: {o}");
+        check(addr, &oracle);
+    }
+    // The cache did real work: hits happened, and every swap invalidated.
+    assert!(stats_counter(addr, "cache_hits") > 0);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn idle_connections_are_evicted_and_counted() {
+    let opts = ServeOptions {
+        shards: 1,
+        max_pending: 16,
+        idle_timeout: Some(Duration::from_millis(300)),
+    };
+    let (addr, shutdown) = serve(static_engine(), opts);
+    let mut s = connect(addr);
+    // Say nothing: the server must hang up on its own.
+    let t0 = std::time::Instant::now();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).expect("server should close, not time out");
+    assert!(out.is_empty(), "{out:?}");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(250),
+        "evicted too early: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(stats_counter(addr, "idle_evicted"), 1);
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn oversized_requests_rejected_on_both_servers() {
+    // Nonblocking, text: 64 KiB of junk with no newline.
+    let (addr, shutdown) = serve(static_engine(), ServeOptions::default());
+    let mut s = connect(addr);
+    // One byte past the cap: the server consumes exactly what it reads, so
+    // its close carries no RST (unread bytes at close would clobber the
+    // buffered error reply on loopback).
+    s.write_all(&vec![b'x'; 64 * 1024 + 1]).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    assert_eq!(out, b"ERR line too long\n", "{out:?}");
+    // Nonblocking, binary: a frame header claiming > 64 KiB.
+    let mut s = connect(addr);
+    let mut wire: Vec<u8> = BINARY_MAGIC.to_vec();
+    wire.extend_from_slice(&(1_000_000u32).to_be_bytes());
+    s.write_all(&wire).unwrap();
+    assert_eq!(read_frame(&mut s).unwrap(), "ERR frame too long");
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "{rest:?}");
+    shutdown.store(true, Ordering::Relaxed);
+    // Blocking baseline: same cap, same reply.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let addr = serve_tcp_blocking(
+        Arc::new(static_engine()),
+        "127.0.0.1:0",
+        Arc::clone(&shutdown),
+    )
+    .unwrap();
+    let mut s = connect(addr);
+    s.write_all(&vec![b'y'; 64 * 1024 + 1]).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    assert_eq!(out, b"ERR line too long\n", "{out:?}");
+    shutdown.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn shard_counts_serve_byte_identical_streams() {
+    // One mixed pipelined stream — errors, multi-line responses, EXPLAIN —
+    // replayed against the blocking baseline and the nonblocking front end
+    // at shards 1 and 4; full response byte streams must be identical.
+    let wire = b"SUPPORT f,c\nRULES WHERE conseq = a SORT BY lift DESC LIMIT 5\n\
+FIND f,c => a\nRULES WHERE nonsense\nEXPLAIN RULES WHERE conseq = a\nCONSEQ a\nQUIT\n";
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let addr = serve_tcp_blocking(
+        Arc::new(static_engine()),
+        "127.0.0.1:0",
+        Arc::clone(&shutdown),
+    )
+    .unwrap();
+    let baseline = text_roundtrip(addr, wire);
+    shutdown.store(true, Ordering::Relaxed);
+    assert!(baseline.ends_with(b"BYE\n"), "baseline truncated");
+    for shards in [1usize, 4] {
+        let opts = ServeOptions {
+            shards,
+            max_pending: 64,
+            idle_timeout: None,
+        };
+        let (addr, shutdown) = serve(static_engine(), opts);
+        for round in 0..3 {
+            let got = text_roundtrip(addr, wire);
+            assert_eq!(
+                got, baseline,
+                "shards {shards} round {round} diverged from blocking baseline"
+            );
+        }
+        shutdown.store(true, Ordering::Relaxed);
+    }
+}
