@@ -3,7 +3,10 @@
 
 Mirrors, byte for byte, the rust writers in rust/src/trie/serialize.rs:
 
-* ``tiny_v2.tor`` — the current v2 columnar format (``save_to``),
+* ``tiny_v3.tor`` — the current v3 format (``save_to``): the v2 columnar
+  body with version 3 in the preamble, sealed by a little-endian
+  ``zlib.crc32`` trailer over every preceding byte,
+* ``tiny_v2.tor`` — the legacy v2 columnar format (``save_v2_to``),
 * ``tiny_v1.tor`` — the legacy v1 node-record format (``save_v1``),
 
 for the fixed tiny database below, mined at minsup 0.3 with the canonical
@@ -18,6 +21,7 @@ Run from the repo root:  python3 python/tests/gen_golden_fixtures.py
 """
 
 import struct
+import zlib
 from itertools import combinations
 from pathlib import Path
 
@@ -167,8 +171,8 @@ def col(values, fmt) -> bytes:
     return out
 
 
-def v2_bytes(c) -> bytes:
-    out = preamble(c, 2)
+def columnar_bytes(c, version: int) -> bytes:
+    out = preamble(c, version)
     out += col(c["items"], "<I")
     out += col(c["counts"], "<Q")
     out += col(c["parents"], "<I")
@@ -180,6 +184,15 @@ def v2_bytes(c) -> bytes:
     out += col(c["header_offsets"], "<I")
     out += col(c["header_nodes"], "<I")
     return out
+
+
+def v2_bytes(c) -> bytes:
+    return columnar_bytes(c, 2)
+
+
+def v3_bytes(c) -> bytes:
+    body = columnar_bytes(c, 3)
+    return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
 
 
 def v1_bytes(c) -> bytes:
@@ -197,6 +210,7 @@ def main():
     c = build_columns()
     fixtures = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures"
     fixtures.mkdir(parents=True, exist_ok=True)
+    (fixtures / "tiny_v3.tor").write_bytes(v3_bytes(c))
     (fixtures / "tiny_v2.tor").write_bytes(v2_bytes(c))
     (fixtures / "tiny_v1.tor").write_bytes(v1_bytes(c))
     print(f"nodes (incl. root): {len(c['items'])}")
@@ -205,7 +219,10 @@ def main():
     print(f"counts:  {c['counts']}")
     print(f"parents: {c['parents']}")
     print(f"depths:  {c['depths']}")
-    print(f"v2: {len(v2_bytes(c))} bytes, v1: {len(v1_bytes(c))} bytes")
+    print(
+        f"v3: {len(v3_bytes(c))} bytes, v2: {len(v2_bytes(c))} bytes, "
+        f"v1: {len(v1_bytes(c))} bytes"
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,654 @@
+#!/usr/bin/env python3
+"""Protocol oracle for the durability plane (PR 8).
+
+This container has no Rust toolchain, so — following the repo's verify
+pattern — the durability protocol's decision logic is ported to Python
+and driven through randomized crash/fault sweeps against brute-force
+reference states, demanding exact equality.
+
+What is ported (and must be kept in lock-step with the Rust):
+
+* ``util/fsio.rs`` (``MemVfs``)  — the filesystem crash model: synced
+  bytes survive, an unsynced appended suffix survives as a torn prefix,
+  an unsynced rewrite keeps either the old synced content or a torn
+  prefix of the new, rename is atomic + durable, unsynced creates are
+  dropped, and a kill -9 can be injected at an exact op index.
+* ``coordinator/wal.rs``        — the exact WAL byte format (header
+  ``TORW|ver|start_seq|crc32``; frames ``len|crc32|payload`` with
+  ``seq|epoch|kind|body``; crc32 == zlib), the torn-tail-tolerant
+  sequence-checked reader, the fsync policies, truncation, and the
+  atomic ``rewrite`` recovery uses instead of a raw reopen.
+* ``coordinator/durability.rs`` — cold start (checkpoint 0 + manifest +
+  fresh log), the 52-byte manifest, WAL-append-before-apply-before-ack
+  ingest, the COMPACT checkpoint sequence (barrier record, forced sync,
+  checkpoint pair, atomic manifest swap as the single commit point, log
+  truncation, best-effort GC), degraded mode on any WAL/checkpoint
+  failure, the shutdown flush, and the full recovery algorithm
+  (manifest -> checkpoint -> replay seq > wal_seq with cut/last_seq
+  tracking -> re-checkpoint when compacts replayed -> tail rewrite).
+
+The sweep crashes (or injects a one-shot fault) at every sampled op
+index x {always, batch:2, never} and asserts, per run:
+
+1. the recovered state equals the reference state of some whole-record
+   prefix of the acknowledged history (+ at most the one in-flight op);
+2. that prefix is >= the acked-durable floor for the policy;
+3. a clean shutdown (flush) loses nothing;
+4. a second recovery is byte-identical (idempotence);
+5. ops acknowledged *after* recovery and explicitly flushed survive the
+   next crash — the torn-tail-shadowing probe. ``--reopen-bug`` swaps
+   the recovery rewrite for the pre-fix raw reopen and must make this
+   leg fail, which validates the oracle's teeth.
+
+Usage: python3 python/tests/oracle_durability.py [scenarios] [--reopen-bug]
+"""
+
+import json
+import random
+import struct
+import sys
+import zlib
+
+DIR = "/dur"
+MINSUP_BITS = struct.unpack("<Q", struct.pack("<d", 0.3))[0]
+NUM_ITEMS = 6
+WAL_MAGIC = b"TORW"
+PAYLOAD_MIN = 17
+FRAME_MAX = 1 << 28
+
+
+def crc32(b):
+    return zlib.crc32(b) & 0xFFFFFFFF
+
+
+class Crash(Exception):
+    """kill -9: the filesystem is down until recover()."""
+
+
+class Injected(Exception):
+    """One-shot injected I/O fault (ENOSPC-style)."""
+
+
+class Degraded(Exception):
+    """The plane refused the mutation (read-only degraded mode)."""
+
+
+class Corrupt(Exception):
+    """A durable artifact failed validation — a protocol violation."""
+
+
+# --------------------------------------------------------------------------
+# Filesystem model (port of util/fsio.rs MemVfs)
+# --------------------------------------------------------------------------
+class Fs:
+    def __init__(self, seed):
+        self.files = {}  # path -> [durable: bytes, logical: bytes]
+        self.ops = 0
+        self.crash_at = None
+        self.fail_at = None
+        self.crashed = False
+        self.rng = random.Random(seed)
+
+    def tick(self):
+        if self.crashed:
+            raise Crash()
+        self.ops += 1
+        if self.crash_at is not None and self.ops == self.crash_at:
+            self.crash_now()
+            raise Crash()
+        if self.fail_at is not None and self.ops == self.fail_at:
+            self.fail_at = None
+            raise Injected()
+
+    def crash_now(self):
+        self.crashed = True
+        self.crash_at = None
+        for path in list(self.files):
+            d, l = self.files[path]
+            if l != d:
+                if len(l) >= len(d) and l[: len(d)] == d:
+                    # Pure append since the last sync: torn prefix of the
+                    # unsynced suffix survives.
+                    keep = self.rng.randrange(len(l) - len(d) + 1)
+                    d = l[: len(d) + keep]
+                elif self.rng.randrange(2) == 0:
+                    pass  # unsynced rewrite: old synced content survives
+                else:
+                    d = l[: self.rng.randrange(len(l) + 1)]
+            self.files[path] = [d, d]
+        # Zero-length survivors of an unsynced create are dropped.
+        self.files = {p: st for p, st in self.files.items() if st[0]}
+
+    def recover(self):
+        self.crashed = False
+        self.crash_at = None
+        for st in self.files.values():
+            st[1] = st[0]
+
+    def create(self, path):
+        self.tick()
+        d = self.files.get(path, [b"", b""])[0]
+        self.files[path] = [d, b""]
+
+    def append(self, path, data):
+        self.tick()
+        st = self.files.setdefault(path, [b"", b""])
+        st[1] = st[1] + data
+
+    def sync(self, path):
+        self.tick()
+        st = self.files[path]
+        st[0] = st[1]
+
+    def rename(self, src, dst):
+        self.tick()
+        st = self.files.pop(src)
+        self.files[dst] = [st[1], st[1]]  # atomic + durable
+
+    def remove(self, path):
+        self.tick()
+        self.files.pop(path, None)
+
+    def exists(self, path):
+        return path in self.files
+
+    def read(self, path):
+        self.tick()
+        if path not in self.files:
+            raise Corrupt(f"missing file {path}")
+        return self.files[path][1]
+
+
+def atomic_write(fs, path, data):
+    tmp = path + ".tmp"
+    fs.create(tmp)
+    fs.append(tmp, data)
+    fs.sync(tmp)
+    fs.rename(tmp, path)
+
+
+# --------------------------------------------------------------------------
+# WAL (port of coordinator/wal.rs); ops are ("i", [tx, ...]) or ("c",)
+# --------------------------------------------------------------------------
+def wal_header(start_seq):
+    h = WAL_MAGIC + struct.pack("<IQ", 1, start_seq)
+    return h + struct.pack("<I", crc32(h))
+
+
+def encode_frame(seq, epoch, op):
+    payload = struct.pack("<QQ", seq, epoch)
+    if op[0] == "i":
+        payload += b"\x01" + struct.pack("<I", len(op[1]))
+        for tx in op[1]:
+            payload += struct.pack("<I", len(tx))
+            payload += b"".join(struct.pack("<I", it) for it in tx)
+    else:
+        payload += b"\x02"
+    return struct.pack("<II", len(payload), crc32(payload)) + payload
+
+
+def decode_payload(p):
+    if len(p) < PAYLOAD_MIN:
+        return None
+    seq, epoch = struct.unpack("<QQ", p[:16])
+    kind, body = p[16], p[17:]
+    if kind == 2:
+        return (seq, epoch, ("c",)) if not body else None
+    if kind != 1:
+        return None
+    pos = 0
+
+    def u32():
+        nonlocal pos
+        if len(body) - pos < 4:
+            raise ValueError
+        v = struct.unpack_from("<I", body, pos)[0]
+        pos += 4
+        return v
+
+    try:
+        txs = [[u32() for _ in range(u32())] for _ in range(u32())]
+    except ValueError:
+        return None
+    if pos != len(body):
+        return None
+    return (seq, epoch, ("i", txs))
+
+
+def read_wal(fs, path):
+    b = fs.read(path)
+    if len(b) < 20 or b[:4] != WAL_MAGIC:
+        raise Corrupt("wal header truncated or bad magic")
+    ver, start_seq = struct.unpack("<IQ", b[4:16])
+    if ver != 1 or struct.unpack("<I", b[16:20])[0] != crc32(b[:16]):
+        raise Corrupt("wal header version/crc")
+    records, pos, expect = [], 20, start_seq
+    while len(b) - pos >= 8:
+        ln, crc = struct.unpack("<II", b[pos : pos + 8])
+        if ln < PAYLOAD_MIN or ln > FRAME_MAX or len(b) - pos - 8 < ln:
+            break  # torn or garbage tail
+        payload = b[pos + 8 : pos + 8 + ln]
+        if crc32(payload) != crc:
+            break
+        rec = decode_payload(payload)
+        if rec is None or rec[0] != expect:
+            break
+        expect += 1
+        pos += 8 + ln
+        records.append(rec)
+    return start_seq, records
+
+
+class Wal:
+    def __init__(self, fs, path, policy, next_seq):
+        self.fs, self.path, self.policy = fs, path, policy
+        self.next_seq = next_seq
+        self.unsynced = 0
+
+    @classmethod
+    def create(cls, fs, path, policy, start_seq):
+        atomic_write(fs, path, wal_header(start_seq))
+        fs.tick()  # open for append
+        return cls(fs, path, policy, start_seq)
+
+    @classmethod
+    def rewrite(cls, fs, path, policy, start_seq, records):
+        data = wal_header(start_seq)
+        for i, (seq, epoch, op) in enumerate(records):
+            assert seq == start_seq + i, "rewrite records not contiguous"
+            data += encode_frame(seq, epoch, op)
+        atomic_write(fs, path, data)
+        fs.tick()  # open for append
+        return cls(fs, path, policy, start_seq + len(records))
+
+    @classmethod
+    def reopen_buggy(cls, fs, path, policy, next_seq):
+        # Pre-fix behavior: raw open-for-append over the survived file,
+        # torn tail and all. Only reachable with --reopen-bug, where the
+        # post-recovery probe must catch the shadowed-records loss.
+        fs.tick()
+        return cls(fs, path, policy, next_seq)
+
+    def append(self, epoch, op):
+        seq = self.next_seq
+        self.fs.append(self.path, encode_frame(seq, epoch, op))
+        if self.policy == "always":
+            self.sync()
+        elif self.policy.startswith("batch:"):
+            self.unsynced += 1
+            if self.unsynced >= int(self.policy[6:]):
+                self.sync()
+        self.next_seq = seq + 1
+        return seq
+
+    def sync(self):
+        self.fs.sync(self.path)
+        self.unsynced = 0
+
+    def truncate(self):
+        atomic_write(self.fs, self.path, wal_header(self.next_seq))
+        self.fs.tick()  # open for append
+        self.unsynced = 0
+
+
+# --------------------------------------------------------------------------
+# Store model: the trie is a deterministic function of the cumulative rows
+# (validated by the PR 5 oracle + incremental_parity.rs), so the abstract
+# state (base rows, pending rows, epoch, compactions) is what recovery
+# must reproduce. ingest normalizes like TransactionDb::push_ids; compact
+# folds pending into base and bumps epoch (trie/delta.rs).
+# --------------------------------------------------------------------------
+def norm(tx):
+    return sorted(set(tx))
+
+
+class Store:
+    def __init__(self, rows, epoch=0, compactions=0):
+        self.base = [norm(t) for t in rows]
+        self.pending = []
+        self.epoch = epoch
+        self.compactions = compactions
+
+    def ingest(self, txs):
+        self.pending.extend(norm(t) for t in txs)
+
+    def compact(self):
+        if not self.pending:
+            return False
+        self.base.extend(self.pending)
+        self.pending = []
+        self.epoch += 1
+        self.compactions += 1
+        return True
+
+    def state(self):
+        return (
+            tuple(map(tuple, self.base)),
+            tuple(map(tuple, self.pending)),
+            self.epoch,
+            self.compactions,
+        )
+
+
+# --------------------------------------------------------------------------
+# Manifest + checkpoints (port of coordinator/durability.rs)
+# --------------------------------------------------------------------------
+def manifest_bytes(m):
+    body = b"TORM" + struct.pack(
+        "<IQQQQQ", 1, m["ckpt"], m["epoch"], m["compactions"], m["minsup"], m["wal_seq"]
+    )
+    return body + struct.pack("<I", crc32(body))
+
+
+def manifest_load(fs, path):
+    b = fs.read(path)
+    if len(b) != 52 or b[:4] != b"TORM":
+        raise Corrupt("manifest size/magic")
+    if struct.unpack("<I", b[48:52])[0] != crc32(b[:48]):
+        raise Corrupt("manifest crc")
+    ver, ckpt, epoch, compactions, minsup, wal_seq = struct.unpack("<IQQQQQ", b[4:48])
+    if ver != 1:
+        raise Corrupt("manifest version")
+    return {
+        "ckpt": ckpt,
+        "epoch": epoch,
+        "compactions": compactions,
+        "minsup": minsup,
+        "wal_seq": wal_seq,
+    }
+
+
+def ckpt_tor(i):
+    return f"{DIR}/ckpt-{i}.tor"
+
+
+def ckpt_db(i):
+    return f"{DIR}/ckpt-{i}.db"
+
+
+def write_checkpoint(fs, i, store):
+    data = json.dumps({"rows": store.base}).encode()
+    atomic_write(fs, ckpt_tor(i), data)
+    atomic_write(fs, ckpt_db(i), data)
+
+
+def load_checkpoint(fs, i):
+    tor = json.loads(fs.read(ckpt_tor(i)))
+    db = json.loads(fs.read(ckpt_db(i)))
+    if tor != db:
+        raise Corrupt("checkpoint pair mismatch")
+    return tor["rows"]
+
+
+def remove_checkpoint(fs, i):
+    for p in (ckpt_tor(i), ckpt_db(i)):
+        try:  # best-effort GC, like Rust's `let _ = vfs.remove(..)`
+            fs.remove(p)
+        except (Injected, Crash):
+            pass
+
+
+class Plane:
+    def __init__(self, fs, policy, wal, manifest):
+        self.fs, self.policy = fs, policy
+        self.wal = wal
+        self.manifest = manifest
+        self.degraded = False
+
+    def log_ingest(self, store, txs):
+        if self.degraded:
+            raise Degraded()
+        try:
+            self.wal.append(store.epoch, ("i", [list(t) for t in txs]))
+        except Injected:
+            self.degraded = True
+            raise Degraded()
+
+    def log_compact_and_checkpoint(self, store):
+        if self.degraded:
+            raise Degraded()
+        try:
+            self._checkpoint(store)
+        except Injected:
+            self.degraded = True
+            raise Degraded()
+
+    def _checkpoint(self, store):
+        self.wal.append(store.epoch, ("c",))
+        self.wal.sync()
+        superseded = self.wal.next_seq - 1
+        m2 = {
+            "ckpt": self.manifest["ckpt"] + 1,
+            "epoch": store.epoch,
+            "compactions": store.compactions,
+            "minsup": MINSUP_BITS,
+            "wal_seq": superseded,
+        }
+        write_checkpoint(self.fs, m2["ckpt"], store)
+        atomic_write(self.fs, f"{DIR}/MANIFEST", manifest_bytes(m2))
+        self.wal.truncate()
+        old = self.manifest["ckpt"]
+        self.manifest = m2
+        remove_checkpoint(self.fs, old)
+
+    def shutdown_flush(self):
+        if self.degraded:
+            return
+        self.wal.sync()
+
+
+def open_or_recover(fs, policy, base_rows, reopen_bug=False):
+    fs.tick()  # create_dir_all
+    manifest_path = f"{DIR}/MANIFEST"
+    wal_path = f"{DIR}/wal.log"
+    if not fs.exists(manifest_path):
+        store = Store(base_rows)
+        m = {"ckpt": 0, "epoch": 0, "compactions": 0, "minsup": MINSUP_BITS, "wal_seq": 0}
+        write_checkpoint(fs, 0, store)
+        atomic_write(fs, manifest_path, manifest_bytes(m))
+        wal = Wal.create(fs, wal_path, policy, 1)
+        return Plane(fs, policy, wal, m), store, 0
+
+    m = manifest_load(fs, manifest_path)
+    store = Store(load_checkpoint(fs, m["ckpt"]), m["epoch"], m["compactions"])
+    last_seq = cut = m["wal_seq"]
+    records = []
+    replayed_ing = replayed_cmp = 0
+    if fs.exists(wal_path):
+        start_seq, records = read_wal(fs, wal_path)
+        last_seq = max(last_seq, max(0, start_seq - 1))
+        for seq, _epoch, op in records:
+            last_seq = max(last_seq, seq)
+            if seq <= m["wal_seq"]:
+                continue  # superseded by the checkpoint
+            if op[0] == "i":
+                replayed_ing += 1
+                store.ingest(op[1])
+            else:
+                replayed_cmp += 1
+                cut = seq
+                store.compact()
+    if replayed_cmp > 0:
+        m2 = {
+            "ckpt": m["ckpt"] + 1,
+            "epoch": store.epoch,
+            "compactions": store.compactions,
+            "minsup": MINSUP_BITS,
+            "wal_seq": cut,
+        }
+        write_checkpoint(fs, m2["ckpt"], store)
+        atomic_write(fs, manifest_path, manifest_bytes(m2))
+        remove_checkpoint(fs, m["ckpt"])
+        m = m2
+    if not store.pending:
+        wal = Wal.create(fs, wal_path, policy, last_seq + 1)
+    elif reopen_bug:
+        wal = Wal.reopen_buggy(fs, wal_path, policy, last_seq + 1)
+    else:
+        tail = [r for r in records if r[0] > cut]
+        wal = Wal.rewrite(fs, wal_path, policy, cut + 1, tail)
+    return Plane(fs, policy, wal, m), store, replayed_ing
+
+
+# --------------------------------------------------------------------------
+# Chaos driver
+# --------------------------------------------------------------------------
+def random_tx(rng):
+    return [rng.randrange(NUM_ITEMS) for _ in range(1 + rng.randrange(4))]
+
+
+def scenario(seed):
+    rng = random.Random(seed)
+    base = [random_tx(rng) for _ in range(8 + rng.randrange(6))]
+    ops = []
+    for _ in range(5 + rng.randrange(3)):
+        if rng.randrange(10) < 7:
+            ops.append(("i", [random_tx(rng) for _ in range(1 + rng.randrange(3))]))
+        else:
+            ops.append(("c",))
+    return base, ops, rng
+
+
+def reference_states(base, ops):
+    """State after each whole-record prefix of `ops` (index = length)."""
+    s = Store(base)
+    states = [s.state()]
+    for op in ops:
+        if op[0] == "i":
+            s.ingest(op[1])
+        else:
+            s.compact()
+        states.append(s.state())
+    return states
+
+
+def run_one(seed, policy, crash_at, fail_at, reopen_bug, errors):
+    tag = f"[policy {policy} seed {seed:#x} crash@{crash_at} fault@{fail_at}]"
+    base, ops, rng = scenario(seed)
+    fs = Fs(seed ^ 0xC4A5)
+    fs.crash_at = crash_at
+    fs.fail_at = fail_at
+
+    acked, floor, inflight, outcome = [], 0, None, "cold-fail"
+    plane = store = None
+    try:
+        plane, store, _ = open_or_recover(fs, policy, base, reopen_bug)
+    except (Crash, Injected):
+        pass  # the injected crash/fault landed inside cold start
+    if plane is not None:
+        try:
+            for op in ops:
+                if op[0] == "i":
+                    inflight = op
+                    plane.log_ingest(store, op[1])
+                    inflight = None
+                    acked.append(op)
+                    if plane.wal.unsynced == 0 and policy != "never":
+                        floor = len(acked)
+                    store.ingest(op[1])
+                else:
+                    if not store.pending:
+                        continue  # the service logs no no-op compacts
+                    store.compact()
+                    inflight = op
+                    plane.log_compact_and_checkpoint(store)
+                    inflight = None
+                    acked.append(op)
+                    floor = len(acked)  # a checkpoint force-synced the log
+            outcome = "done"
+            if crash_at is None and fail_at is None:
+                plane.shutdown_flush()
+                floor = len(acked)
+        except Crash:
+            outcome = "crash"
+        except Degraded:
+            outcome = "degraded"
+    clean_ops = fs.ops
+
+    # kill -9, then reboot. Recovery must always succeed.
+    if not fs.crashed:
+        fs.crash_now()
+    fs.recover()
+    fs.fail_at = None
+    try:
+        plane2, store2, _ = open_or_recover(fs, policy, base, reopen_bug)
+    except (Crash, Injected, Corrupt) as e:
+        errors.append(f"{tag} recovery failed: {e!r}")
+        return clean_ops
+
+    # 1+2: whole-record prefix, bounded below by the durable floor.
+    cands = reference_states(base, acked + ([inflight] if inflight else []))
+    got = store2.state()
+    if got not in cands:
+        errors.append(f"{tag} recovered state matches no whole-record prefix (torn state)")
+        return clean_ops
+    k = cands.index(got)
+    if k < floor:
+        errors.append(f"{tag} acked records lost: prefix {k} < floor {floor} ({outcome})")
+    # 3: a clean, flushed shutdown loses nothing.
+    if crash_at is None and fail_at is None and outcome == "done" and k != len(acked):
+        errors.append(f"{tag} clean shutdown lost records: prefix {k} of {len(acked)}")
+
+    # 4: idempotence — a second boot reproduces the first.
+    try:
+        plane3, store3, _ = open_or_recover(fs, policy, base, reopen_bug)
+    except (Crash, Injected, Corrupt) as e:
+        errors.append(f"{tag} second recovery failed: {e!r}")
+        return clean_ops
+    if store3.state() != got:
+        errors.append(f"{tag} second recovery diverged from the first")
+
+    # 5: the torn-tail-shadowing probe — ops acked after recovery and
+    # explicitly flushed must survive the next crash in full.
+    post = [("i", [random_tx(rng)]) for _ in range(2)]
+    try:
+        for op in post:
+            plane3.log_ingest(store3, op[1])
+            store3.ingest(op[1])
+        plane3.shutdown_flush()
+    except (Crash, Injected, Degraded) as e:
+        errors.append(f"{tag} post-recovery ops failed on a healthy fs: {e!r}")
+        return clean_ops
+    fs.crash_now()
+    fs.recover()
+    try:
+        _plane4, store4, _ = open_or_recover(fs, policy, base, reopen_bug)
+    except (Crash, Injected, Corrupt) as e:
+        errors.append(f"{tag} post-recovery reboot failed: {e!r}")
+        return clean_ops
+    if store4.state() != store3.state():
+        lost = len(store3.state()[1]) - len(store4.state()[1])
+        errors.append(f"{tag} post-recovery acked+flushed ingests lost ({lost} tx shadowed)")
+    return clean_ops
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    n_scen = int(args[0]) if args else 30
+    reopen_bug = "--reopen-bug" in sys.argv
+    policies = ["always", "batch:2", "never"]
+    errors, runs = [], 0
+    for i in range(n_scen):
+        seed = 0xD00D + i * 7919
+        for policy in policies:
+            total = run_one(seed, policy, None, None, reopen_bug, errors)
+            runs += 1
+            step = max(1, total // 24)
+            for k in range(1, total + 2, step):  # crash sweep
+                run_one(seed, policy, k, None, reopen_bug, errors)
+                runs += 1
+            for k in range(3, total + 2, max(1, total // 6)):  # fault sweep
+                run_one(seed, policy, None, k, reopen_bug, errors)
+                runs += 1
+    mode = " (reopen-bug mode)" if reopen_bug else ""
+    print(f"{runs} chaos runs across {n_scen} scenarios x {policies}{mode}: "
+          f"{len(errors)} mismatches")
+    for e in errors[:15]:
+        print("MISMATCH:", e)
+    if len(errors) > 15:
+        print(f"... and {len(errors) - 15} more")
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+//! Durability plane benchmarks (DESIGN.md §16): what crash safety costs.
+//!
+//! Three measurements, each a row family in `BENCH_durability.json`:
+//!
+//! 1. **WAL append throughput** per fsync policy (`always`, `batch:8`,
+//!    `never`) against the real filesystem — the price an acknowledged
+//!    INGEST pays for its durability guarantee. Fixed 4-transaction
+//!    batches; the run ends with a final `sync` so every policy finishes
+//!    with the same on-disk state.
+//! 2. **Recovery time vs WAL length**: a durability directory is seeded
+//!    with a cold-start checkpoint plus N logged INGESTs, then reopened;
+//!    the timed section is `open_or_recover` alone (checkpoint load +
+//!    tail replay). The base-build closure bails, proving the warm path
+//!    never re-mines.
+//! 3. **Degraded-mode shed rate**: with a fault injected into the WAL
+//!    file the service flips read-only; the bench times the INGEST
+//!    refusal path (shed rate) and the query path while degraded —
+//!    serving must stay hot when the disk is gone.
+//!
+//! Results go to the console, `bench_results/durability.json`, and the
+//! cross-PR snapshot `BENCH_durability.json`. Flags (after `--`):
+//! `--test` shrinks everything for the CI smoke.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use trie_of_rules::bench_support::report::{BenchReport, Report};
+use trie_of_rules::coordinator::durability::DurabilityPlane;
+use trie_of_rules::coordinator::service::QueryEngine;
+use trie_of_rules::coordinator::wal::{FsyncPolicy, Wal, WalOp};
+use trie_of_rules::data::{paper_example_db, TransactionDb, Vocab};
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::query::parallel::ParallelExecutor;
+use trie_of_rules::trie::delta::IncrementalTrie;
+use trie_of_rules::trie::trie::TrieOfRules;
+use trie_of_rules::util::fsio::{MemVfs, RealVfs, Vfs};
+use trie_of_rules::util::rng::Rng;
+
+const MINSUP: f64 = 0.1;
+const NUM_ITEMS: usize = 24;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tor_bench_dur_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn random_tx(rng: &mut Rng) -> Vec<u32> {
+    let len = 2 + rng.below(7);
+    let mut tx: Vec<u32> = (0..len).map(|_| rng.below(NUM_ITEMS) as u32).collect();
+    tx.sort_unstable();
+    tx.dedup();
+    tx
+}
+
+fn build_store(rows: &[Vec<u32>]) -> (IncrementalTrie, Vocab) {
+    let mut b = TransactionDb::builder(Vocab::synthetic(NUM_ITEMS));
+    for r in rows {
+        b.push_ids(r.clone());
+    }
+    let db = b.build();
+    let fi = fpgrowth(&db, MINSUP);
+    let order = ItemOrder::new(&db, min_count(MINSUP, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    let vocab = db.vocab().clone();
+    (IncrementalTrie::new(trie, db, &fi, MINSUP).unwrap(), vocab)
+}
+
+fn paper_store() -> (IncrementalTrie, Vocab) {
+    let db = paper_example_db();
+    let fi = fpgrowth(&db, 0.3);
+    let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    let vocab = db.vocab().clone();
+    (IncrementalTrie::new(trie, db, &fi, 0.3).unwrap(), vocab)
+}
+
+/// WAL append throughput per fsync policy, real filesystem.
+fn bench_wal_append(report: &mut Report, bench: &mut BenchReport, test: bool) {
+    let dir = tmpdir("wal");
+    let vfs: Arc<dyn Vfs> = Arc::new(RealVfs);
+    let batch: Vec<Vec<u32>> = (0..4u32).map(|k| vec![k, k + 4, k + 9]).collect();
+    for policy in [FsyncPolicy::Always, FsyncPolicy::Batch(8), FsyncPolicy::Never] {
+        // fsync-per-append is orders of magnitude slower; size each run so
+        // wall time stays comparable.
+        let appends: usize = match (test, policy) {
+            (true, _) => 64,
+            (false, FsyncPolicy::Always) => 2_000,
+            (false, _) => 20_000,
+        };
+        let path = dir.join(format!("wal-{policy}.log"));
+        let mut wal = Wal::create(Arc::clone(&vfs), &path, policy, 1).unwrap();
+        let op = WalOp::Ingest(batch.clone());
+        let t0 = Instant::now();
+        for _ in 0..appends {
+            wal.append(0, &op).unwrap();
+        }
+        wal.sync().unwrap();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let tx = (appends * batch.len()) as f64;
+        let label = format!("wal/{policy}");
+        let cells: Vec<(&str, f64)> = vec![
+            ("appends", appends as f64),
+            ("appends_s", appends as f64 / wall_s.max(1e-12)),
+            ("tx_s", tx / wall_s.max(1e-12)),
+            ("wall_s", wall_s),
+        ];
+        report.row(&label, &cells);
+        bench.row(&label, &cells);
+        eprintln!(
+            "[durability] {label}: {:.0} appends/s ({:.0} tx/s) over {appends} appends",
+            appends as f64 / wall_s.max(1e-12),
+            tx / wall_s.max(1e-12),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Warm-start recovery time as a function of the replayed WAL tail.
+fn bench_recovery(report: &mut Report, bench: &mut BenchReport, test: bool) {
+    let lens: Vec<usize> = if test { vec![0, 16] } else { vec![0, 128, 1024] };
+    let mut rng = Rng::new(0xBE9C);
+    let base_rows: Vec<Vec<u32>> = (0..64).map(|_| random_tx(&mut rng)).collect();
+    for len in lens {
+        let dir = tmpdir(&format!("rec{len}"));
+        let vfs: Arc<dyn Vfs> = Arc::new(RealVfs);
+        let (plane, mut store, _vocab, rep) =
+            DurabilityPlane::open_or_recover(Arc::clone(&vfs), &dir, FsyncPolicy::Never, || {
+                Ok(build_store(&base_rows))
+            })
+            .unwrap();
+        assert!(rep.cold_start, "seed phase must cold start");
+        for _ in 0..len {
+            let txs = vec![random_tx(&mut rng)];
+            plane.log_ingest(store.epoch(), &txs).unwrap();
+            store.ingest(&txs).unwrap();
+        }
+        plane.shutdown_flush().unwrap();
+        drop(plane);
+        drop(store);
+
+        let t0 = Instant::now();
+        let (_plane2, store2, _v2, rep2) =
+            DurabilityPlane::open_or_recover(Arc::new(RealVfs), &dir, FsyncPolicy::Never, || {
+                anyhow::bail!("warm start must not re-mine")
+            })
+            .unwrap();
+        let recover_s = t0.elapsed().as_secs_f64();
+        assert_eq!(rep2.replayed_ingests, len, "tail replay incomplete");
+        assert_eq!(store2.pending_len(), len);
+
+        let label = format!("recovery/wal{len}");
+        let cells: Vec<(&str, f64)> = vec![
+            ("wal_records", len as f64),
+            ("recover_s", recover_s),
+            ("replayed_tx", rep2.replayed_tx as f64),
+        ];
+        report.row(&label, &cells);
+        bench.row(&label, &cells);
+        eprintln!("[durability] {label}: recovered in {:.1} ms", recover_s * 1e3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Shed rate (INGEST refusals/s) and query rate while degraded.
+fn bench_degraded(report: &mut Report, bench: &mut BenchReport, test: bool) {
+    let n: usize = if test { 200 } else { 20_000 };
+    let vfs = MemVfs::new(7);
+    let (plane, store, vocab, _rep) = DurabilityPlane::open_or_recover(
+        Arc::new(vfs.clone()),
+        std::path::Path::new("/dur"),
+        FsyncPolicy::Always,
+        || Ok(paper_store()),
+    )
+    .unwrap();
+    let engine = QueryEngine::with_incremental(store, vocab, ParallelExecutor::new(2))
+        .with_durability(Arc::new(plane));
+    assert!(engine.execute("INGEST f,c").starts_with("OK "), "healthy ingest");
+    // Kill the log: the next mutation fails its WAL barrier and the
+    // service latches read-only.
+    vfs.fail_path_containing(Some("wal.log"));
+    assert!(engine.execute("INGEST f,b").starts_with("ERR degraded"));
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let resp = engine.execute("INGEST f,b;c,p");
+        debug_assert!(resp.starts_with("ERR degraded"));
+    }
+    let shed_wall = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let resp = engine.execute("SUPPORT f,c");
+        debug_assert!(resp.starts_with("SUPPORT "));
+    }
+    let query_wall = t0.elapsed().as_secs_f64();
+
+    let cells: Vec<(&str, f64)> = vec![
+        ("shed_s", n as f64 / shed_wall.max(1e-12)),
+        ("degraded_query_s", n as f64 / query_wall.max(1e-12)),
+        ("ops", n as f64),
+    ];
+    report.row("degraded/read_only", &cells);
+    bench.row("degraded/read_only", &cells);
+    eprintln!(
+        "[durability] degraded: shedding {:.0} INGEST/s, still serving {:.0} queries/s",
+        n as f64 / shed_wall.max(1e-12),
+        n as f64 / query_wall.max(1e-12),
+    );
+}
+
+fn main() {
+    let test = std::env::args().any(|a| a == "--test");
+    let mut report = Report::new("Durability plane: WAL append, recovery, degraded mode");
+    report.note(if test {
+        "smoke sizes (--test)".to_string()
+    } else {
+        "full sizes".to_string()
+    });
+    let mut bench = BenchReport::new("durability");
+
+    bench_wal_append(&mut report, &mut bench, test);
+    bench_recovery(&mut report, &mut bench, test);
+    bench_degraded(&mut report, &mut bench, test);
+
+    print!("{}", report.render());
+    match report.save("durability") {
+        Ok(p) => eprintln!("[durability] wrote {}", p.display()),
+        Err(e) => eprintln!("[durability] save failed: {e:#}"),
+    }
+    match bench.save() {
+        Ok(p) => eprintln!("[durability] wrote {}", p.display()),
+        Err(e) => eprintln!("[durability] save failed: {e:#}"),
+    }
+}

@@ -180,6 +180,14 @@ PIPELINE OPTS:
                                     seconds (default 0 = never)
   --result-cache-mb N               generation-keyed query-result cache
                                     size in MiB (default 0 = off)
+  --wal-dir DIR                     durability plane: checksummed WAL +
+                                    atomic checkpoints under DIR; on start
+                                    the newest valid checkpoint is loaded
+                                    and the WAL tail replayed (DESIGN.md
+                                    §16) — supersedes --replay-delta
+  --wal-fsync always|batch:N|never  WAL fsync policy (default always):
+                                    fsync every append, every N appends,
+                                    or never (OS-buffered)
   --transactions N --seed N         generator overrides
   --config FILE                     key=value config file
   --set key=value                   single config override (repeatable)
@@ -362,6 +370,8 @@ fn parse_pipeline_opts_with(
             "--result-cache-mb" => {
                 opts.config.set("result_cache_mb", &value("--result-cache-mb")?)?
             }
+            "--wal-dir" => opts.config.set("wal_dir", &value("--wal-dir")?)?,
+            "--wal-fsync" => opts.config.set("wal_fsync", &value("--wal-fsync")?)?,
             "--config" => {
                 opts.config = PipelineConfig::load(&PathBuf::from(value("--config")?))?;
             }
@@ -501,6 +511,31 @@ mod tests {
         }
         assert!(parse(&argv("serve --port 1 --max-pending 0")).is_err());
         assert!(parse(&argv("serve --port 1 --service-shards nope")).is_err());
+    }
+
+    #[test]
+    fn parses_wal_flags() {
+        match parse(&argv(
+            "serve --dataset tiny --port 7878 --wal-dir /tmp/wal --wal-fsync batch:8",
+        ))
+        .unwrap()
+        {
+            Command::Serve(o, _, _) => {
+                assert_eq!(o.config.wal_dir.as_deref(), Some("/tmp/wal"));
+                assert_eq!(o.config.wal_fsync, "batch:8");
+            }
+            other => panic!("{other:?}"),
+        }
+        // The durability plane also covers one-shot `query` runs.
+        match parse(&argv("query --dataset tiny --cmd STATS --wal-dir d")).unwrap() {
+            Command::Query(o, ..) => {
+                assert_eq!(o.config.wal_dir.as_deref(), Some("d"));
+                assert_eq!(o.config.wal_fsync, "always");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --port 1 --wal-fsync sometimes")).is_err());
+        assert!(parse(&argv("serve --port 1 --wal-dir")).is_err());
     }
 
     #[test]

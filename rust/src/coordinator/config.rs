@@ -80,6 +80,14 @@ pub struct PipelineConfig {
     /// Generation-keyed query-result cache size in MiB
     /// (`--result-cache-mb`; 0 = off).
     pub result_cache_mb: usize,
+    /// Durability directory (`--wal-dir <path>`; None = no crash-safety
+    /// plane). Holds the write-ahead log, atomic checkpoints, and the
+    /// MANIFEST recovery pointer (DESIGN.md §16).
+    pub wal_dir: Option<String>,
+    /// WAL fsync policy: `always`, `never`, or `batch:N`
+    /// (`--wal-fsync`; parsed by
+    /// [`crate::coordinator::wal::FsyncPolicy::parse`]).
+    pub wal_fsync: String,
 }
 
 impl Default for PipelineConfig {
@@ -100,6 +108,8 @@ impl Default for PipelineConfig {
             max_pending: 1024,
             idle_timeout_s: 0,
             result_cache_mb: 0,
+            wal_dir: None,
+            wal_fsync: "always".to_string(),
         }
     }
 }
@@ -132,6 +142,14 @@ impl PipelineConfig {
             "max_pending" => self.max_pending = parse_usize_min(value, 1)?,
             "idle_timeout_s" => self.idle_timeout_s = parse_usize_min(value, 0)?,
             "result_cache_mb" => self.result_cache_mb = parse_usize_min(value, 0)?,
+            "wal_dir" => {
+                anyhow::ensure!(!value.is_empty(), "wal_dir needs a path");
+                self.wal_dir = Some(value.to_string());
+            }
+            "wal_fsync" => {
+                crate::coordinator::wal::FsyncPolicy::parse(value)?;
+                self.wal_fsync = value.to_string();
+            }
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -199,7 +217,18 @@ impl PipelineConfig {
         if let Some(path) = &self.telemetry_out {
             out.push_str(&format!("telemetry_out={path}\n"));
         }
+        out.push_str(&format!("wal_fsync={}\n", self.wal_fsync));
+        if let Some(dir) = &self.wal_dir {
+            out.push_str(&format!("wal_dir={dir}\n"));
+        }
         out
+    }
+
+    /// Parsed WAL fsync policy (validated at `set` time, so this cannot
+    /// fail on a config that went through [`PipelineConfig::set`]/`load`).
+    pub fn wal_fsync_policy(&self) -> crate::coordinator::wal::FsyncPolicy {
+        crate::coordinator::wal::FsyncPolicy::parse(&self.wal_fsync)
+            .expect("wal_fsync validated on set")
     }
 }
 
@@ -305,6 +334,31 @@ mod tests {
         assert_eq!(back.max_pending, 64);
         assert_eq!(back.idle_timeout_s, 30);
         assert_eq!(back.result_cache_mb, 16);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wal_keys_roundtrip() {
+        let mut c = PipelineConfig::default();
+        assert!(c.wal_dir.is_none());
+        assert_eq!(c.wal_fsync, "always");
+        assert!(!c.render().contains("wal_dir="), "{}", c.render());
+        c.set("wal_dir", "artifacts/wal").unwrap();
+        c.set("wal_fsync", "batch:8").unwrap();
+        assert_eq!(
+            c.wal_fsync_policy(),
+            crate::coordinator::wal::FsyncPolicy::Batch(8)
+        );
+        assert!(c.set("wal_dir", "").is_err());
+        assert!(c.set("wal_fsync", "sometimes").is_err());
+        assert!(c.set("wal_fsync", "batch:0").is_err());
+        let dir = std::env::temp_dir().join(format!("tor_cfg_wal_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pipeline.cfg");
+        std::fs::write(&path, c.render()).unwrap();
+        let back = PipelineConfig::load(&path).unwrap();
+        assert_eq!(back.wal_dir.as_deref(), Some("artifacts/wal"));
+        assert_eq!(back.wal_fsync, "batch:8");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,743 @@
+//! The durability plane (DESIGN.md §16): crash-safe state for the
+//! incremental serving path.
+//!
+//! One directory (`--wal-dir`) holds everything needed to restart with
+//! zero acknowledged-INGEST loss:
+//!
+//! ```text
+//! wal-dir/
+//!   MANIFEST       tiny sealed pointer: newest valid checkpoint + wal seq
+//!   wal.log        write-ahead log of INGEST/COMPACT since that checkpoint
+//!   ckpt-<id>.tor  v3 snapshot of the base trie (with vocab, CRC-sealed)
+//!   ckpt-<id>.db   sealed dump of the base transaction database
+//! ```
+//!
+//! Protocol invariants:
+//! - WAL append (under the configured fsync policy) happens **before**
+//!   the mutation is applied or acknowledged; replay order equals apply
+//!   order because both happen under the store lock.
+//! - Checkpoints are written temp + fsync + atomic rename, **then** the
+//!   manifest is atomically swapped, **then** the WAL is truncated — so
+//!   the manifest always points at a complete, CRC-valid checkpoint and a
+//!   crash anywhere leaves a recoverable pair.
+//! - Recovery = load manifest checkpoint, rebuild the incremental store
+//!   (the closed frequent set is recovered 1:1 from the trie's nodes),
+//!   replay WAL records with `seq > manifest.wal_seq`, then immediately
+//!   re-checkpoint and start a fresh log — recovery is idempotent and
+//!   the log never grows across restarts.
+//! - Any WAL/checkpoint write failure flips the plane to **degraded**
+//!   (read-only) mode instead of panicking: queries keep serving, INGEST
+//!   and COMPACT are refused with `ERR degraded`, and STATS/metrics
+//!   expose the condition.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::wal::{read_wal, FsyncPolicy, Wal, WalOp};
+use crate::data::vocab::Vocab;
+use crate::mining::itemset::{FrequentItemsets, Itemset};
+use crate::trie::delta::IncrementalTrie;
+use crate::trie::serialize;
+use crate::trie::trie::TrieOfRules;
+use crate::util::crc32::crc32;
+use crate::util::fsio::{self, Vfs};
+
+const MANIFEST_MAGIC: [u8; 4] = *b"TORM";
+const MANIFEST_VERSION: u32 = 1;
+
+/// The sealed recovery pointer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Manifest {
+    /// Checkpoint file id this manifest points at (`ckpt-<id>.*`).
+    pub checkpoint_id: u64,
+    /// Store epoch at checkpoint time.
+    pub epoch: u64,
+    /// Store compaction count at checkpoint time.
+    pub compactions: u64,
+    /// Support threshold the store was created with (bit-exact).
+    pub minsup: f64,
+    /// Highest WAL sequence number the checkpoint supersedes; recovery
+    /// replays only records with `seq > wal_seq`.
+    pub wal_seq: u64,
+}
+
+impl Manifest {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(52);
+        b.extend_from_slice(&MANIFEST_MAGIC);
+        b.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        b.extend_from_slice(&self.checkpoint_id.to_le_bytes());
+        b.extend_from_slice(&self.epoch.to_le_bytes());
+        b.extend_from_slice(&self.compactions.to_le_bytes());
+        b.extend_from_slice(&self.minsup.to_bits().to_le_bytes());
+        b.extend_from_slice(&self.wal_seq.to_le_bytes());
+        let crc = crc32(&b);
+        b.extend_from_slice(&crc.to_le_bytes());
+        b
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Manifest> {
+        anyhow::ensure!(bytes.len() == 52, "manifest wrong size {}", bytes.len());
+        anyhow::ensure!(bytes[..4] == MANIFEST_MAGIC, "manifest bad magic");
+        let stored = u32::from_le_bytes(bytes[48..52].try_into().unwrap());
+        anyhow::ensure!(stored == crc32(&bytes[..48]), "manifest checksum mismatch");
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        anyhow::ensure!(version == MANIFEST_VERSION, "manifest version {version}");
+        let u = |a: usize| u64::from_le_bytes(bytes[a..a + 8].try_into().unwrap());
+        Ok(Manifest {
+            checkpoint_id: u(8),
+            epoch: u(16),
+            compactions: u(24),
+            minsup: f64::from_bits(u(32)),
+            wal_seq: u(40),
+        })
+    }
+
+    fn save(&self, vfs: &dyn Vfs, path: &Path) -> Result<()> {
+        let bytes = self.encode();
+        fsio::atomic_write_with(vfs, path, |w| w.write_all(&bytes))
+            .with_context(|| format!("save manifest {}", path.display()))
+    }
+
+    fn load(vfs: &dyn Vfs, path: &Path) -> Result<Manifest> {
+        let bytes = vfs
+            .read(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::decode(&bytes)
+    }
+}
+
+/// What recovery did at startup.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// True when no manifest existed and the base was built fresh.
+    pub cold_start: bool,
+    /// Checkpoint id loaded (recovery) or written (cold start).
+    pub checkpoint_id: u64,
+    /// INGEST records replayed from the WAL tail.
+    pub replayed_ingests: usize,
+    /// COMPACT records replayed from the WAL tail.
+    pub replayed_compacts: usize,
+    /// Transactions carried by the replayed INGEST records.
+    pub replayed_tx: usize,
+}
+
+/// Shared, thread-safe handle the service uses to make mutations durable.
+pub struct DurabilityPlane {
+    vfs: Arc<dyn Vfs>,
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    vocab: Vocab,
+    wal: Mutex<Wal>,
+    manifest: Mutex<Manifest>,
+    degraded: AtomicBool,
+    last_error: Mutex<Option<String>>,
+    wal_appends: AtomicU64,
+    checkpoints: AtomicU64,
+}
+
+impl DurabilityPlane {
+    /// Open (or initialize) a durability directory and return the plane
+    /// plus the recovered incremental store. `build_base` runs the full
+    /// mining pipeline and is only invoked on cold start — a warm start
+    /// restores from the checkpoint + WAL without re-mining.
+    pub fn open_or_recover<F>(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        policy: FsyncPolicy,
+        build_base: F,
+    ) -> Result<(DurabilityPlane, IncrementalTrie, Vocab, RecoveryReport)>
+    where
+        F: FnOnce() -> Result<(IncrementalTrie, Vocab)>,
+    {
+        vfs.create_dir_all(dir)
+            .with_context(|| format!("create wal dir {}", dir.display()))?;
+        let manifest_path = dir.join("MANIFEST");
+        let wal_path = dir.join("wal.log");
+        if vfs.exists(&manifest_path) {
+            Self::recover(vfs, dir, policy, &manifest_path, &wal_path)
+        } else {
+            Self::cold_start(vfs, dir, policy, &manifest_path, &wal_path, build_base)
+        }
+    }
+
+    fn cold_start<F>(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        policy: FsyncPolicy,
+        manifest_path: &Path,
+        wal_path: &Path,
+        build_base: F,
+    ) -> Result<(DurabilityPlane, IncrementalTrie, Vocab, RecoveryReport)>
+    where
+        F: FnOnce() -> Result<(IncrementalTrie, Vocab)>,
+    {
+        let (store, vocab) = build_base().context("build base for durability cold start")?;
+        anyhow::ensure!(
+            store.pending_len() == 0,
+            "durability cold start requires a compacted base (pending = {})",
+            store.pending_len()
+        );
+        let manifest = Manifest {
+            checkpoint_id: 0,
+            epoch: store.epoch(),
+            compactions: store.compactions(),
+            minsup: store.minsup(),
+            wal_seq: 0,
+        };
+        write_checkpoint(vfs.as_ref(), dir, manifest.checkpoint_id, &store, &vocab)?;
+        manifest.save(vfs.as_ref(), manifest_path)?;
+        let wal = Wal::create(Arc::clone(&vfs), wal_path, policy, 1)?;
+        let report = RecoveryReport {
+            cold_start: true,
+            checkpoint_id: 0,
+            ..Default::default()
+        };
+        let plane = DurabilityPlane {
+            vfs,
+            dir: dir.to_path_buf(),
+            policy,
+            vocab: vocab.clone(),
+            wal: Mutex::new(wal),
+            manifest: Mutex::new(manifest),
+            degraded: AtomicBool::new(false),
+            last_error: Mutex::new(None),
+            wal_appends: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(1),
+        };
+        Ok((plane, store, vocab, report))
+    }
+
+    fn recover(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        policy: FsyncPolicy,
+        manifest_path: &Path,
+        wal_path: &Path,
+    ) -> Result<(DurabilityPlane, IncrementalTrie, Vocab, RecoveryReport)> {
+        let manifest = Manifest::load(vfs.as_ref(), manifest_path)?;
+        let (trie, vocab) = serialize::try_load_with(
+            vfs.as_ref(),
+            &checkpoint_trie_path(dir, manifest.checkpoint_id),
+        )
+        .map_err(|e| anyhow::anyhow!("load checkpoint {}: {e}", manifest.checkpoint_id))?;
+        let vocab =
+            vocab.ok_or_else(|| anyhow::anyhow!("checkpoint snapshot is missing its vocab"))?;
+        let db = serialize::load_db_with(
+            vfs.as_ref(),
+            &checkpoint_db_path(dir, manifest.checkpoint_id),
+        )
+        .map_err(|e| anyhow::anyhow!("load checkpoint db {}: {e}", manifest.checkpoint_id))?;
+        let frequent = frequent_from_trie(&trie);
+        let mut store = IncrementalTrie::restore(
+            trie,
+            db,
+            &frequent,
+            manifest.minsup,
+            manifest.epoch,
+            manifest.compactions,
+        )
+        .context("rebuild incremental store from checkpoint")?;
+
+        // Replay the WAL tail. A missing log (crash after the manifest
+        // swap, before the fresh log materialized) means an empty tail.
+        // `cut` tracks the highest sequence number a re-checkpoint of the
+        // base would supersede: the last replayed COMPACT barrier.
+        // Records after it feed `pending` and must stay in the log.
+        let mut report = RecoveryReport {
+            cold_start: false,
+            checkpoint_id: manifest.checkpoint_id,
+            ..Default::default()
+        };
+        let mut last_seq = manifest.wal_seq;
+        let mut cut = manifest.wal_seq;
+        let mut records = Vec::new();
+        if vfs.exists(wal_path) {
+            let (start_seq, recs) = read_wal(vfs.as_ref(), wal_path)?;
+            records = recs;
+            last_seq = last_seq.max(start_seq.saturating_sub(1));
+            for rec in &records {
+                last_seq = last_seq.max(rec.seq);
+                if rec.seq <= manifest.wal_seq {
+                    continue; // superseded by the checkpoint
+                }
+                match &rec.op {
+                    WalOp::Ingest(txs) => {
+                        report.replayed_ingests += 1;
+                        report.replayed_tx += txs.len();
+                        store.ingest(txs).context("replay wal ingest")?;
+                    }
+                    WalOp::Compact => {
+                        report.replayed_compacts += 1;
+                        cut = rec.seq;
+                        store.compact(None).context("replay wal compact")?;
+                    }
+                }
+            }
+        }
+
+        // Recovery logs no new records — the atomic manifest rename is
+        // the single commit point, and until it lands the old (manifest,
+        // checkpoint, wal) triple stays byte-for-byte intact. When replay
+        // advanced the base (a COMPACT was replayed), fold it into a
+        // fresh checkpoint so the next start replays less; pending ingest
+        // records (seq > cut) stay covered by the log rewrite below.
+        let mut manifest = manifest;
+        if report.replayed_compacts > 0 {
+            let new_manifest = Manifest {
+                checkpoint_id: manifest.checkpoint_id + 1,
+                epoch: store.epoch(),
+                compactions: store.compactions(),
+                minsup: manifest.minsup,
+                wal_seq: cut,
+            };
+            write_checkpoint(vfs.as_ref(), dir, new_manifest.checkpoint_id, &store, &vocab)?;
+            new_manifest.save(vfs.as_ref(), manifest_path)?;
+            remove_checkpoint(vfs.as_ref(), dir, manifest.checkpoint_id);
+            manifest = new_manifest;
+        }
+        // Truncating is only safe once nothing after the manifest's
+        // `wal_seq` is still needed. When pending records remain, the
+        // survived file cannot simply be reopened for append: the crash
+        // may have left a torn partial frame beyond the last whole record
+        // and the reader stops there — shadowing anything appended after
+        // recovery. Atomically rewrite the log to exactly the still-needed
+        // tail instead (a crash mid-rewrite keeps the old complete log).
+        let wal = if store.pending_len() == 0 {
+            Wal::create(Arc::clone(&vfs), wal_path, policy, last_seq + 1)?
+        } else {
+            records.retain(|r| r.seq > cut);
+            Wal::rewrite(Arc::clone(&vfs), wal_path, policy, cut + 1, &records)?
+        };
+        report.checkpoint_id = manifest.checkpoint_id;
+
+        let plane = DurabilityPlane {
+            vfs,
+            dir: dir.to_path_buf(),
+            policy,
+            vocab: vocab.clone(),
+            wal: Mutex::new(wal),
+            manifest: Mutex::new(manifest),
+            degraded: AtomicBool::new(false),
+            last_error: Mutex::new(None),
+            wal_appends: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(u64::from(report.replayed_compacts > 0)),
+        };
+        Ok((plane, store, vocab, report))
+    }
+
+    pub fn policy(&self) -> FsyncPolicy {
+        self.policy
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Acquire)
+    }
+
+    /// Why the plane degraded (if it did).
+    pub fn last_error(&self) -> Option<String> {
+        self.last_error.lock().unwrap().clone()
+    }
+
+    /// Records appended since startup.
+    pub fn wal_appends(&self) -> u64 {
+        self.wal_appends.load(Ordering::Relaxed)
+    }
+
+    /// Checkpoints written since startup (includes the startup one).
+    pub fn checkpoints_written(&self) -> u64 {
+        self.checkpoints.load(Ordering::Relaxed)
+    }
+
+    /// Sequence number the next WAL append will use.
+    pub fn next_seq(&self) -> u64 {
+        self.wal.lock().unwrap().next_seq()
+    }
+
+    fn degrade(&self, what: &str, err: &anyhow::Error) {
+        self.degraded.store(true, Ordering::Release);
+        let mut g = self.last_error.lock().unwrap();
+        *g = Some(format!("{what}: {err:#}"));
+    }
+
+    /// Make an INGEST batch durable *before* it is applied/acknowledged.
+    /// `epoch` is the store epoch at append time. On failure the plane
+    /// flips to degraded mode and the caller must refuse the mutation.
+    pub fn log_ingest(&self, epoch: u64, txs: &[Vec<u32>]) -> Result<u64> {
+        anyhow::ensure!(!self.is_degraded(), "durability plane is degraded");
+        let mut wal = self.wal.lock().unwrap();
+        match wal.append(epoch, &WalOp::Ingest(txs.to_vec())) {
+            Ok(seq) => {
+                self.wal_appends.fetch_add(1, Ordering::Relaxed);
+                Ok(seq)
+            }
+            Err(e) => {
+                self.degrade("wal append", &e);
+                Err(e)
+            }
+        }
+    }
+
+    /// Record a completed COMPACT: append the barrier record, force the
+    /// log down, write checkpoint `id+1` from the (already-compacted)
+    /// store, swap the manifest, truncate the log. Call with the store
+    /// lock held, *after* `compact()` succeeded.
+    pub fn log_compact_and_checkpoint(&self, store: &IncrementalTrie) -> Result<()> {
+        anyhow::ensure!(!self.is_degraded(), "durability plane is degraded");
+        let result = self.checkpoint_inner(store);
+        if let Err(e) = &result {
+            self.degrade("checkpoint", e);
+        }
+        result
+    }
+
+    fn checkpoint_inner(&self, store: &IncrementalTrie) -> Result<()> {
+        let mut wal = self.wal.lock().unwrap();
+        wal.append(store.epoch(), &WalOp::Compact)?;
+        self.wal_appends.fetch_add(1, Ordering::Relaxed);
+        wal.sync()?;
+        let superseded = wal.next_seq() - 1;
+        let mut manifest = self.manifest.lock().unwrap();
+        let new_manifest = Manifest {
+            checkpoint_id: manifest.checkpoint_id + 1,
+            epoch: store.epoch(),
+            compactions: store.compactions(),
+            minsup: manifest.minsup,
+            wal_seq: superseded,
+        };
+        write_checkpoint(
+            self.vfs.as_ref(),
+            &self.dir,
+            new_manifest.checkpoint_id,
+            store,
+            &self.vocab,
+        )?;
+        new_manifest.save(self.vfs.as_ref(), &self.dir.join("MANIFEST"))?;
+        wal.truncate()?;
+        let old_id = manifest.checkpoint_id;
+        *manifest = new_manifest;
+        drop(manifest);
+        drop(wal);
+        remove_checkpoint(self.vfs.as_ref(), &self.dir, old_id);
+        self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Shutdown drain: force the log durable regardless of fsync policy.
+    pub fn shutdown_flush(&self) -> Result<()> {
+        if self.is_degraded() {
+            return Ok(()); // nothing trustworthy to flush
+        }
+        let mut wal = self.wal.lock().unwrap();
+        if let Err(e) = wal.sync() {
+            self.degrade("shutdown fsync", &e);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// The STATS tail this plane contributes (appended only when a plane
+    /// is attached, keeping WAL-less serving byte-identical to before).
+    pub fn stats_fields(&self) -> String {
+        format!(
+            " wal_fsync={} wal_seq={} wal_appends={} checkpoints={} degraded={}",
+            self.policy,
+            self.next_seq(),
+            self.wal_appends(),
+            self.checkpoints_written(),
+            u8::from(self.is_degraded()),
+        )
+    }
+}
+
+fn checkpoint_trie_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("ckpt-{id}.tor"))
+}
+
+fn checkpoint_db_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("ckpt-{id}.db"))
+}
+
+fn write_checkpoint(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    id: u64,
+    store: &IncrementalTrie,
+    vocab: &Vocab,
+) -> Result<()> {
+    serialize::save_with(vfs, store.base(), Some(vocab), &checkpoint_trie_path(dir, id))?;
+    serialize::save_db_with(vfs, store.base_db(), &checkpoint_db_path(dir, id))?;
+    Ok(())
+}
+
+fn remove_checkpoint(vfs: &dyn Vfs, dir: &Path, id: u64) {
+    // Best-effort GC of the superseded checkpoint pair.
+    let _ = vfs.remove(&checkpoint_trie_path(dir, id));
+    let _ = vfs.remove(&checkpoint_db_path(dir, id));
+}
+
+/// Recover the complete (subset-closed) frequent-itemset collection from
+/// a frozen trie: each non-root node is exactly one frequent itemset
+/// (its root path) with its support count — the 1:1 correspondence the
+/// paper's construction gives and `IncrementalTrie` validates.
+pub fn frequent_from_trie(trie: &TrieOfRules) -> FrequentItemsets {
+    let counts = trie.counts_column();
+    let mut sets = Vec::with_capacity(trie.num_nodes());
+    for idx in 1..=trie.num_nodes() {
+        let items = trie.path_items(idx as u32);
+        sets.push((Itemset::new(items), counts[idx]));
+    }
+    let mut fi = FrequentItemsets {
+        num_transactions: trie.num_transactions(),
+        sets,
+    };
+    fi.canonicalize();
+    fi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transaction::{paper_example_db, TransactionDb};
+    use crate::data::vocab::ItemId;
+    use crate::mining::counts::{min_count, ItemOrder};
+    use crate::mining::fpgrowth::fpgrowth;
+    use crate::util::fsio::MemVfs;
+
+    const MINSUP: f64 = 0.3;
+
+    fn build_paper_base() -> Result<(IncrementalTrie, Vocab)> {
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, MINSUP);
+        let order = ItemOrder::new(&db, min_count(MINSUP, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order)?;
+        let vocab = db.vocab().clone();
+        let store = IncrementalTrie::new(trie, db, &fi, MINSUP)?;
+        Ok((store, vocab))
+    }
+
+    fn batch_trie(rows: &[Vec<ItemId>], vocab: &Vocab) -> TrieOfRules {
+        let mut b = TransactionDb::builder(vocab.clone());
+        for r in rows {
+            b.push_ids(r.clone());
+        }
+        let db = b.build();
+        let fi = fpgrowth(&db, MINSUP);
+        let order = ItemOrder::new(&db, min_count(MINSUP, db.num_transactions()));
+        TrieOfRules::from_sorted_paths(&fi, &order).unwrap()
+    }
+
+    fn base_bytes(store: &IncrementalTrie, vocab: &Vocab) -> Vec<u8> {
+        let mut out = Vec::new();
+        serialize::save_to(store.base(), Some(vocab), &mut out).unwrap();
+        out
+    }
+
+    fn open(
+        vfs: &MemVfs,
+        dir: &Path,
+    ) -> Result<(DurabilityPlane, IncrementalTrie, Vocab, RecoveryReport)> {
+        let arc: Arc<dyn Vfs> = Arc::new(vfs.clone());
+        DurabilityPlane::open_or_recover(arc, dir, FsyncPolicy::Always, build_paper_base)
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_corruption_rejection() {
+        let m = Manifest {
+            checkpoint_id: 7,
+            epoch: 3,
+            compactions: 2,
+            minsup: 0.3,
+            wal_seq: 41,
+        };
+        let bytes = m.encode();
+        assert_eq!(Manifest::decode(&bytes).unwrap(), m);
+        assert!(Manifest::decode(&bytes[..51]).is_err());
+        for byte in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[byte] ^= 0x04;
+            assert!(Manifest::decode(&b).is_err(), "flip at {byte} accepted");
+        }
+    }
+
+    #[test]
+    fn cold_start_lays_down_checkpoint_manifest_and_wal() {
+        let vfs = MemVfs::new(11);
+        let dir = Path::new("wal");
+        let (plane, store, _vocab, report) = open(&vfs, dir).unwrap();
+        assert!(report.cold_start);
+        assert_eq!(report.checkpoint_id, 0);
+        assert!(vfs.exists(&dir.join("MANIFEST")));
+        assert!(vfs.exists(&dir.join("wal.log")));
+        assert!(vfs.exists(&dir.join("ckpt-0.tor")));
+        assert!(vfs.exists(&dir.join("ckpt-0.db")));
+        assert_eq!(plane.next_seq(), 1);
+        assert_eq!(store.pending_len(), 0);
+        assert!(!plane.is_degraded());
+    }
+
+    #[test]
+    fn recovery_replays_acknowledged_ingests() {
+        let vfs = MemVfs::new(12);
+        let dir = Path::new("wal");
+        let (plane, mut store, _vocab, _) = open(&vfs, dir).unwrap();
+        let batch = vec![vec![0u32, 1, 2], vec![3, 4]];
+        plane.log_ingest(store.epoch(), &batch).unwrap();
+        store.ingest(&batch).unwrap();
+        drop(plane);
+
+        let (plane2, store2, _vocab2, report) = DurabilityPlane::open_or_recover(
+            Arc::new(vfs.clone()) as Arc<dyn Vfs>,
+            dir,
+            FsyncPolicy::Always,
+            || anyhow::bail!("warm start must not rebuild the base"),
+        )
+        .unwrap();
+        assert!(!report.cold_start);
+        assert_eq!(report.replayed_ingests, 1);
+        assert_eq!(report.replayed_tx, 2);
+        assert_eq!(store2.pending_len(), 2);
+        assert_eq!(store2.pending(), store.pending());
+        assert_eq!(store2.epoch(), store.epoch());
+        // The pending tail must survive a second crash too: the log still
+        // covers it (recovery does not truncate past pending records).
+        drop(plane2);
+        let (_, store3, _, report3) = DurabilityPlane::open_or_recover(
+            Arc::new(vfs.clone()) as Arc<dyn Vfs>,
+            dir,
+            FsyncPolicy::Always,
+            || anyhow::bail!("warm start must not rebuild the base"),
+        )
+        .unwrap();
+        assert_eq!(report3.replayed_ingests, 1);
+        assert_eq!(store3.pending(), store.pending());
+    }
+
+    #[test]
+    fn compact_checkpoint_truncates_and_recovery_matches_batch_rebuild() {
+        let vfs = MemVfs::new(13);
+        let dir = Path::new("wal");
+        let (plane, mut store, vocab, _) = open(&vfs, dir).unwrap();
+        let db = paper_example_db();
+        let name = |s: &str| db.vocab().get(s).unwrap();
+        let batch = vec![
+            vec![name("f"), name("c"), name("a")],
+            vec![name("b"), name("p")],
+        ];
+        plane.log_ingest(store.epoch(), &batch).unwrap();
+        store.ingest(&batch).unwrap();
+        assert!(store.compact(None).unwrap());
+        plane.log_compact_and_checkpoint(&store).unwrap();
+        assert!(vfs.exists(&dir.join("ckpt-1.tor")));
+        assert!(!vfs.exists(&dir.join("ckpt-0.tor")), "old ckpt not GC'd");
+        drop(plane);
+
+        let (_, store2, vocab2, report) = DurabilityPlane::open_or_recover(
+            Arc::new(vfs.clone()) as Arc<dyn Vfs>,
+            dir,
+            FsyncPolicy::Always,
+            || anyhow::bail!("warm start must not rebuild the base"),
+        )
+        .unwrap();
+        assert_eq!(report.replayed_ingests, 0, "checkpoint superseded the log");
+        assert_eq!(store2.compactions(), 1);
+        assert_eq!(store2.pending_len(), 0);
+        let mut rows: Vec<Vec<ItemId>> = db.iter().map(|t| t.to_vec()).collect();
+        rows.extend(batch);
+        let batch_rebuild = batch_trie(&rows, &vocab);
+        let mut want = Vec::new();
+        serialize::save_to(&batch_rebuild, Some(&vocab), &mut want).unwrap();
+        assert_eq!(
+            base_bytes(&store2, &vocab2),
+            want,
+            "recovered snapshot differs from batch rebuild"
+        );
+    }
+
+    #[test]
+    fn recovery_replays_a_compact_record_without_its_checkpoint() {
+        // Crash after the COMPACT record hit the log but before the
+        // checkpoint/manifest swap: replay must redo the compaction.
+        let vfs = MemVfs::new(14);
+        let dir = Path::new("wal");
+        let (plane, mut store, vocab, _) = open(&vfs, dir).unwrap();
+        let batch = vec![vec![0u32, 1], vec![2u32]];
+        plane.log_ingest(store.epoch(), &batch).unwrap();
+        store.ingest(&batch).unwrap();
+        store.compact(None).unwrap();
+        let expect = base_bytes(&store, &vocab);
+        // Simulate the crash window by appending the barrier record
+        // directly, skipping checkpoint + manifest + truncation.
+        {
+            let mut wal = plane.wal.lock().unwrap();
+            wal.append(store.epoch(), &WalOp::Compact).unwrap();
+            wal.sync().unwrap();
+        }
+        drop(plane);
+
+        let (_, store2, vocab2, report) = DurabilityPlane::open_or_recover(
+            Arc::new(vfs.clone()) as Arc<dyn Vfs>,
+            dir,
+            FsyncPolicy::Always,
+            || anyhow::bail!("warm start must not rebuild the base"),
+        )
+        .unwrap();
+        assert_eq!(report.replayed_ingests, 1);
+        assert_eq!(report.replayed_compacts, 1);
+        assert_eq!(store2.compactions(), 1);
+        assert_eq!(store2.pending_len(), 0);
+        assert_eq!(base_bytes(&store2, &vocab2), expect);
+        // Replayed compaction was folded into a fresh checkpoint.
+        assert!(vfs.exists(&dir.join("ckpt-1.tor")));
+        assert!(!vfs.exists(&dir.join("ckpt-0.tor")));
+    }
+
+    #[test]
+    fn wal_failure_degrades_instead_of_panicking() {
+        let vfs = MemVfs::new(15);
+        let dir = Path::new("wal");
+        let (plane, store, _, _) = open(&vfs, dir).unwrap();
+        vfs.fail_path_containing(Some("wal.log"));
+        let err = plane.log_ingest(store.epoch(), &[vec![1u32]]).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        assert!(plane.is_degraded());
+        assert!(plane.last_error().unwrap().contains("wal append"));
+        // Every further mutation is refused without touching the log.
+        vfs.fail_path_containing(None);
+        let err = plane.log_ingest(store.epoch(), &[vec![2u32]]).unwrap_err();
+        assert!(format!("{err}").contains("degraded"));
+        assert!(plane.log_compact_and_checkpoint(&store).is_err());
+        assert!(plane.stats_fields().contains("degraded=1"));
+    }
+
+    #[test]
+    fn frequent_from_trie_matches_the_miner() {
+        let db = paper_example_db();
+        let mut fi = fpgrowth(&db, MINSUP);
+        fi.canonicalize();
+        let order = ItemOrder::new(&db, min_count(MINSUP, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let derived = frequent_from_trie(&trie);
+        assert_eq!(derived.num_transactions, fi.num_transactions);
+        assert_eq!(derived.sets, fi.sets);
+    }
+
+    #[test]
+    fn stats_fields_report_policy_and_progress() {
+        let vfs = MemVfs::new(16);
+        let (plane, store, _, _) = open(&vfs, Path::new("wal")).unwrap();
+        plane.log_ingest(store.epoch(), &[vec![1u32, 2]]).unwrap();
+        let s = plane.stats_fields();
+        assert!(s.contains("wal_fsync=always"), "{s}");
+        assert!(s.contains("wal_appends=1"), "{s}");
+        assert!(s.contains("degraded=0"), "{s}");
+    }
+}

@@ -580,6 +580,10 @@ fn acceptor_loop(
     for q in &queues {
         q.close();
     }
+    // Orderly-stop drain: make the WAL durable whatever the fsync policy
+    // and flush buffered telemetry, so flipping `shutdown` never drops
+    // acknowledged mutations or emitted records.
+    engine.shutdown_flush();
 }
 
 fn shard_loop(

@@ -3,21 +3,27 @@
 //! and the query service over the built Trie of Rules — served by a
 //! nonblocking high-fanout TCP front end ([`frontend`]) with admission
 //! control ([`backpressure::AdmissionControl`]) and a generation-keyed
-//! result cache ([`crate::query::cache`]).
+//! result cache ([`crate::query::cache`]). The durability plane
+//! ([`durability`]) makes the incremental serving path crash-safe: a
+//! checksummed write-ahead log ([`wal`]) plus atomic checkpoints.
 
 pub mod backpressure;
 pub mod config;
+pub mod durability;
 pub mod frontend;
 pub mod netpoll;
 pub mod pipeline;
 pub mod service;
 pub mod sharding;
 pub mod telemetry;
+pub mod wal;
 
 pub use backpressure::{AdmissionControl, AdmissionPermit, BoundedQueue};
 pub use config::{CounterKind, PipelineConfig};
+pub use durability::{DurabilityPlane, RecoveryReport};
 pub use frontend::{serve_nonblocking, ServeOptions};
 pub use pipeline::{run, PipelineOutput, Source};
 pub use service::{serve_tcp, serve_tcp_blocking, QueryEngine};
 pub use sharding::{PartialCounts, ShardRouter};
 pub use telemetry::{PipelineReport, StageReport};
+pub use wal::FsyncPolicy;

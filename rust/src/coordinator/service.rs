@@ -50,6 +50,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::durability::DurabilityPlane;
 use super::frontend::{self, ServeOptions, MAX_REQUEST_BYTES};
 use crate::data::vocab::Vocab;
 use crate::obs::export::TelemetryExporter;
@@ -269,6 +270,28 @@ pub struct QueryEngine {
     build_threads: usize,
     /// Metrics + telemetry plane (always constructed; see [`ServiceObs`]).
     obs: ServiceObs,
+    /// Crash-safety plane (`--wal-dir`): WAL + checkpoints + degraded
+    /// mode. `None` keeps every response byte-identical to a WAL-less
+    /// engine (the gauges below are only registered when attached).
+    durability: Option<(Arc<DurabilityPlane>, DurabilityObs)>,
+}
+
+/// Pre-bound gauges mirroring the durability plane's counters into the
+/// engine's metrics registry. Registered only by
+/// [`QueryEngine::with_durability`], so a WAL-less engine's `METRICS`
+/// exposition is unchanged.
+struct DurabilityObs {
+    degraded: Gauge,
+    wal_appends: Gauge,
+    checkpoints: Gauge,
+}
+
+impl DurabilityObs {
+    fn refresh(&self, plane: &DurabilityPlane) {
+        self.degraded.set(i64::from(plane.is_degraded()));
+        self.wal_appends.set(plane.wal_appends() as i64);
+        self.checkpoints.set(plane.checkpoints_written() as i64);
+    }
 }
 
 impl QueryEngine {
@@ -299,6 +322,7 @@ impl QueryEngine {
             compact_threshold: 0,
             build_threads: 0,
             obs: ServiceObs::new(Arc::new(MetricsRegistry::new()), None),
+            durability: None,
         }
     }
 
@@ -319,6 +343,45 @@ impl QueryEngine {
             compact_threshold: 0,
             build_threads: 0,
             obs: ServiceObs::new(Arc::new(MetricsRegistry::new()), None),
+            durability: None,
+        }
+    }
+
+    /// Attach the crash-safety plane (`--wal-dir`): every INGEST batch is
+    /// WAL-logged before it is applied or acknowledged, COMPACT
+    /// checkpoints + truncates the log, and a WAL/checkpoint write
+    /// failure flips the service to read-only degraded mode instead of
+    /// panicking. Call *after* [`QueryEngine::with_observability`] so the
+    /// `tor_degraded` / `tor_wal_appends` / `tor_checkpoints` gauges land
+    /// in the final registry.
+    pub fn with_durability(mut self, plane: Arc<DurabilityPlane>) -> Self {
+        let obs = DurabilityObs {
+            degraded: self.obs.registry.gauge("tor_degraded"),
+            wal_appends: self.obs.registry.gauge("tor_wal_appends"),
+            checkpoints: self.obs.registry.gauge("tor_checkpoints"),
+        };
+        obs.refresh(&plane);
+        self.durability = Some((plane, obs));
+        self
+    }
+
+    /// The attached durability plane, if any.
+    pub fn durability(&self) -> Option<&Arc<DurabilityPlane>> {
+        self.durability.as_ref().map(|(p, _)| p)
+    }
+
+    /// Shutdown drain: force the WAL durable (regardless of fsync policy)
+    /// and flush + fsync the telemetry exporter, so an orderly stop loses
+    /// neither acknowledged mutations nor buffered telemetry records.
+    pub fn shutdown_flush(&self) {
+        if let Some((plane, obs)) = &self.durability {
+            if plane.shutdown_flush().is_err() {
+                obs.refresh(plane);
+            }
+        }
+        if let Some(exporter) = &self.obs.exporter {
+            exporter.flush();
+            exporter.sync();
         }
     }
 
@@ -719,6 +782,17 @@ impl QueryEngine {
             }
         }
         let mut store = store.lock().unwrap();
+        // Durability barrier: the batch must be WAL-logged *before* it is
+        // applied or acknowledged (log order = apply order because both
+        // happen under the store lock). A log failure refuses the batch
+        // and flips the service read-only instead of panicking.
+        if let Some((plane, dobs)) = &self.durability {
+            if let Err(e) = plane.log_ingest(store.epoch(), &txs) {
+                dobs.refresh(plane);
+                return format!("ERR degraded (read-only, mutation refused): {e:#}");
+            }
+            dobs.refresh(plane);
+        }
         let report = match store.ingest(&txs) {
             Ok(r) => r,
             Err(e) => return format!("ERR {e:#}"),
@@ -733,6 +807,9 @@ impl QueryEngine {
             match store.compact(Some(self.exec.pool())) {
                 Ok(true) => {
                     suffix = " compacted".to_string();
+                    if let Some(msg) = self.log_compact(&store) {
+                        suffix.push_str(&msg);
+                    }
                     if let Some(t0) = pause_t {
                         let pause = t0.elapsed();
                         self.obs.compact_pause_seconds.observe_duration(pause);
@@ -780,6 +857,21 @@ impl QueryEngine {
         )
     }
 
+    /// Record a completed compaction on the durability plane: barrier
+    /// record, forced fsync, fresh checkpoint, log truncation. Returns a
+    /// response suffix when the plane failed — the compaction itself
+    /// already happened and keeps serving, but further mutations are
+    /// refused (degraded mode).
+    fn log_compact(&self, store: &IncrementalTrie) -> Option<String> {
+        let (plane, dobs) = self.durability.as_ref()?;
+        let out = match plane.log_compact_and_checkpoint(store) {
+            Ok(()) => None,
+            Err(e) => Some(format!(" (durability degraded: {e:#})")),
+        };
+        dobs.refresh(plane);
+        out
+    }
+
     /// `COMPACT`: merge the pending delta into a fresh frozen snapshot on
     /// the shared worker pool and swap it in atomically.
     fn cmd_compact(&self) -> String {
@@ -787,9 +879,18 @@ impl QueryEngine {
             return "ERR COMPACT requires an incremental engine".to_string();
         };
         let mut store = store.lock().unwrap();
+        if let Some((plane, _)) = &self.durability {
+            if plane.is_degraded() {
+                return format!(
+                    "ERR degraded (read-only, mutation refused): {}",
+                    plane.last_error().unwrap_or_else(|| "durability failure".into())
+                );
+            }
+        }
         let pause_t = self.obs.enabled.then(Instant::now);
         match store.compact(Some(self.exec.pool())) {
             Ok(true) => {
+                let durability_suffix = self.log_compact(&store).unwrap_or_default();
                 self.install_view(Arc::new(store.view()));
                 if let Some(t0) = pause_t {
                     let pause = t0.elapsed();
@@ -814,7 +915,7 @@ impl QueryEngine {
                     }
                 }
                 format!(
-                    "OK compacted epoch={} nodes={} compactions={}",
+                    "OK compacted epoch={} nodes={} compactions={}{durability_suffix}",
                     store.epoch(),
                     store.base().num_nodes(),
                     store.compactions()
@@ -958,6 +1059,12 @@ impl QueryEngine {
             self.obs.result_cache_evictions.get(),
             self.cache.as_ref().map_or(0, |c| c.len())
         ));
+        // Durability tail: appended ONLY when a plane is attached, so a
+        // WAL-less engine's STATS bytes are identical to before.
+        if let Some((plane, dobs)) = &self.durability {
+            dobs.refresh(plane);
+            out.push_str(&plane.stats_fields());
+        }
         out
     }
 
@@ -1066,6 +1173,8 @@ pub fn serve_tcp_blocking(
         for w in workers {
             w.join().ok();
         }
+        // Same orderly-stop drain as the nonblocking front end.
+        engine.shutdown_flush();
     });
     Ok(local)
 }

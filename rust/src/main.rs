@@ -12,8 +12,9 @@ use anyhow::{Context, Result};
 
 use trie_of_rules::cli::{self, Command, PipelineOpts};
 use trie_of_rules::coordinator::config::CounterKind;
-use trie_of_rules::coordinator::pipeline::{self, PipelineOutput, Source};
+use trie_of_rules::coordinator::durability::DurabilityPlane;
 use trie_of_rules::coordinator::frontend::{serve_nonblocking, ServeOptions};
+use trie_of_rules::coordinator::pipeline::{self, PipelineOutput, Source};
 use trie_of_rules::coordinator::service::QueryEngine;
 use trie_of_rules::obs::export::TelemetryExporter;
 use trie_of_rules::obs::registry::MetricsRegistry;
@@ -61,8 +62,15 @@ fn run(args: &[String]) -> Result<()> {
             let exec = ParallelExecutor::new(opts.config.effective_query_threads());
             let registry = Arc::new(MetricsRegistry::new());
             let exporter = build_telemetry(&opts)?;
+            let mut durable: Option<Arc<DurabilityPlane>> = None;
             let engine = match load {
                 Some(path) => {
+                    if opts.config.wal_dir.is_some() {
+                        eprintln!(
+                            "warning: --wal-dir needs the incremental engine; a snapshot \
+                             loaded with --load-trie is read-only, so durability is off"
+                        );
+                    }
                     let (trie, vocab) = trie_of_rules::trie::serialize::load(&path)?;
                     let vocab = vocab
                         .context("saved trie has no vocabulary; re-save with one")?;
@@ -72,6 +80,19 @@ fn run(args: &[String]) -> Result<()> {
                         trie.num_representable_rules()
                     );
                     QueryEngine::with_executor(trie, vocab, exec)
+                }
+                None if opts.config.wal_dir.is_some() => {
+                    warn_replay_superseded(replay.as_deref());
+                    let (store, vocab, build_threads, plane) = open_durable_store(
+                        &opts,
+                        Some(exec.pool()),
+                        Some(&registry),
+                        exporter.as_deref(),
+                    )?;
+                    durable = Some(plane);
+                    QueryEngine::with_incremental(store, vocab, exec)
+                        .with_build_threads(build_threads)
+                        .with_compact_threshold(opts.config.compact_threshold)
                 }
                 None => {
                     let out = run_pipeline(
@@ -94,10 +115,17 @@ fn run(args: &[String]) -> Result<()> {
             }
             .with_result_cache(opts.config.result_cache_mb)
             .with_observability(Arc::clone(&registry), exporter.clone());
+            let engine = match durable.take() {
+                Some(plane) => engine.with_durability(plane),
+                None => engine,
+            };
             for cmd in cmds {
                 println!("> {cmd}");
                 println!("{}", engine.execute(&cmd));
             }
+            // Make the WAL tail durable whatever the fsync policy before
+            // the process exits (and flush buffered telemetry).
+            engine.shutdown_flush();
             if let Some(exporter) = &exporter {
                 exporter.emit_metrics(&registry, engine.view().epoch);
                 exporter.sync();
@@ -128,24 +156,38 @@ fn run(args: &[String]) -> Result<()> {
             let exec = ParallelExecutor::new(opts.config.effective_query_threads());
             let registry = Arc::new(MetricsRegistry::new());
             let exporter = build_telemetry(&opts)?;
-            let out = run_pipeline(
-                &opts,
-                Some(exec.pool()),
-                Some(&registry),
-                exporter.as_deref(),
-            )?;
-            eprint!("{}", out.report.render());
-            let (mut store, vocab, report) = out.into_incremental(&opts.config)?;
-            if let Some(sidecar) = &replay {
-                replay_sidecar(&mut store, sidecar)?;
-            }
-            let engine = Arc::new(
-                QueryEngine::with_incremental(store, vocab, exec)
-                    .with_build_threads(report.build_threads)
-                    .with_compact_threshold(opts.config.compact_threshold)
-                    .with_result_cache(opts.config.result_cache_mb)
-                    .with_observability(Arc::clone(&registry), exporter.clone()),
-            );
+            let (store, vocab, build_threads, durable) = if opts.config.wal_dir.is_some() {
+                warn_replay_superseded(replay.as_deref());
+                let (store, vocab, build_threads, plane) = open_durable_store(
+                    &opts,
+                    Some(exec.pool()),
+                    Some(&registry),
+                    exporter.as_deref(),
+                )?;
+                (store, vocab, build_threads, Some(plane))
+            } else {
+                let out = run_pipeline(
+                    &opts,
+                    Some(exec.pool()),
+                    Some(&registry),
+                    exporter.as_deref(),
+                )?;
+                eprint!("{}", out.report.render());
+                let (mut store, vocab, report) = out.into_incremental(&opts.config)?;
+                if let Some(sidecar) = &replay {
+                    replay_sidecar(&mut store, sidecar)?;
+                }
+                (store, vocab, report.build_threads, None)
+            };
+            let engine = QueryEngine::with_incremental(store, vocab, exec)
+                .with_build_threads(build_threads)
+                .with_compact_threshold(opts.config.compact_threshold)
+                .with_result_cache(opts.config.result_cache_mb)
+                .with_observability(Arc::clone(&registry), exporter.clone());
+            let engine = Arc::new(match durable {
+                Some(plane) => engine.with_durability(plane),
+                None => engine,
+            });
             eprintln!("query threads: {}", engine.threads());
             if let Some(exporter) = &exporter {
                 eprintln!("telemetry streaming to {}", exporter.path());
@@ -255,6 +297,66 @@ fn replay_sidecar(
         path.display()
     );
     Ok(())
+}
+
+/// `--wal-dir` recovery subsumes `--replay-delta`: the WAL already covers
+/// the uncompacted tail, so replaying a sidecar on top would double-apply.
+fn warn_replay_superseded(replay: Option<&std::path::Path>) {
+    if let Some(sidecar) = replay {
+        eprintln!(
+            "warning: --replay-delta {} is superseded by --wal-dir recovery; ignoring \
+             the sidecar (the WAL already covers the pending tail — see DESIGN.md §16)",
+            sidecar.display()
+        );
+    }
+}
+
+/// Open (or crash-recover) the incremental store behind the durability
+/// plane rooted at `wal_dir`. On cold start the base is mined by the full
+/// pipeline; on warm start it is restored from the newest valid checkpoint
+/// plus the WAL tail, and no pipeline runs (so `build_threads` reports 0).
+fn open_durable_store(
+    opts: &PipelineOpts,
+    pool: Option<&WorkerPool>,
+    registry: Option<&MetricsRegistry>,
+    exporter: Option<&TelemetryExporter>,
+) -> Result<(
+    trie_of_rules::trie::delta::IncrementalTrie,
+    trie_of_rules::data::Vocab,
+    usize,
+    Arc<DurabilityPlane>,
+)> {
+    let dir = std::path::PathBuf::from(opts.config.wal_dir.as_deref().expect("wal_dir is set"));
+    let policy = opts.config.wal_fsync_policy();
+    let vfs: Arc<dyn trie_of_rules::util::fsio::Vfs> =
+        Arc::new(trie_of_rules::util::fsio::RealVfs);
+    let mut build_threads = None;
+    let (plane, store, vocab, report) = DurabilityPlane::open_or_recover(vfs, &dir, policy, || {
+        let out = run_pipeline(opts, pool, registry, exporter)?;
+        eprint!("{}", out.report.render());
+        let (store, vocab, report) = out.into_incremental(&opts.config)?;
+        build_threads = Some(report.build_threads);
+        Ok((store, vocab))
+    })?;
+    if report.cold_start {
+        eprintln!(
+            "durability: cold start — wrote checkpoint 0 and an empty WAL in {} \
+             (fsync {policy})",
+            dir.display()
+        );
+    } else {
+        eprintln!(
+            "durability: recovered from checkpoint {} in {} — replayed {} ingest(s) / {} \
+             compact(s) ({} transactions), now at epoch {} (fsync {policy})",
+            report.checkpoint_id,
+            dir.display(),
+            report.replayed_ingests,
+            report.replayed_compacts,
+            report.replayed_tx,
+            store.epoch()
+        );
+    }
+    Ok((store, vocab, build_threads.unwrap_or(0), Arc::new(plane)))
 }
 
 /// Open the JSONL telemetry sink when `--telemetry-out` was given.

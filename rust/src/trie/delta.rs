@@ -768,12 +768,38 @@ impl IncrementalTrie {
         })
     }
 
+    /// Rebuild a store from a durability checkpoint (DESIGN.md §16):
+    /// same validation as [`Self::new`], then restore the epoch and
+    /// compaction counters recorded in the recovery manifest. The
+    /// checkpoint is always written by `compact`, so the pending tail is
+    /// empty by construction.
+    pub fn restore(
+        trie: TrieOfRules,
+        db: TransactionDb,
+        frequent: &FrequentItemsets,
+        minsup: f64,
+        epoch: u64,
+        compactions: u64,
+    ) -> Result<IncrementalTrie> {
+        let mut store = Self::new(trie, db, frequent, minsup)?;
+        store.epoch = epoch;
+        store.compactions = compactions;
+        Ok(store)
+    }
+
     // ------------------------------------------------------------------
     // accessors
     // ------------------------------------------------------------------
 
     pub fn base(&self) -> &Arc<TrieOfRules> {
         &self.base
+    }
+
+    /// The base database the current base snapshot was mined on (pending
+    /// transactions are *not* folded in until compaction) — what a
+    /// durability checkpoint persists next to the snapshot.
+    pub fn base_db(&self) -> &TransactionDb {
+        &self.base_db
     }
 
     pub fn minsup(&self) -> f64 {

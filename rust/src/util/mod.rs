@@ -3,6 +3,8 @@
 //! crate's closure — see DESIGN.md §3).
 
 pub mod bitset;
+pub mod crc32;
+pub mod fsio;
 pub mod json;
 pub mod proptest;
 pub mod rng;

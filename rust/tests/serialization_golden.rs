@@ -1,22 +1,29 @@
 //! Golden-file serialization tests: the committed byte fixtures under
-//! `rust/tests/fixtures/` pin the on-disk formats (v1 node records and v2
-//! columns) to exact bytes, generated independently by
-//! `python/tests/gen_golden_fixtures.py`. Any drift — magic, endianness,
-//! column order, preorder numbering, CSR layout, threshold encoding —
-//! fails loudly here instead of silently orphaning previously saved
-//! tries. Cross-version coverage: a v1 fixture loads and re-saves as a
-//! byte-identical v2 (and vice versa via `save_v1`).
+//! `rust/tests/fixtures/` pin the on-disk formats (v1 node records, v2
+//! columns, v3 = columns + CRC32 seal) to exact bytes, generated
+//! independently by `python/tests/gen_golden_fixtures.py`. Any drift —
+//! magic, endianness, column order, preorder numbering, CSR layout,
+//! threshold encoding, checksum polynomial — fails loudly here instead
+//! of silently orphaning previously saved tries. Cross-version coverage:
+//! both legacy fixtures load and re-save as the byte-identical v3 (and
+//! back to v1 via `save_v1`).
+//!
+//! Loader-hardening coverage (DESIGN.md §16): every proper prefix of
+//! every golden must be rejected with a typed `Corrupt` error, and every
+//! single-bit flip must either be rejected (guaranteed for v3 past the
+//! version field by the CRC seal) or at minimum never panic.
 
 mod common;
 
 use common::to_db_sized;
 use trie_of_rules::mining::counts::{min_count, ItemOrder};
 use trie_of_rules::mining::fpgrowth::fpgrowth;
-use trie_of_rules::trie::serialize;
+use trie_of_rules::trie::serialize::{self, LoadError};
 use trie_of_rules::trie::trie::TrieOfRules;
 
 const GOLDEN_V1: &[u8] = include_bytes!("fixtures/tiny_v1.tor");
 const GOLDEN_V2: &[u8] = include_bytes!("fixtures/tiny_v2.tor");
+const GOLDEN_V3: &[u8] = include_bytes!("fixtures/tiny_v3.tor");
 
 /// The fixture database (must match gen_golden_fixtures.py exactly).
 fn fixture_trie() -> TrieOfRules {
@@ -41,15 +48,15 @@ fn tmpfile(tag: &str) -> std::path::PathBuf {
 }
 
 #[test]
-fn pipeline_build_serializes_to_the_golden_v2_bytes() {
+fn pipeline_build_serializes_to_the_golden_v3_bytes() {
     let trie = fixture_trie();
     // The fixture pins the exact shape: 9 frequent itemsets + root.
     assert_eq!(trie.num_nodes(), 9, "fixture mining drifted");
     let mut got = Vec::new();
     serialize::save_to(&trie, None, &mut got).unwrap();
     assert_eq!(
-        got, GOLDEN_V2,
-        "v2 serialization drifted from the committed golden bytes"
+        got, GOLDEN_V3,
+        "v3 serialization drifted from the committed golden bytes"
     );
 }
 
@@ -67,40 +74,58 @@ fn pipeline_build_serializes_to_the_golden_v1_bytes() {
 }
 
 #[test]
-fn golden_v2_loads_and_resaves_byte_identically() {
-    let path = tmpfile("v2_golden");
-    std::fs::write(&path, GOLDEN_V2).unwrap();
+fn legacy_writer_reproduces_the_golden_v2_bytes() {
+    let trie = fixture_trie();
+    let mut got = Vec::new();
+    serialize::save_v2_to(&trie, None, &mut got).unwrap();
+    assert_eq!(
+        got, GOLDEN_V2,
+        "legacy v2 writer drifted from the committed golden bytes"
+    );
+    // The v3 seal is exactly the v2 body with the version renumbered and a
+    // 4-byte trailer appended — pin that structural relationship too.
+    assert_eq!(GOLDEN_V3.len(), GOLDEN_V2.len() + 4);
+    assert_eq!(GOLDEN_V3[8..GOLDEN_V3.len() - 4], GOLDEN_V2[8..]);
+}
+
+#[test]
+fn golden_v3_loads_and_resaves_byte_identically() {
+    let path = tmpfile("v3_golden");
+    std::fs::write(&path, GOLDEN_V3).unwrap();
     let (trie, vocab) = serialize::load(&path).unwrap();
     assert!(vocab.is_none(), "fixture stores no vocabulary");
     let mut resaved = Vec::new();
     serialize::save_to(&trie, None, &mut resaved).unwrap();
-    assert_eq!(resaved, GOLDEN_V2, "v2 load→save round trip not identity");
+    assert_eq!(resaved, GOLDEN_V3, "v3 load→save round trip not identity");
     std::fs::remove_file(&path).ok();
 }
 
 #[test]
-fn golden_v1_loads_and_upgrades_to_the_golden_v2_bytes() {
+fn legacy_goldens_upgrade_to_the_golden_v3_bytes() {
     // Cross-version: the legacy node-record file rebuilds through the
     // builder + freeze, and the canonical preorder renumbering makes its
-    // v2 re-save land on exactly the golden v2 bytes.
-    let path = tmpfile("v1_golden");
-    std::fs::write(&path, GOLDEN_V1).unwrap();
-    let (from_v1, _) = serialize::load(&path).unwrap();
-    let mut upgraded = Vec::new();
-    serialize::save_to(&from_v1, None, &mut upgraded).unwrap();
-    assert_eq!(upgraded, GOLDEN_V2, "v1 → v2 upgrade not byte-identical");
-    // And downgrading the loaded trie reproduces the golden v1 bytes.
-    let down = tmpfile("v1_down");
-    serialize::save_v1(&from_v1, None, &down).unwrap();
-    assert_eq!(std::fs::read(&down).unwrap(), GOLDEN_V1);
-    std::fs::remove_file(&path).ok();
-    std::fs::remove_file(&down).ok();
+    // re-save land on exactly the golden v3 bytes. The v2 fixture loads
+    // straight into the frozen columns and re-seals identically.
+    for (tag, legacy) in [("v1", GOLDEN_V1), ("v2", GOLDEN_V2)] {
+        let path = tmpfile(&format!("{tag}_golden"));
+        std::fs::write(&path, legacy).unwrap();
+        let (loaded, _) = serialize::load(&path).unwrap();
+        let mut upgraded = Vec::new();
+        serialize::save_to(&loaded, None, &mut upgraded).unwrap();
+        assert_eq!(upgraded, GOLDEN_V3, "{tag} → v3 upgrade not byte-identical");
+        // And downgrading the loaded trie reproduces the golden v1 bytes.
+        let down = tmpfile(&format!("{tag}_down"));
+        serialize::save_v1(&loaded, None, &down).unwrap();
+        assert_eq!(std::fs::read(&down).unwrap(), GOLDEN_V1);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&down).ok();
+    }
 }
 
 #[test]
 fn golden_files_answer_queries_identically_to_the_fresh_build() {
-    let path = tmpfile("v2_answers");
-    std::fs::write(&path, GOLDEN_V2).unwrap();
+    let path = tmpfile("v3_answers");
+    std::fs::write(&path, GOLDEN_V3).unwrap();
     let (loaded, _) = serialize::load(&path).unwrap();
     let fresh = fixture_trie();
     assert_eq!(loaded.items_column(), fresh.items_column());
@@ -114,4 +139,52 @@ fn golden_files_answer_queries_identically_to_the_fresh_build() {
     assert_eq!(loaded.support_of(&[0, 2]), Some(3));
     assert_eq!(loaded.support_of(&[0, 3]), None);
     std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncation_at_every_offset_is_rejected_never_panics() {
+    // Every proper prefix of every golden must come back as a typed
+    // `Corrupt` — never a panic, never a silently short trie. This walks
+    // each format through every possible torn-write length.
+    for (tag, golden) in [("v1", GOLDEN_V1), ("v2", GOLDEN_V2), ("v3", GOLDEN_V3)] {
+        for cut in 0..golden.len() {
+            match serialize::try_load_from(&mut &golden[..cut]) {
+                Err(LoadError::Corrupt(_)) => {}
+                Ok(_) => panic!("{tag} prefix of {cut} bytes loaded as a valid trie"),
+                Err(other) => panic!("{tag} prefix of {cut} bytes: expected Corrupt, got {other}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn bit_flip_fuzz_rejects_sealed_corruption_and_never_panics() {
+    // v3: any single-bit flip past the magic+version head is caught by
+    // the CRC seal (the seal covers the head too, but a flip inside the
+    // version field can legitimately re-route the file to a legacy
+    // parser, so only offsets >= 8 carry the hard rejection guarantee).
+    let mut buf = GOLDEN_V3.to_vec();
+    for byte in 0..buf.len() {
+        for bit in 0..8 {
+            buf[byte] ^= 1 << bit;
+            let out = serialize::try_load_from(&mut &buf[..]);
+            buf[byte] ^= 1 << bit;
+            if byte >= 8 {
+                assert!(out.is_err(), "v3 flip at {byte}.{bit} accepted");
+            }
+        }
+    }
+    // Legacy formats carry no checksum, so a flip may load (v2) or be
+    // rejected by semantic validation — either way the loader must
+    // return, not panic, for every single-bit corruption.
+    for golden in [GOLDEN_V1, GOLDEN_V2] {
+        let mut buf = golden.to_vec();
+        for byte in 0..buf.len() {
+            for bit in 0..8 {
+                buf[byte] ^= 1 << bit;
+                let _ = serialize::try_load_from(&mut &buf[..]);
+                buf[byte] ^= 1 << bit;
+            }
+        }
+    }
 }
