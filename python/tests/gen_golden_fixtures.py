@@ -3,7 +3,14 @@
 
 Mirrors, byte for byte, the rust writers in rust/src/trie/serialize.rs:
 
-* ``tiny_v3.tor`` — the current v3 format (``save_to``): the v2 columnar
+* ``tiny_v4.tor`` — the current v4 succinct format (``save_to`` /
+  ``encode_v4``): LEB128-varint preamble sealed by its own CRC, a
+  32-byte-per-entry table of contents (sealed by its own CRC), and ten
+  64-byte-aligned sections — items re-coded by frequency rank, counts as
+  parent-deltas, everything bit-packed at the column's minimal width
+  (LSB-first) with 8 guard zero bytes, each section sealed by a CRC over
+  its payload,
+* ``tiny_v3.tor`` — the legacy v3 format (``save_v3_to``): the v2 columnar
   body with version 3 in the preamble, sealed by a little-endian
   ``zlib.crc32`` trailer over every preceding byte,
 * ``tiny_v2.tor`` — the legacy v2 columnar format (``save_v2_to``),
@@ -139,6 +146,7 @@ def build_columns():
         "n": n,
         "minc": minc,
         "freqs": freqs,
+        "frequent": frequent,
         "items": items,
         "counts": counts,
         "parents": parents,
@@ -206,10 +214,130 @@ def v1_bytes(c) -> bytes:
     return out
 
 
+# -- v4 succinct format ----------------------------------------------------
+
+V4_ALIGN = 64
+MAX_PACKED_WIDTH = 56
+GUARD_BYTES = 8
+
+# Section ids, mirroring serialize.rs.
+SEC_ITEMS_RANK = 1
+SEC_COUNT_DELTA = 2
+SEC_PARENTS = 3
+SEC_DEPTHS = 4
+SEC_SUBTREE_END = 5
+SEC_CHILD_OFFSETS = 6
+SEC_CHILD_ITEMS_RANK = 7
+SEC_CHILD_TARGETS = 8
+SEC_HEADER_OFFSETS = 9
+SEC_HEADER_NODES = 10
+
+
+def varint(v: int) -> bytes:
+    """Canonical LEB128, mirroring util::varint::encode_u64."""
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def bitpack(vals, width: int) -> bytes:
+    """LSB-first fixed-width packing + 8 guard zero bytes, mirroring
+    util::bitpack::pack (a value's bits land at [i*w, (i+1)*w) of the
+    little-endian byte stream)."""
+    if not vals or width == 0:
+        return b""
+    total = 0
+    for i, v in enumerate(vals):
+        total |= v << (i * width)
+    nbits = len(vals) * width
+    return total.to_bytes((nbits + 7) // 8, "little") + b"\x00" * GUARD_BYTES
+
+
+def packed_section(sid: int, vals):
+    """(id, codec, width, count, payload), mirroring packed_section in
+    serialize.rs: minimal bit-packed width, raw u64 fallback above 56."""
+    mx = max(vals) if vals else 0
+    width = mx.bit_length()
+    if width <= MAX_PACKED_WIDTH:
+        return (sid, 0, width, len(vals), bitpack(vals, width))
+    payload = b"".join(struct.pack("<Q", v) for v in vals)
+    return (sid, 1, 64, len(vals), payload)
+
+
+def align_up(x: int) -> int:
+    return (x + V4_ALIGN - 1) // V4_ALIGN * V4_ALIGN
+
+
+def pad(buf: bytearray) -> None:
+    buf.extend(b"\x00" * (align_up(len(buf)) - len(buf)))
+
+
+def v4_bytes(c) -> bytes:
+    nn = len(c["items"])
+    rank = {it: r for r, it in enumerate(c["frequent"])}
+    sections = [
+        packed_section(SEC_ITEMS_RANK, [rank[it] for it in c["items"][1:]]),
+        packed_section(
+            SEC_COUNT_DELTA,
+            [c["counts"][c["parents"][i]] - c["counts"][i] for i in range(1, nn)],
+        ),
+        packed_section(SEC_PARENTS, c["parents"][1:]),
+        packed_section(SEC_DEPTHS, c["depths"][1:]),
+        packed_section(SEC_SUBTREE_END, c["subtree_end"]),
+        packed_section(SEC_CHILD_OFFSETS, c["child_offsets"]),
+        packed_section(SEC_CHILD_ITEMS_RANK, [rank[it] for it in c["child_items"]]),
+        packed_section(SEC_CHILD_TARGETS, c["child_targets"]),
+        packed_section(SEC_HEADER_OFFSETS, c["header_offsets"]),
+        packed_section(SEC_HEADER_NODES, c["header_nodes"]),
+    ]
+
+    out = bytearray()
+    out += b"TOR\x01"
+    out += struct.pack("<I", 4)
+    out += varint(c["n"])
+    out += varint(c["minc"])
+    out += varint(NUM_ITEMS)
+    for f in c["freqs"]:
+        out += varint(f)
+    out += b"\x00"  # vocab flag: not stored
+    out += varint(nn)
+    # Representable-rule count: sum of (depth - 1) over non-root nodes.
+    out += varint(sum(d - 1 for d in c["depths"][1:]))
+    out += varint(len(sections))
+    out += struct.pack("<I", zlib.crc32(bytes(out)) & 0xFFFFFFFF)
+    pad(out)
+
+    toc_start = len(out)
+    toc_end = toc_start + align_up(len(sections) * 32 + 4)
+    offset = toc_end
+    for sid, codec, width, count, payload in sections:
+        out += bytes([sid, codec, width, 0])
+        out += struct.pack("<I", zlib.crc32(payload) & 0xFFFFFFFF)
+        out += struct.pack("<Q", count)
+        out += struct.pack("<Q", offset)
+        out += struct.pack("<Q", len(payload))
+        offset += align_up(len(payload))
+    out += struct.pack("<I", zlib.crc32(bytes(out[toc_start:])) & 0xFFFFFFFF)
+    pad(out)
+    assert len(out) == toc_end
+
+    for _, _, _, _, payload in sections:
+        out += payload
+        pad(out)
+    assert len(out) == offset
+    return bytes(out)
+
+
 def main():
     c = build_columns()
     fixtures = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures"
     fixtures.mkdir(parents=True, exist_ok=True)
+    (fixtures / "tiny_v4.tor").write_bytes(v4_bytes(c))
     (fixtures / "tiny_v3.tor").write_bytes(v3_bytes(c))
     (fixtures / "tiny_v2.tor").write_bytes(v2_bytes(c))
     (fixtures / "tiny_v1.tor").write_bytes(v1_bytes(c))
@@ -220,8 +348,8 @@ def main():
     print(f"parents: {c['parents']}")
     print(f"depths:  {c['depths']}")
     print(
-        f"v3: {len(v3_bytes(c))} bytes, v2: {len(v2_bytes(c))} bytes, "
-        f"v1: {len(v1_bytes(c))} bytes"
+        f"v4: {len(v4_bytes(c))} bytes, v3: {len(v3_bytes(c))} bytes, "
+        f"v2: {len(v2_bytes(c))} bytes, v1: {len(v1_bytes(c))} bytes"
     )
 
 

@@ -12,21 +12,36 @@
 //! * parallel: the morsel-driven executor vs the sequential one on a
 //!   full-traversal RQL query at 2 and 4 threads (parity asserted before
 //!   timing), written to `BENCH_ablation_trie.json` via the shared
-//!   `BenchReport` helper.
+//!   `BenchReport` helper;
+//! * snapshot (DESIGN.md §17): bytes-per-rule of the succinct v4 format
+//!   vs v3 raw columns vs the RuleFrame (compression ablation across
+//!   metric modes, gated at v4 ≤ 0.5× v3 on the retail workload), and
+//!   cold-open latency — v3 full decode vs v4 owned decode vs v4 `mmap`
+//!   (validating and trusted) — written to `BENCH_snapshot.json`, with
+//!   randomized owned-vs-mapped query parity (rows, order, work
+//!   counters) and a byte-identical copy-on-write re-save gated in the
+//!   same run. `--test` shrinks the workloads for the CI smoke; every
+//!   gate still runs.
 
 use std::time::Instant;
 
 use trie_of_rules::bench_support::harness::{bench, BenchConfig};
 use trie_of_rules::bench_support::report::{BenchReport, Report};
-use trie_of_rules::bench_support::workloads;
+use trie_of_rules::bench_support::workloads::{self, rql_queries, QuerySkew};
 use trie_of_rules::query::parallel::ParallelExecutor;
 use trie_of_rules::query::query_trie;
 use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::trie::serialize::{self, MetricMode};
 use trie_of_rules::trie::trie::FindOutcome;
 use trie_of_rules::trie::TrieBuilder;
 
 fn main() {
-    let w = workloads::groceries(0.005);
+    let test_mode = std::env::args().skip(1).any(|a| a == "--test");
+    let w = if test_mode {
+        workloads::groceries(0.015)
+    } else {
+        workloads::groceries(0.005)
+    };
     let rules = w.search_rules();
     let k = (rules.len() / 10).max(1);
     let cfg = BenchConfig::default();
@@ -215,9 +230,124 @@ fn main() {
         );
     }
 
+    // --- snapshot: succinct v4 columns vs v3 vs RuleFrame ---------------
+    // The paper's compression claim, measured on the retail-like workload
+    // (ISSUE 9 gate: v4 structure bytes ≤ 0.5× v3). Encoded without the
+    // vocabulary so the ratio compares rule-structure encodings, not
+    // shared item-name metadata.
+    let snap = if test_mode {
+        workloads::retail_scaled(0.5, 0.003)
+    } else {
+        workloads::retail_scaled(1.0, 0.002)
+    };
+    let rules_per_file = snap.trie.num_representable_rules().max(1) as f64;
+    let mut v3_bytes = Vec::new();
+    serialize::save_v3_to(&snap.trie, None, &mut v3_bytes).expect("v3 encode");
+    let v4_omit = serialize::encode_v4(&snap.trie, None).expect("v4 encode");
+    let v4_raw =
+        serialize::encode_v4_opts(&snap.trie, None, MetricMode::Raw).expect("v4 raw encode");
+    let v4_quant = serialize::encode_v4_opts(&snap.trie, None, MetricMode::Quantized)
+        .expect("v4 quantized encode");
+    let frame_bytes = snap.frame.memory_bytes();
+    for (label, nbytes) in [
+        ("v3", v3_bytes.len()),
+        ("v4-omit", v4_omit.len()),
+        ("v4-raw-metrics", v4_raw.len()),
+        ("v4-quantized-metrics", v4_quant.len()),
+        ("ruleframe-resident", frame_bytes),
+    ] {
+        let cells = [
+            ("bytes", nbytes as f64),
+            ("bytes_per_rule", nbytes as f64 / rules_per_file),
+        ];
+        report.row(&format!("snapshot-bytes/{label}"), &cells);
+        bench_json.row(&format!("snapshot-bytes/{label}"), &cells);
+    }
+    let compression = v4_omit.len() as f64 / v3_bytes.len() as f64;
+    bench_json.row("snapshot-bytes/v4-over-v3", &[("ratio", compression)]);
+    assert!(
+        compression <= 0.5,
+        "v4 compression regressed: {} bytes vs v3 {} (ratio {compression:.3} > 0.5)",
+        v4_omit.len(),
+        v3_bytes.len()
+    );
+
+    // --- snapshot: cold-open latency + mapped-backend parity ------------
+    // Restart cost by path: v3 full decode, v4 owned decode, v4 mmap with
+    // full validation, v4 mmap trusted (header seals only — the
+    // durability plane's recovery path). Page cache is warm for all four,
+    // so this isolates the CPU cost a restart pays before serving.
+    let mut snapshot_json = BenchReport::new("snapshot");
+    let dir = std::env::temp_dir().join(format!("tor_snapshot_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let vocab = snap.db.vocab();
+    let v3_path = dir.join("snap_v3.tor");
+    {
+        let mut buf = Vec::new();
+        serialize::save_v3_to(&snap.trie, Some(vocab), &mut buf).expect("v3 encode");
+        std::fs::write(&v3_path, &buf).expect("v3 write");
+    }
+    let v4_path = dir.join("snap_v4.tor");
+    serialize::save(&snap.trie, Some(vocab), &v4_path).expect("v4 save");
+
+    // Parity gate first: randomized queries must agree — rows, order, AND
+    // work counters — between the owned trie and every v4 reopen flavor,
+    // and a mapped re-save must be a byte copy of the image (COW).
+    let (mapped, _) = serialize::open(&v4_path).expect("v4 mmap open");
+    let (trusted, _) = serialize::open_trusted(&v4_path).expect("v4 trusted open");
+    let (owned, _) = serialize::try_load(&v4_path).expect("v4 owned load");
+    assert_eq!(mapped.backend_name(), "mmap");
+    for q in &rql_queries(&snap, 24, QuerySkew::Zipf(1.1), 0x5AFE_0E11).queries {
+        let want = query_trie(&snap.trie, vocab, q).expect("owned query").into_rows();
+        for (label, t) in [("mmap", &mapped), ("mmap-trusted", &trusted), ("owned-v4", &owned)] {
+            let got = query_trie(t, vocab, q).expect("reopened query").into_rows();
+            assert_eq!(want.rows, got.rows, "[{label}] rows diverged on `{q}`");
+            assert_eq!(want.stats, got.stats, "[{label}] counters diverged on `{q}`");
+        }
+    }
+    let cow_path = dir.join("snap_v4_cow.tor");
+    serialize::save(&mapped, Some(vocab), &cow_path).expect("cow re-save");
+    assert_eq!(
+        std::fs::read(&v4_path).unwrap(),
+        std::fs::read(&cow_path).unwrap(),
+        "mapped re-save was not a byte copy of the image"
+    );
+
+    let t_v3 = time(|| serialize::try_load(&v3_path).expect("v3 load").0.num_nodes() as f64);
+    let t_v4_owned = time(|| serialize::try_load(&v4_path).expect("v4 load").0.num_nodes() as f64);
+    let t_v4_validate = time(|| serialize::open(&v4_path).expect("v4 open").0.num_nodes() as f64);
+    let t_v4_trusted =
+        time(|| serialize::open_trusted(&v4_path).expect("trusted open").0.num_nodes() as f64);
+    for (label, t) in [
+        ("cold-open/v3-load", t_v3),
+        ("cold-open/v4-owned-load", t_v4_owned),
+        ("cold-open/v4-mmap-validate", t_v4_validate),
+        ("cold-open/v4-mmap", t_v4_trusted),
+    ] {
+        let cells = [("mean_s", t), ("speedup_vs_v3", t_v3 / t.max(1e-12))];
+        report.row(label, &cells);
+        snapshot_json.row(label, &cells);
+    }
+    snapshot_json.row(
+        "cold-open/file-bytes",
+        &[
+            ("v3_bytes", std::fs::metadata(&v3_path).unwrap().len() as f64),
+            ("v4_bytes", std::fs::metadata(&v4_path).unwrap().len() as f64),
+        ],
+    );
+    let cold_open_speedup = t_v3 / t_v4_trusted.max(1e-12);
+    assert!(
+        cold_open_speedup >= 10.0,
+        "v4 mmap cold open only {cold_open_speedup:.1}x faster than v3 full load \
+         ({t_v4_trusted:.6}s vs {t_v3:.6}s)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
     print!("{}", report.render());
     report.save("ablation_trie").expect("save results");
     let path = bench_json.save().expect("save BENCH_ablation_trie.json");
+    eprintln!("[ablation_trie] wrote {}", path.display());
+    let path = snapshot_json.save().expect("save BENCH_snapshot.json");
     eprintln!("[ablation_trie] wrote {}", path.display());
 }
 

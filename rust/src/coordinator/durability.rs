@@ -8,7 +8,8 @@
 //! wal-dir/
 //!   MANIFEST       tiny sealed pointer: newest valid checkpoint + wal seq
 //!   wal.log        write-ahead log of INGEST/COMPACT since that checkpoint
-//!   ckpt-<id>.tor  v3 snapshot of the base trie (with vocab, CRC-sealed)
+//!   ckpt-<id>.tor  v4 snapshot of the base trie (with vocab, CRC-sealed,
+//!                  mmap-servable; v3-era checkpoints still recover)
 //!   ckpt-<id>.db   sealed dump of the base transaction database
 //! ```
 //!
@@ -220,11 +221,19 @@ impl DurabilityPlane {
         wal_path: &Path,
     ) -> Result<(DurabilityPlane, IncrementalTrie, Vocab, RecoveryReport)> {
         let manifest = Manifest::load(vfs.as_ref(), manifest_path)?;
-        let (trie, vocab) = serialize::try_load_with(
+        // v4 checkpoints are served straight from the mapping. Trusted
+        // mode: this plane wrote the file itself (save_with + fsync +
+        // atomic rename) and the manifest names it — only the header
+        // seals are re-verified, so recovery cost is O(WAL replay), not
+        // O(snapshot bytes). Files from outside this trust boundary go
+        // through `serialize::open` / `load`, which verify everything.
+        // Pre-v4 checkpoints fall back to the owned loader inside.
+        let (trie, vocab) = serialize::open_with_mode(
             vfs.as_ref(),
             &checkpoint_trie_path(dir, manifest.checkpoint_id),
+            serialize::OpenMode::Trusted,
         )
-        .map_err(|e| anyhow::anyhow!("load checkpoint {}: {e}", manifest.checkpoint_id))?;
+        .map_err(|e| anyhow::anyhow!("open checkpoint {}: {e}", manifest.checkpoint_id))?;
         let vocab =
             vocab.ok_or_else(|| anyhow::anyhow!("checkpoint snapshot is missing its vocab"))?;
         let db = serialize::load_db_with(

@@ -926,9 +926,10 @@ impl QueryEngine {
         }
     }
 
-    /// `SNAPSHOT /path`: persist the current frozen base (v2 columnar) and,
-    /// when updates are pending, a `<path>.delta` sidecar holding the
-    /// uncompacted transaction tail.
+    /// `SNAPSHOT /path`: persist the current frozen base (v4 succinct
+    /// columnar; copy-on-write when the base is itself an `mmap`'d v4
+    /// image) and, when updates are pending, a `<path>.delta` sidecar
+    /// holding the uncompacted transaction tail.
     fn cmd_snapshot(&self, rest: &str) -> String {
         let path = rest.trim();
         if path.is_empty() {
@@ -1058,6 +1059,15 @@ impl QueryEngine {
             self.obs.result_cache_misses.get(),
             self.obs.result_cache_evictions.get(),
             self.cache.as_ref().map_or(0, |c| c.len())
+        ));
+        // Storage-backend tail (append-only): which ColumnStore serves the
+        // base and how many bytes are mmap'd (0 for the owned backend,
+        // where mem_kib above is the whole story; for mmap, mem_kib is the
+        // resident side-structure footprint and mapped_kib the image).
+        out.push_str(&format!(
+            " backend={} mapped_kib={}",
+            view.base.backend_name(),
+            view.base.mapped_bytes() / 1024
         ));
         // Durability tail: appended ONLY when a plane is attached, so a
         // WAL-less engine's STATS bytes are identical to before.

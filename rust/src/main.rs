@@ -71,13 +71,16 @@ fn run(args: &[String]) -> Result<()> {
                              loaded with --load-trie is read-only, so durability is off"
                         );
                     }
-                    let (trie, vocab) = trie_of_rules::trie::serialize::load(&path)?;
+                    // v4 snapshots are validated then served zero-copy from
+                    // the mapping; pre-v4 files decode into owned columns.
+                    let (trie, vocab) = trie_of_rules::trie::serialize::open(&path)?;
                     let vocab = vocab
                         .context("saved trie has no vocabulary; re-save with one")?;
                     eprintln!(
-                        "loaded trie: {} nodes, {} rules",
+                        "loaded trie: {} nodes, {} rules, {} backend",
                         trie.num_nodes(),
-                        trie.num_representable_rules()
+                        trie.num_representable_rules(),
+                        trie.backend_name()
                     );
                     QueryEngine::with_executor(trie, vocab, exec)
                 }

@@ -15,6 +15,11 @@
 //! and a single lock keeps hit/miss/eviction accounting exact for the
 //! observability plane (`tor_result_cache_*` series).
 //!
+//! Cache keys are storage-backend independent: a response rendered from an
+//! owned base and one rendered from an `mmap`'d v4 base are byte-identical
+//! (backend parity), so entries survive an owned↔mapped base swap as long
+//! as the generation does.
+//!
 //! [`MergedView`]: crate::trie::delta::MergedView
 
 use std::collections::{BTreeMap, HashMap};

@@ -14,6 +14,14 @@
 //! totally ordered by `(sort key under f64::total_cmp, rule)` — rules are
 //! unique per query population, so the order is deterministic and the
 //! parity tests can compare results exactly.
+//!
+//! The trie backend is **storage-backend agnostic**: it only touches the
+//! [`TrieOfRules`] accessor surface, which PR 9 re-routed through the
+//! `trie::store::ColumnStore` trait. The same executor therefore runs
+//! unmodified over owned columns (builder freeze, v1–v3 loads) and over a
+//! zero-copy `mmap`'d v4 snapshot — rows, order, and work counters are
+//! parity-exact across backends (`rust/tests/query_parity.rs` gates the
+//! matrix).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

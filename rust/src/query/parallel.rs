@@ -24,6 +24,12 @@
 //! Work counters sum to the sequential counters for the same reason the
 //! morsel invariants give: no subtree is ever cut.
 //!
+//! Morsel boundaries come from `subtree_end`, which every storage backend
+//! serves through the same `trie::store::ColumnStore` accessors — so the
+//! partition, the per-morsel sweeps, and the merged output are identical
+//! whether the columns are owned or an `mmap`'d v4 image, at any thread
+//! degree.
+//!
 //! **Pool lifecycle.** [`WorkerPool`] is a small reusable pool built on
 //! `std::thread` (no new dependencies — DESIGN.md §3): helpers park on a
 //! condvar and claim task indices from a shared cursor; `run` borrows its

@@ -6,6 +6,12 @@
 //! preorder-renumbered, columnar [`TrieOfRules`] produced by
 //! [`TrieBuilder::freeze`].
 //!
+//! `freeze()` always materializes the **owned** `ColumnStore` backend
+//! (`trie::store::OwnedColumns`); the `mmap`-served v4 backend only ever
+//! comes from `serialize::open` on a written snapshot. Both sit behind the
+//! same accessor surface, so everything downstream of freeze is
+//! backend-oblivious.
+//!
 //! The builder intentionally keeps the *old* pointer-shaped read paths
 //! (child-vector `walk`, stack-DFS traversal, on-demand metric
 //! computation): they are the reference oracle for the freeze parity

@@ -17,6 +17,12 @@
 //!   order, and the executor work counters are parity-exact with a batch
 //!   rebuild on the cumulative data (`rust/tests/incremental_parity.rs`).
 //!
+//! The frozen side of a merged view goes through the same
+//! `trie::store::ColumnStore`-backed accessors as every other read path,
+//! so a base recovered as an `mmap`'d v4 checkpoint serves ingest-and-
+//! query traffic exactly like an owned base; compaction then freezes a
+//! fresh owned snapshot as before.
+//!
 //! ## Why this is exact (DESIGN.md §13 has the full argument)
 //!
 //! **Candidate completeness** (Slimani's incremental-extraction setting,

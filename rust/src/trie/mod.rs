@@ -14,6 +14,7 @@ pub mod compound;
 pub mod delta;
 pub mod node;
 pub mod serialize;
+pub mod store;
 #[allow(clippy::module_inception)]
 pub mod trie;
 pub mod viz;

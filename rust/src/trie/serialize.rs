@@ -3,30 +3,52 @@
 //! Trie of Rules once, save it, and serve queries from the saved structure
 //! without re-mining.
 //!
-//! Versioned little-endian binary format. **v3** (current) writes the
-//! frozen columnar layout directly — one length-prefixed column per array
-//! — and seals the file with a CRC32 trailer so a torn or bit-flipped
-//! snapshot is rejected before any semantic validation:
+//! Versioned little-endian binary format. **v4** (current, DESIGN.md §17)
+//! writes *succinct* columns laid out for zero-deserialization `mmap`
+//! serving:
 //!
 //! ```text
-//! magic "TOR\x01" | version u32 (= 3)
-//! num_transactions u64 | min_count u64
-//! num_items u32 | freqs: num_items × u64
-//! vocab flag u8 | if 1: num_items × (len u32, utf-8 bytes)
-//! columns, each prefixed with its u32 element count, preorder row 0 = root:
-//!   items u32[] | counts u64[] | parents u32[] | depths u16[]
-//!   subtree_end u32[]
-//!   child_offsets u32[] | child_items u32[] | child_targets u32[]
-//!   header_offsets u32[] | header_nodes u32[]
-//! crc32 u32  (IEEE, over every preceding byte incl. magic)
+//! magic "TOR\x01" | version u32 (= 4)
+//! preamble, LEB128 varints: num_transactions, min_count, num_items,
+//!   freqs…, vocab flag u8 (if 1: per item varint len + utf-8 bytes),
+//!   num_rows, num_rules, section_count | crc32 u32 over every preceding
+//!   byte | zero-pad to 64
+//! TOC: section_count × 32-byte entries
+//!   { id u8, codec u8, width u8, flags u8, crc32(payload) u32,
+//!     count u64, offset u64 (absolute, 64-aligned), len u64 }
+//!   | crc32 u32 over the entries | zero-pad to 64
+//! sections, ascending id, each 64-aligned and zero-padded to 64:
+//!   1 items (frequency ranks)      2 count deltas (parent − node)
+//!   3 parents      4 depths        5 subtree_end    6 child_offsets
+//!   7 child items (ranks)          8 child_targets
+//!   9 header_offsets              10 header_nodes
+//!   16+slot optional metric columns (raw f64 / quantized f32)
 //! ```
 //!
-//! Metric columns are *derived* state (pure functions of counts, parent
-//! counts and item frequencies) and are recomputed on load rather than
-//! stored. The derived structural columns (subtree ranges, both CSRs) are
-//! stored *and* re-derived on load; any disagreement rejects the file.
+//! Structure payloads are bit-packed at the minimal width of the column's
+//! maximum (codec 0, [`crate::util::bitpack`]) or raw `u64` when wider
+//! than 56 bits (codec 1). Items are re-coded by frequency rank; counts
+//! are stored as the delta against the parent's count (a child's support
+//! never exceeds its parent's, so deltas are small and decode in preorder
+//! where the parent always precedes the child). The 64-byte alignment and
+//! per-section CRCs let [`open`] serve queries **directly from an `mmap`**
+//! — validation is one CRC pass plus one structural sweep over the packed
+//! data; nothing is decoded into heap columns. [`open_trusted`] goes
+//! further for files this process wrote itself (the durability plane's
+//! checkpoints): it verifies the preamble + TOC seals and every section
+//! extent, then serves without touching the payload bytes at all — cold
+//! open is O(header), not O(file), which is what makes restart instant.
 //!
-//! **v2** (same body, no trailer) and the **v1** node-record format
+//! **v3** writes the frozen columnar layout directly — one
+//! length-prefixed column per array, CRC32 trailer ([`save_v3_to`] keeps
+//! this writer for interop). Metric columns are *derived* state (pure
+//! functions of counts, parent counts and item frequencies) and are
+//! recomputed on load rather than stored (v4 may optionally embed them
+//! for zero-copy column scans). The derived structural columns (subtree
+//! ranges, both CSRs) are stored *and* re-validated on load; any
+//! disagreement rejects the file.
+//!
+//! **v2** (v3 body, no trailer) and the **v1** node-record format
 //! (`num_nodes u32` + `(item u32, parent u32, count u64)` triples in
 //! parent-before-child order) are still read; v1 files rebuild through
 //! [`TrieBuilder`] and freeze, and can still be written via [`save_v1`]
@@ -50,21 +72,64 @@
 
 use std::io::{BufReader, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::data::transaction::TransactionDb;
-use crate::data::vocab::Vocab;
+use crate::data::vocab::{ItemId, Vocab};
 use crate::mining::counts::ItemOrder;
+use crate::rules::metrics::Metric;
 use crate::trie::builder::TrieBuilder;
+use crate::trie::node::{NodeIdx, ROOT, ROOT_ITEM};
+use crate::trie::store::{
+    MappedColumns, MappedSections, SectionView, CODEC_BITPACK, CODEC_F32Q, CODEC_F64, CODEC_U64,
+};
 use crate::trie::trie::TrieOfRules;
-use crate::util::crc32::Crc32Writer;
+use crate::util::crc32::{Crc32, Crc32Writer};
 use crate::util::fsio::{self, RealVfs, Vfs};
+use crate::util::{bitpack, varint};
 
 const MAGIC: [u8; 4] = *b"TOR\x01";
 const VERSION_V1: u32 = 1;
 const VERSION_V2: u32 = 2;
 const VERSION_V3: u32 = 3;
+const VERSION_V4: u32 = 4;
+
+/// v4 layout alignment: every section starts on a 64-byte boundary (cache
+/// line; a fortiori 8-byte aligned for zero-copy f64 column views).
+const V4_ALIGN: usize = 64;
+
+// v4 section ids (TOC `id` byte). 1–10 are the required structure
+// sections; `16 + metric slot` are the optional metric columns.
+const SEC_ITEMS_RANK: u8 = 1;
+const SEC_COUNT_DELTA: u8 = 2;
+const SEC_PARENTS: u8 = 3;
+const SEC_DEPTHS: u8 = 4;
+const SEC_SUBTREE_END: u8 = 5;
+const SEC_CHILD_OFFSETS: u8 = 6;
+const SEC_CHILD_ITEMS_RANK: u8 = 7;
+const SEC_CHILD_TARGETS: u8 = 8;
+const SEC_HEADER_OFFSETS: u8 = 9;
+const SEC_HEADER_NODES: u8 = 10;
+const SEC_METRIC_BASE: u8 = 16;
+
+/// How [`encode_v4_opts`] persists the ten metric columns. They are
+/// always derivable from the structure sections; embedding trades file
+/// size for zero-copy (`Raw`) or approximate (`Quantized`) column scans.
+/// The default writer ([`save`]/[`save_to`]) omits them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricMode {
+    /// No metric sections (smallest file; columns derived on demand).
+    Omit,
+    /// Raw `f64` sections (codec 2) — served zero-copy from the map and
+    /// verified bit-identical against the derivation on owned loads.
+    Raw,
+    /// Quantized `f32` sections (codec 3) — half the metric bytes; mapped
+    /// serving ignores them in favor of exact derivation (they exist for
+    /// the compression-ablation bench and external readers).
+    Quantized,
+}
 
 /// Magic of the incremental delta sidecar (`<snapshot>.delta`).
 const DELTA_MAGIC: [u8; 4] = *b"TORD";
@@ -132,20 +197,32 @@ fn corrupt<T>(msg: impl Into<String>) -> LoadResult<T> {
 // -- snapshot save --------------------------------------------------------
 
 /// Save a trie (and optionally its vocabulary) to `path` in the current
-/// (v3, columnar + CRC trailer) format. Crash-safe: write-temp + fsync +
+/// (v4, succinct `mmap`-servable) format. Crash-safe: write-temp + fsync +
 /// atomic rename.
 pub fn save(trie: &TrieOfRules, vocab: Option<&Vocab>, path: &Path) -> Result<()> {
     save_with(&RealVfs, trie, vocab, path)
 }
 
 /// [`save`] over an injectable filesystem.
+///
+/// Copy-on-write fast path: a trie served straight from an `mmap`'d v4
+/// image re-saves by copying the already-validated image bytes — no
+/// re-encode through owned columns — whenever the image's vocab presence
+/// matches the request (a mapped service's vocab *is* the image's).
 pub fn save_with(
     vfs: &dyn Vfs,
     trie: &TrieOfRules,
     vocab: Option<&Vocab>,
     path: &Path,
 ) -> Result<()> {
-    fsio::atomic_write_with(vfs, path, |mut w| save_to(trie, vocab, &mut w).map_err(to_io))
+    if let Some((image, has_vocab)) = trie.mapped_image() {
+        if has_vocab == vocab.is_some() {
+            return fsio::atomic_write_with(vfs, path, |w| w.write_all(image))
+                .with_context(|| format!("save snapshot (cow) {}", path.display()));
+        }
+    }
+    let bytes = encode_v4(trie, vocab)?;
+    fsio::atomic_write_with(vfs, path, |w| w.write_all(&bytes))
         .with_context(|| format!("save snapshot {}", path.display()))
 }
 
@@ -153,9 +230,17 @@ fn to_io(e: anyhow::Error) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::Other, format!("{e:#}"))
 }
 
-/// Save in v3 format to any writer (in-memory determinism tests use a
-/// `Vec<u8>`).
+/// Save in the current v4 format to any writer (in-memory determinism
+/// tests use a `Vec<u8>`).
 pub fn save_to(trie: &TrieOfRules, vocab: Option<&Vocab>, w: &mut impl Write) -> Result<()> {
+    let bytes = encode_v4(trie, vocab)?;
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Save in the legacy v3 format (length-prefixed raw columns + CRC32
+/// trailer) — interop/downgrade; new writes use the v4 [`save_to`].
+pub fn save_v3_to(trie: &TrieOfRules, vocab: Option<&Vocab>, w: &mut impl Write) -> Result<()> {
     let mut cw = Crc32Writer::new(&mut *w);
     write_body(trie, vocab, VERSION_V3, &mut cw)?;
     let crc = cw.digest();
@@ -247,6 +332,213 @@ fn write_preamble(
     Ok(())
 }
 
+// -- v4 writer ------------------------------------------------------------
+
+/// Zero-pad `out` to the next [`V4_ALIGN`] boundary.
+fn pad_align(out: &mut Vec<u8>) {
+    let rem = out.len() % V4_ALIGN;
+    if rem != 0 {
+        out.resize(out.len() + (V4_ALIGN - rem), 0);
+    }
+}
+
+/// `len` rounded up to the next [`V4_ALIGN`] boundary.
+fn align_up(len: usize) -> usize {
+    len.div_ceil(V4_ALIGN) * V4_ALIGN
+}
+
+struct V4SectionBuf {
+    id: u8,
+    codec: u8,
+    width: u8,
+    count: usize,
+    payload: Vec<u8>,
+}
+
+/// Encode one unsigned column at its minimal bit-packed width, falling
+/// back to raw `u64` when the maximum needs more than 56 bits.
+fn packed_section(id: u8, vals: &[u64]) -> V4SectionBuf {
+    let max = vals.iter().copied().max().unwrap_or(0);
+    let width = bitpack::bits_for(max);
+    if width <= bitpack::MAX_PACKED_WIDTH {
+        V4SectionBuf {
+            id,
+            codec: CODEC_BITPACK,
+            width,
+            count: vals.len(),
+            payload: bitpack::pack(vals, width),
+        }
+    } else {
+        let mut payload = Vec::with_capacity(vals.len() * 8);
+        for &v in vals {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        V4SectionBuf {
+            id,
+            codec: CODEC_U64,
+            width: 64,
+            count: vals.len(),
+            payload,
+        }
+    }
+}
+
+/// Encode a trie as a v4 image with no metric sections (the default:
+/// metrics are derived, smallest file).
+pub fn encode_v4(trie: &TrieOfRules, vocab: Option<&Vocab>) -> Result<Vec<u8>> {
+    encode_v4_opts(trie, vocab, MetricMode::Omit)
+}
+
+/// [`encode_v4`] with an explicit [`MetricMode`] (the compression-ablation
+/// bench sweeps all three).
+pub fn encode_v4_opts(
+    trie: &TrieOfRules,
+    vocab: Option<&Vocab>,
+    metric_mode: MetricMode,
+) -> Result<Vec<u8>> {
+    let order = trie.order();
+    let items = trie.items_column();
+    let counts = trie.counts_column();
+    let parents = trie.parents_column();
+    let depths = trie.depths_column();
+    let n = items.len();
+
+    // Succinct re-codings: items by frequency rank, counts as the delta
+    // against the parent (antimonotone ⇒ never underflows).
+    let rank_of = |it: crate::data::vocab::ItemId| -> u64 {
+        order.rank(it).expect("frozen trie items are frequent") as u64
+    };
+    let items_rank: Vec<u64> = items[1..].iter().map(|&it| rank_of(it)).collect();
+    let count_delta: Vec<u64> = (1..n)
+        .map(|i| counts[parents[i] as usize] - counts[i])
+        .collect();
+    let parents_v: Vec<u64> = parents[1..].iter().map(|&p| p as u64).collect();
+    let depths_v: Vec<u64> = depths[1..].iter().map(|&d| d as u64).collect();
+    let ste_v: Vec<u64> = trie.subtree_end_column().iter().map(|&v| v as u64).collect();
+    let (co, ci, ct) = trie.child_csr();
+    let co_v: Vec<u64> = co.iter().map(|&v| v as u64).collect();
+    let ci_v: Vec<u64> = ci.iter().map(|&it| rank_of(it)).collect();
+    let ct_v: Vec<u64> = ct.iter().map(|&v| v as u64).collect();
+    let (ho, hn) = trie.header_csr();
+    let ho_v: Vec<u64> = ho.iter().map(|&v| v as u64).collect();
+    let hn_v: Vec<u64> = hn.iter().map(|&v| v as u64).collect();
+
+    let mut sections = vec![
+        packed_section(SEC_ITEMS_RANK, &items_rank),
+        packed_section(SEC_COUNT_DELTA, &count_delta),
+        packed_section(SEC_PARENTS, &parents_v),
+        packed_section(SEC_DEPTHS, &depths_v),
+        packed_section(SEC_SUBTREE_END, &ste_v),
+        packed_section(SEC_CHILD_OFFSETS, &co_v),
+        packed_section(SEC_CHILD_ITEMS_RANK, &ci_v),
+        packed_section(SEC_CHILD_TARGETS, &ct_v),
+        packed_section(SEC_HEADER_OFFSETS, &ho_v),
+        packed_section(SEC_HEADER_NODES, &hn_v),
+    ];
+    match metric_mode {
+        MetricMode::Omit => {}
+        MetricMode::Raw => {
+            for (slot, &m) in Metric::ALL.iter().enumerate() {
+                let col = trie.metric_column(m);
+                let mut payload = Vec::with_capacity(col.len() * 8);
+                for &v in col {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                sections.push(V4SectionBuf {
+                    id: SEC_METRIC_BASE + slot as u8,
+                    codec: CODEC_F64,
+                    width: 64,
+                    count: col.len(),
+                    payload,
+                });
+            }
+        }
+        MetricMode::Quantized => {
+            for (slot, &m) in Metric::ALL.iter().enumerate() {
+                let col = trie.metric_column(m);
+                let mut payload = Vec::with_capacity(col.len() * 4);
+                for &v in col {
+                    payload.extend_from_slice(&(v as f32).to_le_bytes());
+                }
+                sections.push(V4SectionBuf {
+                    id: SEC_METRIC_BASE + slot as u8,
+                    codec: CODEC_F32Q,
+                    width: 32,
+                    count: col.len(),
+                    payload,
+                });
+            }
+        }
+    }
+
+    // Head + varint preamble, sealed with its own CRC.
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION_V4.to_le_bytes());
+    varint::encode_u64(&mut out, trie.num_transactions() as u64);
+    varint::encode_u64(&mut out, order.min_count_used());
+    let freqs = order.frequencies();
+    varint::encode_u64(&mut out, freqs.len() as u64);
+    for &f0 in freqs {
+        varint::encode_u64(&mut out, f0);
+    }
+    match vocab {
+        Some(v) => {
+            anyhow::ensure!(
+                v.len() == freqs.len(),
+                "vocab size {} != item count {}",
+                v.len(),
+                freqs.len()
+            );
+            out.push(1);
+            for name in v.names() {
+                varint::encode_u64(&mut out, name.len() as u64);
+                out.extend_from_slice(name.as_bytes());
+            }
+        }
+        None => out.push(0),
+    }
+    varint::encode_u64(&mut out, n as u64);
+    // Stored so a trusted open can skip the O(rows) structural sweep; the
+    // validating paths cross-check it against the sweep's own count.
+    varint::encode_u64(&mut out, trie.num_representable_rules() as u64);
+    varint::encode_u64(&mut out, sections.len() as u64);
+    let mut crc = Crc32::new();
+    crc.update(&out);
+    out.extend_from_slice(&crc.finish().to_le_bytes());
+    pad_align(&mut out);
+
+    // TOC: fixed 32-byte entries in ascending id order, absolute offsets.
+    let toc_start = out.len();
+    let toc_end = toc_start + align_up(sections.len() * 32 + 4);
+    let mut offset = toc_end;
+    for s in &sections {
+        out.push(s.id);
+        out.push(s.codec);
+        out.push(s.width);
+        out.push(0); // flags, reserved
+        let mut pc = Crc32::new();
+        pc.update(&s.payload);
+        out.extend_from_slice(&pc.finish().to_le_bytes());
+        out.extend_from_slice(&(s.count as u64).to_le_bytes());
+        out.extend_from_slice(&(offset as u64).to_le_bytes());
+        out.extend_from_slice(&(s.payload.len() as u64).to_le_bytes());
+        offset += align_up(s.payload.len());
+    }
+    let mut tc = Crc32::new();
+    tc.update(&out[toc_start..]);
+    out.extend_from_slice(&tc.finish().to_le_bytes());
+    pad_align(&mut out);
+    debug_assert_eq!(out.len(), toc_end);
+
+    for s in &sections {
+        out.extend_from_slice(&s.payload);
+        pad_align(&mut out);
+    }
+    debug_assert_eq!(out.len(), offset);
+    Ok(out)
+}
+
 // -- snapshot load --------------------------------------------------------
 
 /// Load a trie (and its vocabulary, when stored) from `path`. Reads the
@@ -291,6 +583,14 @@ pub fn try_load_from<R: Read>(r: &mut R) -> LoadResult<(TrieOfRules, Option<Voca
                 return corrupt(format!("{} trailing bytes after body", br.len()));
             }
             Ok(out)
+        }
+        VERSION_V4 => {
+            // Reader-based v4 load: decode the sections into owned
+            // columns (full `from_columns` validation). Zero-copy serving
+            // is [`open`]'s job — it needs a mapping, not a reader.
+            let mut full = head.to_vec();
+            r.read_to_end(&mut full)?;
+            load_v4_owned(&full)
         }
         other => Err(LoadError::BadVersion(other)),
     }
@@ -428,6 +728,562 @@ fn load_v2_body<R: Read>(
         header_offsets,
         header_nodes,
     )?)
+}
+
+// -- v4 parse / validate / open ------------------------------------------
+
+/// A CRC-checked v4 image: preamble fields plus validated section views.
+/// Shared by the owned decoder ([`try_load_from`]) and the zero-copy
+/// openers ([`open_with_mode`]).
+struct V4Parsed {
+    order: ItemOrder,
+    num_transactions: usize,
+    num_rows: usize,
+    /// The representable-rule count stored in the preamble. Trusted opens
+    /// serve it directly; validating paths cross-check it against the
+    /// structural sweep.
+    representable: usize,
+    has_vocab: bool,
+    vocab: Option<Vocab>,
+    sections: MappedSections,
+}
+
+fn v4_varint(bytes: &[u8], pos: &mut usize) -> LoadResult<u64> {
+    varint::decode_u64(bytes, pos).map_err(|e| LoadError::Corrupt(format!("v4 preamble: {e}")))
+}
+
+/// Parse and checksum-verify a v4 image: preamble CRC, TOC CRC, per-entry
+/// layout rules (known ids, expected counts, codec/width/length formulas,
+/// 64-byte alignment, ascending non-overlapping extents), and — when
+/// `verify_payloads` is set — per-section payload CRCs. Purely syntactic:
+/// [`validate_v4_structure`] does the semantic sweep. With
+/// `verify_payloads` off the parse touches only the header blocks (O(KB)
+/// for any file size), which is the trusted-open fast path.
+fn parse_v4(bytes: &[u8], verify_payloads: bool) -> LoadResult<V4Parsed> {
+    if bytes.len() < 8 {
+        return corrupt("truncated (missing header)");
+    }
+    if bytes[..4] != MAGIC {
+        return Err(LoadError::BadMagic);
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION_V4 {
+        return Err(LoadError::BadVersion(version));
+    }
+    if bytes.len() % V4_ALIGN != 0 {
+        return corrupt(format!("file length {} not 64-byte aligned", bytes.len()));
+    }
+
+    // Preamble (varints), sealed by its own CRC.
+    let mut pos = 8usize;
+    let num_transactions = v4_varint(bytes, &mut pos)? as usize;
+    let min_count = v4_varint(bytes, &mut pos)?;
+    let num_items = v4_varint(bytes, &mut pos)? as usize;
+    if num_items >= 1 << 28 {
+        return corrupt(format!("implausible item count {num_items}"));
+    }
+    let mut freqs = Vec::with_capacity(num_items.min(1 << 16));
+    for _ in 0..num_items {
+        freqs.push(v4_varint(bytes, &mut pos)?);
+    }
+    let Some(&flag) = bytes.get(pos) else {
+        return corrupt("truncated preamble (vocab flag)");
+    };
+    pos += 1;
+    if flag > 1 {
+        return corrupt(format!("bad vocab flag {flag}"));
+    }
+    let vocab = if flag == 1 {
+        let mut v = Vocab::new();
+        for i in 0..num_items {
+            let len = v4_varint(bytes, &mut pos)? as usize;
+            if len >= 1 << 20 {
+                return corrupt(format!("implausible name length {len}"));
+            }
+            let Some(raw) = bytes.get(pos..pos + len) else {
+                return corrupt("truncated preamble (vocab name)");
+            };
+            pos += len;
+            match std::str::from_utf8(raw) {
+                Ok(s) => {
+                    v.intern(s);
+                }
+                Err(_) => return corrupt(format!("item {i} name is not utf-8")),
+            }
+        }
+        Some(v)
+    } else {
+        None
+    };
+    let num_rows = v4_varint(bytes, &mut pos)? as usize;
+    if num_rows < 1 || num_rows >= 1 << 30 {
+        return corrupt(format!("implausible row count {num_rows}"));
+    }
+    let representable = v4_varint(bytes, &mut pos)?;
+    // Each non-root row contributes depth - 1 rules, and depths fit u16.
+    if representable > (num_rows as u64) * u16::MAX as u64 {
+        return corrupt(format!("implausible rule count {representable}"));
+    }
+    let representable = representable as usize;
+    let section_count = v4_varint(bytes, &mut pos)? as usize;
+    if !(10..=30).contains(&section_count) {
+        return corrupt(format!("implausible section count {section_count}"));
+    }
+    let Some(stored) = bytes.get(pos..pos + 4) else {
+        return corrupt("truncated preamble (checksum)");
+    };
+    let stored_crc = u32::from_le_bytes(stored.try_into().unwrap());
+    let mut crc = Crc32::new();
+    crc.update(&bytes[..pos]);
+    if stored_crc != crc.finish() {
+        return corrupt(format!(
+            "preamble checksum mismatch: stored {stored_crc:#010x}, computed {:#010x}",
+            crc.finish()
+        ));
+    }
+    pos = align_up(pos + 4);
+
+    let order = ItemOrder::from_frequencies(freqs, min_count);
+    let num_ranks = order.num_frequent();
+    let n = num_rows;
+
+    // TOC, sealed by its own CRC.
+    let entries_len = section_count * 32;
+    let Some(entry_bytes) = bytes.get(pos..pos + entries_len) else {
+        return corrupt("truncated table of contents");
+    };
+    let Some(stored) = bytes.get(pos + entries_len..pos + entries_len + 4) else {
+        return corrupt("truncated table of contents (checksum)");
+    };
+    let stored_crc = u32::from_le_bytes(stored.try_into().unwrap());
+    let mut crc = Crc32::new();
+    crc.update(entry_bytes);
+    if stored_crc != crc.finish() {
+        return corrupt("table-of-contents checksum mismatch");
+    }
+    let toc_end = align_up(pos + entries_len + 4);
+
+    let expected_count = |id: u8| -> Option<usize> {
+        match id {
+            SEC_ITEMS_RANK | SEC_COUNT_DELTA | SEC_PARENTS | SEC_DEPTHS | SEC_CHILD_ITEMS_RANK
+            | SEC_CHILD_TARGETS | SEC_HEADER_NODES => Some(n - 1),
+            SEC_SUBTREE_END => Some(n),
+            SEC_CHILD_OFFSETS => Some(n + 1),
+            SEC_HEADER_OFFSETS => Some(num_ranks + 1),
+            id if (SEC_METRIC_BASE..SEC_METRIC_BASE + 10).contains(&id) => Some(n),
+            _ => None,
+        }
+    };
+
+    let mut s = MappedSections {
+        items_rank: SectionView::empty(),
+        count_delta: SectionView::empty(),
+        parents: SectionView::empty(),
+        depths: SectionView::empty(),
+        subtree_end: SectionView::empty(),
+        child_offsets: SectionView::empty(),
+        child_items_rank: SectionView::empty(),
+        child_targets: SectionView::empty(),
+        header_offsets: SectionView::empty(),
+        header_nodes: SectionView::empty(),
+        metric_raw: [None; 10],
+    };
+    let mut seen_required = 0u16;
+    let mut prev_id = 0u8;
+    let mut cursor = toc_end;
+    for e in entry_bytes.chunks_exact(32) {
+        let (id, codec, width, flags) = (e[0], e[1], e[2], e[3]);
+        let sect_crc = u32::from_le_bytes(e[4..8].try_into().unwrap());
+        let count = u64::from_le_bytes(e[8..16].try_into().unwrap()) as usize;
+        let off = u64::from_le_bytes(e[16..24].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(e[24..32].try_into().unwrap()) as usize;
+        if id <= prev_id {
+            return corrupt(format!("section ids not strictly ascending at id {id}"));
+        }
+        prev_id = id;
+        if flags != 0 {
+            return corrupt(format!("section {id}: unknown flags {flags:#04x}"));
+        }
+        let Some(want_count) = expected_count(id) else {
+            return corrupt(format!("unknown section id {id}"));
+        };
+        if count != want_count {
+            return corrupt(format!(
+                "section {id}: {count} elements, expected {want_count}"
+            ));
+        }
+        let is_metric = id >= SEC_METRIC_BASE;
+        let len_ok = match codec {
+            CODEC_BITPACK if !is_metric => {
+                width <= bitpack::MAX_PACKED_WIDTH && len == bitpack::payload_len(count, width)
+            }
+            CODEC_U64 if !is_metric => width == 64 && len == count * 8,
+            CODEC_F64 if is_metric => width == 64 && len == count * 8,
+            CODEC_F32Q if is_metric => width == 32 && len == count * 4,
+            _ => false,
+        };
+        if !len_ok {
+            return corrupt(format!(
+                "section {id}: codec {codec}/width {width}/len {len} inconsistent for \
+                 {count} elements"
+            ));
+        }
+        if off % V4_ALIGN != 0 || off < cursor {
+            return corrupt(format!("section {id}: misaligned or overlapping offset {off}"));
+        }
+        let Some(payload) = bytes.get(off..off + len) else {
+            return corrupt(format!("section {id}: extent {off}+{len} out of bounds"));
+        };
+        cursor = align_up(off + len);
+        if verify_payloads {
+            let mut crc = Crc32::new();
+            crc.update(payload);
+            if sect_crc != crc.finish() {
+                return corrupt(format!("section {id}: payload checksum mismatch"));
+            }
+        } else {
+            // Trusted open: the extent check above is all we need from
+            // the payload; silence the otherwise-unused binding.
+            let _ = payload;
+        }
+        let view = SectionView {
+            off,
+            len,
+            count,
+            width,
+            codec,
+        };
+        match id {
+            SEC_ITEMS_RANK => s.items_rank = view,
+            SEC_COUNT_DELTA => s.count_delta = view,
+            SEC_PARENTS => s.parents = view,
+            SEC_DEPTHS => s.depths = view,
+            SEC_SUBTREE_END => s.subtree_end = view,
+            SEC_CHILD_OFFSETS => s.child_offsets = view,
+            SEC_CHILD_ITEMS_RANK => s.child_items_rank = view,
+            SEC_CHILD_TARGETS => s.child_targets = view,
+            SEC_HEADER_OFFSETS => s.header_offsets = view,
+            SEC_HEADER_NODES => s.header_nodes = view,
+            // Only raw f64 sections are servable zero-copy; quantized
+            // columns are CRC-checked above and otherwise ignored (the
+            // exact derivation is always available).
+            _ => {
+                if codec == CODEC_F64 {
+                    s.metric_raw[(id - SEC_METRIC_BASE) as usize] = Some(view);
+                }
+            }
+        }
+        if id <= SEC_HEADER_NODES {
+            seen_required |= 1 << id;
+        }
+    }
+    if seen_required != 0b111_1111_1110 {
+        return corrupt("missing required structure sections");
+    }
+    if cursor != bytes.len() {
+        return corrupt(format!(
+            "{} trailing bytes after last section",
+            bytes.len() - cursor
+        ));
+    }
+
+    Ok(V4Parsed {
+        order,
+        num_transactions,
+        num_rows,
+        representable,
+        has_vocab: flag == 1,
+        vocab,
+        sections: s,
+    })
+}
+
+/// The semantic sweep over a [`parse_v4`] image: one pass with an
+/// open-ancestor stack proving the packed columns describe a well-formed
+/// DFS-preorder trie — parents precede and enclose children, depths
+/// chain, counts are antimonotone (deltas never underflow), subtree
+/// ranges nest, both CSRs are exactly the re-derivable ones (bijections
+/// onto the non-root rows). Returns the representable-rule count. After
+/// this, every mapped accessor is panic-free on this image — a forged
+/// file that passed the CRCs still cannot cause unbounded parent walks or
+/// out-of-range decode-table reads.
+fn validate_v4_structure(bytes: &[u8], p: &V4Parsed) -> LoadResult<usize> {
+    let n = p.num_rows;
+    let s = &p.sections;
+    let rank_to_item = p.order.frequent_items();
+    let num_ranks = rank_to_item.len();
+    let root_count = p.num_transactions as u64;
+
+    if s.subtree_end.get(bytes, 0) != n as u64 {
+        return corrupt("root subtree range does not cover the file");
+    }
+    // (index, exclusive end, count) of each open ancestor, root upward.
+    let mut stack: Vec<(usize, u64, u64)> = vec![(0, n as u64, root_count)];
+    let mut representable = 0usize;
+    for i in 1..n {
+        while stack.last().is_some_and(|&(_, end, _)| end <= i as u64) {
+            stack.pop();
+        }
+        let &(top, top_end, top_count) = stack.last().expect("root range covers every row");
+        let par = s.parents.get(bytes, i - 1);
+        if par != top as u64 {
+            return corrupt(format!(
+                "node {i}: parent {par} is not the open ancestor (not DFS preorder)"
+            ));
+        }
+        let depth = s.depths.get(bytes, i - 1);
+        if depth != stack.len() as u64 || depth > u16::MAX as u64 {
+            return corrupt(format!("node {i}: depth {depth} breaks the parent chain"));
+        }
+        let delta = s.count_delta.get(bytes, i - 1);
+        if delta > top_count {
+            return corrupt(format!("node {i}: count delta {delta} exceeds parent count"));
+        }
+        let end = s.subtree_end.get(bytes, i);
+        if end <= i as u64 || end > top_end {
+            return corrupt(format!("node {i}: subtree end {end} not nested"));
+        }
+        if s.items_rank.get(bytes, i - 1) >= num_ranks as u64 {
+            return corrupt(format!("node {i}: item rank out of range"));
+        }
+        representable += depth as usize - 1;
+        stack.push((i, end, top_count - delta));
+    }
+
+    // Child CSR: exactly the one re-derivable from parents — offsets
+    // cover all n-1 edges, every edge's target names this owner as its
+    // parent and carries the edge's item, siblings strictly item-sorted.
+    // Per-slice distinctness + the n-1 total makes the targets a
+    // bijection onto rows 1..n.
+    let co = &s.child_offsets;
+    if co.get(bytes, 0) != 0 || co.get(bytes, n) != (n - 1) as u64 {
+        return corrupt("child CSR offsets do not cover the edge list");
+    }
+    for i in 0..n {
+        let lo = co.get(bytes, i);
+        let hi = co.get(bytes, i + 1);
+        if lo > hi {
+            return corrupt(format!("node {i}: child offsets not monotone"));
+        }
+        let mut prev_item: Option<ItemId> = None;
+        for e in lo as usize..hi as usize {
+            let t = s.child_targets.get(bytes, e) as usize;
+            if t == 0 || t >= n {
+                return corrupt(format!("edge {e}: target {t} out of range"));
+            }
+            if s.parents.get(bytes, t - 1) != i as u64 {
+                return corrupt(format!("edge {e}: target {t} is not a child of {i}"));
+            }
+            let rank = s.child_items_rank.get(bytes, e);
+            if rank != s.items_rank.get(bytes, t - 1) {
+                return corrupt(format!("edge {e}: item disagrees with target {t}"));
+            }
+            let item = rank_to_item[rank as usize];
+            if prev_item.is_some_and(|p0| p0 >= item) {
+                return corrupt(format!("node {i}: children not strictly item-sorted"));
+            }
+            prev_item = Some(item);
+        }
+    }
+
+    // Header CSR: per rank, the carrying nodes in strictly ascending
+    // preorder; same bijection argument as the child CSR.
+    let ho = &s.header_offsets;
+    if ho.get(bytes, 0) != 0 || ho.get(bytes, num_ranks) != (n - 1) as u64 {
+        return corrupt("header CSR offsets do not cover the node list");
+    }
+    for r in 0..num_ranks {
+        let lo = ho.get(bytes, r);
+        let hi = ho.get(bytes, r + 1);
+        if lo > hi {
+            return corrupt(format!("rank {r}: header offsets not monotone"));
+        }
+        let mut prev_node = 0u64;
+        for e in lo as usize..hi as usize {
+            let t = s.header_nodes.get(bytes, e) as usize;
+            if t == 0 || t >= n {
+                return corrupt(format!("header entry {e}: node {t} out of range"));
+            }
+            if s.items_rank.get(bytes, t - 1) != r as u64 {
+                return corrupt(format!("header entry {e}: node {t} does not carry rank {r}"));
+            }
+            if t as u64 <= prev_node {
+                return corrupt(format!("rank {r}: header nodes not ascending"));
+            }
+            prev_node = t as u64;
+        }
+    }
+
+    if representable != p.representable {
+        return corrupt(format!(
+            "preamble claims {} representable rules, sweep found {representable}",
+            p.representable
+        ));
+    }
+    Ok(representable)
+}
+
+/// Decode a v4 image into fully owned columns, funneling through
+/// [`TrieOfRules::from_columns`] (complete re-validation) and verifying
+/// any raw metric sections bit-for-bit against the derivation.
+fn load_v4_owned(bytes: &[u8]) -> LoadResult<(TrieOfRules, Option<Vocab>)> {
+    let p = parse_v4(bytes, true)?;
+    // The structural sweep first: it proves the decode below cannot
+    // underflow a count or index a parent out of range.
+    validate_v4_structure(bytes, &p)?;
+    let n = p.num_rows;
+    let s = &p.sections;
+    let rank_to_item = p.order.frequent_items();
+
+    let mut items: Vec<ItemId> = Vec::with_capacity(n);
+    let mut counts: Vec<u64> = Vec::with_capacity(n);
+    let mut parents: Vec<NodeIdx> = Vec::with_capacity(n);
+    let mut depths: Vec<u16> = Vec::with_capacity(n);
+    items.push(ROOT_ITEM);
+    counts.push(p.num_transactions as u64);
+    parents.push(ROOT);
+    depths.push(0);
+    for i in 1..n {
+        let par = s.parents.get(bytes, i - 1) as usize;
+        items.push(rank_to_item[s.items_rank.get(bytes, i - 1) as usize]);
+        counts.push(counts[par] - s.count_delta.get(bytes, i - 1));
+        parents.push(par as NodeIdx);
+        depths.push(s.depths.get(bytes, i - 1) as u16);
+    }
+    let subtree_end: Vec<NodeIdx> = (0..n)
+        .map(|i| s.subtree_end.get(bytes, i) as NodeIdx)
+        .collect();
+    let child_offsets: Vec<u32> = (0..=n)
+        .map(|i| s.child_offsets.get(bytes, i) as u32)
+        .collect();
+    let child_items: Vec<ItemId> = (0..n - 1)
+        .map(|e| rank_to_item[s.child_items_rank.get(bytes, e) as usize])
+        .collect();
+    let child_targets: Vec<NodeIdx> = (0..n - 1)
+        .map(|e| s.child_targets.get(bytes, e) as NodeIdx)
+        .collect();
+    let num_ranks = rank_to_item.len();
+    let header_offsets: Vec<u32> = (0..=num_ranks)
+        .map(|r| s.header_offsets.get(bytes, r) as u32)
+        .collect();
+    let header_nodes: Vec<NodeIdx> = (0..n - 1)
+        .map(|e| s.header_nodes.get(bytes, e) as NodeIdx)
+        .collect();
+
+    let trie = TrieOfRules::from_columns(
+        p.order.clone(),
+        p.num_transactions,
+        items,
+        counts,
+        parents,
+        depths,
+        subtree_end,
+        child_offsets,
+        child_items,
+        child_targets,
+        header_offsets,
+        header_nodes,
+    )?;
+
+    for (slot, &m) in Metric::ALL.iter().enumerate() {
+        if let Some(sect) = p.sections.metric_raw[slot] {
+            let derived = trie.metric_column(m);
+            for i in 0..sect.count {
+                let at = sect.off + i * 8;
+                let stored = u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+                if stored != derived[i].to_bits() {
+                    return corrupt(format!(
+                        "metric section {m:?} row {i} disagrees with its derivation"
+                    ));
+                }
+            }
+        }
+    }
+    Ok((trie, p.vocab))
+}
+
+/// How much of a v4 image [`open_with_mode`] verifies before serving it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpenMode {
+    /// Full verification: preamble/TOC/payload CRCs plus the structural
+    /// sweep ([`validate_v4_structure`] semantics). O(file) once; after
+    /// it, every mapped accessor is panic-free even on a forged file.
+    /// The right mode for any file that crossed a trust boundary.
+    Validate,
+    /// Header verification only: preamble + TOC CRCs, section extent and
+    /// formula checks — O(header), independent of file size. Payload
+    /// bytes are not touched until queries fault them in. Reserve this
+    /// for images this process (or a trusted pipeline) wrote itself via
+    /// [`save`]/[`save_with`] + atomic rename — the durability plane's
+    /// checkpoints, where the manifest names the exact file and
+    /// [`fsio::atomic_write_with`] rules out torn writes. A semantically
+    /// corrupt trusted file can return wrong rows (it cannot read out of
+    /// bounds — extents are still checked — but nothing proves the
+    /// packed values form a trie).
+    Trusted,
+}
+
+/// Open a snapshot for serving. A v4 file is validated in place (CRC
+/// passes + one structural sweep over the packed bytes) and served
+/// **zero-copy from an `mmap`** — cold open does no column
+/// materialization, so restart cost is O(validation), not O(decode).
+/// Older versions (v1–v3) cannot be served in place and fall back to the
+/// owned loader over the mapped bytes.
+pub fn open(path: &Path) -> LoadResult<(TrieOfRules, Option<Vocab>)> {
+    open_with(&RealVfs, path)
+}
+
+/// [`open`] with [`OpenMode::Trusted`]: header seals only, O(header) cold
+/// open — the instant-restart path for self-written checkpoints.
+pub fn open_trusted(path: &Path) -> LoadResult<(TrieOfRules, Option<Vocab>)> {
+    open_with_mode(&RealVfs, path, OpenMode::Trusted)
+}
+
+/// [`open`] over an injectable filesystem (the chaos harness exercises
+/// this through [`crate::util::fsio::MemVfs`]'s aligned-buffer mmap
+/// emulation). Fully validating.
+pub fn open_with(vfs: &dyn Vfs, path: &Path) -> LoadResult<(TrieOfRules, Option<Vocab>)> {
+    open_with_mode(vfs, path, OpenMode::Validate)
+}
+
+/// [`open_with`] with an explicit [`OpenMode`].
+pub fn open_with_mode(
+    vfs: &dyn Vfs,
+    path: &Path,
+    mode: OpenMode,
+) -> LoadResult<(TrieOfRules, Option<Vocab>)> {
+    let region = vfs.mmap(path).map_err(LoadError::Io)?;
+    if region.len() < 8 {
+        return corrupt("truncated (missing header)");
+    }
+    if region[..4] != MAGIC {
+        return Err(LoadError::BadMagic);
+    }
+    let version = u32::from_le_bytes(region[4..8].try_into().unwrap());
+    if version != VERSION_V4 {
+        // Legacy files cannot be served in place regardless of mode.
+        return try_load_from(&mut &region[..]);
+    }
+    let validate = mode == OpenMode::Validate;
+    let p = parse_v4(&region, validate)?;
+    let representable = if validate {
+        validate_v4_structure(&region, &p)?
+    } else {
+        p.representable
+    };
+    let rank_to_item = p.order.frequent_items().to_vec();
+    let rank_to_freq: Vec<u64> = rank_to_item.iter().map(|&it| p.order.frequency(it)).collect();
+    let cols = MappedColumns::new(
+        region,
+        p.num_rows,
+        p.num_transactions,
+        p.has_vocab,
+        rank_to_item,
+        rank_to_freq,
+        p.sections,
+    );
+    let trie = TrieOfRules::from_mapped(p.order, p.num_transactions, representable, Arc::new(cols));
+    Ok((trie, p.vocab))
 }
 
 // -- incremental delta sidecar -------------------------------------------
@@ -854,7 +1710,7 @@ mod tests {
         // Truncated real file (all formats).
         let (db, trie) = build(7, 0.06);
         for (tag, saver) in [
-            ("full_v3", save as fn(&TrieOfRules, Option<&Vocab>, &Path) -> Result<()>),
+            ("full_v4", save as fn(&TrieOfRules, Option<&Vocab>, &Path) -> Result<()>),
             ("full_v1", save_v1),
         ] {
             let full = tmpfile(tag);
@@ -938,7 +1794,7 @@ mod tests {
     fn v3_crc_catches_tampering_before_semantics() {
         let (db, trie) = build(8, 0.06);
         let mut bytes = Vec::new();
-        save_to(&trie, Some(db.vocab()), &mut bytes).unwrap();
+        save_v3_to(&trie, Some(db.vocab()), &mut bytes).unwrap();
         // Flip one payload bit: rejected with a checksum error (the seal
         // is verified before any semantic validation).
         let mid = bytes.len() / 2;
@@ -950,6 +1806,164 @@ mod tests {
         bytes.push(0);
         let err = try_load_from(&mut &bytes[..]).unwrap_err();
         assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn v3_writer_still_loads_identically() {
+        let (db, trie) = build(8, 0.06);
+        let mut bytes = Vec::new();
+        save_v3_to(&trie, Some(db.vocab()), &mut bytes).unwrap();
+        let (back, vocab) = try_load_from(&mut &bytes[..]).unwrap();
+        assert!(vocab.is_some());
+        assert_equivalent(&trie, &back);
+    }
+
+    #[test]
+    fn v4_every_single_bit_flip_is_detected_or_harmless() {
+        // Exhaustive one-bit corruption sweep over a whole v4 image: every
+        // flip must either fail to load (CRCs, layout rules, structural
+        // sweep) or — only for bits in alignment padding, which no reader
+        // ever dereferences — load a trie identical to the original.
+        let db = paper_example_db();
+        let fi = fpgrowth(&db, 0.3);
+        let order = ItemOrder::new(&db, min_count(0.3, db.num_transactions()));
+        let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+        let bytes = encode_v4(&trie, Some(db.vocab())).unwrap();
+        assert_eq!(bytes.len() % V4_ALIGN, 0);
+        let mut detected = 0usize;
+        for pos in 0..bytes.len() {
+            let mut evil = bytes.clone();
+            evil[pos] ^= 1 << (pos % 8);
+            match try_load_from(&mut &evil[..]) {
+                Err(_) => detected += 1,
+                Ok((back, _)) => assert_equivalent(&trie, &back),
+            }
+        }
+        // The overwhelming majority of bytes are load-bearing.
+        assert!(detected * 2 > bytes.len(), "{detected}/{}", bytes.len());
+    }
+
+    #[test]
+    fn v4_truncation_at_every_block_is_rejected() {
+        let (db, trie) = build(7, 0.06);
+        let bytes = encode_v4(&trie, Some(db.vocab())).unwrap();
+        for cut in (0..bytes.len()).step_by(V4_ALIGN) {
+            assert!(
+                try_load_from(&mut &bytes[..cut]).is_err(),
+                "truncation to {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn v4_mmap_open_is_zero_copy_parity_and_cow_resave() {
+        let (db, trie) = build(5, 0.05);
+        let vfs = MemVfs::new(21);
+        vfs.create_dir_all(Path::new("snaps")).unwrap();
+        let path = Path::new("snaps/v4.tor");
+        save_with(&vfs, &trie, Some(db.vocab()), path).unwrap();
+        let image = vfs.read(path).unwrap();
+
+        let (mapped, vocab) = open_with(&vfs, path).unwrap();
+        assert!(vocab.is_some());
+        assert_eq!(mapped.backend_name(), "mmap");
+        assert_eq!(mapped.mapped_bytes(), image.len());
+        assert_equivalent(&trie, &mapped);
+        for &m in Metric::ALL.iter() {
+            assert_eq!(trie.metric_column(m), mapped.metric_column(m), "{m:?}");
+        }
+        assert_eq!(trie.top_n(Metric::Lift, 8), mapped.top_n(Metric::Lift, 8));
+
+        // Re-saving the mapped view is a byte copy of the image, not a
+        // re-encode.
+        let path2 = Path::new("snaps/v4-copy.tor");
+        save_with(&vfs, &mapped, Some(db.vocab()), path2).unwrap();
+        assert_eq!(vfs.read(path2).unwrap(), image);
+
+        // Vocab-presence mismatch falls back to a clean re-encode that the
+        // owned writer would produce.
+        let path3 = Path::new("snaps/v4-novocab.tor");
+        save_with(&vfs, &mapped, None, path3).unwrap();
+        assert_eq!(vfs.read(path3).unwrap(), encode_v4(&trie, None).unwrap());
+    }
+
+    #[test]
+    fn v4_metric_sections_roundtrip_raw_and_quantized() {
+        let (db, trie) = build(6, 0.05);
+        let omit = encode_v4(&trie, Some(db.vocab())).unwrap();
+        for mode in [MetricMode::Raw, MetricMode::Quantized] {
+            let bytes = encode_v4_opts(&trie, Some(db.vocab()), mode).unwrap();
+            assert!(bytes.len() > omit.len());
+            // Raw sections are verified bit-for-bit against the
+            // derivation; quantized ones are CRC-checked and ignored.
+            let (back, _) = try_load_from(&mut &bytes[..]).unwrap();
+            assert_equivalent(&trie, &back);
+            for &m in Metric::ALL.iter() {
+                assert_eq!(trie.metric_column(m), back.metric_column(m));
+            }
+        }
+    }
+
+    #[test]
+    fn trusted_open_serves_identically_and_checks_only_the_header_seals() {
+        let (db, trie) = build(9, 0.05);
+        let vfs = MemVfs::new(33);
+        let path = Path::new("trusted.tor");
+        save_with(&vfs, &trie, Some(db.vocab()), path).unwrap();
+        let image = vfs.read(path).unwrap();
+
+        // Pristine file: trusted == validating, including the stored
+        // representable count (never re-swept in trusted mode).
+        let (mapped, vocab) = open_with_mode(&vfs, path, OpenMode::Trusted).unwrap();
+        assert!(vocab.is_some());
+        assert_eq!(mapped.backend_name(), "mmap");
+        assert_equivalent(&trie, &mapped);
+        assert_eq!(
+            mapped.num_representable_rules(),
+            trie.num_representable_rules()
+        );
+
+        // A flipped bit in the preamble or TOC blocks is still rejected
+        // in trusted mode (those seals are always verified). Byte 9 sits
+        // in the first preamble varint; the first-section offset minus
+        // one aligned block lands inside the TOC entries.
+        let parsed = parse_v4(&image, true).unwrap();
+        let first_payload = parsed.sections.items_rank.off;
+        for byte in [9usize, first_payload - V4_ALIGN] {
+            let mut tampered = image.clone();
+            tampered[byte] ^= 1;
+            fsio::atomic_write_with(&vfs, path, |w| w.write_all(&tampered)).unwrap();
+            assert!(
+                open_with_mode(&vfs, path, OpenMode::Trusted).is_err(),
+                "trusted open accepted a header flip at byte {byte}"
+            );
+        }
+        // …while the same payload flip that `Validate` rejects is the
+        // documented trusted-mode gap (payload bytes are never touched
+        // at open). This pins the trust boundary, not a desirable
+        // behavior: never use Trusted on files from outside the process.
+        let mut tampered = image.clone();
+        tampered[first_payload] ^= 1;
+        fsio::atomic_write_with(&vfs, path, |w| w.write_all(&tampered)).unwrap();
+        assert!(matches!(
+            open_with_mode(&vfs, path, OpenMode::Validate),
+            Err(LoadError::Corrupt(_))
+        ));
+        assert!(open_with_mode(&vfs, path, OpenMode::Trusted).is_ok());
+    }
+
+    #[test]
+    fn open_falls_back_to_owned_for_legacy_versions() {
+        let (db, trie) = build(7, 0.05);
+        let vfs = MemVfs::new(5);
+        let path = Path::new("legacy.tor");
+        let mut bytes = Vec::new();
+        save_v3_to(&trie, Some(db.vocab()), &mut bytes).unwrap();
+        fsio::atomic_write_with(&vfs, path, |w| w.write_all(&bytes)).unwrap();
+        let (back, vocab) = open_with(&vfs, path).unwrap();
+        assert!(vocab.is_some());
+        assert_eq!(back.backend_name(), "owned");
+        assert_equivalent(&trie, &back);
     }
 
     #[test]

@@ -1,0 +1,658 @@
+//! Storage backends under the frozen [`crate::trie::trie::TrieOfRules`]
+//! accessors (DESIGN.md §17).
+//!
+//! The trie's serving layout is a set of preorder-indexed columns. This
+//! module abstracts *where those columns live* behind the
+//! [`ColumnStore`] trait so the executor, morsel iterator, and header CSR
+//! run unchanged over either backend:
+//!
+//! * [`OwnedColumns`] — plain `Vec`s, produced by `TrieBuilder::freeze`,
+//!   the v1–v3 deserializers, and delta compaction. Counts and the ten
+//!   metric columns are stored materialized.
+//! * [`MappedColumns`] — zero-copy views into an `mmap`'d v4 snapshot
+//!   ([`crate::util::fsio::MapRegion`]): items as bit-packed frequency
+//!   ranks, counts as preorder deltas against the parent (decoded
+//!   incrementally along the sweep's path stack), structure columns
+//!   bit-packed at their minimal width. Metric values are *derived* —
+//!   `RuleMetrics::from_counts` is a pure function of
+//!   `(n, count, parent count, item frequency)`, so derived values are
+//!   bit-identical to the owned backend's stored columns.
+//!
+//! Per-index reads on the mapped backend touch only the mapped bytes.
+//! The legacy slice-returning APIs (`items_column()`, `metric_column()`,
+//! `child_csr()`, …) still work on a mapped trie through lazy
+//! [`OnceLock`] materializations — a deliberate compatibility cold path:
+//! the first slice consumer pays one linear decode, hot traversals never
+//! do. `memory_bytes()` on a mapped trie reports exactly these resident
+//! materializations, not the mapped file.
+
+use std::sync::OnceLock;
+
+use crate::data::vocab::ItemId;
+use crate::rules::metrics::{Metric, RuleCounts, RuleMetrics};
+use crate::trie::node::{NodeIdx, ROOT, ROOT_ITEM};
+use crate::util::bitpack;
+use crate::util::fsio::MapRegion;
+
+/// Section payload codecs of the v4 snapshot format (DESIGN.md §17).
+pub(crate) const CODEC_BITPACK: u8 = 0;
+pub(crate) const CODEC_U64: u8 = 1;
+pub(crate) const CODEC_F64: u8 = 2;
+pub(crate) const CODEC_F32Q: u8 = 3;
+
+/// One contiguous `f64` column per rule metric, parallel to the node
+/// arrays (row 0 = root). Residual metric predicates and top-N scans read
+/// these directly without assembling a `RuleMetrics`.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct MetricColumns {
+    pub(crate) support: Vec<f64>,
+    pub(crate) confidence: Vec<f64>,
+    pub(crate) lift: Vec<f64>,
+    pub(crate) leverage: Vec<f64>,
+    pub(crate) conviction: Vec<f64>,
+    pub(crate) zhang: Vec<f64>,
+    pub(crate) jaccard: Vec<f64>,
+    pub(crate) cosine: Vec<f64>,
+    pub(crate) kulczynski: Vec<f64>,
+    pub(crate) yule_q: Vec<f64>,
+}
+
+impl MetricColumns {
+    pub(crate) fn with_capacity(n: usize) -> Self {
+        let mut c = MetricColumns::default();
+        for col in [
+            &mut c.support,
+            &mut c.confidence,
+            &mut c.lift,
+            &mut c.leverage,
+            &mut c.conviction,
+            &mut c.zhang,
+            &mut c.jaccard,
+            &mut c.cosine,
+            &mut c.kulczynski,
+            &mut c.yule_q,
+        ] {
+            col.reserve_exact(n);
+        }
+        c
+    }
+
+    pub(crate) fn push(&mut self, m: &RuleMetrics) {
+        self.support.push(m.support);
+        self.confidence.push(m.confidence);
+        self.lift.push(m.lift);
+        self.leverage.push(m.leverage);
+        self.conviction.push(m.conviction);
+        self.zhang.push(m.zhang);
+        self.jaccard.push(m.jaccard);
+        self.cosine.push(m.cosine);
+        self.kulczynski.push(m.kulczynski);
+        self.yule_q.push(m.yule_q);
+    }
+
+    pub(crate) fn column(&self, m: Metric) -> &[f64] {
+        match m {
+            Metric::Support => &self.support,
+            Metric::Confidence => &self.confidence,
+            Metric::Lift => &self.lift,
+            Metric::Leverage => &self.leverage,
+            Metric::Conviction => &self.conviction,
+            Metric::Zhang => &self.zhang,
+            Metric::Jaccard => &self.jaccard,
+            Metric::Cosine => &self.cosine,
+            Metric::Kulczynski => &self.kulczynski,
+            Metric::YuleQ => &self.yule_q,
+        }
+    }
+
+    pub(crate) fn assemble(&self, i: usize) -> RuleMetrics {
+        RuleMetrics {
+            support: self.support[i],
+            confidence: self.confidence[i],
+            lift: self.lift[i],
+            leverage: self.leverage[i],
+            conviction: self.conviction[i],
+            zhang: self.zhang[i],
+            jaccard: self.jaccard[i],
+            cosine: self.cosine[i],
+            kulczynski: self.kulczynski[i],
+            yule_q: self.yule_q[i],
+        }
+    }
+}
+
+/// Stable slot of a metric in the v4 section id space (section id =
+/// `16 + slot`) and in [`MappedColumns::metric_raw`]. Matches the order
+/// of `Metric::ALL`.
+pub(crate) fn metric_slot(m: Metric) -> usize {
+    match m {
+        Metric::Support => 0,
+        Metric::Confidence => 1,
+        Metric::Lift => 2,
+        Metric::Leverage => 3,
+        Metric::Conviction => 4,
+        Metric::Zhang => 5,
+        Metric::Jaccard => 6,
+        Metric::Cosine => 7,
+        Metric::Kulczynski => 8,
+        Metric::YuleQ => 9,
+    }
+}
+
+/// Uniform per-index access to the frozen columns, implemented by both
+/// backends. Indices are preorder rows (`0 = root`); edge indices (`e`)
+/// address the child CSR's flat arrays; every method is O(1) except
+/// [`ColumnStore::count_slow`], which is O(depth) on the mapped backend.
+///
+/// The contract the parity tests gate: for the same frozen trie, both
+/// backends return identical values from every method — the executor,
+/// the morsel sweep, and the header CSR cannot observe which backend
+/// serves them.
+pub(crate) trait ColumnStore {
+    fn num_rows(&self) -> usize;
+    fn item(&self, i: usize) -> ItemId;
+    fn parent(&self, i: usize) -> NodeIdx;
+    fn depth(&self, i: usize) -> u16;
+    fn subtree_end(&self, i: usize) -> NodeIdx;
+    /// Root (row 0) count == number of transactions.
+    fn count_root(&self) -> u64;
+    /// Count of node `i >= 1` given its parent's count — O(1) on both
+    /// backends (the mapped backend stores `parent_count - count` deltas,
+    /// which the preorder sweep's path stack feeds back in).
+    fn count_below(&self, i: usize, parent_count: u64) -> u64;
+    /// Count of node `i` without ancestor context (owned: O(1) column
+    /// read; mapped: O(depth) delta-sum walk).
+    fn count_slow(&self, i: usize) -> u64;
+    /// Child CSR slice bounds of node `i`.
+    fn child_bounds(&self, i: usize) -> (usize, usize);
+    fn child_item(&self, e: usize) -> ItemId;
+    fn child_target(&self, e: usize) -> NodeIdx;
+    /// Metric vector of the stored node-rule at `i`, with the count
+    /// context the caller already holds. The owned backend reads its
+    /// stored columns (ignoring the context); the mapped backend derives
+    /// from the context — bit-identical, same pure function, same inputs.
+    fn node_metrics(&self, i: usize, nn: u64, c_ac: u64, c_a: u64, c_c: u64) -> RuleMetrics;
+
+    /// Binary search `i`'s child slice for `item`.
+    #[inline]
+    fn child_lookup(&self, i: usize, item: ItemId) -> Option<NodeIdx> {
+        let (lo, hi) = self.child_bounds(i);
+        let (mut l, mut r) = (lo, hi);
+        while l < r {
+            let mid = l + (r - l) / 2;
+            if self.child_item(mid) < item {
+                l = mid + 1;
+            } else {
+                r = mid;
+            }
+        }
+        if l < hi && self.child_item(l) == item {
+            Some(self.child_target(l))
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// owned backend
+// ---------------------------------------------------------------------
+
+/// The fully materialized column set (builder freeze, v1–v3 load, delta
+/// compaction). Field layout is exactly the pre-backend `TrieOfRules`
+/// body; `memory_bytes()` accounting depends on it.
+#[derive(Debug, Clone)]
+pub(crate) struct OwnedColumns {
+    pub(crate) items: Vec<ItemId>,
+    pub(crate) counts: Vec<u64>,
+    pub(crate) parents: Vec<NodeIdx>,
+    pub(crate) depths: Vec<u16>,
+    pub(crate) subtree_end: Vec<NodeIdx>,
+    pub(crate) metrics: MetricColumns,
+    pub(crate) child_offsets: Vec<u32>,
+    pub(crate) child_items: Vec<ItemId>,
+    pub(crate) child_targets: Vec<NodeIdx>,
+    pub(crate) header_offsets: Vec<u32>,
+    pub(crate) header_nodes: Vec<NodeIdx>,
+}
+
+impl ColumnStore for OwnedColumns {
+    #[inline(always)]
+    fn num_rows(&self) -> usize {
+        self.items.len()
+    }
+    #[inline(always)]
+    fn item(&self, i: usize) -> ItemId {
+        self.items[i]
+    }
+    #[inline(always)]
+    fn parent(&self, i: usize) -> NodeIdx {
+        self.parents[i]
+    }
+    #[inline(always)]
+    fn depth(&self, i: usize) -> u16 {
+        self.depths[i]
+    }
+    #[inline(always)]
+    fn subtree_end(&self, i: usize) -> NodeIdx {
+        self.subtree_end[i]
+    }
+    #[inline(always)]
+    fn count_root(&self) -> u64 {
+        self.counts[0]
+    }
+    #[inline(always)]
+    fn count_below(&self, i: usize, _parent_count: u64) -> u64 {
+        self.counts[i]
+    }
+    #[inline(always)]
+    fn count_slow(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+    #[inline(always)]
+    fn child_bounds(&self, i: usize) -> (usize, usize) {
+        (self.child_offsets[i] as usize, self.child_offsets[i + 1] as usize)
+    }
+    #[inline(always)]
+    fn child_item(&self, e: usize) -> ItemId {
+        self.child_items[e]
+    }
+    #[inline(always)]
+    fn child_target(&self, e: usize) -> NodeIdx {
+        self.child_targets[e]
+    }
+    #[inline(always)]
+    fn node_metrics(&self, i: usize, _nn: u64, _c_ac: u64, _c_a: u64, _c_c: u64) -> RuleMetrics {
+        self.metrics.assemble(i)
+    }
+}
+
+// ---------------------------------------------------------------------
+// mapped backend
+// ---------------------------------------------------------------------
+
+/// A validated view over one v4 section's payload inside the mapped
+/// region: absolute offset + length plus the codec/width/count needed to
+/// read element `i`. Pure arithmetic — holds no reference, so
+/// [`MappedColumns`] can own both the region and its views.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SectionView {
+    pub(crate) off: usize,
+    pub(crate) len: usize,
+    pub(crate) count: usize,
+    pub(crate) width: u8,
+    pub(crate) codec: u8,
+}
+
+impl SectionView {
+    /// An absent/empty section (count 0).
+    pub(crate) fn empty() -> Self {
+        SectionView {
+            off: 0,
+            len: 0,
+            count: 0,
+            width: 0,
+            codec: CODEC_BITPACK,
+        }
+    }
+
+    /// Read unsigned element `i`. The loader has already validated
+    /// `len == payload_len(count, width)` (codec 0) or `len == 8*count`
+    /// (codec 1), so the subslice and the guarded window read are in
+    /// bounds.
+    #[inline(always)]
+    pub(crate) fn get(&self, region: &[u8], i: usize) -> u64 {
+        debug_assert!(i < self.count, "section index {i} out of {}", self.count);
+        if self.codec == CODEC_U64 {
+            let at = self.off + i * 8;
+            return u64::from_le_bytes(region[at..at + 8].try_into().unwrap());
+        }
+        bitpack::get(&region[self.off..self.off + self.len], self.width, i)
+    }
+}
+
+/// The mapped backend's non-section metadata plus the ten structure
+/// section views, assembled by the v4 loader after CRC + layout + DFS
+/// validation.
+pub(crate) struct MappedSections {
+    pub(crate) items_rank: SectionView,
+    pub(crate) count_delta: SectionView,
+    pub(crate) parents: SectionView,
+    pub(crate) depths: SectionView,
+    pub(crate) subtree_end: SectionView,
+    pub(crate) child_offsets: SectionView,
+    pub(crate) child_items_rank: SectionView,
+    pub(crate) child_targets: SectionView,
+    pub(crate) header_offsets: SectionView,
+    pub(crate) header_nodes: SectionView,
+    /// Optional raw-f64 metric sections by [`metric_slot`].
+    pub(crate) metric_raw: [Option<SectionView>; 10],
+}
+
+/// Materialized core columns for the legacy slice APIs (cold path).
+#[derive(Debug)]
+struct CoreCache {
+    items: Vec<ItemId>,
+    counts: Vec<u64>,
+    parents: Vec<NodeIdx>,
+    depths: Vec<u16>,
+    subtree_end: Vec<NodeIdx>,
+}
+
+/// Zero-deserialization columns over an `mmap`'d v4 snapshot.
+#[derive(Debug)]
+pub(crate) struct MappedColumns {
+    region: MapRegion,
+    num_rows: usize,
+    num_transactions: usize,
+    root_count: u64,
+    /// Whether the mapped image embeds vocabulary names (drives the
+    /// copy-on-write re-save fast path).
+    has_vocab: bool,
+    /// Frequency-rank decode tables (rank = packed item code).
+    rank_to_item: Vec<ItemId>,
+    rank_to_freq: Vec<u64>,
+    s: MappedSections,
+    core_cache: OnceLock<CoreCache>,
+    child_cache: OnceLock<(Vec<u32>, Vec<ItemId>, Vec<NodeIdx>)>,
+    header_cache: OnceLock<(Vec<u32>, Vec<NodeIdx>)>,
+    metric_cache: OnceLock<MetricColumns>,
+}
+
+impl MappedColumns {
+    pub(crate) fn new(
+        region: MapRegion,
+        num_rows: usize,
+        num_transactions: usize,
+        has_vocab: bool,
+        rank_to_item: Vec<ItemId>,
+        rank_to_freq: Vec<u64>,
+        sections: MappedSections,
+    ) -> Self {
+        MappedColumns {
+            region,
+            num_rows,
+            num_transactions,
+            root_count: num_transactions as u64,
+            has_vocab,
+            rank_to_item,
+            rank_to_freq,
+            s: sections,
+            core_cache: OnceLock::new(),
+            child_cache: OnceLock::new(),
+            header_cache: OnceLock::new(),
+            metric_cache: OnceLock::new(),
+        }
+    }
+
+    pub(crate) fn num_transactions(&self) -> usize {
+        self.num_transactions
+    }
+
+    pub(crate) fn has_vocab(&self) -> bool {
+        self.has_vocab
+    }
+
+    /// The raw mapped snapshot bytes (copy-on-write re-save).
+    pub(crate) fn image(&self) -> &[u8] {
+        &self.region
+    }
+
+    pub(crate) fn mapped_len(&self) -> usize {
+        self.region.len()
+    }
+
+    /// Bytes of private (non-mapped) memory this backend holds: decode
+    /// tables plus whatever lazy caches slice consumers have forced.
+    pub(crate) fn resident_bytes(&self) -> usize {
+        let mut b = self.rank_to_item.len() * 4 + self.rank_to_freq.len() * 8;
+        if let Some(c) = self.core_cache.get() {
+            b += c.items.len() * 4
+                + c.counts.len() * 8
+                + c.parents.len() * 4
+                + c.depths.len() * 2
+                + c.subtree_end.len() * 4;
+        }
+        if let Some((o, ci, ct)) = self.child_cache.get() {
+            b += o.len() * 4 + ci.len() * 4 + ct.len() * 4;
+        }
+        if let Some((o, hn)) = self.header_cache.get() {
+            b += o.len() * 4 + hn.len() * 4;
+        }
+        if let Some(mc) = self.metric_cache.get() {
+            b += 10 * mc.support.len() * 8;
+        }
+        b
+    }
+
+    #[inline(always)]
+    fn item_rank(&self, i: usize) -> usize {
+        debug_assert!(i >= 1);
+        self.s.items_rank.get(&self.region, i - 1) as usize
+    }
+
+    /// Standalone metric assembly for row `i` (O(depth) count walk).
+    pub(crate) fn metrics_of(&self, i: usize) -> RuleMetrics {
+        let nn = (self.num_transactions as u64).max(1);
+        if i == 0 {
+            return RuleMetrics::from_counts(RuleCounts {
+                n: nn,
+                c_ac: self.root_count,
+                c_a: self.root_count,
+                c_c: self.root_count,
+            });
+        }
+        let c_ac = self.count_slow(i);
+        let c_a = c_ac + self.s.count_delta.get(&self.region, i - 1);
+        RuleMetrics::from_counts(RuleCounts {
+            n: nn,
+            c_ac,
+            c_a,
+            c_c: self.rank_to_freq[self.item_rank(i)],
+        })
+    }
+
+    /// One metric column: zero-copy out of the map when the snapshot
+    /// carries that column raw (codec 2) at an 8-byte-aligned offset,
+    /// otherwise the lazily derived cache.
+    pub(crate) fn metric_column(&self, m: Metric) -> &[f64] {
+        if let Some(sect) = self.s.metric_raw[metric_slot(m)] {
+            let bytes = &self.region[sect.off..sect.off + sect.len];
+            if bytes.as_ptr() as usize % std::mem::align_of::<f64>() == 0 {
+                // Sound: validated length 8*count, aligned base, f64 has
+                // no invalid bit patterns, region outlives self.
+                return unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr() as *const f64, sect.count)
+                };
+            }
+        }
+        self.metric_columns().column(m)
+    }
+
+    /// Lazily derived metric columns — bit-identical to the owned
+    /// backend's freeze-time derivation (same pure function and inputs).
+    pub(crate) fn metric_columns(&self) -> &MetricColumns {
+        self.metric_cache.get_or_init(|| {
+            let core = self.core();
+            let nn = (self.num_transactions as u64).max(1);
+            let mut mc = MetricColumns::with_capacity(self.num_rows);
+            mc.push(&RuleMetrics::from_counts(RuleCounts {
+                n: nn,
+                c_ac: self.root_count,
+                c_a: self.root_count,
+                c_c: self.root_count,
+            }));
+            for i in 1..self.num_rows {
+                mc.push(&RuleMetrics::from_counts(RuleCounts {
+                    n: nn,
+                    c_ac: core.counts[i],
+                    c_a: core.counts[core.parents[i] as usize],
+                    c_c: self.rank_to_freq[self.item_rank(i)],
+                }));
+            }
+            mc
+        })
+    }
+
+    fn core(&self) -> &CoreCache {
+        self.core_cache.get_or_init(|| {
+            let n = self.num_rows;
+            let mut items = Vec::with_capacity(n);
+            let mut counts = Vec::with_capacity(n);
+            let mut parents = Vec::with_capacity(n);
+            let mut depths = Vec::with_capacity(n);
+            items.push(ROOT_ITEM);
+            counts.push(self.root_count);
+            parents.push(ROOT);
+            depths.push(0u16);
+            for i in 1..n {
+                let p = self.s.parents.get(&self.region, i - 1) as usize;
+                items.push(self.rank_to_item[self.item_rank(i)]);
+                counts.push(counts[p] - self.s.count_delta.get(&self.region, i - 1));
+                parents.push(p as NodeIdx);
+                depths.push(self.s.depths.get(&self.region, i - 1) as u16);
+            }
+            let subtree_end = (0..n)
+                .map(|i| self.s.subtree_end.get(&self.region, i) as NodeIdx)
+                .collect();
+            CoreCache {
+                items,
+                counts,
+                parents,
+                depths,
+                subtree_end,
+            }
+        })
+    }
+
+    pub(crate) fn items_column(&self) -> &[ItemId] {
+        &self.core().items
+    }
+    pub(crate) fn counts_column(&self) -> &[u64] {
+        &self.core().counts
+    }
+    pub(crate) fn parents_column(&self) -> &[NodeIdx] {
+        &self.core().parents
+    }
+    pub(crate) fn depths_column(&self) -> &[u16] {
+        &self.core().depths
+    }
+    pub(crate) fn subtree_end_column(&self) -> &[NodeIdx] {
+        &self.core().subtree_end
+    }
+
+    pub(crate) fn child_csr(&self) -> (&[u32], &[ItemId], &[NodeIdx]) {
+        let (o, ci, ct) = self.child_cache.get_or_init(|| {
+            let n = self.num_rows;
+            let offsets: Vec<u32> = (0..=n)
+                .map(|i| self.s.child_offsets.get(&self.region, i) as u32)
+                .collect();
+            let edges = n - 1;
+            let items: Vec<ItemId> = (0..edges)
+                .map(|e| self.rank_to_item[self.s.child_items_rank.get(&self.region, e) as usize])
+                .collect();
+            let targets: Vec<NodeIdx> = (0..edges)
+                .map(|e| self.s.child_targets.get(&self.region, e) as NodeIdx)
+                .collect();
+            (offsets, items, targets)
+        });
+        (o, ci, ct)
+    }
+
+    pub(crate) fn header_csr(&self) -> (&[u32], &[NodeIdx]) {
+        let (o, hn) = self.header_cache.get_or_init(|| {
+            let ranks = self.rank_to_item.len();
+            let offsets: Vec<u32> = (0..=ranks)
+                .map(|r| self.s.header_offsets.get(&self.region, r) as u32)
+                .collect();
+            let nodes: Vec<NodeIdx> = (0..self.num_rows - 1)
+                .map(|e| self.s.header_nodes.get(&self.region, e) as NodeIdx)
+                .collect();
+            (offsets, nodes)
+        });
+        (o, hn)
+    }
+}
+
+impl ColumnStore for MappedColumns {
+    #[inline(always)]
+    fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+    #[inline(always)]
+    fn item(&self, i: usize) -> ItemId {
+        if i == 0 {
+            return ROOT_ITEM;
+        }
+        self.rank_to_item[self.item_rank(i)]
+    }
+    #[inline(always)]
+    fn parent(&self, i: usize) -> NodeIdx {
+        if i == 0 {
+            return ROOT;
+        }
+        self.s.parents.get(&self.region, i - 1) as NodeIdx
+    }
+    #[inline(always)]
+    fn depth(&self, i: usize) -> u16 {
+        if i == 0 {
+            return 0;
+        }
+        self.s.depths.get(&self.region, i - 1) as u16
+    }
+    #[inline(always)]
+    fn subtree_end(&self, i: usize) -> NodeIdx {
+        self.s.subtree_end.get(&self.region, i) as NodeIdx
+    }
+    #[inline(always)]
+    fn count_root(&self) -> u64 {
+        self.root_count
+    }
+    #[inline(always)]
+    fn count_below(&self, i: usize, parent_count: u64) -> u64 {
+        parent_count - self.s.count_delta.get(&self.region, i - 1)
+    }
+    fn count_slow(&self, i: usize) -> u64 {
+        // counts[i] = root - sum of deltas along the root→i path.
+        let mut deficit = 0u64;
+        let mut cur = i;
+        while cur != 0 {
+            deficit += self.s.count_delta.get(&self.region, cur - 1);
+            cur = self.s.parents.get(&self.region, cur - 1) as usize;
+        }
+        self.root_count - deficit
+    }
+    #[inline(always)]
+    fn child_bounds(&self, i: usize) -> (usize, usize) {
+        (
+            self.s.child_offsets.get(&self.region, i) as usize,
+            self.s.child_offsets.get(&self.region, i + 1) as usize,
+        )
+    }
+    #[inline(always)]
+    fn child_item(&self, e: usize) -> ItemId {
+        self.rank_to_item[self.s.child_items_rank.get(&self.region, e) as usize]
+    }
+    #[inline(always)]
+    fn child_target(&self, e: usize) -> NodeIdx {
+        self.s.child_targets.get(&self.region, e) as NodeIdx
+    }
+    #[inline(always)]
+    fn node_metrics(&self, _i: usize, nn: u64, c_ac: u64, c_a: u64, c_c: u64) -> RuleMetrics {
+        RuleMetrics::from_counts(RuleCounts {
+            n: nn,
+            c_ac,
+            c_a,
+            c_c,
+        })
+    }
+}
+
+/// Which backend a [`crate::trie::trie::TrieOfRules`] serves from. Both
+/// variants are `Arc`-shared: cloning a trie (view pinning, snapshot
+/// swaps) stays O(1) regardless of backend.
+#[derive(Debug, Clone)]
+pub(crate) enum Store {
+    Owned(std::sync::Arc<OwnedColumns>),
+    Mapped(std::sync::Arc<MappedColumns>),
+}

@@ -31,6 +31,8 @@
 //! the unsorted canonical rule order equals sorted-`Rule` order exactly as
 //! before (see DESIGN.md §7).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::vocab::ItemId;
@@ -41,6 +43,26 @@ use crate::rules::metrics::{Metric, RuleCounts, RuleMetrics};
 use crate::rules::rule::Rule;
 use crate::trie::builder::TrieBuilder;
 use crate::trie::node::{NodeIdx, ROOT, ROOT_ITEM};
+use crate::trie::store::{ColumnStore, MappedColumns, MetricColumns, OwnedColumns, Store};
+
+/// Dispatch `$body` over the concrete storage backend, binding `$s` to a
+/// `&OwnedColumns` or `&MappedColumns` — each arm monomorphizes the body
+/// against that backend's inlined accessors (no dyn dispatch anywhere on
+/// a traversal path).
+macro_rules! with_store {
+    ($trie:expr, $s:ident => $body:expr) => {
+        match &$trie.store {
+            Store::Owned($s) => {
+                let $s: &OwnedColumns = $s;
+                $body
+            }
+            Store::Mapped($s) => {
+                let $s: &MappedColumns = $s;
+                $body
+            }
+        }
+    };
+}
 
 /// Outcome of a rule lookup.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,89 +88,20 @@ pub struct NodeView {
     pub metrics: RuleMetrics,
 }
 
-/// One contiguous `f64` column per rule metric, parallel to the node
-/// arrays (row 0 = root). Residual metric predicates and top-N scans read
-/// these directly without assembling a `RuleMetrics`.
-#[derive(Debug, Clone, Default)]
-struct MetricColumns {
-    support: Vec<f64>,
-    confidence: Vec<f64>,
-    lift: Vec<f64>,
-    leverage: Vec<f64>,
-    conviction: Vec<f64>,
-    zhang: Vec<f64>,
-    jaccard: Vec<f64>,
-    cosine: Vec<f64>,
-    kulczynski: Vec<f64>,
-    yule_q: Vec<f64>,
-}
-
-impl MetricColumns {
-    fn with_capacity(n: usize) -> Self {
-        let mut c = MetricColumns::default();
-        for col in [
-            &mut c.support,
-            &mut c.confidence,
-            &mut c.lift,
-            &mut c.leverage,
-            &mut c.conviction,
-            &mut c.zhang,
-            &mut c.jaccard,
-            &mut c.cosine,
-            &mut c.kulczynski,
-            &mut c.yule_q,
-        ] {
-            col.reserve_exact(n);
-        }
-        c
-    }
-
-    fn push(&mut self, m: &RuleMetrics) {
-        self.support.push(m.support);
-        self.confidence.push(m.confidence);
-        self.lift.push(m.lift);
-        self.leverage.push(m.leverage);
-        self.conviction.push(m.conviction);
-        self.zhang.push(m.zhang);
-        self.jaccard.push(m.jaccard);
-        self.cosine.push(m.cosine);
-        self.kulczynski.push(m.kulczynski);
-        self.yule_q.push(m.yule_q);
-    }
-}
-
 /// The frozen Trie of Rules (see module docs for the layout).
+///
+/// The columns themselves live behind a [`Store`] — either fully owned
+/// `Vec`s or zero-copy views into an `mmap`'d v4 snapshot (see
+/// [`crate::trie::store`]). Every accessor and traversal below is
+/// backend-agnostic and parity-exact across backends; cloning is O(1)
+/// either way (`Arc`-shared columns).
 #[derive(Debug, Clone)]
 pub struct TrieOfRules {
     order: ItemOrder,
     num_transactions: usize,
     /// Representable (node, split) pairs, cached at freeze.
     representable: usize,
-
-    // -- node columns, preorder-indexed, row 0 = root -------------------
-    items: Vec<ItemId>,
-    counts: Vec<u64>,
-    parents: Vec<NodeIdx>,
-    depths: Vec<u16>,
-    /// Exclusive end of the subtree range: descendants of `i` (including
-    /// `i`) are exactly the indices `[i, subtree_end[i])`.
-    subtree_end: Vec<NodeIdx>,
-    metrics: MetricColumns,
-
-    // -- CSR children ----------------------------------------------------
-    /// `len = nodes + 1`; children of `i` occupy
-    /// `child_items[child_offsets[i]..child_offsets[i+1]]` (item-sorted)
-    /// with parallel targets in `child_targets`.
-    child_offsets: Vec<u32>,
-    child_items: Vec<ItemId>,
-    child_targets: Vec<NodeIdx>,
-
-    // -- CSR header table, indexed by item rank --------------------------
-    /// `len = num_frequent + 1`; nodes carrying the rank-`r` item are
-    /// `header_nodes[header_offsets[r]..header_offsets[r+1]]`, ascending
-    /// preorder.
-    header_offsets: Vec<u32>,
-    header_nodes: Vec<NodeIdx>,
+    store: Store,
 }
 
 impl TrieOfRules {
@@ -419,17 +372,19 @@ impl TrieOfRules {
             order,
             num_transactions,
             representable,
-            items,
-            counts,
-            parents,
-            depths,
-            subtree_end,
-            metrics,
-            child_offsets,
-            child_items,
-            child_targets,
-            header_offsets,
-            header_nodes,
+            store: Store::Owned(Arc::new(OwnedColumns {
+                items,
+                counts,
+                parents,
+                depths,
+                subtree_end,
+                metrics,
+                child_offsets,
+                child_items,
+                child_targets,
+                header_offsets,
+                header_nodes,
+            })),
         })
     }
 
@@ -455,20 +410,35 @@ impl TrieOfRules {
         let trie =
             Self::from_core_columns(order, num_transactions, items, counts, parents, depths)?;
         anyhow::ensure!(
-            trie.subtree_end == subtree_end,
+            trie.subtree_end_column() == &subtree_end[..],
             "stored subtree_end column disagrees with the tree shape (corrupt file?)"
         );
         anyhow::ensure!(
-            trie.child_offsets == child_offsets
-                && trie.child_items == child_items
-                && trie.child_targets == child_targets,
+            trie.child_csr() == (&child_offsets[..], &child_items[..], &child_targets[..]),
             "stored child CSR disagrees with the tree shape (corrupt file?)"
         );
         anyhow::ensure!(
-            trie.header_offsets == header_offsets && trie.header_nodes == header_nodes,
+            trie.header_csr() == (&header_offsets[..], &header_nodes[..]),
             "stored header CSR disagrees with the tree shape (corrupt file?)"
         );
         Ok(trie)
+    }
+
+    /// Wrap an `mmap`'d v4 column store (see [`crate::trie::serialize`]'s
+    /// `open`): the loader has already CRC-checked and structurally
+    /// validated the image, so this just assembles the handle.
+    pub(crate) fn from_mapped(
+        order: ItemOrder,
+        num_transactions: usize,
+        representable: usize,
+        cols: Arc<MappedColumns>,
+    ) -> TrieOfRules {
+        TrieOfRules {
+            order,
+            num_transactions,
+            representable,
+            store: Store::Mapped(cols),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -482,7 +452,13 @@ impl TrieOfRules {
     /// Number of nodes excluding the root = number of stored
     /// single-consequent rules (depth-1 nodes are itemset-support entries).
     pub fn num_nodes(&self) -> usize {
-        self.items.len() - 1
+        self.num_rows() - 1
+    }
+
+    /// Total preorder rows including the root.
+    #[inline]
+    fn num_rows(&self) -> usize {
+        with_store!(self, s => s.num_rows())
     }
 
     /// Number of rules the trie represents directly: every (node, split)
@@ -497,64 +473,51 @@ impl TrieOfRules {
 
     #[inline]
     pub fn item(&self, idx: NodeIdx) -> ItemId {
-        self.items[idx as usize]
+        with_store!(self, s => s.item(idx as usize))
     }
 
     #[inline]
     pub fn count(&self, idx: NodeIdx) -> u64 {
-        self.counts[idx as usize]
+        with_store!(self, s => s.count_slow(idx as usize))
     }
 
     #[inline]
     pub fn parent(&self, idx: NodeIdx) -> NodeIdx {
-        self.parents[idx as usize]
+        with_store!(self, s => s.parent(idx as usize))
     }
 
     #[inline]
     pub fn depth(&self, idx: NodeIdx) -> u16 {
-        self.depths[idx as usize]
+        with_store!(self, s => s.depth(idx as usize))
     }
 
     /// Exclusive end of `idx`'s subtree range: the descendants of `idx`
     /// (itself included) are exactly `idx..subtree_end(idx)`.
     #[inline]
     pub fn subtree_end(&self, idx: NodeIdx) -> NodeIdx {
-        self.subtree_end[idx as usize]
+        with_store!(self, s => s.subtree_end(idx as usize))
     }
 
     /// Assemble the stored metric vector of the node-rule at `idx`.
+    /// Owned: gathered from the stored columns. Mapped: derived from the
+    /// packed counts — bit-identical (same pure function, same inputs).
     #[inline]
     pub fn metrics(&self, idx: NodeIdx) -> RuleMetrics {
-        let i = idx as usize;
-        RuleMetrics {
-            support: self.metrics.support[i],
-            confidence: self.metrics.confidence[i],
-            lift: self.metrics.lift[i],
-            leverage: self.metrics.leverage[i],
-            conviction: self.metrics.conviction[i],
-            zhang: self.metrics.zhang[i],
-            jaccard: self.metrics.jaccard[i],
-            cosine: self.metrics.cosine[i],
-            kulczynski: self.metrics.kulczynski[i],
-            yule_q: self.metrics.yule_q[i],
+        match &self.store {
+            Store::Owned(s) => s.metrics.assemble(idx as usize),
+            Store::Mapped(s) => s.metrics_of(idx as usize),
         }
     }
 
     /// One metric's contiguous column (row per node, row 0 = root) — the
-    /// access path for residual predicate evaluation and top-N scans.
+    /// access path for residual predicate evaluation and top-N scans. On
+    /// the mapped backend this is zero-copy when the snapshot stores the
+    /// column raw, else a lazily derived cache.
     #[inline]
     pub fn metric_column(&self, m: Metric) -> &[f64] {
-        match m {
-            Metric::Support => &self.metrics.support,
-            Metric::Confidence => &self.metrics.confidence,
-            Metric::Lift => &self.metrics.lift,
-            Metric::Leverage => &self.metrics.leverage,
-            Metric::Conviction => &self.metrics.conviction,
-            Metric::Zhang => &self.metrics.zhang,
-            Metric::Jaccard => &self.metrics.jaccard,
-            Metric::Cosine => &self.metrics.cosine,
-            Metric::Kulczynski => &self.metrics.kulczynski,
-            Metric::YuleQ => &self.metrics.yule_q,
+        match &self.store {
+            Store::Owned(s) => s.metrics.column(m),
+            Store::Mapped(s) => s.metric_column(m),
         }
     }
 
@@ -571,24 +534,15 @@ impl TrieOfRules {
 
     /// `idx`'s children as `(item, child)` pairs, item-sorted.
     pub fn children(&self, idx: NodeIdx) -> impl Iterator<Item = (ItemId, NodeIdx)> + '_ {
-        let lo = self.child_offsets[idx as usize] as usize;
-        let hi = self.child_offsets[idx as usize + 1] as usize;
-        self.child_items[lo..hi]
-            .iter()
-            .copied()
-            .zip(self.child_targets[lo..hi].iter().copied())
+        let (lo, hi) = with_store!(self, s => s.child_bounds(idx as usize));
+        (lo..hi).map(move |e| with_store!(self, s => (s.child_item(e), s.child_target(e))))
     }
 
     /// Find the child of `idx` carrying `item` (binary search over the
     /// node's CSR slice).
     #[inline]
     pub fn child(&self, idx: NodeIdx, item: ItemId) -> Option<NodeIdx> {
-        let lo = self.child_offsets[idx as usize] as usize;
-        let hi = self.child_offsets[idx as usize + 1] as usize;
-        self.child_items[lo..hi]
-            .binary_search(&item)
-            .ok()
-            .map(|pos| self.child_targets[lo + pos])
+        with_store!(self, s => s.child_lookup(idx as usize, item))
     }
 
     /// Items on the path root→`idx`, root-first.
@@ -608,61 +562,123 @@ impl TrieOfRules {
     pub fn item_nodes(&self, item: ItemId) -> &[NodeIdx] {
         match self.order.rank(item) {
             Some(r) => {
-                let lo = self.header_offsets[r as usize] as usize;
-                let hi = self.header_offsets[r as usize + 1] as usize;
-                &self.header_nodes[lo..hi]
+                let (offsets, nodes) = self.header_csr();
+                let lo = offsets[r as usize] as usize;
+                let hi = offsets[r as usize + 1] as usize;
+                &nodes[lo..hi]
             }
             None => &[],
         }
     }
 
-    /// Resident size in bytes, computed exactly from column lengths (the
-    /// service STATS formula): node columns + metric columns + child CSR +
-    /// header CSR.
+    /// Resident (heap) size in bytes. Owned backend: computed exactly from
+    /// column lengths (the service STATS formula) — node columns + metric
+    /// columns + child CSR + header CSR. Mapped backend: only the decode
+    /// tables plus any lazily materialized compatibility caches; the
+    /// mapped file itself is reported by [`Self::mapped_bytes`].
     pub fn memory_bytes(&self) -> usize {
-        let n = self.items.len();
-        // items, counts, parents, depths, subtree_end
-        let node_cols = n * (4 + 8 + 4 + 2 + 4);
-        let metric_cols = 10 * n * 8;
-        let child_csr = self.child_offsets.len() * 4 + self.child_items.len() * (4 + 4);
-        let header_csr = self.header_offsets.len() * 4 + self.header_nodes.len() * 4;
-        node_cols + metric_cols + child_csr + header_csr
+        match &self.store {
+            Store::Owned(s) => {
+                let n = s.items.len();
+                // items, counts, parents, depths, subtree_end
+                let node_cols = n * (4 + 8 + 4 + 2 + 4);
+                let metric_cols = 10 * n * 8;
+                let child_csr = s.child_offsets.len() * 4 + s.child_items.len() * (4 + 4);
+                let header_csr = s.header_offsets.len() * 4 + s.header_nodes.len() * 4;
+                node_cols + metric_cols + child_csr + header_csr
+            }
+            Store::Mapped(s) => s.resident_bytes(),
+        }
+    }
+
+    /// Which backend serves this trie (`"owned"` or `"mmap"`).
+    pub fn backend_name(&self) -> &'static str {
+        match &self.store {
+            Store::Owned(_) => "owned",
+            Store::Mapped(_) => "mmap",
+        }
+    }
+
+    /// Length of the mapped snapshot region backing this trie (0 for the
+    /// owned backend).
+    pub fn mapped_bytes(&self) -> usize {
+        match &self.store {
+            Store::Owned(_) => 0,
+            Store::Mapped(s) => s.mapped_len(),
+        }
+    }
+
+    /// The raw v4 image this trie is mapped over, with its vocab-presence
+    /// flag — the serializer's copy-on-write re-save fast path. `None` on
+    /// the owned backend.
+    pub(crate) fn mapped_image(&self) -> Option<(&[u8], bool)> {
+        match &self.store {
+            Store::Owned(_) => None,
+            Store::Mapped(s) => Some((s.image(), s.has_vocab())),
+        }
     }
 
     /// Raw node triples `(item, parent, count)` in preorder (parents
     /// always precede children) — the v1 serializer's wire form.
     pub fn raw_nodes(&self) -> impl Iterator<Item = (ItemId, NodeIdx, u64)> + '_ {
-        (1..self.items.len()).map(|i| (self.items[i], self.parents[i], self.counts[i]))
+        let (items, counts, parents) =
+            (self.items_column(), self.counts_column(), self.parents_column());
+        (1..items.len()).map(move |i| (items[i], parents[i], counts[i]))
     }
 
-    // -- column slices (serializer v2, benches, tests) -------------------
+    // -- column slices (serializer, benches, tests) ----------------------
+    //
+    // On the mapped backend these are lazily materialized compatibility
+    // caches (one linear decode on first use); per-index accessors above
+    // never force them.
 
     pub fn items_column(&self) -> &[ItemId] {
-        &self.items
+        match &self.store {
+            Store::Owned(s) => &s.items,
+            Store::Mapped(s) => s.items_column(),
+        }
     }
 
     pub fn counts_column(&self) -> &[u64] {
-        &self.counts
+        match &self.store {
+            Store::Owned(s) => &s.counts,
+            Store::Mapped(s) => s.counts_column(),
+        }
     }
 
     pub fn parents_column(&self) -> &[NodeIdx] {
-        &self.parents
+        match &self.store {
+            Store::Owned(s) => &s.parents,
+            Store::Mapped(s) => s.parents_column(),
+        }
     }
 
     pub fn depths_column(&self) -> &[u16] {
-        &self.depths
+        match &self.store {
+            Store::Owned(s) => &s.depths,
+            Store::Mapped(s) => s.depths_column(),
+        }
     }
 
     pub fn subtree_end_column(&self) -> &[NodeIdx] {
-        &self.subtree_end
+        match &self.store {
+            Store::Owned(s) => &s.subtree_end,
+            Store::Mapped(s) => s.subtree_end_column(),
+        }
     }
 
     pub fn child_csr(&self) -> (&[u32], &[ItemId], &[NodeIdx]) {
-        (&self.child_offsets, &self.child_items, &self.child_targets)
+        match &self.store {
+            Store::Owned(s) => (&s.child_offsets, &s.child_items, &s.child_targets),
+            Store::Mapped(s) => s.child_csr(),
+        }
     }
 
     pub fn header_csr(&self) -> (&[u32], &[NodeIdx]) {
-        (&self.header_offsets, &self.header_nodes)
+        match &self.store {
+            Store::Owned(s) => (&s.header_offsets, &s.header_nodes),
+            Store::Mapped(s) => s.header_csr(),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -774,12 +790,30 @@ impl TrieOfRules {
     /// in preorder. The trie's traversal advantage (8x headline) comes
     /// from this being a branch-light linear sweep over the depth column.
     pub fn for_each_node_rule(&self, mut f: impl FnMut(NodeIdx, &RuleMetrics)) {
-        for i in 1..self.items.len() {
-            if self.depths[i] >= 2 {
-                let m = self.metrics(i as NodeIdx);
-                f(i as NodeIdx, &m);
+        let nn = (self.num_transactions as u64).max(1);
+        with_store!(self, s => {
+            let len = s.num_rows();
+            let root_count = s.count_root();
+            // Ancestor counts along the preorder walk feed the mapped
+            // backend's delta decode; the owned backend ignores them.
+            let mut path_counts: Vec<u64> = Vec::new();
+            for i in 1..len {
+                let depth = s.depth(i) as usize;
+                path_counts.truncate(depth - 1);
+                let parent_count = if depth == 1 {
+                    root_count
+                } else {
+                    path_counts[depth - 2]
+                };
+                let c_i = s.count_below(i, parent_count);
+                path_counts.push(c_i);
+                if depth >= 2 {
+                    let c_c = self.order.frequency(s.item(i));
+                    let m = s.node_metrics(i, nn, c_i, parent_count, c_c);
+                    f(i as NodeIdx, &m);
+                }
             }
-        }
+        });
     }
 
     /// Visit every representable rule — each (node, split) pair — deriving
@@ -820,7 +854,7 @@ impl TrieOfRules {
         prune: impl FnMut(f64) -> bool,
         f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
     ) -> usize {
-        self.for_each_rule_pruned_range(1..self.items.len(), prune, f)
+        self.for_each_rule_pruned_range(1..self.num_rows(), prune, f)
     }
 
     /// [`Self::for_each_rule_pruned`] restricted to a preorder index
@@ -839,10 +873,26 @@ impl TrieOfRules {
     pub fn for_each_rule_pruned_range(
         &self,
         range: std::ops::Range<usize>,
+        prune: impl FnMut(f64) -> bool,
+        f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
+    ) -> usize {
+        with_store!(self, s => self.sweep_range(s, range, prune, f))
+    }
+
+    /// The backend-generic body of [`Self::for_each_rule_pruned_range`],
+    /// monomorphized per [`ColumnStore`]. Counts flow *down* the path
+    /// stack: each node's count is `count_below(i, parent_count)` — a
+    /// plain column read on the owned backend, a single packed-delta
+    /// subtraction on the mapped one — so the sweep never needs an
+    /// O(depth) count reconstruction.
+    fn sweep_range<S: ColumnStore>(
+        &self,
+        s: &S,
+        range: std::ops::Range<usize>,
         mut prune: impl FnMut(f64) -> bool,
         mut f: impl FnMut(&[ItemId], &[ItemId], &RuleMetrics),
     ) -> usize {
-        let len = self.items.len();
+        let len = s.num_rows();
         let lo = range.start.max(1);
         let hi = range.end.min(len);
         if lo >= hi {
@@ -850,44 +900,58 @@ impl TrieOfRules {
         }
         let n = self.num_transactions as u64;
         let n_f = self.num_transactions as f64;
+        let nn = n.max(1);
+        let root_count = s.count_root();
         let mut visited = 0usize;
         // Reusable path buffers: items and counts root-first, truncated to
         // the node's depth on entry (preorder ⇒ ancestors are current).
         // Seeded with lo's strict ancestors so mid-trie ranges see the
-        // same antecedent context the full sweep would have built up.
+        // same antecedent context the full sweep would have built up;
+        // ancestor counts are computed top-down so the mapped backend's
+        // parent-relative deltas resolve.
         let mut path_items: Vec<ItemId> = Vec::new();
         let mut path_counts: Vec<u64> = Vec::new();
         {
             let mut rev: Vec<usize> = Vec::new();
-            let mut anc = self.parents[lo];
-            while anc != ROOT {
-                rev.push(anc as usize);
-                anc = self.parents[anc as usize];
+            let mut anc = s.parent(lo) as usize;
+            while anc != ROOT as usize {
+                rev.push(anc);
+                anc = s.parent(anc) as usize;
             }
+            let mut above = root_count;
             for &a in rev.iter().rev() {
-                path_items.push(self.items[a]);
-                path_counts.push(self.counts[a]);
+                let c = s.count_below(a, above);
+                path_items.push(s.item(a));
+                path_counts.push(c);
+                above = c;
             }
         }
         let mut i = lo;
         while i < hi {
             visited += 1;
-            let depth = self.depths[i] as usize;
+            let depth = s.depth(i) as usize;
             path_items.truncate(depth - 1);
             path_counts.truncate(depth - 1);
-            path_items.push(self.items[i]);
-            path_counts.push(self.counts[i]);
-            if prune(self.counts[i] as f64 / n_f) {
+            let parent_count = if depth == 1 {
+                root_count
+            } else {
+                path_counts[depth - 2]
+            };
+            let c_i = s.count_below(i, parent_count);
+            path_items.push(s.item(i));
+            path_counts.push(c_i);
+            if prune(c_i as f64 / n_f) {
                 // Range skip: the entire subtree is the contiguous block
                 // [i, subtree_end[i]) — step over it.
-                i = self.subtree_end[i] as usize;
+                i = s.subtree_end(i) as usize;
                 continue;
             }
             for split in 1..depth {
                 let consequent = &path_items[split..];
                 let metrics = if split == depth - 1 {
                     // Single-item consequent == the stored node-rule.
-                    self.metrics(i as NodeIdx)
+                    let c_c = self.order.frequency(path_items[depth - 1]);
+                    s.node_metrics(i, nn, c_i, parent_count, c_c)
                 } else {
                     let c_c = match self.support_of(consequent) {
                         Some(c) => c,
@@ -895,7 +959,7 @@ impl TrieOfRules {
                     };
                     RuleMetrics::from_counts(RuleCounts {
                         n,
-                        c_ac: self.counts[i],
+                        c_ac: c_i,
                         c_a: path_counts[split - 1],
                         c_c,
                     })
@@ -925,23 +989,25 @@ impl TrieOfRules {
     /// oversized morsel (alignment is never sacrificed); balance across
     /// workers comes from dynamic morsel claiming, not equal sizes.
     pub fn morsels(&self, target_len: usize) -> Vec<std::ops::Range<usize>> {
-        let len = self.items.len();
-        let target = target_len.max(1);
-        let mut out = Vec::new();
-        let mut start = 1usize;
-        let mut cur = 1usize;
-        while cur < len {
-            // Step over one whole root-child subtree.
-            cur = self.subtree_end[cur] as usize;
-            if cur - start >= target {
-                out.push(start..cur);
-                start = cur;
+        with_store!(self, s => {
+            let len = s.num_rows();
+            let target = target_len.max(1);
+            let mut out = Vec::new();
+            let mut start = 1usize;
+            let mut cur = 1usize;
+            while cur < len {
+                // Step over one whole root-child subtree.
+                cur = s.subtree_end(cur) as usize;
+                if cur - start >= target {
+                    out.push(start..cur);
+                    start = cur;
+                }
             }
-        }
-        if start < len {
-            out.push(start..len);
-        }
-        out
+            if start < len {
+                out.push(start..len);
+            }
+            out
+        })
     }
 
     /// Materialize all representable rules (tests / dataframe parity).
@@ -960,21 +1026,30 @@ impl TrieOfRules {
     /// slices into a reused path buffer.
     pub fn for_each_split(&self, mut f: impl FnMut(&[ItemId], &[ItemId], f64, f64)) {
         let n = self.num_transactions as f64;
-        let len = self.items.len();
-        let mut path_items: Vec<ItemId> = Vec::new();
-        let mut path_counts: Vec<u64> = Vec::new();
-        for i in 1..len {
-            let depth = self.depths[i] as usize;
-            path_items.truncate(depth - 1);
-            path_counts.truncate(depth - 1);
-            path_items.push(self.items[i]);
-            path_counts.push(self.counts[i]);
-            let support = self.counts[i] as f64 / n;
-            for split in 1..depth {
-                let confidence = self.counts[i] as f64 / path_counts[split - 1] as f64;
-                f(&path_items[..split], &path_items[split..], support, confidence);
+        with_store!(self, s => {
+            let len = s.num_rows();
+            let root_count = s.count_root();
+            let mut path_items: Vec<ItemId> = Vec::new();
+            let mut path_counts: Vec<u64> = Vec::new();
+            for i in 1..len {
+                let depth = s.depth(i) as usize;
+                path_items.truncate(depth - 1);
+                path_counts.truncate(depth - 1);
+                let parent_count = if depth == 1 {
+                    root_count
+                } else {
+                    path_counts[depth - 2]
+                };
+                let c_i = s.count_below(i, parent_count);
+                path_items.push(s.item(i));
+                path_counts.push(c_i);
+                let support = c_i as f64 / n;
+                for split in 1..depth {
+                    let confidence = c_i as f64 / path_counts[split - 1] as f64;
+                    f(&path_items[..split], &path_items[split..], support, confidence);
+                }
             }
-        }
+        });
     }
 
     // ------------------------------------------------------------------
@@ -993,11 +1068,13 @@ impl TrieOfRules {
         }
         let col = self.metric_column(metric);
         let mut all: Vec<(TotalF64, NodeIdx)> = Vec::with_capacity(self.num_nodes());
-        for i in 1..col.len() {
-            if self.depths[i] >= 2 {
-                all.push((TotalF64(col[i]), i as NodeIdx));
+        with_store!(self, s => {
+            for i in 1..col.len() {
+                if s.depth(i) >= 2 {
+                    all.push((TotalF64(col[i]), i as NodeIdx));
+                }
             }
-        }
+        });
         let k = k.min(all.len());
         if k == 0 {
             return Vec::new();
@@ -1031,22 +1108,31 @@ impl TrieOfRules {
         let n = self.num_transactions as f64;
         let mut cands: Vec<(TotalF64, NodeIdx, u16)> =
             Vec::with_capacity(self.num_representable_rules());
-        // Per-depth ancestor counts maintained along the preorder sweep.
-        let mut path_counts: Vec<u64> = Vec::new();
-        for i in 1..self.items.len() {
-            let depth = self.depths[i];
-            path_counts.truncate(depth as usize - 1);
-            path_counts.push(self.counts[i]);
-            let sup = self.counts[i] as f64 / n;
-            for split in 1..depth {
-                let v = if use_support {
-                    sup
+        with_store!(self, s => {
+            let root_count = s.count_root();
+            // Per-depth ancestor counts maintained along the preorder sweep.
+            let mut path_counts: Vec<u64> = Vec::new();
+            for i in 1..s.num_rows() {
+                let depth = s.depth(i);
+                path_counts.truncate(depth as usize - 1);
+                let parent_count = if depth == 1 {
+                    root_count
                 } else {
-                    self.counts[i] as f64 / path_counts[split as usize - 1] as f64
+                    path_counts[depth as usize - 2]
                 };
-                cands.push((TotalF64(v), i as NodeIdx, split));
+                let c_i = s.count_below(i, parent_count);
+                path_counts.push(c_i);
+                let sup = c_i as f64 / n;
+                for split in 1..depth {
+                    let v = if use_support {
+                        sup
+                    } else {
+                        c_i as f64 / path_counts[split as usize - 1] as f64
+                    };
+                    cands.push((TotalF64(v), i as NodeIdx, split));
+                }
             }
-        }
+        });
         let k = k.min(cands.len());
         if k == 0 {
             return Vec::new();

@@ -1,0 +1,268 @@
+//! Fixed-width bit packing — the v4 snapshot column codec (DESIGN.md §17).
+//!
+//! A column of `count` unsigned values is stored at the minimal width
+//! `w = bits_for(max)` bits per value, LSB-first: value `i` occupies bits
+//! `[i*w, (i+1)*w)` of the little-endian byte stream. Widths are capped at
+//! 56 so every value can be read with a single unaligned 8-byte
+//! little-endian window (`shift + width <= 63`); columns whose maximum
+//! needs more than 56 bits fall back to the raw `u64` codec. The payload
+//! carries 8 trailing guard zero bytes so the 8-byte window read is always
+//! in bounds without per-access branching.
+//!
+//! Like the varint codec, reads are hardened for untrusted input:
+//! [`PackedSlice::new`] validates the payload length up front and returns
+//! a typed error; after that, `get` is branch-light and panic-free.
+
+/// Hard cap on packed width: keeps `shift + width <= 63` for the
+/// single-window read in [`PackedSlice::get`].
+pub const MAX_PACKED_WIDTH: u8 = 56;
+
+/// Guard bytes appended after the packed bits so an 8-byte window read at
+/// the last value never runs past the buffer.
+pub const GUARD_BYTES: usize = 8;
+
+/// Minimal width able to represent `max` (0 for `max == 0`, up to 64).
+pub fn bits_for(max: u64) -> u8 {
+    (64 - max.leading_zeros()) as u8
+}
+
+/// Packed payload length in bytes for `count` values at `width` bits,
+/// including the guard. Zero-width and empty columns have no payload.
+pub fn payload_len(count: usize, width: u8) -> usize {
+    if count == 0 || width == 0 {
+        return 0;
+    }
+    let bits = count * width as usize;
+    bits.div_ceil(8) + GUARD_BYTES
+}
+
+/// Pack `values` at `width` bits each, LSB-first into little-endian bytes,
+/// followed by [`GUARD_BYTES`] zeros. Every value must fit in `width`
+/// bits and `width` must be `<= MAX_PACKED_WIDTH` (writer-side invariants;
+/// the writer chooses `width = bits_for(max)`).
+pub fn pack(values: &[u64], width: u8) -> Vec<u8> {
+    assert!(width <= MAX_PACKED_WIDTH, "packed width {width} > 56");
+    let len = payload_len(values.len(), width);
+    if len == 0 {
+        return Vec::new();
+    }
+    let mask = (1u64 << width) - 1;
+    let mut out = vec![0u8; len];
+    for (i, &v) in values.iter().enumerate() {
+        debug_assert!(v <= mask, "value {v} exceeds width {width}");
+        let bit = i * width as usize;
+        let byte = bit / 8;
+        let shift = (bit % 8) as u32;
+        // Read-modify-write an 8-byte little-endian window; the guard
+        // guarantees `byte + 8 <= len`.
+        let mut window = u64::from_le_bytes(out[byte..byte + 8].try_into().unwrap());
+        window |= (v & mask) << shift;
+        out[byte..byte + 8].copy_from_slice(&window.to_le_bytes());
+    }
+    out
+}
+
+/// Read value `i` from a packed payload whose length was already
+/// validated against `payload_len(count, width)` — the guard keeps the
+/// 8-byte window in bounds for every `i < count`. The single authoritative
+/// decode; [`PackedSlice::get`] and the mmap section views delegate here.
+#[inline(always)]
+pub fn get(data: &[u8], width: u8, i: usize) -> u64 {
+    if width == 0 {
+        return 0;
+    }
+    let bit = i * width as usize;
+    let byte = bit / 8;
+    let shift = (bit % 8) as u32;
+    let window = u64::from_le_bytes(data[byte..byte + 8].try_into().unwrap());
+    (window >> shift) & ((1u64 << width) - 1)
+}
+
+/// Why a packed payload failed validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BitpackError {
+    /// Width byte outside `0..=56`.
+    BadWidth(u8),
+    /// Payload length does not match `payload_len(count, width)`.
+    BadLength { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for BitpackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BitpackError::BadWidth(w) => write!(f, "bit-packed width {w} out of range 0..=56"),
+            BitpackError::BadLength { expected, got } => {
+                write!(f, "bit-packed payload length {got}, expected {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BitpackError {}
+
+/// A validated view over a packed payload. Construction checks the length
+/// invariant once; `get` then reads without bounds branches.
+#[derive(Clone, Copy)]
+pub struct PackedSlice<'a> {
+    data: &'a [u8],
+    width: u8,
+    count: usize,
+}
+
+impl<'a> PackedSlice<'a> {
+    /// Validate `data` as a packed payload of `count` values at `width`
+    /// bits. Truncated or oversized payloads are a typed error, never a
+    /// panic.
+    pub fn new(data: &'a [u8], count: usize, width: u8) -> Result<Self, BitpackError> {
+        if width > MAX_PACKED_WIDTH {
+            return Err(BitpackError::BadWidth(width));
+        }
+        let expected = payload_len(count, width);
+        if data.len() != expected {
+            return Err(BitpackError::BadLength {
+                expected,
+                got: data.len(),
+            });
+        }
+        Ok(PackedSlice { data, width, count })
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Read value `i`. Zero-width columns are all zeros by definition.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> u64 {
+        debug_assert!(i < self.count, "packed index {i} out of {}", self.count);
+        get(self.data, self.width, i)
+    }
+
+    /// Materialize the column (cold path: lazy slice caches, validation).
+    pub fn to_vec(&self) -> Vec<u64> {
+        (0..self.count).map(|i| self.get(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_for_boundaries() {
+        assert_eq!(bits_for(0), 0);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 2);
+        assert_eq!(bits_for(255), 8);
+        assert_eq!(bits_for(256), 9);
+        assert_eq!(bits_for((1 << 56) - 1), 56);
+        assert_eq!(bits_for(1 << 56), 57);
+        assert_eq!(bits_for(u64::MAX), 64);
+    }
+
+    #[test]
+    fn payload_len_formula() {
+        assert_eq!(payload_len(0, 13), 0);
+        assert_eq!(payload_len(7, 0), 0);
+        assert_eq!(payload_len(1, 1), 1 + GUARD_BYTES);
+        assert_eq!(payload_len(8, 1), 1 + GUARD_BYTES);
+        assert_eq!(payload_len(9, 1), 2 + GUARD_BYTES);
+        assert_eq!(payload_len(3, 56), 21 + GUARD_BYTES);
+    }
+
+    #[test]
+    fn roundtrip_every_width() {
+        let mut rng = Rng::new(0xb17);
+        for width in 0..=MAX_PACKED_WIDTH {
+            let mask = if width == 0 { 0 } else { (1u64 << width) - 1 };
+            for count in [0usize, 1, 2, 7, 8, 9, 63, 64, 65, 200] {
+                let values: Vec<u64> = (0..count)
+                    .map(|i| match i % 4 {
+                        0 => 0,
+                        1 => mask,
+                        2 => rng.next_u64() & mask,
+                        _ => (i as u64) & mask,
+                    })
+                    .collect();
+                let packed = pack(&values, width);
+                assert_eq!(packed.len(), payload_len(count, width));
+                let slice = PackedSlice::new(&packed, count, width).unwrap();
+                for (i, &v) in values.iter().enumerate() {
+                    assert_eq!(slice.get(i), v, "width {width} count {count} idx {i}");
+                }
+                assert_eq!(slice.to_vec(), values);
+            }
+        }
+    }
+
+    #[test]
+    fn guard_bytes_are_zero_and_deterministic() {
+        let values = [5u64, 3, 7, 1];
+        let a = pack(&values, 3);
+        let b = pack(&values, 3);
+        assert_eq!(a, b);
+        assert_eq!(&a[a.len() - GUARD_BYTES..], &[0u8; GUARD_BYTES]);
+    }
+
+    #[test]
+    fn lsb_first_layout_pinned() {
+        // Three 3-bit values 0b001, 0b010, 0b011 → bits 011 010 001 LSB
+        // first → first byte 0b11010001 = 0xd1, second byte 0.
+        let packed = pack(&[1, 2, 3], 3);
+        assert_eq!(packed[0], 0xd1);
+        assert_eq!(packed[1], 0x00);
+    }
+
+    #[test]
+    fn truncated_or_padded_payload_is_typed_error() {
+        let values: Vec<u64> = (0..50).map(|i| i * 3).collect();
+        let packed = pack(&values, 8);
+        for cut in 0..packed.len() {
+            assert!(matches!(
+                PackedSlice::new(&packed[..cut], values.len(), 8),
+                Err(BitpackError::BadLength { .. })
+            ));
+        }
+        let mut padded = packed.clone();
+        padded.push(0);
+        assert!(matches!(
+            PackedSlice::new(&padded, values.len(), 8),
+            Err(BitpackError::BadLength { .. })
+        ));
+        assert!(matches!(
+            PackedSlice::new(&packed, values.len(), 57),
+            Err(BitpackError::BadWidth(57))
+        ));
+    }
+
+    #[test]
+    fn zero_width_column_reads_zero_with_empty_payload() {
+        let slice = PackedSlice::new(&[], 1000, 0).unwrap();
+        assert_eq!(slice.len(), 1000);
+        assert_eq!(slice.get(999), 0);
+    }
+
+    #[test]
+    fn fuzz_roundtrip_random_shapes() {
+        let mut rng = Rng::new(0xfeed);
+        for _ in 0..500 {
+            let width = rng.below(MAX_PACKED_WIDTH as usize + 1) as u8;
+            let count = rng.below(300);
+            let mask = if width == 0 { 0 } else { (1u64 << width) - 1 };
+            let values: Vec<u64> = (0..count).map(|_| rng.next_u64() & mask).collect();
+            let packed = pack(&values, width);
+            let slice = PackedSlice::new(&packed, count, width).unwrap();
+            // Random-access order, not just sequential.
+            for _ in 0..count.min(64) {
+                let i = rng.below(count);
+                assert_eq!(slice.get(i), values[i]);
+            }
+            assert_eq!(slice.to_vec(), values);
+        }
+    }
+}

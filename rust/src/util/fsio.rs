@@ -55,6 +55,148 @@ pub trait Vfs: Send + Sync {
         f.read_to_end(&mut buf)?;
         Ok(buf)
     }
+
+    /// Map a whole file for read-only zero-copy access. The default
+    /// implementation reads the file into an 8-byte-aligned in-memory
+    /// buffer, so *every* Vfs supports mapping — in particular [`MemVfs`],
+    /// which keeps the chaos/fault harness covering the mmap code path.
+    /// [`RealVfs`] overrides this with a true `mmap(2)` on unix.
+    fn mmap(&self, path: &Path) -> io::Result<MapRegion> {
+        Ok(MapRegion::from_bytes(&self.read(path)?))
+    }
+}
+
+/// Whole-file read-only mapping returned by [`Vfs::mmap`]. Derefs to the
+/// file bytes; the base address is guaranteed at least 8-byte aligned
+/// (page-aligned for real mappings), which the v4 snapshot layout relies
+/// on for zero-copy `f64`/`u64` column views at 64-byte file offsets.
+pub struct MapRegion {
+    inner: MapInner,
+}
+
+enum MapInner {
+    Mem(AlignedBuf),
+    #[cfg(unix)]
+    Real(RealMap),
+}
+
+impl MapRegion {
+    /// Build a region from a byte image (default Vfs path and tests).
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        MapRegion {
+            inner: MapInner::Mem(AlignedBuf::from_bytes(bytes)),
+        }
+    }
+
+    /// True when backed by a kernel mapping (pages shared with the page
+    /// cache) rather than a private in-memory copy.
+    pub fn is_kernel_mapping(&self) -> bool {
+        match self.inner {
+            MapInner::Mem(_) => false,
+            #[cfg(unix)]
+            MapInner::Real(_) => true,
+        }
+    }
+}
+
+impl std::ops::Deref for MapRegion {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match &self.inner {
+            MapInner::Mem(buf) => buf.as_bytes(),
+            #[cfg(unix)]
+            MapInner::Real(map) => map.as_bytes(),
+        }
+    }
+}
+
+impl std::fmt::Debug for MapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MapRegion")
+            .field("len", &self.len())
+            .field("kernel", &self.is_kernel_mapping())
+            .finish()
+    }
+}
+
+/// A byte buffer whose base address is 8-byte aligned (it borrows a
+/// `Vec<u64>`'s allocation), emulating the alignment a page-aligned mmap
+/// gives for free.
+struct AlignedBuf {
+    storage: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    fn from_bytes(bytes: &[u8]) -> Self {
+        let mut storage = vec![0u64; bytes.len().div_ceil(8)];
+        for (i, chunk) in bytes.chunks(8).enumerate() {
+            let mut word = [0u8; 8];
+            word[..chunk.len()].copy_from_slice(chunk);
+            storage[i] = u64::from_le_bytes(word);
+        }
+        AlignedBuf {
+            storage,
+            len: bytes.len(),
+        }
+    }
+
+    fn as_bytes(&self) -> &[u8] {
+        // Sound: the Vec<u64> allocation is valid for `len <= 8 * words`
+        // bytes and u64 has no padding or invalid byte patterns.
+        unsafe { std::slice::from_raw_parts(self.storage.as_ptr() as *const u8, self.len) }
+    }
+}
+
+/// Raw kernel mapping (unix). Read-only and private; unmapped on drop.
+#[cfg(unix)]
+struct RealMap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+#[cfg(unix)]
+impl RealMap {
+    fn as_bytes(&self) -> &[u8] {
+        // Sound: `ptr` came from a successful PROT_READ mmap of `len`
+        // bytes and lives until Drop; the mapping is never written.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+// The mapping is immutable shared memory: safe to read from any thread.
+#[cfg(unix)]
+unsafe impl Send for RealMap {}
+#[cfg(unix)]
+unsafe impl Sync for RealMap {}
+
+#[cfg(unix)]
+impl Drop for RealMap {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+/// Minimal direct bindings for `mmap(2)`/`munmap(2)` — the offline vendor
+/// set has no `libc` crate.
+#[cfg(unix)]
+mod sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut std::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut std::ffi::c_void;
+        pub fn munmap(addr: *mut std::ffi::c_void, len: usize) -> i32;
+    }
 }
 
 /// Production passthrough to `std::fs`.
@@ -109,6 +251,39 @@ impl Vfs for RealVfs {
     }
     fn create_dir_all(&self, path: &Path) -> io::Result<()> {
         std::fs::create_dir_all(path)
+    }
+
+    /// True zero-copy mapping: snapshot pages stay in the kernel page
+    /// cache and are shared across processes serving the same file.
+    #[cfg(unix)]
+    fn mmap(&self, path: &Path) -> io::Result<MapRegion> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            return Ok(MapRegion::from_bytes(&[]));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            // MAP_FAILED (e.g. a filesystem without mmap support): degrade
+            // to the aligned-read emulation rather than failing the open.
+            return Ok(MapRegion::from_bytes(&std::fs::read(path)?));
+        }
+        Ok(MapRegion {
+            inner: MapInner::Real(RealMap {
+                ptr: ptr as *mut u8,
+                len,
+            }),
+        })
     }
 }
 
@@ -617,5 +792,59 @@ mod tests {
             let synced = got.len() / 8 * 8;
             assert_eq!(&got[..synced], &full[..synced]);
         }
+    }
+
+    #[test]
+    fn mem_vfs_mmap_matches_read_and_is_aligned() {
+        let vfs = MemVfs::new(21);
+        let p = Path::new("snap.tor");
+        for len in [0usize, 1, 7, 8, 9, 64, 1000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 31) as u8).collect();
+            let mut f = vfs.create(p).unwrap();
+            f.write_all(&data).unwrap();
+            f.sync_all().unwrap();
+            drop(f);
+            let region = vfs.mmap(p).unwrap();
+            assert_eq!(&region[..], &data[..], "len {len}");
+            assert_eq!(region.as_ptr() as usize % 8, 0, "base alignment");
+            assert!(!region.is_kernel_mapping());
+        }
+    }
+
+    #[test]
+    fn mem_vfs_mmap_missing_file_and_faults_propagate() {
+        let vfs = MemVfs::new(22);
+        assert!(vfs.mmap(Path::new("absent")).is_err());
+        let p = Path::new("present");
+        let mut f = vfs.create(p).unwrap();
+        f.write_all(b"data").unwrap();
+        f.sync_all().unwrap();
+        drop(f);
+        // Fault the open op driven by the default mmap impl.
+        vfs.fail_op(vfs.ops() + 1, "mmap read refused");
+        let err = vfs.mmap(p).unwrap_err();
+        assert!(err.to_string().contains("injected fault"));
+        assert_eq!(&vfs.mmap(p).unwrap()[..], b"data");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn real_vfs_mmap_maps_file_contents() {
+        let dir = std::env::temp_dir().join(format!("tor_fsio_mmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("region.bin");
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &data).unwrap();
+        let region = RealVfs.mmap(&path).unwrap();
+        assert_eq!(&region[..], &data[..]);
+        assert!(region.is_kernel_mapping());
+        assert_eq!(region.as_ptr() as usize % 8, 0);
+        // Region stays valid after the file handle is long gone; empty
+        // files map to empty regions instead of erroring.
+        std::fs::write(&path, b"").unwrap();
+        let empty = RealVfs.mmap(&path).unwrap();
+        assert!(empty.is_empty());
+        drop(region);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

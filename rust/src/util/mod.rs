@@ -2,6 +2,7 @@
 //! in-house property-testing harness (offline builds vendor only the `xla`
 //! crate's closure — see DESIGN.md §3).
 
+pub mod bitpack;
 pub mod bitset;
 pub mod crc32;
 pub mod fsio;
@@ -9,3 +10,4 @@ pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod timer;
+pub mod varint;

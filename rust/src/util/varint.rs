@@ -1,0 +1,197 @@
+//! LEB128 variable-length integers — the v4 snapshot preamble codec
+//! (DESIGN.md §17).
+//!
+//! Encoding: 7 value bits per byte, least-significant group first, high
+//! bit set on every byte except the last. `u64::MAX` takes 10 bytes; the
+//! encoder always emits the canonical (shortest) form, so identical
+//! values produce identical bytes — a requirement of the byte-determinism
+//! contract every snapshot writer obeys.
+//!
+//! Decoding is hardened for untrusted input: truncation and non-
+//! terminating sequences return a typed [`VarintError`] (mapped to
+//! `LoadError::Corrupt` by the serializer) and never panic.
+
+/// Why a varint failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VarintError {
+    /// The buffer ended before the terminating byte.
+    Truncated,
+    /// More than 10 bytes, or bits beyond the 64th — not a `u64`.
+    Overflow,
+}
+
+impl std::fmt::Display for VarintError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VarintError::Truncated => write!(f, "varint truncated"),
+            VarintError::Overflow => write!(f, "varint overflows u64"),
+        }
+    }
+}
+
+impl std::error::Error for VarintError {}
+
+/// Number of bytes [`encode_u64`] will append for `v`.
+pub fn encoded_len(v: u64) -> usize {
+    let bits = 64 - v.leading_zeros() as usize;
+    bits.div_ceil(7).max(1)
+}
+
+/// Append the canonical LEB128 encoding of `v` to `out`.
+pub fn encode_u64(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one varint from `buf` starting at `*pos`, advancing `*pos` past
+/// it. Never panics: truncated or overlong input reports a typed error.
+pub fn decode_u64(buf: &[u8], pos: &mut usize) -> Result<u64, VarintError> {
+    let mut value: u64 = 0;
+    let mut shift: u32 = 0;
+    loop {
+        let Some(&byte) = buf.get(*pos) else {
+            return Err(VarintError::Truncated);
+        };
+        *pos += 1;
+        let group = u64::from(byte & 0x7f);
+        if shift == 63 && group > 1 {
+            // 10th byte may only carry the single remaining bit.
+            return Err(VarintError::Overflow);
+        }
+        value |= group << shift;
+        if byte & 0x80 == 0 {
+            return Ok(value);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(VarintError::Overflow);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Boundary values around every 7-bit group edge plus extremes.
+    fn boundary_values() -> Vec<u64> {
+        let mut vals = vec![0u64, 1, 2, u64::MAX, u64::MAX - 1];
+        for k in 1..10u32 {
+            let edge = 1u64 << (7 * k);
+            vals.extend([edge - 1, edge, edge + 1]);
+        }
+        vals.push(1u64 << 63);
+        vals
+    }
+
+    #[test]
+    fn roundtrip_boundary_values() {
+        for v in boundary_values() {
+            let mut buf = Vec::new();
+            encode_u64(&mut buf, v);
+            assert_eq!(buf.len(), encoded_len(v), "length for {v}");
+            assert!(buf.len() <= 10);
+            let mut pos = 0;
+            assert_eq!(decode_u64(&buf, &mut pos), Ok(v));
+            assert_eq!(pos, buf.len(), "decoder must consume exactly {v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_fuzz() {
+        let mut rng = Rng::new(0x7a71);
+        let mut buf = Vec::new();
+        for _ in 0..20_000 {
+            // Mix uniform values with small ones (the common columns).
+            let v = match rng.below(3) {
+                0 => rng.next_u64(),
+                1 => rng.next_u64() & 0xffff,
+                _ => rng.next_u64() >> (rng.below(64) as u32),
+            };
+            buf.clear();
+            encode_u64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(decode_u64(&buf, &mut pos), Ok(v));
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn concatenated_stream_decodes_in_order() {
+        let vals = boundary_values();
+        let mut buf = Vec::new();
+        for &v in &vals {
+            encode_u64(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(decode_u64(&buf, &mut pos), Ok(v));
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn truncation_is_typed_never_panics() {
+        for v in boundary_values() {
+            let mut buf = Vec::new();
+            encode_u64(&mut buf, v);
+            for cut in 0..buf.len() {
+                let mut pos = 0;
+                match decode_u64(&buf[..cut], &mut pos) {
+                    Err(VarintError::Truncated) => {}
+                    // A prefix of a multi-byte encoding can end on a byte
+                    // without the continuation bit only if it is complete.
+                    Ok(_) if cut == buf.len() => {}
+                    other => panic!("cut {cut} of {v}: {other:?}"),
+                }
+            }
+        }
+        // Empty input.
+        let mut pos = 0;
+        assert_eq!(decode_u64(&[], &mut pos), Err(VarintError::Truncated));
+    }
+
+    #[test]
+    fn overlong_and_overflowing_input_rejected() {
+        // 11 continuation bytes: overflow, not a hang.
+        let mut pos = 0;
+        assert_eq!(
+            decode_u64(&[0x80u8; 11], &mut pos),
+            Err(VarintError::Overflow)
+        );
+        // 10th byte carrying more than the last bit of a u64.
+        let mut buf = vec![0xffu8; 9];
+        buf.push(0x02);
+        let mut pos = 0;
+        assert_eq!(decode_u64(&buf, &mut pos), Err(VarintError::Overflow));
+        // u64::MAX itself is fine (10th byte = 0x01).
+        let mut buf = Vec::new();
+        encode_u64(&mut buf, u64::MAX);
+        assert_eq!(buf.len(), 10);
+        assert_eq!(*buf.last().unwrap(), 0x01);
+        let mut pos = 0;
+        assert_eq!(decode_u64(&buf, &mut pos), Ok(u64::MAX));
+    }
+
+    #[test]
+    fn garbage_fuzz_never_panics() {
+        let mut rng = Rng::new(0xbad5eed);
+        for _ in 0..5_000 {
+            let len = rng.below(16);
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let mut pos = 0;
+            // Any outcome is fine; the property is "no panic, pos advances
+            // at most to the end".
+            let _ = decode_u64(&bytes, &mut pos);
+            assert!(pos <= bytes.len());
+        }
+    }
+}

@@ -8,6 +8,9 @@
 //! * the **random RQL query** generator exercised against every backend;
 //! * the **thread-degree matrix** (`TOR_QUERY_THREADS=N` pins the suite to
 //!   one degree — the CI matrix legs run it at 1 and 8);
+//! * the **storage-backend matrix** ([`storage_backends`]): every parity
+//!   property runs over the owned columns *and* the same trie reopened
+//!   zero-copy from its v4 `mmap` image;
 //! * re-exports of the in-house mini-proptest engine
 //!   ([`for_all`]/[`shrink_vec`]/[`Gen`]: seeded xorshift RNG with
 //!   greedy shrink-on-failure — see `util::proptest`).
@@ -24,6 +27,9 @@ pub use trie_of_rules::util::rng::Rng;
 use trie_of_rules::data::transaction::TransactionDb;
 use trie_of_rules::data::vocab::Vocab;
 use trie_of_rules::rules::metrics::Metric;
+use trie_of_rules::trie::serialize;
+use trie_of_rules::trie::TrieOfRules;
+use trie_of_rules::util::fsio::MemVfs;
 
 /// Random transaction rows over a random-sized vocabulary (3–11 items,
 /// 4–59 transactions, 1–6 items each) — the shared shape of every parity
@@ -119,4 +125,37 @@ pub fn test_degrees() -> Vec<usize> {
         }
         Err(_) => vec![1, 2, 4, 8],
     }
+}
+
+/// Round-trip a frozen trie through the v4 snapshot format and reopen it
+/// as the **mmap-served** backend (hermetic: in-memory VFS, no disk). The
+/// parity suites run their assertions once per backend in
+/// [`storage_backends`] — owned vs mapped must agree on rows, order, and
+/// work counters at every thread degree, and on the bytes of a re-save.
+pub fn reopen_mapped(trie: &TrieOfRules, vocab: Option<&Vocab>) -> TrieOfRules {
+    let vfs = MemVfs::new(0x51ab);
+    let path = std::path::Path::new("parity.tor");
+    serialize::save_with(&vfs, trie, vocab, path).expect("v4 save");
+    let (mapped, _) = serialize::open_with(&vfs, path).expect("v4 mmap open");
+    assert_eq!(mapped.backend_name(), "mmap");
+    // Re-saving either backend reproduces the image byte-for-byte: the
+    // owned writer is deterministic and the mapped re-save is a
+    // copy-on-write of the validated image.
+    let resaved = std::path::Path::new("parity-resave.tor");
+    serialize::save_with(&vfs, &mapped, vocab, resaved).expect("mapped re-save");
+    assert_eq!(
+        vfs.read(path).unwrap(),
+        vfs.read(resaved).unwrap(),
+        "mapped re-save not byte-identical"
+    );
+    mapped
+}
+
+/// The storage-backend matrix: the owned trie itself plus the same trie
+/// served zero-copy from its v4 image. Labels feed assertion messages.
+pub fn storage_backends(trie: &TrieOfRules, vocab: Option<&Vocab>) -> Vec<(&'static str, TrieOfRules)> {
+    vec![
+        ("owned", trie.clone()),
+        ("mmap-v4", reopen_mapped(trie, vocab)),
+    ]
 }

@@ -4,7 +4,10 @@
 //! pointer-walk / stack-DFS implementations as the oracle), and the
 //! preorder `subtree_end` ranges must cover each node's descendant set
 //! exactly — the invariant the query planner's range-skip pruning rests
-//! on. Plus: builds are deterministic down to the serialized byte.
+//! on. Plus: builds are deterministic down to the serialized byte, and the
+//! parity properties sweep the storage-backend matrix — the frozen trie
+//! answers identically whether its columns are owned or served zero-copy
+//! from a v4 `mmap` image (`common::storage_backends`).
 
 mod common;
 
@@ -62,13 +65,17 @@ fn prop_find_rule_builder_vs_frozen() {
                     probes.push(Rule::from_ids(a.to_vec(), c.to_vec()));
                 }
             }
+            let backends = common::storage_backends(&w.trie, Some(w.db.vocab()));
             for rule in &probes {
-                let frozen = w.trie.find_rule(rule);
                 let oracle = b.find_rule(rule);
-                if frozen != oracle {
-                    return Err(format!(
-                        "find_rule diverged on {rule}: frozen {frozen:?} vs builder {oracle:?}"
-                    ));
+                for (label, trie) in &backends {
+                    let frozen = trie.find_rule(rule);
+                    if frozen != oracle {
+                        return Err(format!(
+                            "find_rule[{label}] diverged on {rule}: frozen {frozen:?} vs \
+                             builder {oracle:?}"
+                        ));
+                    }
                 }
             }
             Ok(())
@@ -98,29 +105,32 @@ fn prop_pruned_traversal_builder_vs_frozen() {
                     c.sort_unstable();
                     rows.push((a, c, sup.to_bits(), conf.to_bits()));
                 };
-                let mut frozen_rows: Emitted = Vec::new();
-                let frozen_visited = w.trie.for_each_rule_pruned(
-                    |sup| sup < bound,
-                    |a, c, m| collect(&mut frozen_rows, a, c, m.support, m.confidence),
-                );
                 let mut oracle_rows: Emitted = Vec::new();
                 let oracle_visited = b.for_each_rule_pruned(
                     |sup| sup < bound,
                     |a, c, m| collect(&mut oracle_rows, a, c, m.support, m.confidence),
                 );
-                if frozen_visited != oracle_visited {
-                    return Err(format!(
-                        "visited diverged at bound {bound}: {frozen_visited} vs {oracle_visited}"
-                    ));
-                }
-                frozen_rows.sort();
                 oracle_rows.sort();
-                if frozen_rows != oracle_rows {
-                    return Err(format!(
-                        "emitted rules diverged at bound {bound}: {} vs {} rows",
-                        frozen_rows.len(),
-                        oracle_rows.len()
-                    ));
+                for (label, trie) in common::storage_backends(&w.trie, Some(w.db.vocab())) {
+                    let mut frozen_rows: Emitted = Vec::new();
+                    let frozen_visited = trie.for_each_rule_pruned(
+                        |sup| sup < bound,
+                        |a, c, m| collect(&mut frozen_rows, a, c, m.support, m.confidence),
+                    );
+                    if frozen_visited != oracle_visited {
+                        return Err(format!(
+                            "visited[{label}] diverged at bound {bound}: {frozen_visited} vs \
+                             {oracle_visited}"
+                        ));
+                    }
+                    frozen_rows.sort();
+                    if frozen_rows != oracle_rows {
+                        return Err(format!(
+                            "emitted rules[{label}] diverged at bound {bound}: {} vs {} rows",
+                            frozen_rows.len(),
+                            oracle_rows.len()
+                        ));
+                    }
                 }
             }
             Ok(())

@@ -8,8 +8,11 @@
 //!   acceptance matrix {1, 2, 4, 8};
 //! * `FIND` outcomes and `SUPPORT` counts are spot-checked the same way;
 //! * at every compaction boundary the new frozen snapshot must serialize
-//!   to **byte-identical** v2 bytes as a batch `from_sorted_paths` build
-//!   on the cumulative database.
+//!   to **byte-identical** v4 bytes as a batch `from_sorted_paths` build
+//!   on the cumulative database;
+//! * the batch oracle is additionally reopened zero-copy from its v4
+//!   `mmap` image and swept by the same query stream — the storage-backend
+//!   matrix {owned, mmap-v4} must agree exactly.
 //!
 //! This is the executable statement of the ISSUE acceptance property:
 //! the incremental layer is an *optimization* of the batch pipeline, not
@@ -17,7 +20,10 @@
 
 mod common;
 
-use common::{for_all, random_rql, random_tx_sized, shrink_vec, test_degrees, to_db_sized, Gen, Rng};
+use common::{
+    for_all, random_rql, random_tx_sized, reopen_mapped, shrink_vec, test_degrees, to_db_sized,
+    Gen, Rng,
+};
 use trie_of_rules::data::transaction::TransactionDb;
 use trie_of_rules::data::vocab::ItemId;
 use trie_of_rules::mining::counts::{min_count, ItemOrder};
@@ -162,8 +168,12 @@ fn check_stream(case: &StreamCase, execs: &[ParallelExecutor]) -> Result<(), Str
             }
         }
 
-        // Query parity after every operation, at every degree.
+        // Query parity after every operation, at every degree. The batch
+        // oracle also runs over its own v4 mmap reopen, so the storage-
+        // backend matrix {owned, mmap-v4} is swept by the same random
+        // query stream (and the reopen asserts byte-identical re-saves).
         let (odb, otrie) = batch_build(&cumulative, case.num_items, minsup);
+        let mapped_otrie = reopen_mapped(&otrie, Some(&vocab));
         let view = store.view();
         if view.num_transactions() != odb.num_transactions() {
             return Err(format!(
@@ -181,6 +191,19 @@ fn check_stream(case: &StreamCase, execs: &[ParallelExecutor]) -> Result<(), Str
                 Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN `{q}`")),
                 Err(e) => return Err(format!("step {step}: batch failed on `{q}`: {e:#}")),
             };
+            match execute_trie(&mapped_otrie, &vocab, &query) {
+                Ok(QueryOutput::Rows(rs)) => {
+                    if rs.rows != want.rows || rs.stats != want.stats {
+                        return Err(format!(
+                            "step {step}: `{q}` diverged between owned and mmap-v4 backends"
+                        ));
+                    }
+                }
+                Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN `{q}`")),
+                Err(e) => {
+                    return Err(format!("step {step}: mmap backend failed on `{q}`: {e:#}"))
+                }
+            }
             for exec in execs {
                 let got = match exec.execute_view(&view, &vocab, &query) {
                     Ok(QueryOutput::Rows(rs)) => rs,

@@ -10,6 +10,12 @@
 //! access, subtree pruning, top-k pushdown) and the parallel layer's
 //! morsels/shards/batched predicates *optimizations* rather than
 //! semantics changes.
+//!
+//! Every parity check additionally sweeps the **storage-backend matrix**
+//! (`common::storage_backends`): the owned columns and the same trie
+//! reopened zero-copy from its v4 `mmap` image must agree cell-for-cell
+//! with the reference at every thread degree, and the mapped image
+//! re-saves byte-identically.
 
 mod common;
 
@@ -19,31 +25,34 @@ use trie_of_rules::data::transaction::paper_example_db;
 use trie_of_rules::query::parallel::ParallelExecutor;
 use trie_of_rules::query::{query_frame, query_trie, QueryOutput};
 
-/// Run one query on both backends and compare exactly.
+/// Run one query on the frame backend and on the trie executor over each
+/// storage backend ({owned, mmap-v4}), comparing all of them exactly.
 fn check_parity(w: &Workload, q: &str) -> Result<(), String> {
-    let t = match query_trie(&w.trie, w.db.vocab(), q) {
-        Ok(QueryOutput::Rows(rs)) => rs,
-        Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
-        Err(e) => return Err(format!("trie failed on `{q}`: {e:#}")),
-    };
     let f = match query_frame(&w.frame, w.db.vocab(), q) {
         Ok(QueryOutput::Rows(rs)) => rs,
         Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
         Err(e) => return Err(format!("frame failed on `{q}`: {e:#}")),
     };
-    if t.rows.len() != f.rows.len() {
-        return Err(format!(
-            "`{q}`: trie {} rows vs frame {} rows",
-            t.rows.len(),
-            f.rows.len()
-        ));
-    }
-    for (i, (a, b)) in t.rows.iter().zip(&f.rows).enumerate() {
-        if a != b {
+    for (label, trie) in common::storage_backends(&w.trie, Some(w.db.vocab())) {
+        let t = match query_trie(&trie, w.db.vocab(), q) {
+            Ok(QueryOutput::Rows(rs)) => rs,
+            Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
+            Err(e) => return Err(format!("trie[{label}] failed on `{q}`: {e:#}")),
+        };
+        if t.rows.len() != f.rows.len() {
             return Err(format!(
-                "`{q}`: row {i} differs\n  trie : {} {:?}\n  frame: {} {:?}",
-                a.rule, a.metrics, b.rule, b.metrics
+                "`{q}`: trie[{label}] {} rows vs frame {} rows",
+                t.rows.len(),
+                f.rows.len()
             ));
+        }
+        for (i, (a, b)) in t.rows.iter().zip(&f.rows).enumerate() {
+            if a != b {
+                return Err(format!(
+                    "`{q}`: row {i} differs\n  trie[{label}]: {} {:?}\n  frame: {} {:?}",
+                    a.rule, a.metrics, b.rule, b.metrics
+                ));
+            }
         }
     }
     Ok(())
@@ -80,8 +89,9 @@ fn prop_trie_and_frame_backends_agree_exactly() {
     );
 }
 
-/// Run one query on the sequential executor and on each parallel executor,
-/// demanding exact equality of rows, order, and work counters.
+/// Run one query on the sequential executor (owned backend) and on each
+/// parallel executor over each storage backend, demanding exact equality
+/// of rows, order, and work counters for every (backend, degree) cell.
 fn check_parallel_parity(
     w: &Workload,
     execs: &[ParallelExecutor],
@@ -92,32 +102,37 @@ fn check_parallel_parity(
         Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
         Err(e) => return Err(format!("sequential failed on `{q}`: {e:#}")),
     };
-    for exec in execs {
-        let par = match exec.query(&w.trie, w.db.vocab(), q) {
-            Ok(QueryOutput::Rows(rs)) => rs,
-            Ok(QueryOutput::Explain(_)) => return Err(format!("unexpected EXPLAIN for `{q}`")),
-            Err(e) => {
+    for (label, trie) in common::storage_backends(&w.trie, Some(w.db.vocab())) {
+        for exec in execs {
+            let par = match exec.query(&trie, w.db.vocab(), q) {
+                Ok(QueryOutput::Rows(rs)) => rs,
+                Ok(QueryOutput::Explain(_)) => {
+                    return Err(format!("unexpected EXPLAIN for `{q}`"))
+                }
+                Err(e) => {
+                    return Err(format!(
+                        "parallel [{label}] (t={}) failed on `{q}`: {e:#}",
+                        exec.degree()
+                    ))
+                }
+            };
+            if par.rows != seq.rows {
                 return Err(format!(
-                    "parallel (t={}) failed on `{q}`: {e:#}",
-                    exec.degree()
-                ))
+                    "`{q}` [{label}] (t={}): parallel returned {} rows vs sequential {} \
+                     (or rows/order differ)",
+                    exec.degree(),
+                    par.rows.len(),
+                    seq.rows.len()
+                ));
             }
-        };
-        if par.rows != seq.rows {
-            return Err(format!(
-                "`{q}` (t={}): parallel returned {} rows vs sequential {} (or rows/order differ)",
-                exec.degree(),
-                par.rows.len(),
-                seq.rows.len()
-            ));
-        }
-        if par.stats != seq.stats {
-            return Err(format!(
-                "`{q}` (t={}): stats diverged — parallel {:?} vs sequential {:?}",
-                exec.degree(),
-                par.stats,
-                seq.stats
-            ));
+            if par.stats != seq.stats {
+                return Err(format!(
+                    "`{q}` [{label}] (t={}): stats diverged — parallel {:?} vs sequential {:?}",
+                    exec.degree(),
+                    par.stats,
+                    seq.stats
+                ));
+            }
         }
     }
     Ok(())

@@ -1,17 +1,22 @@
 //! Golden-file serialization tests: the committed byte fixtures under
 //! `rust/tests/fixtures/` pin the on-disk formats (v1 node records, v2
-//! columns, v3 = columns + CRC32 seal) to exact bytes, generated
+//! columns, v3 = columns + CRC32 seal, v4 = succinct bit-packed sections
+//! behind a CRC'd table of contents) to exact bytes, generated
 //! independently by `python/tests/gen_golden_fixtures.py`. Any drift —
 //! magic, endianness, column order, preorder numbering, CSR layout,
-//! threshold encoding, checksum polynomial — fails loudly here instead
-//! of silently orphaning previously saved tries. Cross-version coverage:
-//! both legacy fixtures load and re-save as the byte-identical v3 (and
-//! back to v1 via `save_v1`).
+//! varint/bit-pack codecs, section ids, alignment, threshold encoding,
+//! checksum polynomial — fails loudly here instead of silently orphaning
+//! previously saved tries. Cross-version coverage: every legacy fixture
+//! (v1→v3) loads and re-saves as the byte-identical v4 (and back to v1
+//! via `save_v1`).
 //!
 //! Loader-hardening coverage (DESIGN.md §16): every proper prefix of
 //! every golden must be rejected with a typed `Corrupt` error, and every
 //! single-bit flip must either be rejected (guaranteed for v3 past the
-//! version field by the CRC seal) or at minimum never panic.
+//! version field by the CRC seal; guaranteed for every load-bearing v4
+//! byte by the per-section CRCs) or at minimum never panic — for v4, a
+//! flip that *is* accepted can only live in alignment padding and must
+//! load a trie identical to the pristine fixture.
 
 mod common;
 
@@ -24,6 +29,7 @@ use trie_of_rules::trie::trie::TrieOfRules;
 const GOLDEN_V1: &[u8] = include_bytes!("fixtures/tiny_v1.tor");
 const GOLDEN_V2: &[u8] = include_bytes!("fixtures/tiny_v2.tor");
 const GOLDEN_V3: &[u8] = include_bytes!("fixtures/tiny_v3.tor");
+const GOLDEN_V4: &[u8] = include_bytes!("fixtures/tiny_v4.tor");
 
 /// The fixture database (must match gen_golden_fixtures.py exactly).
 fn fixture_trie() -> TrieOfRules {
@@ -48,15 +54,28 @@ fn tmpfile(tag: &str) -> std::path::PathBuf {
 }
 
 #[test]
-fn pipeline_build_serializes_to_the_golden_v3_bytes() {
+fn pipeline_build_serializes_to_the_golden_v4_bytes() {
     let trie = fixture_trie();
     // The fixture pins the exact shape: 9 frequent itemsets + root.
     assert_eq!(trie.num_nodes(), 9, "fixture mining drifted");
     let mut got = Vec::new();
     serialize::save_to(&trie, None, &mut got).unwrap();
     assert_eq!(
+        got, GOLDEN_V4,
+        "v4 serialization drifted from the committed golden bytes"
+    );
+    // The v4 image is built from 64-byte-aligned sections end to end.
+    assert_eq!(got.len() % 64, 0, "v4 file length not 64-byte aligned");
+}
+
+#[test]
+fn legacy_writer_reproduces_the_golden_v3_bytes() {
+    let trie = fixture_trie();
+    let mut got = Vec::new();
+    serialize::save_v3_to(&trie, None, &mut got).unwrap();
+    assert_eq!(
         got, GOLDEN_V3,
-        "v3 serialization drifted from the committed golden bytes"
+        "legacy v3 writer drifted from the committed golden bytes"
     );
 }
 
@@ -89,30 +108,31 @@ fn legacy_writer_reproduces_the_golden_v2_bytes() {
 }
 
 #[test]
-fn golden_v3_loads_and_resaves_byte_identically() {
-    let path = tmpfile("v3_golden");
-    std::fs::write(&path, GOLDEN_V3).unwrap();
+fn golden_v4_loads_and_resaves_byte_identically() {
+    let path = tmpfile("v4_golden");
+    std::fs::write(&path, GOLDEN_V4).unwrap();
     let (trie, vocab) = serialize::load(&path).unwrap();
     assert!(vocab.is_none(), "fixture stores no vocabulary");
     let mut resaved = Vec::new();
     serialize::save_to(&trie, None, &mut resaved).unwrap();
-    assert_eq!(resaved, GOLDEN_V3, "v3 load→save round trip not identity");
+    assert_eq!(resaved, GOLDEN_V4, "v4 load→save round trip not identity");
     std::fs::remove_file(&path).ok();
 }
 
 #[test]
-fn legacy_goldens_upgrade_to_the_golden_v3_bytes() {
-    // Cross-version: the legacy node-record file rebuilds through the
-    // builder + freeze, and the canonical preorder renumbering makes its
-    // re-save land on exactly the golden v3 bytes. The v2 fixture loads
-    // straight into the frozen columns and re-seals identically.
-    for (tag, legacy) in [("v1", GOLDEN_V1), ("v2", GOLDEN_V2)] {
+fn legacy_goldens_upgrade_to_the_golden_v4_bytes() {
+    // Cross-version: every historical format loads (the v1 node-record
+    // file rebuilds through the builder + freeze; v2/v3 load straight
+    // into the frozen columns), and the canonical preorder renumbering
+    // plus deterministic section encoding land every re-save on exactly
+    // the golden v4 bytes.
+    for (tag, legacy) in [("v1", GOLDEN_V1), ("v2", GOLDEN_V2), ("v3", GOLDEN_V3)] {
         let path = tmpfile(&format!("{tag}_golden"));
         std::fs::write(&path, legacy).unwrap();
         let (loaded, _) = serialize::load(&path).unwrap();
         let mut upgraded = Vec::new();
         serialize::save_to(&loaded, None, &mut upgraded).unwrap();
-        assert_eq!(upgraded, GOLDEN_V3, "{tag} → v3 upgrade not byte-identical");
+        assert_eq!(upgraded, GOLDEN_V4, "{tag} → v4 upgrade not byte-identical");
         // And downgrading the loaded trie reproduces the golden v1 bytes.
         let down = tmpfile(&format!("{tag}_down"));
         serialize::save_v1(&loaded, None, &down).unwrap();
@@ -122,23 +142,60 @@ fn legacy_goldens_upgrade_to_the_golden_v3_bytes() {
     }
 }
 
+/// Column-for-column equality between a loaded trie and the fresh build.
+fn assert_same_columns(loaded: &TrieOfRules, fresh: &TrieOfRules, tag: &str) {
+    assert_eq!(loaded.items_column(), fresh.items_column(), "{tag}: items");
+    assert_eq!(loaded.counts_column(), fresh.counts_column(), "{tag}: counts");
+    assert_eq!(loaded.parents_column(), fresh.parents_column(), "{tag}: parents");
+    assert_eq!(loaded.depths_column(), fresh.depths_column(), "{tag}: depths");
+    assert_eq!(
+        loaded.subtree_end_column(),
+        fresh.subtree_end_column(),
+        "{tag}: subtree_end"
+    );
+    assert_eq!(loaded.child_csr(), fresh.child_csr(), "{tag}: child CSR");
+    assert_eq!(loaded.header_csr(), fresh.header_csr(), "{tag}: header CSR");
+}
+
 #[test]
 fn golden_files_answer_queries_identically_to_the_fresh_build() {
-    let path = tmpfile("v3_answers");
-    std::fs::write(&path, GOLDEN_V3).unwrap();
-    let (loaded, _) = serialize::load(&path).unwrap();
     let fresh = fixture_trie();
-    assert_eq!(loaded.items_column(), fresh.items_column());
-    assert_eq!(loaded.counts_column(), fresh.counts_column());
-    assert_eq!(loaded.parents_column(), fresh.parents_column());
-    assert_eq!(loaded.depths_column(), fresh.depths_column());
-    assert_eq!(loaded.subtree_end_column(), fresh.subtree_end_column());
-    assert_eq!(loaded.child_csr(), fresh.child_csr());
-    assert_eq!(loaded.header_csr(), fresh.header_csr());
-    // Support lookups behave (count of {2,0} = 3 in the fixture rows).
-    assert_eq!(loaded.support_of(&[0, 2]), Some(3));
-    assert_eq!(loaded.support_of(&[0, 3]), None);
-    std::fs::remove_file(&path).ok();
+    for (tag, golden) in [("v3", GOLDEN_V3), ("v4", GOLDEN_V4)] {
+        let path = tmpfile(&format!("{tag}_answers"));
+        std::fs::write(&path, golden).unwrap();
+        let (loaded, _) = serialize::load(&path).unwrap();
+        assert_same_columns(&loaded, &fresh, tag);
+        // Support lookups behave (count of {2,0} = 3 in the fixture rows).
+        assert_eq!(loaded.support_of(&[0, 2]), Some(3));
+        assert_eq!(loaded.support_of(&[0, 3]), None);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// The golden v4 bytes serve zero-copy: `serialize::open` maps the file
+/// and the mmap-backed trie answers cell-for-cell like the fresh owned
+/// build, then re-saves the exact golden bytes back (copy-on-write path).
+#[test]
+fn golden_v4_mmap_opens_with_owned_parity() {
+    use trie_of_rules::util::fsio::{atomic_write_with, MemVfs, Vfs};
+    let vfs = MemVfs::new(0x901d);
+    let path = std::path::Path::new("golden.tor");
+    atomic_write_with(&vfs, path, |w| std::io::Write::write_all(w, GOLDEN_V4)).unwrap();
+    let (mapped, vocab) = serialize::open_with(&vfs, path).unwrap();
+    assert!(vocab.is_none(), "fixture stores no vocabulary");
+    assert_eq!(mapped.backend_name(), "mmap");
+    assert_eq!(mapped.mapped_bytes(), GOLDEN_V4.len());
+    let fresh = fixture_trie();
+    assert_same_columns(&mapped, &fresh, "mmap-v4");
+    assert_eq!(mapped.support_of(&[0, 2]), Some(3));
+    assert_eq!(mapped.support_of(&[0, 3]), None);
+    let resaved = std::path::Path::new("resave.tor");
+    serialize::save_with(&vfs, &mapped, None, resaved).unwrap();
+    assert_eq!(
+        vfs.read(resaved).unwrap(),
+        GOLDEN_V4,
+        "mmap-backed re-save must emit the mapped image verbatim"
+    );
 }
 
 #[test]
@@ -146,7 +203,12 @@ fn truncation_at_every_offset_is_rejected_never_panics() {
     // Every proper prefix of every golden must come back as a typed
     // `Corrupt` — never a panic, never a silently short trie. This walks
     // each format through every possible torn-write length.
-    for (tag, golden) in [("v1", GOLDEN_V1), ("v2", GOLDEN_V2), ("v3", GOLDEN_V3)] {
+    for (tag, golden) in [
+        ("v1", GOLDEN_V1),
+        ("v2", GOLDEN_V2),
+        ("v3", GOLDEN_V3),
+        ("v4", GOLDEN_V4),
+    ] {
         for cut in 0..golden.len() {
             match serialize::try_load_from(&mut &golden[..cut]) {
                 Err(LoadError::Corrupt(_)) => {}
@@ -187,4 +249,34 @@ fn bit_flip_fuzz_rejects_sealed_corruption_and_never_panics() {
             }
         }
     }
+}
+
+#[test]
+fn v4_bit_flip_fuzz_rejects_or_loads_identically() {
+    // v4 checksums every load-bearing byte (preamble CRC, TOC CRC,
+    // per-section payload CRCs) but not the zero alignment padding — a
+    // flip there is invisible to the decoded trie by construction. So the
+    // contract is: every single-bit flip is either rejected with a typed
+    // error, or the file loads a trie identical to the pristine golden.
+    // Most bytes must hard-reject, or the checksums aren't wired up.
+    let fresh = fixture_trie();
+    let mut buf = GOLDEN_V4.to_vec();
+    let mut detected = 0usize;
+    for byte in 0..buf.len() {
+        let bit = byte % 8;
+        buf[byte] ^= 1 << bit;
+        match serialize::try_load_from(&mut &buf[..]) {
+            Err(_) => detected += 1,
+            Ok((trie, vocab)) => {
+                assert!(vocab.is_none(), "flip at {byte}.{bit} conjured a vocab");
+                assert_same_columns(&trie, &fresh, &format!("flip at {byte}.{bit}"));
+            }
+        }
+        buf[byte] ^= 1 << bit;
+    }
+    assert!(
+        detected * 2 > buf.len(),
+        "only {detected}/{} flips detected — v4 checksums not engaged",
+        buf.len()
+    );
 }
