@@ -1,0 +1,309 @@
+#!/usr/bin/env python3
+"""Differential oracle for scatter-gather sharded serving (PR 10).
+
+The container used to author the Rust has no cargo, so this script
+re-implements the pure logic of the sharding plane and checks it
+differentially:
+
+  * `ShardRouter` (rust/src/coordinator/sharding.rs): a line-for-line
+    port of the fixed two-pass `rebalance`, driven over randomized
+    worker-count walks (grow/shrink/identity). After every rebalance:
+    every slot routes into range, the load is exactly ±1-uniform
+    (`floor(slots/workers)` or one more, with precisely `slots %
+    workers` workers holding the extra), routing is stable, and the
+    number of moved slots EQUALS the information-theoretic optimum —
+    `slots - max_retention`, where max_retention gives the `base+1`
+    quotas to the heaviest current holders. The old single-pass version
+    violated both the uniformity and the minimality claims on grows.
+
+  * partition/merge algebra (rust/src/coordinator/scatter.rs +
+    query/exec.rs `Accumulator`): rows carry raw f64 *bit patterns*
+    (NaN payloads, ±inf, -0.0, deliberate bit-identical ties) and
+    unique rule ids. The population is split into n disjoint
+    partitions; each "shard" reduces its partition through a ported
+    Accumulator (total order = sort key under f64 total_cmp asc/desc,
+    then rule; k-bounded under LIMIT), the "coordinator" re-pushes the
+    partial rows through a merge Accumulator — and the merged output
+    must equal the single-node reduction bit for bit, for every
+    (sort, direction, limit, n, partition split). Dropping a partition
+    (a dead shard) must yield exactly the reduction of the surviving
+    partitions — and, unlimited, an in-order subsequence of the full
+    output.
+
+  * `PARTIAL` row codec (scatter.rs `encode/decode_partial_row`): ids +
+    ten metric values as f64-bit hex + the pre-rendered display line
+    must round-trip bit-exactly (NaN payloads included), and malformed
+    rows (missing tab, truncated metrics, bad hex, oversized vectors)
+    must be rejected, never mis-parsed.
+
+Run:  python3 python/tests/oracle_scatter.py  [cases]
+"""
+
+import random
+import sys
+
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------
+# ShardRouter mirror (coordinator/sharding.rs, ported line for line)
+# ---------------------------------------------------------------------
+
+
+class ShardRouter:
+    def __init__(self, workers, slots):
+        assert workers > 0 and slots >= workers
+        self.assignment = [s % workers for s in range(slots)]
+        self.workers = workers
+
+    def route(self, tid):
+        slot = ((tid * 0x9E3779B97F4A7C15 & MASK64) >> 32) % len(self.assignment)
+        return self.assignment[slot]
+
+    def rebalance(self, new_workers):
+        assert new_workers > 0 and len(self.assignment) >= new_workers
+        slots = len(self.assignment)
+        base, extra = slots // new_workers, slots % new_workers
+        counts = [0] * new_workers
+        for a in self.assignment:
+            if a < new_workers:
+                counts[a] += 1
+        order = sorted(range(new_workers), key=lambda w: (-counts[w], w))
+        quota = [base] * new_workers
+        for w in order[:extra]:
+            quota[w] += 1
+        kept = [0] * new_workers
+        keep = []
+        for a in self.assignment:
+            if a < new_workers and kept[a] < quota[a]:
+                kept[a] += 1
+                keep.append(True)
+            else:
+                keep.append(False)
+        fill = 0
+        for i, retained in enumerate(keep):
+            if retained:
+                continue
+            while kept[fill] >= quota[fill]:
+                fill += 1
+            self.assignment[i] = fill
+            kept[fill] += 1
+        self.workers = new_workers
+
+
+def check_router(cases, rng):
+    for case in range(cases):
+        slots = rng.randrange(8, 256)
+        workers = rng.randrange(1, min(8, slots) + 1)
+        r = ShardRouter(workers, slots)
+        for _ in range(8):
+            new_workers = rng.randrange(1, min(12, slots) + 1)
+            before = list(r.assignment)
+            r.rebalance(new_workers)
+            ctx = f"case {case}: slots={slots} {len(set(before))}->{new_workers}"
+
+            counts = [0] * new_workers
+            for a in r.assignment:
+                assert 0 <= a < new_workers, f"{ctx}: slot routed to {a}"
+                counts[a] += 1
+            base, extra = slots // new_workers, slots % new_workers
+            assert sorted(counts) == [base] * (new_workers - extra) + [base + 1] * extra, (
+                f"{ctx}: not ±1-uniform: {counts}"
+            )
+
+            # Exact minimal movement: retention is maximized by granting
+            # the base+1 quotas to the heaviest current holders.
+            before_counts = [0] * new_workers
+            for b in before:
+                if b < new_workers:
+                    before_counts[b] += 1
+            eligible = sum(1 for c in before_counts if c >= base + 1)
+            best_retention = sum(min(c, base) for c in before_counts) + min(extra, eligible)
+            moved = sum(1 for b, a in zip(before, r.assignment) if b != a)
+            assert moved == slots - best_retention, (
+                f"{ctx}: moved {moved}, optimal {slots - best_retention}"
+            )
+
+            # Routing is a pure function of the assignment table.
+            for tid in range(64):
+                assert r.route(tid) == r.route(tid)
+
+
+# ---------------------------------------------------------------------
+# Accumulator mirror (query/exec.rs) over raw f64 bit patterns
+# ---------------------------------------------------------------------
+
+
+def total_cmp_key(bits):
+    """f64::total_cmp as an integer sort key over the raw bits."""
+    if bits >> 63:
+        return ~bits & MASK64
+    return bits | (1 << 63)
+
+
+def reduce_rows(rows, sort, limit):
+    """rows: [(rule, [10 metric bits])] -> output order under
+    (total_cmp(sort metric) asc/desc, then rule), truncated to limit."""
+    if sort is None:
+        ordered = sorted(rows, key=lambda r: r[0])
+    else:
+        metric, descending = sort
+        sign = -1 if descending else 1
+        ordered = sorted(
+            rows, key=lambda r: (sign * total_cmp_key(r[1][metric]), r[0])
+        )
+    if limit is not None:
+        ordered = ordered[:limit]
+    return ordered
+
+
+# Metric bit patterns the generator draws from: ordinary values plus the
+# total_cmp stress set — NaN with distinct payloads, ±inf, both zeros.
+SPECIAL_BITS = [
+    0x7FF8000000000000,  # canonical NaN
+    0x7FF8000000000001,  # NaN, different payload
+    0xFFF8000000000000,  # negative NaN
+    0x7FF0000000000000,  # +inf
+    0xFFF0000000000000,  # -inf
+    0x0000000000000000,  # +0.0
+    0x8000000000000000,  # -0.0
+]
+
+
+def random_bits(rng):
+    if rng.random() < 0.25:
+        return rng.choice(SPECIAL_BITS)
+    if rng.random() < 0.3:
+        return rng.choice([0x3FE0000000000000, 0x3FF0000000000000])  # tie fodder
+    return rng.getrandbits(64)
+
+
+def check_partition_merge(cases, rng):
+    for case in range(cases):
+        n_rows = rng.randrange(0, 60)
+        rows = []
+        used = set()
+        while len(rows) < n_rows:
+            rule = (
+                tuple(sorted(rng.sample(range(12), rng.randrange(1, 4)))),
+                tuple(sorted(rng.sample(range(12), rng.randrange(1, 3)))),
+            )
+            if rule in used:
+                continue
+            used.add(rule)
+            rows.append((rule, [random_bits(rng) for _ in range(10)]))
+        sort = None if rng.random() < 0.2 else (rng.randrange(10), rng.random() < 0.5)
+        limit = None if rng.random() < 0.4 else rng.randrange(0, n_rows + 3)
+        want = reduce_rows(rows, sort, limit)
+
+        for n_shards in (1, 2, 4):
+            # Disjoint cover: random split points (the real partitions are
+            # subtree-aligned, but the merge algebra only needs disjointness).
+            cuts = sorted(rng.randrange(0, n_rows + 1) for _ in range(n_shards - 1))
+            bounds = [0] + cuts + [n_rows]
+            parts = [rows[bounds[i] : bounds[i + 1]] for i in range(n_shards)]
+            partials = [reduce_rows(p, sort, limit) for p in parts]
+            merged = reduce_rows([r for p in partials for r in p], sort, limit)
+            assert merged == want, (
+                f"case {case}: merge != single node (shards={n_shards}, "
+                f"sort={sort}, limit={limit})"
+            )
+
+            # Dead shard: the merge of the survivors is the reduction of
+            # their rows — and without a limit, an in-order subsequence of
+            # the full output.
+            if n_shards > 1:
+                dead = rng.randrange(n_shards)
+                survivors = [r for k, p in enumerate(partials) if k != dead for r in p]
+                degraded = reduce_rows(survivors, sort, limit)
+                expect = reduce_rows(
+                    [r for k, p in enumerate(parts) if k != dead for r in p],
+                    sort,
+                    limit,
+                )
+                assert degraded == expect, f"case {case}: degraded merge wrong"
+                if limit is None:
+                    it = iter(want)
+                    assert all(row in it for row in degraded), (
+                        f"case {case}: degraded rows not an in-order subsequence"
+                    )
+
+
+# ---------------------------------------------------------------------
+# PARTIAL row codec mirror (coordinator/scatter.rs)
+# ---------------------------------------------------------------------
+
+
+def encode_row(ant, con, bits, rendered):
+    return "R {}|{} {}\t{}".format(
+        ",".join(str(i) for i in ant),
+        ",".join(str(i) for i in con),
+        ",".join(f"{b:016x}" for b in bits),
+        rendered,
+    )
+
+
+def decode_row(line):
+    head, sep, rendered = line.partition("\t")
+    if not sep:
+        raise ValueError("no tab")
+    if not head.startswith("R "):
+        raise ValueError("no R prefix")
+    sides, _, metrics = head[2:].rpartition(" ")
+    ant_s, sep, con_s = sides.partition("|")
+    if not sep:
+        raise ValueError("no side separator")
+    ant = [int(t) for t in ant_s.split(",") if t != ""]
+    con = [int(t) for t in con_s.split(",") if t != ""]
+    bits = []
+    for t in metrics.split(","):
+        if len(t) != 16:
+            raise ValueError(f"bad bits token {t!r}")
+        bits.append(int(t, 16))
+    if len(bits) != 10:
+        raise ValueError(f"{len(bits)} metrics")
+    return ant, con, bits, rendered
+
+
+def check_row_codec(cases, rng):
+    for case in range(cases):
+        ant = sorted(rng.sample(range(1000), rng.randrange(1, 5)))
+        con = sorted(rng.sample(range(1000), rng.randrange(1, 4)))
+        bits = [random_bits(rng) for _ in range(10)]
+        rendered = "{} => {}  support=0.42 | pipes\tno, just spaces".replace("\t", " ")
+        line = encode_row(ant, con, bits, rendered)
+        got = decode_row(line)
+        assert got == (ant, con, bits, rendered), f"case {case}: round trip broke"
+
+    for bad in [
+        "R 1|2 " + ",".join(["0" * 16] * 10),  # no tab
+        "X 1|2 " + ",".join(["0" * 16] * 10) + "\tr",  # wrong prefix
+        "R 1,2 " + ",".join(["0" * 16] * 10) + "\tr",  # no side separator
+        "R 1|2 " + ",".join(["0" * 16] * 9) + "\tr",  # nine metrics
+        "R 1|2 " + ",".join(["0" * 16] * 11) + "\tr",  # eleven metrics
+        "R 1|2 " + ",".join(["0" * 15] * 10) + "\tr",  # short hex token
+        "R 1|2 " + ",".join(["zz" + "0" * 14] * 10) + "\tr",  # bad hex
+    ]:
+        try:
+            decode_row(bad)
+        except ValueError:
+            continue
+        raise AssertionError(f"malformed row accepted: {bad!r}")
+
+
+# ---------------------------------------------------------------------
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 400
+    rng = random.Random(0x5CA77E21)
+    check_router(cases, rng)
+    print(f"router: {cases} randomized rebalance walks OK (±1-uniform, minimal movement)")
+    check_partition_merge(cases, rng)
+    print(f"merge: {cases} randomized populations x shards {{1,2,4}} OK (incl. degraded)")
+    check_row_codec(cases, rng)
+    print(f"codec: {cases} randomized rows OK, malformed rejected")
+    print("0 mismatches")
+
+
+if __name__ == "__main__":
+    main()

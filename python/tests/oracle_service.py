@@ -280,6 +280,11 @@ class CacheMirror:
         c = cost(query, resp)
         if c > self.capacity // 4:
             return 0
+        # A straggler that computed against a pre-swap view must not
+        # clobber a fresher resident entry for the same key.
+        resident = self.map.get(query)
+        if resident is not None and resident[0] > generation:
+            return 0
         old = self.map.pop(query, None)
         if old is not None:
             del self.order[old[2]]
@@ -343,6 +348,8 @@ class CacheModel:
             return 0
         i = self._find(query)
         if i >= 0:
+            if self.entries[i][1] > generation:
+                return 0  # straggler refusal: resident entry is fresher
             self.entries.pop(i)
         self.entries.append([query, generation, resp])
         evicted = 0
@@ -372,9 +379,16 @@ def check_cache(cases, rng):
                 k = rng.choice(keys)
                 resp = "v" * rng.randrange(0, 40)
                 g = gen if rng.random() < 0.8 else rng.randrange(gen + 1)
+                resident = mirror.map.get(k)
                 a = mirror.insert(g, k, resp)
                 b = model.insert(g, k, resp)
                 assert a == b, f"case {case} op {op}: evicted {a} != {b}"
+                # straggler refusal: an insert from an older generation
+                # never replaces a fresher resident entry
+                if resident is not None and resident[0] > g:
+                    assert mirror.map[k][:2] == resident[:2], (
+                        f"case {case} op {op}: straggler clobbered fresher entry"
+                    )
             elif r < 0.85:
                 k = rng.choice(keys)
                 a = mirror.get(gen, k)

@@ -1,0 +1,213 @@
+//! Scatter-gather sharded serving: aggregate RULES throughput through the
+//! [`ScatterEngine`] coordinator at 1, 2, and 4 shards — same replicated
+//! store, work split `k/n` per shard (DESIGN.md §18).
+//!
+//! Two phases, gates before timing:
+//!
+//! 1. **Parity gates.** Every benched query is executed through the
+//!    coordinator at each shard count and must return bytes identical to
+//!    a single-node engine over the same trie. A fast wrong merge is
+//!    worthless.
+//!
+//! 2. **Throughput run.** A closed-loop client drives the coordinator
+//!    with scan-heavy `RULES ... SORT BY ... LIMIT k` queries (the whole
+//!    rule population is scanned per query; `LIMIT` keeps the merged
+//!    response — and therefore the wire cost — small, which is exactly
+//!    the regime sharding targets). Per-query wall times give req/s and
+//!    p50/p99; the 4-shard/1-shard ratio lands in the report as
+//!    `speedup_x4_vs_x1`.
+//!
+//! Results go to the console, `bench_results/shard_scatter.json`, and the
+//! cross-PR snapshot `BENCH_shard.json` (shards, req_s, p50_s, p99_s,
+//! speedup). Flags (after `--`): `--test` shrinks everything for the CI
+//! smoke (gates still run), `--rounds N`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use trie_of_rules::bench_support::report::{BenchReport, Report};
+use trie_of_rules::bench_support::workloads::{self, Workload};
+use trie_of_rules::coordinator::frontend::{serve_nonblocking, ServeOptions};
+use trie_of_rules::coordinator::scatter::ScatterEngine;
+use trie_of_rules::coordinator::service::QueryEngine;
+
+struct Args {
+    test: bool,
+    rounds: usize,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        test: false,
+        rounds: 0, // 0 = mode default
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--test" => args.test = true,
+            "--rounds" => {
+                args.rounds = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--rounds needs a positive integer");
+            }
+            // `cargo bench` forwards its own flags (e.g. `--bench`).
+            _ => {}
+        }
+    }
+    args
+}
+
+/// One shard fleet: each shard a full replica of `w.trie` carrying its
+/// `k/n` scatter identity, served over real loopback sockets.
+fn spawn_fleet(
+    w: &Workload,
+    n: usize,
+    threads: usize,
+) -> (Vec<String>, Vec<Arc<AtomicBool>>) {
+    let mut addrs = Vec::new();
+    let mut shutdowns = Vec::new();
+    for k in 0..n {
+        let engine = QueryEngine::with_threads(w.trie.clone(), w.db.vocab().clone(), threads)
+            .with_shard_identity(k, n);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = serve_nonblocking(
+            Arc::new(engine),
+            "127.0.0.1:0",
+            Arc::clone(&shutdown),
+            ServeOptions::default(),
+        )
+        .expect("spawn shard");
+        addrs.push(addr.to_string());
+        shutdowns.push(shutdown);
+    }
+    (addrs, shutdowns)
+}
+
+/// Scan-heavy query mix: every query walks the full rule population on
+/// each shard's partition; LIMIT bounds the merge and response size.
+fn queries() -> Vec<String> {
+    vec![
+        "RULES SORT BY lift DESC LIMIT 50".to_string(),
+        "RULES SORT BY confidence DESC LIMIT 50".to_string(),
+        "RULES WHERE lift >= 1.05 SORT BY support DESC LIMIT 50".to_string(),
+        "RULES WHERE leverage > 0 SORT BY conviction DESC LIMIT 50".to_string(),
+        "RULES SORT BY support ASC LIMIT 50".to_string(),
+    ]
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let args = parse_args();
+    let (minsup, shard_threads, warmup, rounds) = if args.test {
+        (0.05, 2, 1, 2)
+    } else {
+        (0.01, 2, 2, 8)
+    };
+    let rounds = if args.rounds > 0 { args.rounds } else { rounds };
+    let w = workloads::groceries(minsup);
+    let qs = queries();
+    eprintln!(
+        "[shard_scatter] {} rules representable, {} queries x {} rounds",
+        w.trie.num_representable_rules(),
+        qs.len(),
+        rounds
+    );
+
+    // -- gates first: byte parity against a single node --------------------
+    let oracle = QueryEngine::with_threads(w.trie.clone(), w.db.vocab().clone(), shard_threads);
+    for n in [1usize, 2, 4] {
+        let (addrs, shutdowns) = spawn_fleet(&w, n, shard_threads);
+        let coord = ScatterEngine::new(addrs);
+        for q in &qs {
+            assert_eq!(
+                coord.execute(q),
+                oracle.execute(q),
+                "parity broke at {n} shard(s): `{q}`"
+            );
+        }
+        assert_eq!(coord.shards_down(), 0, "healthy fleet marked shards down");
+        for s in &shutdowns {
+            s.store(true, Ordering::Relaxed);
+        }
+    }
+    eprintln!(
+        "[shard_scatter] parity OK: {} queries x shards {{1,2,4}} vs single node",
+        qs.len()
+    );
+
+    // -- closed-loop throughput at each shard count ------------------------
+    let mut report = Report::new("Scatter-gather sharding: aggregate RULES throughput");
+    report.note(format!(
+        "groceries-like @ minsup {minsup}, {} shard threads, closed loop, {} queries x {rounds} rounds",
+        shard_threads,
+        qs.len()
+    ));
+    let mut bench = BenchReport::new("shard");
+    let mut req_s_at: Vec<(usize, f64)> = Vec::new();
+    for n in [1usize, 2, 4] {
+        let (addrs, shutdowns) = spawn_fleet(&w, n, shard_threads);
+        let coord = ScatterEngine::new(addrs);
+        let mut latencies: Vec<f64> = Vec::new();
+        for round in 0..warmup + rounds {
+            for q in &qs {
+                let t0 = Instant::now();
+                let resp = coord.execute(q);
+                let dt = t0.elapsed().as_secs_f64();
+                assert!(resp.starts_with("RULES "), "scatter failed: {resp}");
+                if round >= warmup {
+                    latencies.push(dt);
+                }
+            }
+        }
+        for s in &shutdowns {
+            s.store(true, Ordering::Relaxed);
+        }
+        let wall: f64 = latencies.iter().sum();
+        let req_s = latencies.len() as f64 / wall.max(1e-12);
+        let mut sorted = latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cells: Vec<(&str, f64)> = vec![
+            ("shards", n as f64),
+            ("req_s", req_s),
+            ("p50_s", percentile(&sorted, 0.50)),
+            ("p99_s", percentile(&sorted, 0.99)),
+        ];
+        let label = format!("scatter/shards{n}");
+        report.row(&label, &cells);
+        bench.row(&label, &cells);
+        req_s_at.push((n, req_s));
+        eprintln!(
+            "[shard_scatter] shards {n}: {req_s:.0} req/s, p50 {:.3} ms, p99 {:.3} ms",
+            percentile(&sorted, 0.50) * 1e3,
+            percentile(&sorted, 0.99) * 1e3,
+        );
+    }
+    let one = req_s_at.iter().find(|(n, _)| *n == 1).map(|&(_, r)| r);
+    let four = req_s_at.iter().find(|(n, _)| *n == 4).map(|&(_, r)| r);
+    if let (Some(one), Some(four)) = (one, four) {
+        let speedup = four / one.max(1e-12);
+        let cells = [("speedup_x4_vs_x1", speedup)];
+        report.row("scatter/speedup", &cells);
+        bench.row("scatter/speedup", &cells);
+        eprintln!("[shard_scatter] 4-shard aggregate throughput = {speedup:.2}x the 1-shard figure");
+    }
+
+    print!("{}", report.render());
+    match report.save("shard_scatter") {
+        Ok(p) => eprintln!("[shard_scatter] wrote {}", p.display()),
+        Err(e) => eprintln!("[shard_scatter] save failed: {e:#}"),
+    }
+    match bench.save() {
+        Ok(p) => eprintln!("[shard_scatter] wrote {}", p.display()),
+        Err(e) => eprintln!("[shard_scatter] save failed: {e:#}"),
+    }
+}

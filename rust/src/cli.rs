@@ -147,6 +147,12 @@ QUERY COMMANDS (RQL — see DESIGN.md §7-8):
                                  a fresh frozen snapshot, persist it
   tor serve [opts] --port P      run pipeline, serve the TCP query protocol
         [--replay-delta FILE]    ...replaying a .delta sidecar first
+        [--shard-of k/n]         ...as scatter-gather shard k of n: answers
+                                 SCATTER partition requests from a
+                                 coordinator (DESIGN.md §18)
+        [--shards a:p,b:q,...]   ...as the scatter-gather coordinator over
+                                 the listed shard addresses (partition
+                                 order); no local pipeline is built
   tor show [opts] [--depth N]    render the trie as an ASCII tree
   tor dot  [opts] [--out FILE]   export the trie as Graphviz DOT
   tor export [opts] --out FILE [--format csv|jsonl]   export the ruleset
@@ -372,6 +378,8 @@ fn parse_pipeline_opts_with(
             }
             "--wal-dir" => opts.config.set("wal_dir", &value("--wal-dir")?)?,
             "--wal-fsync" => opts.config.set("wal_fsync", &value("--wal-fsync")?)?,
+            "--shard-of" => opts.config.set("shard_of", &value("--shard-of")?)?,
+            "--shards" => opts.config.set("shards", &value("--shards")?)?,
             "--config" => {
                 opts.config = PipelineConfig::load(&PathBuf::from(value("--config")?))?;
             }
@@ -477,6 +485,28 @@ mod tests {
             "query --load-trie /tmp/t.tor --replay-delta /tmp/s.tor.delta --cmd STATS"
         ))
         .is_err());
+    }
+
+    #[test]
+    fn parses_shard_flags() {
+        match parse(&argv("serve --dataset tiny --port 7878 --shard-of 2/4")).unwrap() {
+            Command::Serve(o, _, _) => assert_eq!(o.config.shard_of, Some((2, 4))),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("serve --port 7000 --shards 127.0.0.1:7001,127.0.0.1:7002")).unwrap() {
+            Command::Serve(o, port, _) => {
+                assert_eq!(port, 7000);
+                assert_eq!(
+                    o.config.shards.as_deref(),
+                    Some("127.0.0.1:7001,127.0.0.1:7002")
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --port 1 --shard-of 4/4")).is_err());
+        assert!(parse(&argv("serve --port 1 --shard-of nope")).is_err());
+        // A process is a shard or a coordinator, never both.
+        assert!(parse(&argv("serve --port 1 --shard-of 0/2 --shards a:1,b:2")).is_err());
     }
 
     #[test]

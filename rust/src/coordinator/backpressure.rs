@@ -105,11 +105,12 @@ impl<T> BoundedQueue<T> {
             }
         }
         state.items.push_back(item);
-        let depth = state.items.len();
-        drop(state);
+        // Publish the gauge while still holding the lock: a set after the
+        // drop can race another thread's set and leave a stale depth behind.
         if let Some(obs) = self.inner.obs.get() {
-            obs.depth.set(depth as i64);
+            obs.depth.set(state.items.len() as i64);
         }
+        drop(state);
         self.inner.not_empty.notify_one();
         Ok(())
     }
@@ -123,11 +124,10 @@ impl<T> BoundedQueue<T> {
             return Err(item);
         }
         state.items.push_back(item);
-        let depth = state.items.len();
-        drop(state);
         if let Some(obs) = self.inner.obs.get() {
-            obs.depth.set(depth as i64);
+            obs.depth.set(state.items.len() as i64);
         }
+        drop(state);
         self.inner.not_empty.notify_one();
         Ok(())
     }
@@ -137,12 +137,13 @@ impl<T> BoundedQueue<T> {
     pub fn try_pop(&self) -> Option<T> {
         let mut state = self.inner.queue.lock().unwrap();
         let item = state.items.pop_front();
-        let depth = state.items.len();
-        drop(state);
         if item.is_some() {
             if let Some(obs) = self.inner.obs.get() {
-                obs.depth.set(depth as i64);
+                obs.depth.set(state.items.len() as i64);
             }
+        }
+        drop(state);
+        if item.is_some() {
             self.inner.not_full.notify_one();
         }
         item
@@ -165,12 +166,13 @@ impl<T> BoundedQueue<T> {
             }
         }
         let item = state.items.pop_front();
-        let depth = state.items.len();
-        drop(state);
         if item.is_some() {
             if let Some(obs) = self.inner.obs.get() {
-                obs.depth.set(depth as i64);
+                obs.depth.set(state.items.len() as i64);
             }
+        }
+        drop(state);
+        if item.is_some() {
             self.inner.not_full.notify_one();
         }
         item
@@ -436,6 +438,46 @@ mod tests {
         assert_eq!(ac.pending(), 0);
         assert_eq!(ac.admitted_count(), total);
         assert_eq!(ac.admitted_count() + ac.shed_count(), 4000);
+    }
+
+    #[test]
+    fn depth_gauge_matches_len_after_concurrent_storm() {
+        // Regression for the post-unlock gauge publish: two threads could
+        // interleave unlock/set and leave a stale depth on the gauge. After a
+        // randomized push/pop storm the gauge must equal the true length —
+        // not merely converge once the queue quiesces.
+        let registry = MetricsRegistry::new();
+        let q: BoundedQueue<u64> = BoundedQueue::new(64);
+        q.bind_metrics(&registry, "tor_storm_queue");
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    // xorshift per thread: a deterministic mix of try_push /
+                    // try_pop with no coordination between threads.
+                    let mut s = 0x9E37_79B9u64.wrapping_add(t as u64);
+                    for i in 0..5000u64 {
+                        s ^= s << 13;
+                        s ^= s >> 7;
+                        s ^= s << 17;
+                        if s & 1 == 0 {
+                            let _ = q.try_push(t as u64 * 10_000 + i);
+                        } else {
+                            let _ = q.try_pop();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let depth = registry.gauge("tor_storm_queue_depth").get();
+        assert_eq!(
+            depth as usize,
+            q.len(),
+            "gauge drifted from true depth after storm"
+        );
     }
 
     #[test]

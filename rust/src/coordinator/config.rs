@@ -88,6 +88,15 @@ pub struct PipelineConfig {
     /// (`--wal-fsync`; parsed by
     /// [`crate::coordinator::wal::FsyncPolicy::parse`]).
     pub wal_fsync: String,
+    /// Scatter-gather shard identity `k/n` (`--shard-of`; None =
+    /// standalone). A shard refuses `SCATTER` requests addressed to a
+    /// different partition and appends ` shard=k/n` to STATS
+    /// (DESIGN.md §18).
+    pub shard_of: Option<(usize, usize)>,
+    /// Scatter-gather coordinator mode: comma-separated shard addresses
+    /// in partition order (`--shards host:port,...`; None = serve
+    /// locally). Mutually exclusive with `shard_of`.
+    pub shards: Option<String>,
 }
 
 impl Default for PipelineConfig {
@@ -110,6 +119,8 @@ impl Default for PipelineConfig {
             result_cache_mb: 0,
             wal_dir: None,
             wal_fsync: "always".to_string(),
+            shard_of: None,
+            shards: None,
         }
     }
 }
@@ -150,6 +161,14 @@ impl PipelineConfig {
                 crate::coordinator::wal::FsyncPolicy::parse(value)?;
                 self.wal_fsync = value.to_string();
             }
+            "shard_of" => self.shard_of = Some(parse_shard_of(value)?),
+            "shards" => {
+                anyhow::ensure!(
+                    value.split(',').all(|a| !a.trim().is_empty()),
+                    "shards needs a comma-separated, gap-free address list"
+                );
+                self.shards = Some(value.to_string());
+            }
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -177,6 +196,11 @@ impl PipelineConfig {
 
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.shard_slots >= self.workers, "shard_slots < workers");
+        anyhow::ensure!(
+            self.shard_of.is_none() || self.shards.is_none(),
+            "shard_of and shards are mutually exclusive (a process is a \
+             shard or a coordinator, not both)"
+        );
         anyhow::ensure!(
             self.miner == MinerKind::Apriori || self.counter != CounterKind::Xla,
             "counter=xla requires miner=apriori (the XLA backend plugs into the \
@@ -221,6 +245,12 @@ impl PipelineConfig {
         if let Some(dir) = &self.wal_dir {
             out.push_str(&format!("wal_dir={dir}\n"));
         }
+        if let Some((k, n)) = self.shard_of {
+            out.push_str(&format!("shard_of={k}/{n}\n"));
+        }
+        if let Some(shards) = &self.shards {
+            out.push_str(&format!("shards={shards}\n"));
+        }
         out
     }
 
@@ -242,6 +272,17 @@ fn parse_usize_min(value: &str, min: usize) -> Result<usize> {
     let v: usize = value.parse().with_context(|| format!("bad integer `{value}`"))?;
     anyhow::ensure!(v >= min, "value {v} below minimum {min}");
     Ok(v)
+}
+
+/// Parse a `k/n` shard identity; `k < n`, `n > 0`.
+pub fn parse_shard_of(value: &str) -> Result<(usize, usize)> {
+    let (k, n) = value
+        .split_once('/')
+        .with_context(|| format!("bad shard identity `{value}` (expected k/n)"))?;
+    let k: usize = k.trim().parse().with_context(|| format!("bad shard index `{k}`"))?;
+    let n: usize = n.trim().parse().with_context(|| format!("bad shard count `{n}`"))?;
+    anyhow::ensure!(n > 0 && k < n, "shard {k}/{n} out of range");
+    Ok((k, n))
 }
 
 #[cfg(test)]
@@ -359,6 +400,36 @@ mod tests {
         let back = PipelineConfig::load(&path).unwrap();
         assert_eq!(back.wal_dir.as_deref(), Some("artifacts/wal"));
         assert_eq!(back.wal_fsync, "batch:8");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_keys_roundtrip_and_exclude_each_other() {
+        let mut c = PipelineConfig::default();
+        assert!(c.shard_of.is_none() && c.shards.is_none());
+        assert!(!c.render().contains("shard"), "{}", c.render());
+        c.set("shard_of", "1/4").unwrap();
+        assert_eq!(c.shard_of, Some((1, 4)));
+        assert!(c.set("shard_of", "4/4").is_err());
+        assert!(c.set("shard_of", "0/0").is_err());
+        assert!(c.set("shard_of", "1-4").is_err());
+        c.validate().unwrap();
+        // A process cannot be both a shard and a coordinator.
+        c.set("shards", "127.0.0.1:7000,127.0.0.1:7001").unwrap();
+        assert!(c.validate().is_err());
+        c.shard_of = None;
+        c.validate().unwrap();
+        assert!(c.set("shards", "a:1,,b:2").is_err(), "gap in the shard list");
+        let dir = std::env::temp_dir().join(format!("tor_cfg_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pipeline.cfg");
+        std::fs::write(&path, c.render()).unwrap();
+        let back = PipelineConfig::load(&path).unwrap();
+        assert_eq!(back.shards.as_deref(), Some("127.0.0.1:7000,127.0.0.1:7001"));
+        let mut shard = PipelineConfig::default();
+        shard.set("shard_of", "3/8").unwrap();
+        std::fs::write(&path, shard.render()).unwrap();
+        assert_eq!(PipelineConfig::load(&path).unwrap().shard_of, Some((3, 8)));
         std::fs::remove_dir_all(&dir).ok();
     }
 

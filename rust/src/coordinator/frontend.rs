@@ -51,6 +51,44 @@ use anyhow::{Context, Result};
 use super::backpressure::{AdmissionControl, AdmissionPermit, BoundedQueue};
 use super::netpoll::{IdleBackoff, Interest, Slab, Token};
 use super::service::QueryEngine;
+use crate::obs::registry::Gauge;
+
+/// The engine surface the front end drives. One request line in, one
+/// response string out, plus the observability touchpoints the serving
+/// loops hit on shed/evict/close. Implemented by the single-node
+/// [`QueryEngine`] and by the scatter-gather coordinator
+/// ([`super::scatter::ScatterEngine`]), so both are served by the same
+/// acceptor + shard-loop machinery and speak identical wire protocols.
+pub trait RequestHandler: Send + Sync + 'static {
+    /// Execute one text request (framing already stripped).
+    fn execute(&self, line: &str) -> String;
+    /// Gauge of currently open connections.
+    fn conn_gauge(&self) -> Gauge;
+    /// A request was refused with `BUSY` by admission control.
+    fn note_shed(&self);
+    /// A connection was evicted for idleness.
+    fn note_idle_evicted(&self);
+    /// Orderly-stop drain (durability flush, telemetry flush).
+    fn shutdown_flush(&self);
+}
+
+impl RequestHandler for QueryEngine {
+    fn execute(&self, line: &str) -> String {
+        QueryEngine::execute(self, line)
+    }
+    fn conn_gauge(&self) -> Gauge {
+        QueryEngine::conn_gauge(self)
+    }
+    fn note_shed(&self) {
+        QueryEngine::note_shed(self)
+    }
+    fn note_idle_evicted(&self) {
+        QueryEngine::note_idle_evicted(self)
+    }
+    fn shutdown_flush(&self) {
+        QueryEngine::shutdown_flush(self)
+    }
+}
 
 /// Hard cap on one request's payload (text line or binary frame body).
 pub const MAX_REQUEST_BYTES: usize = 64 * 1024;
@@ -314,9 +352,9 @@ impl Conn {
 
     /// One readiness-by-attempt sweep: read what's there, parse + execute
     /// complete requests in order, flush what fits.
-    fn service(
+    fn service<E: RequestHandler>(
         &mut self,
-        engine: &QueryEngine,
+        engine: &E,
         admission: &AdmissionControl,
         now: Instant,
         idle_timeout: Option<Duration>,
@@ -499,8 +537,8 @@ impl Conn {
 /// Serve `engine` over TCP with the nonblocking front end until `shutdown`
 /// flips true. Returns the bound address (port 0 supported). Threads are
 /// detached, exactly like the blocking server: flip `shutdown` to stop.
-pub fn serve_nonblocking(
-    engine: Arc<QueryEngine>,
+pub fn serve_nonblocking<E: RequestHandler>(
+    engine: Arc<E>,
     addr: &str,
     shutdown: Arc<AtomicBool>,
     opts: ServeOptions,
@@ -534,10 +572,10 @@ pub fn serve_nonblocking(
     Ok(local)
 }
 
-fn acceptor_loop(
+fn acceptor_loop<E: RequestHandler>(
     listener: TcpListener,
     queues: Vec<BoundedQueue<TcpStream>>,
-    engine: Arc<QueryEngine>,
+    engine: Arc<E>,
     shutdown: Arc<AtomicBool>,
 ) {
     let mut next = 0usize;
@@ -586,8 +624,8 @@ fn acceptor_loop(
     engine.shutdown_flush();
 }
 
-fn shard_loop(
-    engine: Arc<QueryEngine>,
+fn shard_loop<E: RequestHandler>(
+    engine: Arc<E>,
     queue: BoundedQueue<TcpStream>,
     admission: AdmissionControl,
     shutdown: Arc<AtomicBool>,

@@ -13,6 +13,7 @@ pub mod durability;
 pub mod frontend;
 pub mod netpoll;
 pub mod pipeline;
+pub mod scatter;
 pub mod service;
 pub mod sharding;
 pub mod telemetry;
@@ -23,6 +24,7 @@ pub use config::{CounterKind, PipelineConfig};
 pub use durability::{DurabilityPlane, RecoveryReport};
 pub use frontend::{serve_nonblocking, ServeOptions};
 pub use pipeline::{run, PipelineOutput, Source};
+pub use scatter::ScatterEngine;
 pub use service::{serve_tcp, serve_tcp_blocking, QueryEngine};
 pub use sharding::{PartialCounts, ShardRouter};
 pub use telemetry::{PipelineReport, StageReport};

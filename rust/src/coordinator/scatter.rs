@@ -1,0 +1,949 @@
+//! Scatter-gather coordinator for sharded serving (DESIGN.md §18).
+//!
+//! Deployment shape: N `tor serve --shard-of k/N` shard processes, each a
+//! full replica of the store (typically a v4 mmap snapshot plus its own
+//! WAL), fronted by one coordinator (`tor serve --shards a:p,b:q,...`)
+//! built around [`ScatterEngine`]. The *data* is replicated; the *work*
+//! is sharded: a `RULES` query is scattered as `SCATTER k/N <line>` so
+//! shard `k` executes only partition `k` of the subtree-aligned partition
+//! map ([`crate::query::parallel::ParallelExecutor::execute_view_partition`])
+//! and answers a machine-mergeable `PARTIAL` frame. The coordinator merges
+//! the partials under the engine's total output order — `(sort key under
+//! `f64::total_cmp`, then rule)` — which is insertion-order independent,
+//! so the merged `RULES` response is **byte-identical** to a single-node
+//! engine's at any shard count.
+//!
+//! Everything that is not a scatterable row query takes one of two other
+//! routes:
+//!
+//! * **Forward** (`EXPLAIN`/`FIND`/`TOP`/`CONSEQ`/`SUPPORT`, plus
+//!   `SNAPSHOT`): every shard holds the whole store, so one shard answers
+//!   the whole request. The target is picked by hashing the request line
+//!   through a [`ShardRouter`] over the live shards, so point lookups
+//!   spread across the fleet and a shard death just rebalances the slot
+//!   map (the exact two-pass rebalance `sharding.rs` now implements).
+//! * **Broadcast** (`INGEST`/`COMPACT`): applied to every shard under a
+//!   write gate that excludes in-flight scatters, so replicas move in
+//!   lock-step and every scatter observes one consistent generation.
+//!   Mutations are *refused* while any shard is down — a down shard can
+//!   never silently diverge from the fleet.
+//!
+//! **Degradation.** A shard that fails a request (after one reconnect
+//! attempt) is marked down — sticky, like a single-node engine's degraded
+//! durability mode — the router rebalances onto the survivors, and the
+//! `tor_shard_down` gauge rises. Scatters keep answering from the live
+//! partitions with an explicit partial-result flag in the header
+//! (`RULES <n> partial shards_down=<d>`); partial responses are never
+//! cached.
+//!
+//! The coordinator keeps its own generation counter (bumped per
+//! successful broadcast mutation) keying an optional [`ResultCache`], and
+//! implements [`RequestHandler`], so the nonblocking front end
+//! ([`super::frontend`]) serves it over the same two wire framings as a
+//! single shard.
+
+use std::collections::BTreeMap;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{ensure, Context, Result};
+
+use super::frontend::{RequestHandler, BINARY_MAGIC};
+use super::sharding::ShardRouter;
+use crate::data::vocab::ItemId;
+use crate::obs::registry::{Counter, Gauge, MetricsRegistry};
+use crate::query::ast::SortSpec;
+use crate::query::cache::ResultCache;
+use crate::query::exec::{Accumulator, ExecStats, Row};
+use crate::rules::metrics::RuleMetrics;
+use crate::rules::rule::Rule;
+
+/// Sanity cap on one shard response frame (a full-ruleset partial on a
+/// large build is megabytes; corrupt length prefixes are gigabytes).
+const MAX_RESPONSE_BYTES: usize = 256 * 1024 * 1024;
+
+/// Router slot count: comfortably more slots than any realistic shard
+/// fleet, so the ±1-slot rebalance bound stays fine-grained.
+const ROUTER_SLOTS: usize = 64;
+
+// ---------------------------------------------------------------------
+// PARTIAL row codec
+// ---------------------------------------------------------------------
+
+/// Encode one result row for a `PARTIAL` frame (no trailing newline):
+///
+/// ```text
+/// R <ant ids csv>|<con ids csv> <10 metric f64s as 016x bit patterns csv>\t<rendered>
+/// ```
+///
+/// Item ids and raw `f64::to_bits` patterns make the decode lossless (the
+/// coordinator re-sorts under `f64::total_cmp`, so NaN/∞ metric values
+/// must survive the wire exactly); the pre-rendered display text rides
+/// along after the tab so the coordinator can emit byte-identical `RULES`
+/// lines without holding the vocab.
+pub(crate) fn encode_partial_row(row: &Row, rendered: &str) -> String {
+    let side = |items: &[ItemId]| {
+        items
+            .iter()
+            .map(|i| i.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let m = &row.metrics;
+    let bits = [
+        m.support,
+        m.confidence,
+        m.lift,
+        m.leverage,
+        m.conviction,
+        m.zhang,
+        m.jaccard,
+        m.cosine,
+        m.kulczynski,
+        m.yule_q,
+    ]
+    .iter()
+    .map(|v| format!("{:016x}", v.to_bits()))
+    .collect::<Vec<_>>()
+    .join(",");
+    format!(
+        "R {}|{} {}\t{}",
+        side(row.rule.antecedent.items()),
+        side(row.rule.consequent.items()),
+        bits,
+        rendered
+    )
+}
+
+/// Decode one [`encode_partial_row`] line back into the row and its
+/// pre-rendered display text.
+pub(crate) fn decode_partial_row(line: &str) -> Result<(Row, String)> {
+    let (head, rendered) = line
+        .split_once('\t')
+        .context("partial row: missing rendered text")?;
+    let head = head
+        .strip_prefix("R ")
+        .context("partial row: missing `R ` tag")?;
+    let (rule, bits) = head
+        .split_once(' ')
+        .context("partial row: missing metric vector")?;
+    let (ant, con) = rule
+        .split_once('|')
+        .context("partial row: missing `|` side separator")?;
+    let parse_side = |s: &str| -> Result<Vec<ItemId>> {
+        s.split(',')
+            .map(|t| t.parse::<ItemId>().with_context(|| format!("bad item id `{t}`")))
+            .collect()
+    };
+    let mut vals = [0f64; 10];
+    let mut toks = bits.split(',');
+    for slot in &mut vals {
+        let t = toks.next().context("partial row: short metric vector")?;
+        *slot = f64::from_bits(
+            u64::from_str_radix(t, 16).with_context(|| format!("bad metric bits `{t}`"))?,
+        );
+    }
+    ensure!(toks.next().is_none(), "partial row: oversized metric vector");
+    let metrics = RuleMetrics {
+        support: vals[0],
+        confidence: vals[1],
+        lift: vals[2],
+        leverage: vals[3],
+        conviction: vals[4],
+        zhang: vals[5],
+        jaccard: vals[6],
+        cosine: vals[7],
+        kulczynski: vals[8],
+        yule_q: vals[9],
+    };
+    let row = Row {
+        rule: Rule::from_ids(parse_side(ant)?, parse_side(con)?),
+        metrics,
+    };
+    Ok((row, rendered.to_string()))
+}
+
+/// One shard's decoded `PARTIAL` response.
+pub(crate) struct PartialFrame {
+    /// The shard's serving generation when it executed its partition. The
+    /// coordinator's write gate keeps broadcast mutations out of in-flight
+    /// scatters, so every frame of one scatter must agree.
+    pub generation: u64,
+    /// This partition's exact work counters; summing over a covering set
+    /// of frames reproduces the single-node `ExecStats`.
+    pub stats: ExecStats,
+    pub rows: Vec<(Row, String)>,
+}
+
+/// Parse one shard's `PARTIAL <n> gen=<g> scanned=<s> candidates=<c>
+/// matched=<m>` response (header plus row lines).
+pub(crate) fn parse_partial(resp: &str) -> Result<PartialFrame> {
+    let mut lines = resp.lines();
+    let header = lines.next().context("empty shard response")?;
+    let rest = header
+        .strip_prefix("PARTIAL ")
+        .with_context(|| format!("not a PARTIAL response: `{header}`"))?;
+    let mut toks = rest.split(' ');
+    let count: usize = toks
+        .next()
+        .context("partial header: missing row count")?
+        .parse()
+        .context("partial header: bad row count")?;
+    let mut generation = None;
+    let mut stats = ExecStats::default();
+    for t in toks {
+        let (k, v) = t
+            .split_once('=')
+            .with_context(|| format!("partial header: bad field `{t}`"))?;
+        let v: u64 = v
+            .parse()
+            .with_context(|| format!("partial header: bad value `{t}`"))?;
+        match k {
+            "gen" => generation = Some(v),
+            "scanned" => stats.scanned = v as usize,
+            "candidates" => stats.candidates = v as usize,
+            "matched" => stats.matched = v as usize,
+            other => anyhow::bail!("partial header: unknown field `{other}`"),
+        }
+    }
+    let rows: Vec<(Row, String)> = lines.map(decode_partial_row).collect::<Result<_>>()?;
+    ensure!(
+        rows.len() == count,
+        "partial header claims {count} rows, got {}",
+        rows.len()
+    );
+    Ok(PartialFrame {
+        generation: generation.context("partial header: missing gen=")?,
+        stats,
+        rows,
+    })
+}
+
+/// Merge partial frames into the final `RULES` response. The accumulator
+/// re-imposes the engine's total output order, so the result is
+/// independent of frame order and of how rows were split across shards;
+/// with every partition present the bytes equal a single-node response.
+/// `shards_down > 0` flags the response as partial in the header (those
+/// partitions' rows are simply absent).
+pub(crate) fn merge_rules_response(
+    sort: Option<SortSpec>,
+    limit: Option<usize>,
+    frames: Vec<PartialFrame>,
+    shards_down: usize,
+) -> Result<String> {
+    if let Some(first) = frames.first() {
+        ensure!(
+            frames.iter().all(|f| f.generation == first.generation),
+            "inconsistent shard generations (out-of-band mutation?)"
+        );
+    }
+    let mut acc = Accumulator::new(sort, limit);
+    let mut rendered: BTreeMap<Rule, String> = BTreeMap::new();
+    for frame in frames {
+        for (row, text) in frame.rows {
+            rendered.insert(row.rule.clone(), text);
+            acc.push(row);
+        }
+    }
+    let rows = acc.finish();
+    let mut out = if shards_down == 0 {
+        format!("RULES {}\n", rows.len())
+    } else {
+        format!("RULES {} partial shards_down={shards_down}\n", rows.len())
+    };
+    for row in &rows {
+        out.push_str(
+            rendered
+                .get(&row.rule)
+                .context("merged row lost its rendering")?,
+        );
+        out.push('\n');
+    }
+    out.pop();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// shard connections
+// ---------------------------------------------------------------------
+
+/// One shard's client half of the `RQL2` binary framing: lazily connected,
+/// length-prefixed frames, strictly request→response (the coordinator
+/// never pipelines on a shard connection, so a frame read is always the
+/// answer to the frame just written).
+struct ShardConn {
+    addr: String,
+    stream: Option<TcpStream>,
+    /// Sticky failure flag: set after a request fails post-reconnect;
+    /// a down shard is never retried (replica divergence would be
+    /// undetectable after missed mutations).
+    down: bool,
+}
+
+impl ShardConn {
+    fn new(addr: String) -> Self {
+        ShardConn {
+            addr,
+            stream: None,
+            down: false,
+        }
+    }
+
+    fn ensure_connected(&mut self) -> io::Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let mut s = TcpStream::connect(&self.addr)?;
+            s.set_nodelay(true).ok();
+            s.write_all(BINARY_MAGIC)?;
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().expect("just connected"))
+    }
+
+    fn try_send(&mut self, payload: &str) -> io::Result<()> {
+        let s = self.ensure_connected()?;
+        s.write_all(&(payload.len() as u32).to_be_bytes())?;
+        s.write_all(payload.as_bytes())
+    }
+
+    /// Write one request frame, reconnecting once on failure (a dead
+    /// cached connection from an earlier idle eviction looks like a write
+    /// error; the reconnect discards the half-sent frame, so nothing can
+    /// be applied twice).
+    fn send(&mut self, payload: &str) -> io::Result<()> {
+        match self.try_send(payload) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                self.stream = None;
+                self.try_send(payload)
+            }
+        }
+    }
+
+    /// Read one response frame. No retry: the request may already be
+    /// executing on the shard, and replaying a mutation would double-apply.
+    fn recv(&mut self) -> io::Result<String> {
+        let s = self
+            .stream
+            .as_mut()
+            .ok_or_else(|| io::Error::new(ErrorKind::NotConnected, "no shard connection"))?;
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len)?;
+        let len = u32::from_be_bytes(len) as usize;
+        if len > MAX_RESPONSE_BYTES {
+            self.stream = None;
+            return Err(io::Error::new(
+                ErrorKind::InvalidData,
+                format!("shard response frame of {len} bytes"),
+            ));
+        }
+        let mut buf = vec![0u8; len];
+        s.read_exact(&mut buf)?;
+        String::from_utf8(buf).map_err(|e| io::Error::new(ErrorKind::InvalidData, e))
+    }
+
+    fn request(&mut self, payload: &str) -> io::Result<String> {
+        self.send(payload)?;
+        match self.recv() {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.stream = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Slot map over the *live* shards: `router` routes a request hash to a
+/// worker index, `live[worker]` names the shard. Kept consistent by
+/// [`ScatterEngine::refresh_router`]: a shard death shrinks the worker
+/// count through [`ShardRouter::rebalance`] (minimal movement, ±1 slot
+/// uniform), so surviving shards keep most of their slots.
+struct RouterState {
+    router: ShardRouter,
+    live: Vec<usize>,
+}
+
+/// FNV-1a, the line hash that spreads forwarded point lookups.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Whether a request line may be answered from the coordinator cache —
+/// the same rule the single-node engine applies: pure query verbs only,
+/// never ANALYZE runs.
+fn cacheable_line(line: &str) -> bool {
+    let cmd = line.split_whitespace().next().unwrap_or("");
+    matches!(
+        cmd.to_ascii_uppercase().as_str(),
+        "RULES" | "EXPLAIN" | "FIND" | "TOP" | "CONSEQ" | "SUPPORT"
+    ) && !line
+        .split_whitespace()
+        .any(|t| t.eq_ignore_ascii_case("ANALYZE"))
+}
+
+/// Whether a rendered response carries the degraded partial-result flag
+/// (such responses are never cached: a later identical query should see
+/// the current fleet, not a snapshot of an earlier outage).
+fn response_is_partial(resp: &str) -> bool {
+    resp.lines()
+        .next()
+        .is_some_and(|h| h.contains(" partial shards_down="))
+}
+
+// ---------------------------------------------------------------------
+// the coordinator engine
+// ---------------------------------------------------------------------
+
+/// Scatter-gather coordinator over a fleet of shard engines (module docs
+/// above). Construct with [`ScatterEngine::new`], serve through
+/// [`super::frontend::serve_nonblocking`].
+pub struct ScatterEngine {
+    shards: Vec<Mutex<ShardConn>>,
+    /// Readers = scatters/forwards, writer = broadcast mutations: every
+    /// scatter observes one generation across all shards.
+    gate: RwLock<()>,
+    router: Mutex<RouterState>,
+    /// Coordinator generation: bumped per successful broadcast mutation;
+    /// keys the result cache.
+    generation: AtomicU64,
+    cache: Option<ResultCache>,
+    registry: Arc<MetricsRegistry>,
+    active_conns: Gauge,
+    shed_requests: Counter,
+    idle_evicted_conns: Counter,
+    /// `tor_shard_down`: how many shards are currently marked down.
+    shard_down: Gauge,
+    scatters: Counter,
+    forwards: Counter,
+    broadcasts: Counter,
+    cache_hits: Counter,
+    cache_misses: Counter,
+}
+
+impl ScatterEngine {
+    /// Coordinator over shard addresses (`host:port`, one per shard, in
+    /// partition order: `addrs[k]` must be the `--shard-of k/N` process).
+    pub fn new(addrs: Vec<String>) -> Self {
+        assert!(!addrs.is_empty(), "scatter coordinator needs ≥1 shard");
+        let n = addrs.len();
+        let registry = Arc::new(MetricsRegistry::new());
+        ScatterEngine {
+            shards: addrs.into_iter().map(|a| Mutex::new(ShardConn::new(a))).collect(),
+            gate: RwLock::new(()),
+            router: Mutex::new(RouterState {
+                router: ShardRouter::new(n, ROUTER_SLOTS.max(n)),
+                live: (0..n).collect(),
+            }),
+            generation: AtomicU64::new(0),
+            cache: None,
+            active_conns: registry.gauge("tor_active_connections"),
+            shed_requests: registry.counter("tor_shed_requests_total"),
+            idle_evicted_conns: registry.counter("tor_idle_evicted_conns_total"),
+            shard_down: registry.gauge("tor_shard_down"),
+            scatters: registry.counter("tor_scatter_requests_total"),
+            forwards: registry.counter("tor_forwarded_requests_total"),
+            broadcasts: registry.counter("tor_broadcast_requests_total"),
+            cache_hits: registry.counter("tor_result_cache_hits_total"),
+            cache_misses: registry.counter("tor_result_cache_misses_total"),
+            registry,
+        }
+    }
+
+    /// Attach a generation-keyed result cache of `mb` MiB (0 = none), the
+    /// coordinator analogue of `QueryEngine::with_result_cache`.
+    pub fn with_result_cache(mut self, mb: usize) -> Self {
+        if mb > 0 {
+            self.cache = Some(ResultCache::with_capacity_mb(mb));
+        }
+        self
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shards currently marked down (sticky).
+    pub fn shards_down(&self) -> usize {
+        self.shards.iter().filter(|s| s.lock().unwrap().down).count()
+    }
+
+    pub fn registry(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Execute one request line — the coordinator's whole protocol
+    /// surface. Routing per verb is described in the module docs.
+    pub fn execute(&self, line: &str) -> String {
+        let line = line.trim();
+        let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
+        let cmd = cmd.to_ascii_uppercase();
+        match cmd.as_str() {
+            "RULES" => self.execute_read(line, |engine| engine.scatter_rules(line)),
+            "EXPLAIN" | "FIND" | "TOP" | "CONSEQ" | "SUPPORT" => {
+                self.execute_read(line, |engine| engine.forward(line))
+            }
+            "INGEST" | "COMPACT" => self.broadcast_mutation(line),
+            "SNAPSHOT" => {
+                let _gate = self.gate.read().unwrap();
+                self.forward_first(line)
+            }
+            "STATS" => self.cmd_stats(),
+            "METRICS" => self.cmd_metrics(rest),
+            "SCATTER" => "ERR SCATTER is shard-internal; send RULES to the coordinator".to_string(),
+            "QUIT" => "BYE".to_string(),
+            other => format!("ERR unknown command `{other}`"),
+        }
+    }
+
+    /// Read-path wrapper: pin the read gate (excluding broadcast
+    /// mutations for the whole request, so the generation loaded here is
+    /// the one every shard answers under), then serve cache-aware.
+    fn execute_read(&self, line: &str, run: impl FnOnce(&Self) -> String) -> String {
+        let _gate = self.gate.read().unwrap();
+        let generation = self.generation.load(Ordering::Acquire);
+        let use_cache = self.cache.is_some() && cacheable_line(line);
+        if use_cache {
+            let cache = self.cache.as_ref().expect("checked above");
+            if let Some(hit) = cache.get(generation, line) {
+                self.cache_hits.inc();
+                return hit.to_string();
+            }
+            self.cache_misses.inc();
+        }
+        let resp = run(self);
+        if use_cache && !resp.starts_with("ERR") && !response_is_partial(&resp) {
+            self.cache
+                .as_ref()
+                .expect("checked above")
+                .insert(generation, line, &resp);
+        }
+        resp
+    }
+
+    /// Recompute the live-shard set from the sticky down flags, shrink the
+    /// router onto the survivors, refresh `tor_shard_down`. Callers must
+    /// not hold any shard-connection lock (lock order: conns → router).
+    fn refresh_router(&self) {
+        let live: Vec<usize> = (0..self.shards.len())
+            .filter(|&k| !self.shards[k].lock().unwrap().down)
+            .collect();
+        self.shard_down.set((self.shards.len() - live.len()) as i64);
+        let mut rs = self.router.lock().unwrap();
+        if rs.live != live {
+            if !live.is_empty() {
+                rs.router.rebalance(live.len());
+            }
+            rs.live = live;
+        }
+    }
+
+    /// Scatter `SCATTER k/n <line>` to every live shard, gather the
+    /// `PARTIAL` frames, merge. Sends fan out before the first read, so
+    /// the shards' partition executions overlap in wall time.
+    fn scatter_rules(&self, line: &str) -> String {
+        self.scatters.inc();
+        // Parse locally: an unparseable query costs no fan-out, and the
+        // merge needs the query's sort/limit (which bind pass-through
+        // leaves exactly as written — no vocab required).
+        let query = match crate::query::parser::parse(line) {
+            Ok(q) => q,
+            Err(e) => return format!("ERR {e:#}"),
+        };
+        let n = self.shards.len();
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        // Scatter pass: one request frame per live shard.
+        let mut sent = vec![false; n];
+        for (k, conn) in guards.iter_mut().enumerate() {
+            if conn.down {
+                continue;
+            }
+            let req = format!("SCATTER {k}/{n} {line}");
+            match conn.send(&req) {
+                Ok(()) => sent[k] = true,
+                Err(_) => conn.down = true,
+            }
+        }
+        // Gather pass, in shard order. Every in-flight response is
+        // drained even when an earlier one already decided the outcome —
+        // an unread frame would desynchronize that connection's strict
+        // request→response pairing for the *next* query.
+        let mut responses: Vec<Option<String>> = vec![None; n];
+        for (k, conn) in guards.iter_mut().enumerate() {
+            if !sent[k] {
+                continue;
+            }
+            match conn.recv() {
+                Ok(resp) => responses[k] = Some(resp),
+                Err(_) => {
+                    conn.stream = None;
+                    conn.down = true;
+                }
+            }
+        }
+        let down = guards.iter().filter(|c| c.down).count();
+        drop(guards);
+        self.refresh_router();
+        let mut frames = Vec::new();
+        for (k, resp) in responses.into_iter().enumerate() {
+            let Some(resp) = resp else { continue };
+            if resp.starts_with("ERR") {
+                // Parse/plan errors are deterministic across replicas;
+                // the first shard's wording is every shard's wording.
+                return resp;
+            }
+            match parse_partial(&resp) {
+                Ok(frame) => frames.push(frame),
+                Err(e) => return format!("ERR shard {k} sent an unmergeable partial: {e:#}"),
+            }
+        }
+        if frames.is_empty() {
+            return "ERR no shards available".to_string();
+        }
+        match merge_rules_response(query.sort, query.limit, frames, down) {
+            Ok(resp) => resp,
+            Err(e) => format!("ERR {e:#}"),
+        }
+    }
+
+    /// Forward a whole request to one live shard picked by line hash;
+    /// on transport failure mark the shard down, rebalance, and retry on
+    /// a survivor (the response is whole either way — every shard is a
+    /// full replica).
+    fn forward(&self, line: &str) -> String {
+        self.forwards.inc();
+        loop {
+            let target = {
+                let rs = self.router.lock().unwrap();
+                if rs.live.is_empty() {
+                    return "ERR no shards available".to_string();
+                }
+                rs.live[rs.router.route(fnv1a(line))]
+            };
+            let mut conn = self.shards[target].lock().unwrap();
+            if conn.down {
+                // Raced a concurrent mark-down; rebalance and re-route.
+                drop(conn);
+                self.refresh_router();
+                continue;
+            }
+            match conn.request(line) {
+                Ok(resp) => return resp,
+                Err(_) => {
+                    conn.down = true;
+                    drop(conn);
+                    self.refresh_router();
+                }
+            }
+        }
+    }
+
+    /// Forward to the lowest-numbered live shard (SNAPSHOT: one artifact,
+    /// deterministic author).
+    fn forward_first(&self, line: &str) -> String {
+        for k in 0..self.shards.len() {
+            let mut conn = self.shards[k].lock().unwrap();
+            if conn.down {
+                continue;
+            }
+            match conn.request(line) {
+                Ok(resp) => return resp,
+                Err(_) => {
+                    conn.down = true;
+                    drop(conn);
+                    self.refresh_router();
+                }
+            }
+        }
+        "ERR no shards available".to_string()
+    }
+
+    /// Apply a mutation to every shard under the write gate. Refused
+    /// while any shard is down (a shard that misses a mutation could
+    /// never rejoin coherently); a transport failure mid-broadcast marks
+    /// that shard down — it is out of the fleet, the survivors stay in
+    /// lock-step. All replicas compute the same response; any divergence
+    /// is surfaced, not hidden.
+    fn broadcast_mutation(&self, line: &str) -> String {
+        self.broadcasts.inc();
+        let _gate = self.gate.write().unwrap();
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        if let Some(k) = guards.iter().position(|c| c.down) {
+            return format!("ERR shard {k} is down; mutation refused to prevent replica divergence");
+        }
+        let n = guards.len();
+        let mut sent = vec![false; n];
+        for (k, conn) in guards.iter_mut().enumerate() {
+            if conn.send(line).is_ok() {
+                sent[k] = true;
+            } else {
+                conn.down = true;
+            }
+        }
+        let mut responses: Vec<Option<String>> = vec![None; n];
+        for (k, conn) in guards.iter_mut().enumerate() {
+            if !sent[k] {
+                continue;
+            }
+            match conn.recv() {
+                Ok(resp) => responses[k] = Some(resp),
+                Err(_) => {
+                    conn.stream = None;
+                    conn.down = true;
+                }
+            }
+        }
+        drop(guards);
+        self.refresh_router();
+        let mut answered = responses.iter().flatten();
+        let Some(first) = answered.next().cloned() else {
+            return "ERR no shards available".to_string();
+        };
+        if let Some(other) = answered.find(|r| **r != first) {
+            return format!("ERR shard responses diverged: `{first}` vs `{other}`");
+        }
+        if !first.starts_with("ERR") {
+            self.generation.fetch_add(1, Ordering::Release);
+            if let Some(cache) = &self.cache {
+                cache.clear();
+            }
+        }
+        first
+    }
+
+    /// `STATS`: a live shard's full STATS line plus an append-only
+    /// coordinator tail (fleet size, liveness, scatter count) — same
+    /// append-only discipline as the shard-side tails.
+    fn cmd_stats(&self) -> String {
+        let _gate = self.gate.read().unwrap();
+        let resp = self.forward_first("STATS");
+        if resp.starts_with("ERR") {
+            return resp;
+        }
+        let down = self.shards_down();
+        format!(
+            "{resp} shards={} shards_up={} shards_down={} scatters={}",
+            self.shards.len(),
+            self.shards.len() - down,
+            down,
+            self.scatters.get()
+        )
+    }
+
+    /// `METRICS [JSON]` over the coordinator's own registry, in the exact
+    /// rendering the shard engine uses.
+    fn cmd_metrics(&self, rest: &str) -> String {
+        match rest.trim().to_ascii_uppercase().as_str() {
+            "" => {
+                let body = self.registry.render_prometheus();
+                let body = body.trim_end();
+                format!("METRICS {}\n{body}", body.lines().count())
+            }
+            "JSON" => format!("METRICS JSON {}", self.registry.to_json().to_string_compact()),
+            _ => "ERR usage: METRICS [JSON]".to_string(),
+        }
+    }
+}
+
+impl RequestHandler for ScatterEngine {
+    fn execute(&self, line: &str) -> String {
+        ScatterEngine::execute(self, line)
+    }
+    fn conn_gauge(&self) -> Gauge {
+        self.active_conns.clone()
+    }
+    fn note_shed(&self) {
+        self.shed_requests.inc();
+    }
+    fn note_idle_evicted(&self) {
+        self.idle_evicted_conns.inc();
+    }
+    fn shutdown_flush(&self) {
+        // Nothing to flush: all durable state lives on the shards, and
+        // their own serve loops flush on shutdown.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(seed: f64) -> RuleMetrics {
+        RuleMetrics {
+            support: seed,
+            confidence: seed / 2.0,
+            lift: seed * 3.0,
+            leverage: -seed,
+            conviction: f64::INFINITY,
+            zhang: 0.0,
+            jaccard: seed / 7.0,
+            cosine: seed.sqrt(),
+            kulczynski: 1.0 - seed,
+            yule_q: f64::from_bits(0x7ff8_0000_0000_0001), // a specific NaN payload
+        }
+    }
+
+    fn row(ant: Vec<u32>, con: Vec<u32>, seed: f64) -> Row {
+        Row {
+            rule: Rule::from_ids(ant, con),
+            metrics: metrics(seed),
+        }
+    }
+
+    fn bits_of(m: &RuleMetrics) -> [u64; 10] {
+        [
+            m.support.to_bits(),
+            m.confidence.to_bits(),
+            m.lift.to_bits(),
+            m.leverage.to_bits(),
+            m.conviction.to_bits(),
+            m.zhang.to_bits(),
+            m.jaccard.to_bits(),
+            m.cosine.to_bits(),
+            m.kulczynski.to_bits(),
+            m.yule_q.to_bits(),
+        ]
+    }
+
+    #[test]
+    fn partial_row_codec_round_trips_bit_exactly() {
+        let r = row(vec![3, 17], vec![42], 0.625);
+        let rendered = "  {a,b} => {c} sup=0.625000 conf=0.312500 lift=1.8750";
+        let line = encode_partial_row(&r, rendered);
+        let (back, text) = decode_partial_row(&line).unwrap();
+        assert_eq!(back.rule, r.rule);
+        // Bit-exact across NaN and ∞, which `==` cannot check.
+        assert_eq!(bits_of(&back.metrics), bits_of(&r.metrics));
+        assert_eq!(text, rendered);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_rows() {
+        for bad in [
+            "no tag at all",
+            "R 1|2 deadbeef\tmissing nine metric fields",
+            "R 1,2 0000000000000000\tno side separator",
+            "R 1|x 0,0,0,0,0,0,0,0,0,0\tbad id",
+            "R 1|2 0,0,0,0,0,0,0,0,0,0,0\televen metrics",
+        ] {
+            assert!(decode_partial_row(bad).is_err(), "accepted: {bad}");
+        }
+        // Missing the rendered-text tab entirely.
+        let r = row(vec![1], vec![2], 0.5);
+        let line = encode_partial_row(&r, "text");
+        let untabbed = line.replace('\t', " ");
+        assert!(decode_partial_row(&untabbed).is_err());
+    }
+
+    #[test]
+    fn parse_partial_reads_header_and_counts() {
+        let r1 = row(vec![1], vec![2], 0.5);
+        let r2 = row(vec![2], vec![3], 0.25);
+        let resp = format!(
+            "PARTIAL 2 gen=7 scanned=10 candidates=5 matched=2\n{}\n{}",
+            encode_partial_row(&r1, "one"),
+            encode_partial_row(&r2, "two"),
+        );
+        let frame = parse_partial(&resp).unwrap();
+        assert_eq!(frame.generation, 7);
+        assert_eq!(
+            (frame.stats.scanned, frame.stats.candidates, frame.stats.matched),
+            (10, 5, 2)
+        );
+        assert_eq!(frame.rows.len(), 2);
+        assert_eq!(frame.rows[0].1, "one");
+
+        // Row-count mismatch and non-PARTIAL responses are rejected.
+        assert!(parse_partial("PARTIAL 3 gen=1 scanned=0 candidates=0 matched=0").is_err());
+        assert!(parse_partial("RULES 0").is_err());
+        assert!(parse_partial("PARTIAL 0 scanned=0 candidates=0 matched=0").is_err());
+    }
+
+    #[test]
+    fn merge_imposes_total_order_independent_of_frame_split() {
+        use crate::rules::metrics::Metric;
+        // Rows with distinct supports; sort by support descending, limit 3.
+        let rows: Vec<Row> = (1..=6)
+            .map(|i| row(vec![i], vec![100 + i], f64::from(i) / 8.0))
+            .collect();
+        let sort = Some(SortSpec {
+            metric: Metric::Support,
+            descending: true,
+        });
+        let frame = |rs: &[Row], gen: u64| PartialFrame {
+            generation: gen,
+            stats: ExecStats::default(),
+            rows: rs
+                .iter()
+                .map(|r| (r.clone(), format!("row-{}", r.metrics.support)))
+                .collect(),
+        };
+        // Whole set in one frame vs split 2/4 in reversed order.
+        let a = merge_rules_response(sort, Some(3), vec![frame(&rows, 1)], 0).unwrap();
+        let b = merge_rules_response(
+            sort,
+            Some(3),
+            vec![frame(&rows[2..], 1), frame(&rows[..2], 1)],
+            0,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        let mut lines = a.lines();
+        assert_eq!(lines.next(), Some("RULES 3"));
+        assert_eq!(lines.next(), Some("row-0.75"));
+        assert_eq!(lines.next(), Some("row-0.625"));
+        assert_eq!(lines.next(), Some("row-0.5"));
+        assert_eq!(lines.next(), None);
+    }
+
+    #[test]
+    fn merge_flags_partial_and_rejects_mixed_generations() {
+        let r = row(vec![1], vec![2], 0.5);
+        let frame = |gen: u64| PartialFrame {
+            generation: gen,
+            stats: ExecStats::default(),
+            rows: vec![(r.clone(), "the-row".to_string())],
+        };
+        let degraded = merge_rules_response(None, None, vec![frame(4)], 2).unwrap();
+        assert!(degraded.starts_with("RULES 1 partial shards_down=2\n"));
+        assert!(response_is_partial(&degraded));
+        assert!(!response_is_partial("RULES 1\nthe-row"));
+        assert!(merge_rules_response(None, None, vec![frame(4), frame(5)], 0).is_err());
+    }
+
+    #[test]
+    fn merge_of_empty_frames_matches_single_node_empty_response() {
+        let empty = PartialFrame {
+            generation: 3,
+            stats: ExecStats::default(),
+            rows: Vec::new(),
+        };
+        assert_eq!(merge_rules_response(None, None, vec![empty], 0).unwrap(), "RULES 0");
+    }
+
+    #[test]
+    fn cacheable_line_matches_service_policy() {
+        assert!(cacheable_line("RULES WHERE conseq = x"));
+        assert!(cacheable_line("FIND a => b"));
+        assert!(cacheable_line("explain rules"));
+        assert!(!cacheable_line("EXPLAIN ANALYZE RULES"));
+        assert!(!cacheable_line("INGEST a,b"));
+        assert!(!cacheable_line("STATS"));
+        assert!(!cacheable_line(""));
+    }
+
+    #[test]
+    fn fnv1a_spreads_distinct_lines() {
+        // Not a distribution test — just that the hash actually varies.
+        let hs: std::collections::HashSet<u64> = (0..64)
+            .map(|i| fnv1a(&format!("FIND item{i} => other")))
+            .collect();
+        assert!(hs.len() > 60);
+    }
+}

@@ -81,12 +81,15 @@ enum Verb {
     Stats,
     Metrics,
     Other,
+    /// Appended after `Other` so every pre-existing `q_<verb>=` STATS
+    /// position (including `q_other=` at index 11) is unchanged.
+    Scatter,
 }
 
 impl Verb {
     /// Every verb, in the fixed order used for metric registration and the
     /// `q_<verb>=` tail of STATS.
-    const ALL: [Verb; 12] = [
+    const ALL: [Verb; 13] = [
         Verb::Rules,
         Verb::Explain,
         Verb::Find,
@@ -99,6 +102,7 @@ impl Verb {
         Verb::Stats,
         Verb::Metrics,
         Verb::Other,
+        Verb::Scatter,
     ];
 
     fn name(self) -> &'static str {
@@ -115,6 +119,7 @@ impl Verb {
             Verb::Stats => "stats",
             Verb::Metrics => "metrics",
             Verb::Other => "other",
+            Verb::Scatter => "scatter",
         }
     }
 
@@ -132,6 +137,7 @@ impl Verb {
             "SNAPSHOT" => Verb::Snapshot,
             "STATS" => Verb::Stats,
             "METRICS" => Verb::Metrics,
+            "SCATTER" => Verb::Scatter,
             _ => Verb::Other,
         }
     }
@@ -166,9 +172,9 @@ struct ServiceObs {
     start: Instant,
     /// Per-verb request counters (`tor_queries_total{verb="..."}`),
     /// indexed by `Verb as usize`.
-    verb_count: [Counter; 12],
+    verb_count: [Counter; 13],
     /// Per-verb latency histograms (`tor_query_seconds{verb="..."}`).
-    verb_latency: [Histogram; 12],
+    verb_latency: [Histogram; 13],
     active_conns: Gauge,
     uptime_seconds: Gauge,
     ingest_batch_tx: Histogram,
@@ -268,6 +274,10 @@ pub struct QueryEngine {
     /// Threads the build pipeline ran with (0 = unknown, e.g. a trie
     /// loaded from disk); surfaced in STATS as `build_threads=`.
     build_threads: usize,
+    /// Shard identity under scatter-gather serving (`--shard-of k/K`):
+    /// `SCATTER` requests execute only this shard's partition and STATS
+    /// grows a ` shard=k/K` tail. `None` = standalone single-node engine.
+    shard_of: Option<(usize, usize)>,
     /// Metrics + telemetry plane (always constructed; see [`ServiceObs`]).
     obs: ServiceObs,
     /// Crash-safety plane (`--wal-dir`): WAL + checkpoints + degraded
@@ -321,6 +331,7 @@ impl QueryEngine {
             store: None,
             compact_threshold: 0,
             build_threads: 0,
+            shard_of: None,
             obs: ServiceObs::new(Arc::new(MetricsRegistry::new()), None),
             durability: None,
         }
@@ -342,6 +353,7 @@ impl QueryEngine {
             store: Some(Mutex::new(store)),
             compact_threshold: 0,
             build_threads: 0,
+            shard_of: None,
             obs: ServiceObs::new(Arc::new(MetricsRegistry::new()), None),
             durability: None,
         }
@@ -390,6 +402,17 @@ impl QueryEngine {
     /// so STATS can report it alongside the query degree.
     pub fn with_build_threads(mut self, build_threads: usize) -> Self {
         self.build_threads = build_threads;
+        self
+    }
+
+    /// Declare this engine shard `k` of `n` in a scatter-gather fleet
+    /// (`--shard-of k/K`). Only affects `SCATTER` (which executes exactly
+    /// this partition of the rule space) and the STATS ` shard=` tail;
+    /// every other verb still serves the full rule space, so a shard can
+    /// answer forwarded point lookups and broadcast mutations.
+    pub fn with_shard_identity(mut self, k: usize, n: usize) -> Self {
+        assert!(n > 0 && k < n, "shard {k}/{n} out of range");
+        self.shard_of = Some((k, n));
         self
     }
 
@@ -537,6 +560,7 @@ impl QueryEngine {
                 "SNAPSHOT" => self.cmd_snapshot(rest),
                 "STATS" => self.cmd_stats(),
                 "METRICS" => self.cmd_metrics(rest),
+                "SCATTER" => self.cmd_scatter(rest),
                 "QUIT" => "BYE".to_string(),
                 other => format!("ERR unknown command `{other}`"),
             }
@@ -606,29 +630,79 @@ impl QueryEngine {
             }
             Ok(QueryOutput::Rows(rs)) => {
                 let mut out = format!("RULES {}\n", rs.rows.len());
-                let extra = query
-                    .sort
-                    .map(|s| s.metric)
-                    .filter(|m| {
-                        !matches!(*m, Metric::Support | Metric::Confidence | Metric::Lift)
-                    });
+                let extra = extra_metric(&query);
                 for row in &rs.rows {
-                    out.push_str(&format!(
-                        "  {} sup={:.6} conf={:.6} lift={:.4}",
-                        row.rule.display(&self.vocab),
-                        row.metrics.support,
-                        row.metrics.confidence,
-                        row.metrics.lift
-                    ));
-                    if let Some(m) = extra {
-                        out.push_str(&format!(" {}={:.6}", m.name(), row.metrics.get(m)));
-                    }
+                    out.push_str(&render_rule_row(row, &self.vocab, extra));
                     out.push('\n');
                 }
                 out.pop();
                 out
             }
         }
+    }
+
+    /// `SCATTER k/n <RULES ...>`: execute only partition `k` of `n` of a
+    /// plain RULES query and answer with a machine-mergeable `PARTIAL`
+    /// frame (DESIGN.md §18) — the shard half of scatter-gather serving.
+    /// The header carries this partition's row count, the serving cache
+    /// generation (the coordinator asserts all shards answered from the
+    /// same install), and the partition's exact work counters; each row
+    /// line carries the rule's item ids, the ten metric f64s as hex bit
+    /// patterns (lossless — the merge re-sorts under `f64::total_cmp`),
+    /// and the row pre-rendered through the same [`render_rule_row`] the
+    /// local RULES path uses, so the coordinator's merged response is
+    /// byte-identical to a single-node engine's without needing the vocab.
+    fn cmd_scatter(&self, rest: &str) -> String {
+        const USAGE: &str = "ERR usage: SCATTER <k>/<n> <RULES ...>";
+        let Some((spec, rql)) = rest.trim().split_once(' ') else {
+            return USAGE.to_string();
+        };
+        let Some((k, n)) = spec.split_once('/') else {
+            return USAGE.to_string();
+        };
+        let (Ok(k), Ok(n)) = (k.parse::<usize>(), n.parse::<usize>()) else {
+            return USAGE.to_string();
+        };
+        if n == 0 || k >= n {
+            return format!("ERR shard {k}/{n} out of range");
+        }
+        if let Some((me, of)) = self.shard_of {
+            if of != n || me != k {
+                return format!("ERR shard identity mismatch: this shard is {me}/{of}");
+            }
+        }
+        let query = match crate::query::parser::parse(rql) {
+            Ok(q) => q,
+            Err(e) => return format!("ERR {e:#}"),
+        };
+        if query.explain || query.analyze {
+            return "ERR EXPLAIN cannot be scattered".to_string();
+        }
+        let (generation, view) = self.pinned();
+        let rs = match self
+            .exec
+            .execute_view_partition(&view, &self.vocab, &query, k, n)
+        {
+            Ok(rs) => rs,
+            Err(e) => return format!("ERR {e:#}"),
+        };
+        let extra = extra_metric(&query);
+        let mut out = format!(
+            "PARTIAL {} gen={} scanned={} candidates={} matched={}",
+            rs.rows.len(),
+            generation,
+            rs.stats.scanned,
+            rs.stats.candidates,
+            rs.stats.matched
+        );
+        for row in &rs.rows {
+            out.push('\n');
+            out.push_str(&super::scatter::encode_partial_row(
+                row,
+                &render_rule_row(row, &self.vocab, extra),
+            ));
+        }
+        out
     }
 
     fn parse_items(&self, s: &str) -> Result<Vec<u32>> {
@@ -1075,6 +1149,11 @@ impl QueryEngine {
             dobs.refresh(plane);
             out.push_str(&plane.stats_fields());
         }
+        // Shard-identity tail: appended ONLY under `--shard-of`, so a
+        // standalone engine's STATS bytes are unchanged.
+        if let Some((k, n)) = self.shard_of {
+            out.push_str(&format!(" shard={k}/{n}"));
+        }
         out
     }
 
@@ -1107,6 +1186,33 @@ impl QueryEngine {
             _ => "ERR usage: METRICS [JSON]".to_string(),
         }
     }
+}
+
+/// The extra sort-metric column a RULES rendering carries: the sort
+/// metric, unless it is one of the three always-printed metrics.
+pub(crate) fn extra_metric(query: &RqlQuery) -> Option<Metric> {
+    query
+        .sort
+        .map(|s| s.metric)
+        .filter(|m| !matches!(*m, Metric::Support | Metric::Confidence | Metric::Lift))
+}
+
+/// Render one result row exactly as `RULES` responses print it (no
+/// trailing newline). Shared by the local RQL path and the `SCATTER`
+/// partial frames, so a scatter-gather coordinator can merge pre-rendered
+/// rows into a byte-identical `RULES` response without holding the vocab.
+pub(crate) fn render_rule_row(row: &Row, vocab: &Vocab, extra: Option<Metric>) -> String {
+    let mut out = format!(
+        "  {} sup={:.6} conf={:.6} lift={:.4}",
+        row.rule.display(vocab),
+        row.metrics.support,
+        row.metrics.confidence,
+        row.metrics.lift
+    );
+    if let Some(m) = extra {
+        out.push_str(&format!(" {}={:.6}", m.name(), row.metrics.get(m)));
+    }
+    out
 }
 
 /// Sidecar path for a snapshot's pending-delta tail: `<path>.delta`.
@@ -1386,9 +1492,10 @@ mod tests {
             .split_whitespace()
             .filter(|t| t.starts_with("q_"))
             .collect();
-        assert_eq!(tail.len(), 12, "{resp}");
+        assert_eq!(tail.len(), 13, "{resp}");
         assert!(tail[0].starts_with("q_rules="), "{resp}");
         assert!(tail[11].starts_with("q_other="), "{resp}");
+        assert!(tail[12].starts_with("q_scatter="), "{resp}");
     }
 
     #[test]

@@ -40,33 +40,69 @@ impl ShardRouter {
         self.assignment[slot]
     }
 
-    /// Rebalance onto a new worker count, moving as few slots as possible
-    /// (slots keep their worker when still valid, excess is redistributed
-    /// round-robin).
+    /// Rebalance onto a new worker count: every worker ends within ±1 slot
+    /// of uniform, and no more slots move than that bound requires.
+    ///
+    /// Three linear passes, O(slots + workers·log workers). Pass 1 fixes
+    /// per-worker retention quotas — `floor(slots/new_workers)` each, with
+    /// the remainder slots granted to the workers currently holding the
+    /// most (maximal retention ⇒ minimal movement). Pass 2 marks the
+    /// retained slots: the first `quota[w]` occurrences of each valid
+    /// worker stay put. Pass 3 assigns everything else (overflow plus
+    /// slots on removed workers) to under-quota workers in index order.
+    /// Marking *before* filling matters: a fused keep-or-fill walk lets
+    /// foreign slots consume an overfull worker's quota early in the
+    /// array and then evicts that worker's own later slots, breaking the
+    /// minimal-movement bound. The even older single-pass version counted
+    /// `moved` *while* iterating, so early slots of an overfull worker
+    /// were counted as "already placed" and never migrated — a grow could
+    /// leave the new workers underfull forever — and its inner scan was
+    /// O(slots·workers).
     pub fn rebalance(&mut self, new_workers: usize) {
         assert!(new_workers > 0 && self.assignment.len() >= new_workers);
-        let mut next = 0usize;
-        for a in &mut self.assignment {
-            if *a >= new_workers {
-                *a = next % new_workers;
-                next += 1;
+        let slots = self.assignment.len();
+        let base = slots / new_workers;
+        let extra = slots % new_workers;
+        let mut counts = vec![0usize; new_workers];
+        for &a in &self.assignment {
+            if a < new_workers {
+                counts[a] += 1;
             }
         }
-        // Growing: spread some slots onto the new workers.
-        if new_workers > self.workers {
-            let per = self.assignment.len() / new_workers;
-            let mut moved = vec![0usize; new_workers];
-            for a in &mut self.assignment {
-                if moved[*a] >= per && *a < self.workers {
-                    // candidate to move to an underfull new worker
-                    if let Some(target) =
-                        (self.workers..new_workers).find(|&w| moved[w] < per)
-                    {
-                        *a = target;
-                    }
+        // Workers by current load, heaviest first (index breaks ties so
+        // the result is deterministic): they get the `base + 1` quotas.
+        let mut order: Vec<usize> = (0..new_workers).collect();
+        order.sort_by(|&x, &y| counts[y].cmp(&counts[x]).then(x.cmp(&y)));
+        let mut quota = vec![base; new_workers];
+        for &w in order.iter().take(extra) {
+            quota[w] += 1;
+        }
+        // Pass 2: each valid worker retains its first `quota` slots.
+        let mut kept = vec![0usize; new_workers];
+        let keep: Vec<bool> = self
+            .assignment
+            .iter()
+            .map(|&a| {
+                if a < new_workers && kept[a] < quota[a] {
+                    kept[a] += 1;
+                    true
+                } else {
+                    false
                 }
-                moved[*a] += 1;
+            })
+            .collect();
+        // Pass 3: quotas sum to `slots` exactly, so `fill` never runs off
+        // the end.
+        let mut fill = 0usize;
+        for (a, retained) in self.assignment.iter_mut().zip(&keep) {
+            if *retained {
+                continue;
             }
+            while kept[fill] >= quota[fill] {
+                fill += 1;
+            }
+            *a = fill;
+            kept[fill] += 1;
         }
         self.workers = new_workers;
     }
@@ -168,6 +204,87 @@ mod tests {
         let shares = r.load_shares();
         assert_eq!(shares.len(), 4);
         assert!(shares[2] > 0.0 && shares[3] > 0.0, "{shares:?}");
+    }
+
+    #[test]
+    fn rebalance_is_uniform_and_minimal_movement() {
+        // Randomized worker-count walks: after every rebalance the load is
+        // within ±1 slot of uniform and no more slots moved than the
+        // information-theoretic floor plus one per worker.
+        let mut seed = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move |bound: usize| {
+            seed = seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (seed >> 33) as usize % bound
+        };
+        for _ in 0..100 {
+            let slots = 16 + next(240);
+            let workers = 1 + next(8.min(slots));
+            let mut r = ShardRouter::new(workers, slots);
+            for _ in 0..6 {
+                let new_workers = 1 + next(12.min(slots));
+                let before = r.assignment.clone();
+                r.rebalance(new_workers);
+
+                let mut counts = vec![0usize; new_workers];
+                for &a in &r.assignment {
+                    assert!(a < new_workers);
+                    counts[a] += 1;
+                }
+                let base = slots / new_workers;
+                let extra = slots % new_workers;
+                for &c in &counts {
+                    assert!(
+                        c == base || (extra > 0 && c == base + 1),
+                        "non-uniform: slots={slots} workers={new_workers} counts={counts:?}"
+                    );
+                }
+
+                let moved = before
+                    .iter()
+                    .zip(&r.assignment)
+                    .filter(|(b, a)| b != a)
+                    .count();
+                // Exact minimality: a ±1-uniform result retains at most
+                // min(count_before[w], quota[w]) slots per surviving
+                // worker, and retention is maximized by granting the
+                // `base + 1` quotas to the heaviest current holders (the
+                // marginal slot is retained iff count_before > base).
+                let mut before_counts = vec![0usize; new_workers];
+                for &b in &before {
+                    if b < new_workers {
+                        before_counts[b] += 1;
+                    }
+                }
+                let eligible = before_counts.iter().filter(|&&c| c > base).count();
+                let best_retention: usize = before_counts
+                    .iter()
+                    .map(|&c| c.min(base))
+                    .sum::<usize>()
+                    + extra.min(eligible);
+                let optimal = slots - best_retention;
+                assert_eq!(
+                    moved, optimal,
+                    "moved {moved} != optimal {optimal} \
+                     (slots={slots} workers={new_workers} before={before_counts:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_grow_migrates_early_slots_of_overfull_workers() {
+        // Regression for the single-pass bug: growing 2 -> 4 must leave all
+        // four workers within ±1 of uniform, including migrating slots that
+        // appear *early* in the assignment vector.
+        let mut r = ShardRouter::new(2, 64);
+        r.rebalance(4);
+        let mut counts = [0usize; 4];
+        for &a in &r.assignment {
+            counts[a] += 1;
+        }
+        assert_eq!(counts, [16, 16, 16, 16], "{counts:?}");
     }
 
     #[test]

@@ -156,6 +156,43 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         Command::Serve(opts, port, replay) => {
+            let serve_opts = ServeOptions {
+                shards: opts.config.service_shards,
+                max_pending: opts.config.max_pending,
+                idle_timeout: (opts.config.idle_timeout_s > 0).then(|| {
+                    std::time::Duration::from_secs(opts.config.idle_timeout_s as u64)
+                }),
+            };
+            // Coordinator mode: no local pipeline — every byte of data
+            // lives on the shard processes; this process only scatters,
+            // forwards, and merges (DESIGN.md §18).
+            if let Some(shards) = &opts.config.shards {
+                let addrs: Vec<String> =
+                    shards.split(',').map(|a| a.trim().to_string()).collect();
+                let engine = Arc::new(
+                    trie_of_rules::coordinator::scatter::ScatterEngine::new(addrs.clone())
+                        .with_result_cache(opts.config.result_cache_mb),
+                );
+                let shutdown = Arc::new(AtomicBool::new(false));
+                let addr = serve_nonblocking(
+                    engine,
+                    &format!("127.0.0.1:{port}"),
+                    Arc::clone(&shutdown),
+                    serve_opts,
+                )?;
+                eprintln!(
+                    "scatter-gather coordinator over {} shard(s): {}",
+                    addrs.len(),
+                    addrs.join(", ")
+                );
+                println!("serving on {addr} (Ctrl-C to stop)");
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(3600));
+                    if shutdown.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+            }
             let exec = ParallelExecutor::new(opts.config.effective_query_threads());
             let registry = Arc::new(MetricsRegistry::new());
             let exporter = build_telemetry(&opts)?;
@@ -187,6 +224,10 @@ fn run(args: &[String]) -> Result<()> {
                 .with_compact_threshold(opts.config.compact_threshold)
                 .with_result_cache(opts.config.result_cache_mb)
                 .with_observability(Arc::clone(&registry), exporter.clone());
+            let engine = match opts.config.shard_of {
+                Some((k, n)) => engine.with_shard_identity(k, n),
+                None => engine,
+            };
             let engine = Arc::new(match durable {
                 Some(plane) => engine.with_durability(plane),
                 None => engine,
@@ -195,13 +236,6 @@ fn run(args: &[String]) -> Result<()> {
             if let Some(exporter) = &exporter {
                 eprintln!("telemetry streaming to {}", exporter.path());
             }
-            let serve_opts = ServeOptions {
-                shards: opts.config.service_shards,
-                max_pending: opts.config.max_pending,
-                idle_timeout: (opts.config.idle_timeout_s > 0).then(|| {
-                    std::time::Duration::from_secs(opts.config.idle_timeout_s as u64)
-                }),
-            };
             let shards = if serve_opts.shards == 0 {
                 trie_of_rules::coordinator::frontend::default_service_shards()
             } else {

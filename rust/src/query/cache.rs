@@ -142,6 +142,13 @@ impl ResultCache {
         }
         let mut inner = self.inner.lock().unwrap();
         let key: Arc<str> = Arc::from(query);
+        // A straggler that computed against a pre-swap view must not clobber
+        // a fresher resident entry for the same key.
+        if let Some(old) = inner.map.get(&*key) {
+            if old.generation > generation {
+                return 0;
+            }
+        }
         if let Some(old) = inner.map.remove(&*key) {
             inner.order.remove(&old.seq);
             inner.bytes -= Self::cost(&key, &old.resp);
@@ -276,6 +283,24 @@ mod tests {
         assert_eq!(c.insert(1, "q", &big), 0);
         assert!(c.is_empty());
         assert!(c.get(1, "q").is_none());
+    }
+
+    #[test]
+    fn straggler_insert_cannot_clobber_fresher_entry() {
+        // A slow worker that executed against generation 1 finishes after the
+        // view swapped to generation 2 and a fresh entry landed. Its insert
+        // must be refused, leaving the generation-2 entry servable.
+        let c = ResultCache::new(1 << 20);
+        c.insert(2, "RULES", "fresh");
+        assert_eq!(c.insert(1, "RULES", "stale"), 0);
+        assert_eq!(c.get(2, "RULES").as_deref(), Some("fresh"));
+        assert_eq!(c.len(), 1);
+        // Same-generation and newer-generation reinserts still replace.
+        c.insert(2, "RULES", "fresh2");
+        assert_eq!(c.get(2, "RULES").as_deref(), Some("fresh2"));
+        c.insert(3, "RULES", "newest");
+        assert_eq!(c.get(3, "RULES").as_deref(), Some("newest"));
+        assert_eq!(c.len(), 1);
     }
 
     #[test]

@@ -590,6 +590,114 @@ impl ParallelExecutor {
         }
     }
 
+    /// Execute a parsed query over only shard `k` of `n`'s slice of the
+    /// rule space ([`partition_range`]) — the shard half of scatter-gather
+    /// serving (DESIGN.md §18). Returns the partial [`ResultSet`]: rows in
+    /// the engine's total output order, truncated to the plan's limit, and
+    /// work counters for exactly this partition's sweep.
+    ///
+    /// Parity contract (gated by `partition_parity_*` below and the
+    /// process-level `tests/shard_scatter.rs` matrix): merging the `n`
+    /// partials under the total output order reproduces
+    /// [`Self::execute_view`]'s rows and order exactly, and the partial
+    /// counters *sum* to its counters — because the partition is
+    /// subtree-aligned (no subtree is cut, so per-shard range-skip prunes
+    /// compose) and covers the sweep exactly once. Per-shard top-k is safe:
+    /// the global top-k is a subset of the union of per-shard top-ks.
+    ///
+    /// With a delta overlay pinned, base partitions run through the merged
+    /// runners on *every* shard (overlay count updates affect base-node
+    /// metrics everywhere) while the delta-only sweep runs as one extra
+    /// partition on the **last** shard only — mirroring
+    /// [`Self::execute_view`], where it likewise runs exactly once, last.
+    pub fn execute_view_partition(
+        &self,
+        view: &MergedView,
+        vocab: &Vocab,
+        query: &Query,
+        k: usize,
+        n: usize,
+    ) -> Result<ResultSet> {
+        assert!(n > 0 && k < n, "shard {k}/{n} out of range");
+        anyhow::ensure!(
+            !query.explain && !query.analyze,
+            "EXPLAIN cannot be scattered"
+        );
+        let base: &TrieOfRules = &view.base;
+        let bound = plan::bind(query, vocab)?;
+        let plan = plan::plan_trie(&bound);
+        let range = partition_range(base, k, n);
+        let overlay = view.overlay.as_deref();
+        let delta_here = overlay.is_some() && k + 1 == n;
+        let (rs, _, _) = match plan.access {
+            AccessPath::Empty => (
+                ResultSet {
+                    rows: Accumulator::new(plan.sort, plan.limit).finish(),
+                    stats: ExecStats::default(),
+                },
+                Vec::new(),
+                Duration::ZERO,
+            ),
+            AccessPath::ConseqHeader(item) => {
+                // The posting list is preorder-sorted, so this shard's
+                // slice of it is a contiguous sub-slice.
+                let ids = base.item_nodes(item);
+                let lo = ids.partition_point(|&id| (id as usize) < range.start);
+                let hi = ids.partition_point(|&id| (id as usize) < range.end);
+                let shards = shard_slices(&ids[lo..hi], self.degree);
+                let parts = shards.len() + usize::from(delta_here);
+                self.fan_out(&plan, parts, false, |p, stats, acc| {
+                    if p < shards.len() {
+                        match overlay {
+                            Some(ov) => exec::run_merged_header_base(
+                                base, ov, shards[p], &plan, stats, acc,
+                            ),
+                            None => exec::run_header_slice(base, shards[p], &plan, stats, acc),
+                        }
+                    } else {
+                        let ov = overlay.expect("delta partition implies overlay");
+                        exec::run_merged_header_delta(
+                            ov,
+                            ov.delta_item_nodes(item),
+                            &plan,
+                            stats,
+                            acc,
+                        );
+                    }
+                })
+            }
+            AccessPath::FullTraversal => {
+                let morsels = morsels_in_range(base, range, self.morsel_target_for(base));
+                let parts = morsels.len() + usize::from(delta_here);
+                self.fan_out(&plan, parts, false, |p, stats, acc| {
+                    if p < morsels.len() {
+                        match overlay {
+                            Some(ov) => exec::run_merged_traversal_range(
+                                base,
+                                ov,
+                                morsels[p].clone(),
+                                &plan,
+                                stats,
+                                acc,
+                            ),
+                            None => exec::run_traversal_range(
+                                base,
+                                morsels[p].clone(),
+                                &plan,
+                                stats,
+                                acc,
+                            ),
+                        }
+                    } else {
+                        let ov = overlay.expect("delta partition implies overlay");
+                        exec::run_merged_delta_traversal(base, ov, &plan, stats, acc);
+                    }
+                })
+            }
+        };
+        Ok(rs)
+    }
+
     /// Run `work(partition, stats, acc)` for each partition on the pool
     /// (each writing only its own slot), then merge partials in partition
     /// order. The final accumulator re-imposes the engine's total output
@@ -648,6 +756,53 @@ impl ParallelExecutor {
         let merge = merge_t.map(|t| t.elapsed()).unwrap_or_default();
         (rs, profiles, merge)
     }
+}
+
+/// The preorder row range shard `k` of `n` owns: a contiguous run of
+/// whole root-child subtrees, chosen by even integer cuts over the
+/// root-child sequence. Deterministic in `(trie, k, n)` alone, so the
+/// coordinator and every shard compute the identical map with no
+/// negotiation; the `n` ranges are disjoint, ascending, and cover the
+/// node space `1..num_rows` exactly (shards may own empty ranges when
+/// the trie has fewer root children than shards).
+pub fn partition_range(trie: &TrieOfRules, k: usize, n: usize) -> std::ops::Range<usize> {
+    assert!(n > 0 && k < n, "shard {k}/{n} out of range");
+    let len = trie.num_nodes() + 1;
+    let mut starts = Vec::new();
+    let mut cur = 1usize;
+    while cur < len {
+        starts.push(cur);
+        cur = trie.subtree_end(cur as NodeIdx) as usize;
+    }
+    starts.push(len);
+    let children = starts.len() - 1;
+    starts[k * children / n]..starts[(k + 1) * children / n]
+}
+
+/// [`TrieOfRules::morsels`] restricted to a [`partition_range`]: the same
+/// greedy whole-subtree packing, over only this shard's row range. Because
+/// the range is itself subtree-aligned, every morsel invariant (disjoint,
+/// covering, uncut subtrees) holds within the range.
+fn morsels_in_range(
+    trie: &TrieOfRules,
+    range: std::ops::Range<usize>,
+    target_len: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let target = target_len.max(1);
+    let mut out = Vec::new();
+    let mut start = range.start;
+    let mut cur = range.start;
+    while cur < range.end {
+        cur = trie.subtree_end(cur as NodeIdx) as usize;
+        if cur - start >= target {
+            out.push(start..cur);
+            start = cur;
+        }
+    }
+    if start < range.end {
+        out.push(start..range.end);
+    }
+    out
 }
 
 /// Split a posting list into at most `parts` contiguous, non-empty,
@@ -857,6 +1012,90 @@ mod tests {
         assert!(text.contains(&format!("probes={}", plain.stats.candidates)), "{text}");
         assert!(text.contains(&format!("matched={}", plain.stats.matched)), "{text}");
         assert!(text.contains(&format!("rows={}", plain.rows.len())), "{text}");
+    }
+
+    #[test]
+    fn partition_ranges_cover_and_stay_subtree_aligned() {
+        let w = workload();
+        let len = w.trie.num_nodes() + 1;
+        for n in [1usize, 2, 3, 4, 7, 16] {
+            let mut cur = 1usize;
+            for k in 0..n {
+                let r = partition_range(&w.trie, k, n);
+                assert_eq!(r.start, cur, "gap or overlap at shard {k}/{n}");
+                // Walking whole subtrees from the start lands exactly on
+                // the end: the range never cuts a subtree.
+                let mut c = r.start;
+                while c < r.end {
+                    c = w.trie.subtree_end(c as NodeIdx) as usize;
+                }
+                assert_eq!(c, r.end, "shard {k}/{n} cuts a subtree");
+                cur = r.end;
+            }
+            assert_eq!(cur, len, "shards do not cover the node space at n={n}");
+        }
+    }
+
+    const PARTITION_QUERIES: [&str; 6] = [
+        "RULES",
+        "RULES WHERE conseq = a",
+        "RULES WHERE support >= 0.6",
+        "RULES WHERE conseq = a AND confidence >= 0.8 SORT BY lift DESC LIMIT 3",
+        "RULES WHERE conseq = a AND conseq = f",
+        "RULES SORT BY support ASC LIMIT 7",
+    ];
+
+    /// Merge per-shard partials the way the scatter coordinator does and
+    /// check rows, order, and summed counters against the whole-view run.
+    fn assert_partition_parity(exec: &ParallelExecutor, view: &MergedView, vocab: &Vocab) {
+        for q in PARTITION_QUERIES {
+            let query = parse(q).unwrap();
+            let whole = exec.execute_view(view, vocab, &query).unwrap().into_rows();
+            for n in [1usize, 2, 3, 4] {
+                let bound = plan::bind(&query, vocab).unwrap();
+                let plan = plan::plan_trie(&bound);
+                let mut acc = Accumulator::new(plan.sort, plan.limit);
+                let mut stats = ExecStats::default();
+                for k in 0..n {
+                    let part = exec.execute_view_partition(view, vocab, &query, k, n).unwrap();
+                    stats.scanned += part.stats.scanned;
+                    stats.candidates += part.stats.candidates;
+                    stats.matched += part.stats.matched;
+                    for row in part.rows {
+                        acc.push(row);
+                    }
+                }
+                assert_eq!(whole.rows, acc.finish(), "rows diverged on `{q}` at n={n}");
+                assert_eq!(whole.stats, stats, "counters diverged on `{q}` at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_merge_matches_whole_on_static_view() {
+        let w = workload();
+        let trie = crate::trie::trie::TrieOfRules::from_frequent(&w.frequent, &w.order).unwrap();
+        let view = MergedView::from_trie(trie);
+        for degree in [1usize, 4] {
+            let exec = ParallelExecutor::new(degree).with_morsel_target(2);
+            assert_partition_parity(&exec, &view, w.db.vocab());
+        }
+    }
+
+    #[test]
+    fn partition_merge_matches_whole_with_delta_overlay() {
+        let w = workload();
+        let trie = crate::trie::trie::TrieOfRules::from_frequent(&w.frequent, &w.order).unwrap();
+        let mut inc =
+            crate::trie::delta::IncrementalTrie::new(trie, w.db.clone(), &w.frequent, w.minsup)
+                .unwrap();
+        inc.ingest(&[vec![0, 1, 2], vec![0, 2], vec![1, 2, 3]]).unwrap();
+        let view = inc.view();
+        assert!(view.overlay.is_some(), "ingest must leave an overlay");
+        for degree in [1usize, 4] {
+            let exec = ParallelExecutor::new(degree).with_morsel_target(2);
+            assert_partition_parity(&exec, &view, w.db.vocab());
+        }
     }
 
     #[test]

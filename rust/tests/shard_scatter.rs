@@ -1,0 +1,325 @@
+//! Scatter-gather sharded serving, end to end over real sockets
+//! (DESIGN.md §18): a fleet of `--shard-of k/n` shard engines behind a
+//! [`ScatterEngine`] coordinator must answer every request byte-identical
+//! to a single-node engine — across shard counts, executor degrees, and
+//! concurrent INGEST/COMPACT — and must degrade to flagged partial
+//! results (not errors, not silence) when a shard dies mid-flight.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::Rng;
+use trie_of_rules::coordinator::frontend::{serve_nonblocking, ServeOptions};
+use trie_of_rules::coordinator::scatter::ScatterEngine;
+use trie_of_rules::coordinator::service::{serve_tcp_blocking, QueryEngine};
+use trie_of_rules::data::paper_example_db;
+use trie_of_rules::data::transaction::TransactionDb;
+use trie_of_rules::mining::counts::{min_count, ItemOrder};
+use trie_of_rules::mining::fpgrowth::fpgrowth;
+use trie_of_rules::query::parallel::ParallelExecutor;
+use trie_of_rules::trie::delta::IncrementalTrie;
+use trie_of_rules::trie::trie::TrieOfRules;
+
+const READ_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Build one engine over `db` — a full replica; with `shard` set it also
+/// carries its scatter partition identity.
+fn engine(db: &TransactionDb, minsup: f64, degree: usize, shard: Option<(usize, usize)>) -> QueryEngine {
+    let fi = fpgrowth(db, minsup);
+    let order = ItemOrder::new(db, min_count(minsup, db.num_transactions()));
+    let trie = TrieOfRules::from_frequent(&fi, &order).unwrap();
+    let store = IncrementalTrie::new(trie, db.clone(), &fi, minsup).unwrap();
+    let e = QueryEngine::with_incremental(store, db.vocab().clone(), ParallelExecutor::new(degree));
+    match shard {
+        Some((k, n)) => e.with_shard_identity(k, n),
+        None => e,
+    }
+}
+
+struct Fleet {
+    addrs: Vec<SocketAddr>,
+    shutdowns: Vec<Arc<AtomicBool>>,
+}
+
+impl Fleet {
+    fn spawn(db: &TransactionDb, minsup: f64, n: usize, degree: usize) -> Fleet {
+        let mut addrs = Vec::new();
+        let mut shutdowns = Vec::new();
+        for k in 0..n {
+            let shutdown = Arc::new(AtomicBool::new(false));
+            let addr = serve_nonblocking(
+                Arc::new(engine(db, minsup, degree, Some((k, n)))),
+                "127.0.0.1:0",
+                Arc::clone(&shutdown),
+                ServeOptions::default(),
+            )
+            .unwrap();
+            addrs.push(addr);
+            shutdowns.push(shutdown);
+        }
+        Fleet { addrs, shutdowns }
+    }
+
+    fn addr_strings(&self) -> Vec<String> {
+        self.addrs.iter().map(|a| a.to_string()).collect()
+    }
+
+    fn kill(&self, k: usize) {
+        self.shutdowns[k].store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for s in &self.shutdowns {
+            s.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The deterministic request corpus: every verb class the coordinator
+/// routes — scattered RULES (plain / filtered / sorted+limited),
+/// forwarded point lookups and EXPLAIN, and deterministic errors.
+const CORPUS: [&str; 12] = [
+    "RULES",
+    "RULES WHERE conseq = a",
+    "RULES WHERE conseq CONTAINS c AND lift >= 1 SORT BY lift DESC LIMIT 4",
+    "RULES SORT BY support ASC LIMIT 3",
+    "RULES WHERE antecedent CONTAINS f SORT BY conviction DESC",
+    "RULES WHERE nonsense",
+    "EXPLAIN RULES WHERE conseq = a",
+    "TOP lift 5",
+    "CONSEQ a",
+    "FIND f,c => a",
+    "SUPPORT f,c",
+    "SUPPORT nosuchitem",
+];
+
+fn assert_parity(coord: &ScatterEngine, oracle: &QueryEngine, queries: &[&str], label: &str) {
+    for q in queries {
+        let want = oracle.execute(q);
+        let got = coord.execute(q);
+        assert_eq!(got, want, "{label}: `{q}` diverged");
+    }
+}
+
+#[test]
+fn scatter_matches_single_node_across_shard_counts_and_degrees() {
+    let db = paper_example_db();
+    for n in [1usize, 2, 4] {
+        for degree in [1usize, 4] {
+            let fleet = Fleet::spawn(&db, 0.3, n, degree);
+            let coord = ScatterEngine::new(fleet.addr_strings());
+            let oracle = engine(&db, 0.3, degree, None);
+            for round in 0..2 {
+                assert_parity(&coord, &oracle, &CORPUS, &format!("n={n} degree={degree} round={round}"));
+            }
+            assert_eq!(coord.shards_down(), 0, "healthy fleet marked shards down");
+        }
+    }
+}
+
+#[test]
+fn randomized_differential_matrix_with_mixed_mutations() {
+    // Random replicated stores, random RQL, random interleaved
+    // INGEST/COMPACT — the coordinator must stay byte-identical to a
+    // single-node oracle driven through the same mutation sequence.
+    let mut rng = Rng::new(0x5ca7_7e21);
+    let mut exercised = 0;
+    for seed in 0..4u64 {
+        let mut g = common::Gen::new(seed.wrapping_mul(0x9e37_79b9).max(1));
+        let rows = common::random_db(&mut g);
+        let Some(db) = common::to_db_sized(&rows, 12) else { continue };
+        let minsup = 0.25;
+        if fpgrowth(&db, minsup).is_empty() {
+            continue;
+        }
+        for n in [2usize, 4] {
+            let degree = if rng.chance(0.5) { 1 } else { 4 };
+            let fleet = Fleet::spawn(&db, minsup, n, degree);
+            let coord = ScatterEngine::new(fleet.addr_strings());
+            let oracle = engine(&db, minsup, degree, None);
+            for step in 0..6 {
+                let label = format!("seed={seed} n={n} degree={degree} step={step}");
+                for _ in 0..4 {
+                    let q = common::random_rql(&mut rng, db.vocab());
+                    let want = oracle.execute(&q);
+                    let got = coord.execute(&q);
+                    assert_eq!(got, want, "{label}: `{q}` diverged");
+                }
+                // Mutate through the coordinator (broadcast) and the
+                // oracle identically; responses must agree too.
+                let mutation = if rng.chance(0.3) {
+                    "COMPACT".to_string()
+                } else {
+                    let tx = common::random_tx_sized(&mut g, 12);
+                    let names: Vec<String> = tx
+                        .iter()
+                        .map(|&i| db.vocab().name(i).to_string())
+                        .collect();
+                    format!("INGEST {}", names.join(","))
+                };
+                let want = oracle.execute(&mutation);
+                let got = coord.execute(&mutation);
+                assert_eq!(got, want, "{label}: `{mutation}` diverged");
+                assert!(got.starts_with("OK"), "{label}: mutation failed: {got}");
+            }
+            exercised += 1;
+        }
+    }
+    assert!(exercised >= 4, "matrix degenerated: only {exercised} legs ran");
+}
+
+#[test]
+fn stats_carries_shard_identity_and_coordinator_tails() {
+    let db = paper_example_db();
+    let fleet = Fleet::spawn(&db, 0.3, 3, 2);
+    let coord = ScatterEngine::new(fleet.addr_strings());
+    // A couple of scatters so the counter is visible.
+    coord.execute("RULES");
+    coord.execute("RULES WHERE conseq = a");
+    let stats = coord.execute("STATS");
+    assert!(stats.starts_with("STATS "), "{stats}");
+    // Shard-identity tail from the answering shard (always shard 0 — the
+    // STATS forward is deterministic), then the coordinator's own tail.
+    for tok in ["shard=0/3", "shards=3", "shards_up=3", "shards_down=0", "scatters=2"] {
+        assert!(
+            stats.split_whitespace().any(|t| t == tok),
+            "missing `{tok}` in: {stats}"
+        );
+    }
+    // The coordinator's METRICS plane is its own registry, in the
+    // standard self-delimiting rendering.
+    let metrics = coord.execute("METRICS");
+    let header: usize = metrics
+        .lines()
+        .next()
+        .unwrap()
+        .strip_prefix("METRICS ")
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert_eq!(metrics.lines().count(), header + 1, "{metrics}");
+    assert!(metrics.contains("tor_shard_down"), "{metrics}");
+    assert!(coord.execute("METRICS JSON").starts_with("METRICS JSON {"));
+    assert_eq!(coord.execute("QUIT"), "BYE");
+    assert!(coord.execute("SCATTER 0/3 RULES").starts_with("ERR "));
+}
+
+#[test]
+fn killed_shard_degrades_to_flagged_partial_results() {
+    let db = paper_example_db();
+    let fleet = Fleet::spawn(&db, 0.3, 3, 2);
+    let coord = ScatterEngine::new(fleet.addr_strings());
+    let oracle = engine(&db, 0.3, 2, None);
+    // Healthy first: full parity, connections established to every shard.
+    assert_parity(&coord, &oracle, &CORPUS, "healthy");
+    // Kill the middle shard and let its serve loops tear down.
+    fleet.kill(1);
+    std::thread::sleep(Duration::from_millis(600));
+    // Scatters keep answering: the header flags the outage and the rows
+    // are exactly a sub-sequence of the single-node output (partition 1's
+    // rows missing, total order preserved by the merge).
+    let got = coord.execute("RULES");
+    let want = oracle.execute("RULES");
+    assert!(
+        got.lines().next().unwrap().contains(" partial shards_down=1"),
+        "no partial flag: {}",
+        got.lines().next().unwrap()
+    );
+    let want_rows: Vec<&str> = want.lines().skip(1).collect();
+    let got_rows: Vec<&str> = got.lines().skip(1).collect();
+    assert!(!got_rows.is_empty(), "live partitions produced no rows");
+    assert!(got_rows.len() < want_rows.len(), "nothing was actually missing");
+    let mut it = want_rows.iter();
+    for row in &got_rows {
+        assert!(
+            it.any(|w| w == row),
+            "row not an in-order subset of single-node output: {row}"
+        );
+    }
+    assert_eq!(coord.shards_down(), 1);
+    assert_eq!(coord.registry().gauge("tor_shard_down").get(), 1);
+    // Forwarded point lookups re-route onto survivors (the rebalanced
+    // router) and stay whole-answer exact.
+    for q in ["FIND f,c => a", "SUPPORT f,c", "TOP lift 5", "EXPLAIN RULES WHERE conseq = a"] {
+        for _ in 0..4 {
+            assert_eq!(coord.execute(q), oracle.execute(q), "`{q}` after kill");
+        }
+    }
+    // Mutations are refused — a down shard must never silently diverge.
+    let refused = coord.execute("INGEST f,c");
+    assert!(
+        refused.starts_with("ERR") && refused.contains("down"),
+        "mutation not refused: {refused}"
+    );
+}
+
+#[test]
+fn coordinator_result_cache_hits_and_invalidates_on_broadcast() {
+    let db = paper_example_db();
+    let fleet = Fleet::spawn(&db, 0.3, 2, 2);
+    let coord = ScatterEngine::new(fleet.addr_strings()).with_result_cache(4);
+    let oracle = engine(&db, 0.3, 2, None);
+    let q = "RULES WHERE conseq = a SORT BY lift DESC LIMIT 5";
+    let first = coord.execute(q);
+    assert_eq!(first, oracle.execute(q));
+    // Second run is a cache hit (the registry proves it) with equal bytes.
+    assert_eq!(coord.execute(q), first);
+    assert_eq!(coord.registry().counter("tor_result_cache_hits_total").get(), 1);
+    // A broadcast mutation bumps the coordinator generation; the same
+    // query must re-scatter and match the post-ingest oracle.
+    assert!(coord.execute("INGEST f,c,a;f,c").starts_with("OK"));
+    assert!(oracle.execute("INGEST f,c,a;f,c").starts_with("OK"));
+    assert_eq!(coord.execute(q), oracle.execute(q), "stale cache after INGEST");
+}
+
+#[test]
+fn coordinator_serves_byte_identical_streams_over_the_frontend() {
+    // The coordinator is itself a RequestHandler: the nonblocking front
+    // end serves it over both wire framings, and a pipelined query
+    // stream's bytes equal the single-node blocking baseline's.
+    let db = paper_example_db();
+    let wire = b"SUPPORT f,c\nRULES WHERE conseq = a SORT BY lift DESC LIMIT 5\n\
+FIND f,c => a\nRULES WHERE nonsense\nEXPLAIN RULES WHERE conseq = a\nCONSEQ a\nQUIT\n";
+    let baseline_shutdown = Arc::new(AtomicBool::new(false));
+    let baseline_addr = serve_tcp_blocking(
+        Arc::new(engine(&db, 0.3, 2, None)),
+        "127.0.0.1:0",
+        Arc::clone(&baseline_shutdown),
+    )
+    .unwrap();
+    let baseline = text_roundtrip(baseline_addr, wire);
+    baseline_shutdown.store(true, Ordering::Relaxed);
+    assert!(baseline.ends_with(b"BYE\n"), "baseline truncated");
+    let fleet = Fleet::spawn(&db, 0.3, 2, 2);
+    let coord_shutdown = Arc::new(AtomicBool::new(false));
+    let coord_addr = serve_nonblocking(
+        Arc::new(ScatterEngine::new(fleet.addr_strings())),
+        "127.0.0.1:0",
+        Arc::clone(&coord_shutdown),
+        ServeOptions::default(),
+    )
+    .unwrap();
+    for round in 0..3 {
+        let got = text_roundtrip(coord_addr, wire);
+        assert_eq!(got, baseline, "round {round} diverged from single-node baseline");
+    }
+    coord_shutdown.store(true, Ordering::Relaxed);
+}
+
+/// Write one pipelined text stream (must end in QUIT) and drain the full
+/// response byte stream until the server closes.
+fn text_roundtrip(addr: SocketAddr, wire: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+    s.write_all(wire).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    out
+}
